@@ -1,0 +1,64 @@
+//! The paper's headline figure (derived): the accuracy-energy trade-off —
+//! "energy savings of up to 64% with negligible loss in application
+//! accuracy". Sweeps the DSE candidate set at 16×8 and 64×32, prints the
+//! Pareto frontier as a text series (NMED vs % of exact energy), and
+//! checks the headline numbers.
+//!
+//! ```text
+//! cargo bench --bench fig_tradeoff
+//! ```
+
+use openacm::bench::harness::{bench, black_box, sci, Table};
+use openacm::config::spec::MultFamily;
+use openacm::dse::{pareto_front, sweep_configs};
+use openacm::util::threadpool::ThreadPool;
+
+fn main() {
+    let threads = ThreadPool::default_parallelism();
+    for (rows, bits, ops) in [(16usize, 8usize, 1500usize), (64, 32, 400)] {
+        eprintln!("sweeping {rows}x{bits}...");
+        let points = sweep_configs(rows, bits, ops, threads);
+        let front = pareto_front(&points);
+        let mut t = Table::new(
+            &format!("accuracy-energy frontier @ {rows}x{bits}"),
+            &["Design", "NMED", "Energy vs exact"],
+        );
+        for p in &front {
+            t.row(&[
+                p.label.clone(),
+                if p.nmed == 0.0 {
+                    "exact".into()
+                } else {
+                    sci(p.nmed)
+                },
+                format!("{:.0}%", p.energy_ratio * 100.0),
+            ]);
+        }
+        t.print();
+        // Headline: the best approximate design's saving at this size.
+        let best_saving = points
+            .iter()
+            .filter(|p| p.nmed > 0.0 && p.nmed < 5e-2)
+            .map(|p| 1.0 - p.energy_ratio)
+            .fold(0.0f64, f64::max);
+        println!(
+            "max energy saving with NMED < 5e-2: {:.0}% (paper headline: up to 64% at 64x32)\n",
+            best_saving * 100.0
+        );
+    }
+
+    // Log-our specifically (the headline family) at 64x32.
+    let points = sweep_configs(64, 32, 400, threads);
+    let lo = points
+        .iter()
+        .find(|p| matches!(p.family, MultFamily::LogOur))
+        .unwrap();
+    println!(
+        "Log-our @ 64x32: {:.0}% of exact energy (paper: ~36%, i.e. 64% saving)",
+        lo.energy_ratio * 100.0
+    );
+
+    bench("dse::sweep_configs(16x8, 300 ops)", 0, 3, || {
+        black_box(sweep_configs(16, 8, 300, threads));
+    });
+}

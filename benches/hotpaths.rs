@@ -1,0 +1,99 @@
+//! Micro-benchmarks of the compiler's hot paths — the §Perf targets in
+//! EXPERIMENTS.md. Each one prints mean/p50/p99 so before/after deltas of
+//! optimization work are directly comparable.
+//!
+//! ```text
+//! cargo bench --bench hotpaths
+//! ```
+
+use openacm::bench::harness::{bench, black_box};
+use openacm::config::spec::{CompressorKind, MultFamily};
+use openacm::mult::behavioral::int8_lut;
+use openacm::mult::pptree;
+use openacm::nn::model::QuantCnn;
+use openacm::sim::activity::{activity_bitparallel, mult_workload_vectors};
+use openacm::sim::event::EventSim;
+use openacm::util::rng::Pcg32;
+
+fn main() {
+    // 1. Netlist generation (the compiler front end).
+    bench("build_exact(32) netlist", 1, 20, || {
+        black_box(pptree::build_exact(32));
+    });
+    bench("build_logour(32) netlist", 1, 20, || {
+        black_box(openacm::mult::logarithmic::build_logour(32));
+    });
+
+    // 2. Bit-parallel activity extraction (the Table II power hot path).
+    let nl = pptree::build_exact(16);
+    let mut rng = Pcg32::new(1);
+    let pairs: Vec<(u64, u64)> = (0..4096)
+        .map(|_| (rng.next_u64() & 0xFFFF, rng.next_u64() & 0xFFFF))
+        .collect();
+    let vectors = mult_workload_vectors(16, &pairs);
+    let r = bench("activity_bitparallel(16b mult, 4096 vecs)", 1, 20, || {
+        black_box(activity_bitparallel(&nl, &vectors));
+    });
+    println!(
+        "→ {:.1} M gate-evals/s",
+        r.throughput((nl.gates().len() * vectors.len()) as f64) / 1e6
+    );
+
+    // 3. Event-driven simulation (the incremental engine).
+    let mut sim = EventSim::new(&nl);
+    let r = bench("event_sim(16b mult, 4096 vecs)", 1, 10, || {
+        for v in &vectors {
+            black_box(sim.step(v));
+        }
+    });
+    println!(
+        "→ {:.0} K vectors/s event-driven (wide cones: random operands)",
+        r.throughput(vectors.len() as f64) / 1e3
+    );
+
+    // 3b. Narrow-cone workload (weight-stationary PE: only the streaming
+    // operand's low bits move) — the case the worklist engine targets.
+    let narrow: Vec<(u64, u64)> = (0..4096u64).map(|t| (t % 16, 0xBEEF)).collect();
+    let narrow_vecs = mult_workload_vectors(16, &narrow);
+    let mut sim_n = EventSim::new(&nl);
+    let r = bench("event_sim(16b mult, narrow cone)", 1, 10, || {
+        for v in &narrow_vecs {
+            black_box(sim_n.step(v));
+        }
+    });
+    println!(
+        "→ {:.0} K vectors/s event-driven (narrow cones)",
+        r.throughput(narrow_vecs.len() as f64) / 1e3
+    );
+
+    // 4. 64-lane behavioral multiply (LUT generation hot path).
+    let lanes_a: Vec<u64> = (0..64).collect();
+    let lanes_b: Vec<u64> = (0..64).map(|i| 255 - i).collect();
+    let r = bench("soft_multiply_lanes(8b yang1, 64 pairs)", 10, 500, || {
+        black_box(pptree::soft_multiply_lanes(
+            8,
+            8,
+            Some(CompressorKind::Yang1),
+            &lanes_a,
+            &lanes_b,
+        ));
+    });
+    println!("→ {:.1} M mults/s", r.throughput(64.0) / 1e6);
+
+    // 5. int8 LUT generation (python-parity path).
+    bench("int8_lut(logour)", 1, 10, || {
+        black_box(int8_lut(&MultFamily::LogOur));
+    });
+    bench("int8_lut(appro42/yang1)", 1, 5, || {
+        black_box(int8_lut(&MultFamily::default_approx(8)));
+    });
+
+    // 6. Native quantized CNN forward (the no-PJRT fallback).
+    let cnn = QuantCnn::random(7);
+    let lut = int8_lut(&MultFamily::Exact);
+    let img: Vec<u8> = (0..256).map(|i| (i * 7 % 256) as u8).collect();
+    let r = bench("native QuantCnn::forward (1 image)", 5, 100, || {
+        black_box(cnn.forward(&lut, &img));
+    });
+    println!("→ {:.0} images/s native", r.throughput(1.0));
+}

@@ -1,0 +1,60 @@
+//! Regenerates **Table II**: post-layout PPA of SRAM-multiplier systems
+//! ({16×8, 32×16, 64×32} × {OpenC², Exact, Log-our, Appro4-2} at 100 MHz,
+//! 0.5 pF), and times the PPA engine itself (netlist generation + activity
+//! simulation + STA + power model) per configuration.
+//!
+//! ```text
+//! cargo bench --bench table2_ppa
+//! ```
+
+use openacm::bench::harness::{bench, black_box};
+use openacm::config::spec::MacroSpec;
+use openacm::ppa::cli::{full_table2, render_table2};
+use openacm::ppa::report::analyze_macro;
+
+fn main() {
+    // --- the table itself ---
+    let rows = full_table2(2000, 0x7AB1E2);
+    render_table2(&rows).print();
+    println!(
+        "\npaper Table II reference (same layout):\n\
+         16x8:  OpenC2 1431/8483/2.82E-4, Exact 1079/8131/2.45E-4, Log 1173/8225/2.82E-4, Appro 939/7991/2.11E-4\n\
+         32x16: OpenC2 4842/21752/1.15E-3, Exact 3568/20478/1.08E-3, Log 2402/19312/6.15E-4, Appro 2633/19543/7.58E-4\n\
+         64x32: OpenC2 19734/68376/7.00E-3, Exact 10132/58774/4.03E-3, Log 4960/53602/1.45E-3, Appro 9331/57973/3.36E-3\n\
+         (columns: logic um2 / P&R um2 / power W)\n"
+    );
+
+    // --- headline deltas ---
+    let get = |name: &str, fam: &str| {
+        rows.iter()
+            .find(|r| r.name == name && r.family_label == fam)
+            .unwrap()
+    };
+    for size in ["dcim16x8", "dcim32x16", "dcim64x32"] {
+        let ex = get(size, "Exact");
+        let lo = get(size, "Log-our");
+        let ap = get(size, "Appro4-2");
+        println!(
+            "{size}: log-our logic area -{:.0}% / logic power -{:.0}%, appro4-2 logic power -{:.0}% vs exact",
+            (1.0 - lo.logic_area_um2 / ex.logic_area_um2) * 100.0,
+            (1.0 - lo.logic_power_w / ex.logic_power_w) * 100.0,
+            (1.0 - ap.logic_power_w / ex.logic_power_w) * 100.0,
+        );
+    }
+
+    // --- timing the engine hot path ---
+    println!();
+    let spec = MacroSpec::new("dcim16x8", 16, 8, MacroSpec::table2_families(8)[1].clone());
+    bench("ppa::analyze_macro(16x8, 2000 ops)", 1, 10, || {
+        black_box(analyze_macro(&spec, 2000, 1));
+    });
+    let spec32 = MacroSpec::new(
+        "dcim64x32",
+        64,
+        32,
+        MacroSpec::table2_families(32)[1].clone(),
+    );
+    bench("ppa::analyze_macro(64x32, 500 ops)", 1, 3, || {
+        black_box(analyze_macro(&spec32, 500, 1));
+    });
+}

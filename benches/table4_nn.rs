@@ -1,0 +1,61 @@
+//! Regenerates **Table IV**: Top-1/Top-5 + NMED/MRED per multiplier family
+//! on the quantized CNN (the ResNet-18/ImageNet substitute — DESIGN.md §3),
+//! through BOTH execution paths (native mirror and the AOT PJRT graph),
+//! and times single-batch inference.
+//!
+//! Requires `make artifacts`; prints a skip message otherwise.
+//!
+//! ```text
+//! cargo bench --bench table4_nn
+//! ```
+
+use openacm::bench::harness::{bench, black_box};
+use openacm::nn::cli::{eval_native, eval_pjrt, render_table4};
+use openacm::runtime::{client, ArtifactStore, Runtime};
+
+fn main() {
+    let dir = ArtifactStore::default_dir();
+    if !ArtifactStore::exists(&dir) {
+        println!("skipping table4_nn: artifacts missing — run `make artifacts`");
+        return;
+    }
+    let store = ArtifactStore::load(&dir).expect("artifacts");
+    let limit = 512;
+
+    println!("== native engine (rust mirror of the JAX graph) ==");
+    let rows = eval_native(&store, limit).expect("native eval");
+    render_table4(&rows).print();
+
+    println!("\n== PJRT engine (AOT HLO through the runtime) ==");
+    let rows = eval_pjrt(&store, limit).expect("pjrt eval");
+    render_table4(&rows).print();
+
+    println!(
+        "\npaper Table IV reference (ResNet-18 / ILSVRC2012):\n\
+         Exact .677/.873, Appro4-2 .668/.880 (NMED 1.70E-9), Log-our .680/.870 (4.40E-3), LM .610/.842 (2.79E-2)\n\
+         shape to reproduce: Appro4-2/Log-our ~= Exact (Log-our may exceed it), LM clearly degraded.\n"
+    );
+
+    // --- hot path: one batch through PJRT ---
+    let rt = Runtime::cpu().unwrap();
+    let model = rt.compile_hlo_text(&store.model_hlo).unwrap();
+    let b = store.batch;
+    let lut = client::literal_i32(&[65536], store.luts.get("exact").unwrap()).unwrap();
+    let weights = client::weight_literals(&store.weights).unwrap();
+    let mut px = vec![0i32; b * 256];
+    for j in 0..b {
+        for (k, &p) in store.image(j).iter().enumerate() {
+            px[j * 256 + k] = p as i32;
+        }
+    }
+    let img = client::literal_i32(&[b, 16, 16], &px).unwrap();
+    let r = bench(&format!("pjrt batch-{b} inference"), 2, 20, || {
+        let mut args = vec![img.clone(), lut.clone()];
+        args.extend(weights.iter().cloned());
+        black_box(model.run_f32(&args, b * 10).unwrap());
+    });
+    println!(
+        "→ {:.0} images/s through the AOT graph",
+        r.throughput(b as f64)
+    );
+}

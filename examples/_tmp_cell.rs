@@ -1,0 +1,7 @@
+use openacm::bench::harness::{bench, black_box};
+use openacm::sram::cell6t::Cell6T;
+fn main() {
+    let cell = Cell6T::default();
+    bench("characterize_read", 5, 200, || { black_box(cell.characterize_read()); });
+    bench("characterize_full", 2, 50, || { black_box(cell.characterize()); });
+}

@@ -1,0 +1,61 @@
+//! Design-space exploration: sweep the full multiplier candidate set
+//! (exact, adder-tree, both log families, 6 compressor designs × 4 column
+//! budgets) at a given macro geometry and print the accuracy-energy Pareto
+//! frontier plus accuracy-constrained selections — the compiler knob the
+//! paper's §VI roadmap calls for, implemented.
+//!
+//! ```text
+//! cargo run --release --example dse_pareto -- [--rows 16] [--word-bits 8]
+//! ```
+
+use anyhow::Result;
+
+use openacm::bench::harness::{sci, Table};
+use openacm::dse::{pareto_front, sweep_configs};
+use openacm::dse::pareto::select_under_constraint;
+use openacm::util::cli::Args;
+use openacm::util::threadpool::ThreadPool;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(false, &[])?;
+    let rows = args.usize_or("rows", 16)?;
+    let bits = args.usize_or("word-bits", 8)?;
+    let threads = args.usize_or("threads", ThreadPool::default_parallelism())?;
+
+    eprintln!("sweeping candidates at {rows}x{bits} with {threads} threads...");
+    let points = sweep_configs(rows, bits, 1500, threads);
+    println!("evaluated {} design points", points.len());
+
+    let front = pareto_front(&points);
+    let mut t = Table::new(
+        "accuracy-energy Pareto frontier",
+        &["Design", "NMED", "Energy/op (J)", "vs exact", "Logic area (um2)"],
+    );
+    for p in &front {
+        t.row(&[
+            p.label.clone(),
+            if p.nmed == 0.0 {
+                "exact".into()
+            } else {
+                sci(p.nmed)
+            },
+            sci(p.energy_per_op_j),
+            format!("{:.0}%", p.energy_ratio * 100.0),
+            format!("{:.0}", p.logic_area_um2),
+        ]);
+    }
+    t.print();
+
+    println!("\naccuracy-constrained selections:");
+    for budget in [1e-5, 1e-4, 1e-3, 1e-2, 1e-1] {
+        match select_under_constraint(&points, budget) {
+            Some(best) => println!(
+                "  NMED <= {budget:.0e}: {:24} {:.0}% of exact energy",
+                best.label,
+                best.energy_ratio * 100.0
+            ),
+            None => println!("  NMED <= {budget:.0e}: (only exact qualifies)"),
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,122 @@
+//! End-to-end driver (DESIGN.md §6): the full three-layer stack on a real
+//! small workload.
+//!
+//! * L1/L2 — the Pallas LUT-matmul kernel inside the AOT-compiled JAX
+//!   quantized-CNN graph (built by `make artifacts`);
+//! * L3 — the Rust coordinator: per-variant dynamic batchers executing the
+//!   graph through PJRT, with Python nowhere on the request path.
+//!
+//! Submits a few hundred classification requests against all four
+//! multiplier variants concurrently, then reports per-variant Top-1,
+//! latency percentiles, throughput, and the per-inference *energy*
+//! estimate from the PPA engine — i.e. the paper's headline
+//! accuracy-vs-energy statement measured end to end. Results are recorded
+//! in EXPERIMENTS.md.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example e2e_serving -- --requests 400
+//! ```
+
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::sync::mpsc::channel;
+use std::time::{Duration, Instant};
+
+use openacm::bench::harness::{sci, Table};
+use openacm::config::spec::{MacroSpec, MultFamily};
+use openacm::coordinator::batcher::BatchPolicy;
+use openacm::coordinator::server::{InferenceServer, Request};
+use openacm::ppa::report::analyze_macro;
+use openacm::runtime::ArtifactStore;
+use openacm::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(false, &[])?;
+    let n_requests = args.usize_or("requests", 400)?;
+    let store = ArtifactStore::load(&ArtifactStore::default_dir())?;
+    println!(
+        "artifacts: {} images, {} variants, graph batch {}",
+        store.n_images,
+        store.luts.len(),
+        store.batch
+    );
+
+    let server = InferenceServer::start(
+        &store,
+        BatchPolicy {
+            max_batch: 32,
+            max_wait: Duration::from_millis(2),
+        },
+    )?;
+    let variants = server.variants();
+
+    // Fire all requests asynchronously, round-robin across variants.
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(n_requests);
+    for i in 0..n_requests {
+        let idx = i % store.n_images;
+        let variant = variants[i % variants.len()].clone();
+        let (tx, rx) = channel();
+        server.submit(Request {
+            image: store.image(idx).to_vec(),
+            variant: variant.clone(),
+            respond: tx,
+        })?;
+        pending.push((idx, variant, rx));
+    }
+    let mut correct: BTreeMap<String, (usize, usize)> = BTreeMap::new();
+    for (idx, variant, rx) in pending {
+        let resp = rx.recv()?;
+        let e = correct.entry(variant).or_insert((0, 0));
+        e.1 += 1;
+        if resp.predicted == store.labels[idx] {
+            e.0 += 1;
+        }
+    }
+    let wall = t0.elapsed();
+
+    // Per-variant energy from the PPA engine (the 16×8 macro).
+    let energy: BTreeMap<&str, f64> = [
+        ("exact", MultFamily::Exact),
+        ("appro42", MultFamily::default_approx(8)),
+        ("logour", MultFamily::LogOur),
+        ("lm", MultFamily::Mitchell),
+    ]
+    .into_iter()
+    .map(|(name, fam)| {
+        let ppa = analyze_macro(&MacroSpec::new(name, 16, 8, fam), 1000, 42);
+        (name, ppa.energy_per_op_j)
+    })
+    .collect();
+    let exact_energy = energy["exact"];
+
+    let mut t = Table::new(
+        "end-to-end serving: accuracy vs energy per multiplier variant",
+        &["Variant", "Top-1", "Requests", "Energy/op (J)", "vs exact"],
+    );
+    for (variant, (ok, total)) in &correct {
+        let e = energy.get(variant.as_str()).copied().unwrap_or(f64::NAN);
+        t.row(&[
+            variant.clone(),
+            format!("{:.3}", *ok as f64 / *total as f64),
+            total.to_string(),
+            sci(e),
+            format!("{:.0}%", e / exact_energy * 100.0),
+        ]);
+    }
+    t.print();
+
+    let snap = server.metrics.snapshot();
+    println!(
+        "\n{} requests in {:.2}s — {:.0} req/s, latency p50 {:.2} ms p90 {:.2} ms p99 {:.2} ms, mean batch {:.1}",
+        snap.completed,
+        wall.as_secs_f64(),
+        snap.completed as f64 / wall.as_secs_f64(),
+        snap.p50_ms,
+        snap.p90_ms,
+        snap.p99_ms,
+        snap.mean_batch
+    );
+    server.shutdown();
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Image-processing pipeline (the paper's §V-B workloads): blend two
+//! images and edge-detect a third through every multiplier family,
+//! reporting PSNR against the exact baseline — Table III in miniature,
+//! plus per-operation energy from the PPA engine so the accuracy-energy
+//! trade-off is visible on a real workload.
+//!
+//! ```text
+//! cargo run --release --example image_pipeline [--size 256]
+//! ```
+
+use anyhow::Result;
+
+use openacm::apps::{blend, edge, images, psnr_db};
+use openacm::bench::harness::{sci, Table};
+use openacm::config::spec::{MacroSpec, MultFamily};
+use openacm::ppa::report::analyze_macro;
+use openacm::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(false, &[])?;
+    let n = args.usize_or("size", 256)?;
+
+    let lake = images::lake(n);
+    let mandril = images::mandril(n);
+    let cameraman = images::cameraman(n);
+
+    let families = vec![
+        ("Exact", MultFamily::Exact),
+        ("Appro4-2", MultFamily::default_approx(8)),
+        ("Log-our", MultFamily::LogOur),
+        ("LM [24]", MultFamily::Mitchell),
+    ];
+
+    let blend_ref = blend::blend(&lake, &mandril, &MultFamily::Exact);
+    let edge_ref = edge::edge_detect(&cameraman, &MultFamily::Exact);
+
+    let mut t = Table::new(
+        &format!("image pipeline on {n}x{n} images"),
+        &["Multiplier", "Blend PSNR (dB)", "Edge PSNR (dB)", "Energy/op (J)", "vs exact"],
+    );
+    let exact_energy = analyze_macro(
+        &MacroSpec::new("e", 16, 8, MultFamily::Exact),
+        1000,
+        42,
+    )
+    .energy_per_op_j;
+    for (label, fam) in families {
+        let b = blend::blend(&lake, &mandril, &fam);
+        let e = {
+            // edge detection runs the 16-bit signed datapath
+            let fam16 = match &fam {
+                MultFamily::Approx42 { .. } => MultFamily::default_approx(16),
+                other => other.clone(),
+            };
+            edge::edge_detect(&cameraman, &fam16)
+        };
+        let energy = analyze_macro(&MacroSpec::new("m", 16, 8, fam.clone()), 1000, 42)
+            .energy_per_op_j;
+        let fmt_db = |v: f64| {
+            if v.is_infinite() {
+                "inf".to_string()
+            } else {
+                format!("{v:.2}")
+            }
+        };
+        t.row(&[
+            label.to_string(),
+            fmt_db(psnr_db(&blend_ref, &b)),
+            fmt_db(psnr_db(&edge_ref, &e)),
+            sci(energy),
+            format!("{:.0}%", energy / exact_energy * 100.0),
+        ]);
+    }
+    t.print();
+    println!("\n(>40 dB = visually identical, <30 dB = visible degradation)");
+    Ok(())
+}

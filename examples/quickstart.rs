@@ -1,0 +1,59 @@
+//! Quickstart: compile one approximate DCiM macro end to end.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Builds the paper's default 16×8 macro with the tunable Appro4-2
+//! multiplier, runs the full compiler (netlists → Verilog → LEF/LIB →
+//! OpenROAD scripts → PPA signoff substitute), then exercises the
+//! behavioral PE on a dot-product workload and prints the multiplier's
+//! error statistics — the whole public API surface in ~60 lines.
+
+use anyhow::Result;
+
+use openacm::config::spec::{MacroSpec, MultFamily};
+use openacm::flow::generate_all;
+use openacm::mult::error_metrics;
+use openacm::pe::ProcessingElement;
+
+fn main() -> Result<()> {
+    // 1. Describe the macro: 16 rows × 8-bit words, Appro4-2 multiplier
+    //    (yang1 compressors on PP columns #0..#7 — Fig 2's red box).
+    let spec = MacroSpec::new("dcim16x8", 16, 8, MultFamily::default_approx(8));
+    spec.validate()?;
+
+    // 2. Run the compiler: everything lands in build/quickstart.
+    let artifacts = generate_all(&spec, std::path::Path::new("build/quickstart"))?;
+    println!("compiler artifacts ({}):", artifacts.dir.display());
+    for f in &artifacts.files {
+        println!("  {}", f.file_name().unwrap().to_string_lossy());
+    }
+    println!("\n{}", artifacts.ppa_summary);
+
+    // 3. Error statistics of the selected multiplier (Table IV metrics).
+    let report = error_metrics::exhaustive(&spec.mult.family, 8);
+    println!(
+        "multiplier error: NMED {:.3e}  MRED {:.3e}  ER {:.3}  WCE {}",
+        report.nmed, report.mred, report.error_rate, report.wce
+    );
+
+    // 4. Drive the behavioral PE: load weights, stream a dot product.
+    let mut pe = ProcessingElement::new(&spec)?;
+    let weights: Vec<u64> = (1..=16).map(|i| (i * 13) % 256).collect();
+    pe.load_weights(&weights)?;
+    let inputs: Vec<u64> = (1..=16).map(|i| (i * 7) % 256).collect();
+    let approx = pe.dot(&inputs)?;
+    let exact: u128 = inputs
+        .iter()
+        .zip(&weights)
+        .map(|(&x, &w)| (x * w) as u128)
+        .sum();
+    println!(
+        "PE dot product: approx {approx} vs exact {exact} ({:+.3}% error, {} SRAM reads)",
+        (approx as f64 - exact as f64) / exact as f64 * 100.0,
+        pe.sram_reads()
+    );
+    pe.finish();
+    Ok(())
+}

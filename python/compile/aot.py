@@ -1,0 +1,127 @@
+"""AOT build path: train → quantize → lower the quantized forward to HLO
+*text* → emit the full artifact bundle the Rust runtime consumes.
+
+    python -m compile.aot --out ../artifacts
+
+Interchange is HLO text, NOT ``.serialize()`` — the image's xla_extension
+0.5.1 rejects jax ≥ 0.5's 64-bit-id protos; the text parser reassigns ids
+(see /opt/xla-example/README.md and gen_hlo.py).
+
+Artifact layout (read by rust runtime::ArtifactStore):
+
+    artifacts/
+      model.hlo.txt           quantized CNN forward, (images i32[B,16,16],
+                              lut i32[65536]) -> (logits f32[B,10],)
+      manifest.txt            batch=..., versions, shapes
+      training_log.txt        loss curve + float/quantized accuracies
+      luts/lut_{family}.npy   int8 product tables (exact/appro42/logour/lm)
+      weights/*.npy           quantized weights + scales (rust mirror)
+      dataset/test_images.npy, test_labels.npy
+"""
+
+from __future__ import annotations
+
+import argparse
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import dataset, model, mults, train
+
+BATCH = 32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build(outdir: Path, steps: int = 600, limit_test: int = 512) -> None:
+    outdir.mkdir(parents=True, exist_ok=True)
+    log: list[str] = []
+
+    # 1. train + calibrate + quantize
+    params, float_acc, curve = train.train(steps=steps, log_lines=log)
+    scales_act = train.calibrate(params)
+    qparams, scales = model.quantize_params(params, scales_act)
+    train.save_weights(outdir, qparams, scales)
+
+    # 2. LUTs for the four paper families
+    luts_dir = outdir / "luts"
+    luts_dir.mkdir(exist_ok=True)
+    luts = {}
+    for family in mults.FAMILIES:
+        lut = mults.int8_lut(family)
+        luts[family] = lut
+        np.save(luts_dir / f"lut_{family}.npy", lut)
+
+    # 3. dataset (test split)
+    _, (xte, yte) = dataset.train_test()
+    xte, yte = xte[:limit_test], yte[:limit_test]
+    ds_dir = outdir / "dataset"
+    ds_dir.mkdir(exist_ok=True)
+    np.save(ds_dir / "test_images.npy", xte.astype(np.uint8))
+    np.save(ds_dir / "test_labels.npy", yte.astype(np.int64))
+
+    # 4. lower the quantized forward. Weights are runtime OPERANDS (large
+    #    integer constants mis-execute on the xla_extension 0.5.1 runtime
+    #    behind the Rust PJRT client — see model.make_quant_forward_args).
+    fwd_args = model.make_quant_forward_args(scales, interpret=True)
+    wargs = model.weight_args(qparams)
+    img_spec = jax.ShapeDtypeStruct((BATCH, 16, 16), jnp.int32)
+    lut_spec = jax.ShapeDtypeStruct((65536,), jnp.int32)
+    w_specs = [jax.ShapeDtypeStruct(w.shape, w.dtype) for w in wargs]
+    lowered = jax.jit(fwd_args).lower(img_spec, lut_spec, *w_specs)
+    hlo = to_hlo_text(lowered)
+    (outdir / "model.hlo.txt").write_text(hlo)
+    log.append(f"lowered model.hlo.txt ({len(hlo)} chars, batch={BATCH})")
+
+    # 5. quantized accuracy per family (jax-side reference for Table IV)
+    jfwd = jax.jit(fwd)
+    for family, lut in luts.items():
+        correct = 0
+        lut_j = jnp.asarray(lut.reshape(-1), jnp.int32)
+        for i in range(0, xte.shape[0] - BATCH + 1, BATCH):
+            (logits,) = jfwd(jnp.asarray(xte[i : i + BATCH], jnp.int32), lut_j)
+            correct += int((np.argmax(np.asarray(logits), -1) == yte[i : i + BATCH]).sum())
+        n = (xte.shape[0] // BATCH) * BATCH
+        line = f"quantized top-1 [{family}]: {correct / n:.3f} ({n} images)"
+        print(line)
+        log.append(line)
+
+    # 6. manifest + training log
+    (outdir / "manifest.txt").write_text(
+        "\n".join(
+            [
+                f"batch={BATCH}",
+                f"jax={jax.__version__}",
+                "graph=quant_cnn_fwd(images:i32[B,16,16], lut:i32[65536], w1,b1,w2,b2,w3,b3,w4,b4) -> (logits:f32[B,10],)",
+                f"families={','.join(mults.FAMILIES)}",
+                f"test_images={xte.shape[0]}",
+                "",
+            ]
+        )
+    )
+    (outdir / "training_log.txt").write_text(
+        "\n".join(log) + "\n\nloss curve:\n"
+        + "\n".join(f"{t}\t{l:.5f}" for t, l in curve) + "\n"
+    )
+    print(f"artifacts written to {outdir}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=600)
+    args = ap.parse_args()
+    build(Path(args.out), steps=args.steps)
+
+
+if __name__ == "__main__":
+    main()

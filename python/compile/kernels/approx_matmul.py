@@ -1,0 +1,74 @@
+"""Layer-1 Pallas kernel: LUT-routed int8 matmul.
+
+Every multiply in the quantized CNN goes through a 256×256 product table
+(the approximate-multiplier emulation), so the compute hot-spot is a
+*gather-accumulate matmul*:
+
+    out[i, j] = sum_k LUT[ (a[i,k] & 0xFF) << 8 | (b[k,j] & 0xFF) ]
+
+TPU mapping (DESIGN.md §9): the 256 KiB int32 LUT is pinned whole in VMEM
+(BlockSpec with a constant index map); A is tiled over rows (the grid's
+only axis) and B/K are kept resident because the CNN's K ≤ 72 and N ≤ 32.
+The gather is VPU work; the K-reduction vectorizes over the (bm × N) tile.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret-mode lowers to plain HLO that the Rust runtime
+(and any PJRT backend) can run. Correctness is pinned to ``ref.py`` by
+pytest + hypothesis sweeps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-tile size. All call sites pad M to a multiple of this.
+BM = 32
+
+
+def _kernel(a_ref, b_ref, lut_ref, o_ref):
+    """One (BM, N) output tile: gather-accumulate over the full K."""
+    a = a_ref[...]  # [BM, K] int32 (int8 values)
+    b = b_ref[...]  # [K, N] int32
+    lut = lut_ref[...]  # [65536] int32
+    idx = ((a[:, :, None] & 0xFF) << 8) | (b[None, :, :] & 0xFF)  # [BM,K,N]
+    prods = jnp.take(lut, idx.reshape(-1), axis=0).reshape(idx.shape)
+    o_ref[...] = prods.sum(axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lut_matmul(a_q, b_q, lut, interpret: bool = True):
+    """Pallas LUT matmul: a_q [M,K] int32, b_q [K,N] int32, lut [65536].
+
+    M must be a multiple of BM (pad at the call site). Returns [M,N] int32.
+    """
+    m, k = a_q.shape
+    k2, n = b_q.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    assert m % BM == 0, f"M={m} must be a multiple of {BM}"
+    grid = (m // BM,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BM, k), lambda i: (i, 0)),  # stream A row-tiles
+            pl.BlockSpec((k, n), lambda i: (0, 0)),  # B resident
+            pl.BlockSpec((65536,), lambda i: (0,)),  # LUT pinned in VMEM
+        ],
+        out_specs=pl.BlockSpec((BM, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(a_q, b_q, lut)
+
+
+def pad_rows(x, multiple: int = BM):
+    """Pad the leading dim up to a multiple (zeros); returns (padded, m)."""
+    m = x.shape[0]
+    rem = (-m) % multiple
+    if rem == 0:
+        return x, m
+    pad = jnp.zeros((rem,) + x.shape[1:], dtype=x.dtype)
+    return jnp.concatenate([x, pad], axis=0), m

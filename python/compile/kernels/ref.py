@@ -1,0 +1,37 @@
+"""Pure-jnp correctness oracle for the Pallas LUT-matmul kernel.
+
+``lut_matmul_ref(a_q, b_q, lut)``: int8-valued (stored as int32) operands,
+products routed through a 65536-entry LUT indexed by the two int8 bit
+patterns, accumulated in int32. This is the semantic ground truth the L1
+kernel (and the Rust-native mirror) must reproduce bit for bit.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def lut_index(a_q, b_q):
+    """Index into the 65536-entry LUT from int8 *values* (as int32):
+    ((a & 0xFF) << 8) | (b & 0xFF)."""
+    return ((a_q & 0xFF) << 8) | (b_q & 0xFF)
+
+
+def lut_matmul_ref(a_q, b_q, lut):
+    """Reference LUT matmul: a_q [M,K] int32, b_q [K,N] int32,
+    lut [65536] int32 → [M,N] int32."""
+    idx = lut_index(a_q[:, :, None], b_q[None, :, :])  # [M,K,N]
+    prods = jnp.take(lut, idx.reshape(-1), axis=0).reshape(idx.shape)
+    return prods.sum(axis=1).astype(jnp.int32)
+
+
+def lut_matmul_numpy(a_q: np.ndarray, b_q: np.ndarray, lut: np.ndarray) -> np.ndarray:
+    """Numpy twin (no jax) for hypothesis tests against integer math."""
+    idx = (((a_q[:, :, None] & 0xFF) << 8) | (b_q[None, :, :] & 0xFF)).astype(np.int64)
+    return lut.astype(np.int64)[idx].sum(axis=1).astype(np.int32)
+
+
+def quantize_ref(x, scale):
+    """Static symmetric int8 quantization (mirror of rust nn::quant)."""
+    return jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int32)

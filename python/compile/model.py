@@ -1,0 +1,216 @@
+"""Layer-2 JAX model: the quantized CNN whose every multiply goes through
+the approximate-multiplier LUT (via the L1 Pallas kernel).
+
+Architecture (mirrors ``rust/src/nn/model.rs`` exactly):
+
+    input u8 [B,16,16] → /255
+    conv3x3(1→8)  + bias + relu + maxpool2   (14×14 → 7×7)
+    conv3x3(8→16) + bias + relu + maxpool2   (5×5  → 2×2)
+    flatten(64) → fc(64→32) + relu → fc(32→10)
+
+Convolutions are im2col + LUT-matmul; quantization is static symmetric
+int8 with per-layer calibrated activation scales. The float forward
+(`float_forward`) is the training-time model; `quant_forward` is what gets
+AOT-lowered (weights baked as constants, image + LUT as runtime operands).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .kernels.approx_matmul import lut_matmul, pad_rows
+
+IMG = 16
+C1_OUT = 8
+C2_OUT = 16
+FC1_OUT = 32
+CLASSES = 10
+
+
+# ---- shared structure -----------------------------------------------------
+
+
+def im2col(x, k=3):
+    """x [B,H,W,C] → patches [B, OH*OW, k*k*C] in (ky, kx, ch) order —
+    the same order as rust nn::model::im2col."""
+    b, h, w, c = x.shape
+    oh, ow = h - k + 1, w - k + 1
+    cols = []
+    for ky in range(k):
+        for kx in range(k):
+            cols.append(x[:, ky : ky + oh, kx : kx + ow, :])  # [B,OH,OW,C]
+    # stack → [B,OH,OW,k*k,C] → [B, OH*OW, k*k*C]
+    patches = jnp.stack(cols, axis=3)
+    return patches.reshape(b, oh * ow, k * k * c), oh, ow
+
+
+def maxpool2(x):
+    """x [B,H,W,C] → [B,H//2,W//2,C] (floor, matches rust)."""
+    b, h, w, c = x.shape
+    oh, ow = h // 2, w // 2
+    x = x[:, : 2 * oh, : 2 * ow, :]
+    x = x.reshape(b, oh, 2, ow, 2, c)
+    return x.max(axis=(2, 4))
+
+
+def init_params(seed: int = 0):
+    """He-initialized float parameters."""
+    rng = np.random.default_rng(seed)
+
+    def he(shape, fan_in):
+        return rng.normal(0, np.sqrt(2.0 / fan_in), size=shape).astype(np.float32)
+
+    return {
+        "conv1_w": he((9, C1_OUT), 9),
+        "conv1_b": np.zeros(C1_OUT, np.float32),
+        "conv2_w": he((9 * C1_OUT, C2_OUT), 72),
+        "conv2_b": np.zeros(C2_OUT, np.float32),
+        "fc1_w": he((64, FC1_OUT), 64),
+        "fc1_b": np.zeros(FC1_OUT, np.float32),
+        "fc2_w": he((FC1_OUT, CLASSES), FC1_OUT),
+        "fc2_b": np.zeros(CLASSES, np.float32),
+    }
+
+
+# ---- float (training) forward ----------------------------------------------
+
+
+def float_forward(params, images_u8):
+    """images_u8 [B,16,16] uint8/int32 → logits [B,10] (pure float)."""
+    x = images_u8.astype(jnp.float32) / 255.0
+    x = x[..., None]  # [B,16,16,1]
+    h, oh, ow = im2col(x)
+    h = h.reshape(-1, 9) @ params["conv1_w"] + params["conv1_b"]
+    h = jax.nn.relu(h).reshape(-1, oh, ow, C1_OUT)
+    h = maxpool2(h)
+    h, oh, ow = im2col(h)
+    h = h.reshape(-1, 9 * C1_OUT) @ params["conv2_w"] + params["conv2_b"]
+    h = jax.nn.relu(h).reshape(-1, oh, ow, C2_OUT)
+    h = maxpool2(h)
+    h = h.reshape(h.shape[0], -1)  # [B,64]
+    h = jax.nn.relu(h @ params["fc1_w"] + params["fc1_b"])
+    return h @ params["fc2_w"] + params["fc2_b"]
+
+
+# ---- intermediate activations (for calibration) -----------------------------
+
+
+def float_activations(params, images_u8):
+    """Returns the pre-quantization inputs of each LUT matmul."""
+    x = images_u8.astype(jnp.float32) / 255.0
+    x = x[..., None]
+    a1, oh, ow = im2col(x)
+    h = a1.reshape(-1, 9) @ params["conv1_w"] + params["conv1_b"]
+    h = jax.nn.relu(h).reshape(-1, oh, ow, C1_OUT)
+    h = maxpool2(h)
+    a2, oh2, ow2 = im2col(h)
+    h = a2.reshape(-1, 72) @ params["conv2_w"] + params["conv2_b"]
+    h = jax.nn.relu(h).reshape(-1, oh2, ow2, C2_OUT)
+    h = maxpool2(h)
+    a3 = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(a3 @ params["fc1_w"] + params["fc1_b"])
+    a4 = h
+    return a1.reshape(-1, 9), a2.reshape(-1, 72), a3, a4
+
+
+# ---- quantization ------------------------------------------------------------
+
+
+def calibrate_scale(x) -> float:
+    """max|x| / 127 (mirror of rust nn::quant::calibrate)."""
+    return float(max(np.max(np.abs(np.asarray(x))), 1e-8) / 127.0)
+
+
+def quantize_params(params, scales_act):
+    """Quantize weights; returns (quantized dict, scales array in the
+    [in1, w1, in2, w2, in3, w3, in4, w4] order rust expects)."""
+    out = {}
+    scales = []
+    for i, name in enumerate(["conv1", "conv2", "fc1", "fc2"]):
+        w = np.asarray(params[f"{name}_w"])
+        ws = calibrate_scale(w)
+        out[f"{name}_wq"] = np.clip(np.round(w / ws), -127, 127).astype(np.int32)
+        out[f"{name}_b"] = np.asarray(params[f"{name}_b"], np.float32)
+        scales.extend([float(scales_act[i]), ws])
+    return out, np.asarray(scales, np.float32)
+
+
+# ---- quantized forward (the AOT graph) ---------------------------------------
+
+
+def _qlayer(a_f32, w_q, bias, in_scale, w_scale, lut, interpret=True):
+    """One quantized layer: quantize activations, LUT-matmul, rescale."""
+    a_q = ref.quantize_ref(a_f32, in_scale)
+    a_q, m = pad_rows(a_q)
+    acc = lut_matmul(a_q, w_q, lut, interpret=interpret)[:m]
+    return acc.astype(jnp.float32) * (in_scale * w_scale) + bias
+
+
+def make_quant_forward_args(scales, interpret: bool = True):
+    """Quantized forward with weights as *runtime operands*:
+
+        fn(images i32[B,16,16], lut i32[65536],
+           w1 i32[9,8],  b1 f32[8],  w2 i32[72,16], b2 f32[16],
+           w3 i32[64,32], b3 f32[32], w4 i32[32,10], b4 f32[10])
+        → (logits f32[B,10],)
+
+    Weights MUST be operands, not baked constants: xla_extension 0.5.1
+    (the runtime behind the Rust PJRT client) mis-executes large integer
+    array constants inside the pallas-interpret loops — discovered during
+    bring-up and documented in EXPERIMENTS.md §Perf/debug. Only the scalar
+    scales are baked into the graph.
+    """
+    s = [float(v) for v in scales]
+
+    def forward(images, lut, w1, b1, w2, b2, w3, b3, w4, b4):
+        b = images.shape[0]
+        x = images.astype(jnp.float32) / 255.0
+        x = x[..., None]
+        h, oh, ow = im2col(x)
+        h = _qlayer(h.reshape(-1, 9), w1, b1, s[0], s[1], lut, interpret)
+        h = jax.nn.relu(h).reshape(b, oh, ow, C1_OUT)
+        h = maxpool2(h)
+        h, oh2, ow2 = im2col(h)
+        h = _qlayer(h.reshape(-1, 72), w2, b2, s[2], s[3], lut, interpret)
+        h = jax.nn.relu(h).reshape(b, oh2, ow2, C2_OUT)
+        h = maxpool2(h)
+        h = h.reshape(b, -1)
+        h = jax.nn.relu(_qlayer(h, w3, b3, s[4], s[5], lut, interpret))
+        return (_qlayer(h, w4, b4, s[6], s[7], lut, interpret),)
+
+    return forward
+
+
+def weight_args(qparams):
+    """The (w1, b1, …, w4, b4) argument tuple for the args-form forward."""
+    return (
+        jnp.asarray(qparams["conv1_wq"], jnp.int32),
+        jnp.asarray(qparams["conv1_b"]),
+        jnp.asarray(qparams["conv2_wq"], jnp.int32),
+        jnp.asarray(qparams["conv2_b"]),
+        jnp.asarray(qparams["fc1_wq"], jnp.int32),
+        jnp.asarray(qparams["fc1_b"]),
+        jnp.asarray(qparams["fc2_wq"], jnp.int32),
+        jnp.asarray(qparams["fc2_b"]),
+    )
+
+
+def make_quant_forward(qparams, scales, interpret: bool = True):
+    """Convenience closure form (weights captured) used by the Python-side
+    evaluations and tests: fn(images, lut) → (logits,). Semantically
+    identical to the args form."""
+    base = make_quant_forward_args(scales, interpret)
+    wargs = weight_args(qparams)
+
+    def forward(images, lut):
+        return base(images, lut, *wargs)
+
+    return forward
+
+
+def accuracy(logits, labels):
+    pred = np.argmax(np.asarray(logits), axis=-1)
+    return float(np.mean(pred == np.asarray(labels)))

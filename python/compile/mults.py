@@ -1,0 +1,195 @@
+"""Behavioral models of the OpenACM multiplier library — the Python mirror
+of ``rust/src/mult/behavioral.rs``.
+
+These generate the int8 sign-magnitude product LUTs consumed by the Pallas
+kernel (L1) and the JAX model (L2). A cargo integration test
+(``rust/tests/cross_language.rs``) compares these tables bit-for-bit with
+the Rust implementations, so the two languages can never drift apart.
+
+All functions are vectorized over numpy arrays of unsigned operands.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# ---- approximate 4-2 compressors (truth tables over 4 input bits) --------
+#
+# Same designs as rust/src/mult/compressor.rs; see the table there for the
+# error statistics (asserted by python/tests/test_mults.py too).
+
+
+def _bits(pattern: np.ndarray, i: int) -> np.ndarray:
+    return (pattern >> i) & 1
+
+
+def compressor_value(kind: str, pattern: np.ndarray) -> np.ndarray:
+    """Encoded output value (2*carry + sum) of an approximate compressor
+    for each 4-bit input pattern in ``pattern``."""
+    x1, x2, x3, x4 = (_bits(pattern, i) for i in range(4))
+    if kind == "yang1":
+        carry = (x1 & x2) | (x3 & x4)
+        s = (x1 ^ x2) | (x3 ^ x4)
+    elif kind == "momeni":
+        carry = (x1 & x2) | (x3 & x4)
+        s = (x1 ^ x2) ^ (x3 ^ x4)
+    elif kind == "ha_lee":
+        carry = (x1 & x2) | (x3 & x4) | ((x1 | x2) & (x3 | x4))
+        s = (x1 ^ x2) | (x3 ^ x4)
+    elif kind == "kong":
+        carry = (x1 & x2) | (x3 & x4) | ((x1 | x2) & (x3 | x4))
+        s = ((x1 ^ x2) ^ (x3 ^ x4)) | (x1 & x2 & x3 & x4)
+    elif kind == "strollo_cm3":
+        carry = (x1 & x2) | (x3 & x4) | ((x1 | x2) & (x3 | x4))
+        s = (x1 ^ x2) ^ (x3 ^ x4)
+    elif kind == "dual_quality":
+        carry = x1 | x2
+        s = x3 | x4
+    else:
+        raise ValueError(f"unknown compressor {kind!r}")
+    return 2 * carry + s
+
+
+# ---- PP-tree multipliers ---------------------------------------------------
+#
+# Column-level simulation of the same Dadda-style reduction the Rust
+# generator performs: identical grouping rules (4 → compressor, 3 → FA,
+# 2 → pass), identical approximate-column policy, so results are bit-exact
+# with the gate netlists.
+
+
+def pptree_multiply(a, b, bits: int, approx_cols: int = 0, kind: str | None = None):
+    """Vectorized PP-tree multiply. ``a``, ``b``: uint arrays < 2**bits."""
+    a = np.asarray(a, dtype=np.int64)
+    b = np.asarray(b, dtype=np.int64)
+    shape = np.broadcast_shapes(a.shape, b.shape)
+    a = np.broadcast_to(a, shape).ravel()
+    b = np.broadcast_to(b, shape).ravel()
+    width = 2 * bits
+    # cols[w] = list of bit-arrays of weight w
+    cols: list[list[np.ndarray]] = [[] for _ in range(width)]
+    for i in range(bits):
+        ai = (a >> i) & 1
+        for j in range(bits):
+            cols[i + j].append(ai & ((b >> j) & 1))
+
+    def reduce_once(cols):
+        nxt: list[list[np.ndarray]] = [[] for _ in range(width + 1)]
+        for w in range(width):
+            bitsl = cols[w]
+            idx = 0
+            while len(bitsl) - idx >= 4:
+                x1, x2, x3, x4 = bitsl[idx : idx + 4]
+                idx += 4
+                if kind is not None and w < approx_cols:
+                    pat = x1 | (x2 << 1) | (x3 << 2) | (x4 << 3)
+                    val = compressor_value(kind, pat)
+                    nxt[w].append(val & 1)
+                    nxt[w + 1].append(val >> 1)
+                else:
+                    # exact 4-2 via two FAs (cin = 0)
+                    s1 = x1 ^ x2 ^ x3
+                    c1 = (x1 & x2) | ((x1 ^ x2) & x3)
+                    s = s1 ^ x4
+                    c2 = s1 & x4
+                    nxt[w].append(s)
+                    nxt[w + 1].append(c1)
+                    nxt[w + 1].append(c2)
+            rest = bitsl[idx:]
+            if len(rest) == 3:
+                x1, x2, x3 = rest
+                nxt[w].append(x1 ^ x2 ^ x3)
+                nxt[w + 1].append((x1 & x2) | ((x1 ^ x2) & x3))
+            elif len(rest) == 2:
+                nxt[w].extend(rest)
+            elif len(rest) == 1:
+                nxt[w].append(rest[0])
+        return [c for c in nxt[:width]]
+
+    while any(len(c) > 2 for c in cols):
+        cols = reduce_once(cols)
+
+    zero = np.zeros_like(a)
+    row1 = sum(((c[0] if len(c) > 0 else zero) << w) for w, c in enumerate(cols))
+    row2 = sum(((c[1] if len(c) > 1 else zero) << w) for w, c in enumerate(cols))
+    return ((row1 + row2) & ((1 << width) - 1)).reshape(shape)
+
+
+# ---- logarithmic multipliers ----------------------------------------------
+
+
+def _msb(x):
+    """Position of the most significant set bit (x > 0)."""
+    return np.int64(np.floor(np.log2(np.maximum(x, 1))))
+
+
+def mitchell_multiply(a, b, bits: int):
+    """Conventional Mitchell LM [24]: AP only, EP dropped."""
+    a = np.asarray(a, dtype=np.int64)
+    b = np.asarray(b, dtype=np.int64)
+    k1 = _msb(a)
+    k2 = _msb(b)
+    q1 = a - (1 << k1)
+    q2 = b - (1 << k2)
+    p = (1 << (k1 + k2)) + (q1 << k2) + (q2 << k1)
+    return np.where((a == 0) | (b == 0), 0, p)
+
+
+def _round_pow2_exp(x):
+    """Exponent of the nearest power of two (x > 0); ties round up."""
+    k = _msb(x)
+    below = np.where(k > 0, (x >> np.maximum(k - 1, 0)) & 1, 0)
+    roundup = (k > 0) & (below == 1)
+    return k + roundup.astype(np.int64)
+
+
+def logour_multiply(a, b, bits: int):
+    """The proposed Log-our multiplier (paper Eq. 3)."""
+    a = np.asarray(a, dtype=np.int64)
+    b = np.asarray(b, dtype=np.int64)
+    k1 = _msb(a)
+    k2 = _msb(b)
+    q1 = a - (1 << k1)
+    q2 = b - (1 << k2)
+    big = np.maximum(q1, q2)
+    small = np.minimum(q1, q2)
+    comp = np.where(big > 0, small << _round_pow2_exp(np.maximum(big, 1)), 0)
+    p = ((1 << (k1 + k2)) | comp) + (q1 << k2) + (q2 << k1)
+    return np.where((a == 0) | (b == 0), 0, p)
+
+
+# ---- family dispatch + LUTs -------------------------------------------------
+
+FAMILIES = ("exact", "appro42", "logour", "lm")
+
+
+def unsigned_multiply(family: str, a, b, bits: int = 8):
+    if family == "exact":
+        return np.asarray(a, dtype=np.int64) * np.asarray(b, dtype=np.int64)
+    if family == "appro42":
+        # paper default: yang1 on the low `bits` columns (Fig 2 red box)
+        return pptree_multiply(a, b, bits, approx_cols=bits, kind="yang1")
+    if family == "logour":
+        return logour_multiply(a, b, bits)
+    if family == "lm":
+        return mitchell_multiply(a, b, bits)
+    raise ValueError(f"unknown family {family!r}")
+
+
+def int8_lut(family: str) -> np.ndarray:
+    """(256, 256) int32 LUT indexed by the int8 *bit patterns* of (a, b);
+    products computed sign-magnitude through the unsigned 8-bit family —
+    bit-exact with rust `mult::behavioral::int8_lut`."""
+    patterns = np.arange(256, dtype=np.int64)
+    signed = np.where(patterns >= 128, patterns - 256, patterns)  # int8 value
+    av = signed[:, None]
+    bv = signed[None, :]
+    mag = unsigned_multiply(family, np.abs(av), np.abs(bv), bits=8)
+    sign = np.sign(av) * np.sign(bv)
+    return (sign * mag).astype(np.int32)
+
+
+def uint8_lut(family: str) -> np.ndarray:
+    """(256, 256) int32 LUT over unsigned 8-bit operands (image blending)."""
+    v = np.arange(256, dtype=np.int64)
+    return unsigned_multiply(family, v[:, None], v[None, :], bits=8).astype(np.int32)

@@ -1,0 +1,101 @@
+"""Build-time training of the float CNN on the synthetic dataset, followed
+by post-training quantization calibration.
+
+Pure JAX (no optax in this environment): hand-rolled Adam + softmax
+cross-entropy. Training runs once under ``make artifacts``; the loss curve
+and final accuracies are written to ``artifacts/training_log.txt`` and the
+quantized weights/scales to ``artifacts/weights/``.
+"""
+
+from __future__ import annotations
+
+import functools
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import dataset, model
+
+
+def cross_entropy(params, images, labels):
+    logits = model.float_forward(params, images)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = logits[jnp.arange(labels.shape[0]), labels] - logz
+    return -ll.mean()
+
+
+@functools.partial(jax.jit, static_argnames=())
+def adam_step(params, m, v, t, images, labels, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    loss, grads = jax.value_and_grad(cross_entropy)(params, images, labels)
+    new_params, new_m, new_v = {}, {}, {}
+    for k in params:
+        new_m[k] = b1 * m[k] + (1 - b1) * grads[k]
+        new_v[k] = b2 * v[k] + (1 - b2) * grads[k] ** 2
+        mhat = new_m[k] / (1 - b1**t)
+        vhat = new_v[k] / (1 - b2**t)
+        new_params[k] = params[k] - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return new_params, new_m, new_v, loss
+
+
+def train(
+    steps: int = 600,
+    batch: int = 64,
+    seed: int = 0,
+    log_every: int = 25,
+    log_lines: list[str] | None = None,
+):
+    """Train; returns (params, test_acc, loss_curve)."""
+    (xtr, ytr), (xte, yte) = dataset.train_test()
+    params = {k: jnp.asarray(v) for k, v in model.init_params(seed).items()}
+    m = {k: jnp.zeros_like(v) for k, v in params.items()}
+    v = {k: jnp.zeros_like(v_) for k, v_ in params.items()}
+    rng = np.random.default_rng(seed + 99)
+    curve = []
+    for t in range(1, steps + 1):
+        idx = rng.integers(0, xtr.shape[0], size=batch)
+        images = jnp.asarray(xtr[idx], jnp.int32)
+        labels = jnp.asarray(ytr[idx])
+        params, m, v, loss = adam_step(params, m, v, t, images, labels)
+        if t % log_every == 0 or t == 1:
+            curve.append((t, float(loss)))
+            line = f"step {t:4d}  loss {float(loss):.4f}"
+            print(line)
+            if log_lines is not None:
+                log_lines.append(line)
+    logits = model.float_forward(params, jnp.asarray(xte, jnp.int32))
+    acc = model.accuracy(logits, yte)
+    line = f"float test top-1: {acc:.3f} ({xte.shape[0]} images)"
+    print(line)
+    if log_lines is not None:
+        log_lines.append(line)
+    return {k: np.asarray(v) for k, v in params.items()}, acc, curve
+
+
+def calibrate(params, n_cal: int = 256) -> list[float]:
+    """Activation scales from a calibration batch (train distribution)."""
+    (xtr, _), _ = dataset.train_test()
+    acts = model.float_activations(
+        {k: jnp.asarray(v) for k, v in params.items()},
+        jnp.asarray(xtr[:n_cal], jnp.int32),
+    )
+    return [model.calibrate_scale(a) for a in acts]
+
+
+def save_weights(outdir: Path, qparams, scales):
+    """Write the npy bundle rust nn::model::QuantCnn::load expects."""
+    wdir = outdir / "weights"
+    wdir.mkdir(parents=True, exist_ok=True)
+    for name in ["conv1", "conv2", "fc1", "fc2"]:
+        np.save(wdir / f"{name}_q.npy", qparams[f"{name}_wq"].astype(np.int32))
+        np.save(wdir / f"{name}_b.npy", qparams[f"{name}_b"].astype(np.float32))
+    np.save(wdir / "scales.npy", np.asarray(scales, np.float32))
+
+
+if __name__ == "__main__":
+    params, acc, _ = train()
+    scales_act = calibrate(params)
+    qparams, scales = model.quantize_params(params, scales_act)
+    save_weights(Path("../artifacts"), qparams, scales)
+    print("saved weights; float top-1", acc)

@@ -1,0 +1,89 @@
+"""Pallas LUT-matmul kernel vs the pure-jnp oracle — the core L1
+correctness signal. Hypothesis sweeps shapes and LUT contents."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import mults
+from compile.kernels import ref
+from compile.kernels.approx_matmul import BM, lut_matmul, pad_rows
+
+RNG = np.random.default_rng(7)
+LUTS = {fam: mults.int8_lut(fam).reshape(-1) for fam in mults.FAMILIES}
+
+
+def rand_q(shape, rng=RNG):
+    return rng.integers(-127, 128, shape).astype(np.int32)
+
+
+@pytest.mark.parametrize("family", mults.FAMILIES)
+def test_kernel_matches_ref_all_families(family):
+    lut = jnp.asarray(LUTS[family])
+    a = jnp.asarray(rand_q((64, 24)))
+    b = jnp.asarray(rand_q((24, 16)))
+    out = lut_matmul(a, b, lut)
+    expect = ref.lut_matmul_ref(a, b, lut)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+def test_kernel_exact_family_is_integer_matmul():
+    lut = jnp.asarray(LUTS["exact"])
+    a = rand_q((32, 72))
+    b = rand_q((72, 10))
+    out = lut_matmul(jnp.asarray(a), jnp.asarray(b), lut)
+    np.testing.assert_array_equal(
+        np.asarray(out), a.astype(np.int64) @ b.astype(np.int64)
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m_blocks=st.integers(1, 4),
+    k=st.integers(1, 80),
+    n=st.integers(1, 33),
+    seed=st.integers(0, 2**31),
+)
+def test_kernel_matches_ref_hypothesis_shapes(m_blocks, k, n, seed):
+    rng = np.random.default_rng(seed)
+    m = m_blocks * BM
+    a = jnp.asarray(rand_q((m, k), rng))
+    b = jnp.asarray(rand_q((k, n), rng))
+    lut = jnp.asarray(LUTS["logour"])
+    out = lut_matmul(a, b, lut)
+    expect = ref.lut_matmul_ref(a, b, lut)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31))
+def test_kernel_with_arbitrary_luts(seed):
+    # The kernel must be a pure gather-sum for ANY table, not just real
+    # multiplier tables.
+    rng = np.random.default_rng(seed)
+    lut = jnp.asarray(rng.integers(-(2**15), 2**15, 65536).astype(np.int32))
+    a = jnp.asarray(rand_q((BM, 7), rng))
+    b = jnp.asarray(rand_q((7, 5), rng))
+    out = lut_matmul(a, b, lut)
+    expect = ref.lut_matmul_numpy(np.asarray(a), np.asarray(b), np.asarray(lut))
+    np.testing.assert_array_equal(np.asarray(out), expect)
+
+
+def test_kernel_negative_index_wrapping():
+    # -128 and -1 exercise the & 0xFF masking on both operands.
+    lut = jnp.asarray(LUTS["exact"])
+    a = jnp.asarray(np.array([[-128, -1, 127, 0]] * BM, np.int32))
+    b = jnp.asarray(np.array([[-128], [-1], [127], [-127]], np.int32))
+    out = lut_matmul(a, b, lut)
+    expect = np.asarray(a, np.int64) @ np.asarray(b, np.int64)
+    np.testing.assert_array_equal(np.asarray(out), expect)
+
+
+def test_pad_rows_roundtrip():
+    x = jnp.ones((BM + 3, 4), jnp.int32)
+    padded, m = pad_rows(x)
+    assert m == BM + 3
+    assert padded.shape[0] % BM == 0
+    assert int(padded[m:].sum()) == 0

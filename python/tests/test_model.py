@@ -1,0 +1,94 @@
+"""Model-level tests: structure mirrors, quantized-vs-float agreement, and
+dataset sanity."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import dataset, model, mults
+
+
+def test_dataset_deterministic_and_balanced():
+    x1, y1 = dataset.make_split(256, seed=5)
+    x2, y2 = dataset.make_split(256, seed=5)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+    assert x1.shape == (256, 16, 16)
+    assert x1.dtype == np.uint8
+    # every class appears
+    assert len(np.unique(y1)) == 10
+
+
+def test_im2col_matches_naive():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 5, 5, 3)).astype(np.float32))
+    cols, oh, ow = model.im2col(x)
+    assert (oh, ow) == (3, 3)
+    cols = np.asarray(cols)
+    xn = np.asarray(x)
+    for b in range(2):
+        for oy in range(3):
+            for ox in range(3):
+                naive = []
+                for ky in range(3):
+                    for kx in range(3):
+                        for c in range(3):
+                            naive.append(xn[b, oy + ky, ox + kx, c])
+                np.testing.assert_allclose(cols[b, oy * 3 + ox], naive)
+
+
+def test_maxpool_floor_semantics():
+    x = jnp.asarray(np.arange(2 * 5 * 5 * 1, dtype=np.float32).reshape(2, 5, 5, 1))
+    p = model.maxpool2(x)
+    assert p.shape == (2, 2, 2, 1)
+    # top-left window max of [[0,1],[5,6]] = 6
+    assert float(p[0, 0, 0, 0]) == 6.0
+
+
+def test_float_forward_shapes():
+    params = {k: jnp.asarray(v) for k, v in model.init_params(0).items()}
+    x, _ = dataset.make_split(8, seed=1)
+    logits = model.float_forward(params, jnp.asarray(x, jnp.int32))
+    assert logits.shape == (8, 10)
+
+
+def test_quant_forward_with_exact_lut_tracks_float():
+    params_np = model.init_params(3)
+    params = {k: jnp.asarray(v) for k, v in params_np.items()}
+    x, _ = dataset.make_split(32, seed=2)
+    xj = jnp.asarray(x, jnp.int32)
+    acts = model.float_activations(params, xj)
+    scales_act = [model.calibrate_scale(a) for a in acts]
+    qparams, scales = model.quantize_params(params_np, scales_act)
+    fwd = model.make_quant_forward(qparams, scales)
+    (qlogits,) = fwd(xj, jnp.asarray(mults.int8_lut("exact").reshape(-1)))
+    flogits = model.float_forward(params, xj)
+    # int8 static quantization: logits track within a coarse tolerance and
+    # argmax agrees on a large majority.
+    q = np.asarray(qlogits)
+    f = np.asarray(flogits)
+    scale = np.abs(f).mean() + 1e-6
+    assert np.abs(q - f).mean() / scale < 0.35
+    agree = (np.argmax(q, -1) == np.argmax(f, -1)).mean()
+    assert agree >= 0.75, f"argmax agreement {agree}"
+
+
+def test_quant_forward_family_sensitivity():
+    params_np = model.init_params(4)
+    params = {k: jnp.asarray(v) for k, v in params_np.items()}
+    x, _ = dataset.make_split(32, seed=3)
+    xj = jnp.asarray(x, jnp.int32)
+    acts = model.float_activations(params, xj)
+    scales_act = [model.calibrate_scale(a) for a in acts]
+    qparams, scales = model.quantize_params(params_np, scales_act)
+    fwd = model.make_quant_forward(qparams, scales)
+    outs = {}
+    for fam in ("exact", "appro42", "logour", "lm"):
+        (logits,) = fwd(xj, jnp.asarray(mults.int8_lut(fam).reshape(-1)))
+        outs[fam] = np.asarray(logits)
+    # families genuinely differ...
+    assert not np.array_equal(outs["exact"], outs["lm"])
+    # ...but the accurate ones stay close to exact
+    ref_norm = np.abs(outs["exact"]).mean() + 1e-6
+    d_appro = np.abs(outs["appro42"] - outs["exact"]).mean() / ref_norm
+    d_lm = np.abs(outs["lm"] - outs["exact"]).mean() / ref_norm
+    assert d_appro < d_lm, f"appro {d_appro} should deviate less than lm {d_lm}"

@@ -1,0 +1,160 @@
+"""Tests for the Python behavioral multiplier library (mirror of the Rust
+`mult` module) — compressor truth tables, family properties, LUT
+correctness, plus hypothesis sweeps."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import mults
+
+
+# ---- compressors -----------------------------------------------------------
+
+
+def compressor_stats(kind):
+    patterns = np.arange(16)
+    vals = mults.compressor_value(kind, patterns)
+    truth = np.array([bin(p).count("1") for p in range(16)])
+    err = vals - truth
+    return {
+        "er": float(np.mean(err != 0)),
+        "med": float(np.mean(np.abs(err))),
+        "bias": float(np.mean(err)),
+        "wce": int(np.max(np.abs(err))),
+    }
+
+
+def test_yang1_documented_stats():
+    s = compressor_stats("yang1")
+    assert s["er"] == 5 / 16
+    assert s["med"] == 6 / 16
+    assert s["bias"] < 0
+    assert s["wce"] == 2
+
+
+def test_kong_and_strollo_are_high_accuracy():
+    assert compressor_stats("kong")["er"] == 1 / 16
+    assert compressor_stats("strollo_cm3")["er"] == 1 / 16
+
+
+def test_all_compressors_exact_below_two_ones():
+    for kind in ("yang1", "momeni", "ha_lee", "kong", "strollo_cm3"):
+        vals = mults.compressor_value(kind, np.arange(16))
+        for p in (0, 1, 2, 4, 8):
+            assert vals[p] == bin(p).count("1"), f"{kind} pattern {p:04b}"
+
+
+def test_unknown_compressor_raises():
+    with pytest.raises(ValueError):
+        mults.compressor_value("nope", np.arange(16))
+
+
+# ---- pp-tree multiplier ------------------------------------------------------
+
+
+def test_pptree_exact_when_no_approx_cols():
+    a = np.arange(256)
+    b = np.arange(256)
+    prod = mults.pptree_multiply(a[:, None], b[None, :], 8)
+    assert (prod == a[:, None] * b[None, :]).all()
+
+
+def test_pptree_approx_bounded_error():
+    a = np.arange(0, 256, 3)
+    b = np.arange(0, 256, 5)
+    prod = mults.pptree_multiply(a[:, None], b[None, :], 8, approx_cols=8, kind="yang1")
+    err = np.abs(prod - a[:, None] * b[None, :])
+    assert err.max() > 0  # it does approximate
+    assert err.max() < 8 * 256  # column budget bound
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    a=st.integers(0, 2**16 - 1),
+    b=st.integers(0, 2**16 - 1),
+    cols=st.integers(0, 16),
+)
+def test_pptree_16bit_error_bound_hypothesis(a, b, cols):
+    prod = int(mults.pptree_multiply(a, b, 16, approx_cols=cols, kind="yang1"))
+    err = abs(prod - a * b)
+    # each approximate compressor contributes |ED| <= 2 at weight 2^w,
+    # with at most ~4 compressors per column across stages
+    assert err <= 16 * (2 ** max(cols, 1))
+
+
+# ---- logarithmic multipliers --------------------------------------------------
+
+
+def test_mitchell_underestimates_and_is_exact_on_pow2():
+    a = np.arange(256)
+    b = np.arange(256)
+    p = mults.mitchell_multiply(a[:, None], b[None, :], 8)
+    assert (p <= a[:, None] * b[None, :]).all()
+    for i in range(8):
+        for j in range(8):
+            assert p[1 << i, 1 << j] == (1 << i) * (1 << j)
+
+
+def test_logour_beats_mitchell_exhaustive():
+    a = np.arange(256)
+    exact = a[:, None] * a[None, :]
+    lm = np.abs(mults.mitchell_multiply(a[:, None], a[None, :], 8) - exact).mean()
+    lo = np.abs(mults.logour_multiply(a[:, None], a[None, :], 8) - exact).mean()
+    assert lo < 0.5 * lm
+
+
+def test_log_families_zero_handling():
+    for f in (mults.mitchell_multiply, mults.logour_multiply):
+        assert f(0, 37, 8) == 0
+        assert f(255, 0, 8) == 0
+
+
+@settings(max_examples=80, deadline=None)
+@given(a=st.integers(1, 255), b=st.integers(1, 255))
+def test_logour_compensation_no_carry_hypothesis(a, b):
+    # OR-merge invariant (paper Eq. 3): comp < 2^(k1+k2)
+    k1, k2 = a.bit_length() - 1, b.bit_length() - 1
+    q1, q2 = a - (1 << k1), b - (1 << k2)
+    big, small = max(q1, q2), min(q1, q2)
+    if big == 0:
+        return
+    kb = big.bit_length() - 1
+    roundup = kb > 0 and (big >> (kb - 1)) & 1
+    comp = small << (kb + int(roundup))
+    assert comp < (1 << (k1 + k2))
+
+
+# ---- LUTs ---------------------------------------------------------------------
+
+
+def test_exact_lut_is_true_signed_product():
+    lut = mults.int8_lut("exact")
+    for a in range(-128, 128, 17):
+        for b in range(-128, 128, 13):
+            idx = ((a & 0xFF) << 8) | (b & 0xFF)
+            assert lut[idx // 256, idx % 256] == a * b
+
+
+def test_luts_antisymmetric_in_sign():
+    for fam in mults.FAMILIES:
+        lut = mults.int8_lut(fam)
+        for a in range(-127, 128, 23):
+            for b in range(-127, 128, 29):
+                i1 = ((a & 0xFF) << 8) | (b & 0xFF)
+                i2 = (((-a) & 0xFF) << 8) | (b & 0xFF)
+                assert lut[i1 // 256, i1 % 256] == -lut[i2 // 256, i2 % 256]
+
+
+def test_nmed_ordering_matches_paper_table4():
+    v = np.arange(256)
+    exact = v[:, None] * v[None, :]
+    pmax = 255 * 255
+
+    def nmed(fam):
+        p = mults.unsigned_multiply(fam, v[:, None], v[None, :], 8)
+        return np.abs(p - exact).mean() / pmax
+
+    appro, logour, lm = nmed("appro42"), nmed("logour"), nmed("lm")
+    assert appro < logour < lm

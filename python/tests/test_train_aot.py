@@ -1,0 +1,71 @@
+"""Smoke tests for the build path: short training runs learn, quantization
+calibrates, and the args-form quantized forward (the one that gets
+AOT-lowered) is semantically identical to the closure form."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import dataset, model, mults, train
+
+
+def _tiny_trained(steps=40):
+    params, acc, curve = train.train(steps=steps, batch=32, log_every=20)
+    return params, acc, curve
+
+
+def test_short_training_reduces_loss():
+    _, _, curve = _tiny_trained()
+    first = curve[0][1]
+    last = curve[-1][1]
+    assert last < first, f"loss did not drop: {first} -> {last}"
+
+
+def test_calibration_scales_positive_and_ordered():
+    params, _, _ = _tiny_trained()
+    scales_act = train.calibrate(params, n_cal=64)
+    assert len(scales_act) == 4
+    assert all(s > 0 for s in scales_act)
+    qparams, scales = model.quantize_params(params, scales_act)
+    assert scales.shape == (8,)
+    # quantized weights are genuine int8 values
+    for name in ["conv1", "conv2", "fc1", "fc2"]:
+        w = qparams[f"{name}_wq"]
+        assert w.dtype == np.int32
+        assert np.abs(w).max() <= 127
+
+
+def test_args_form_equals_closure_form():
+    params, _, _ = _tiny_trained()
+    scales_act = train.calibrate(params, n_cal=64)
+    qparams, scales = model.quantize_params(params, scales_act)
+    closure = model.make_quant_forward(qparams, scales)
+    args_form = model.make_quant_forward_args(scales)
+    wargs = model.weight_args(qparams)
+    x, _ = dataset.make_split(32, seed=9)
+    xj = jnp.asarray(x, jnp.int32)
+    lut = jnp.asarray(mults.int8_lut("logour").reshape(-1))
+    (a,) = closure(xj, lut)
+    (b,) = args_form(xj, lut, *wargs)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_lowering_produces_hlo_text_with_operand_weights():
+    params, _, _ = _tiny_trained()
+    scales_act = train.calibrate(params, n_cal=64)
+    qparams, scales = model.quantize_params(params, scales_act)
+    fwd = model.make_quant_forward_args(scales)
+    wargs = model.weight_args(qparams)
+    specs = [jax.ShapeDtypeStruct((32, 16, 16), jnp.int32),
+             jax.ShapeDtypeStruct((65536,), jnp.int32)] + [
+        jax.ShapeDtypeStruct(w.shape, w.dtype) for w in wargs
+    ]
+    lowered = jax.jit(fwd).lower(*specs)
+    from compile.aot import to_hlo_text
+
+    hlo = to_hlo_text(lowered)
+    assert "ENTRY" in hlo
+    # 10 parameters: images, lut, and the 8 weight operands.
+    entry = hlo[hlo.index("ENTRY"):]
+    n_params = entry.count(" parameter(")
+    assert n_params == 10, f"expected 10 entry parameters, found {n_params}"

@@ -1,0 +1,76 @@
+//! Image blending (paper §V-B): an 8-bit unsigned multiplier processes two
+//! grayscale images pixel by pixel — `out = (a × b) >> 8` — exactly the
+//! multiplicative blend of [27], with results scaled back to 8 bits.
+
+use super::images::Image;
+use crate::config::spec::MultFamily;
+use crate::mult::behavioral::behavioral_fn;
+
+/// Blend two equal-size images through a multiplier family.
+pub fn blend(a: &Image, b: &Image, family: &MultFamily) -> Image {
+    assert_eq!((a.w, a.h), (b.w, b.h), "blend needs equal sizes");
+    let f = behavioral_fn(family, 8);
+    let mut out = Image::new(a.w, a.h);
+    for i in 0..a.px.len() {
+        let p = f(a.px[i] as u64, b.px[i] as u64);
+        out.px[i] = (p >> 8).min(255) as u8;
+    }
+    out
+}
+
+/// Blend via a precomputed 65536-entry LUT (the hot path used by the
+/// serving coordinator; must agree with [`blend`] bit-for-bit).
+pub fn blend_lut(a: &Image, b: &Image, lut: &[i32]) -> Image {
+    assert_eq!(lut.len(), 65536);
+    let mut out = Image::new(a.w, a.h);
+    for i in 0..a.px.len() {
+        let p = lut[((a.px[i] as usize) << 8) | b.px[i] as usize];
+        out.px[i] = ((p as u32) >> 8).min(255) as u8;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::images;
+    use crate::mult::behavioral::uint8_lut;
+
+    #[test]
+    fn exact_blend_matches_reference_math() {
+        let a = images::lake(32);
+        let b = images::mandril(32);
+        let out = blend(&a, &b, &MultFamily::Exact);
+        for i in 0..out.px.len() {
+            assert_eq!(
+                out.px[i] as u64,
+                (a.px[i] as u64 * b.px[i] as u64) >> 8
+            );
+        }
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+    fn lut_blend_matches_behavioral_blend() {
+        let a = images::boat(48);
+        let b = images::cameraman(48);
+        for fam in [MultFamily::LogOur, MultFamily::Mitchell] {
+            let lut = uint8_lut(&fam);
+            assert_eq!(blend(&a, &b, &fam), blend_lut(&a, &b, &lut), "{fam:?}");
+        }
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+    fn approximate_blend_is_close_to_exact() {
+        let a = images::lake(64);
+        let b = images::boat(64);
+        let exact = blend(&a, &b, &MultFamily::Exact);
+        let appro = blend(&a, &b, &MultFamily::default_approx(8));
+        let mut max_d = 0i32;
+        for i in 0..exact.px.len() {
+            max_d = max_d.max((exact.px[i] as i32 - appro.px[i] as i32).abs());
+        }
+        assert!(max_d <= 4, "appro4-2 blend deviates by {max_d} levels");
+    }
+}

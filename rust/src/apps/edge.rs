@@ -1,0 +1,124 @@
+//! Sobel edge detection (paper §V-B): convolution and squaring use a
+//! 16-bit *signed* approximate multiplier (sign-magnitude wrapped), the
+//! final square root is computed exactly — exactly the paper's protocol.
+
+use super::images::Image;
+use crate::config::spec::MultFamily;
+use crate::mult::behavioral::{behavioral_fn, signed_multiply};
+
+const SOBEL_X: [[i64; 3]; 3] = [[-1, 0, 1], [-2, 0, 2], [-1, 0, 1]];
+const SOBEL_Y: [[i64; 3]; 3] = [[-1, -2, -1], [0, 0, 0], [1, 2, 1]];
+
+/// Integer square root (exact, per the paper: "the square root is computed
+/// exactly").
+pub fn isqrt(v: u64) -> u64 {
+    if v == 0 {
+        return 0;
+    }
+    let mut x = (v as f64).sqrt() as u64;
+    // Fix up float rounding.
+    while (x + 1) * (x + 1) <= v {
+        x += 1;
+    }
+    while x * x > v {
+        x -= 1;
+    }
+    x
+}
+
+/// Sobel gradient magnitude through a multiplier family (16-bit signed for
+/// both the kernel taps and the squaring).
+pub fn edge_detect(img: &Image, family: &MultFamily) -> Image {
+    let f = behavioral_fn(family, 16);
+    let mul = |a: i64, b: i64| -> i64 { signed_multiply(&*f, a, b) };
+    let mut out = Image::new(img.w, img.h);
+    for y in 1..img.h - 1 {
+        for x in 1..img.w - 1 {
+            let mut gx = 0i64;
+            let mut gy = 0i64;
+            for ky in 0..3 {
+                for kx in 0..3 {
+                    let p = img.get(x + kx - 1, y + ky - 1) as i64;
+                    if SOBEL_X[ky][kx] != 0 {
+                        gx += mul(p, SOBEL_X[ky][kx]);
+                    }
+                    if SOBEL_Y[ky][kx] != 0 {
+                        gy += mul(p, SOBEL_Y[ky][kx]);
+                    }
+                }
+            }
+            // Squares via the same signed multiplier; |g| <= 1020 fits 16-bit.
+            let g2 = mul(gx, gx) + mul(gy, gy);
+            let mag = isqrt(g2.max(0) as u64);
+            out.set(x, y, mag.min(255) as u8);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::images;
+
+    #[test]
+    fn isqrt_exact() {
+        for v in 0..2000u64 {
+            let r = isqrt(v);
+            assert!(r * r <= v && (r + 1) * (r + 1) > v, "isqrt({v}) = {r}");
+        }
+        assert_eq!(isqrt(u32::MAX as u64), 65535);
+    }
+
+    #[test]
+    fn exact_edge_matches_reference_sobel() {
+        let img = images::cameraman(48);
+        let ours = edge_detect(&img, &MultFamily::Exact);
+        // independent reference
+        for y in 1..img.h - 1 {
+            for x in 1..img.w - 1 {
+                let mut gx = 0i64;
+                let mut gy = 0i64;
+                for ky in 0..3 {
+                    for kx in 0..3 {
+                        let p = img.get(x + kx - 1, y + ky - 1) as i64;
+                        gx += p * SOBEL_X[ky][kx];
+                        gy += p * SOBEL_Y[ky][kx];
+                    }
+                }
+                let mag = isqrt((gx * gx + gy * gy) as u64).min(255) as u8;
+                assert_eq!(ours.get(x, y), mag, "({x},{y})");
+            }
+        }
+    }
+
+    #[test]
+    fn flat_image_has_no_edges() {
+        let mut img = Image::new(16, 16);
+        img.px.fill(100);
+        let e = edge_detect(&img, &MultFamily::Exact);
+        assert!(e.px.iter().all(|&p| p == 0));
+    }
+
+    #[test]
+    fn edges_respond_to_boundaries() {
+        let img = images::cameraman(64);
+        let e = edge_detect(&img, &MultFamily::Exact);
+        let max = *e.px.iter().max().unwrap();
+        assert!(max > 100, "strong silhouette edge expected, max {max}");
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+    fn approximate_edges_preserve_structure() {
+        let img = images::boat(64);
+        let exact = edge_detect(&img, &MultFamily::Exact);
+        let appro = edge_detect(&img, &MultFamily::default_approx(16));
+        // Count strong-edge pixels: sets should mostly agree.
+        let strong = |im: &Image| -> Vec<bool> { im.px.iter().map(|&p| p > 60).collect() };
+        let (se, sa) = (strong(&exact), strong(&appro));
+        let agree = se.iter().zip(&sa).filter(|(a, b)| a == b).count();
+        let frac = agree as f64 / se.len() as f64;
+        assert!(frac > 0.97, "edge maps agree only {frac:.3}");
+    }
+}

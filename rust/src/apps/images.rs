@@ -1,0 +1,250 @@
+//! Procedural grayscale test images, stand-ins for the classic USC-SIPI
+//! set. Each generator is deterministic and mimics the texture character
+//! of its namesake (smooth water + gradients vs. high-frequency fur vs.
+//! geometric edges), which is what differentiates PSNR rows in Table III.
+
+use crate::util::rng::Pcg32;
+
+/// A grayscale image, row-major u8.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Image {
+    pub w: usize,
+    pub h: usize,
+    pub px: Vec<u8>,
+}
+
+impl Image {
+    pub fn new(w: usize, h: usize) -> Self {
+        Self {
+            w,
+            h,
+            px: vec![0; w * h],
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, x: usize, y: usize) -> u8 {
+        self.px[y * self.w + x]
+    }
+
+    #[inline]
+    pub fn set(&mut self, x: usize, y: usize, v: u8) {
+        self.px[y * self.w + x] = v;
+    }
+
+    /// Mean pixel value.
+    pub fn mean(&self) -> f64 {
+        self.px.iter().map(|&p| p as f64).sum::<f64>() / self.px.len() as f64
+    }
+
+    /// Mean absolute horizontal gradient (texture level).
+    pub fn gradient_energy(&self) -> f64 {
+        let mut acc = 0f64;
+        let mut n = 0f64;
+        for y in 0..self.h {
+            for x in 1..self.w {
+                acc += (self.get(x, y) as f64 - self.get(x - 1, y) as f64).abs();
+                n += 1.0;
+            }
+        }
+        acc / n
+    }
+}
+
+fn smoothstep(x: f64) -> f64 {
+    let x = x.clamp(0.0, 1.0);
+    x * x * (3.0 - 2.0 * x)
+}
+
+/// "lake": smooth vertical gradient + low-frequency ripples + soft shore.
+pub fn lake(n: usize) -> Image {
+    let mut img = Image::new(n, n);
+    for y in 0..n {
+        for x in 0..n {
+            let fx = x as f64 / n as f64;
+            let fy = y as f64 / n as f64;
+            let sky = 190.0 - 90.0 * fy;
+            let ripple = 18.0 * ((fx * 21.0 + fy * 4.0).sin() * (fy * 13.0).cos());
+            let shore = 35.0 * smoothstep((fy - 0.72) * 8.0);
+            let v = sky + ripple * smoothstep((fy - 0.45) * 6.0) - shore;
+            img.set(x, y, v.clamp(0.0, 255.0) as u8);
+        }
+    }
+    img
+}
+
+/// "mandril": high-frequency fur-like multi-octave noise.
+pub fn mandril(n: usize) -> Image {
+    let mut img = Image::new(n, n);
+    let mut rng = Pcg32::new(0x4D414E44);
+    // Value-noise lattice octaves.
+    let octaves: Vec<(usize, f64, Vec<f64>)> = [(8usize, 70.0), (16, 45.0), (64, 40.0)]
+        .iter()
+        .map(|&(g, amp)| {
+            let lattice: Vec<f64> = (0..(g + 1) * (g + 1)).map(|_| rng.next_f64()).collect();
+            (g, amp, lattice)
+        })
+        .collect();
+    for y in 0..n {
+        for x in 0..n {
+            let mut v = 128.0;
+            for (g, amp, lat) in &octaves {
+                let fx = x as f64 / n as f64 * *g as f64;
+                let fy = y as f64 / n as f64 * *g as f64;
+                let (ix, iy) = (fx as usize, fy as usize);
+                let (tx, ty) = (fx - ix as f64, fy - iy as f64);
+                let at = |i: usize, j: usize| lat[j.min(*g) * (*g + 1) + i.min(*g)];
+                let top = at(ix, iy) * (1.0 - tx) + at(ix + 1, iy) * tx;
+                let bot = at(ix, iy + 1) * (1.0 - tx) + at(ix + 1, iy + 1) * tx;
+                v += amp * ((top * (1.0 - ty) + bot * ty) - 0.5) * 2.0;
+            }
+            img.set(x, y, v.clamp(0.0, 255.0) as u8);
+        }
+    }
+    img
+}
+
+/// "jetplane": bright body with hard geometric edges on sky.
+pub fn jetplane(n: usize) -> Image {
+    let mut img = Image::new(n, n);
+    for y in 0..n {
+        for x in 0..n {
+            let fx = x as f64 / n as f64;
+            let fy = y as f64 / n as f64;
+            let sky = 170.0 + 40.0 * fy;
+            // fuselage: rotated ellipse
+            let (cx, cy) = (fx - 0.5, fy - 0.45);
+            let (u, v2) = (cx * 0.9 + cy * 0.45, -cx * 0.45 + cy * 0.9);
+            let body = (u * u / 0.09 + v2 * v2 / 0.004) < 1.0;
+            // wing: triangle-ish band
+            let wing = (fy - 0.45 + 0.8 * (fx - 0.5)).abs() < 0.03 && fx > 0.25 && fx < 0.75;
+            let tail = (fx - 0.72).abs() < 0.02 && fy > 0.28 && fy < 0.48;
+            // dark nose marking + canopy give the image its dark tones
+            let nose = ((fx - 0.3).powi(2) + (fy - 0.46).powi(2)).sqrt() < 0.035;
+            let canopy = ((fx - 0.42).powi(2) + (fy - 0.42).powi(2)).sqrt() < 0.025;
+            let val = if nose || canopy {
+                25.0
+            } else if body || wing || tail {
+                235.0
+            } else {
+                sky
+            };
+            img.set(x, y, val.clamp(0.0, 255.0) as u8);
+        }
+    }
+    img
+}
+
+/// "boat": structured masts/hull over graded water.
+pub fn boat(n: usize) -> Image {
+    let mut img = Image::new(n, n);
+    for y in 0..n {
+        for x in 0..n {
+            let fx = x as f64 / n as f64;
+            let fy = y as f64 / n as f64;
+            let sky = 200.0 - 60.0 * fy;
+            let water = fy > 0.7;
+            let wave = 12.0 * ((fx * 40.0).sin() * (fy * 25.0).cos());
+            let mast1 = (fx - 0.4).abs() < 0.008 && fy > 0.15 && fy < 0.7;
+            let mast2 = (fx - 0.55).abs() < 0.006 && fy > 0.25 && fy < 0.7;
+            let hull = fy > 0.62 && fy < 0.72 && fx > 0.28 && fx < 0.68;
+            let sail = fx > 0.405 && fx < 0.54 && fy > 0.2 && fy < 0.55
+                && (fx - 0.405) < (0.55 - fy) * 0.4;
+            let v = if mast1 || mast2 {
+                40.0
+            } else if hull {
+                60.0
+            } else if sail {
+                225.0
+            } else if water {
+                90.0 + wave
+            } else {
+                sky
+            };
+            img.set(x, y, v.clamp(0.0, 255.0) as u8);
+        }
+    }
+    img
+}
+
+/// "cameraman": dark silhouette on bright background, sharp boundary.
+pub fn cameraman(n: usize) -> Image {
+    let mut img = Image::new(n, n);
+    for y in 0..n {
+        for x in 0..n {
+            let fx = x as f64 / n as f64;
+            let fy = y as f64 / n as f64;
+            let bg = 185.0 - 25.0 * fy;
+            // head
+            let head = ((fx - 0.45).powi(2) + (fy - 0.3).powi(2)).sqrt() < 0.09;
+            // torso
+            let torso = fx > 0.34 && fx < 0.58 && fy > 0.38 && fy < 0.8
+                && (fx - 0.46).abs() < 0.13 - 0.05 * (fy - 0.38);
+            // tripod legs
+            let leg1 = ((fx - 0.62) - 0.25 * (fy - 0.55)).abs() < 0.008 && fy > 0.55;
+            let leg2 = ((fx - 0.68) + 0.18 * (fy - 0.55)).abs() < 0.008 && fy > 0.55;
+            let camera = fx > 0.56 && fx < 0.68 && fy > 0.42 && fy < 0.52;
+            let v = if head || torso || camera || leg1 || leg2 {
+                35.0
+            } else {
+                bg
+            };
+            img.set(x, y, v.clamp(0.0, 255.0) as u8);
+        }
+    }
+    img
+}
+
+/// Named generator lookup (paper image names, lowercase).
+pub fn by_name(name: &str, n: usize) -> Option<Image> {
+    Some(match name {
+        "lake" => lake(n),
+        "mandril" => mandril(n),
+        "jetplane" => jetplane(n),
+        "boat" => boat(n),
+        "cameraman" => cameraman(n),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_are_deterministic() {
+        assert_eq!(lake(64), lake(64));
+        assert_eq!(mandril(64), mandril(64));
+    }
+
+    #[test]
+    fn texture_characters_differ() {
+        // mandril must be much busier than lake (fur vs water).
+        let g_lake = lake(128).gradient_energy();
+        let g_mandril = mandril(128).gradient_energy();
+        assert!(
+            g_mandril > 3.0 * g_lake,
+            "mandril {g_mandril:.1} vs lake {g_lake:.1}"
+        );
+    }
+
+    #[test]
+    fn images_use_full_dynamic_range_sanely() {
+        for name in ["lake", "mandril", "jetplane", "boat", "cameraman"] {
+            let img = by_name(name, 128).unwrap();
+            let mean = img.mean();
+            assert!(
+                (40.0..220.0).contains(&mean),
+                "{name} mean {mean}"
+            );
+            let min = *img.px.iter().min().unwrap();
+            let max = *img.px.iter().max().unwrap();
+            assert!(max - min > 80, "{name} has low contrast {min}-{max}");
+        }
+    }
+
+    #[test]
+    fn unknown_name_is_none() {
+        assert!(by_name("lenna", 32).is_none());
+    }
+}

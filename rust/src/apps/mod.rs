@@ -1,0 +1,16 @@
+//! Application-level evaluations (paper §V-B, Table III): image blending
+//! with 8-bit unsigned approximate multipliers and Sobel edge detection
+//! with 16-bit signed approximate multipliers, measured in PSNR against
+//! the exact-multiplier baseline.
+//!
+//! The paper's standard test images (Lake, Mandril, Jetplane, Boat,
+//! Cameraman) are not redistributable here; [`images`] provides named
+//! procedural generators with matching texture character (DESIGN.md §3).
+
+pub mod images;
+pub mod blend;
+pub mod edge;
+pub mod psnr;
+pub mod cli;
+
+pub use psnr::psnr_db;

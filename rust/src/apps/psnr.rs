@@ -1,0 +1,66 @@
+//! PSNR (peak signal-to-noise ratio) against the exact-multiplier baseline
+//! — Table III's quality metric. Above 40 dB ≈ visually identical; below
+//! 30 dB ≈ visible degradation (paper §V-B).
+
+use super::images::Image;
+
+/// PSNR in dB between a reference and a test image. Identical images
+/// return +inf.
+pub fn psnr_db(reference: &Image, test: &Image) -> f64 {
+    assert_eq!((reference.w, reference.h), (test.w, test.h));
+    let mse: f64 = reference
+        .px
+        .iter()
+        .zip(&test.px)
+        .map(|(&a, &b)| {
+            let d = a as f64 - b as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / reference.px.len() as f64;
+    if mse == 0.0 {
+        return f64::INFINITY;
+    }
+    10.0 * (255.0f64 * 255.0 / mse).log10()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::images;
+
+    #[test]
+    fn identical_images_are_infinite() {
+        let a = images::lake(32);
+        assert!(psnr_db(&a, &a).is_infinite());
+    }
+
+    #[test]
+    fn single_level_error_is_about_48db() {
+        let a = images::lake(64);
+        let mut b = a.clone();
+        for p in b.px.iter_mut() {
+            *p = p.saturating_add(1);
+        }
+        let v = psnr_db(&a, &b);
+        assert!((v - 48.13).abs() < 0.2, "psnr {v}");
+    }
+
+    #[test]
+    fn more_noise_is_lower_psnr() {
+        let a = images::boat(64);
+        let mut b1 = a.clone();
+        let mut b4 = a.clone();
+        for (i, p) in b1.px.iter_mut().enumerate() {
+            if i % 2 == 0 {
+                *p = p.saturating_add(2);
+            }
+        }
+        for (i, p) in b4.px.iter_mut().enumerate() {
+            if i % 2 == 0 {
+                *p = p.saturating_add(8);
+            }
+        }
+        assert!(psnr_db(&a, &b1) > psnr_db(&a, &b4));
+    }
+}

@@ -1,0 +1,197 @@
+//! Timing harness and table printer.
+//!
+//! `cargo bench` runs each `benches/*.rs` with `harness = false`; those
+//! binaries (a) print the reproduced paper table and (b) time the hot paths
+//! via [`bench`]. Timing protocol: `warmup` untimed runs, then `iters` timed
+//! runs, reporting mean / p50 / p99 / min. A `black_box` is provided to stop
+//! the optimizer from deleting the measured work.
+
+use crate::util::stats::percentile;
+use std::time::Instant;
+
+/// Prevent the optimizer from eliding a value (stable-Rust friendly).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66.
+    std::hint::black_box(x)
+}
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    /// Throughput given items processed per iteration.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.mean_ns / 1e9)
+    }
+
+    pub fn print(&self) {
+        println!(
+            "bench {:<40} iters={:<5} mean={:>10.3}us p50={:>10.3}us p99={:>10.3}us min={:>10.3}us",
+            self.name,
+            self.iters,
+            self.mean_ns / 1e3,
+            self.p50_ns / 1e3,
+            self.p99_ns / 1e3,
+            self.min_ns / 1e3,
+        );
+    }
+}
+
+/// Run `f` with warmup and timed iterations.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    let mut sorted = samples.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        p50_ns: percentile(&sorted, 50.0),
+        p99_ns: percentile(&sorted, 99.0),
+        min_ns: sorted[0],
+    };
+    r.print();
+    r
+}
+
+/// Fixed-width ASCII table, used to print the reproduced paper tables in the
+/// same row/column layout the paper reports.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn row_str(&mut self, cells: &[&str]) {
+        self.row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    pub fn render(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let line = |cells: &[String], w: &[usize]| -> String {
+            let mut s = String::from("|");
+            for (c, width) in cells.iter().zip(w) {
+                s.push_str(&format!(" {:<width$} |", c, width = width));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&line(&self.header, &w));
+        let total: usize = w.iter().map(|x| x + 3).sum::<usize>() + 1;
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row, &w));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a float in engineering style like the paper ("2.82E-04").
+pub fn sci(x: f64) -> String {
+    if x == 0.0 {
+        return "0.00E+00".to_string();
+    }
+    format!("{:.2E}", x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iterations() {
+        let mut n = 0u64;
+        let r = bench("noop", 2, 10, || {
+            n += 1;
+            black_box(n);
+        });
+        assert_eq!(n, 12);
+        assert_eq!(r.iters, 10);
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.p99_ns >= r.p50_ns);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["a", "bbbb"]);
+        t.row_str(&["1", "2"]);
+        t.row_str(&["333", "4"]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("| 333 | 4    |"));
+    }
+
+    #[test]
+    fn sci_formatting() {
+        assert_eq!(sci(2.82e-4), "2.82E-4");
+        assert_eq!(sci(0.0), "0.00E+00");
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_ns: 1e9,
+            p50_ns: 1e9,
+            p99_ns: 1e9,
+            min_ns: 1e9,
+        };
+        assert!((r.throughput(100.0) - 100.0).abs() < 1e-9);
+    }
+}

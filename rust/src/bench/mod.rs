@@ -1,0 +1,7 @@
+//! Micro-benchmark harness (no criterion offline): warmup + timed iterations
+//! with mean / p50 / p99 reporting, plus the fixed-width table printer used
+//! by every `benches/table*.rs` target to regenerate the paper's tables.
+
+pub mod harness;
+
+pub use harness::{bench, BenchResult, Table};

@@ -1,0 +1,11 @@
+//! Configuration system: the architecture specification consumed by the
+//! compiler (SRAM organization, multiplier family and accuracy knobs, timing
+//! controls) plus a small TOML-subset parser so specs can live in files.
+
+pub mod spec;
+pub mod toml;
+
+pub use spec::{
+    CompressorKind, MacroSpec, MultFamily, MultSpec, SramSpec, TimingKnobs,
+};
+pub use toml::TomlDoc;

@@ -1,0 +1,390 @@
+//! Architecture specification types — the compiler's input.
+//!
+//! A [`MacroSpec`] fully describes one DCiM macro: the SRAM organization
+//! (rows, word width, banks/subarrays, column-mux ratio, timing knobs) and
+//! the arithmetic core (multiplier family + accuracy configuration). The
+//! three Table II configurations are provided as presets.
+
+use anyhow::{bail, Result};
+
+/// Approximate 4-2 compressor designs available in the library.
+/// Truth tables and error statistics live in `mult::compressor`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CompressorKind {
+    /// Exact 4-2 compressor (two cascaded full adders).
+    Exact,
+    /// Yang et al. 2015-family design used as the paper's representative
+    /// ("Yang1"): carry = x1x2 + x3x4, sum = (x1^x2) + (x3^x4).
+    Yang1,
+    /// Momeni et al. 2015-family design: XOR-exact sum, AND-OR carry.
+    Momeni,
+    /// Ha & Lee 2018-family design with error-recovery-friendly carry.
+    HaLee,
+    /// Kong & Li 2021-family high-accuracy design.
+    Kong,
+    /// Strollo et al. 2020-family compressor ("CM3"-like).
+    StrolloCm3,
+    /// Akbari et al. 2017 dual-quality style (approximate mode).
+    DualQuality,
+}
+
+impl CompressorKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            CompressorKind::Exact => "exact",
+            CompressorKind::Yang1 => "yang1",
+            CompressorKind::Momeni => "momeni",
+            CompressorKind::HaLee => "ha_lee",
+            CompressorKind::Kong => "kong",
+            CompressorKind::StrolloCm3 => "strollo_cm3",
+            CompressorKind::DualQuality => "dual_quality",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "exact" => CompressorKind::Exact,
+            "yang1" => CompressorKind::Yang1,
+            "momeni" => CompressorKind::Momeni,
+            "ha_lee" => CompressorKind::HaLee,
+            "kong" => CompressorKind::Kong,
+            "strollo_cm3" => CompressorKind::StrolloCm3,
+            "dual_quality" => CompressorKind::DualQuality,
+            other => bail!("unknown compressor kind {other:?}"),
+        })
+    }
+
+    pub fn all_approx() -> &'static [CompressorKind] {
+        &[
+            CompressorKind::Yang1,
+            CompressorKind::Momeni,
+            CompressorKind::HaLee,
+            CompressorKind::Kong,
+            CompressorKind::StrolloCm3,
+            CompressorKind::DualQuality,
+        ]
+    }
+}
+
+/// Multiplier families (paper §III-B/§III-C + baselines).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub enum MultFamily {
+    /// Exact 4-2-compressor (Dadda-style) multiplier.
+    Exact,
+    /// Tunable approximate multiplier: `compressor` on PP columns
+    /// `0..approx_cols`, exact 4-2 compressors elsewhere (Fig 2 red box).
+    Approx42 {
+        compressor: CompressorKind,
+        approx_cols: usize,
+    },
+    /// Proposed logarithmic multiplier with adder-free dynamic
+    /// compensation (Fig 3, Eq. 3).
+    LogOur,
+    /// Conventional Mitchell logarithmic multiplier [24] (AP only).
+    Mitchell,
+    /// OpenC²-style AND-array + ripple adder-tree multiplier (baseline).
+    AdderTree,
+}
+
+impl MultFamily {
+    pub fn name(&self) -> String {
+        match self {
+            MultFamily::Exact => "exact".into(),
+            MultFamily::Approx42 {
+                compressor,
+                approx_cols,
+            } => format!("appro42[{}x{}]", compressor.name(), approx_cols),
+            MultFamily::LogOur => "log-our".into(),
+            MultFamily::Mitchell => "lm-mitchell".into(),
+            MultFamily::AdderTree => "adder-tree".into(),
+        }
+    }
+
+    /// Short label matching the paper's table rows.
+    pub fn paper_label(&self) -> &'static str {
+        match self {
+            MultFamily::Exact => "Exact",
+            MultFamily::Approx42 { .. } => "Appro4-2",
+            MultFamily::LogOur => "Log-our",
+            MultFamily::Mitchell => "LM [24]",
+            MultFamily::AdderTree => "OpenC2",
+        }
+    }
+
+    /// The paper's default Appro4-2 configuration: Yang1 compressors on PP
+    /// columns #0..#7 (the Fig 2 red box — "approximate 4-2 compressors are
+    /// commonly applied in the lower 8 bits of the PPs"), independent of
+    /// the multiplier width. Used by the application-level evaluations
+    /// (Tables III/IV).
+    pub fn default_approx(bits: usize) -> MultFamily {
+        MultFamily::Approx42 {
+            compressor: CompressorKind::Yang1,
+            approx_cols: bits.min(8),
+        }
+    }
+
+    /// The Table II Appro4-2 configuration: approximate compressors on the
+    /// lower *half* of the product columns, scaling with the width (this is
+    /// what gives the 14–17% power savings the paper reports at 16/32-bit).
+    pub fn table2_approx(bits: usize) -> MultFamily {
+        MultFamily::Approx42 {
+            compressor: CompressorKind::Yang1,
+            approx_cols: bits,
+        }
+    }
+}
+
+/// SRAM timing control knobs (compiler-visible, paper §III-D item 2).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TimingKnobs {
+    /// Sense-amp enable delay after WL assert, in ps.
+    pub sae_delay_ps: f64,
+    /// Precharge pulse width, ps.
+    pub precharge_ps: f64,
+    /// Wordline pulse width, ps.
+    pub wl_pulse_ps: f64,
+}
+
+impl Default for TimingKnobs {
+    fn default() -> Self {
+        Self {
+            sae_delay_ps: 180.0,
+            precharge_ps: 250.0,
+            wl_pulse_ps: 450.0,
+        }
+    }
+}
+
+/// SRAM organization (paper §III-D).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SramSpec {
+    /// Total word rows.
+    pub rows: usize,
+    /// Word width in bits (= one operand's width in the PE).
+    pub word_bits: usize,
+    /// Number of banks.
+    pub banks: usize,
+    /// Subarrays per bank.
+    pub subarrays: usize,
+    /// Column multiplexing ratio (1 = none).
+    pub mux_ratio: usize,
+    pub timing: TimingKnobs,
+}
+
+impl SramSpec {
+    pub fn new(rows: usize, word_bits: usize) -> Self {
+        Self {
+            rows,
+            word_bits,
+            banks: 1,
+            subarrays: 1,
+            mux_ratio: 1,
+            timing: TimingKnobs::default(),
+        }
+    }
+
+    /// Physical columns = word bits × mux ratio.
+    pub fn phys_cols(&self) -> usize {
+        self.word_bits * self.mux_ratio
+    }
+
+    /// Rows per subarray.
+    pub fn rows_per_subarray(&self) -> usize {
+        self.rows / (self.banks * self.subarrays)
+    }
+
+    /// Total bit cells.
+    pub fn total_cells(&self) -> usize {
+        self.rows * self.word_bits
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.rows == 0 || self.word_bits == 0 {
+            bail!("SRAM rows/word_bits must be nonzero");
+        }
+        if !self.rows.is_power_of_two() {
+            bail!("SRAM rows must be a power of two (decoder), got {}", self.rows);
+        }
+        if self.rows % (self.banks * self.subarrays) != 0 {
+            bail!(
+                "rows {} not divisible by banks*subarrays {}",
+                self.rows,
+                self.banks * self.subarrays
+            );
+        }
+        if !matches!(self.mux_ratio, 1 | 2 | 4 | 8) {
+            bail!("mux_ratio must be 1/2/4/8, got {}", self.mux_ratio);
+        }
+        Ok(())
+    }
+}
+
+/// Multiplier specification.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MultSpec {
+    pub family: MultFamily,
+    /// Operand width in bits.
+    pub bits: usize,
+    /// Signed (sign-magnitude wrapped) operation.
+    pub signed: bool,
+}
+
+impl MultSpec {
+    pub fn validate(&self) -> Result<()> {
+        if !(2..=32).contains(&self.bits) {
+            bail!("multiplier bits must be in 2..=32, got {}", self.bits);
+        }
+        if let MultFamily::Approx42 { approx_cols, .. } = &self.family {
+            if *approx_cols > 2 * self.bits {
+                bail!(
+                    "approx_cols {} exceeds product width {}",
+                    approx_cols,
+                    2 * self.bits
+                );
+            }
+        }
+        if self.signed && self.bits < 2 {
+            bail!("signed multiplier needs >= 2 bits");
+        }
+        Ok(())
+    }
+}
+
+/// Full DCiM macro specification: the compiler's top-level input.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MacroSpec {
+    pub name: String,
+    pub sram: SramSpec,
+    pub mult: MultSpec,
+    /// Target clock frequency, MHz (paper: 100 MHz).
+    pub clock_mhz: f64,
+    /// Output load, pF (paper: 0.5 pF).
+    pub load_pf: f64,
+}
+
+impl MacroSpec {
+    pub fn new(name: &str, rows: usize, word_bits: usize, family: MultFamily) -> Self {
+        Self {
+            name: name.to_string(),
+            sram: SramSpec::new(rows, word_bits),
+            mult: MultSpec {
+                family,
+                bits: word_bits,
+                signed: false,
+            },
+            clock_mhz: 100.0,
+            load_pf: 0.5,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.sram.validate()?;
+        self.mult.validate()?;
+        if self.clock_mhz <= 0.0 || self.load_pf < 0.0 {
+            bail!("bad clock/load");
+        }
+        Ok(())
+    }
+
+    /// The three Table II configurations for a given multiplier family.
+    pub fn table2_presets(family: MultFamily) -> Vec<MacroSpec> {
+        vec![
+            MacroSpec::new(
+                &format!("dcim16x8_{}", family.name()),
+                16,
+                8,
+                family.clone(),
+            ),
+            MacroSpec::new(
+                &format!("dcim32x16_{}", family.name()),
+                32,
+                16,
+                family.clone(),
+            ),
+            MacroSpec::new(&format!("dcim64x32_{}", family.name()), 64, 32, family),
+        ]
+    }
+
+    /// All four Table II multiplier families at the given width.
+    pub fn table2_families(bits: usize) -> Vec<MultFamily> {
+        vec![
+            MultFamily::AdderTree,
+            MultFamily::Exact,
+            MultFamily::LogOur,
+            MultFamily::table2_approx(bits),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_paper_configs() {
+        let ps = MacroSpec::table2_presets(MultFamily::Exact);
+        assert_eq!(ps.len(), 3);
+        assert_eq!((ps[0].sram.rows, ps[0].sram.word_bits), (16, 8));
+        assert_eq!((ps[1].sram.rows, ps[1].sram.word_bits), (32, 16));
+        assert_eq!((ps[2].sram.rows, ps[2].sram.word_bits), (64, 32));
+        for p in &ps {
+            p.validate().unwrap();
+            assert!((p.clock_mhz - 100.0).abs() < 1e-9);
+            assert!((p.load_pf - 0.5).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn validation_rejects_bad_specs() {
+        let mut s = SramSpec::new(17, 8);
+        assert!(s.validate().is_err()); // non power of two
+        s.rows = 16;
+        s.mux_ratio = 3;
+        assert!(s.validate().is_err());
+        let m = MultSpec {
+            family: MultFamily::Exact,
+            bits: 1,
+            signed: false,
+        };
+        assert!(m.validate().is_err());
+        let m2 = MultSpec {
+            family: MultFamily::Approx42 {
+                compressor: CompressorKind::Yang1,
+                approx_cols: 64,
+            },
+            bits: 8,
+            signed: false,
+        };
+        assert!(m2.validate().is_err());
+    }
+
+    #[test]
+    fn compressor_name_roundtrip() {
+        for k in CompressorKind::all_approx() {
+            assert_eq!(CompressorKind::parse(k.name()).unwrap(), *k);
+        }
+        assert!(CompressorKind::parse("nope").is_err());
+    }
+
+    #[test]
+    fn default_approx_covers_lower_half() {
+        // 8-bit multiplier → columns #0..#7 approximate (Fig 2 red box).
+        if let MultFamily::Approx42 { approx_cols, .. } = MultFamily::default_approx(8) {
+            assert_eq!(approx_cols, 8);
+        } else {
+            panic!("wrong family");
+        }
+    }
+
+    #[test]
+    fn sram_derived_quantities() {
+        let mut s = SramSpec::new(64, 32);
+        s.banks = 2;
+        s.subarrays = 2;
+        s.mux_ratio = 2;
+        assert_eq!(s.phys_cols(), 64);
+        assert_eq!(s.rows_per_subarray(), 16);
+        assert_eq!(s.total_cells(), 2048);
+        s.validate().unwrap();
+    }
+}

@@ -1,0 +1,297 @@
+//! TOML-subset parser for spec files (no `serde`/`toml` offline).
+//!
+//! Supported: `[section]` and `[section.sub]` headers, `key = value` with
+//! string / integer / float / boolean values, `#` comments. That is all the
+//! spec files need. Keys are flattened to `section.sub.key`.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::config::spec::{CompressorKind, MacroSpec, MultFamily, MultSpec, SramSpec, TimingKnobs};
+
+/// A parsed document: flat `section.key` → raw value.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    values: BTreeMap<String, TomlValue>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl TomlDoc {
+    pub fn parse(src: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut prefix = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(h) = line.strip_prefix('[') {
+                let h = h
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: unterminated section", lineno + 1))?;
+                let name = h.trim();
+                if name.is_empty() {
+                    bail!("line {}: empty section name", lineno + 1);
+                }
+                prefix = format!("{name}.");
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = format!("{prefix}{}", k.trim());
+            let value = parse_value(v.trim())
+                .with_context(|| format!("line {}: bad value for {key}", lineno + 1))?;
+            if doc.values.insert(key.clone(), value).is_some() {
+                bail!("line {}: duplicate key {key}", lineno + 1);
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn load(path: &Path) -> Result<TomlDoc> {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&src)
+    }
+
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        match self.values.get(key) {
+            Some(TomlValue::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn get_int(&self, key: &str) -> Option<i64> {
+        match self.values.get(key) {
+            Some(TomlValue::Int(i)) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn get_float(&self, key: &str) -> Option<f64> {
+        match self.values.get(key) {
+            Some(TomlValue::Float(f)) => Some(*f),
+            Some(TomlValue::Int(i)) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> Option<bool> {
+        match self.values.get(key) {
+            Some(TomlValue::Bool(b)) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Build a [`MacroSpec`] from a parsed document.
+    ///
+    /// Expected layout (all keys optional except dimensions):
+    /// ```toml
+    /// name = "dcim16x8"
+    /// [sram]
+    /// rows = 16
+    /// word_bits = 8
+    /// banks = 1
+    /// subarrays = 1
+    /// mux_ratio = 1
+    /// sae_delay_ps = 180.0
+    /// [mult]
+    /// family = "appro42"        # exact | appro42 | logour | mitchell | adder_tree
+    /// compressor = "yang1"
+    /// approx_cols = 8
+    /// bits = 8
+    /// signed = false
+    /// [target]
+    /// clock_mhz = 100.0
+    /// load_pf = 0.5
+    /// ```
+    pub fn to_macro_spec(&self) -> Result<MacroSpec> {
+        let rows = self
+            .get_int("sram.rows")
+            .context("missing sram.rows")? as usize;
+        let word_bits = self
+            .get_int("sram.word_bits")
+            .context("missing sram.word_bits")? as usize;
+        let mut sram = SramSpec::new(rows, word_bits);
+        if let Some(b) = self.get_int("sram.banks") {
+            sram.banks = b as usize;
+        }
+        if let Some(s) = self.get_int("sram.subarrays") {
+            sram.subarrays = s as usize;
+        }
+        if let Some(m) = self.get_int("sram.mux_ratio") {
+            sram.mux_ratio = m as usize;
+        }
+        let mut t = TimingKnobs::default();
+        if let Some(v) = self.get_float("sram.sae_delay_ps") {
+            t.sae_delay_ps = v;
+        }
+        if let Some(v) = self.get_float("sram.precharge_ps") {
+            t.precharge_ps = v;
+        }
+        if let Some(v) = self.get_float("sram.wl_pulse_ps") {
+            t.wl_pulse_ps = v;
+        }
+        sram.timing = t;
+
+        let bits = self
+            .get_int("mult.bits")
+            .map(|b| b as usize)
+            .unwrap_or(word_bits);
+        let family = match self.get_str("mult.family").unwrap_or("exact") {
+            "exact" => MultFamily::Exact,
+            "logour" | "log-our" => MultFamily::LogOur,
+            "mitchell" | "lm" => MultFamily::Mitchell,
+            "adder_tree" | "openc2" => MultFamily::AdderTree,
+            "appro42" | "approx42" => {
+                let comp = CompressorKind::parse(
+                    self.get_str("mult.compressor").unwrap_or("yang1"),
+                )?;
+                let cols = self
+                    .get_int("mult.approx_cols")
+                    .map(|c| c as usize)
+                    .unwrap_or(bits);
+                MultFamily::Approx42 {
+                    compressor: comp,
+                    approx_cols: cols,
+                }
+            }
+            other => bail!("unknown mult.family {other:?}"),
+        };
+        let spec = MacroSpec {
+            name: self
+                .get_str("name")
+                .unwrap_or(&format!("dcim{rows}x{word_bits}"))
+                .to_string(),
+            sram,
+            mult: MultSpec {
+                family,
+                bits,
+                signed: self.get_bool("mult.signed").unwrap_or(false),
+            },
+            clock_mhz: self.get_float("target.clock_mhz").unwrap_or(100.0),
+            load_pf: self.get_float("target.load_pf").unwrap_or(0.5),
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // No string-escape subtleties needed: comments only start outside quotes.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body
+            .strip_suffix('"')
+            .context("unterminated string value")?;
+        return Ok(TomlValue::Str(body.to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# a spec file
+name = "demo"
+
+[sram]
+rows = 32          # power of two
+word_bits = 16
+banks = 2
+mux_ratio = 2
+
+[mult]
+family = "appro42"
+compressor = "yang1"
+approx_cols = 16
+signed = false
+
+[target]
+clock_mhz = 100.0
+load_pf = 0.5
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let doc = TomlDoc::parse(SAMPLE).unwrap();
+        assert_eq!(doc.get_str("name"), Some("demo"));
+        assert_eq!(doc.get_int("sram.rows"), Some(32));
+        assert_eq!(doc.get_float("target.clock_mhz"), Some(100.0));
+        assert_eq!(doc.get_bool("mult.signed"), Some(false));
+    }
+
+    #[test]
+    fn builds_macro_spec() {
+        let doc = TomlDoc::parse(SAMPLE).unwrap();
+        let spec = doc.to_macro_spec().unwrap();
+        assert_eq!(spec.name, "demo");
+        assert_eq!(spec.sram.rows, 32);
+        assert_eq!(spec.sram.banks, 2);
+        assert_eq!(spec.mult.bits, 16);
+        match &spec.mult.family {
+            MultFamily::Approx42 {
+                compressor,
+                approx_cols,
+            } => {
+                assert_eq!(*compressor, CompressorKind::Yang1);
+                assert_eq!(*approx_cols, 16);
+            }
+            other => panic!("wrong family {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_duplicates_and_bad_lines() {
+        assert!(TomlDoc::parse("a = 1\na = 2").is_err());
+        assert!(TomlDoc::parse("[unterminated").is_err());
+        assert!(TomlDoc::parse("novalue").is_err());
+        assert!(TomlDoc::parse("x = @@@").is_err());
+    }
+
+    #[test]
+    fn comments_and_strings() {
+        let doc = TomlDoc::parse("s = \"a # not comment\" # real comment").unwrap();
+        assert_eq!(doc.get_str("s"), Some("a # not comment"));
+    }
+
+    #[test]
+    fn missing_required_keys() {
+        let doc = TomlDoc::parse("name = \"x\"").unwrap();
+        assert!(doc.to_macro_spec().is_err());
+    }
+}

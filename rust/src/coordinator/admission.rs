@@ -1,0 +1,151 @@
+//! Admission control: bounded per-variant queues with load shedding.
+//!
+//! The batcher channels are unbounded; without admission control a burst
+//! can grow queue latency without bound (visible in the e2e example's
+//! burst p50). The [`AdmissionController`] tracks in-flight requests per
+//! variant and sheds load beyond a depth limit — the standard router-side
+//! backpressure of serving systems (vLLM router-style).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Decision for one request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    Admitted,
+    /// Queue depth limit reached — caller should retry later or divert.
+    Shed { depth: usize, limit: usize },
+}
+
+/// Shared admission state. `Ticket`s decrement the depth on drop, so a
+/// completed (or abandoned) request always releases its slot.
+#[derive(Debug)]
+pub struct AdmissionController {
+    limit: usize,
+    depths: BTreeMap<String, Arc<AtomicUsize>>,
+    shed_count: AtomicUsize,
+}
+
+/// RAII slot held while a request is in flight.
+#[derive(Debug)]
+pub struct Ticket {
+    depth: Arc<AtomicUsize>,
+}
+
+impl Drop for Ticket {
+    fn drop(&mut self) {
+        self.depth.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+impl AdmissionController {
+    pub fn new(limit: usize, variants: impl IntoIterator<Item = String>) -> Self {
+        Self {
+            limit: limit.max(1),
+            depths: variants
+                .into_iter()
+                .map(|v| (v, Arc::new(AtomicUsize::new(0))))
+                .collect(),
+            shed_count: AtomicUsize::new(0),
+        }
+    }
+
+    /// Try to admit one request for a variant.
+    pub fn admit(&self, variant: &str) -> Option<Result<Ticket, Admission>> {
+        let depth = self.depths.get(variant)?;
+        // Optimistic increment with rollback keeps this lock-free.
+        let prev = depth.fetch_add(1, Ordering::AcqRel);
+        if prev >= self.limit {
+            depth.fetch_sub(1, Ordering::AcqRel);
+            self.shed_count.fetch_add(1, Ordering::Relaxed);
+            return Some(Err(Admission::Shed {
+                depth: prev,
+                limit: self.limit,
+            }));
+        }
+        Some(Ok(Ticket {
+            depth: Arc::clone(depth),
+        }))
+    }
+
+    pub fn depth(&self, variant: &str) -> usize {
+        self.depths
+            .get(variant)
+            .map(|d| d.load(Ordering::Acquire))
+            .unwrap_or(0)
+    }
+
+    pub fn shed_total(&self) -> usize {
+        self.shed_count.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctl(limit: usize) -> AdmissionController {
+        AdmissionController::new(limit, ["a".to_string(), "b".to_string()])
+    }
+
+    #[test]
+    fn admits_until_limit_then_sheds() {
+        let c = ctl(2);
+        let t1 = c.admit("a").unwrap().unwrap();
+        let t2 = c.admit("a").unwrap().unwrap();
+        match c.admit("a").unwrap() {
+            Err(Admission::Shed { depth: 2, limit: 2 }) => {}
+            other => panic!("expected shed, got {other:?}"),
+        }
+        assert_eq!(c.shed_total(), 1);
+        // Other variants are independent.
+        let _t3 = c.admit("b").unwrap().unwrap();
+        drop(t1);
+        drop(t2);
+        assert_eq!(c.depth("a"), 0);
+        assert!(c.admit("a").unwrap().is_ok());
+    }
+
+    #[test]
+    fn unknown_variant_is_none() {
+        let c = ctl(1);
+        assert!(c.admit("nope").is_none());
+    }
+
+    #[test]
+    fn tickets_release_on_drop_even_in_panic_paths() {
+        let c = ctl(1);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _t = c.admit("a").unwrap().unwrap();
+            panic!("boom");
+        }));
+        assert!(r.is_err());
+        assert_eq!(c.depth("a"), 0, "ticket must release through unwinding");
+    }
+
+    #[test]
+    fn concurrent_admission_never_exceeds_limit() {
+        let c = Arc::new(ctl(8));
+        let max_seen = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let c = Arc::clone(&c);
+            let max_seen = Arc::clone(&max_seen);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..2000 {
+                    if let Some(Ok(_t)) = c.admit("a") {
+                        let d = c.depth("a");
+                        max_seen.fetch_max(d, Ordering::Relaxed);
+                        // ticket drops immediately
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(max_seen.load(Ordering::Relaxed) <= 8);
+        assert_eq!(c.depth("a"), 0);
+    }
+}

@@ -1,0 +1,146 @@
+//! Dynamic batcher: drain-until-full-or-timeout batching policy.
+//!
+//! Generic over the payload so it is testable without PJRT: the policy
+//! invariants (no request lost, none duplicated, batch size bounded,
+//! FIFO order preserved within a variant) are property-tested here.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batching policy parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self {
+            max_batch: 32,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Drain the next batch from a receiver. Blocks until at least one item is
+/// available (or the channel closes — returns None). After the first item,
+/// keeps collecting until `max_batch` or `max_wait` since the first item.
+pub fn next_batch<T>(rx: &Receiver<T>, policy: &BatchPolicy) -> Option<Vec<T>> {
+    let first = rx.recv().ok()?;
+    let deadline = Instant::now() + policy.max_wait;
+    let mut batch = vec![first];
+    while batch.len() < policy.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(item) => batch.push(item),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+    use std::thread;
+
+    #[test]
+    fn collects_full_batch_when_queue_is_hot() {
+        let (tx, rx) = channel();
+        for i in 0..100 {
+            tx.send(i).unwrap();
+        }
+        let p = BatchPolicy {
+            max_batch: 32,
+            max_wait: Duration::from_millis(50),
+        };
+        let b1 = next_batch(&rx, &p).unwrap();
+        assert_eq!(b1.len(), 32);
+        assert_eq!(b1[0], 0);
+        let b2 = next_batch(&rx, &p).unwrap();
+        assert_eq!(b2[0], 32, "FIFO order across batches");
+    }
+
+    #[test]
+    fn partial_batch_on_timeout() {
+        let (tx, rx) = channel();
+        tx.send(1u32).unwrap();
+        tx.send(2).unwrap();
+        let p = BatchPolicy {
+            max_batch: 32,
+            max_wait: Duration::from_millis(5),
+        };
+        let b = next_batch(&rx, &p).unwrap();
+        assert_eq!(b, vec![1, 2]);
+    }
+
+    #[test]
+    fn returns_none_when_closed() {
+        let (tx, rx) = channel::<u32>();
+        drop(tx);
+        assert!(next_batch(&rx, &BatchPolicy::default()).is_none());
+    }
+
+    #[test]
+    fn no_request_lost_or_duplicated_under_concurrency() {
+        let (tx, rx) = channel();
+        let n = 5000u64;
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let tx = tx.clone();
+                thread::spawn(move || {
+                    for i in 0..n / 4 {
+                        tx.send(p * 1_000_000 + i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        drop(tx);
+        let policy = BatchPolicy {
+            max_batch: 64,
+            max_wait: Duration::from_micros(200),
+        };
+        let mut seen = std::collections::BTreeSet::new();
+        let mut total = 0u64;
+        while let Some(batch) = next_batch(&rx, &policy) {
+            assert!(batch.len() <= 64);
+            for item in batch {
+                assert!(seen.insert(item), "duplicate {item}");
+                total += 1;
+            }
+        }
+        for p in producers {
+            p.join().unwrap();
+        }
+        assert_eq!(total, n);
+    }
+
+    #[test]
+    fn fifo_within_single_producer() {
+        let (tx, rx) = channel();
+        for i in 0..500u32 {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let policy = BatchPolicy {
+            max_batch: 7,
+            max_wait: Duration::from_micros(100),
+        };
+        let mut last = None;
+        while let Some(batch) = next_batch(&rx, &policy) {
+            for item in batch {
+                if let Some(prev) = last {
+                    assert!(item > prev, "order violated: {item} after {prev}");
+                }
+                last = Some(item);
+            }
+        }
+        assert_eq!(last, Some(499));
+    }
+}

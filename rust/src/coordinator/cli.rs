@@ -1,0 +1,52 @@
+//! `openacm serve` — start the coordinator on the AOT artifacts and drive
+//! it with a synthetic request stream (the standalone serving demo; the
+//! richer end-to-end driver is examples/e2e_serving.rs).
+
+use anyhow::Result;
+use std::path::Path;
+use std::time::Duration;
+
+use super::batcher::BatchPolicy;
+use super::server::InferenceServer;
+use crate::runtime::ArtifactStore;
+use crate::util::cli::Args;
+
+pub fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = args
+        .get("artifacts")
+        .map(Path::new)
+        .map(Path::to_path_buf)
+        .unwrap_or_else(ArtifactStore::default_dir);
+    let store = ArtifactStore::load(&dir)?;
+    let n_requests = args.usize_or("requests", 256)?;
+    let policy = BatchPolicy {
+        max_batch: args.usize_or("batch", 32)?,
+        max_wait: Duration::from_millis(args.u64_or("max-wait-ms", 2)?),
+    };
+    println!(
+        "starting coordinator: {} variants, batch {} (graph batch {})",
+        store.luts.len(),
+        policy.max_batch,
+        store.batch
+    );
+    let server = InferenceServer::start(&store, policy)?;
+    let variants = server.variants();
+
+    // Drive: round-robin requests across variants from the test set.
+    let mut correct = 0usize;
+    for i in 0..n_requests {
+        let idx = i % store.n_images;
+        let variant = &variants[i % variants.len()];
+        let resp = server.infer(store.image(idx).to_vec(), variant)?;
+        if resp.predicted == store.labels[idx] {
+            correct += 1;
+        }
+    }
+    let snap = server.metrics.snapshot();
+    println!(
+        "completed {} requests ({} correct): p50 {:.2} ms p90 {:.2} ms p99 {:.2} ms, {:.0} req/s, mean batch {:.1}",
+        snap.completed, correct, snap.p50_ms, snap.p90_ms, snap.p99_ms, snap.throughput_rps, snap.mean_batch
+    );
+    server.shutdown();
+    Ok(())
+}

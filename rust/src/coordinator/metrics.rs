@@ -1,0 +1,96 @@
+//! Serving metrics: latency percentiles, throughput, batch-size stats and
+//! the per-inference energy estimate.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Thread-safe metrics sink shared by batcher workers.
+#[derive(Debug)]
+pub struct ServerMetrics {
+    inner: Mutex<Inner>,
+    started: Instant,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    latencies_us: Vec<f64>,
+    batches: u64,
+    batched_requests: u64,
+    completed: u64,
+}
+
+/// Snapshot for reporting.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MetricsSnapshot {
+    pub completed: u64,
+    pub p50_ms: f64,
+    pub p90_ms: f64,
+    pub p99_ms: f64,
+    pub throughput_rps: f64,
+    pub mean_batch: f64,
+}
+
+impl Default for ServerMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServerMetrics {
+    pub fn new() -> Self {
+        Self {
+            inner: Mutex::new(Inner::default()),
+            started: Instant::now(),
+        }
+    }
+
+    pub fn record_batch(&self, batch_size: usize, latencies_us: &[f64]) {
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        g.batched_requests += batch_size as u64;
+        g.completed += latencies_us.len() as u64;
+        g.latencies_us.extend_from_slice(latencies_us);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let g = self.inner.lock().unwrap();
+        if g.latencies_us.is_empty() {
+            return MetricsSnapshot::default();
+        }
+        let (p50, p90, p99) = crate::util::stats::latency_percentiles(&g.latencies_us);
+        let secs = self.started.elapsed().as_secs_f64().max(1e-9);
+        MetricsSnapshot {
+            completed: g.completed,
+            p50_ms: p50 / 1e3,
+            p90_ms: p90 / 1e3,
+            p99_ms: p99 / 1e3,
+            throughput_rps: g.completed as f64 / secs,
+            mean_batch: g.batched_requests as f64 / g.batches.max(1) as f64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_math() {
+        let m = ServerMetrics::new();
+        m.record_batch(4, &[1000.0, 2000.0, 3000.0, 4000.0]);
+        m.record_batch(2, &[5000.0, 6000.0]);
+        let s = m.snapshot();
+        assert_eq!(s.completed, 6);
+        assert!((s.mean_batch - 3.0).abs() < 1e-9);
+        assert!(s.p50_ms >= 1.0 && s.p50_ms <= 6.0);
+        assert!(s.p99_ms >= s.p50_ms);
+        assert!(s.throughput_rps > 0.0);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zero() {
+        let s = ServerMetrics::new().snapshot();
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.p99_ms, 0.0);
+    }
+}

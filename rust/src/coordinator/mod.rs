@@ -1,0 +1,28 @@
+//! Inference coordinator (Layer 3 serving path): a threaded request
+//! router + dynamic batcher executing the AOT-compiled quantized-CNN graph
+//! through PJRT. Python is never on this path.
+//!
+//! Design (vllm-router-like, scaled to this workload):
+//!
+//! * clients submit single-image classification requests tagged with a
+//!   multiplier *variant* (exact / appro42 / logour / lm);
+//! * the router keeps one dynamic batcher per variant; a batcher drains its
+//!   queue until `batch` requests or `max_wait` elapses, pads the batch to
+//!   the graph's static shape, executes, and completes each request with
+//!   its logits;
+//! * all multiplier variants share ONE compiled executable — the LUT is a
+//!   runtime operand, so switching precision is free (no recompilation);
+//! * metrics: per-request latency (enqueue→response) percentiles and
+//!   aggregate throughput, plus the per-inference energy estimate from the
+//!   PPA engine (the paper's accuracy-energy headline, measured end to
+//!   end in examples/e2e_serving.rs).
+
+pub mod admission;
+pub mod batcher;
+pub mod server;
+pub mod metrics;
+pub mod cli;
+
+pub use admission::{Admission, AdmissionController};
+pub use metrics::ServerMetrics;
+pub use server::{InferenceServer, Request, Response};

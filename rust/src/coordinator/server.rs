@@ -1,0 +1,240 @@
+//! The inference server: router + per-variant batcher workers over the
+//! PJRT executable.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::admission::{Admission, AdmissionController, Ticket};
+use super::batcher::{next_batch, BatchPolicy};
+use super::metrics::ServerMetrics;
+use crate::runtime::{client, ArtifactStore, Runtime};
+
+/// A classification request: one 16×16 grayscale image + target variant.
+pub struct Request {
+    pub image: Vec<u8>,
+    pub variant: String,
+    pub respond: Sender<Response>,
+}
+
+/// The response: 10 logits plus the predicted class.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub logits: Vec<f32>,
+    pub predicted: usize,
+}
+
+struct QueuedRequest {
+    image: Vec<u8>,
+    respond: Sender<Response>,
+    enqueued: Instant,
+    /// Admission slot, released when the response is delivered (drop).
+    _ticket: Ticket,
+}
+
+/// Handle to a running server.
+pub struct InferenceServer {
+    routes: BTreeMap<String, Sender<QueuedRequest>>,
+    workers: Vec<JoinHandle<()>>,
+    pub metrics: Arc<ServerMetrics>,
+    pub admission: Arc<AdmissionController>,
+    pub batch: usize,
+}
+
+impl InferenceServer {
+    /// Start: compile the model once per variant worker (each worker owns
+    /// its executable — PJRT executables are not shared across threads)
+    /// and spawn one batcher thread per LUT variant.
+    pub fn start(store: &ArtifactStore, policy: BatchPolicy) -> Result<InferenceServer> {
+        Self::start_with_queue_limit(store, policy, 4096)
+    }
+
+    /// Start with an explicit per-variant queue-depth limit (admission
+    /// control / backpressure): submissions beyond the limit are shed with
+    /// an error instead of growing queue latency without bound.
+    pub fn start_with_queue_limit(
+        store: &ArtifactStore,
+        policy: BatchPolicy,
+        queue_limit: usize,
+    ) -> Result<InferenceServer> {
+        let metrics = Arc::new(ServerMetrics::new());
+        let admission = Arc::new(AdmissionController::new(
+            queue_limit,
+            store.luts.keys().cloned(),
+        ));
+        let mut routes = BTreeMap::new();
+        let mut workers = Vec::new();
+        let b = store.batch;
+        for (variant, lut) in &store.luts {
+            let (tx, rx): (Sender<QueuedRequest>, Receiver<QueuedRequest>) = channel();
+            routes.insert(variant.clone(), tx);
+            let lut = lut.clone();
+            let hlo = store.model_hlo.clone();
+            let weights = store.weights.clone();
+            let metrics = Arc::clone(&metrics);
+            let policy = BatchPolicy {
+                max_batch: policy.max_batch.min(b),
+                ..policy
+            };
+            let handle = std::thread::Builder::new()
+                .name(format!("batcher-{variant}"))
+                .spawn(move || {
+                    // Each worker compiles its own executable.
+                    let rt = match Runtime::cpu() {
+                        Ok(r) => r,
+                        Err(e) => {
+                            eprintln!("worker init failed: {e:#}");
+                            return;
+                        }
+                    };
+                    let model = match rt.compile_hlo_text(&hlo) {
+                        Ok(m) => m,
+                        Err(e) => {
+                            eprintln!("compile failed: {e:#}");
+                            return;
+                        }
+                    };
+                    let lut_lit = match client::literal_i32(&[65536], &lut) {
+                        Ok(l) => l,
+                        Err(e) => {
+                            eprintln!("lut literal failed: {e:#}");
+                            return;
+                        }
+                    };
+                    let weight_lits = match client::weight_literals(&weights) {
+                        Ok(w) => w,
+                        Err(e) => {
+                            eprintln!("weight literals failed: {e:#}");
+                            return;
+                        }
+                    };
+                    while let Some(batch) = next_batch(&rx, &policy) {
+                        let n = batch.len();
+                        // Pad to the static batch size.
+                        let mut px = vec![0i32; b * 256];
+                        for (j, q) in batch.iter().enumerate() {
+                            for (k, &p) in q.image.iter().enumerate() {
+                                px[j * 256 + k] = p as i32;
+                            }
+                        }
+                        let img = match client::literal_i32(&[b, 16, 16], &px) {
+                            Ok(l) => l,
+                            Err(e) => {
+                                eprintln!("image literal failed: {e:#}");
+                                continue;
+                            }
+                        };
+                        let mut args = vec![img, lut_lit.clone()];
+                        args.extend(weight_lits.iter().cloned());
+                        let out = match model.run_f32(&args, b * 10) {
+                            Ok(o) => o,
+                            Err(e) => {
+                                eprintln!("execute failed: {e:#}");
+                                continue;
+                            }
+                        };
+                        // Record metrics BEFORE completing the requests so a
+                        // caller that snapshots right after the last response
+                        // sees every batch counted.
+                        let lats: Vec<f64> = batch
+                            .iter()
+                            .map(|q| q.enqueued.elapsed().as_micros() as f64)
+                            .collect();
+                        metrics.record_batch(n, &lats);
+                        for (j, q) in batch.into_iter().enumerate() {
+                            let logits = out[j * 10..(j + 1) * 10].to_vec();
+                            let predicted = argmax(&logits);
+                            // Receiver may have gone away; ignore.
+                            let _ = q.respond.send(Response { logits, predicted });
+                        }
+                    }
+                })
+                .context("spawning batcher thread")?;
+            workers.push(handle);
+        }
+        Ok(InferenceServer {
+            routes,
+            workers,
+            metrics,
+            admission,
+            batch: b,
+        })
+    }
+
+    /// Route one request. Errors on unknown variants and on shed load
+    /// (queue depth above the admission limit).
+    pub fn submit(&self, req: Request) -> Result<()> {
+        let route = match self.routes.get(&req.variant) {
+            Some(r) => r,
+            None => bail!(
+                "unknown variant {:?}; have {:?}",
+                req.variant,
+                self.routes.keys().collect::<Vec<_>>()
+            ),
+        };
+        let ticket = match self.admission.admit(&req.variant) {
+            Some(Ok(t)) => t,
+            Some(Err(Admission::Shed { depth, limit })) => {
+                bail!("shed: variant {:?} queue depth {depth} >= limit {limit}", req.variant)
+            }
+            Some(Err(Admission::Admitted)) | None => {
+                bail!("admission state missing for {:?}", req.variant)
+            }
+        };
+        route
+            .send(QueuedRequest {
+                image: req.image,
+                respond: req.respond,
+                enqueued: Instant::now(),
+                _ticket: ticket,
+            })
+            .map_err(|_| anyhow::anyhow!("variant worker has shut down"))?;
+        Ok(())
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn infer(&self, image: Vec<u8>, variant: &str) -> Result<Response> {
+        let (tx, rx) = channel();
+        self.submit(Request {
+            image,
+            variant: variant.to_string(),
+            respond: tx,
+        })?;
+        rx.recv().context("worker dropped the response")
+    }
+
+    pub fn variants(&self) -> Vec<String> {
+        self.routes.keys().cloned().collect()
+    }
+
+    /// Shut down: close all routes and join workers.
+    pub fn shutdown(mut self) {
+        self.routes.clear();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+        assert_eq!(argmax(&[3.0]), 0);
+    }
+    // Full server tests live in rust/tests/serving.rs (they need artifacts).
+}

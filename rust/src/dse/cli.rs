@@ -1,0 +1,50 @@
+//! `openacm dse` — accuracy-energy design-space exploration.
+
+use anyhow::Result;
+
+use super::pareto::{pareto_front, select_under_constraint};
+use super::sweep::sweep_configs;
+use crate::bench::harness::{sci, Table};
+use crate::util::cli::Args;
+use crate::util::threadpool::ThreadPool;
+
+pub fn cmd_dse(args: &Args) -> Result<()> {
+    let rows = args.usize_or("rows", 16)?;
+    let bits = args.usize_or("word-bits", 8)?;
+    let n_ops = args.usize_or("ops", 1500)?;
+    let threads = args.usize_or("threads", ThreadPool::default_parallelism())?;
+    let budget = args.f64_or("nmed-budget", 1e-3)?;
+
+    eprintln!("sweeping {} candidates at {rows}x{bits}...", super::sweep::candidates(bits).len());
+    let points = sweep_configs(rows, bits, n_ops, threads);
+    let front = pareto_front(&points);
+
+    let mut t = Table::new(
+        "DSE: accuracy-energy Pareto frontier",
+        &["Design", "NMED", "Energy/op (J)", "vs exact", "Logic (um2)"],
+    );
+    for p in &front {
+        t.row(&[
+            p.label.clone(),
+            if p.nmed == 0.0 {
+                "exact".into()
+            } else {
+                sci(p.nmed)
+            },
+            sci(p.energy_per_op_j),
+            format!("{:.0}%", p.energy_ratio * 100.0),
+            format!("{:.0}", p.logic_area_um2),
+        ]);
+    }
+    t.print();
+
+    match select_under_constraint(&points, budget) {
+        Some(best) => println!(
+            "\nselected under NMED <= {budget:.1e}: {} ({:.0}% of exact energy)",
+            best.label,
+            best.energy_ratio * 100.0
+        ),
+        None => println!("\nno design meets NMED <= {budget:.1e}"),
+    }
+    Ok(())
+}

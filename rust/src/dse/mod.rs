@@ -1,0 +1,12 @@
+//! Design-space exploration engine (paper §VI's stated future work,
+//! implemented here as a first-class feature): jointly sweep multiplier
+//! family × compressor type × approximate-column budget, score each point
+//! by (accuracy, energy, area), and extract the Pareto frontier under an
+//! application accuracy constraint.
+
+pub mod sweep;
+pub mod pareto;
+pub mod cli;
+
+pub use pareto::pareto_front;
+pub use sweep::{sweep_configs, DsePoint};

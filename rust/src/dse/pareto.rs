@@ -1,0 +1,90 @@
+//! Pareto-frontier extraction over (accuracy loss, energy) and constrained
+//! selection ("best energy under an NMED budget" — the compiler's
+//! accuracy-constrained selection knob, paper §III-A).
+
+use super::sweep::DsePoint;
+
+/// Points not dominated in (nmed, energy): a point dominates another if it
+/// is no worse in both and strictly better in one. Returned sorted by nmed.
+pub fn pareto_front(points: &[DsePoint]) -> Vec<DsePoint> {
+    let mut front: Vec<DsePoint> = Vec::new();
+    for p in points {
+        let dominated = points.iter().any(|q| {
+            (q.nmed < p.nmed && q.energy_per_op_j <= p.energy_per_op_j)
+                || (q.nmed <= p.nmed && q.energy_per_op_j < p.energy_per_op_j)
+        });
+        if !dominated {
+            front.push(p.clone());
+        }
+    }
+    front.sort_by(|a, b| a.nmed.partial_cmp(&b.nmed).unwrap());
+    front.dedup_by(|a, b| a.label == b.label);
+    front
+}
+
+/// Best (lowest-energy) design meeting an accuracy constraint.
+pub fn select_under_constraint(points: &[DsePoint], nmed_budget: f64) -> Option<DsePoint> {
+    points
+        .iter()
+        .filter(|p| p.nmed <= nmed_budget)
+        .min_by(|a, b| a.energy_per_op_j.partial_cmp(&b.energy_per_op_j).unwrap())
+        .cloned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::spec::MultFamily;
+
+    fn pt(label: &str, nmed: f64, e: f64) -> DsePoint {
+        DsePoint {
+            label: label.into(),
+            family: MultFamily::Exact,
+            nmed,
+            energy_per_op_j: e,
+            logic_area_um2: 0.0,
+            energy_ratio: 1.0,
+        }
+    }
+
+    #[test]
+    fn frontier_removes_dominated() {
+        let pts = vec![
+            pt("exact", 0.0, 10.0),
+            pt("a", 0.01, 8.0),
+            pt("dominated", 0.02, 9.0), // worse than "a" in both
+            pt("b", 0.05, 4.0),
+        ];
+        let f = pareto_front(&pts);
+        let labels: Vec<&str> = f.iter().map(|p| p.label.as_str()).collect();
+        assert_eq!(labels, vec!["exact", "a", "b"]);
+    }
+
+    #[test]
+    fn frontier_is_monotone() {
+        let pts = vec![
+            pt("x", 0.0, 10.0),
+            pt("y", 0.01, 7.0),
+            pt("z", 0.03, 3.0),
+        ];
+        let f = pareto_front(&pts);
+        for w in f.windows(2) {
+            assert!(w[0].nmed <= w[1].nmed);
+            assert!(w[0].energy_per_op_j >= w[1].energy_per_op_j);
+        }
+    }
+
+    #[test]
+    fn constrained_selection() {
+        let pts = vec![
+            pt("exact", 0.0, 10.0),
+            pt("mild", 0.001, 8.0),
+            pt("aggressive", 0.1, 2.0),
+        ];
+        let sel = select_under_constraint(&pts, 0.01).unwrap();
+        assert_eq!(sel.label, "mild");
+        let sel2 = select_under_constraint(&pts, 1.0).unwrap();
+        assert_eq!(sel2.label, "aggressive");
+        assert!(select_under_constraint(&pts[1..], 0.0001).is_none());
+    }
+}

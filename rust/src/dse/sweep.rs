@@ -1,0 +1,130 @@
+//! Configuration sweep: enumerate multiplier configurations and score
+//! accuracy (NMED, exhaustive at 8 bits) against energy/area from the PPA
+//! engine — one point per candidate design.
+
+use crate::config::spec::{CompressorKind, MacroSpec, MultFamily};
+use crate::mult::error_metrics;
+use crate::ppa::report::analyze_macro;
+use crate::util::threadpool::parallel_map;
+
+/// One evaluated design point.
+#[derive(Clone, Debug)]
+pub struct DsePoint {
+    pub label: String,
+    pub family: MultFamily,
+    /// Accuracy loss proxy: NMED of the multiplier (0 = exact).
+    pub nmed: f64,
+    /// Energy per multiply, J.
+    pub energy_per_op_j: f64,
+    /// Logic area, µm².
+    pub logic_area_um2: f64,
+    /// Relative energy vs the exact design (1.0 = exact).
+    pub energy_ratio: f64,
+}
+
+/// The candidate set for one bit width: exact + adder-tree + both log
+/// families + every (compressor, column-budget) combination.
+pub fn candidates(bits: usize) -> Vec<MultFamily> {
+    let mut out = vec![
+        MultFamily::Exact,
+        MultFamily::AdderTree,
+        MultFamily::LogOur,
+        MultFamily::Mitchell,
+    ];
+    // Column budgets: quarter, half, three-quarter, full product width.
+    let budgets = [bits / 2, bits, 3 * bits / 2, 2 * bits];
+    for &k in CompressorKind::all_approx() {
+        for &cols in &budgets {
+            if cols == 0 {
+                continue;
+            }
+            out.push(MultFamily::Approx42 {
+                compressor: k,
+                approx_cols: cols,
+            });
+        }
+    }
+    out
+}
+
+/// Evaluate every candidate at the given macro geometry. Parallel over
+/// candidates; deterministic (seeded workload shared across candidates).
+pub fn sweep_configs(rows: usize, bits: usize, n_ops: usize, threads: usize) -> Vec<DsePoint> {
+    let cands = candidates(bits);
+    let points: Vec<DsePoint> = parallel_map(cands.len(), threads, |i| {
+        let family = cands[i].clone();
+        let spec = MacroSpec::new(
+            &format!("dse_{}", family.name()),
+            rows,
+            bits,
+            family.clone(),
+        );
+        let ppa = analyze_macro(&spec, n_ops, 0xD5E);
+        let nmed = match &family {
+            MultFamily::Exact | MultFamily::AdderTree => 0.0,
+            f => {
+                if bits <= 10 {
+                    error_metrics::exhaustive(f, bits).nmed
+                } else {
+                    error_metrics::sampled(f, bits, 20_000, 0xD5E).nmed
+                }
+            }
+        };
+        DsePoint {
+            label: family.name(),
+            family,
+            nmed,
+            energy_per_op_j: ppa.energy_per_op_j,
+            logic_area_um2: ppa.logic_area_um2,
+            energy_ratio: 0.0, // filled below
+        }
+    });
+    let exact_energy = points
+        .iter()
+        .find(|p| matches!(p.family, MultFamily::Exact))
+        .map(|p| p.energy_per_op_j)
+        .unwrap_or(1.0);
+    points
+        .into_iter()
+        .map(|mut p| {
+            p.energy_ratio = p.energy_per_op_j / exact_energy;
+            p
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn candidate_set_covers_all_families() {
+        let c = candidates(8);
+        assert!(c.iter().any(|f| matches!(f, MultFamily::Exact)));
+        assert!(c.iter().any(|f| matches!(f, MultFamily::LogOur)));
+        let approx_count = c
+            .iter()
+            .filter(|f| matches!(f, MultFamily::Approx42 { .. }))
+            .count();
+        assert_eq!(approx_count, 6 * 4);
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+    fn sweep_small_produces_scored_points() {
+        // Tiny sweep (few ops) to stay fast in tests.
+        let pts = sweep_configs(16, 8, 300, 2);
+        assert!(pts.len() > 10);
+        let exact = pts
+            .iter()
+            .find(|p| matches!(p.family, MultFamily::Exact))
+            .unwrap();
+        assert_eq!(exact.nmed, 0.0);
+        assert!((exact.energy_ratio - 1.0).abs() < 1e-9);
+        // Some approximate design must save energy.
+        assert!(
+            pts.iter().any(|p| p.energy_ratio < 0.95 && p.nmed > 0.0),
+            "no energy-saving approximate point found"
+        );
+    }
+}

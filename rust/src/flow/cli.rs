@@ -1,0 +1,68 @@
+//! `openacm generate` — run the compiler end to end for one macro spec.
+
+use anyhow::Result;
+use std::path::Path;
+
+use super::emit::generate_all;
+use crate::config::spec::MacroSpec;
+use crate::config::toml::TomlDoc;
+use crate::ppa::cli::parse_family;
+use crate::util::cli::Args;
+
+pub fn cmd_generate(args: &Args) -> Result<()> {
+    let spec: MacroSpec = match args.get("spec") {
+        Some(path) => TomlDoc::load(Path::new(path))?.to_macro_spec()?,
+        None => {
+            let rows = args.usize_or("rows", 16)?;
+            let bits = args.usize_or("word-bits", 8)?;
+            let fam = parse_family(
+                args.str_or("mult", "appro42"),
+                bits,
+                args.str_or("compressor", "yang1"),
+                args.usize_or("approx-cols", bits)?,
+            )?;
+            MacroSpec::new(&format!("dcim{rows}x{bits}"), rows, bits, fam)
+        }
+    };
+    let out = args.str_or("out", "build/flow");
+    let art = generate_all(&spec, Path::new(out))?;
+    println!(
+        "generated {} artifacts in {}:",
+        art.files.len(),
+        art.dir.display()
+    );
+    for f in &art.files {
+        println!("  {}", f.file_name().unwrap().to_string_lossy());
+    }
+    println!("\n{}", art.ppa_summary);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+    fn generate_via_cli_args() {
+        let tmp = std::env::temp_dir().join(format!("openacm_gencli_{}", std::process::id()));
+        let args = Args::parse(
+            vec![
+                "generate".to_string(),
+                "--rows".into(),
+                "16".into(),
+                "--word-bits".into(),
+                "8".into(),
+                "--mult".into(),
+                "logour".into(),
+                format!("--out={}", tmp.display()),
+            ],
+            true,
+            &[],
+        )
+        .unwrap();
+        cmd_generate(&args).unwrap();
+        assert!(tmp.join("mult_logour_8b.v").exists());
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+}

@@ -1,0 +1,124 @@
+//! Top-level artifact emission: run the whole compiler for one macro spec
+//! and write the full artifact bundle to a directory.
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+use super::{scripts, verilog};
+use crate::config::spec::MacroSpec;
+use crate::ppa::report::analyze_macro;
+use crate::sram::fakeram;
+
+/// The artifact bundle produced for one macro.
+#[derive(Clone, Debug)]
+pub struct FlowArtifacts {
+    pub dir: PathBuf,
+    pub files: Vec<PathBuf>,
+    /// Quick PPA summary computed alongside generation.
+    pub ppa_summary: String,
+}
+
+/// Generate everything for one spec into `out_dir`:
+/// Verilog (multiplier netlist + PE top + SRAM behavioral), LEF, LIB,
+/// SDC, OpenROAD TCL set, flow Makefile, and a PPA report.
+pub fn generate_all(spec: &MacroSpec, out_dir: &Path) -> Result<FlowArtifacts> {
+    spec.validate()?;
+    std::fs::create_dir_all(out_dir)
+        .with_context(|| format!("creating {}", out_dir.display()))?;
+    std::fs::create_dir_all(out_dir.join("results")).ok();
+    std::fs::create_dir_all(out_dir.join("logs")).ok();
+    let mut files = Vec::new();
+    let mut emit = |name: String, content: String| -> Result<()> {
+        let p = out_dir.join(&name);
+        std::fs::write(&p, content).with_context(|| format!("writing {}", p.display()))?;
+        files.push(p);
+        Ok(())
+    };
+
+    // RTL
+    let mult_nl = crate::mult::build_netlist(&spec.mult);
+    let mult_module = mult_nl.name.clone();
+    emit(
+        format!("{mult_module}.v"),
+        verilog::netlist_to_verilog(&mult_nl),
+    )?;
+    emit(
+        format!("{}_pe_top.v", spec.name),
+        verilog::pe_top_verilog(spec, &mult_module),
+    )?;
+    let sram_name = fakeram::macro_name(&spec.sram);
+    emit(format!("{sram_name}.v"), fakeram::verilog(&spec.sram))?;
+    // Abstract views
+    emit(format!("{sram_name}.lef"), fakeram::lef(&spec.sram))?;
+    emit(
+        format!("{sram_name}.lib"),
+        fakeram::lib(&spec.sram, spec.clock_mhz),
+    )?;
+    // Constraints + flow scripts
+    emit(format!("{}.sdc", spec.name), scripts::sdc(spec))?;
+    emit("synth.tcl".into(), scripts::synth_tcl(spec, &mult_module))?;
+    emit("floorplan.tcl".into(), scripts::floorplan_tcl(spec))?;
+    emit("place.tcl".into(), scripts::place_tcl(spec))?;
+    emit("cts.tcl".into(), scripts::cts_tcl(spec))?;
+    emit("route.tcl".into(), scripts::route_tcl(spec))?;
+    emit("Makefile".into(), scripts::flow_makefile(spec))?;
+
+    // PPA summary (our signoff substitute).
+    let ppa = analyze_macro(spec, 2000, 0x7AB1E2);
+    let summary = format!(
+        "macro {}\n  family       {}\n  delay        {:.2} ns\n  logic area   {:.0} um2\n  sram area    {:.0} um2\n  p&r area     {:.0} um2\n  power        {:.3e} W\n  energy/op    {:.3e} J\n  mult gates   {}\n",
+        ppa.name,
+        ppa.family_label,
+        ppa.delay_ns,
+        ppa.logic_area_um2,
+        ppa.sram_area_um2,
+        ppa.pnr_area_um2,
+        ppa.power_w,
+        ppa.energy_per_op_j,
+        ppa.mult_gates
+    );
+    emit("ppa_report.txt".into(), summary.clone())?;
+
+    Ok(FlowArtifacts {
+        dir: out_dir.to_path_buf(),
+        files,
+        ppa_summary: summary,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::spec::{MacroSpec, MultFamily};
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+    fn generates_complete_bundle() {
+        let tmp = std::env::temp_dir().join(format!("openacm_flow_{}", std::process::id()));
+        let spec = MacroSpec::new("dcim16x8", 16, 8, MultFamily::default_approx(8));
+        let art = generate_all(&spec, &tmp).unwrap();
+        let names: Vec<String> = art
+            .files
+            .iter()
+            .map(|p| p.file_name().unwrap().to_string_lossy().to_string())
+            .collect();
+        for expect in [
+            "dcim16x8_pe_top.v",
+            "fakeram45_16x8.v",
+            "fakeram45_16x8.lef",
+            "fakeram45_16x8.lib",
+            "dcim16x8.sdc",
+            "synth.tcl",
+            "floorplan.tcl",
+            "place.tcl",
+            "cts.tcl",
+            "route.tcl",
+            "Makefile",
+            "ppa_report.txt",
+        ] {
+            assert!(names.iter().any(|n| n == expect), "missing {expect}: {names:?}");
+        }
+        assert!(art.ppa_summary.contains("Appro4-2"));
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+}

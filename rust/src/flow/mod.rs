@@ -1,0 +1,12 @@
+//! Flow-script generator (paper §III-A component 4, §IV): Verilog RTL for
+//! the generated netlists and the PE top, FakeRAM-style LEF/LIB for the
+//! SRAM macro, SDC constraints, and the OpenROAD TCL script set
+//! (synthesis → floorplan → place → CTS → route → report) so the artifact
+//! bundle matches what the paper's flow consumes/produces.
+
+pub mod verilog;
+pub mod scripts;
+pub mod emit;
+pub mod cli;
+
+pub use emit::{generate_all, FlowArtifacts};

@@ -1,0 +1,543 @@
+//! Structural builder: composable arithmetic blocks over the netlist IR.
+//!
+//! All multi-bit buses are LSB-first `Vec<NetId>`. Blocks provided here are
+//! exactly the primitives the multiplier generators need: half/full adders,
+//! ripple and carry-propagate adders, subtractors, shifters (fixed and
+//! barrel), leading-one detector, priority encoder, binary decoder,
+//! magnitude comparator and wide OR/AND reductions.
+
+use super::netlist::{GateKind, NetId, Netlist};
+
+/// Netlist builder with typed helpers.
+pub struct Builder {
+    nl: Netlist,
+    zero: Option<NetId>,
+    one: Option<NetId>,
+}
+
+impl Builder {
+    pub fn new(name: &str) -> Self {
+        Self {
+            nl: Netlist::new(name),
+            zero: None,
+            one: None,
+        }
+    }
+
+    pub fn finish(self) -> Netlist {
+        self.nl
+    }
+
+    // ---- primitive wiring -------------------------------------------------
+
+    pub fn input(&mut self, name: &str) -> NetId {
+        self.nl.add_input(name)
+    }
+
+    /// Declare an LSB-first input bus `name[0..width)`.
+    pub fn input_bus(&mut self, name: &str, width: usize) -> Vec<NetId> {
+        (0..width)
+            .map(|i| self.nl.add_input(&format!("{name}[{i}]")))
+            .collect()
+    }
+
+    pub fn output_bit(&mut self, name: &str, net: NetId) {
+        self.nl.mark_output(name, net);
+    }
+
+    pub fn output_bus(&mut self, name: &str, bits: &[NetId]) {
+        for (i, b) in bits.iter().enumerate() {
+            self.nl.mark_output(&format!("{name}[{i}]"), *b);
+        }
+    }
+
+    pub fn zero(&mut self) -> NetId {
+        if let Some(z) = self.zero {
+            return z;
+        }
+        let z = self.nl.push_gate(GateKind::Const0, [NetId(0); 3]);
+        self.zero = Some(z);
+        z
+    }
+
+    pub fn one(&mut self) -> NetId {
+        if let Some(o) = self.one {
+            return o;
+        }
+        let o = self.nl.push_gate(GateKind::Const1, [NetId(0); 3]);
+        self.one = Some(o);
+        o
+    }
+
+    pub fn not(&mut self, a: NetId) -> NetId {
+        self.nl.push_gate(GateKind::Not, [a, NetId(0), NetId(0)])
+    }
+
+    pub fn and(&mut self, a: NetId, b: NetId) -> NetId {
+        self.nl.push_gate(GateKind::And2, [a, b, NetId(0)])
+    }
+
+    pub fn or(&mut self, a: NetId, b: NetId) -> NetId {
+        self.nl.push_gate(GateKind::Or2, [a, b, NetId(0)])
+    }
+
+    pub fn xor(&mut self, a: NetId, b: NetId) -> NetId {
+        self.nl.push_gate(GateKind::Xor2, [a, b, NetId(0)])
+    }
+
+    pub fn nand(&mut self, a: NetId, b: NetId) -> NetId {
+        self.nl.push_gate(GateKind::Nand2, [a, b, NetId(0)])
+    }
+
+    pub fn nor(&mut self, a: NetId, b: NetId) -> NetId {
+        self.nl.push_gate(GateKind::Nor2, [a, b, NetId(0)])
+    }
+
+    pub fn xnor(&mut self, a: NetId, b: NetId) -> NetId {
+        self.nl.push_gate(GateKind::Xnor2, [a, b, NetId(0)])
+    }
+
+    /// sel ? b : a
+    pub fn mux(&mut self, sel: NetId, a: NetId, b: NetId) -> NetId {
+        self.nl.push_gate(GateKind::Mux2, [a, b, sel])
+    }
+
+    pub fn and3(&mut self, a: NetId, b: NetId, c: NetId) -> NetId {
+        let t = self.and(a, b);
+        self.and(t, c)
+    }
+
+    pub fn or3(&mut self, a: NetId, b: NetId, c: NetId) -> NetId {
+        let t = self.or(a, b);
+        self.or(t, c)
+    }
+
+    pub fn xor3(&mut self, a: NetId, b: NetId, c: NetId) -> NetId {
+        let t = self.xor(a, b);
+        self.xor(t, c)
+    }
+
+    /// Majority(a, b, c) = ab + ac + bc (carry function).
+    pub fn maj(&mut self, a: NetId, b: NetId, c: NetId) -> NetId {
+        let ab = self.and(a, b);
+        let axb = self.xor(a, b);
+        let c_axb = self.and(axb, c);
+        self.or(ab, c_axb)
+    }
+
+    // ---- adders -----------------------------------------------------------
+
+    /// Half adder → (sum, carry).
+    pub fn half_adder(&mut self, a: NetId, b: NetId) -> (NetId, NetId) {
+        (self.xor(a, b), self.and(a, b))
+    }
+
+    /// Full adder → (sum, carry).
+    pub fn full_adder(&mut self, a: NetId, b: NetId, cin: NetId) -> (NetId, NetId) {
+        let s = self.xor3(a, b, cin);
+        let c = self.maj(a, b, cin);
+        (s, c)
+    }
+
+    /// Ripple-carry adder over equal-width buses → (sum bus, carry-out).
+    pub fn ripple_add(&mut self, a: &[NetId], b: &[NetId]) -> (Vec<NetId>, NetId) {
+        assert_eq!(a.len(), b.len());
+        let mut carry = self.zero();
+        let mut sum = Vec::with_capacity(a.len());
+        for i in 0..a.len() {
+            let (s, c) = self.full_adder(a[i], b[i], carry);
+            sum.push(s);
+            carry = c;
+        }
+        (sum, carry)
+    }
+
+    /// Add buses of (possibly) different widths; result width =
+    /// max(len) + 1 (carry appended).
+    pub fn add_extend(&mut self, a: &[NetId], b: &[NetId]) -> Vec<NetId> {
+        let w = a.len().max(b.len());
+        let z = self.zero();
+        let ax: Vec<NetId> = (0..w).map(|i| *a.get(i).unwrap_or(&z)).collect();
+        let bx: Vec<NetId> = (0..w).map(|i| *b.get(i).unwrap_or(&z)).collect();
+        let (mut s, c) = self.ripple_add(&ax, &bx);
+        s.push(c);
+        s
+    }
+
+    /// a - b (two's complement), buses equal width → (diff, borrow-free flag
+    /// i.e. carry-out; carry==1 means a >= b).
+    pub fn ripple_sub(&mut self, a: &[NetId], b: &[NetId]) -> (Vec<NetId>, NetId) {
+        assert_eq!(a.len(), b.len());
+        let mut carry = self.one();
+        let mut diff = Vec::with_capacity(a.len());
+        for i in 0..a.len() {
+            let nb = self.not(b[i]);
+            let (s, c) = self.full_adder(a[i], nb, carry);
+            diff.push(s);
+            carry = c;
+        }
+        (diff, carry)
+    }
+
+    /// Increment bus by 1 → (result, carry-out).
+    pub fn increment(&mut self, a: &[NetId]) -> (Vec<NetId>, NetId) {
+        let mut carry = self.one();
+        let mut out = Vec::with_capacity(a.len());
+        for &bit in a {
+            let (s, c) = self.half_adder(bit, carry);
+            out.push(s);
+            carry = c;
+        }
+        (out, carry)
+    }
+
+    // ---- selection / shifting ----------------------------------------------
+
+    /// Bitwise mux over buses: sel ? b : a.
+    pub fn mux_bus(&mut self, sel: NetId, a: &[NetId], b: &[NetId]) -> Vec<NetId> {
+        assert_eq!(a.len(), b.len());
+        a.iter()
+            .zip(b)
+            .map(|(&x, &y)| self.mux(sel, x, y))
+            .collect()
+    }
+
+    /// Logical left-shift by a constant, keeping `width` output bits.
+    pub fn shl_const(&mut self, a: &[NetId], k: usize, width: usize) -> Vec<NetId> {
+        let z = self.zero();
+        (0..width)
+            .map(|i| {
+                if i >= k && i - k < a.len() {
+                    a[i - k]
+                } else {
+                    z
+                }
+            })
+            .collect()
+    }
+
+    /// Barrel shifter: left-shift `a` by the unsigned value of `amount`
+    /// (LSB-first), producing `width` output bits. log-depth mux stages.
+    pub fn barrel_shl(&mut self, a: &[NetId], amount: &[NetId], width: usize) -> Vec<NetId> {
+        let z = self.zero();
+        let mut cur: Vec<NetId> = (0..width)
+            .map(|i| if i < a.len() { a[i] } else { z })
+            .collect();
+        for (stage, &sel) in amount.iter().enumerate() {
+            let k = 1usize << stage;
+            if k >= width {
+                // Shifting by >= width zeroes everything when sel is set.
+                cur = cur.iter().map(|&bit| self.mux(sel, bit, z)).collect();
+                continue;
+            }
+            let shifted: Vec<NetId> = (0..width)
+                .map(|i| if i >= k { cur[i - k] } else { z })
+                .collect();
+            cur = self.mux_bus(sel, &cur, &shifted);
+        }
+        cur
+    }
+
+    // ---- encoders / decoders -----------------------------------------------
+
+    /// Log-depth suffix-OR: `out[i] = a[i] | a[i+1] | … | a[n-1]`
+    /// (doubling prefix network, O(n log n) gates, O(log n) depth).
+    pub fn suffix_or(&mut self, a: &[NetId]) -> Vec<NetId> {
+        let n = a.len();
+        let mut cur = a.to_vec();
+        let mut step = 1;
+        while step < n {
+            let mut next = cur.clone();
+            for i in 0..n {
+                if i + step < n {
+                    next[i] = self.or(cur[i], cur[i + step]);
+                }
+            }
+            cur = next;
+            step *= 2;
+        }
+        cur
+    }
+
+    /// Leading-one detector: one-hot output, bit i set iff `a[i]` is the
+    /// most significant set bit. All-zero input → all-zero output.
+    /// Log-depth via the suffix-OR network (the LoD sits on the log
+    /// multiplier's critical path — Fig 3).
+    pub fn leading_one_detector(&mut self, a: &[NetId]) -> Vec<NetId> {
+        let n = a.len();
+        let any_above = self.suffix_or(a);
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            if i + 1 < n {
+                let na = self.not(any_above[i + 1]);
+                out.push(self.and(a[i], na));
+            } else {
+                out.push(a[i]);
+            }
+        }
+        out
+    }
+
+    /// Priority encoder over a one-hot bus → binary index (LSB-first,
+    /// ceil(log2 n) bits). Assumes at most one bit set.
+    pub fn onehot_encode(&mut self, onehot: &[NetId]) -> Vec<NetId> {
+        let n = onehot.len();
+        let bits = usize::BITS as usize - (n - 1).leading_zeros() as usize;
+        let mut out = Vec::with_capacity(bits);
+        for b in 0..bits {
+            // OR of all onehot positions whose index has bit b set.
+            let mut acc: Option<NetId> = None;
+            for (i, &h) in onehot.iter().enumerate() {
+                if (i >> b) & 1 == 1 {
+                    acc = Some(match acc {
+                        None => h,
+                        Some(prev) => self.or(prev, h),
+                    });
+                }
+            }
+            let z = self.zero();
+            out.push(acc.unwrap_or(z));
+        }
+        out
+    }
+
+    /// Binary decoder: `sel` (LSB-first) → one-hot of 2^sel.len() outputs.
+    pub fn decoder(&mut self, sel: &[NetId]) -> Vec<NetId> {
+        let n = 1usize << sel.len();
+        let nsel: Vec<NetId> = sel.iter().map(|&s| self.not(s)).collect();
+        (0..n)
+            .map(|i| {
+                let mut acc: Option<NetId> = None;
+                for (b, (&s, &ns)) in sel.iter().zip(&nsel).enumerate() {
+                    let term = if (i >> b) & 1 == 1 { s } else { ns };
+                    acc = Some(match acc {
+                        None => term,
+                        Some(prev) => self.and(prev, term),
+                    });
+                }
+                acc.expect("decoder needs >= 1 select bit")
+            })
+            .collect()
+    }
+
+    /// Unsigned magnitude comparator → (a_gt_b, a_eq_b). Binary-tree
+    /// combination (`gt = gt_hi | (eq_hi & gt_lo)`), log depth — the COMP
+    /// block sits on the Log-our critical path.
+    pub fn compare(&mut self, a: &[NetId], b: &[NetId]) -> (NetId, NetId) {
+        assert_eq!(a.len(), b.len());
+        // Per-bit (gt, eq).
+        let mut nodes: Vec<(NetId, NetId)> = (0..a.len())
+            .map(|i| {
+                let nb = self.not(b[i]);
+                let gt = self.and(a[i], nb);
+                let eq = self.xnor(a[i], b[i]);
+                (gt, eq)
+            })
+            .collect();
+        // Reduce pairwise, MSB side dominating.
+        while nodes.len() > 1 {
+            let mut next = Vec::with_capacity(nodes.len().div_ceil(2));
+            let mut it = nodes.chunks(2);
+            for ch in &mut it {
+                if ch.len() == 1 {
+                    next.push(ch[0]);
+                } else {
+                    let (gt_lo, eq_lo) = ch[0];
+                    let (gt_hi, eq_hi) = ch[1];
+                    let t = self.and(eq_hi, gt_lo);
+                    let gt = self.or(gt_hi, t);
+                    let eq = self.and(eq_hi, eq_lo);
+                    next.push((gt, eq));
+                }
+            }
+            nodes = next;
+        }
+        nodes[0]
+    }
+
+    /// Wide OR reduction.
+    pub fn or_reduce(&mut self, xs: &[NetId]) -> NetId {
+        match xs.len() {
+            0 => self.zero(),
+            1 => xs[0],
+            _ => {
+                // Balanced tree for shallow depth.
+                let mid = xs.len() / 2;
+                let l = self.or_reduce(&xs[..mid]);
+                let r = self.or_reduce(&xs[mid..]);
+                self.or(l, r)
+            }
+        }
+    }
+
+    /// Wide AND reduction.
+    pub fn and_reduce(&mut self, xs: &[NetId]) -> NetId {
+        match xs.len() {
+            0 => self.one(),
+            1 => xs[0],
+            _ => {
+                let mid = xs.len() / 2;
+                let l = self.and_reduce(&xs[..mid]);
+                let r = self.and_reduce(&xs[mid..]);
+                self.and(l, r)
+            }
+        }
+    }
+
+    /// Bitwise OR of two equal-width buses.
+    pub fn or_bus(&mut self, a: &[NetId], b: &[NetId]) -> Vec<NetId> {
+        assert_eq!(a.len(), b.len());
+        a.iter().zip(b).map(|(&x, &y)| self.or(x, y)).collect()
+    }
+
+    /// Bitwise XOR of two equal-width buses.
+    pub fn xor_bus(&mut self, a: &[NetId], b: &[NetId]) -> Vec<NetId> {
+        assert_eq!(a.len(), b.len());
+        a.iter().zip(b).map(|(&x, &y)| self.xor(x, y)).collect()
+    }
+
+    /// Bitwise AND of a bus with a single control bit.
+    pub fn gate_bus(&mut self, ctrl: NetId, a: &[NetId]) -> Vec<NetId> {
+        a.iter().map(|&x| self.and(ctrl, x)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn run1(nl: &Netlist, ins: &[(&str, u64)]) -> BTreeMap<String, u64> {
+        let mut m = BTreeMap::new();
+        for (k, v) in ins {
+            m.insert(k.to_string(), *v);
+        }
+        nl.eval_uint(&m)
+    }
+
+    #[test]
+    fn full_adder_truth_table() {
+        let mut b = Builder::new("fa");
+        let a = b.input("a[0]");
+        let x = b.input("b[0]");
+        let c = b.input("c[0]");
+        let (s, co) = b.full_adder(a, x, c);
+        b.output_bit("s[0]", s);
+        b.output_bit("co[0]", co);
+        let nl = b.finish();
+        for av in 0..2u64 {
+            for bv in 0..2u64 {
+                for cv in 0..2u64 {
+                    let out = run1(&nl, &[("a", av), ("b", bv), ("c", cv)]);
+                    let total = out["s"] + 2 * out["co"];
+                    assert_eq!(total, av + bv + cv);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn subtractor_and_compare() {
+        let mut b = Builder::new("sub");
+        let x = b.input_bus("x", 6);
+        let y = b.input_bus("y", 6);
+        let (d, c) = b.ripple_sub(&x, &y);
+        let (gt, eq) = b.compare(&x, &y);
+        b.output_bus("d", &d);
+        b.output_bit("c[0]", c);
+        b.output_bit("gt[0]", gt);
+        b.output_bit("eq[0]", eq);
+        let nl = b.finish();
+        for xv in 0..64u64 {
+            for yv in 0..64u64 {
+                let out = run1(&nl, &[("x", xv), ("y", yv)]);
+                assert_eq!(out["d"], xv.wrapping_sub(yv) & 63, "{xv}-{yv}");
+                assert_eq!(out["c"], (xv >= yv) as u64);
+                assert_eq!(out["gt"], (xv > yv) as u64);
+                assert_eq!(out["eq"], (xv == yv) as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn barrel_shifter_exhaustive() {
+        let mut b = Builder::new("shl");
+        let a = b.input_bus("a", 8);
+        let k = b.input_bus("k", 3);
+        let out = b.barrel_shl(&a, &k, 16);
+        b.output_bus("o", &out);
+        let nl = b.finish();
+        for av in [0u64, 1, 3, 0x55, 0xAA, 0xFF, 0x80] {
+            for kv in 0..8u64 {
+                let o = run1(&nl, &[("a", av), ("k", kv)]);
+                assert_eq!(o["o"], (av << kv) & 0xFFFF, "a={av} k={kv}");
+            }
+        }
+    }
+
+    #[test]
+    fn lod_and_encoder() {
+        let mut b = Builder::new("lod");
+        let a = b.input_bus("a", 8);
+        let oh = b.leading_one_detector(&a);
+        let k = b.onehot_encode(&oh);
+        b.output_bus("oh", &oh);
+        b.output_bus("k", &k);
+        let nl = b.finish();
+        for av in 1..256u64 {
+            let o = run1(&nl, &[("a", av)]);
+            let msb = 63 - av.leading_zeros() as u64;
+            assert_eq!(o["oh"], 1 << msb, "a={av}");
+            assert_eq!(o["k"], msb, "a={av}");
+        }
+        // all-zero input
+        let o = run1(&nl, &[("a", 0)]);
+        assert_eq!(o["oh"], 0);
+        assert_eq!(o["k"], 0);
+    }
+
+    #[test]
+    fn decoder_exhaustive() {
+        let mut b = Builder::new("dec");
+        let s = b.input_bus("s", 4);
+        let d = b.decoder(&s);
+        b.output_bus("d", &d);
+        let nl = b.finish();
+        for sv in 0..16u64 {
+            let o = run1(&nl, &[("s", sv)]);
+            assert_eq!(o["d"], 1 << sv);
+        }
+    }
+
+    #[test]
+    fn reductions() {
+        let mut b = Builder::new("red");
+        let a = b.input_bus("a", 5);
+        let any = b.or_reduce(&a);
+        let all = b.and_reduce(&a);
+        b.output_bit("any[0]", any);
+        b.output_bit("all[0]", all);
+        let nl = b.finish();
+        for av in 0..32u64 {
+            let o = run1(&nl, &[("a", av)]);
+            assert_eq!(o["any"], (av != 0) as u64);
+            assert_eq!(o["all"], (av == 31) as u64);
+        }
+    }
+
+    #[test]
+    fn add_extend_widths() {
+        let mut b = Builder::new("ax");
+        let a = b.input_bus("a", 3);
+        let c = b.input_bus("c", 6);
+        let s = b.add_extend(&a, &c);
+        b.output_bus("s", &s);
+        let nl = b.finish();
+        for av in 0..8u64 {
+            for cv in 0..64u64 {
+                let o = run1(&nl, &[("a", av), ("c", cv)]);
+                assert_eq!(o["s"], av + cv);
+            }
+        }
+    }
+}

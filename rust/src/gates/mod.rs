@@ -1,0 +1,20 @@
+//! Gate-level netlist intermediate representation.
+//!
+//! Every arithmetic circuit the compiler emits (multipliers, adders,
+//! leading-one detectors, barrel shifters, …) is built as a [`Netlist`] of
+//! primitive gates. The IR is deliberately simple:
+//!
+//! * nets are dense `u32` ids; gate inputs always reference *already
+//!   created* nets, so creation order is a topological order — evaluation,
+//!   timing analysis and power estimation are single forward passes;
+//! * evaluation is bit-parallel: each net carries 64 independent samples per
+//!   `u64` word, which makes exhaustive 8-bit equivalence checks (65k input
+//!   pairs) and switching-activity extraction fast;
+//! * the structural view (gate counts by kind) feeds the PPA engine, and the
+//!   same structure is what the Verilog emitter prints.
+
+pub mod netlist;
+pub mod builder;
+
+pub use builder::Builder;
+pub use netlist::{GateKind, Netlist, NetId};

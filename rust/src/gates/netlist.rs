@@ -1,0 +1,400 @@
+//! The netlist data structure and its evaluators.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Dense net identifier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct NetId(pub u32);
+
+impl NetId {
+    #[inline]
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Primitive gate kinds. Two-input gates plus inverter, buffer, constants
+/// and a 2:1 mux (select, a, b → s ? b : a). This basis is what the
+/// FreePDK45-class cell library provides; wider functions are decomposed by
+/// the builder.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum GateKind {
+    Const0,
+    Const1,
+    Input,
+    Buf,
+    Not,
+    And2,
+    Or2,
+    Xor2,
+    Nand2,
+    Nor2,
+    Xnor2,
+    /// out = sel ? b : a   (inputs: [a, b, sel])
+    Mux2,
+}
+
+impl GateKind {
+    pub fn arity(self) -> usize {
+        match self {
+            GateKind::Const0 | GateKind::Const1 | GateKind::Input => 0,
+            GateKind::Buf | GateKind::Not => 1,
+            GateKind::Mux2 => 3,
+            _ => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            GateKind::Const0 => "const0",
+            GateKind::Const1 => "const1",
+            GateKind::Input => "input",
+            GateKind::Buf => "buf",
+            GateKind::Not => "not",
+            GateKind::And2 => "and2",
+            GateKind::Or2 => "or2",
+            GateKind::Xor2 => "xor2",
+            GateKind::Nand2 => "nand2",
+            GateKind::Nor2 => "nor2",
+            GateKind::Xnor2 => "xnor2",
+            GateKind::Mux2 => "mux2",
+        }
+    }
+}
+
+/// One gate instance. `output` is always the net with id equal to the
+/// gate's position + its own slot, assigned by the netlist.
+#[derive(Clone, Debug)]
+pub struct Gate {
+    pub kind: GateKind,
+    pub inputs: [NetId; 3],
+    pub output: NetId,
+}
+
+/// A combinational netlist with named ports.
+#[derive(Clone, Debug, Default)]
+pub struct Netlist {
+    pub name: String,
+    gates: Vec<Gate>,
+    /// Primary inputs in declaration order.
+    inputs: Vec<(String, NetId)>,
+    /// Primary outputs in declaration order.
+    outputs: Vec<(String, NetId)>,
+    /// Optional debug names for internal nets.
+    net_names: BTreeMap<NetId, String>,
+}
+
+impl Netlist {
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn net_count(&self) -> usize {
+        self.gates.len()
+    }
+
+    pub fn gates(&self) -> &[Gate] {
+        &self.gates
+    }
+
+    pub fn inputs(&self) -> &[(String, NetId)] {
+        &self.inputs
+    }
+
+    pub fn outputs(&self) -> &[(String, NetId)] {
+        &self.outputs
+    }
+
+    /// Gate count excluding inputs/constants (what area models count).
+    pub fn logic_gate_count(&self) -> usize {
+        self.gates
+            .iter()
+            .filter(|g| {
+                !matches!(
+                    g.kind,
+                    GateKind::Input | GateKind::Const0 | GateKind::Const1
+                )
+            })
+            .count()
+    }
+
+    /// Histogram of gate kinds.
+    pub fn kind_counts(&self) -> BTreeMap<GateKind, usize> {
+        let mut m = BTreeMap::new();
+        for g in &self.gates {
+            *m.entry(g.kind).or_insert(0) += 1;
+        }
+        m
+    }
+
+    /// Fanout count per net (how many gate inputs it drives) + primary
+    /// outputs count as one load each. Used by the timing/power models.
+    pub fn fanouts(&self) -> Vec<u32> {
+        let mut f = vec![0u32; self.gates.len()];
+        for g in &self.gates {
+            for i in 0..g.kind.arity() {
+                f[g.inputs[i].idx()] += 1;
+            }
+        }
+        for (_, n) in &self.outputs {
+            f[n.idx()] += 1;
+        }
+        f
+    }
+
+    pub(crate) fn push_gate(&mut self, kind: GateKind, inputs: [NetId; 3]) -> NetId {
+        let out = NetId(self.gates.len() as u32);
+        for i in 0..kind.arity() {
+            assert!(
+                inputs[i].0 < out.0,
+                "netlist must be built topologically: gate {} input {} >= output {}",
+                self.gates.len(),
+                inputs[i].0,
+                out.0
+            );
+        }
+        self.gates.push(Gate {
+            kind,
+            inputs,
+            output: out,
+        });
+        out
+    }
+
+    pub(crate) fn add_input(&mut self, name: &str) -> NetId {
+        let id = self.push_gate(GateKind::Input, [NetId(0); 3]);
+        self.inputs.push((name.to_string(), id));
+        self.net_names.insert(id, name.to_string());
+        id
+    }
+
+    pub(crate) fn mark_output(&mut self, name: &str, net: NetId) {
+        self.outputs.push((name.to_string(), net));
+    }
+
+    pub fn name_net(&mut self, net: NetId, name: &str) {
+        self.net_names.insert(net, name.to_string());
+    }
+
+    pub fn net_name(&self, net: NetId) -> Option<&str> {
+        self.net_names.get(&net).map(|s| s.as_str())
+    }
+
+    /// Validate structural invariants (topological order, port references).
+    pub fn validate(&self) -> Result<()> {
+        for (i, g) in self.gates.iter().enumerate() {
+            if g.output.idx() != i {
+                bail!("gate {i} output id mismatch");
+            }
+            for k in 0..g.kind.arity() {
+                if g.inputs[k].idx() >= i {
+                    bail!("gate {i} reads a later net {}", g.inputs[k].0);
+                }
+            }
+        }
+        for (n, id) in &self.outputs {
+            if id.idx() >= self.gates.len() {
+                bail!("output {n} references missing net");
+            }
+        }
+        Ok(())
+    }
+
+    /// Evaluate 64 input vectors at once. `assignment[i]` holds the 64
+    /// parallel sample bits for primary input `i` (declaration order).
+    /// Returns all net values (indexable by `NetId`).
+    pub fn eval_u64(&self, assignment: &[u64]) -> Vec<u64> {
+        assert_eq!(
+            assignment.len(),
+            self.inputs.len(),
+            "assignment arity mismatch"
+        );
+        let mut vals = vec![0u64; self.gates.len()];
+        let mut next_input = 0;
+        for (i, g) in self.gates.iter().enumerate() {
+            let a = g.inputs[0];
+            let b = g.inputs[1];
+            vals[i] = match g.kind {
+                GateKind::Const0 => 0,
+                GateKind::Const1 => u64::MAX,
+                GateKind::Input => {
+                    let v = assignment[next_input];
+                    next_input += 1;
+                    v
+                }
+                GateKind::Buf => vals[a.idx()],
+                GateKind::Not => !vals[a.idx()],
+                GateKind::And2 => vals[a.idx()] & vals[b.idx()],
+                GateKind::Or2 => vals[a.idx()] | vals[b.idx()],
+                GateKind::Xor2 => vals[a.idx()] ^ vals[b.idx()],
+                GateKind::Nand2 => !(vals[a.idx()] & vals[b.idx()]),
+                GateKind::Nor2 => !(vals[a.idx()] | vals[b.idx()]),
+                GateKind::Xnor2 => !(vals[a.idx()] ^ vals[b.idx()]),
+                GateKind::Mux2 => {
+                    let s = vals[g.inputs[2].idx()];
+                    (vals[a.idx()] & !s) | (vals[b.idx()] & s)
+                }
+            };
+        }
+        vals
+    }
+
+    /// Single-vector evaluation: map named input bits to a named output
+    /// word. Inputs/outputs are bit-vectors in declaration order.
+    pub fn eval_words(&self, input_bits: &[bool]) -> Vec<bool> {
+        let assignment: Vec<u64> = input_bits
+            .iter()
+            .map(|&b| if b { u64::MAX } else { 0 })
+            .collect();
+        let vals = self.eval_u64(&assignment);
+        self.outputs
+            .iter()
+            .map(|(_, id)| vals[id.idx()] & 1 != 0)
+            .collect()
+    }
+
+    /// Convenience for arithmetic blocks: inputs given as unsigned words per
+    /// declared *input group*. The builder declares inputs LSB-first with
+    /// names like `a[0]`, `a[1]`, …; this helper splits on the `[` to group.
+    pub fn eval_uint(&self, operands: &BTreeMap<String, u64>) -> BTreeMap<String, u64> {
+        let mut bits = Vec::with_capacity(self.inputs.len());
+        let mut counters: BTreeMap<String, u32> = BTreeMap::new();
+        for (name, _) in &self.inputs {
+            let group = name.split('[').next().unwrap().to_string();
+            let bit = counters.entry(group.clone()).or_insert(0);
+            let val = operands
+                .get(&group)
+                .unwrap_or_else(|| panic!("missing operand {group}"));
+            bits.push((val >> *bit) & 1 != 0);
+            *bit += 1;
+        }
+        let out_bits = self.eval_words(&bits);
+        let mut outs: BTreeMap<String, u64> = BTreeMap::new();
+        let mut counters: BTreeMap<String, u32> = BTreeMap::new();
+        for ((name, _), b) in self.outputs.iter().zip(out_bits) {
+            let group = name.split('[').next().unwrap().to_string();
+            let bit = counters.entry(group.clone()).or_insert(0);
+            let e = outs.entry(group).or_insert(0);
+            if b {
+                *e |= 1 << *bit;
+            }
+            *bit += 1;
+        }
+        outs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gates::builder::Builder;
+
+    #[test]
+    fn topological_invariant_enforced() {
+        let mut nl = Netlist::new("t");
+        let a = nl.add_input("a");
+        let b = nl.add_input("b");
+        let o = nl.push_gate(GateKind::And2, [a, b, NetId(0)]);
+        nl.mark_output("o", o);
+        nl.validate().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "topologically")]
+    fn forward_reference_panics() {
+        let mut nl = Netlist::new("t");
+        let a = nl.add_input("a");
+        // Reference a net that doesn't exist yet.
+        nl.push_gate(GateKind::And2, [a, NetId(99), NetId(0)]);
+    }
+
+    #[test]
+    fn eval_all_primitive_gates() {
+        let mut nl = Netlist::new("prims");
+        let a = nl.add_input("a");
+        let b = nl.add_input("b");
+        let s = nl.add_input("s");
+        let and = nl.push_gate(GateKind::And2, [a, b, NetId(0)]);
+        let or = nl.push_gate(GateKind::Or2, [a, b, NetId(0)]);
+        let xor = nl.push_gate(GateKind::Xor2, [a, b, NetId(0)]);
+        let nand = nl.push_gate(GateKind::Nand2, [a, b, NetId(0)]);
+        let nor = nl.push_gate(GateKind::Nor2, [a, b, NetId(0)]);
+        let xnor = nl.push_gate(GateKind::Xnor2, [a, b, NetId(0)]);
+        let not = nl.push_gate(GateKind::Not, [a, NetId(0), NetId(0)]);
+        let mux = nl.push_gate(GateKind::Mux2, [a, b, s]);
+        for (name, id) in [
+            ("and", and),
+            ("or", or),
+            ("xor", xor),
+            ("nand", nand),
+            ("nor", nor),
+            ("xnor", xnor),
+            ("not", not),
+            ("mux", mux),
+        ] {
+            nl.mark_output(name, id);
+        }
+        for av in [0u64, 1] {
+            for bv in [0u64, 1] {
+                for sv in [0u64, 1] {
+                    let vals = nl.eval_u64(&[
+                        if av == 1 { u64::MAX } else { 0 },
+                        if bv == 1 { u64::MAX } else { 0 },
+                        if sv == 1 { u64::MAX } else { 0 },
+                    ]);
+                    let get = |id: NetId| vals[id.idx()] & 1;
+                    assert_eq!(get(and), av & bv);
+                    assert_eq!(get(or), av | bv);
+                    assert_eq!(get(xor), av ^ bv);
+                    assert_eq!(get(nand), 1 - (av & bv));
+                    assert_eq!(get(nor), 1 - (av | bv));
+                    assert_eq!(get(xnor), 1 - (av ^ bv));
+                    assert_eq!(get(not), 1 - av);
+                    assert_eq!(get(mux), if sv == 1 { bv } else { av });
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bit_parallel_matches_serial() {
+        // A small adder evaluated 64 inputs at a time must agree with
+        // serial single-vector evaluation.
+        let mut b = Builder::new("add4");
+        let x = b.input_bus("x", 4);
+        let y = b.input_bus("y", 4);
+        let (sum, carry) = b.ripple_add(&x, &y);
+        b.output_bus("s", &sum);
+        b.output_bit("c", carry);
+        let nl = b.finish();
+        for xv in 0..16u64 {
+            for yv in 0..16u64 {
+                let mut ops = BTreeMap::new();
+                ops.insert("x".to_string(), xv);
+                ops.insert("y".to_string(), yv);
+                let out = nl.eval_uint(&ops);
+                let total = out["s"] | (out["c"] << 4);
+                assert_eq!(total, xv + yv, "{xv}+{yv}");
+            }
+        }
+    }
+
+    #[test]
+    fn fanout_counts() {
+        let mut nl = Netlist::new("f");
+        let a = nl.add_input("a");
+        let b = nl.add_input("b");
+        let x = nl.push_gate(GateKind::And2, [a, b, NetId(0)]);
+        let y = nl.push_gate(GateKind::Or2, [a, x, NetId(0)]);
+        nl.mark_output("y", y);
+        let f = nl.fanouts();
+        assert_eq!(f[a.idx()], 2); // feeds and + or
+        assert_eq!(f[b.idx()], 1);
+        assert_eq!(f[x.idx()], 1);
+        assert_eq!(f[y.idx()], 1); // primary output load
+    }
+}

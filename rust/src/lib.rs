@@ -1,0 +1,35 @@
+//! # OpenACM — an open-source SRAM-based approximate CiM compiler (reproduction)
+//!
+//! This crate is the Layer-3 (Rust) half of a three-layer reproduction of
+//! *"OpenACM: An Open-Source SRAM-Based Approximate CiM Compiler"* (CS.AR 2026):
+//!
+//! * **L3 (this crate)** — the compiler itself: gate-level netlist generators
+//!   for an accuracy-configurable multiplier library (exact 4-2 compressor
+//!   tree, tunable approximate 4-2, logarithmic with dynamic compensation),
+//!   an event-driven gate simulator, a FreePDK45-calibrated PPA engine, a
+//!   transistor-level 6T SRAM macro compiler with variation-aware (MC / MNIS
+//!   importance-sampling) characterization, a PE compiler, an OpenROAD
+//!   flow-script generator, a DSE engine — plus a threaded serving
+//!   coordinator that executes AOT-compiled JAX graphs via PJRT.
+//! * **L2 (python/compile/model.py)** — a quantized CNN whose multiplies go
+//!   through an approximate-multiplier LUT; lowered once to HLO text.
+//! * **L1 (python/compile/kernels/)** — the Pallas LUT-matmul kernel.
+//!
+//! See `DESIGN.md` for the system inventory and per-experiment index.
+
+pub mod util;
+pub mod bench;
+pub mod gates;
+pub mod mult;
+pub mod sim;
+pub mod ppa;
+pub mod sram;
+pub mod yield_analysis;
+pub mod pe;
+pub mod flow;
+pub mod dse;
+pub mod apps;
+pub mod nn;
+pub mod runtime;
+pub mod coordinator;
+pub mod config;

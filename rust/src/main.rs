@@ -1,0 +1,53 @@
+//! OpenACM command-line interface (leader entrypoint).
+//!
+//! Subcommands map one-to-one onto the paper's experiments and the compiler
+//! stages; `openacm help` prints the catalogue. The real implementations
+//! live in the library; this file only does argument plumbing.
+
+use anyhow::Result;
+use openacm::util::cli::Args;
+
+const USAGE: &str = r#"OpenACM — open-source SRAM-based approximate CiM compiler (reproduction)
+
+USAGE: openacm <command> [options]
+
+COMMANDS:
+  generate   Compile a DCiM macro: netlists, Verilog, LEF/LIB, OpenROAD scripts
+             --rows N --word-bits N [--mult exact|appro42|logour|mitchell|adder_tree]
+             [--compressor yang1|...] [--approx-cols N] [--out DIR] [--spec FILE]
+  ppa        Reproduce Table II rows for one configuration
+             --rows N --word-bits N [--mult ...]
+  psnr       Reproduce Table III (image blending + edge detection PSNR)
+  nn         Reproduce Table IV (Top-1/Top-5 + NMED/MRED) via the PJRT runtime
+             [--artifacts DIR]
+  yield      Reproduce Table V (MC vs MNIS) [--size 16|32|64] [--seed N]
+  dse        Accuracy-energy design-space exploration (Pareto frontier)
+  serve      Start the inference coordinator on AOT artifacts
+             [--artifacts DIR] [--batch N] [--requests N]
+  luts       Emit behavioral-multiplier LUTs (npy) for cross-checking
+             [--out DIR]
+  help       Show this message
+"#;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(true, &["verbose", "fast"])?;
+    match args.command.as_deref() {
+        Some("generate") => openacm::flow::cli::cmd_generate(&args),
+        Some("ppa") => openacm::ppa::cli::cmd_ppa(&args),
+        Some("psnr") => openacm::apps::cli::cmd_psnr(&args),
+        Some("nn") => openacm::nn::cli::cmd_nn(&args),
+        Some("yield") => openacm::yield_analysis::cli::cmd_yield(&args),
+        Some("dse") => openacm::dse::cli::cmd_dse(&args),
+        Some("serve") => openacm::coordinator::cli::cmd_serve(&args),
+        Some("luts") => openacm::mult::cli::cmd_luts(&args),
+        Some("help") | None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => {
+            eprintln!("unknown command {other:?}\n");
+            print!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,235 @@
+//! Unified behavioral models: one `Fn(u64, u64) -> u64` per family, the
+//! sign-magnitude wrapper used by the signed applications (edge detection,
+//! NN), and LUT generation for the Python/Pallas emulation path.
+
+use super::logarithmic::{logour_behavioral, mitchell_behavioral};
+use super::pptree;
+use crate::config::spec::MultFamily;
+use crate::util::npy::NpyArray;
+
+/// Unsigned behavioral multiply for a family at a given width.
+pub fn behavioral_fn(
+    family: &MultFamily,
+    bits: usize,
+) -> Box<dyn Fn(u64, u64) -> u64 + Send + Sync> {
+    match family {
+        MultFamily::Exact | MultFamily::AdderTree => Box::new(move |a, b| {
+            debug_assert!(a < (1 << bits) && b < (1 << bits));
+            a * b
+        }),
+        MultFamily::Approx42 {
+            compressor,
+            approx_cols,
+        } => {
+            let kind = *compressor;
+            let cols = *approx_cols;
+            Box::new(move |a, b| pptree::soft_multiply(bits, cols, Some(kind), a, b))
+        }
+        MultFamily::LogOur => Box::new(move |a, b| logour_behavioral(bits, a, b)),
+        MultFamily::Mitchell => Box::new(move |a, b| mitchell_behavioral(bits, a, b)),
+    }
+}
+
+/// Exhaustive unsigned product table for `bits`-bit operands
+/// (`table[a << bits | b] = family(a, b)`). 8-bit → 65536 entries.
+/// Uses the 64-lane evaluator for the PP-tree families.
+pub fn product_table(family: &MultFamily, bits: usize) -> Vec<u64> {
+    let n = 1usize << bits;
+    match family {
+        MultFamily::Approx42 {
+            compressor,
+            approx_cols,
+        } => {
+            // 64-lane fast path.
+            let mut out = vec![0u64; n * n];
+            let mut pa = Vec::with_capacity(64);
+            let mut pb = Vec::with_capacity(64);
+            let mut idx = Vec::with_capacity(64);
+            let flush = |pa: &mut Vec<u64>, pb: &mut Vec<u64>, idx: &mut Vec<usize>, out: &mut Vec<u64>| {
+                if pa.is_empty() {
+                    return;
+                }
+                let prods = pptree::soft_multiply_lanes(
+                    bits,
+                    *approx_cols,
+                    Some(*compressor),
+                    pa,
+                    pb,
+                );
+                for (&i, p) in idx.iter().zip(prods) {
+                    out[i] = p;
+                }
+                pa.clear();
+                pb.clear();
+                idx.clear();
+            };
+            for a in 0..n as u64 {
+                for b in 0..n as u64 {
+                    pa.push(a);
+                    pb.push(b);
+                    idx.push(((a as usize) << bits) | b as usize);
+                    if pa.len() == 64 {
+                        flush(&mut pa, &mut pb, &mut idx, &mut out);
+                    }
+                }
+            }
+            flush(&mut pa, &mut pb, &mut idx, &mut out);
+            out
+        }
+        _ => {
+            let f = behavioral_fn(family, bits);
+            let mut out = vec![0u64; n * n];
+            for a in 0..n as u64 {
+                for b in 0..n as u64 {
+                    out[((a as usize) << bits) | b as usize] = f(a, b);
+                }
+            }
+            out
+        }
+    }
+}
+
+/// Signed multiply via sign-magnitude wrapping of the unsigned family
+/// (standard practice for approximate-multiplier applications): the product
+/// sign is `sign(a) XOR sign(b)`, the magnitude goes through the unsigned
+/// `bits`-bit multiplier. Magnitudes must fit `bits` bits (|−2^(bits−1)| =
+/// 2^(bits−1) does fit).
+pub fn signed_multiply(f: &dyn Fn(u64, u64) -> u64, a: i64, b: i64) -> i64 {
+    let neg = (a < 0) ^ (b < 0);
+    let p = f(a.unsigned_abs(), b.unsigned_abs()) as i64;
+    if neg {
+        -p
+    } else {
+        p
+    }
+}
+
+/// The int8×int8 → i32 LUT consumed by the Pallas kernel: indexed by
+/// `(a & 0xFF) << 8 | (b & 0xFF)` where a, b are the int8 two's-complement
+/// bit patterns. Products are computed sign-magnitude through the unsigned
+/// 8-bit behavioral multiplier.
+///
+/// Built from the unsigned [`product_table`] (64-lane bit-parallel for the
+/// PP-tree families — ~50× faster than pointwise evaluation; §Perf in
+/// EXPERIMENTS.md) and folded to sign-magnitude. |−128| = 128 needs one
+/// extra unsigned column, handled by a 9-bit-safe direct evaluation.
+pub fn int8_lut(family: &MultFamily) -> Vec<i32> {
+    let table = product_table(family, 8); // unsigned |a|×|b| for 0..=255
+    let f = behavioral_fn(family, 8);
+    let mut lut = vec![0i32; 65536];
+    for a in -128i64..=127 {
+        let am = a.unsigned_abs();
+        for b in -128i64..=127 {
+            let bm = b.unsigned_abs();
+            let idx = (((a as u8) as usize) << 8) | ((b as u8) as usize);
+            // 128 is a valid unsigned 8-bit operand (2^7 exactly), so the
+            // 256×256 table covers all magnitudes 0..=128.
+            let mag = if am <= 255 && bm <= 255 {
+                table[((am as usize) << 8) | bm as usize] as i64
+            } else {
+                f(am, bm) as i64
+            };
+            let p = if (a < 0) ^ (b < 0) { -mag } else { mag };
+            lut[idx] = p as i32;
+        }
+    }
+    lut
+}
+
+/// Unsigned 8-bit LUT (used by image blending).
+pub fn uint8_lut(family: &MultFamily) -> Vec<i32> {
+    product_table(family, 8).iter().map(|&p| p as i32).collect()
+}
+
+/// Serialize an int8 LUT as a (256, 256) npy i32 array.
+pub fn lut_to_npy(lut: &[i32]) -> NpyArray {
+    assert_eq!(lut.len(), 65536);
+    NpyArray::from_i32(&[256, 256], lut)
+}
+
+/// The four Table III/IV families with the paper's default configuration.
+pub fn paper_families() -> Vec<(String, MultFamily)> {
+    vec![
+        ("exact".to_string(), MultFamily::Exact),
+        ("appro42".to_string(), MultFamily::default_approx(8)),
+        ("logour".to_string(), MultFamily::LogOur),
+        ("lm".to_string(), MultFamily::Mitchell),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::spec::CompressorKind;
+
+    #[test]
+    fn behavioral_dispatch_matches_families() {
+        let exact = behavioral_fn(&MultFamily::Exact, 8);
+        assert_eq!(exact(200, 100), 20000);
+        let lm = behavioral_fn(&MultFamily::Mitchell, 8);
+        assert_eq!(lm(128, 64), 8192); // powers of two are exact
+        let lo = behavioral_fn(&MultFamily::LogOur, 8);
+        assert_eq!(lo(128, 64), 8192);
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+    fn product_table_matches_pointwise_fn() {
+        let fam = MultFamily::Approx42 {
+            compressor: CompressorKind::Yang1,
+            approx_cols: 8,
+        };
+        let table = product_table(&fam, 8);
+        let f = behavioral_fn(&fam, 8);
+        for a in (0..256u64).step_by(23) {
+            for b in (0..256u64).step_by(29) {
+                assert_eq!(table[((a as usize) << 8) | b as usize], f(a, b));
+            }
+        }
+    }
+
+    #[test]
+    fn signed_wrapper_quadrants() {
+        let f = behavioral_fn(&MultFamily::Exact, 8);
+        assert_eq!(signed_multiply(&*f, 5, 7), 35);
+        assert_eq!(signed_multiply(&*f, -5, 7), -35);
+        assert_eq!(signed_multiply(&*f, 5, -7), -35);
+        assert_eq!(signed_multiply(&*f, -5, -7), 35);
+        assert_eq!(signed_multiply(&*f, -128, 127), -16256);
+        assert_eq!(signed_multiply(&*f, -128, -128), 16384);
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+    fn int8_lut_exact_family_is_true_product() {
+        let lut = int8_lut(&MultFamily::Exact);
+        for a in -128i64..=127 {
+            for b in (-128i64..=127).step_by(7) {
+                let idx = (((a as u8) as usize) << 8) | ((b as u8) as usize);
+                assert_eq!(lut[idx] as i64, a * b, "{a}*{b}");
+            }
+        }
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+    fn int8_lut_symmetry_for_symmetric_families() {
+        // sign-magnitude wrapping ⇒ lut(a,b) = -lut(-a,b) for a != -128.
+        let lut = int8_lut(&MultFamily::LogOur);
+        for a in -127i64..=127 {
+            for b in (-127i64..=127).step_by(11) {
+                let i1 = (((a as u8) as usize) << 8) | ((b as u8) as usize);
+                let i2 = ((((-a) as u8) as usize) << 8) | ((b as u8) as usize);
+                assert_eq!(lut[i1], -lut[i2], "a={a} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+    fn npy_lut_shape() {
+        let lut = int8_lut(&MultFamily::Exact);
+        let arr = lut_to_npy(&lut);
+        assert_eq!(arr.shape, vec![256, 256]);
+    }
+}

@@ -1,0 +1,53 @@
+//! `openacm luts` — emit the behavioral-multiplier LUTs as `.npy` files.
+//!
+//! These are the same tables `python/compile/mults.py` generates on the
+//! build path; emitting them from Rust lets the cross-language equivalence
+//! test (`rust/tests/cross_language.rs`) and any downstream tooling compare
+//! the two implementations bit for bit.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+use super::behavioral::{int8_lut, lut_to_npy, paper_families};
+use crate::util::cli::Args;
+use crate::util::npy;
+
+/// Write `lut_<family>.npy` (int8 sign-magnitude product tables) for the
+/// four paper families into `--out` (default `artifacts/luts-rust`).
+pub fn cmd_luts(args: &Args) -> Result<()> {
+    let out = args.str_or("out", "artifacts/luts-rust");
+    let dir = Path::new(out);
+    std::fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+    for (name, family) in paper_families() {
+        let lut = int8_lut(&family);
+        let arr = lut_to_npy(&lut);
+        let path = dir.join(format!("lut_{name}.npy"));
+        npy::write(&path, &arr)?;
+        println!("wrote {} ({} entries)", path.display(), lut.len());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+    fn luts_roundtrip_through_files() {
+        let tmp = std::env::temp_dir().join(format!("openacm_luts_{}", std::process::id()));
+        let args = Args::parse(
+            vec![format!("--out={}", tmp.display())],
+            false,
+            &[],
+        )
+        .unwrap();
+        cmd_luts(&args).unwrap();
+        let (shape, data) = npy::read_i32(&tmp.join("lut_exact.npy")).unwrap();
+        assert_eq!(shape, vec![256, 256]);
+        // exact LUT spot-check: 3 * 5
+        let idx = ((3u8 as usize) << 8) | 5usize;
+        assert_eq!(data[idx], 15);
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+}

@@ -1,0 +1,201 @@
+//! Error metrics for approximate multipliers (paper Tab. IV):
+//!
+//! * **NMED** — normalized mean error distance: `mean(|p̂ − p|) / p_max`;
+//! * **MRED** — mean relative error distance: `mean(|p̂ − p| / p)` over
+//!   nonzero exact products;
+//! * **ER** — error rate, **WCE** — worst-case error, and the signed bias
+//!   (which explains the paper's observation that Log-our's zero-mean
+//!   errors behave like noise regularization while Appro4-2's one-sided
+//!   errors accumulate).
+//!
+//! Exhaustive for widths ≤ 12 bits; seeded uniform sampling above.
+
+use super::behavioral::behavioral_fn;
+use crate::config::spec::MultFamily;
+use crate::util::rng::Pcg32;
+
+/// Full error report for one multiplier configuration.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ErrorReport {
+    pub nmed: f64,
+    pub mred: f64,
+    pub error_rate: f64,
+    pub wce: u64,
+    /// Signed mean error / p_max — negative = systematic underestimate.
+    pub normalized_bias: f64,
+    /// Number of (a, b) pairs evaluated.
+    pub samples: u64,
+}
+
+/// Compute metrics exhaustively over all `2^bits × 2^bits` input pairs.
+pub fn exhaustive(family: &MultFamily, bits: usize) -> ErrorReport {
+    assert!(bits <= 12, "exhaustive only up to 12 bits; use sampled()");
+    let f = behavioral_fn(family, bits);
+    let n = 1u64 << bits;
+    let p_max = ((n - 1) * (n - 1)) as f64;
+    let mut abs_sum = 0f64;
+    let mut signed_sum = 0f64;
+    let mut rel_sum = 0f64;
+    let mut rel_n = 0u64;
+    let mut wrong = 0u64;
+    let mut wce = 0u64;
+    for a in 0..n {
+        for b in 0..n {
+            let exact = (a * b) as i64;
+            let got = f(a, b) as i64;
+            let err = got - exact;
+            if err != 0 {
+                wrong += 1;
+            }
+            let ae = err.unsigned_abs();
+            wce = wce.max(ae);
+            abs_sum += ae as f64;
+            signed_sum += err as f64;
+            if exact != 0 {
+                rel_sum += ae as f64 / exact as f64;
+                rel_n += 1;
+            }
+        }
+    }
+    let total = (n * n) as f64;
+    ErrorReport {
+        nmed: abs_sum / total / p_max,
+        mred: rel_sum / rel_n as f64,
+        error_rate: wrong as f64 / total,
+        wce,
+        normalized_bias: signed_sum / total / p_max,
+        samples: n * n,
+    }
+}
+
+/// Sampled metrics for wide multipliers.
+pub fn sampled(family: &MultFamily, bits: usize, samples: u64, seed: u64) -> ErrorReport {
+    let f = behavioral_fn(family, bits);
+    let mut rng = Pcg32::new(seed);
+    let mask = (1u128 << bits) - 1;
+    let p_max = (((1u128 << bits) - 1) * ((1u128 << bits) - 1)) as f64;
+    let mut abs_sum = 0f64;
+    let mut signed_sum = 0f64;
+    let mut rel_sum = 0f64;
+    let mut rel_n = 0u64;
+    let mut wrong = 0u64;
+    let mut wce = 0u64;
+    for _ in 0..samples {
+        let a = (rng.next_u64() as u128 & mask) as u64;
+        let b = (rng.next_u64() as u128 & mask) as u64;
+        let exact = (a as u128 * b as u128) as i128;
+        let got = f(a, b) as i128;
+        let err = got - exact;
+        if err != 0 {
+            wrong += 1;
+        }
+        let ae = err.unsigned_abs() as u64;
+        wce = wce.max(ae);
+        abs_sum += ae as f64;
+        signed_sum += err as f64;
+        if exact != 0 {
+            rel_sum += ae as f64 / exact as f64;
+            rel_n += 1;
+        }
+    }
+    ErrorReport {
+        nmed: abs_sum / samples as f64 / p_max,
+        mred: rel_sum / rel_n.max(1) as f64,
+        error_rate: wrong as f64 / samples as f64,
+        wce,
+        normalized_bias: signed_sum / samples as f64 / p_max,
+        samples,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::spec::CompressorKind;
+
+    #[test]
+    fn exact_families_have_zero_error() {
+        for fam in [MultFamily::Exact, MultFamily::AdderTree] {
+            let r = exhaustive(&fam, 8);
+            assert_eq!(r.nmed, 0.0);
+            assert_eq!(r.mred, 0.0);
+            assert_eq!(r.error_rate, 0.0);
+            assert_eq!(r.wce, 0);
+        }
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+    fn paper_table4_nmed_ordering() {
+        // Tab. IV: NMED(Appro4-2) << NMED(Log-our) << NMED(LM[24]).
+        let appro = exhaustive(&MultFamily::default_approx(8), 8);
+        let logour = exhaustive(&MultFamily::LogOur, 8);
+        let lm = exhaustive(&MultFamily::Mitchell, 8);
+        assert!(
+            appro.nmed < logour.nmed && logour.nmed < lm.nmed,
+            "NMED ordering violated: appro={:.3e} logour={:.3e} lm={:.3e}",
+            appro.nmed,
+            logour.nmed,
+            lm.nmed
+        );
+        // Paper magnitudes (8-bit native): logour ~4.4e-3, lm ~2.8e-2.
+        assert!(logour.nmed < 2e-2, "logour nmed {:.3e}", logour.nmed);
+        assert!(lm.nmed > 5e-3 && lm.nmed < 8e-2, "lm nmed {:.3e}", lm.nmed);
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+    fn appro42_bias_is_one_sided_logour_is_balanced() {
+        // The paper's §V-B argument: yang1's errors are one-sided
+        // (systematic) while Log-our's are near zero-mean.
+        let appro = exhaustive(&MultFamily::default_approx(8), 8);
+        let logour = exhaustive(&MultFamily::LogOur, 8);
+        assert!(appro.normalized_bias < 0.0);
+        assert!(
+            appro.normalized_bias.abs() > 0.9 * appro.nmed,
+            "appro4-2 errors should be almost fully one-sided"
+        );
+        assert!(
+            logour.normalized_bias.abs() < 0.8 * logour.nmed,
+            "log-our errors should partially cancel (bias {:.3e} vs nmed {:.3e})",
+            logour.normalized_bias,
+            logour.nmed
+        );
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+    fn compressor_accuracy_ranks_propagate_to_multiplier_nmed() {
+        let mk = |k| MultFamily::Approx42 {
+            compressor: k,
+            approx_cols: 8,
+        };
+        let kong = exhaustive(&mk(CompressorKind::Kong), 8);
+        let yang = exhaustive(&mk(CompressorKind::Yang1), 8);
+        let dual = exhaustive(&mk(CompressorKind::DualQuality), 8);
+        assert!(kong.nmed < yang.nmed, "kong {} yang {}", kong.nmed, yang.nmed);
+        assert!(yang.nmed < dual.nmed, "yang {} dual {}", yang.nmed, dual.nmed);
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+    fn sampled_agrees_with_exhaustive_roughly() {
+        let fam = MultFamily::Mitchell;
+        let ex = exhaustive(&fam, 8);
+        let sa = sampled(&fam, 8, 40_000, 42);
+        assert!(
+            (sa.nmed - ex.nmed).abs() / ex.nmed < 0.1,
+            "sampled {} vs exhaustive {}",
+            sa.nmed,
+            ex.nmed
+        );
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+    fn wide_multiplier_metrics_finite() {
+        let r = sampled(&MultFamily::LogOur, 16, 5_000, 7);
+        assert!(r.nmed > 0.0 && r.nmed < 0.1);
+        assert!(r.mred > 0.0 && r.mred < 0.2);
+    }
+}

@@ -1,0 +1,224 @@
+//! The fabric abstraction: one circuit generator, two instantiations.
+//!
+//! A [`Fabric`] provides boolean primitives over an abstract bit type.
+//! Multiplier generators written against it produce
+//!
+//! * a **gate netlist** when run on [`crate::gates::Builder`] (bit = net id);
+//! * a **64-lane bit-parallel evaluation** when run on [`SoftFabric`]
+//!   (bit = `u64`, one sample per lane).
+//!
+//! This guarantees the PPA/flow view and the application-level behavioral
+//! view of an approximate multiplier are *the same circuit* by construction;
+//! independent oracles (`a*b` for exact families, integer models for the
+//! log families) then validate the construction itself.
+
+use crate::gates::{Builder, NetId};
+
+/// Boolean circuit fabric.
+pub trait Fabric {
+    type Bit: Copy;
+
+    fn zero(&mut self) -> Self::Bit;
+    fn one(&mut self) -> Self::Bit;
+    fn not(&mut self, a: Self::Bit) -> Self::Bit;
+    fn and(&mut self, a: Self::Bit, b: Self::Bit) -> Self::Bit;
+    fn or(&mut self, a: Self::Bit, b: Self::Bit) -> Self::Bit;
+    fn xor(&mut self, a: Self::Bit, b: Self::Bit) -> Self::Bit;
+
+    /// sel ? b : a
+    fn mux(&mut self, sel: Self::Bit, a: Self::Bit, b: Self::Bit) -> Self::Bit {
+        let ns = self.not(sel);
+        let l = self.and(ns, a);
+        let r = self.and(sel, b);
+        self.or(l, r)
+    }
+
+    fn xor3(&mut self, a: Self::Bit, b: Self::Bit, c: Self::Bit) -> Self::Bit {
+        let t = self.xor(a, b);
+        self.xor(t, c)
+    }
+
+    /// Majority-of-three (full-adder carry).
+    fn maj(&mut self, a: Self::Bit, b: Self::Bit, c: Self::Bit) -> Self::Bit {
+        let ab = self.and(a, b);
+        let axb = self.xor(a, b);
+        let t = self.and(axb, c);
+        self.or(ab, t)
+    }
+
+    /// Half adder → (sum, carry).
+    fn half_adder(&mut self, a: Self::Bit, b: Self::Bit) -> (Self::Bit, Self::Bit) {
+        (self.xor(a, b), self.and(a, b))
+    }
+
+    /// Full adder → (sum, carry).
+    fn full_adder(
+        &mut self,
+        a: Self::Bit,
+        b: Self::Bit,
+        c: Self::Bit,
+    ) -> (Self::Bit, Self::Bit) {
+        (self.xor3(a, b, c), self.maj(a, b, c))
+    }
+}
+
+impl Fabric for Builder {
+    type Bit = NetId;
+
+    fn zero(&mut self) -> NetId {
+        Builder::zero(self)
+    }
+
+    fn one(&mut self) -> NetId {
+        Builder::one(self)
+    }
+
+    fn not(&mut self, a: NetId) -> NetId {
+        Builder::not(self, a)
+    }
+
+    fn and(&mut self, a: NetId, b: NetId) -> NetId {
+        Builder::and(self, a, b)
+    }
+
+    fn or(&mut self, a: NetId, b: NetId) -> NetId {
+        Builder::or(self, a, b)
+    }
+
+    fn xor(&mut self, a: NetId, b: NetId) -> NetId {
+        Builder::xor(self, a, b)
+    }
+
+    fn mux(&mut self, sel: NetId, a: NetId, b: NetId) -> NetId {
+        Builder::mux(self, sel, a, b)
+    }
+}
+
+/// 64-lane bit-parallel software fabric: each `u64` carries 64 independent
+/// evaluation samples. Stateless.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SoftFabric;
+
+impl Fabric for SoftFabric {
+    type Bit = u64;
+
+    #[inline]
+    fn zero(&mut self) -> u64 {
+        0
+    }
+
+    #[inline]
+    fn one(&mut self) -> u64 {
+        u64::MAX
+    }
+
+    #[inline]
+    fn not(&mut self, a: u64) -> u64 {
+        !a
+    }
+
+    #[inline]
+    fn and(&mut self, a: u64, b: u64) -> u64 {
+        a & b
+    }
+
+    #[inline]
+    fn or(&mut self, a: u64, b: u64) -> u64 {
+        a | b
+    }
+
+    #[inline]
+    fn xor(&mut self, a: u64, b: u64) -> u64 {
+        a ^ b
+    }
+
+    #[inline]
+    fn mux(&mut self, sel: u64, a: u64, b: u64) -> u64 {
+        (a & !sel) | (b & sel)
+    }
+}
+
+/// Spread a single scalar's bits into full-lane constants (all 64 lanes get
+/// the same sample). Used for one-off behavioral evaluation.
+pub fn broadcast_bits(value: u64, bits: usize) -> Vec<u64> {
+    (0..bits)
+        .map(|i| if (value >> i) & 1 == 1 { u64::MAX } else { 0 })
+        .collect()
+}
+
+/// Pack 64 scalar samples into lane-sliced form: `out[bit][lane]`.
+/// `values.len() <= 64`; missing lanes are zero.
+pub fn pack_lanes(values: &[u64], bits: usize) -> Vec<u64> {
+    assert!(values.len() <= 64);
+    let mut out = vec![0u64; bits];
+    for (lane, &v) in values.iter().enumerate() {
+        for (bit, slot) in out.iter_mut().enumerate() {
+            if (v >> bit) & 1 == 1 {
+                *slot |= 1u64 << lane;
+            }
+        }
+    }
+    out
+}
+
+/// Inverse of [`pack_lanes`]: collect `lanes` scalars from lane-sliced bits.
+pub fn unpack_lanes(bits: &[u64], lanes: usize) -> Vec<u64> {
+    assert!(lanes <= 64);
+    (0..lanes)
+        .map(|lane| {
+            bits.iter()
+                .enumerate()
+                .fold(0u64, |acc, (bit, &word)| {
+                    acc | (((word >> lane) & 1) << bit)
+                })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn soft_full_adder_matches_arithmetic() {
+        let mut f = SoftFabric;
+        for a in 0..2u64 {
+            for b in 0..2u64 {
+                for c in 0..2u64 {
+                    let (s, carry) = f.full_adder(
+                        if a == 1 { u64::MAX } else { 0 },
+                        if b == 1 { u64::MAX } else { 0 },
+                        if c == 1 { u64::MAX } else { 0 },
+                    );
+                    assert_eq!((s & 1) + 2 * (carry & 1), a + b + c);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn default_mux_matches_override() {
+        let mut f = SoftFabric;
+        for sel in [0u64, u64::MAX] {
+            for a in [0u64, u64::MAX, 0x0F0F] {
+                for b in [0u64, u64::MAX, 0xF0F0] {
+                    assert_eq!(f.mux(sel, a, b), (a & !sel) | (b & sel));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lane_pack_roundtrip() {
+        let vals: Vec<u64> = (0..64).map(|i| (i * 37) & 0xFF).collect();
+        let packed = pack_lanes(&vals, 8);
+        let back = unpack_lanes(&packed, 64);
+        assert_eq!(back, vals);
+    }
+
+    #[test]
+    fn broadcast_all_lanes_agree() {
+        let bits = broadcast_bits(0b1011, 4);
+        assert_eq!(bits, vec![u64::MAX, u64::MAX, 0, u64::MAX]);
+    }
+}

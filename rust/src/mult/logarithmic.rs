@@ -1,0 +1,363 @@
+//! Logarithmic multipliers (paper §III-C, Fig 3).
+//!
+//! Mitchell's algorithm writes an operand as `N = 2^k (1 + x)`; the product
+//! of two operands decomposes (Eq. 1) into
+//!
+//! ```text
+//! A·B = 2^(k1+k2) + Q1·2^k2 + Q2·2^k1   (AP, shift-and-add only)
+//!     +  Q1·Q2                           (EP, dropped by Mitchell [24])
+//! ```
+//!
+//! with `Q1 = A − 2^k1`, `Q2 = B − 2^k2`. The paper's **Log-our** design
+//! adds an *adder-free dynamic compensation* of the EP: the larger of
+//! Q1/Q2 is rounded to its nearest power of two (over- or under-estimated,
+//! Eq. 2), so `round(Q_big)·Q_small` is a pure shift; since this
+//! compensation is provably `< 2^(k1+k2)`, it merges with the leading
+//! `2^(k1+k2)` term through a bitwise **OR** instead of an adder (Eq. 3):
+//!
+//! ```text
+//! P ≈ ( 2^(k1+k2) | round(Q_big)·Q_small ) + Q1·2^k2 + Q2·2^k1
+//! ```
+//!
+//! Both multipliers are generated as netlists (LoDs, priority encoders,
+//! XOR leading-one removal, barrel shifters, a comparator and the OR-merge)
+//! and as independent integer behavioral models; equivalence is tested
+//! exhaustively at 8 bits and by property tests at 16 bits.
+
+use crate::gates::{Builder, NetId, Netlist};
+
+// ---- behavioral models --------------------------------------------------
+
+#[inline]
+fn msb_pos(x: u64) -> u32 {
+    63 - x.leading_zeros()
+}
+
+/// Mitchell LM [24]: AP only (EP dropped). `bits`-bit unsigned operands.
+pub fn mitchell_behavioral(bits: usize, a: u64, b: u64) -> u64 {
+    debug_assert!(a < (1 << bits) && b < (1 << bits));
+    if a == 0 || b == 0 {
+        return 0;
+    }
+    let k1 = msb_pos(a);
+    let k2 = msb_pos(b);
+    let q1 = a - (1 << k1);
+    let q2 = b - (1 << k2);
+    (1u64 << (k1 + k2)) + (q1 << k2) + (q2 << k1)
+}
+
+/// Round a positive value to its nearest power of two: `2^m` with
+/// `m = msb` if the bit below the MSB is clear, else `2^(msb+1)`
+/// (over-estimate when the residue is ≥ 1.5·2^msb). Returns the exponent.
+#[inline]
+fn round_pow2_exp(x: u64) -> u32 {
+    debug_assert!(x > 0);
+    let k = msb_pos(x);
+    let roundup = k > 0 && (x >> (k - 1)) & 1 == 1;
+    k + roundup as u32
+}
+
+/// The proposed Log-our multiplier (Eq. 3).
+pub fn logour_behavioral(bits: usize, a: u64, b: u64) -> u64 {
+    debug_assert!(a < (1 << bits) && b < (1 << bits));
+    if a == 0 || b == 0 {
+        return 0;
+    }
+    let k1 = msb_pos(a);
+    let k2 = msb_pos(b);
+    let q1 = a - (1 << k1);
+    let q2 = b - (1 << k2);
+    // Dynamic selection: round the LARGER residue (minimises WCE, §III-C),
+    // shift the smaller one by the rounded exponent.
+    let (big, small) = if q1 >= q2 { (q1, q2) } else { (q2, q1) };
+    let comp = if big == 0 {
+        0 // both residues zero (exact powers of two) → EP = 0
+    } else {
+        small << round_pow2_exp(big)
+    };
+    // comp < 2^(k1+k2): round(big) <= 2^k_big+1 <= 2^k1 (or 2^k2), and
+    // small < 2^k_other, so the OR below never collides with bit k1+k2.
+    debug_assert!(comp < (1u64 << (k1 + k2)));
+    ((1u64 << (k1 + k2)) | comp) + (q1 << k2) + (q2 << k1)
+}
+
+// ---- netlists -----------------------------------------------------------
+
+struct LogFrontEnd {
+    /// Leading-one one-hot of the operand (kept for Verilog debug naming).
+    _lod: Vec<NetId>,
+    /// Binary exponent k (ceil(log2 bits) wide).
+    k: Vec<NetId>,
+    /// Residue Q = operand with its leading one cleared.
+    q: Vec<NetId>,
+    /// Operand-is-zero flag.
+    is_zero: NetId,
+}
+
+/// LoD + priority encoder + XOR leading-one removal (Fig 3 AP front end).
+fn log_front_end(b: &mut Builder, x: &[NetId]) -> LogFrontEnd {
+    let lod = b.leading_one_detector(x);
+    let k = b.onehot_encode(&lod);
+    let q = b.xor_bus(x, &lod);
+    let any = b.or_reduce(x);
+    let is_zero = b.not(any);
+    LogFrontEnd {
+        _lod: lod,
+        k,
+        q,
+        is_zero,
+    }
+}
+
+/// Shared AP datapath: returns (`term1` = decoded 2^(k1+k2) bus of width 2n,
+/// `s2` = Q1·2^k2 + Q2·2^k1 bus of width 2n, front-ends).
+fn ap_datapath(
+    b: &mut Builder,
+    bits: usize,
+    a_bus: &[NetId],
+    b_bus: &[NetId],
+) -> (Vec<NetId>, Vec<NetId>, LogFrontEnd, LogFrontEnd) {
+    let width = 2 * bits;
+    let fa = log_front_end(b, a_bus);
+    let fb = log_front_end(b, b_bus);
+    // Adder1: ksum = k1 + k2 (kbits+1 wide).
+    let ksum = b.add_extend(&fa.k, &fb.k);
+    // Decode ksum → one-hot 2^(k1+k2). ksum <= 2(bits-1) < 2*bits = width,
+    // and the decoder emits 2^(kbits+1) >= width lines; truncate.
+    let dec = b.decoder(&ksum);
+    let term1: Vec<NetId> = dec.into_iter().take(width).collect();
+    // Barrel shifts: Q1 << k2, Q2 << k1 (width 2n).
+    let q1s = b.barrel_shl(&fa.q, &fb.k, width);
+    let q2s = b.barrel_shl(&fb.q, &fa.k, width);
+    // Adder2 (carry-select above 12 bits to stay inside the SRAM clock).
+    let s2 = crate::mult::pptree::cpa_gen(b, &q1s, &q2s);
+    (term1, s2, fa, fb)
+}
+
+/// Gate the final product with NOT(a==0 OR b==0).
+fn gate_zero(b: &mut Builder, fa_zero: NetId, fb_zero: NetId, p: &[NetId]) -> Vec<NetId> {
+    let any_zero = b.or(fa_zero, fb_zero);
+    let live = b.not(any_zero);
+    b.gate_bus(live, p)
+}
+
+/// Mitchell LM netlist.
+pub fn build_mitchell(bits: usize) -> Netlist {
+    let mut b = Builder::new(&format!("mult_mitchell_{bits}b"));
+    let a_bus = b.input_bus("a", bits);
+    let b_bus = b.input_bus("b", bits);
+    let (term1, s2, fa, fb) = ap_datapath(&mut b, bits, &a_bus, &b_bus);
+    let p = crate::mult::pptree::cpa_gen(&mut b, &term1, &s2);
+    let p = gate_zero(&mut b, fa.is_zero, fb.is_zero, &p);
+    b.output_bus("p", &p);
+    let nl = b.finish();
+    nl.validate().expect("mitchell netlist must validate");
+    nl
+}
+
+/// Log-our netlist (Fig 3): AP datapath + EP compensation processing
+/// element (COMP, rounding, barrel shift) + OR-merge + Adder3.
+pub fn build_logour(bits: usize) -> Netlist {
+    let mut b = Builder::new(&format!("mult_logour_{bits}b"));
+    let a_bus = b.input_bus("a", bits);
+    let b_bus = b.input_bus("b", bits);
+    let width = 2 * bits;
+    let (term1, s2, fa, fb) = ap_datapath(&mut b, bits, &a_bus, &b_bus);
+
+    // --- EP processing element ---
+    // COMP: pick the larger residue.
+    let (q1_gt, _eq) = b.compare(&fa.q, &fb.q);
+    // big = q1_gt ? q1 : q2  (ties → q2, matches behavioral q1 >= q2 when
+    // equal only if values equal — identical results either way).
+    let big = b.mux_bus(q1_gt, &fb.q, &fa.q);
+    let small = b.mux_bus(q1_gt, &fa.q, &fb.q);
+    // round(big): exponent = msb(big) + [bit below msb set].
+    let lod_big = b.leading_one_detector(&big);
+    let kb = b.onehot_encode(&lod_big);
+    // roundup = OR over i>=1 of lod_big[i] & big[i-1]
+    let mut ups = Vec::new();
+    for i in 1..bits {
+        let t = b.and(lod_big[i], big[i - 1]);
+        ups.push(t);
+    }
+    let roundup = b.or_reduce(&ups);
+    // e = kb + roundup (kb width + 1).
+    let zero = b.zero();
+    let mut roundup_bus = vec![zero; kb.len()];
+    roundup_bus[0] = roundup;
+    let e = b.add_extend(&kb, &roundup_bus);
+    // comp = small << e (pure shift — the "adder-free" compensation).
+    let comp = b.barrel_shl(&small, &e, width);
+    // If big == 0 the EP is zero: comp must be forced to 0 (otherwise
+    // small<<0 = small would leak; note small <= big so small == 0 too —
+    // the gate keeps the netlist faithful to the spec regardless).
+    let big_any = b.or_reduce(&big);
+    let comp = b.gate_bus(big_any, &comp);
+
+    // OR-merge with the decoded 2^(k1+k2) (no carry possible, §III-C).
+    let merged = b.or_bus(&term1, &comp);
+    // Adder3.
+    let p = crate::mult::pptree::cpa_gen(&mut b, &merged, &s2);
+    let p = gate_zero(&mut b, fa.is_zero, fb.is_zero, &p);
+    b.output_bus("p", &p);
+    let nl = b.finish();
+    nl.validate().expect("logour netlist must validate");
+    nl
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn eval(nl: &Netlist, a: u64, b: u64) -> u64 {
+        let mut ops = BTreeMap::new();
+        ops.insert("a".to_string(), a);
+        ops.insert("b".to_string(), b);
+        nl.eval_uint(&ops)["p"]
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+    fn mitchell_netlist_matches_behavioral_exhaustive_8bit() {
+        let nl = build_mitchell(8);
+        for a in 0..256u64 {
+            for b in 0..256u64 {
+                assert_eq!(
+                    eval(&nl, a, b),
+                    mitchell_behavioral(8, a, b),
+                    "mitchell {a}*{b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+    fn logour_netlist_matches_behavioral_exhaustive_8bit() {
+        let nl = build_logour(8);
+        for a in 0..256u64 {
+            for b in 0..256u64 {
+                assert_eq!(
+                    eval(&nl, a, b),
+                    logour_behavioral(8, a, b),
+                    "logour {a}*{b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+    fn netlists_match_behavioral_16bit_sampled() {
+        let lm = build_mitchell(16);
+        let lo = build_logour(16);
+        crate::util::proptest::check(300, 0x10b2, |g| {
+            let a = g.u64_bits(16);
+            let b = g.u64_bits(16);
+            let m_ok = eval(&lm, a, b) == mitchell_behavioral(16, a, b);
+            let l_ok = eval(&lo, a, b) == logour_behavioral(16, a, b);
+            crate::util::proptest::prop_assert(m_ok && l_ok, format!("{a}*{b}"))
+        });
+    }
+
+    #[test]
+    fn exact_on_powers_of_two() {
+        // Both log multipliers are exact when both operands are powers of 2.
+        for i in 0..8 {
+            for j in 0..8 {
+                let a = 1u64 << i;
+                let b = 1u64 << j;
+                assert_eq!(mitchell_behavioral(8, a, b), a * b);
+                assert_eq!(logour_behavioral(8, a, b), a * b);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_operands() {
+        for x in [0u64, 1, 37, 255] {
+            assert_eq!(mitchell_behavioral(8, 0, x), 0);
+            assert_eq!(mitchell_behavioral(8, x, 0), 0);
+            assert_eq!(logour_behavioral(8, 0, x), 0);
+            assert_eq!(logour_behavioral(8, x, 0), 0);
+        }
+    }
+
+    #[test]
+    fn compensation_never_carries_into_leading_term() {
+        // The OR-merge invariant (Eq. 3): comp < 2^(k1+k2), exhaustively.
+        for a in 1..256u64 {
+            for b in 1..256u64 {
+                let k1 = 63 - a.leading_zeros();
+                let k2 = 63 - b.leading_zeros();
+                let q1 = a - (1 << k1);
+                let q2 = b - (1 << k2);
+                let (big, small) = if q1 >= q2 { (q1, q2) } else { (q2, q1) };
+                if big == 0 {
+                    continue;
+                }
+                let comp = small << super::round_pow2_exp(big);
+                assert!(
+                    comp < (1u64 << (k1 + k2)),
+                    "a={a} b={b}: comp {comp} >= 2^{}",
+                    k1 + k2
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn logour_strictly_more_accurate_than_mitchell() {
+        // Exhaustive 8-bit mean absolute error: the compensation must cut
+        // the error substantially (the paper reports NMED 4.4e-3 vs 2.8e-2).
+        let mut lm_err = 0f64;
+        let mut lo_err = 0f64;
+        for a in 0..256u64 {
+            for b in 0..256u64 {
+                let exact = (a * b) as i64;
+                lm_err += (mitchell_behavioral(8, a, b) as i64 - exact).abs() as f64;
+                lo_err += (logour_behavioral(8, a, b) as i64 - exact).abs() as f64;
+            }
+        }
+        assert!(
+            lo_err < 0.5 * lm_err,
+            "logour abs error {lo_err} not well below mitchell {lm_err}"
+        );
+    }
+
+    #[test]
+    fn mitchell_error_is_one_sided_underestimate() {
+        // Mitchell drops the (positive) EP, so it never overestimates.
+        for a in 0..256u64 {
+            for b in 0..256u64 {
+                assert!(mitchell_behavioral(8, a, b) <= a * b, "{a}*{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn round_pow2_nearest() {
+        assert_eq!(round_pow2_exp(1), 0); // 1 → 2^0
+        assert_eq!(round_pow2_exp(2), 1); // 2 → 2^1
+        assert_eq!(round_pow2_exp(3), 2); // 3 → 2^2 (over-estimate, 3 ≥ 1.5·2)
+        assert_eq!(round_pow2_exp(4), 2);
+        assert_eq!(round_pow2_exp(5), 2); // 5 < 6 → keep 2^2
+        assert_eq!(round_pow2_exp(6), 3); // 6 ≥ 6 → 2^3
+        assert_eq!(round_pow2_exp(7), 3);
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+    fn logour_gate_count_grows_slower_than_exact() {
+        // Table II: at 32 bits the log multiplier's logic is ~half the
+        // exact compressor tree; at 8 bits it is allowed to be bigger.
+        use super::super::pptree::build_exact;
+        let lo32 = build_logour(32).logic_gate_count();
+        let ex32 = build_exact(32).logic_gate_count();
+        assert!(
+            (lo32 as f64) < 0.8 * ex32 as f64,
+            "32b: logour {lo32} vs exact {ex32}"
+        );
+    }
+}

@@ -1,0 +1,59 @@
+//! The accuracy-configurable multiplier library — the paper's key
+//! contribution (§III-B, §III-C).
+//!
+//! Five families, all generated for arbitrary bit widths:
+//!
+//! | family       | paper role                                    |
+//! |--------------|-----------------------------------------------|
+//! | `Exact`      | exact 4-2-compressor (Dadda) multiplier       |
+//! | `Approx42`   | tunable approximate multiplier (Fig 2)        |
+//! | `LogOur`     | proposed logarithmic multiplier (Fig 3, Eq 3) |
+//! | `Mitchell`   | conventional LM [24] baseline                 |
+//! | `AdderTree`  | OpenC²-style adder-tree baseline              |
+//!
+//! Partial-product-tree families are written once against the [`fabric`]
+//! abstraction and instantiated both as gate netlists (for PPA / Verilog /
+//! flow) and as 64-lane bit-parallel software evaluators (for LUTs, error
+//! metrics and the image/NN applications). The logarithmic families have
+//! hand-built netlists (LOD + priority encoders + barrel shifters + COMP +
+//! OR-merge) checked exhaustively against independent integer behavioral
+//! models.
+
+pub mod fabric;
+pub mod compressor;
+pub mod pptree;
+pub mod logarithmic;
+pub mod behavioral;
+pub mod error_metrics;
+pub mod cli;
+
+use crate::config::spec::{MultFamily, MultSpec};
+use crate::gates::Netlist;
+
+/// Build the gate-level netlist for a multiplier spec.
+pub fn build_netlist(spec: &MultSpec) -> Netlist {
+    assert!(
+        !spec.signed,
+        "netlist generation targets the unsigned datapath; signed operation \
+         is a sign-magnitude wrapper handled at the PE level"
+    );
+    match &spec.family {
+        MultFamily::Exact => pptree::build_exact(spec.bits),
+        MultFamily::Approx42 {
+            compressor,
+            approx_cols,
+        } => pptree::build_approx42(spec.bits, *compressor, *approx_cols),
+        MultFamily::AdderTree => pptree::build_adder_tree(spec.bits),
+        MultFamily::LogOur => logarithmic::build_logour(spec.bits),
+        MultFamily::Mitchell => logarithmic::build_mitchell(spec.bits),
+    }
+}
+
+/// Unsigned behavioral model: `f(a, b) -> product` for the family at the
+/// given width. Bit-exact with the netlist (tested exhaustively at 8 bits).
+pub fn behavioral(
+    family: &MultFamily,
+    bits: usize,
+) -> Box<dyn Fn(u64, u64) -> u64 + Send + Sync> {
+    behavioral::behavioral_fn(family, bits)
+}

@@ -1,0 +1,528 @@
+//! Partial-product-tree multipliers (Fig 2): PP generation by AND gates,
+//! a configurable reduction tree (exact or approximate 4-2 compressors on
+//! selected low-order columns, full adders elsewhere), and a final
+//! carry-propagate adder. Plus the OpenC²-style adder-tree baseline.
+//!
+//! Everything is generic over [`Fabric`], so the same generator yields the
+//! gate netlist and the 64-lane software evaluator.
+
+use super::compressor::{approx42, exact42};
+use super::fabric::Fabric;
+use crate::config::spec::CompressorKind;
+use crate::gates::{Builder, Netlist};
+
+/// Generate the AND-gate partial-product matrix: `cols[w]` holds all PP
+/// bits of weight `2^w` (LSB-first operands).
+pub fn pp_matrix<F: Fabric>(f: &mut F, a: &[F::Bit], b: &[F::Bit]) -> Vec<Vec<F::Bit>> {
+    let n = a.len();
+    let m = b.len();
+    let mut cols: Vec<Vec<F::Bit>> = vec![Vec::new(); n + m];
+    for (i, &ai) in a.iter().enumerate() {
+        for (j, &bj) in b.iter().enumerate() {
+            let pp = f.and(ai, bj);
+            cols[i + j].push(pp);
+        }
+    }
+    cols
+}
+
+/// One reduction pass statistics (used by tests and the PPA report).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ReduceStats {
+    pub stages: usize,
+    pub exact_compressors: usize,
+    pub approx_compressors: usize,
+    pub full_adders: usize,
+    pub half_adders: usize,
+}
+
+/// Reduce the PP matrix to two rows with a compressor tree.
+///
+/// Columns with weight `< approx_cols` use the approximate design `kind`
+/// (the Fig 2 red box: for the paper's 8-bit default, columns #0..#7);
+/// all other columns use exact 4-2 compressors / full adders.
+pub fn reduce_tree<F: Fabric>(
+    f: &mut F,
+    mut cols: Vec<Vec<F::Bit>>,
+    approx_cols: usize,
+    kind: Option<CompressorKind>,
+    stats: &mut ReduceStats,
+) -> (Vec<F::Bit>, Vec<F::Bit>) {
+    let width = cols.len();
+    while cols.iter().any(|c| c.len() > 2) {
+        stats.stages += 1;
+        let mut next: Vec<Vec<F::Bit>> = vec![Vec::new(); width + 1];
+        for w in 0..width {
+            let bits = std::mem::take(&mut cols[w]);
+            let mut it = bits.into_iter().peekable();
+            let mut pending: Vec<F::Bit> = Vec::new();
+            while it.peek().is_some() {
+                pending.push(it.next().unwrap());
+                if pending.len() == 4 {
+                    let (x1, x2, x3, x4) = (pending[0], pending[1], pending[2], pending[3]);
+                    pending.clear();
+                    let approx_here = kind.is_some() && w < approx_cols;
+                    if approx_here {
+                        let (s, c) = approx42(f, kind.unwrap(), x1, x2, x3, x4);
+                        next[w].push(s);
+                        next[w + 1].push(c);
+                        stats.approx_compressors += 1;
+                    } else {
+                        let z = f.zero();
+                        let (s, c, co) = exact42(f, x1, x2, x3, x4, z);
+                        next[w].push(s);
+                        next[w + 1].push(c);
+                        next[w + 1].push(co);
+                        stats.exact_compressors += 1;
+                    }
+                }
+            }
+            match pending.len() {
+                3 => {
+                    let (s, c) = f.full_adder(pending[0], pending[1], pending[2]);
+                    next[w].push(s);
+                    next[w + 1].push(c);
+                    stats.full_adders += 1;
+                }
+                2 => {
+                    // Pass through; a half adder here would not reduce the
+                    // critical column count and only burns area (Dadda rule).
+                    next[w].push(pending[0]);
+                    next[w].push(pending[1]);
+                }
+                1 => next[w].push(pending[0]),
+                0 => {}
+                _ => unreachable!(),
+            }
+        }
+        next.truncate(width); // weights >= 2^width overflow the product; drop
+        cols = next;
+    }
+    let z = f.zero();
+    let mut row1 = Vec::with_capacity(width);
+    let mut row2 = Vec::with_capacity(width);
+    for col in cols {
+        row1.push(*col.first().unwrap_or(&z));
+        row2.push(*col.get(1).unwrap_or(&z));
+    }
+    (row1, row2)
+}
+
+/// Generic ripple-carry addition (final CPA), truncated to the input width.
+pub fn ripple_add_gen<F: Fabric>(f: &mut F, a: &[F::Bit], b: &[F::Bit]) -> Vec<F::Bit> {
+    assert_eq!(a.len(), b.len());
+    let mut carry = f.zero();
+    let mut out = Vec::with_capacity(a.len());
+    for i in 0..a.len() {
+        let (s, c) = f.full_adder(a[i], b[i], carry);
+        out.push(s);
+        carry = c;
+    }
+    out
+}
+
+/// Carry-select addition: blocks computed for both carry-in values in
+/// parallel, selected by a short mux chain. Delay ≈ one block of ripple +
+/// one mux per block instead of a full-width ripple — this is what keeps
+/// the 16/32-bit multipliers' critical paths inside the SRAM-dominated
+/// 5.2 ns clock (Table II). ~2× the adder area of plain ripple.
+pub fn select_add_gen<F: Fabric>(f: &mut F, a: &[F::Bit], b: &[F::Bit]) -> Vec<F::Bit> {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let block = 4usize.max(n / 8);
+    let mut out = Vec::with_capacity(n);
+    let mut carry = f.zero();
+    let mut start = 0;
+    while start < n {
+        let end = (start + block).min(n);
+        let mut c0 = f.zero();
+        let mut c1 = f.one();
+        let mut sum0 = Vec::with_capacity(end - start);
+        let mut sum1 = Vec::with_capacity(end - start);
+        for i in start..end {
+            let (s, c) = f.full_adder(a[i], b[i], c0);
+            sum0.push(s);
+            c0 = c;
+            let (s, c) = f.full_adder(a[i], b[i], c1);
+            sum1.push(s);
+            c1 = c;
+        }
+        for j in 0..sum0.len() {
+            out.push(f.mux(carry, sum0[j], sum1[j]));
+        }
+        carry = f.mux(carry, c0, c1);
+        start = end;
+    }
+    out
+}
+
+/// Kogge–Stone parallel-prefix addition: O(log n) depth, O(n log n) gates.
+/// The fastest CPA in the library; used for wide final adders where the
+/// ripple (or even carry-select) chain would blow the SRAM-dominated clock.
+pub fn prefix_add_gen<F: Fabric>(f: &mut F, a: &[F::Bit], b: &[F::Bit]) -> Vec<F::Bit> {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    if n == 0 {
+        return vec![];
+    }
+    let p0: Vec<F::Bit> = (0..n).map(|i| f.xor(a[i], b[i])).collect();
+    let mut g: Vec<F::Bit> = (0..n).map(|i| f.and(a[i], b[i])).collect();
+    let mut p = p0.clone();
+    let mut step = 1;
+    while step < n {
+        let mut g2 = g.clone();
+        let mut p2 = p.clone();
+        for i in (step..n).rev() {
+            let t = f.and(p[i], g[i - step]);
+            g2[i] = f.or(g[i], t);
+            p2[i] = f.and(p[i], p[i - step]);
+        }
+        g = g2;
+        p = p2;
+        step *= 2;
+    }
+    // carry into bit i is G[i-1]; sum = p0 ^ carry_in.
+    let mut out = Vec::with_capacity(n);
+    out.push(p0[0]);
+    for i in 1..n {
+        out.push(f.xor(p0[i], g[i - 1]));
+    }
+    out
+}
+
+/// Final CPA selection: ripple for narrow words, parallel-prefix for wide.
+pub fn cpa_gen<F: Fabric>(f: &mut F, a: &[F::Bit], b: &[F::Bit]) -> Vec<F::Bit> {
+    if a.len() >= 12 {
+        prefix_add_gen(f, a, b)
+    } else {
+        ripple_add_gen(f, a, b)
+    }
+}
+
+/// Full generic PP-tree multiplier: returns the 2n product bits.
+pub fn multiply_pptree<F: Fabric>(
+    f: &mut F,
+    a: &[F::Bit],
+    b: &[F::Bit],
+    approx_cols: usize,
+    kind: Option<CompressorKind>,
+    stats: &mut ReduceStats,
+) -> Vec<F::Bit> {
+    let cols = pp_matrix(f, a, b);
+    let (r1, r2) = reduce_tree(f, cols, approx_cols, kind, stats);
+    cpa_gen(f, &r1, &r2)
+}
+
+/// OpenC²-style baseline: PP rows summed by a binary adder tree built from
+/// ripple adders (no compressors). More gates than the compressor tree.
+pub fn multiply_adder_tree<F: Fabric>(f: &mut F, a: &[F::Bit], b: &[F::Bit]) -> Vec<F::Bit> {
+    let n = a.len();
+    let m = b.len();
+    let width = n + m;
+    let z = f.zero();
+    // Row j = (a AND b[j]) << j, width 2n.
+    let mut rows: Vec<Vec<F::Bit>> = (0..m)
+        .map(|j| {
+            let mut row = vec![z; width];
+            for (i, &ai) in a.iter().enumerate() {
+                row[i + j] = f.and(ai, b[j]);
+            }
+            row
+        })
+        .collect();
+    // Binary tree of ripple adders.
+    while rows.len() > 1 {
+        let mut next = Vec::with_capacity(rows.len().div_ceil(2));
+        let mut it = rows.into_iter();
+        while let Some(r1) = it.next() {
+            match it.next() {
+                Some(r2) => next.push(cpa_gen(f, &r1, &r2)),
+                None => next.push(r1),
+            }
+        }
+        rows = next;
+    }
+    rows.pop().unwrap_or_else(|| vec![z; width])
+}
+
+// ---- netlist front-ends -----------------------------------------------
+
+fn build_common(
+    name: &str,
+    bits: usize,
+    gen: impl FnOnce(&mut Builder, &[crate::gates::NetId], &[crate::gates::NetId]) -> Vec<crate::gates::NetId>,
+) -> Netlist {
+    let mut b = Builder::new(name);
+    let a_bus = b.input_bus("a", bits);
+    let b_bus = b.input_bus("b", bits);
+    let p = gen(&mut b, &a_bus, &b_bus);
+    assert_eq!(p.len(), 2 * bits);
+    b.output_bus("p", &p);
+    let nl = b.finish();
+    nl.validate().expect("generated netlist must validate");
+    nl
+}
+
+/// Exact 4-2-compressor multiplier netlist.
+pub fn build_exact(bits: usize) -> Netlist {
+    build_common(&format!("mult_exact_{bits}b"), bits, |f, a, b| {
+        let mut st = ReduceStats::default();
+        multiply_pptree(f, a, b, 0, None, &mut st)
+    })
+}
+
+/// Tunable approximate multiplier netlist (Fig 2).
+pub fn build_approx42(bits: usize, kind: CompressorKind, approx_cols: usize) -> Netlist {
+    build_common(
+        &format!("mult_appro42_{}_{}c_{bits}b", kind.name(), approx_cols),
+        bits,
+        |f, a, b| {
+            let mut st = ReduceStats::default();
+            multiply_pptree(f, a, b, approx_cols, Some(kind), &mut st)
+        },
+    )
+}
+
+/// OpenC²-style adder-tree multiplier netlist (baseline).
+pub fn build_adder_tree(bits: usize) -> Netlist {
+    build_common(&format!("mult_addertree_{bits}b"), bits, |f, a, b| {
+        multiply_adder_tree(f, a, b)
+    })
+}
+
+/// Software multiply via the same generator (single sample).
+pub fn soft_multiply(
+    bits: usize,
+    approx_cols: usize,
+    kind: Option<CompressorKind>,
+    a: u64,
+    b: u64,
+) -> u64 {
+    use super::fabric::{broadcast_bits, SoftFabric};
+    let mut f = SoftFabric;
+    let av = broadcast_bits(a, bits);
+    let bv = broadcast_bits(b, bits);
+    let mut st = ReduceStats::default();
+    let p = multiply_pptree(&mut f, &av, &bv, approx_cols, kind, &mut st);
+    p.iter()
+        .enumerate()
+        .fold(0u64, |acc, (i, &w)| acc | ((w & 1) << i))
+}
+
+/// Software multiply, 64 (a, b) pairs at once (lane-sliced).
+pub fn soft_multiply_lanes(
+    bits: usize,
+    approx_cols: usize,
+    kind: Option<CompressorKind>,
+    a_vals: &[u64],
+    b_vals: &[u64],
+) -> Vec<u64> {
+    use super::fabric::{pack_lanes, unpack_lanes, SoftFabric};
+    assert_eq!(a_vals.len(), b_vals.len());
+    assert!(a_vals.len() <= 64);
+    let mut f = SoftFabric;
+    let av = pack_lanes(a_vals, bits);
+    let bv = pack_lanes(b_vals, bits);
+    let mut st = ReduceStats::default();
+    let p = multiply_pptree(&mut f, &av, &bv, approx_cols, kind, &mut st);
+    unpack_lanes(&p, a_vals.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn eval_netlist_mult(nl: &Netlist, a: u64, b: u64) -> u64 {
+        let mut ops = BTreeMap::new();
+        ops.insert("a".to_string(), a);
+        ops.insert("b".to_string(), b);
+        nl.eval_uint(&ops)["p"]
+    }
+
+    #[test]
+    fn exact_multiplier_exhaustive_6bit() {
+        let nl = build_exact(6);
+        for a in 0..64u64 {
+            for b in 0..64u64 {
+                assert_eq!(eval_netlist_mult(&nl, a, b), a * b, "{a}*{b}");
+            }
+        }
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+    fn exact_multiplier_8bit_spot_plus_lanes() {
+        // Exhaustive via 64-lane software evaluation (fast), netlist spot.
+        let nl = build_exact(8);
+        for a in (0..256u64).step_by(17) {
+            for b in (0..256u64).step_by(13) {
+                assert_eq!(eval_netlist_mult(&nl, a, b), a * b);
+            }
+        }
+        // lanes: all 65536 pairs
+        let mut pairs_a = Vec::with_capacity(64);
+        let mut pairs_b = Vec::with_capacity(64);
+        for a in 0..256u64 {
+            for b in 0..256u64 {
+                pairs_a.push(a);
+                pairs_b.push(b);
+                if pairs_a.len() == 64 {
+                    let prods = soft_multiply_lanes(8, 0, None, &pairs_a, &pairs_b);
+                    for ((&x, &y), p) in pairs_a.iter().zip(&pairs_b).zip(prods) {
+                        assert_eq!(p, x * y);
+                    }
+                    pairs_a.clear();
+                    pairs_b.clear();
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+    fn adder_tree_is_exact() {
+        let nl = build_adder_tree(6);
+        for a in (0..64u64).step_by(3) {
+            for b in 0..64u64 {
+                assert_eq!(eval_netlist_mult(&nl, a, b), a * b, "{a}*{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn adder_tree_costs_more_gates_than_compressor_tree() {
+        // The paper's Table II premise: OpenC² (adder tree) > Exact (4-2).
+        for bits in [8, 16] {
+            let at = build_adder_tree(bits).logic_gate_count();
+            let ex = build_exact(bits).logic_gate_count();
+            assert!(
+                at > ex,
+                "{bits}b: adder-tree {at} should exceed compressor-tree {ex}"
+            );
+        }
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+    fn approx_netlist_matches_soft_fabric_exhaustive_8bit() {
+        use crate::config::spec::CompressorKind;
+        let kind = CompressorKind::Yang1;
+        let nl = build_approx42(8, kind, 8);
+        let mut pa = Vec::new();
+        let mut pb = Vec::new();
+        let mut expect = Vec::new();
+        for a in (0..256u64).step_by(5) {
+            for b in (0..256u64).step_by(7) {
+                pa.push(a);
+                pb.push(b);
+                expect.push(eval_netlist_mult(&nl, a, b));
+                if pa.len() == 64 {
+                    let got = soft_multiply_lanes(8, 8, Some(kind), &pa, &pb);
+                    assert_eq!(got, expect);
+                    pa.clear();
+                    pb.clear();
+                    expect.clear();
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+    fn approx_zero_cols_equals_exact() {
+        use crate::config::spec::CompressorKind;
+        // approx_cols = 0 must degrade to the exact multiplier.
+        for a in (0..256u64).step_by(11) {
+            for b in (0..256u64).step_by(19) {
+                let p = soft_multiply(8, 0, Some(CompressorKind::Yang1), a, b);
+                assert_eq!(p, a * b);
+            }
+        }
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+    fn approx_error_bounded_by_column_budget() {
+        use crate::config::spec::CompressorKind;
+        // With approximate compressors only on columns < 8, the error is
+        // bounded by a small multiple of 2^8.
+        let mut max_err = 0i64;
+        for a in (0..256u64).step_by(3) {
+            for b in (0..256u64).step_by(3) {
+                let p = soft_multiply(8, 8, Some(CompressorKind::Yang1), a, b) as i64;
+                let e = (p - (a * b) as i64).abs();
+                max_err = max_err.max(e);
+            }
+        }
+        assert!(max_err > 0, "approximation must actually approximate");
+        assert!(
+            max_err < 8 * 256,
+            "error {max_err} exceeds the column budget"
+        );
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+    fn more_approx_cols_means_more_error_fewer_gates() {
+        use crate::config::spec::CompressorKind;
+        let kind = CompressorKind::Yang1;
+        let mut prev_gates = usize::MAX;
+        let mut prev_err = -1f64;
+        for cols in [0usize, 4, 8, 12] {
+            let nl = build_approx42(8, kind, cols);
+            let gates = nl.logic_gate_count();
+            // mean |error| over a sample grid
+            let mut err_sum = 0f64;
+            let mut n = 0f64;
+            for a in (0..256u64).step_by(7) {
+                for b in (0..256u64).step_by(7) {
+                    let p = soft_multiply(8, cols, Some(kind), a, b) as i64;
+                    err_sum += ((p - (a * b) as i64).abs()) as f64;
+                    n += 1.0;
+                }
+            }
+            let err = err_sum / n;
+            assert!(gates <= prev_gates, "gate count must not grow with cols");
+            assert!(err >= prev_err, "error must not shrink with cols");
+            prev_gates = gates;
+            prev_err = err;
+        }
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+    fn sixteen_bit_exact_sampled() {
+        let nl = build_exact(16);
+        crate::util::proptest::check(200, 0x16b1, |g| {
+            let a = g.u64_bits(16);
+            let b = g.u64_bits(16);
+            let p = eval_netlist_mult(&nl, a, b);
+            crate::util::proptest::prop_assert(p == a * b, format!("{a}*{b} got {p}"))
+        });
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+    fn thirtytwo_bit_exact_sampled() {
+        let nl = build_exact(32);
+        crate::util::proptest::check(50, 0x32b1, |g| {
+            let a = g.u64_bits(32);
+            let b = g.u64_bits(32);
+            let p = eval_netlist_mult(&nl, a, b);
+            crate::util::proptest::prop_assert(p == a * b, format!("{a}*{b} got {p}"))
+        });
+    }
+
+    #[test]
+    fn reduce_stats_populated() {
+        let mut f = super::super::fabric::SoftFabric;
+        let a = super::super::fabric::broadcast_bits(0xAB, 8);
+        let b = super::super::fabric::broadcast_bits(0xCD, 8);
+        let mut st = ReduceStats::default();
+        let _ = multiply_pptree(&mut f, &a, &b, 8, Some(CompressorKind::Yang1), &mut st);
+        assert!(st.stages >= 2);
+        assert!(st.approx_compressors > 0);
+        assert!(st.exact_compressors > 0); // upper columns stay exact
+    }
+}

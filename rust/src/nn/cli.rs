@@ -1,0 +1,177 @@
+//! `openacm nn` — reproduce Table IV: Top-1/Top-5 + NMED/MRED per
+//! multiplier family on the quantized CNN.
+//!
+//! Two execution paths over the same artifacts:
+//! * `--engine native` (default) — the Rust-native quantized forward;
+//! * `--engine pjrt` — the AOT JAX graph through the PJRT runtime (the
+//!   production path; also used by `openacm serve`).
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+use super::eval::{topk_accuracy, EvalResult};
+use super::model::QuantCnn;
+use crate::bench::harness::{sci, Table};
+use crate::config::spec::MultFamily;
+use crate::mult::behavioral::paper_families;
+use crate::mult::error_metrics;
+use crate::runtime::{client, ArtifactStore};
+use crate::util::cli::Args;
+
+/// One Table IV row.
+#[derive(Clone, Debug)]
+pub struct NnRow {
+    pub family: String,
+    pub result: EvalResult,
+    pub nmed: f64,
+    pub mred: f64,
+}
+
+/// Evaluate all families natively over `limit` test images.
+pub fn eval_native(store: &ArtifactStore, limit: usize) -> Result<Vec<NnRow>> {
+    let cnn = QuantCnn::load(&store.dir)?;
+    let n = store.n_images.min(limit);
+    let mut rows = Vec::new();
+    for (name, family) in paper_families() {
+        let lut = store
+            .luts
+            .get(&name)
+            .with_context(|| format!("missing LUT {name}"))?;
+        let mut logits = Vec::with_capacity(n);
+        for i in 0..n {
+            logits.push(cnn.forward(lut, store.image(i)));
+        }
+        let result = topk_accuracy(&logits, &store.labels[..n]);
+        let (nmed, mred) = family_error(&family);
+        rows.push(NnRow {
+            family: family.paper_label().to_string(),
+            result,
+            nmed,
+            mred,
+        });
+    }
+    Ok(rows)
+}
+
+/// Evaluate all families through the PJRT-compiled AOT graph.
+pub fn eval_pjrt(store: &ArtifactStore, limit: usize) -> Result<Vec<NnRow>> {
+    let rt = crate::runtime::Runtime::cpu()?;
+    let model = rt.compile_hlo_text(&store.model_hlo)?;
+    let n = store.n_images.min(limit);
+    let b = store.batch;
+    let weight_lits = client::weight_literals(&store.weights)?;
+    let mut rows = Vec::new();
+    for (name, family) in paper_families() {
+        let lut = store
+            .luts
+            .get(&name)
+            .with_context(|| format!("missing LUT {name}"))?;
+        let lut_lit = client::literal_i32(&[65536], lut)?;
+        let mut logits: Vec<Vec<f32>> = Vec::with_capacity(n);
+        let mut i = 0;
+        while i < n {
+            let take = (n - i).min(b);
+            // Pad the batch with the last image.
+            let mut batch_px = vec![0i32; b * 256];
+            for j in 0..b {
+                let src = store.image((i + j).min(n - 1));
+                for (k, &p) in src.iter().enumerate() {
+                    batch_px[j * 256 + k] = p as i32;
+                }
+            }
+            let img_lit = client::literal_i32(&[b, 16, 16], &batch_px)?;
+            let mut args = vec![img_lit, lut_lit.clone()];
+            args.extend(weight_lits.iter().cloned());
+            let out = model.run_f32(&args, b * 10)?;
+            for j in 0..take {
+                logits.push(out[j * 10..(j + 1) * 10].to_vec());
+            }
+            i += take;
+        }
+        let result = topk_accuracy(&logits, &store.labels[..n]);
+        let (nmed, mred) = family_error(&family);
+        rows.push(NnRow {
+            family: family.paper_label().to_string(),
+            result,
+            nmed,
+            mred,
+        });
+    }
+    Ok(rows)
+}
+
+fn family_error(family: &MultFamily) -> (f64, f64) {
+    match family {
+        MultFamily::Exact | MultFamily::AdderTree => (0.0, 0.0),
+        _ => {
+            let r = error_metrics::exhaustive(family, 8);
+            (r.nmed, r.mred)
+        }
+    }
+}
+
+/// Render Table IV.
+pub fn render_table4(rows: &[NnRow]) -> Table {
+    let mut t = Table::new(
+        "Table IV: approximate multipliers on the quantized CNN",
+        &["Multiplier", "Top-1", "Top-5", "NMED", "MRED"],
+    );
+    for r in rows {
+        let (nmed, mred) = if r.nmed == 0.0 {
+            ("-".to_string(), "-".to_string())
+        } else {
+            (sci(r.nmed), sci(r.mred))
+        };
+        t.row(&[
+            r.family.clone(),
+            format!("{:.3}", r.result.top1),
+            format!("{:.3}", r.result.top5),
+            nmed,
+            mred,
+        ]);
+    }
+    t
+}
+
+pub fn cmd_nn(args: &Args) -> Result<()> {
+    let dir = args
+        .get("artifacts")
+        .map(Path::new)
+        .map(Path::to_path_buf)
+        .unwrap_or_else(ArtifactStore::default_dir);
+    let store = ArtifactStore::load(&dir)?;
+    let limit = args.usize_or("limit", 512)?;
+    let rows = match args.str_or("engine", "native") {
+        "pjrt" => eval_pjrt(&store, limit)?,
+        _ => eval_native(&store, limit)?,
+    };
+    render_table4(&rows).print();
+    println!(
+        "\npaper reference (ResNet-18/ImageNet): Exact .677/.873, Appro4-2 .668/.880,\n\
+         Log-our .680/.870, LM .610/.842; NMED appro << logour << lm"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders() {
+        let rows = vec![NnRow {
+            family: "Exact".into(),
+            result: EvalResult {
+                top1: 0.9,
+                top5: 1.0,
+                n: 100,
+            },
+            nmed: 0.0,
+            mred: 0.0,
+        }];
+        let s = render_table4(&rows).render();
+        assert!(s.contains("Exact"));
+        assert!(s.contains("0.900"));
+        assert!(s.contains("-"));
+    }
+}

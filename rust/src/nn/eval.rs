@@ -1,0 +1,57 @@
+//! Top-1 / Top-5 accuracy scoring (Table IV's metrics).
+
+/// Accuracy result.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EvalResult {
+    pub top1: f64,
+    pub top5: f64,
+    pub n: usize,
+}
+
+/// Score a batch of logits rows against labels.
+pub fn topk_accuracy(logits: &[Vec<f32>], labels: &[usize]) -> EvalResult {
+    assert_eq!(logits.len(), labels.len());
+    let mut top1 = 0usize;
+    let mut top5 = 0usize;
+    for (row, &label) in logits.iter().zip(labels) {
+        let mut idx: Vec<usize> = (0..row.len()).collect();
+        idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap());
+        if idx[0] == label {
+            top1 += 1;
+        }
+        if idx.iter().take(5).any(|&i| i == label) {
+            top5 += 1;
+        }
+    }
+    EvalResult {
+        top1: top1 as f64 / labels.len().max(1) as f64,
+        top5: top5 as f64 / labels.len().max(1) as f64,
+        n: labels.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_and_near_miss() {
+        let logits = vec![
+            vec![0.1, 0.9, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0], // top1 = 1
+            vec![0.5, 0.4, 0.3, 0.2, 0.15, 0.1, 0.0, 0.0, 0.0, 0.0], // label 4 in top5
+        ];
+        let r = topk_accuracy(&logits, &[1, 4]);
+        assert_eq!(r.top1, 0.5);
+        assert_eq!(r.top5, 1.0);
+    }
+
+    #[test]
+    fn top5_contains_top1() {
+        let logits: Vec<Vec<f32>> = (0..20)
+            .map(|i| (0..10).map(|j| ((i * j) % 7) as f32).collect())
+            .collect();
+        let labels: Vec<usize> = (0..20).map(|i| i % 10).collect();
+        let r = topk_accuracy(&logits, &labels);
+        assert!(r.top5 >= r.top1);
+    }
+}

@@ -1,0 +1,24 @@
+//! Neural-network evaluation under approximate multipliers (paper §V-B,
+//! Table IV).
+//!
+//! The paper runs a pre-trained ResNet-18 on ILSVRC2012 with every multiply
+//! replaced by an approximate multiplier; our substitution (DESIGN.md §3)
+//! is a small CNN trained (build-time, in JAX) on a deterministic synthetic
+//! 10-class dataset, with the identical multiplier-substitution protocol:
+//! int8 sign-magnitude quantization, every conv/fc product routed through
+//! the 8-bit multiplier LUT.
+//!
+//! * [`quant`] — the static symmetric quantization scheme (mirrors
+//!   `python/compile/mults.py` / `model.py` exactly);
+//! * [`model`] — the Rust-native quantized CNN forward (LUT matmul), used
+//!   to cross-check the AOT JAX graph and as a no-artifacts fallback;
+//! * [`eval`] — Top-1/Top-5 scoring;
+//! * [`cli`] — `openacm nn`: Table IV (accuracy + NMED/MRED).
+
+pub mod quant;
+pub mod model;
+pub mod eval;
+pub mod cli;
+
+pub use eval::{topk_accuracy, EvalResult};
+pub use model::QuantCnn;

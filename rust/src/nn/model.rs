@@ -1,0 +1,254 @@
+//! Rust-native quantized CNN forward — the mirror of
+//! `python/compile/model.py` (same architecture, same static quantization,
+//! same LUT-routed multiplies). Used to cross-check the AOT JAX graph and
+//! as a fallback evaluator when PJRT artifacts are absent.
+//!
+//! Architecture (16×16×1 input, 10 classes):
+//!   conv3x3(1→8) + relu + maxpool2 → conv3x3(8→16) + relu + maxpool2
+//!   → flatten(2·2·16=64)… wait: 16→14→7→5→2 — flatten 2×2×16 = 64
+//!   → fc(64→32) + relu → fc(32→10).
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+use super::quant::{lut_matmul, quantize_all};
+use crate::util::npy;
+
+/// One quantized layer: int8 weights + scales.
+#[derive(Clone, Debug)]
+pub struct QuantLayer {
+    /// Quantized weights, layout documented per use.
+    pub w_q: Vec<i8>,
+    pub w_scale: f32,
+    /// Input activation scale (calibrated).
+    pub in_scale: f32,
+    /// float bias.
+    pub bias: Vec<f32>,
+}
+
+/// The full quantized CNN.
+#[derive(Clone, Debug)]
+pub struct QuantCnn {
+    /// conv1: [out=8, in=1, 3, 3] flattened as (9) × 8 matrix after im2col.
+    pub conv1: QuantLayer,
+    /// conv2: [out=16, in=8, 3, 3] → (72) × 16.
+    pub conv2: QuantLayer,
+    /// fc1: 64 × 32.
+    pub fc1: QuantLayer,
+    /// fc2: 32 × 10.
+    pub fc2: QuantLayer,
+}
+
+pub const IMG: usize = 16;
+pub const C1_OUT: usize = 8;
+pub const C2_OUT: usize = 16;
+pub const FC1_OUT: usize = 32;
+pub const CLASSES: usize = 10;
+
+fn im2col(
+    input: &[f32],
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+) -> (Vec<f32>, usize, usize) {
+    // input layout HWC; output rows = (h-k+1)*(w-k+1), cols = k*k*c
+    let oh = h - k + 1;
+    let ow = w - k + 1;
+    let cols = k * k * c;
+    let mut out = vec![0f32; oh * ow * cols];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let row = oy * ow + ox;
+            let mut idx = 0;
+            for ky in 0..k {
+                for kx in 0..k {
+                    for ch in 0..c {
+                        out[row * cols + idx] = input[((oy + ky) * w + (ox + kx)) * c + ch];
+                        idx += 1;
+                    }
+                }
+            }
+        }
+    }
+    (out, oh * ow, cols)
+}
+
+fn relu(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        if *x < 0.0 {
+            *x = 0.0;
+        }
+    }
+}
+
+fn maxpool2(input: &[f32], h: usize, w: usize, c: usize) -> (Vec<f32>, usize, usize) {
+    let oh = h / 2;
+    let ow = w / 2;
+    let mut out = vec![f32::MIN; oh * ow * c];
+    for y in 0..oh {
+        for x in 0..ow {
+            for ch in 0..c {
+                let mut m = f32::MIN;
+                for dy in 0..2 {
+                    for dx in 0..2 {
+                        m = m.max(input[((2 * y + dy) * w + (2 * x + dx)) * c + ch]);
+                    }
+                }
+                out[(y * ow + x) * c + ch] = m;
+            }
+        }
+    }
+    (out, oh, ow)
+}
+
+impl QuantCnn {
+    /// Quantized conv/fc as im2col + LUT matmul + bias.
+    fn layer_forward(
+        &self,
+        lut: &[i32],
+        layer: &QuantLayer,
+        input: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> Vec<f32> {
+        let a_q = quantize_all(input, layer.in_scale);
+        let mut out = lut_matmul(lut, &a_q, &layer.w_q, m, k, n, layer.in_scale, layer.w_scale);
+        for row in 0..m {
+            for j in 0..n {
+                out[row * n + j] += layer.bias[j];
+            }
+        }
+        out
+    }
+
+    /// Forward one image (u8 16×16 grayscale) → 10 logits.
+    pub fn forward(&self, lut: &[i32], image: &[u8]) -> Vec<f32> {
+        assert_eq!(image.len(), IMG * IMG);
+        // Normalize to [0,1].
+        let x: Vec<f32> = image.iter().map(|&p| p as f32 / 255.0).collect();
+        // conv1
+        let (cols, m, k) = im2col(&x, IMG, IMG, 1, 3);
+        let mut h1 = self.layer_forward(lut, &self.conv1, &cols, m, k, C1_OUT);
+        relu(&mut h1);
+        let (p1, h1h, h1w) = maxpool2(&h1, IMG - 2, IMG - 2, C1_OUT);
+        // conv2
+        let (cols2, m2, k2) = im2col(&p1, h1h, h1w, C1_OUT, 3);
+        let mut h2 = self.layer_forward(lut, &self.conv2, &cols2, m2, k2, C2_OUT);
+        relu(&mut h2);
+        let (p2, p2h, p2w) = maxpool2(&h2, h1h - 2, h1w - 2, C2_OUT);
+        // flatten → fc1 → fc2
+        let flat_len = p2h * p2w * C2_OUT;
+        let mut h3 = self.layer_forward(lut, &self.fc1, &p2, 1, flat_len, FC1_OUT);
+        relu(&mut h3);
+        self.layer_forward(lut, &self.fc2, &h3, 1, FC1_OUT, CLASSES)
+    }
+
+    /// Load from the artifacts directory written by `python/compile/aot.py`
+    /// (weights/{name}_q.npy int8-as-i32, weights/{name}_b.npy f32, and
+    /// weights/scales.npy = [in1, w1, in2, w2, in3, w3, in4, w4]).
+    pub fn load(dir: &Path) -> Result<QuantCnn> {
+        let wdir = dir.join("weights");
+        let (_, scales) = npy::read_f32(&wdir.join("scales.npy"))
+            .context("reading scales.npy — run `make artifacts` first")?;
+        if scales.len() != 8 {
+            bail!("scales.npy must have 8 entries, got {}", scales.len());
+        }
+        let load_layer = |name: &str, in_scale: f32, w_scale: f32| -> Result<QuantLayer> {
+            let (_, wq) = npy::read_i32(&wdir.join(format!("{name}_q.npy")))?;
+            let (_, bias) = npy::read_f32(&wdir.join(format!("{name}_b.npy")))?;
+            Ok(QuantLayer {
+                w_q: wq.iter().map(|&v| v as i8).collect(),
+                w_scale,
+                in_scale,
+                bias,
+            })
+        };
+        Ok(QuantCnn {
+            conv1: load_layer("conv1", scales[0], scales[1])?,
+            conv2: load_layer("conv2", scales[2], scales[3])?,
+            fc1: load_layer("fc1", scales[4], scales[5])?,
+            fc2: load_layer("fc2", scales[6], scales[7])?,
+        })
+    }
+
+    /// A tiny deterministic random model (for tests without artifacts).
+    pub fn random(seed: u64) -> QuantCnn {
+        let mut rng = crate::util::rng::Pcg32::new(seed);
+        let mut mk = |k: usize, n: usize, in_scale: f32| -> QuantLayer {
+            let w_q: Vec<i8> = (0..k * n)
+                .map(|_| (rng.below(255) as i64 - 127) as i8)
+                .collect();
+            QuantLayer {
+                w_q,
+                w_scale: 0.02,
+                in_scale,
+                bias: (0..n).map(|_| (rng.next_f64() as f32 - 0.5) * 0.1).collect(),
+            }
+        };
+        QuantCnn {
+            conv1: mk(9, C1_OUT, 1.0 / 127.0),
+            conv2: mk(72, C2_OUT, 0.05),
+            fc1: mk(64, FC1_OUT, 0.05),
+            fc2: mk(FC1_OUT, CLASSES, 0.05),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::spec::MultFamily;
+    use crate::mult::behavioral::int8_lut;
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+    fn forward_shapes_and_determinism() {
+        let cnn = QuantCnn::random(7);
+        let lut = int8_lut(&MultFamily::Exact);
+        let img: Vec<u8> = (0..256).map(|i| (i * 7 % 256) as u8).collect();
+        let a = cnn.forward(&lut, &img);
+        let b = cnn.forward(&lut, &img);
+        assert_eq!(a.len(), 10);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+    fn different_luts_give_close_but_different_logits() {
+        let cnn = QuantCnn::random(3);
+        let exact = int8_lut(&MultFamily::Exact);
+        let logour = int8_lut(&MultFamily::LogOur);
+        let img: Vec<u8> = (0..256).map(|i| ((i * 13) % 256) as u8).collect();
+        let le = cnn.forward(&exact, &img);
+        let ll = cnn.forward(&logour, &img);
+        assert_ne!(le, ll);
+        let scale: f32 = le.iter().map(|x| x.abs()).sum::<f32>() / 10.0;
+        let dev: f32 = le
+            .iter()
+            .zip(&ll)
+            .map(|(a, b)| (a - b).abs())
+            .sum::<f32>()
+            / 10.0;
+        assert!(dev < 0.5 * scale, "dev {dev} vs scale {scale}");
+    }
+
+    #[test]
+    fn im2col_reference() {
+        // 3x3 single-channel input, k=2 → 4 rows of 4 values.
+        let x: Vec<f32> = (1..=9).map(|v| v as f32).collect();
+        let (cols, m, k) = super::im2col(&x, 3, 3, 1, 2);
+        assert_eq!((m, k), (4, 4));
+        assert_eq!(&cols[0..4], &[1.0, 2.0, 4.0, 5.0]);
+        assert_eq!(&cols[12..16], &[5.0, 6.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn maxpool_reference() {
+        let x = vec![1.0, 2.0, 3.0, 4.0]; // 2x2x1
+        let (p, h, w) = super::maxpool2(&x, 2, 2, 1);
+        assert_eq!((h, w), (1, 1));
+        assert_eq!(p, vec![4.0]);
+    }
+}

@@ -1,0 +1,128 @@
+//! Static symmetric int8 quantization — bit-compatible with the Python
+//! build path (`python/compile/model.py::quantize`).
+//!
+//! `q = clamp(round(x / scale), -127, 127)` with a per-tensor scale fixed
+//! at calibration time. Products are looked up in the 256×256 LUT indexed
+//! by the two int8 bit patterns; accumulation is exact i64.
+
+/// Quantize one value.
+#[inline]
+pub fn quantize(x: f32, scale: f32) -> i8 {
+    let q = (x / scale).round();
+    q.clamp(-127.0, 127.0) as i8
+}
+
+/// Quantize a slice.
+pub fn quantize_all(xs: &[f32], scale: f32) -> Vec<i8> {
+    xs.iter().map(|&x| quantize(x, scale)).collect()
+}
+
+/// Calibrate a symmetric scale from data: `max|x| / 127` (never zero).
+pub fn calibrate(xs: &[f32]) -> f32 {
+    let m = xs.iter().fold(0f32, |a, &x| a.max(x.abs()));
+    (m / 127.0).max(1e-8)
+}
+
+/// LUT lookup of an int8×int8 product.
+#[inline]
+pub fn lut_product(lut: &[i32], a: i8, b: i8) -> i32 {
+    lut[(((a as u8) as usize) << 8) | ((b as u8) as usize)]
+}
+
+/// Quantized matmul through the LUT: `A (m×k, int8) × B (k×n, int8)` with
+/// i64 accumulation, dequantized by `scale_a * scale_b`.
+pub fn lut_matmul(
+    lut: &[i32],
+    a: &[i8],
+    b: &[i8],
+    m: usize,
+    k: usize,
+    n: usize,
+    scale_a: f32,
+    scale_b: f32,
+) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let s = scale_a * scale_b;
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc: i64 = 0;
+            for p in 0..k {
+                acc += lut_product(lut, a[i * k + p], b[p * n + j]) as i64;
+            }
+            out[i * n + j] = acc as f32 * s;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::spec::MultFamily;
+    use crate::mult::behavioral::int8_lut;
+
+    #[test]
+    fn quantize_roundtrip_and_clamp() {
+        assert_eq!(quantize(0.0, 0.1), 0);
+        assert_eq!(quantize(1.0, 0.1), 10);
+        assert_eq!(quantize(-1.0, 0.1), -10);
+        assert_eq!(quantize(100.0, 0.1), 127); // clamp
+        assert_eq!(quantize(-100.0, 0.1), -127);
+    }
+
+    #[test]
+    fn calibrate_covers_range() {
+        let xs = [0.5f32, -2.0, 1.0];
+        let s = calibrate(&xs);
+        assert!((s - 2.0 / 127.0).abs() < 1e-9);
+        assert_eq!(quantize(-2.0, s), -127);
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+    fn exact_lut_matmul_matches_float_matmul() {
+        let lut = int8_lut(&MultFamily::Exact);
+        // A 2x3, B 3x2 with exactly-representable values.
+        let sa = 0.5f32;
+        let sb = 0.25f32;
+        let a_f = [1.0f32, -2.0, 3.0, 0.5, 2.5, -1.5];
+        let b_f = [0.25f32, 0.5, -0.75, 1.0, 0.25, -0.5];
+        let a_q = quantize_all(&a_f, sa);
+        let b_q = quantize_all(&b_f, sb);
+        let out = lut_matmul(&lut, &a_q, &b_q, 2, 3, 2, sa, sb);
+        // reference float matmul on the dequantized values
+        for i in 0..2 {
+            for j in 0..2 {
+                let mut r = 0f32;
+                for p in 0..3 {
+                    r += (a_q[i * 3 + p] as f32 * sa) * (b_q[p * 2 + j] as f32 * sb);
+                }
+                assert!((out[i * 2 + j] - r).abs() < 1e-5, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+    fn approx_lut_matmul_is_close() {
+        let exact = int8_lut(&MultFamily::Exact);
+        let logour = int8_lut(&MultFamily::LogOur);
+        let sa = 0.02f32;
+        let sb = 0.03f32;
+        let a: Vec<i8> = (0..64).map(|i| ((i * 37) % 255) as i64 as i8).collect();
+        let b: Vec<i8> = (0..64).map(|i| ((i * 91) % 251) as i64 as i8).collect();
+        let oe = lut_matmul(&exact, &a, &b, 8, 8, 8, sa, sb);
+        let ol = lut_matmul(&logour, &a, &b, 8, 8, 8, sa, sb);
+        let ref_norm: f32 = oe.iter().map(|x| x.abs()).sum::<f32>() / oe.len() as f32;
+        let err: f32 = oe
+            .iter()
+            .zip(&ol)
+            .map(|(x, y)| (x - y).abs())
+            .sum::<f32>()
+            / oe.len() as f32;
+        assert!(err > 0.0, "logour must differ from exact");
+        assert!(err < 0.2 * ref_norm, "relative error too large: {err} vs {ref_norm}");
+    }
+}

@@ -1,0 +1,56 @@
+//! Input/output buffer sizing: the PE's register budget, costed as DFFs by
+//! the PPA engine and emitted by the Verilog writer.
+
+use crate::config::spec::MacroSpec;
+
+/// Register counts for one PE.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RegisterBudget {
+    /// Input operand buffer (one word).
+    pub input_regs: usize,
+    /// Output product buffer (double width).
+    pub output_regs: usize,
+    /// Address counter.
+    pub addr_regs: usize,
+    /// FSM state + handshake flops.
+    pub ctrl_regs: usize,
+}
+
+impl RegisterBudget {
+    pub fn total(&self) -> usize {
+        self.input_regs + self.output_regs + self.addr_regs + self.ctrl_regs
+    }
+}
+
+/// Size the buffers for a macro spec.
+pub fn budget(spec: &MacroSpec) -> RegisterBudget {
+    let addr_bits = (usize::BITS - (spec.sram.rows - 1).leading_zeros()) as usize;
+    RegisterBudget {
+        input_regs: spec.mult.bits,
+        output_regs: 2 * spec.mult.bits,
+        addr_regs: addr_bits,
+        // 2 FSM bits + start/valid/ready synchronizers.
+        ctrl_regs: 2 + 4,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::spec::{MacroSpec, MultFamily};
+
+    #[test]
+    fn budget_for_paper_configs() {
+        let spec = MacroSpec::new("x", 16, 8, MultFamily::Exact);
+        let b = budget(&spec);
+        assert_eq!(b.input_regs, 8);
+        assert_eq!(b.output_regs, 16);
+        assert_eq!(b.addr_regs, 4);
+        assert_eq!(b.total(), 8 + 16 + 4 + 6);
+
+        let spec32 = MacroSpec::new("y", 64, 32, MultFamily::Exact);
+        let b32 = budget(&spec32);
+        assert_eq!(b32.addr_regs, 6);
+        assert_eq!(b32.output_regs, 64);
+    }
+}

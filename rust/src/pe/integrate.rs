@@ -1,0 +1,155 @@
+//! Behavioral PE: SRAM macro + behavioral multiplier + control sequencing.
+//!
+//! Models the paper's PE operation (§III-A): initialize the SRAM with
+//! stored operands, then stream inputs; each cycle reads a row and
+//! multiplies it with the incoming operand. A MAC mode accumulates across
+//! rows (the CiM dot-product primitive used by the NN workloads).
+
+use anyhow::Result;
+
+use super::control;
+use crate::config::spec::MacroSpec;
+use crate::mult;
+use crate::sram::macro_gen::SramMacro;
+
+/// Cycle-accurate-ish behavioral PE.
+pub struct ProcessingElement {
+    pub spec: MacroSpec,
+    sram: SramMacro,
+    mult_fn: Box<dyn Fn(u64, u64) -> u64 + Send + Sync>,
+    state: u64,
+    /// Cycles spent per FSM state (energy/throughput accounting).
+    pub cycles: u64,
+    pub mults_done: u64,
+}
+
+impl ProcessingElement {
+    pub fn new(spec: &MacroSpec) -> Result<Self> {
+        spec.validate()?;
+        let sram = SramMacro::generate(&spec.sram)?;
+        let mult_fn = mult::behavioral(&spec.mult.family, spec.mult.bits);
+        Ok(Self {
+            spec: spec.clone(),
+            sram,
+            mult_fn,
+            state: control::IDLE,
+            cycles: 0,
+            mults_done: 0,
+        })
+    }
+
+    /// LOAD phase: store operand words (weights) into the SRAM.
+    pub fn load_weights(&mut self, weights: &[u64]) -> Result<()> {
+        self.state = control::next_state(self.state, true, false);
+        assert_eq!(self.state, control::LOAD);
+        for (i, &w) in weights.iter().enumerate() {
+            self.sram.write(i, w)?;
+            let last = i + 1 == weights.len();
+            self.cycles += 1;
+            self.state = control::next_state(self.state, false, last);
+        }
+        assert_eq!(self.state, control::COMPUTE);
+        Ok(())
+    }
+
+    /// COMPUTE phase: one input against one stored row → product.
+    pub fn compute(&mut self, row: usize, input: u64) -> Result<u64> {
+        assert_eq!(self.state, control::COMPUTE, "PE must be in COMPUTE");
+        let w = self.sram.read(row)?;
+        self.cycles += 1;
+        self.mults_done += 1;
+        Ok((self.mult_fn)(input, w))
+    }
+
+    /// Dot product of the input vector against stored rows `0..inputs.len()`
+    /// (the CiM MAC primitive). Accumulates in u128 to avoid overflow.
+    pub fn dot(&mut self, inputs: &[u64]) -> Result<u128> {
+        let mut acc: u128 = 0;
+        for (row, &x) in inputs.iter().enumerate() {
+            acc += self.compute(row, x)? as u128;
+        }
+        Ok(acc)
+    }
+
+    /// Finish: DRAIN back to IDLE.
+    pub fn finish(&mut self) {
+        self.state = control::next_state(self.state, false, true);
+        self.state = control::next_state(self.state, false, false);
+        assert_eq!(self.state, control::IDLE);
+    }
+
+    /// Access counts for energy accounting.
+    pub fn sram_reads(&self) -> u64 {
+        self.sram.reads
+    }
+
+    pub fn sram_writes(&self) -> u64 {
+        self.sram.writes
+    }
+
+    /// Generate the (input, stored) pairs a workload produces — used to
+    /// drive the gate-level activity simulation with the *same* operand
+    /// stream the PE saw (Table II methodology).
+    pub fn workload_pairs(weights: &[u64], inputs: &[u64]) -> Vec<(u64, u64)> {
+        inputs
+            .iter()
+            .flat_map(|&x| weights.iter().map(move |&w| (x, w)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::spec::{MacroSpec, MultFamily};
+
+    fn pe(family: MultFamily) -> ProcessingElement {
+        ProcessingElement::new(&MacroSpec::new("t", 16, 8, family)).unwrap()
+    }
+
+    #[test]
+    fn exact_pe_computes_products() {
+        let mut p = pe(MultFamily::Exact);
+        p.load_weights(&[3, 5, 7, 9]).unwrap();
+        assert_eq!(p.compute(0, 10).unwrap(), 30);
+        assert_eq!(p.compute(3, 11).unwrap(), 99);
+        p.finish();
+        assert_eq!(p.sram_writes(), 4);
+        assert_eq!(p.sram_reads(), 2);
+        assert_eq!(p.mults_done, 2);
+    }
+
+    #[test]
+    fn dot_product_accumulates() {
+        let mut p = pe(MultFamily::Exact);
+        p.load_weights(&[1, 2, 3, 4]).unwrap();
+        // 10*1 + 20*2 + 30*3 + 40*4 = 300
+        assert_eq!(p.dot(&[10, 20, 30, 40]).unwrap(), 300);
+    }
+
+    #[test]
+    fn approx_pe_is_close_but_not_exact() {
+        let mut p = pe(MultFamily::LogOur);
+        p.load_weights(&[100, 200]).unwrap();
+        let r = p.compute(0, 123).unwrap() as i64;
+        let exact = 12300i64;
+        assert!(r != 0);
+        assert!(
+            ((r - exact).abs() as f64) / (exact as f64) < 0.25,
+            "{r} vs {exact}"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "COMPUTE")]
+    fn compute_before_load_is_a_protocol_error() {
+        let mut p = pe(MultFamily::Exact);
+        let _ = p.compute(0, 1);
+    }
+
+    #[test]
+    fn workload_pair_generation() {
+        let pairs = ProcessingElement::workload_pairs(&[1, 2], &[10, 20]);
+        assert_eq!(pairs, vec![(10, 1), (10, 2), (20, 1), (20, 2)]);
+    }
+}

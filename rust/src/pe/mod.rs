@@ -1,0 +1,21 @@
+//! PE (processing element) compiler — paper §III-A component 1.
+//!
+//! The PE wraps one SRAM macro and one multiplier: it first initializes the
+//! SRAM with stored operands (weights), then streams input operands against
+//! stored rows, producing products (and optionally accumulating). This
+//! module provides:
+//!
+//! * [`control`] — the control FSM's combinational next-state/output logic
+//!   as a gate netlist plus its register budget (the sequential state is
+//!   costed as DFFs by the PPA engine and emitted by the Verilog writer);
+//! * [`buffers`] — input/output buffer sizing;
+//! * [`integrate`] — the cycle-level behavioral PE used by the examples,
+//!   the Table II workload generator and the serving coordinator's energy
+//!   accounting.
+
+pub mod control;
+pub mod buffers;
+pub mod integrate;
+
+pub use buffers::RegisterBudget;
+pub use integrate::ProcessingElement;

@@ -1,0 +1,106 @@
+//! Area model: standard-cell area aggregation plus the placement/routing
+//! overhead that turns cell area into placed ("P&R") area.
+
+use crate::gates::Netlist;
+use crate::ppa::cells::CellLibrary;
+
+/// Nangate45 DFF_X1 footprint (µm²) — registers are not part of the
+/// combinational IR, so PE-level register counts are costed separately.
+pub const DFF_AREA_UM2: f64 = 4.522;
+/// DFF leakage, nW.
+pub const DFF_LEAKAGE_NW: f64 = 65.0;
+/// DFF internal + clock-pin energy per clock cycle, fJ (CK toggles twice).
+pub const DFF_ENERGY_PER_CYCLE_FJ: f64 = 1.8;
+
+/// Typical standard-cell placement utilization for a small macro —
+/// OpenROAD's default floorplans for blocks in this size class place at
+/// 60–75%; we use the midpoint and keep it here as a calibration constant.
+pub const PLACEMENT_UTILIZATION: f64 = 0.68;
+
+/// Area breakdown of the logic part of a DCiM macro.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LogicArea {
+    /// Combinational standard-cell area, µm².
+    pub comb_um2: f64,
+    /// Register (DFF) area, µm².
+    pub regs_um2: f64,
+    /// Placed area = (comb + regs) / utilization, µm².
+    pub placed_um2: f64,
+}
+
+/// Sum standard-cell area of a netlist.
+pub fn netlist_cell_area_um2(nl: &Netlist, lib: &CellLibrary) -> f64 {
+    nl.gates()
+        .iter()
+        .map(|g| lib.cell(g.kind).area_um2)
+        .sum()
+}
+
+/// Logic area for a netlist plus `n_dffs` registers.
+pub fn logic_area(nl: &Netlist, lib: &CellLibrary, n_dffs: usize) -> LogicArea {
+    let comb = netlist_cell_area_um2(nl, lib);
+    let regs = n_dffs as f64 * DFF_AREA_UM2;
+    LogicArea {
+        comb_um2: comb,
+        regs_um2: regs,
+        placed_um2: (comb + regs) / PLACEMENT_UTILIZATION,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+    fn area_ordering_across_families_16bit() {
+        // Table II, 32×16 row ordering: AdderTree > Exact > Appro4-2 ≥ Log.
+        let lib = CellLibrary::nangate45();
+        let at = netlist_cell_area_um2(&crate::mult::pptree::build_adder_tree(16), &lib);
+        let ex = netlist_cell_area_um2(&crate::mult::pptree::build_exact(16), &lib);
+        let ap = netlist_cell_area_um2(
+            &crate::mult::pptree::build_approx42(
+                16,
+                crate::config::spec::CompressorKind::Yang1,
+                16,
+            ),
+            &lib,
+        );
+        let lo = netlist_cell_area_um2(&crate::mult::logarithmic::build_logour(16), &lib);
+        assert!(at > ex, "adder-tree {at} <= exact {ex}");
+        assert!(ap < ex, "appro {ap} >= exact {ex}");
+        assert!(lo < ex, "log {lo} >= exact {ex}");
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+    fn area_32bit_log_cuts_half() {
+        // Table II: Log-our cuts logic area by ~51% at 64×32.
+        let lib = CellLibrary::nangate45();
+        let ex = netlist_cell_area_um2(&crate::mult::pptree::build_exact(32), &lib);
+        let lo = netlist_cell_area_um2(&crate::mult::logarithmic::build_logour(32), &lib);
+        let ratio = lo / ex;
+        assert!(
+            ratio < 0.75,
+            "32-bit log/exact area ratio {ratio:.2} not << 1"
+        );
+    }
+
+    #[test]
+    fn placed_area_exceeds_cell_area() {
+        let lib = CellLibrary::nangate45();
+        let nl = crate::mult::pptree::build_exact(8);
+        let la = logic_area(&nl, &lib, 40);
+        assert!(la.placed_um2 > la.comb_um2 + la.regs_um2);
+        assert!(la.regs_um2 > 100.0); // 40 DFFs
+    }
+
+    #[test]
+    fn eight_bit_multiplier_area_plausible() {
+        // The full 16×8 macro's logic lands near 1 kµm² in Table II; the
+        // bare 8-bit multiplier's cell area must be a few hundred µm².
+        let lib = CellLibrary::nangate45();
+        let a = netlist_cell_area_um2(&crate::mult::pptree::build_exact(8), &lib);
+        assert!(a > 100.0 && a < 1500.0, "area {a}");
+    }
+}

@@ -1,0 +1,214 @@
+//! FreePDK45-class standard-cell library model.
+//!
+//! Numbers are calibrated to the Nangate 45 nm Open Cell Library (the
+//! library the paper's OpenROAD/FreePDK45 flow maps to): X1 drive cells,
+//! 1.1 V, 25 °C, typical corner. Sources: Nangate45 datasheet areas
+//! (site 0.19×1.4 µm), typical-corner timing in the 10–40 ps class for
+//! X1 drives under FO4-ish loads, and leakage in the tens of nW. These
+//! constants are intentionally centralized here — they are the *only*
+//! calibration surface of the PPA engine (DESIGN.md §7).
+
+use crate::gates::GateKind;
+
+/// Electrical and physical parameters of one cell.
+#[derive(Clone, Copy, Debug)]
+pub struct Cell {
+    /// Layout area, µm².
+    pub area_um2: f64,
+    /// Input pin capacitance, fF (per pin).
+    pub pin_cap_ff: f64,
+    /// Intrinsic (zero-load) delay, ps.
+    pub intrinsic_ps: f64,
+    /// Drive resistance, kΩ — delay = intrinsic + R · C_load.
+    pub drive_kohm: f64,
+    /// Leakage power, nW.
+    pub leakage_nw: f64,
+    /// Internal energy per output toggle, fJ (short-circuit + internal cap).
+    pub internal_fj: f64,
+}
+
+/// The standard-cell library: one entry per [`GateKind`].
+#[derive(Clone, Debug)]
+pub struct CellLibrary {
+    /// Supply voltage, V.
+    pub vdd: f64,
+    /// Wire capacitance added per fanout endpoint, fF (wire-load model).
+    pub wire_cap_per_fanout_ff: f64,
+}
+
+impl Default for CellLibrary {
+    fn default() -> Self {
+        Self::nangate45()
+    }
+}
+
+impl CellLibrary {
+    /// Nangate45 / FreePDK45 typical corner.
+    pub fn nangate45() -> Self {
+        Self {
+            vdd: 1.1,
+            wire_cap_per_fanout_ff: 0.6,
+        }
+    }
+
+    /// Cell parameters for a gate kind (X1 drives).
+    pub fn cell(&self, kind: GateKind) -> Cell {
+        // Areas: Nangate45 X1 cells (site = 0.266 µm² per unit width).
+        // INV_X1 0.532, NAND2_X1/NOR2_X1 0.798, AND2/OR2 1.064 (NAND+INV),
+        // XOR2/XNOR2 1.596, MUX2 1.862.
+        match kind {
+            GateKind::Const0 | GateKind::Const1 | GateKind::Input => Cell {
+                area_um2: 0.0,
+                pin_cap_ff: 0.0,
+                intrinsic_ps: 0.0,
+                drive_kohm: 0.0,
+                leakage_nw: 0.0,
+                internal_fj: 0.0,
+            },
+            GateKind::Buf => Cell {
+                area_um2: 0.798,
+                pin_cap_ff: 1.0,
+                intrinsic_ps: 18.0,
+                drive_kohm: 5.0,
+                leakage_nw: 15.0,
+                internal_fj: 0.35,
+            },
+            GateKind::Not => Cell {
+                area_um2: 0.532,
+                pin_cap_ff: 1.2,
+                intrinsic_ps: 8.0,
+                drive_kohm: 6.0,
+                leakage_nw: 12.0,
+                internal_fj: 0.25,
+            },
+            GateKind::Nand2 => Cell {
+                area_um2: 0.798,
+                pin_cap_ff: 1.2,
+                intrinsic_ps: 12.0,
+                drive_kohm: 7.0,
+                leakage_nw: 18.0,
+                internal_fj: 0.40,
+            },
+            GateKind::Nor2 => Cell {
+                area_um2: 0.798,
+                pin_cap_ff: 1.3,
+                intrinsic_ps: 14.0,
+                drive_kohm: 8.5,
+                leakage_nw: 17.0,
+                internal_fj: 0.42,
+            },
+            GateKind::And2 => Cell {
+                area_um2: 1.064,
+                pin_cap_ff: 1.1,
+                intrinsic_ps: 20.0,
+                drive_kohm: 5.5,
+                leakage_nw: 25.0,
+                internal_fj: 0.55,
+            },
+            GateKind::Or2 => Cell {
+                area_um2: 1.064,
+                pin_cap_ff: 1.1,
+                intrinsic_ps: 22.0,
+                drive_kohm: 5.5,
+                leakage_nw: 24.0,
+                internal_fj: 0.55,
+            },
+            GateKind::Xor2 => Cell {
+                area_um2: 1.596,
+                pin_cap_ff: 1.8,
+                intrinsic_ps: 30.0,
+                drive_kohm: 6.0,
+                leakage_nw: 38.0,
+                internal_fj: 0.85,
+            },
+            GateKind::Xnor2 => Cell {
+                area_um2: 1.596,
+                pin_cap_ff: 1.8,
+                intrinsic_ps: 30.0,
+                drive_kohm: 6.0,
+                leakage_nw: 38.0,
+                internal_fj: 0.85,
+            },
+            GateKind::Mux2 => Cell {
+                area_um2: 1.862,
+                pin_cap_ff: 1.4,
+                intrinsic_ps: 28.0,
+                drive_kohm: 6.5,
+                leakage_nw: 42.0,
+                internal_fj: 0.80,
+            },
+        }
+    }
+
+    /// Load capacitance seen by a net: sum of sink pin caps + wire cap.
+    /// `sink_kinds` are the gate kinds of the fanout pins.
+    pub fn net_load_ff(&self, sink_kinds: &[GateKind], extra_load_ff: f64) -> f64 {
+        let pins: f64 = sink_kinds.iter().map(|&k| self.cell(k).pin_cap_ff).sum();
+        pins + self.wire_cap_per_fanout_ff * sink_kinds.len() as f64 + extra_load_ff
+    }
+
+    /// Gate delay driving a given load.
+    pub fn delay_ps(&self, kind: GateKind, load_ff: f64) -> f64 {
+        let c = self.cell(kind);
+        // R[kΩ] × C[fF] → ps  (1 kΩ × 1 fF = 1 ps)
+        c.intrinsic_ps + c.drive_kohm * load_ff
+    }
+
+    /// Dynamic energy of one output toggle driving `load_ff`:
+    /// ½·C·V² (switching) + internal energy.
+    pub fn toggle_energy_fj(&self, kind: GateKind, load_ff: f64) -> f64 {
+        let c = self.cell(kind);
+        0.5 * load_ff * self.vdd * self.vdd + c.internal_fj
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inverter_is_smallest_logic_cell() {
+        let lib = CellLibrary::nangate45();
+        let inv = lib.cell(GateKind::Not).area_um2;
+        for k in [
+            GateKind::And2,
+            GateKind::Or2,
+            GateKind::Xor2,
+            GateKind::Nand2,
+            GateKind::Mux2,
+        ] {
+            assert!(lib.cell(k).area_um2 >= inv);
+        }
+        assert_eq!(lib.cell(GateKind::Input).area_um2, 0.0);
+    }
+
+    #[test]
+    fn delay_grows_with_load() {
+        let lib = CellLibrary::nangate45();
+        let d0 = lib.delay_ps(GateKind::Nand2, 1.0);
+        let d1 = lib.delay_ps(GateKind::Nand2, 10.0);
+        assert!(d1 > d0);
+        // FO4-class delay should be tens of ps, not ns.
+        assert!(d0 > 5.0 && d0 < 100.0);
+    }
+
+    #[test]
+    fn xor_costs_more_than_nand() {
+        let lib = CellLibrary::nangate45();
+        assert!(lib.cell(GateKind::Xor2).area_um2 > lib.cell(GateKind::Nand2).area_um2);
+        assert!(
+            lib.toggle_energy_fj(GateKind::Xor2, 2.0)
+                > lib.toggle_energy_fj(GateKind::Nand2, 2.0)
+        );
+    }
+
+    #[test]
+    fn net_load_accumulates_pins_and_wire() {
+        let lib = CellLibrary::nangate45();
+        let l1 = lib.net_load_ff(&[GateKind::Nand2], 0.0);
+        let l4 = lib.net_load_ff(&[GateKind::Nand2; 4], 0.0);
+        assert!(l4 > 3.0 * l1);
+        let ext = lib.net_load_ff(&[], 500.0); // 0.5 pF output pad
+        assert_eq!(ext, 500.0);
+    }
+}

@@ -1,0 +1,108 @@
+//! `openacm ppa` — print Table II rows for one or all configurations.
+
+use anyhow::Result;
+
+use super::report::{analyze_macro, MacroPpa};
+use crate::bench::harness::{sci, Table};
+use crate::config::spec::{MacroSpec, MultFamily};
+use crate::util::cli::Args;
+
+/// Parse a multiplier family from CLI-ish strings.
+pub fn parse_family(s: &str, _bits: usize, compressor: &str, approx_cols: usize) -> Result<MultFamily> {
+    Ok(match s {
+        "exact" => MultFamily::Exact,
+        "logour" | "log-our" => MultFamily::LogOur,
+        "mitchell" | "lm" => MultFamily::Mitchell,
+        "adder_tree" | "openc2" => MultFamily::AdderTree,
+        "appro42" | "approx42" => MultFamily::Approx42 {
+            compressor: crate::config::spec::CompressorKind::parse(compressor)?,
+            approx_cols,
+        },
+        other => anyhow::bail!("unknown multiplier family {other:?}"),
+    })
+}
+
+/// Compute the full Table II (3 sizes × 4 families).
+pub fn full_table2(n_ops: usize, seed: u64) -> Vec<MacroPpa> {
+    let mut rows = Vec::new();
+    for (r, b) in [(16usize, 8usize), (32, 16), (64, 32)] {
+        for fam in MacroSpec::table2_families(b) {
+            let spec = MacroSpec::new(&format!("dcim{r}x{b}"), r, b, fam);
+            rows.push(analyze_macro(&spec, n_ops, seed));
+        }
+    }
+    rows
+}
+
+/// Render Table II in the paper's layout.
+pub fn render_table2(rows: &[MacroPpa]) -> Table {
+    let mut t = Table::new(
+        "Table II: post-layout PPA of SRAM-multiplier systems (100 MHz, 0.5 pF)",
+        &[
+            "SRAM", "Multiplier", "Delay (ns)", "Logic (um2)", "SRAM (um2)", "P&R (um2)",
+            "Power (W)",
+        ],
+    );
+    for r in rows {
+        t.row(&[
+            r.name.clone(),
+            r.family_label.clone(),
+            format!("{:.2}", r.delay_ns),
+            format!("{:.0}", r.logic_area_um2),
+            format!("{:.0}", r.sram_area_um2),
+            format!("{:.0}", r.pnr_area_um2),
+            sci(r.power_w),
+        ]);
+    }
+    t
+}
+
+pub fn cmd_ppa(args: &Args) -> Result<()> {
+    let n_ops = args.usize_or("ops", 2000)?;
+    let seed = args.u64_or("seed", 0x7AB1E2)?;
+    match args.get("rows") {
+        None => {
+            // Full table.
+            let rows = full_table2(n_ops, seed);
+            render_table2(&rows).print();
+        }
+        Some(r) => {
+            let rows: usize = r.parse()?;
+            let bits = args.usize_or("word-bits", 8)?;
+            let fam = parse_family(
+                args.str_or("mult", "exact"),
+                bits,
+                args.str_or("compressor", "yang1"),
+                args.usize_or("approx-cols", bits)?,
+            )?;
+            let spec = MacroSpec::new(&format!("dcim{rows}x{bits}"), rows, bits, fam);
+            let row = analyze_macro(&spec, n_ops, seed);
+            render_table2(&[row]).print();
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn family_parsing() {
+        assert_eq!(parse_family("exact", 8, "yang1", 8).unwrap(), MultFamily::Exact);
+        assert!(matches!(
+            parse_family("appro42", 8, "kong", 6).unwrap(),
+            MultFamily::Approx42 { approx_cols: 6, .. }
+        ));
+        assert!(parse_family("nope", 8, "yang1", 8).is_err());
+    }
+
+    #[test]
+    fn table_render_smoke() {
+        let spec = MacroSpec::new("dcim16x8", 16, 8, MultFamily::Exact);
+        let row = analyze_macro(&spec, 200, 1);
+        let s = render_table2(&[row]).render();
+        assert!(s.contains("dcim16x8"));
+        assert!(s.contains("Exact"));
+    }
+}

@@ -1,0 +1,24 @@
+//! PPA engine: the substitution for OpenROAD + OpenSTA + FreePDK45 signoff
+//! (see DESIGN.md §3).
+//!
+//! * [`cells`] — a FreePDK45(Nangate45)-class standard-cell model: area,
+//!   pin capacitance, intrinsic delay, drive resistance and leakage per
+//!   gate kind. All calibration constants live there.
+//! * [`timing`] — topological static timing analysis with a load-dependent
+//!   linear delay model; reports the critical path.
+//! * [`power`] — dynamic power from simulated switching activity
+//!   (P = α·C·V²·f) plus state-independent leakage.
+//! * [`area`] — cell area plus a placement-density/routing overhead factor
+//!   (the "P&R" column of Table II).
+//! * [`report`] — assembles the Table II row for one macro spec:
+//!   delay (SRAM access dominated), logic/SRAM/P&R area, total power.
+
+pub mod cells;
+pub mod timing;
+pub mod power;
+pub mod area;
+pub mod report;
+pub mod cli;
+
+pub use cells::CellLibrary;
+pub use report::{analyze_macro, MacroPpa};

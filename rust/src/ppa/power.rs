@@ -1,0 +1,171 @@
+//! Power model: dynamic power from simulated switching activity plus
+//! leakage.
+//!
+//! `P_dyn = Σ_net toggles(net)/transitions · E_toggle(net) · f_clk` where
+//! `E_toggle = ½·C_load·V² + E_internal`. The switching activity comes from
+//! the gate simulator running the *same multiplication workload* on every
+//! multiplier variant, which is exactly the paper's methodology ("all
+//! designs are evaluated using the same multiplication workloads").
+
+use crate::gates::{GateKind, Netlist};
+use crate::ppa::cells::CellLibrary;
+use crate::sim::activity::ActivityReport;
+
+/// Power breakdown, W.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PowerReport {
+    pub dynamic_w: f64,
+    pub leakage_w: f64,
+}
+
+impl PowerReport {
+    pub fn total_w(&self) -> f64 {
+        self.dynamic_w + self.leakage_w
+    }
+}
+
+/// Compute power for a netlist given its activity under a workload.
+///
+/// * `clock_hz` — vector rate (one multiplication per cycle);
+/// * `output_load_ff` — external load on primary outputs.
+pub fn analyze(
+    nl: &Netlist,
+    lib: &CellLibrary,
+    activity: &ActivityReport,
+    clock_hz: f64,
+    output_load_ff: f64,
+) -> PowerReport {
+    let gates = nl.gates();
+    assert_eq!(activity.toggles.len(), gates.len());
+    let mut sinks: Vec<Vec<GateKind>> = vec![Vec::new(); gates.len()];
+    for g in gates {
+        for k in 0..g.kind.arity() {
+            sinks[g.inputs[k].idx()].push(g.kind);
+        }
+    }
+    let mut is_output = vec![false; gates.len()];
+    for (_, id) in nl.outputs() {
+        is_output[id.idx()] = true;
+    }
+    let transitions = activity.transitions.max(1) as f64;
+    let mut dyn_fj_per_cycle = 0f64;
+    let mut leak_nw = 0f64;
+    for (i, g) in gates.iter().enumerate() {
+        let cell = lib.cell(g.kind);
+        leak_nw += cell.leakage_nw;
+        if matches!(
+            g.kind,
+            GateKind::Input | GateKind::Const0 | GateKind::Const1
+        ) {
+            continue;
+        }
+        let extra = if is_output[i] { output_load_ff } else { 0.0 };
+        let load = lib.net_load_ff(&sinks[i], extra);
+        let alpha = activity.toggles[i] as f64 / transitions;
+        dyn_fj_per_cycle += alpha * lib.toggle_energy_fj(g.kind, load);
+    }
+    PowerReport {
+        // fJ/cycle × cycles/s → fW → W
+        dynamic_w: dyn_fj_per_cycle * clock_hz * 1e-15,
+        leakage_w: leak_nw * 1e-9,
+    }
+}
+
+/// Energy per operation (J/op) — the headline metric for the
+/// accuracy-energy trade-off figure.
+pub fn energy_per_op_j(report: &PowerReport, clock_hz: f64) -> f64 {
+    report.total_w() / clock_hz
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::activity::{activity_bitparallel, mult_workload_vectors};
+    use crate::util::rng::Pcg32;
+
+    fn random_workload(bits: usize, n: usize, seed: u64) -> Vec<(u64, u64)> {
+        let mut rng = Pcg32::new(seed);
+        (0..n)
+            .map(|_| {
+                (
+                    rng.below(1 << bits) as u64,
+                    rng.below(1 << bits) as u64,
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn idle_workload_is_leakage_only() {
+        let nl = crate::mult::pptree::build_exact(8);
+        let lib = CellLibrary::nangate45();
+        let vectors = mult_workload_vectors(8, &[(0, 0); 100]);
+        let act = activity_bitparallel(&nl, &vectors);
+        let p = analyze(&nl, &lib, &act, 100e6, 0.0);
+        assert_eq!(p.dynamic_w, 0.0);
+        assert!(p.leakage_w > 0.0);
+    }
+
+    #[test]
+    fn power_scales_with_frequency() {
+        let nl = crate::mult::pptree::build_exact(8);
+        let lib = CellLibrary::nangate45();
+        let act = activity_bitparallel(
+            &nl,
+            &mult_workload_vectors(8, &random_workload(8, 500, 1)),
+        );
+        let p100 = analyze(&nl, &lib, &act, 100e6, 0.0);
+        let p200 = analyze(&nl, &lib, &act, 200e6, 0.0);
+        assert!((p200.dynamic_w / p100.dynamic_w - 2.0).abs() < 1e-9);
+        assert_eq!(p200.leakage_w, p100.leakage_w);
+    }
+
+    #[test]
+    fn approx_multiplier_uses_less_power_than_exact() {
+        // The Table II premise at the logic level: same workload, fewer
+        // gates and toggles → less power.
+        let lib = CellLibrary::nangate45();
+        let wl = random_workload(8, 2000, 2);
+        let vex = mult_workload_vectors(8, &wl);
+        let exact = crate::mult::pptree::build_exact(8);
+        let appro = crate::mult::pptree::build_approx42(
+            8,
+            crate::config::spec::CompressorKind::Yang1,
+            8,
+        );
+        let p_ex = analyze(
+            &exact,
+            &lib,
+            &activity_bitparallel(&exact, &vex),
+            100e6,
+            500.0,
+        );
+        let p_ap = analyze(
+            &appro,
+            &lib,
+            &activity_bitparallel(&appro, &vex),
+            100e6,
+            500.0,
+        );
+        assert!(
+            p_ap.total_w() < p_ex.total_w(),
+            "appro {} >= exact {}",
+            p_ap.total_w(),
+            p_ex.total_w()
+        );
+    }
+
+    #[test]
+    fn power_magnitude_is_plausible_for_45nm() {
+        // An 8-bit multiplier at 100 MHz should burn µW-to-low-mW, not W.
+        let lib = CellLibrary::nangate45();
+        let nl = crate::mult::pptree::build_exact(8);
+        let act = activity_bitparallel(
+            &nl,
+            &mult_workload_vectors(8, &random_workload(8, 2000, 3)),
+        );
+        let p = analyze(&nl, &lib, &act, 100e6, 500.0);
+        let w = p.total_w();
+        assert!(w > 1e-6 && w < 5e-3, "power {w} W out of plausible range");
+    }
+}

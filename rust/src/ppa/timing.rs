@@ -1,0 +1,125 @@
+//! Static timing analysis over a netlist: one topological pass computing
+//! per-net arrival times with the load-dependent cell delay model, then the
+//! critical path is the max arrival over primary outputs (plus the external
+//! load on outputs — the paper's 0.5 pF).
+
+use crate::gates::{GateKind, Netlist};
+use crate::ppa::cells::CellLibrary;
+
+/// Timing report for one netlist.
+#[derive(Clone, Debug)]
+pub struct TimingReport {
+    /// Arrival time per net, ps.
+    pub arrival_ps: Vec<f64>,
+    /// Critical-path delay to any primary output, ps.
+    pub critical_ps: f64,
+    /// Name of the critical primary output.
+    pub critical_output: String,
+}
+
+/// Run STA. `output_load_ff` is the external load on each primary output.
+pub fn analyze(nl: &Netlist, lib: &CellLibrary, output_load_ff: f64) -> TimingReport {
+    let gates = nl.gates();
+    // Collect sink kinds per net for load computation.
+    let mut sinks: Vec<Vec<GateKind>> = vec![Vec::new(); gates.len()];
+    for g in gates {
+        for k in 0..g.kind.arity() {
+            sinks[g.inputs[k].idx()].push(g.kind);
+        }
+    }
+    let mut is_output = vec![false; gates.len()];
+    for (_, id) in nl.outputs() {
+        is_output[id.idx()] = true;
+    }
+    let mut arrival = vec![0f64; gates.len()];
+    for (i, g) in gates.iter().enumerate() {
+        let input_arrival = (0..g.kind.arity())
+            .map(|k| arrival[g.inputs[k].idx()])
+            .fold(0f64, f64::max);
+        let load = lib.net_load_ff(&sinks[i], 0.0);
+        let mut d = match g.kind {
+            GateKind::Input | GateKind::Const0 | GateKind::Const1 => 0.0,
+            k => lib.delay_ps(k, load),
+        };
+        if is_output[i] && output_load_ff > 0.0 {
+            // Primary outputs drive the external load through an inserted
+            // BUF_X8-class driver (what repair_design does in the flow):
+            // intrinsic 30 ps + 0.75 kΩ effective drive.
+            d += 30.0 + 0.75 * output_load_ff;
+        }
+        arrival[i] = input_arrival + d;
+    }
+    let (critical_output, critical_ps) = nl
+        .outputs()
+        .iter()
+        .map(|(n, id)| (n.clone(), arrival[id.idx()]))
+        .fold((String::new(), 0f64), |acc, cur| {
+            if cur.1 > acc.1 {
+                cur
+            } else {
+                acc
+            }
+        });
+    TimingReport {
+        arrival_ps: arrival,
+        critical_ps,
+        critical_output,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gates::Builder;
+
+    #[test]
+    fn chain_delay_adds_up() {
+        let mut b = Builder::new("chain");
+        let x = b.input("x[0]");
+        let mut cur = x;
+        for _ in 0..10 {
+            cur = b.not(cur);
+        }
+        b.output_bit("y[0]", cur);
+        let nl = b.finish();
+        let lib = CellLibrary::nangate45();
+        let t = analyze(&nl, &lib, 0.0);
+        // 10 inverters: last one drives no sinks (just the output); each of
+        // the first 9 drives one inverter pin.
+        let inv_loaded = lib.delay_ps(crate::gates::GateKind::Not, lib.net_load_ff(&[crate::gates::GateKind::Not], 0.0));
+        let inv_unloaded = lib.delay_ps(crate::gates::GateKind::Not, 0.0);
+        let expect = 9.0 * inv_loaded + inv_unloaded;
+        assert!((t.critical_ps - expect).abs() < 1e-6, "{} vs {expect}", t.critical_ps);
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+    fn wider_multipliers_are_slower() {
+        let lib = CellLibrary::nangate45();
+        let t8 = analyze(&crate::mult::pptree::build_exact(8), &lib, 0.0).critical_ps;
+        let t16 = analyze(&crate::mult::pptree::build_exact(16), &lib, 0.0).critical_ps;
+        let t32 = analyze(&crate::mult::pptree::build_exact(32), &lib, 0.0).critical_ps;
+        assert!(t8 < t16 && t16 < t32);
+        // 8-bit multiplier should close timing in a couple of ns at 45 nm.
+        assert!(t8 > 200.0 && t8 < 5000.0, "t8 = {t8} ps");
+    }
+
+    #[test]
+    fn output_load_slows_critical_path() {
+        let lib = CellLibrary::nangate45();
+        let nl = crate::mult::pptree::build_exact(8);
+        let t0 = analyze(&nl, &lib, 0.0).critical_ps;
+        let t1 = analyze(&nl, &lib, 500.0).critical_ps; // 0.5 pF
+        assert!(t1 > t0);
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+    fn log_multiplier_critical_path_comparable_to_exact() {
+        // Both must be well under the 5.2 ns SRAM-dominated clock.
+        let lib = CellLibrary::nangate45();
+        let e = analyze(&crate::mult::pptree::build_exact(16), &lib, 0.0).critical_ps;
+        let l = analyze(&crate::mult::logarithmic::build_logour(16), &lib, 0.0).critical_ps;
+        assert!(e < 5200.0 && l < 5200.0, "exact {e} logour {l}");
+    }
+}

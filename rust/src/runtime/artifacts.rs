@@ -1,0 +1,129 @@
+//! Artifact store: locates and loads everything `python/compile/aot.py`
+//! emits — the HLO text graph, the per-family multiplier LUTs, the
+//! quantized weights and the evaluation dataset.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::npy;
+
+/// Loaded artifact bundle.
+#[derive(Debug)]
+pub struct ArtifactStore {
+    pub dir: PathBuf,
+    /// family name → int8 LUT (65536 i32 entries).
+    pub luts: BTreeMap<String, Vec<i32>>,
+    /// test images, N × 256 u8 (16×16 flattened).
+    pub images: Vec<u8>,
+    pub n_images: usize,
+    /// labels, N.
+    pub labels: Vec<usize>,
+    /// The model HLO path (batch forward).
+    pub model_hlo: PathBuf,
+    /// Batch size the graph was lowered with.
+    pub batch: usize,
+    /// Weight operands in graph order [w1, b1, w2, b2, w3, b3, w4, b4]
+    /// (weights i32 arrays of int8 values, biases f32). The graph takes
+    /// them as runtime operands — see python/compile/model.py for why.
+    pub weights: Vec<npy::NpyArray>,
+}
+
+impl ArtifactStore {
+    /// Default artifacts directory (next to the repo root or overridden).
+    pub fn default_dir() -> PathBuf {
+        std::env::var("OPENACM_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn exists(dir: &Path) -> bool {
+        dir.join("model.hlo.txt").exists()
+    }
+
+    /// Load everything. Errors carry enough context to tell the user to
+    /// run `make artifacts`.
+    pub fn load(dir: &Path) -> Result<ArtifactStore> {
+        if !Self::exists(dir) {
+            bail!(
+                "artifacts not found in {} — run `make artifacts` first",
+                dir.display()
+            );
+        }
+        let luts_dir = dir.join("luts");
+        let mut luts = BTreeMap::new();
+        for (stem, arr) in npy::read_dir(&luts_dir)
+            .with_context(|| format!("reading {}", luts_dir.display()))?
+        {
+            let name = stem.trim_start_matches("lut_").to_string();
+            let v = arr.as_i32()?;
+            if v.len() != 65536 {
+                bail!("lut {name} has {} entries, want 65536", v.len());
+            }
+            luts.insert(name, v);
+        }
+        if luts.is_empty() {
+            bail!("no LUTs in {}", luts_dir.display());
+        }
+        let images_arr = npy::read(&dir.join("dataset/test_images.npy"))?;
+        let images = images_arr.as_u8()?;
+        let n_images = images_arr.shape[0];
+        let labels: Vec<usize> = npy::read(&dir.join("dataset/test_labels.npy"))?
+            .as_i64()?
+            .iter()
+            .map(|&l| l as usize)
+            .collect();
+        if labels.len() != n_images {
+            bail!("labels {} != images {}", labels.len(), n_images);
+        }
+        // Batch size is recorded in manifest.txt as `batch=N`.
+        let manifest = std::fs::read_to_string(dir.join("manifest.txt")).unwrap_or_default();
+        let batch = manifest
+            .lines()
+            .find_map(|l| l.strip_prefix("batch=").and_then(|v| v.parse().ok()))
+            .unwrap_or(32);
+        // Weight operands in graph order.
+        let wdir = dir.join("weights");
+        let mut weights = Vec::new();
+        for layer in ["conv1", "conv2", "fc1", "fc2"] {
+            weights.push(npy::read(&wdir.join(format!("{layer}_q.npy")))?);
+            weights.push(npy::read(&wdir.join(format!("{layer}_b.npy")))?);
+        }
+        Ok(ArtifactStore {
+            dir: dir.to_path_buf(),
+            luts,
+            images,
+            n_images,
+            labels,
+            model_hlo: dir.join("model.hlo.txt"),
+            weights,
+            batch,
+        })
+    }
+
+    /// One image as a 256-byte slice.
+    pub fn image(&self, idx: usize) -> &[u8] {
+        &self.images[idx * 256..(idx + 1) * 256]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_dir_gives_actionable_error() {
+        let e = ArtifactStore::load(Path::new("/nonexistent/path")).unwrap_err();
+        assert!(e.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn default_dir_env_override() {
+        std::env::set_var("OPENACM_ARTIFACTS", "/tmp/custom_artifacts");
+        assert_eq!(
+            ArtifactStore::default_dir(),
+            PathBuf::from("/tmp/custom_artifacts")
+        );
+        std::env::remove_var("OPENACM_ARTIFACTS");
+    }
+}

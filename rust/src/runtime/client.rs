@@ -1,0 +1,121 @@
+//! Thin wrapper around the `xla` crate: CPU PJRT client + compiled
+//! executables with typed input/output helpers.
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// The PJRT CPU runtime.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled HLO module.
+pub struct CompiledModel {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file.
+    pub fn compile_hlo_text(&self, path: &Path) -> Result<CompiledModel> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(CompiledModel {
+            exe,
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().to_string())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+impl CompiledModel {
+    /// Execute with literal inputs; expects a 1-tuple result (jax lowering
+    /// with `return_tuple=True`) and returns the contained literal.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .context("PJRT execute")?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("device→host transfer")?;
+        lit.to_tuple1().context("unwrapping 1-tuple result")
+    }
+
+    /// Execute and decode an f32 output of known element count.
+    pub fn run_f32(&self, inputs: &[xla::Literal], expect_len: usize) -> Result<Vec<f32>> {
+        let lit = self.run(inputs)?;
+        let v = lit.to_vec::<f32>().context("decoding f32 output")?;
+        if v.len() != expect_len {
+            bail!("output length {} != expected {}", v.len(), expect_len);
+        }
+        Ok(v)
+    }
+}
+
+/// Build an i32 literal of the given shape.
+pub fn literal_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    assert_eq!(shape.iter().product::<usize>(), data.len());
+    let lit = xla::Literal::vec1(data);
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).context("reshaping i32 literal")
+}
+
+/// Build the weight-operand literal list from the artifact arrays
+/// ([w1, b1, …] — i32 weight matrices, f32 biases).
+pub fn weight_literals(weights: &[crate::util::npy::NpyArray]) -> Result<Vec<xla::Literal>> {
+    weights
+        .iter()
+        .map(|arr| match arr.dtype {
+            crate::util::npy::DType::I32 => literal_i32(&arr.shape, &arr.as_i32()?),
+            crate::util::npy::DType::F32 => literal_f32(&arr.shape, &arr.as_f32()?),
+            other => bail!("unsupported weight dtype {other:?}"),
+        })
+        .collect()
+}
+
+/// Build an f32 literal of the given shape.
+pub fn literal_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    assert_eq!(shape.iter().product::<usize>(), data.len());
+    let lit = xla::Literal::vec1(data);
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).context("reshaping f32 literal")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // These tests exercise the real PJRT client; they are kept small.
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(!rt.platform().is_empty());
+    }
+
+    #[test]
+    fn literal_shapes() {
+        let l = literal_i32(&[2, 3], &[1, 2, 3, 4, 5, 6]).unwrap();
+        let back = l.to_vec::<i32>().unwrap();
+        assert_eq!(back, vec![1, 2, 3, 4, 5, 6]);
+    }
+}

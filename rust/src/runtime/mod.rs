@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by the Python
+//! build path (`python/compile/aot.py`) and executes them on the CPU PJRT
+//! client. This is the only module that touches the `xla` crate; Python is
+//! never on the request path (the artifacts are ahead-of-time compiled).
+//!
+//! Interchange is HLO *text*, not serialized protos — jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod client;
+pub mod artifacts;
+
+pub use artifacts::ArtifactStore;
+pub use client::{CompiledModel, Runtime};

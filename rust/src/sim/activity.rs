@@ -1,0 +1,202 @@
+//! Bit-parallel switching-activity extraction.
+//!
+//! A vector *stream* v₀, v₁, …, v_T is applied to the netlist; the toggle
+//! count of a net is the number of t where its value differs between
+//! consecutive vectors. We pack 64 consecutive vectors into the 64 lanes of
+//! one bit-parallel evaluation, then count intra-word transitions with
+//! `popcount(x ^ (x << 1))` and stitch word boundaries with the previous
+//! word's last lane.
+
+use crate::gates::Netlist;
+
+/// Switching-activity result for one workload.
+#[derive(Clone, Debug)]
+pub struct ActivityReport {
+    /// Toggle count per net (indexed by `NetId`).
+    pub toggles: Vec<u64>,
+    /// Number of vector *transitions* observed (vectors − 1).
+    pub transitions: u64,
+}
+
+impl ActivityReport {
+    pub fn total(&self) -> u64 {
+        self.toggles.iter().sum()
+    }
+
+    /// Mean switching activity per net per transition (α in the dynamic
+    /// power model P = α·C·V²·f).
+    pub fn mean_alpha(&self) -> f64 {
+        if self.transitions == 0 || self.toggles.is_empty() {
+            return 0.0;
+        }
+        self.total() as f64 / (self.toggles.len() as f64 * self.transitions as f64)
+    }
+}
+
+/// Run a stream of input vectors (each a `Vec<u64>` of operand words per
+/// primary-input *bit*, i.e. already bit-expanded lane-packed input is
+/// produced internally) and count toggles per net.
+///
+/// `vector_bits[t]` is the t-th vector as one `bool` per primary input, in
+/// declaration order. The stream is processed 64 vectors per batch.
+pub fn activity_bitparallel(nl: &Netlist, vector_bits: &[Vec<bool>]) -> ActivityReport {
+    let n_inputs = nl.inputs().len();
+    let n_nets = nl.gates().len();
+    let mut toggles = vec![0u64; n_nets];
+    if vector_bits.is_empty() {
+        return ActivityReport {
+            toggles,
+            transitions: 0,
+        };
+    }
+    let mut prev_last: Option<Vec<bool>> = None;
+    let mut t = 0usize;
+    while t < vector_bits.len() {
+        let batch_end = (t + 64).min(vector_bits.len());
+        let lanes = batch_end - t;
+        // Pack: lane l = vector t+l.
+        let mut assignment = vec![0u64; n_inputs];
+        for (l, vec) in vector_bits[t..batch_end].iter().enumerate() {
+            assert_eq!(vec.len(), n_inputs, "vector arity");
+            for (i, &bit) in vec.iter().enumerate() {
+                if bit {
+                    assignment[i] |= 1u64 << l;
+                }
+            }
+        }
+        let vals = nl.eval_u64(&assignment);
+        let mask = if lanes == 64 {
+            u64::MAX
+        } else {
+            (1u64 << lanes) - 1
+        };
+        // Intra-word transitions: lane l vs lane l+1 → bits of (x ^ (x>>1))
+        // restricted to lanes 0..lanes-1.
+        let intra_mask = mask >> 1;
+        for (net, &x) in vals.iter().enumerate() {
+            let x = x & mask;
+            toggles[net] += ((x ^ (x >> 1)) & intra_mask).count_ones() as u64;
+        }
+        // Boundary with previous batch: compare prev last lane vs lane 0.
+        if let Some(prev) = &prev_last {
+            // Re-evaluate lane-0 values bitwise from vals (lane 0 bit).
+            for (net, &x) in vals.iter().enumerate() {
+                let lane0 = x & 1 != 0;
+                if lane0 != prev[net] {
+                    toggles[net] += 1;
+                }
+            }
+        }
+        // Record last lane values for the next boundary.
+        let last_bit = lanes - 1;
+        prev_last = Some(
+            vals.iter()
+                .map(|&x| (x >> last_bit) & 1 != 0)
+                .collect(),
+        );
+        t = batch_end;
+    }
+    ActivityReport {
+        toggles,
+        transitions: (vector_bits.len() - 1) as u64,
+    }
+}
+
+/// Helper: build the bit-expanded vector stream for a 2-operand multiplier
+/// workload `(a_t, b_t)` with `bits`-bit operands.
+pub fn mult_workload_vectors(bits: usize, pairs: &[(u64, u64)]) -> Vec<Vec<bool>> {
+    pairs
+        .iter()
+        .map(|&(a, b)| {
+            let mut v = Vec::with_capacity(2 * bits);
+            for i in 0..bits {
+                v.push((a >> i) & 1 != 0);
+            }
+            for i in 0..bits {
+                v.push((b >> i) & 1 != 0);
+            }
+            v
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::event::EventSim;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn bitparallel_matches_event_driven_toggles() {
+        let nl = crate::mult::pptree::build_exact(6);
+        let mut rng = Pcg32::new(0xAC71);
+        let pairs: Vec<(u64, u64)> = (0..300)
+            .map(|_| (rng.below(64) as u64, rng.below(64) as u64))
+            .collect();
+        let vectors = mult_workload_vectors(6, &pairs);
+        let bp = activity_bitparallel(&nl, &vectors);
+
+        let mut ev = EventSim::new(&nl);
+        for v in &vectors {
+            ev.step(v);
+        }
+        assert_eq!(bp.transitions, (vectors.len() - 1) as u64);
+        assert_eq!(
+            bp.toggles,
+            ev.toggles(),
+            "bit-parallel and event-driven toggle counts must agree"
+        );
+    }
+
+    #[test]
+    fn constant_stream_has_zero_toggles() {
+        let nl = crate::mult::pptree::build_exact(4);
+        let vectors = mult_workload_vectors(4, &[(5, 9); 100]);
+        let r = activity_bitparallel(&nl, &vectors);
+        assert_eq!(r.total(), 0);
+    }
+
+    #[test]
+    fn alternating_stream_toggles_every_transition() {
+        let nl = crate::mult::pptree::build_exact(4);
+        let pairs: Vec<(u64, u64)> = (0..129)
+            .map(|t| if t % 2 == 0 { (0, 0) } else { (15, 15) })
+            .collect();
+        let vectors = mult_workload_vectors(4, &pairs);
+        let r = activity_bitparallel(&nl, &vectors);
+        // Primary input nets toggle on every transition (128 transitions,
+        // 8 input bits).
+        let input_toggles: u64 = nl
+            .inputs()
+            .iter()
+            .map(|(_, id)| r.toggles[id.idx()])
+            .sum();
+        assert_eq!(input_toggles, 128 * 8);
+    }
+
+    #[test]
+    fn batch_boundary_counted_once() {
+        // 65 vectors forces a boundary between word 0 (64 lanes) and word 1.
+        let nl = crate::mult::pptree::build_exact(4);
+        let pairs: Vec<(u64, u64)> = (0..65).map(|t| ((t % 16) as u64, 7)).collect();
+        let vectors = mult_workload_vectors(4, &pairs);
+        let bp = activity_bitparallel(&nl, &vectors);
+        let mut ev = EventSim::new(&nl);
+        for v in &vectors {
+            ev.step(v);
+        }
+        assert_eq!(bp.toggles, ev.toggles());
+    }
+
+    #[test]
+    fn mean_alpha_sane() {
+        let nl = crate::mult::pptree::build_exact(8);
+        let mut rng = Pcg32::new(9);
+        let pairs: Vec<(u64, u64)> = (0..500)
+            .map(|_| (rng.below(256) as u64, rng.below(256) as u64))
+            .collect();
+        let r = activity_bitparallel(&nl, &mult_workload_vectors(8, &pairs));
+        let alpha = r.mean_alpha();
+        assert!(alpha > 0.05 && alpha < 1.0, "alpha {alpha}");
+    }
+}

@@ -1,0 +1,304 @@
+//! Event-driven two-value gate simulator with per-net toggle counting.
+//!
+//! The netlist's creation order is topological, so a single forward sweep
+//! over "dirty" gates settles combinational logic in one pass: we keep a
+//! dirty flag per gate and process gates in index order, marking fanout
+//! gates dirty when an output changes. Complexity per vector is
+//! O(changed cone) rather than O(netlist).
+
+use crate::gates::{GateKind, Netlist};
+
+/// Incremental simulator state for one netlist.
+pub struct EventSim<'a> {
+    nl: &'a Netlist,
+    /// Current boolean value per net.
+    values: Vec<bool>,
+    /// Per-net cumulative toggle counts.
+    toggles: Vec<u64>,
+    /// Fanout adjacency: net → gates reading it.
+    fanout: Vec<Vec<u32>>,
+    /// Scratch dirty flags.
+    dirty: Vec<bool>,
+    /// Number of vectors applied.
+    vectors: u64,
+    /// Cumulative count of gate evaluations (the "events" measure).
+    pub events: u64,
+    /// Input gate index per primary-input ordinal.
+    input_gates: Vec<u32>,
+    initialized: bool,
+    /// Min-ordered worklist of dirty gates (topological settle order).
+    heap: std::collections::BinaryHeap<std::cmp::Reverse<u32>>,
+}
+
+impl<'a> EventSim<'a> {
+    pub fn new(nl: &'a Netlist) -> Self {
+        let n = nl.gates().len();
+        let mut fanout: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for (gi, g) in nl.gates().iter().enumerate() {
+            for k in 0..g.kind.arity() {
+                fanout[g.inputs[k].idx()].push(gi as u32);
+            }
+        }
+        let input_gates = nl.inputs().iter().map(|(_, id)| id.0).collect();
+        Self {
+            nl,
+            values: vec![false; n],
+            toggles: vec![0; n],
+            fanout,
+            dirty: vec![false; n],
+            vectors: 0,
+            events: 0,
+            input_gates,
+            initialized: false,
+            heap: std::collections::BinaryHeap::new(),
+        }
+    }
+
+    fn eval_gate(&self, gi: usize) -> bool {
+        let g = &self.nl.gates()[gi];
+        let v = |id: crate::gates::NetId| self.values[id.idx()];
+        match g.kind {
+            GateKind::Const0 => false,
+            GateKind::Const1 => true,
+            GateKind::Input => self.values[gi], // set externally
+            GateKind::Buf => v(g.inputs[0]),
+            GateKind::Not => !v(g.inputs[0]),
+            GateKind::And2 => v(g.inputs[0]) & v(g.inputs[1]),
+            GateKind::Or2 => v(g.inputs[0]) | v(g.inputs[1]),
+            GateKind::Xor2 => v(g.inputs[0]) ^ v(g.inputs[1]),
+            GateKind::Nand2 => !(v(g.inputs[0]) & v(g.inputs[1])),
+            GateKind::Nor2 => !(v(g.inputs[0]) | v(g.inputs[1])),
+            GateKind::Xnor2 => !(v(g.inputs[0]) ^ v(g.inputs[1])),
+            GateKind::Mux2 => {
+                if v(g.inputs[2]) {
+                    v(g.inputs[1])
+                } else {
+                    v(g.inputs[0])
+                }
+            }
+        }
+    }
+
+    /// Apply one input vector (primary-input order) and settle.
+    /// Returns the primary-output values.
+    pub fn step(&mut self, inputs: &[bool]) -> Vec<bool> {
+        assert_eq!(inputs.len(), self.input_gates.len());
+        let first = !self.initialized;
+        if first {
+            // Initialize: evaluate everything once (constants included).
+            for gi in 0..self.nl.gates().len() {
+                self.dirty[gi] = true;
+            }
+            self.initialized = true;
+        }
+        let mut changed_inputs = 0usize;
+        for (ord, &gi) in self.input_gates.iter().enumerate() {
+            let gi = gi as usize;
+            if self.values[gi] != inputs[ord] {
+                changed_inputs += 1;
+                self.values[gi] = inputs[ord];
+                if !first {
+                    self.toggles[gi] += 1;
+                }
+                for &fo in &self.fanout[gi] {
+                    if !self.dirty[fo as usize] {
+                        self.dirty[fo as usize] = true;
+                        self.heap.push(std::cmp::Reverse(fo));
+                    }
+                }
+            }
+        }
+        // Forward settle in topological (index) order over a min-ordered
+        // worklist — O(changed cone · log) instead of scanning every gate
+        // per vector (the scan dominated at small cones; see EXPERIMENTS.md
+        // §Perf: 0.05 → ~1 M vectors/s on the 16-bit multiplier).
+        if first {
+            // initialization: evaluate everything once, index order
+            for gi in 0..self.nl.gates().len() {
+                self.dirty[gi] = false;
+                if matches!(self.nl.gates()[gi].kind, GateKind::Input) {
+                    continue;
+                }
+                self.events += 1;
+                let new = self.eval_gate(gi);
+                self.values[gi] = new;
+            }
+            self.heap.clear();
+        } else if changed_inputs >= 4 {
+            // Wide cone: a linear scan beats heap traffic (random operand
+            // streams toggle most of a multiplier every cycle).
+            self.heap.clear();
+            for gi in 0..self.nl.gates().len() {
+                if !self.dirty[gi] {
+                    continue;
+                }
+                self.dirty[gi] = false;
+                if matches!(self.nl.gates()[gi].kind, GateKind::Input) {
+                    continue;
+                }
+                self.events += 1;
+                let new = self.eval_gate(gi);
+                if new != self.values[gi] {
+                    self.values[gi] = new;
+                    self.toggles[gi] += 1;
+                    for &fo in &self.fanout[gi] {
+                        self.dirty[fo as usize] = true;
+                    }
+                }
+            }
+        } else {
+            // Narrow cone: min-ordered worklist, O(cone · log cone).
+            while let Some(std::cmp::Reverse(gi_u32)) = self.heap.pop() {
+                let gi = gi_u32 as usize;
+                if !self.dirty[gi] {
+                    continue; // stale heap entry
+                }
+                self.dirty[gi] = false;
+                if matches!(self.nl.gates()[gi].kind, GateKind::Input) {
+                    continue;
+                }
+                self.events += 1;
+                let new = self.eval_gate(gi);
+                if new != self.values[gi] {
+                    self.values[gi] = new;
+                    self.toggles[gi] += 1;
+                    for &fo in &self.fanout[gi] {
+                        if !self.dirty[fo as usize] {
+                            self.dirty[fo as usize] = true;
+                            self.heap.push(std::cmp::Reverse(fo));
+                        }
+                    }
+                }
+            }
+        }
+        self.vectors += 1;
+        self.nl
+            .outputs()
+            .iter()
+            .map(|(_, id)| self.values[id.idx()])
+            .collect()
+    }
+
+    /// Apply a vector given as unsigned operand words (same grouping rules
+    /// as [`Netlist::eval_uint`]). Returns the output words.
+    pub fn step_uint(
+        &mut self,
+        operands: &std::collections::BTreeMap<String, u64>,
+    ) -> std::collections::BTreeMap<String, u64> {
+        let mut bits = Vec::with_capacity(self.input_gates.len());
+        let mut counters: std::collections::BTreeMap<String, u32> = Default::default();
+        for (name, _) in self.nl.inputs() {
+            let group = name.split('[').next().unwrap().to_string();
+            let bit = counters.entry(group.clone()).or_insert(0);
+            let val = operands
+                .get(&group)
+                .unwrap_or_else(|| panic!("missing operand {group}"));
+            bits.push((val >> *bit) & 1 != 0);
+            *bit += 1;
+        }
+        let out_bits = self.step(&bits);
+        let mut outs: std::collections::BTreeMap<String, u64> = Default::default();
+        let mut counters: std::collections::BTreeMap<String, u32> = Default::default();
+        for ((name, _), b) in self.nl.outputs().iter().zip(out_bits) {
+            let group = name.split('[').next().unwrap().to_string();
+            let bit = counters.entry(group.clone()).or_insert(0);
+            let e = outs.entry(group).or_insert(0);
+            if b {
+                *e |= 1 << *bit;
+            }
+            *bit += 1;
+        }
+        outs
+    }
+
+    pub fn toggles(&self) -> &[u64] {
+        &self.toggles
+    }
+
+    pub fn total_toggles(&self) -> u64 {
+        self.toggles.iter().sum()
+    }
+
+    pub fn vectors(&self) -> u64 {
+        self.vectors
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gates::Builder;
+    use std::collections::BTreeMap;
+
+    fn mult4() -> Netlist {
+        crate::mult::pptree::build_exact(4)
+    }
+
+    #[test]
+    fn functional_equivalence_with_batch_eval() {
+        let nl = mult4();
+        let mut sim = EventSim::new(&nl);
+        for a in 0..16u64 {
+            for b in 0..16u64 {
+                let mut ops = BTreeMap::new();
+                ops.insert("a".to_string(), a);
+                ops.insert("b".to_string(), b);
+                let out = sim.step_uint(&ops);
+                assert_eq!(out["p"], a * b, "{a}*{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn event_counts_less_than_full_reeval() {
+        let nl = mult4();
+        let mut sim = EventSim::new(&nl);
+        let mut ops = BTreeMap::new();
+        ops.insert("a".to_string(), 5u64);
+        ops.insert("b".to_string(), 9u64);
+        sim.step_uint(&ops);
+        let events_after_init = sim.events;
+        // Change one input bit: far fewer gate evals than the whole netlist.
+        ops.insert("b".to_string(), 8u64); // flips one bit
+        sim.step_uint(&ops);
+        let delta = sim.events - events_after_init;
+        assert!(
+            delta < nl.gates().len() as u64 / 2,
+            "incremental step evaluated {delta} of {} gates",
+            nl.gates().len()
+        );
+    }
+
+    #[test]
+    fn no_input_change_means_no_events() {
+        let nl = mult4();
+        let mut sim = EventSim::new(&nl);
+        let mut ops = BTreeMap::new();
+        ops.insert("a".to_string(), 7u64);
+        ops.insert("b".to_string(), 3u64);
+        sim.step_uint(&ops);
+        let e0 = sim.events;
+        let t0 = sim.total_toggles();
+        sim.step_uint(&ops);
+        assert_eq!(sim.events, e0);
+        assert_eq!(sim.total_toggles(), t0);
+    }
+
+    #[test]
+    fn toggle_counts_match_value_changes() {
+        // Simple inverter chain: every input toggle propagates everywhere.
+        let mut b = Builder::new("chain");
+        let x = b.input("x[0]");
+        let n1 = b.not(x);
+        let n2 = b.not(n1);
+        b.output_bit("y[0]", n2);
+        let nl = b.finish();
+        let mut sim = EventSim::new(&nl);
+        sim.step(&[false]);
+        sim.step(&[true]);
+        sim.step(&[false]);
+        sim.step(&[true]);
+        // 3 transitions on each of the 3 nets (x, n1, n2).
+        assert_eq!(sim.total_toggles(), 9);
+    }
+}

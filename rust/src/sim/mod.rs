@@ -1,0 +1,18 @@
+//! Gate-level simulation for functional verification and switching-activity
+//! extraction (the power model's input).
+//!
+//! Two engines, cross-checked against each other in tests:
+//!
+//! * [`event::EventSim`] — a classic event-driven two-value simulator:
+//!   only gates whose inputs changed are re-evaluated, toggle counts are
+//!   accumulated per net. This is the engine the PE-level workloads use.
+//! * [`activity::activity_bitparallel`] — a 64-way bit-parallel sweep:
+//!   64 consecutive input vectors are evaluated per pass and toggles are
+//!   counted with XOR/popcount. This is the hot path for Table II's
+//!   fixed multiplication workloads (see benches/hotpaths.rs).
+
+pub mod event;
+pub mod activity;
+
+pub use activity::{activity_bitparallel, ActivityReport};
+pub use event::EventSim;

@@ -1,0 +1,421 @@
+//! 6T bit-cell DC analysis: operating points, butterfly curves, static
+//! noise margins (read / write / hold) and read current — all as functions
+//! of the six per-transistor threshold voltages, which carry the sampled
+//! local mismatch for Monte-Carlo / importance-sampling yield analysis.
+//!
+//! Topology (paper Fig 4 cell):
+//!
+//! ```text
+//!          VDD            VDD
+//!           |              |
+//!         [PU1]          [PU2]
+//!  BL --[PG1]-- Q ---x--- QB --[PG2]-- BLB
+//!         [PD1]          [PD2]
+//!           |              |
+//!          GND            GND
+//! ```
+//!
+//! PU/PD gates cross-coupled (gate of left pair = QB, right pair = Q);
+//! PG gates on the word line.
+
+use super::device::{process, Mosfet};
+
+/// Per-transistor ΔVth sample (local mismatch), in the order
+/// [PD1, PU1, PG1, PD2, PU2, PG2].
+pub type VthDeltas = [f64; 6];
+
+/// 6T cell with explicit sizing (W in multiples of minimum width).
+/// Default sizing is the classic read-stable ratioing: PD = 2.0,
+/// PG = 1.2, PU = 1.0.
+#[derive(Clone, Copy, Debug)]
+pub struct Cell6T {
+    pub wpd: f64,
+    pub wpu: f64,
+    pub wpg: f64,
+    /// ΔVth per device.
+    pub dvth: VthDeltas,
+}
+
+impl Default for Cell6T {
+    fn default() -> Self {
+        Self {
+            wpd: 2.0,
+            wpu: 1.0,
+            wpg: 1.2,
+            dvth: [0.0; 6],
+        }
+    }
+}
+
+/// σ(Vth) per device for this sizing, Pelgrom law (used by the samplers).
+pub fn sigma_vth(cell: &Cell6T) -> [f64; 6] {
+    let s = |w: f64| process::AVT / w.sqrt();
+    [
+        s(cell.wpd),
+        s(cell.wpu),
+        s(cell.wpg),
+        s(cell.wpd),
+        s(cell.wpu),
+        s(cell.wpg),
+    ]
+}
+
+/// SNM results, V.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SnmReport {
+    pub read_snm: f64,
+    pub hold_snm: f64,
+    /// Write margin: how far below VDD the non-driven internal node is
+    /// pulled during a write (larger = easier write). Negative = write fail.
+    pub write_margin: f64,
+    /// Read current of the accessed cell, A (drives BL discharge).
+    pub read_current: f64,
+}
+
+#[derive(Clone, Copy)]
+struct HalfCell {
+    pd: Mosfet,
+    pu: Mosfet,
+    pg: Mosfet,
+}
+
+impl Cell6T {
+    fn half(&self, left: bool) -> HalfCell {
+        let o = if left { 0 } else { 3 };
+        HalfCell {
+            pd: Mosfet::nmos(self.wpd, process::VTHN0 + self.dvth[o]),
+            pu: Mosfet::pmos(self.wpu, process::VTHP0 + self.dvth[o + 1]),
+            pg: Mosfet::nmos(self.wpg, process::VTHN0 + self.dvth[o + 2]),
+        }
+    }
+
+    /// Solve the internal-node voltage of one half-cell given the opposite
+    /// node voltage `vin`, under a given access condition.
+    ///
+    /// * `wl` — word-line voltage (0 = hold);
+    /// * `bl` — bit-line voltage at the access transistor.
+    ///
+    /// Node equation at V: I_pd(V) + I_pg_out(V) = I_pu(V) + I_pg_in(V)
+    /// solved by bisection (the net pull-down current is monotone in V).
+    fn solve_node(&self, half: &HalfCell, vin: f64, wl: f64, bl: f64) -> f64 {
+        let vdd = process::VDD;
+        // Net current *into* the node as a function of node voltage v:
+        // pull-up from VDD (PU, gate = vin), pull-in/out through PG
+        // (gate = wl, source/drain = bl), pull-down via PD (gate = vin).
+        let f = |v: f64| -> f64 {
+            let i_pu = half.pu.id(vdd - vin, vdd - v); // |Vgs|, |Vds| of PMOS
+            let i_pd = half.pd.id(vin, v);
+            // Access transistor: conducts from BL to node when BL > V
+            // (source at node), from node to BL otherwise (source at BL).
+            let i_pg = if bl >= v {
+                half.pg.id(wl - v, bl - v) // charging the node
+            } else {
+                -half.pg.id(wl - bl, v - bl) // discharging the node
+            };
+            i_pu + i_pg - i_pd
+        };
+        // Bisection: f is decreasing in v.
+        let (mut lo, mut hi) = (0.0f64, vdd);
+        let (flo, fhi) = (f(lo), f(hi));
+        if flo <= 0.0 {
+            return 0.0;
+        }
+        if fhi >= 0.0 {
+            return vdd;
+        }
+        // 42 bisection iterations resolve ~2.5e-13 V — far below any
+        // criterion; 60 was measured 30% slower for no accuracy gain (§Perf).
+        for _ in 0..42 {
+            let mid = 0.5 * (lo + hi);
+            if f(mid) > 0.0 {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        0.5 * (lo + hi)
+    }
+
+    /// Voltage-transfer curve of one half-cell: sweep the opposite node and
+    /// record this node's voltage. `read` selects read condition (WL = VDD,
+    /// BL precharged to VDD) vs hold (WL = 0).
+    fn vtc(&self, left: bool, read: bool, points: usize) -> Vec<(f64, f64)> {
+        let vdd = process::VDD;
+        let half = self.half(left);
+        let (wl, bl) = if read { (vdd, vdd) } else { (0.0, vdd) };
+        (0..points)
+            .map(|i| {
+                let vin = vdd * i as f64 / (points - 1) as f64;
+                (vin, self.solve_node(&half, vin, wl, bl))
+            })
+            .collect()
+    }
+
+    /// Static noise margin from the two butterfly lobes: the side of the
+    /// largest square nested between VTC₁(x) and VTC₂⁻¹(x), computed with
+    /// the classic 45°-rotation method.
+    fn snm_from_vtcs(c1: &[(f64, f64)], c2: &[(f64, f64)]) -> f64 {
+        // Curve A: (x, y) from c1. Curve B: mirrored c2 → (y, x).
+        // A 45° line y = x + c has constant u = (x − y)/√2 = −c/√2; the
+        // largest square nested in a lobe has both diagonal corners on one
+        // such line, so its side = (eye opening along v at that u) / √2.
+        // In the upper-left lobe (u < 0) curve A bounds the eye from above
+        // and curve B from below; in the lower-right lobe it is reversed.
+        // Eye opening = upper curve's highest branch − lower curve's
+        // lowest branch at that u.
+        let rot = |pts: &[(f64, f64)], mirror: bool| -> Vec<(f64, f64)> {
+            pts.iter()
+                .map(|&(x, y)| {
+                    let (x, y) = if mirror { (y, x) } else { (x, y) };
+                    let u = (x - y) / std::f64::consts::SQRT_2;
+                    let v = (x + y) / std::f64::consts::SQRT_2;
+                    (u, v)
+                })
+                .collect()
+        };
+        let a = rot(c1, false);
+        let b = rot(c2, true);
+        // All branch crossings of a rotated polyline at a given u.
+        let branches = |pts: &[(f64, f64)], u: f64| -> Option<(f64, f64)> {
+            let mut lo = f64::INFINITY;
+            let mut hi = f64::NEG_INFINITY;
+            for w in pts.windows(2) {
+                let (u0, v0) = w[0];
+                let (u1, v1) = w[1];
+                let (ulo, uhi) = if u0 <= u1 { (u0, u1) } else { (u1, u0) };
+                if u >= ulo && u <= uhi && (u1 - u0).abs() > 1e-12 {
+                    let t = (u - u0) / (u1 - u0);
+                    let v = v0 + t * (v1 - v0);
+                    lo = lo.min(v);
+                    hi = hi.max(v);
+                }
+            }
+            if lo.is_finite() {
+                Some((lo, hi))
+            } else {
+                None
+            }
+        };
+        let mut lobe_neg = 0f64;
+        let mut lobe_pos = 0f64;
+        let umax = process::VDD / std::f64::consts::SQRT_2;
+        let n = 200;
+        for i in 0..=n {
+            let u = -umax + 2.0 * umax * i as f64 / n as f64;
+            if let (Some((a_lo, a_hi)), Some((b_lo, b_hi))) =
+                (branches(&a, u), branches(&b, u))
+            {
+                if u < 0.0 {
+                    // A above, B below.
+                    let side = (a_hi - b_lo) / std::f64::consts::SQRT_2;
+                    lobe_neg = lobe_neg.max(side);
+                } else {
+                    let side = (b_hi - a_lo) / std::f64::consts::SQRT_2;
+                    lobe_pos = lobe_pos.max(side);
+                }
+            }
+        }
+        lobe_neg.min(lobe_pos)
+    }
+
+    /// Debug helper: expose the butterfly VTCs (used by tooling/tests).
+    #[doc(hidden)]
+    pub fn debug_vtc(&self, left: bool, read: bool, points: usize) -> Vec<(f64, f64)> {
+        self.vtc(left, read, points)
+    }
+
+    /// Fast path for the yield engine: read SNM + write margin + read
+    /// current only (skips the hold butterfly), with a coarser VTC grid.
+    /// ~4× cheaper than [`Cell6T::characterize`]; the Monte-Carlo loop is
+    /// the hottest path in the whole compiler (see EXPERIMENTS.md §Perf).
+    pub fn characterize_read(&self) -> SnmReport {
+        let vdd = process::VDD;
+        let pts = 49;
+        let r1 = self.vtc(true, true, pts);
+        let r2 = self.vtc(false, true, pts);
+        let read_snm = Self::snm_from_vtcs(&r1, &r2);
+        let half_l = self.half(true);
+        let v_q = self.solve_node(&half_l, vdd, vdd, 0.0);
+        let h2c = self.vtc(false, false, 31);
+        let mut v_trip = vdd / 2.0;
+        for w in h2c.windows(2) {
+            let (x0, y0) = w[0];
+            let (x1, y1) = w[1];
+            if (y0 - x0) * (y1 - x1) <= 0.0 {
+                v_trip = 0.5 * (x0 + x1);
+                break;
+            }
+        }
+        let read_current = {
+            let half = self.half(true);
+            let v_read = self.solve_node(&half, vdd, vdd, vdd);
+            half.pg
+                .id(vdd - v_read, vdd - v_read)
+                .min(half.pd.id(vdd, v_read.max(0.02)))
+        };
+        SnmReport {
+            read_snm,
+            hold_snm: f64::NAN,
+            write_margin: v_trip - v_q,
+            read_current,
+        }
+    }
+
+    /// Full characterization of one sample.
+    pub fn characterize(&self) -> SnmReport {
+        let vdd = process::VDD;
+        let pts = 81;
+        // Read SNM: both halves under read stress.
+        let r1 = self.vtc(true, true, pts);
+        let r2 = self.vtc(false, true, pts);
+        let read_snm = Self::snm_from_vtcs(&r1, &r2);
+        // Hold SNM.
+        let h1 = self.vtc(true, false, pts);
+        let h2 = self.vtc(false, false, pts);
+        let hold_snm = Self::snm_from_vtcs(&h1, &h2);
+        // Write margin: drive BL=0 on the Q side (storing 1), WL on; the
+        // write succeeds if Q is pulled below the switching threshold of
+        // the opposite inverter. Margin = V_trip − V_q_driven.
+        let half_l = self.half(true);
+        let v_q = self.solve_node(&half_l, vdd, vdd, 0.0); // QB=1 assumed, BL=0
+        // Opposite inverter trip point ≈ voltage where VTC crosses y = x.
+        let h2c = self.vtc(false, false, pts);
+        let mut v_trip = vdd / 2.0;
+        for w in h2c.windows(2) {
+            let (x0, y0) = w[0];
+            let (x1, y1) = w[1];
+            if (y0 - x0) * (y1 - x1) <= 0.0 {
+                v_trip = 0.5 * (x0 + x1);
+                break;
+            }
+        }
+        let write_margin = v_trip - v_q;
+        // Read current: PG in series with PD discharging the precharged BL
+        // through the "0" node. Worst-case series current at V_node solved.
+        let read_current = {
+            let half = self.half(true);
+            // Node rises to v_read during read; current into BL limited by
+            // the smaller of PG (sat) and PD (triode) — take the solved
+            // operating point.
+            let v_read = self.solve_node(&half, vdd, vdd, vdd);
+            half.pg.id(vdd - v_read, vdd - v_read).min(half.pd.id(vdd, v_read.max(0.02)))
+        };
+        SnmReport {
+            read_snm,
+            hold_snm,
+            write_margin,
+            read_current,
+        }
+    }
+}
+
+/// Corner samples for quick checks.
+pub struct CellCorners;
+
+impl CellCorners {
+    /// Nominal cell, no mismatch.
+    pub fn nominal() -> Cell6T {
+        Cell6T::default()
+    }
+
+    /// A heavily skewed cell (weak PD1 / strong PG1) that degrades read SNM.
+    pub fn read_weak(skew: f64) -> Cell6T {
+        let mut c = Cell6T::default();
+        c.dvth[0] = skew; // PD1 slower
+        c.dvth[2] = -skew; // PG1 stronger
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nominal_cell_is_stable() {
+        let r = CellCorners::nominal().characterize();
+        // 45 nm-class 6T: hold SNM a few hundred mV, read SNM ~100-250 mV.
+        assert!(
+            r.hold_snm > 0.25 && r.hold_snm < 0.6,
+            "hold snm {}",
+            r.hold_snm
+        );
+        assert!(
+            r.read_snm > 0.05 && r.read_snm < r.hold_snm,
+            "read snm {}",
+            r.read_snm
+        );
+        assert!(r.write_margin > 0.0, "write margin {}", r.write_margin);
+        assert!(
+            r.read_current > 1e-6 && r.read_current < 1e-3,
+            "iread {}",
+            r.read_current
+        );
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+    fn read_snm_degrades_monotonically_with_skew() {
+        let mut prev = f64::INFINITY;
+        for i in 0..5 {
+            let skew = 0.03 * i as f64;
+            let r = CellCorners::read_weak(skew).characterize();
+            assert!(
+                r.read_snm <= prev + 1e-6,
+                "snm increased at skew {skew}: {} > {prev}",
+                r.read_snm
+            );
+            prev = r.read_snm;
+        }
+    }
+
+    #[test]
+    fn extreme_mismatch_fails_read_stability() {
+        let r = CellCorners::read_weak(0.25).characterize();
+        assert!(
+            r.read_snm < 0.06,
+            "extreme skew should crush read SNM, got {}",
+            r.read_snm
+        );
+    }
+
+    #[test]
+    fn stronger_pd_improves_read_snm() {
+        let mut big_pd = Cell6T::default();
+        big_pd.wpd = 3.0;
+        let base = Cell6T::default().characterize().read_snm;
+        let improved = big_pd.characterize().read_snm;
+        assert!(
+            improved > base,
+            "wpd 3.0 read snm {improved} <= base {base}"
+        );
+    }
+
+    #[test]
+    fn weaker_pg_improves_read_but_hurts_write() {
+        let mut weak_pg = Cell6T::default();
+        weak_pg.wpg = 0.7;
+        let base = Cell6T::default().characterize();
+        let w = weak_pg.characterize();
+        assert!(w.read_snm > base.read_snm);
+        assert!(w.write_margin < base.write_margin);
+    }
+
+    #[test]
+    fn vth_shift_reduces_read_current() {
+        let mut slow = Cell6T::default();
+        slow.dvth[2] = 0.15; // slow PG1
+        let base = Cell6T::default().characterize().read_current;
+        let s = slow.characterize().read_current;
+        assert!(s < base);
+    }
+
+    #[test]
+    fn sigma_follows_sizing() {
+        let c = Cell6T::default();
+        let s = sigma_vth(&c);
+        assert!(s[0] < s[1], "wider PD has smaller sigma than PU");
+        assert_eq!(s[0], s[3]);
+        assert_eq!(s[2], s[5]);
+    }
+}

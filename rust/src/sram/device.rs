@@ -1,0 +1,181 @@
+//! MOSFET device model for transistor-level SRAM characterization.
+//!
+//! A square-law long-channel model with a first-order velocity-saturation
+//! correction — the classic hand-analysis model, adequate for the
+//! *statistical geometry* of SRAM failure analysis (what Table V needs):
+//! failure boundaries move monotonically and smoothly with per-device Vth,
+//! which is the property importance sampling exploits. Parameters are
+//! FreePDK45-class (45 nm, VDD = 1.1 V).
+
+/// Device polarity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MosType {
+    Nmos,
+    Pmos,
+}
+
+/// One transistor instance: geometry + threshold (the threshold carries the
+/// sampled process variation).
+#[derive(Clone, Copy, Debug)]
+pub struct Mosfet {
+    pub mos_type: MosType,
+    /// Width in multiples of minimum width (W/Wmin).
+    pub w: f64,
+    /// Length in multiples of minimum length (L/Lmin).
+    pub l: f64,
+    /// Threshold voltage, V (positive magnitude for both types).
+    pub vth: f64,
+}
+
+/// FreePDK45-class process constants.
+pub mod process {
+    /// Supply voltage, V.
+    pub const VDD: f64 = 1.1;
+    /// NMOS transconductance at minimum W/L, A/V².
+    pub const KN: f64 = 250e-6;
+    /// PMOS transconductance at minimum W/L, A/V².
+    pub const KP: f64 = 110e-6;
+    /// Nominal NMOS threshold, V.
+    pub const VTHN0: f64 = 0.40;
+    /// Nominal PMOS threshold magnitude, V.
+    pub const VTHP0: f64 = 0.38;
+    /// Channel-length modulation, 1/V.
+    pub const LAMBDA: f64 = 0.08;
+    /// Velocity-saturation critical voltage, V (lower → stronger v-sat).
+    pub const VSAT_V: f64 = 1.0;
+    /// Pelgrom coefficient A_Vt, V·(unit area)^0.5 — σ(Vth) = AVT/sqrt(W·L).
+    /// Calibrated so a minimum device has σ ≈ 35 mV (45 nm class).
+    pub const AVT: f64 = 0.035;
+    /// Minimum-width device gate capacitance, fF.
+    pub const CGATE_MIN_FF: f64 = 0.08;
+    /// Bit-line junction capacitance per cell, fF.
+    pub const CBL_PER_CELL_FF: f64 = 0.18;
+    /// Word-line capacitance per cell (gate of two access devices), fF.
+    pub const CWL_PER_CELL_FF: f64 = 0.20;
+    /// Word-line wire resistance per cell pitch, Ω.
+    pub const RWL_PER_CELL_OHM: f64 = 12.0;
+}
+
+impl Mosfet {
+    pub fn nmos(w: f64, vth: f64) -> Self {
+        Self {
+            mos_type: MosType::Nmos,
+            w,
+            l: 1.0,
+            vth,
+        }
+    }
+
+    pub fn pmos(w: f64, vth: f64) -> Self {
+        Self {
+            mos_type: MosType::Pmos,
+            w,
+            l: 1.0,
+            vth,
+        }
+    }
+
+    /// σ(Vth) from the Pelgrom law for this geometry.
+    pub fn sigma_vth(&self) -> f64 {
+        process::AVT / (self.w * self.l).sqrt()
+    }
+
+    /// Drain current magnitude, A.
+    ///
+    /// For NMOS: `vgs`, `vds` are gate-source / drain-source voltages
+    /// (source at the lower-potential terminal). For PMOS pass the
+    /// *magnitudes* |Vgs|, |Vds| — the model is symmetric.
+    pub fn id(&self, vgs: f64, vds: f64) -> f64 {
+        if vds <= 0.0 {
+            return 0.0;
+        }
+        let vov = vgs - self.vth;
+        if vov <= 0.0 {
+            // Sub-threshold: exponential, small but non-zero so solvers see
+            // a smooth function. n·VT ≈ 36 mV.
+            let k = self.k();
+            let i0 = 0.1 * k * 0.036 * 0.036;
+            return self.w / self.l * i0 * ((vov / 0.036).exp()).min(1.0)
+                * (1.0 - (-vds / 0.026).exp());
+        }
+        // Velocity-saturation-corrected overdrive.
+        let vov_eff = vov / (1.0 + vov / process::VSAT_V);
+        let k = self.k() * self.w / self.l;
+        if vds >= vov_eff {
+            // Saturation.
+            0.5 * k * vov_eff * vov_eff * (1.0 + process::LAMBDA * vds)
+        } else {
+            // Triode.
+            k * (vov_eff * vds - 0.5 * vds * vds)
+        }
+    }
+
+    fn k(&self) -> f64 {
+        match self.mos_type {
+            MosType::Nmos => process::KN,
+            MosType::Pmos => process::KP,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cutoff_and_saturation_regions() {
+        let m = Mosfet::nmos(1.0, process::VTHN0);
+        // Deep cutoff ≈ 0.
+        assert!(m.id(0.0, 1.1) < 1e-9);
+        // Saturation current positive and increasing with Vgs.
+        let i1 = m.id(0.8, 1.1);
+        let i2 = m.id(1.1, 1.1);
+        assert!(i1 > 1e-6);
+        assert!(i2 > i1);
+    }
+
+    #[test]
+    fn triode_less_than_saturation() {
+        let m = Mosfet::nmos(1.0, process::VTHN0);
+        let i_sat = m.id(1.1, 1.1);
+        let i_tri = m.id(1.1, 0.05);
+        assert!(i_tri < i_sat);
+        assert!(i_tri > 0.0);
+    }
+
+    #[test]
+    fn width_scales_current() {
+        let m1 = Mosfet::nmos(1.0, process::VTHN0);
+        let m2 = Mosfet::nmos(2.0, process::VTHN0);
+        let r = m2.id(1.1, 1.1) / m1.id(1.1, 1.1);
+        assert!((r - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn vth_shift_reduces_current() {
+        let nom = Mosfet::nmos(1.0, process::VTHN0);
+        let slow = Mosfet::nmos(1.0, process::VTHN0 + 0.1);
+        assert!(slow.id(1.1, 1.1) < nom.id(1.1, 1.1));
+    }
+
+    #[test]
+    fn pelgrom_sigma() {
+        let min_dev = Mosfet::nmos(1.0, process::VTHN0);
+        let wide = Mosfet::nmos(4.0, process::VTHN0);
+        assert!((min_dev.sigma_vth() - 0.035).abs() < 1e-12);
+        assert!((wide.sigma_vth() - 0.0175).abs() < 1e-12);
+    }
+
+    #[test]
+    fn current_is_continuous_at_region_boundaries() {
+        let m = Mosfet::nmos(1.5, process::VTHN0);
+        // Across the triode/saturation boundary.
+        let vov_eff = {
+            let vov = 1.1 - m.vth;
+            vov / (1.0 + vov / process::VSAT_V)
+        };
+        let below = m.id(1.1, vov_eff - 1e-6);
+        let above = m.id(1.1, vov_eff + 1e-6);
+        assert!((below - above).abs() / above < 0.05);
+    }
+}

@@ -1,0 +1,210 @@
+//! FakeRAM2.0-style abstract-view emission (paper §III-D item 3):
+//! a LEF abstract (footprint + pin geometry) and a LIB (timing/power) view
+//! for black-box place-and-route integration, named and organized so the
+//! macro drops into flows that already consume FakeRAM macros (e.g.
+//! OpenROAD's tinyRocket `fakeram45_256x16`).
+
+use crate::config::spec::SramSpec;
+use crate::sram::models;
+
+/// Macro cell name in FakeRAM convention: `fakeram45_<rows>x<bits>`.
+pub fn macro_name(spec: &SramSpec) -> String {
+    format!("fakeram45_{}x{}", spec.rows, spec.word_bits)
+}
+
+fn dims_um(spec: &SramSpec) -> (f64, f64) {
+    // Near-square footprint with the model's total area.
+    let a = models::area(spec).total_um2;
+    let w = (a * 1.4).sqrt(); // slightly wide aspect, like FakeRAM
+    let h = a / w;
+    (round2(w), round2(h))
+}
+
+fn round2(x: f64) -> f64 {
+    (x * 100.0).round() / 100.0
+}
+
+/// Emit the LEF abstract.
+pub fn lef(spec: &SramSpec) -> String {
+    let name = macro_name(spec);
+    let (w, h) = dims_um(spec);
+    let addr_bits = (usize::BITS - (spec.rows - 1).leading_zeros()) as usize;
+    let mut pins = String::new();
+    let mut pin = |pname: &str, dir: &str, y: f64| {
+        pins.push_str(&format!(
+            "  PIN {pname}\n    DIRECTION {dir} ;\n    USE SIGNAL ;\n    PORT\n      LAYER metal4 ;\n        RECT 0.000 {:.3} 0.190 {:.3} ;\n    END\n  END {pname}\n",
+            y,
+            y + 0.14
+        ));
+    };
+    let mut y = 1.0;
+    for i in 0..spec.word_bits {
+        pin(&format!("rd_out[{i}]"), "OUTPUT", y);
+        y += 0.5;
+    }
+    for i in 0..spec.word_bits {
+        pin(&format!("wd_in[{i}]"), "INPUT", y);
+        y += 0.5;
+    }
+    for i in 0..addr_bits {
+        pin(&format!("addr_in[{i}]"), "INPUT", y);
+        y += 0.5;
+    }
+    for p in ["we_in", "ce_in", "clk"] {
+        pin(p, "INPUT", y);
+        y += 0.5;
+    }
+    format!(
+        "VERSION 5.7 ;\nBUSBITCHARS \"[]\" ;\nMACRO {name}\n  FOREIGN {name} 0 0 ;\n  SYMMETRY X Y R90 ;\n  SIZE {w:.3} BY {h:.3} ;\n  CLASS BLOCK ;\n{pins}  OBS\n    LAYER metal1 ;\n      RECT 0 0 {w:.3} {h:.3} ;\n    LAYER metal2 ;\n      RECT 0 0 {w:.3} {h:.3} ;\n    LAYER metal3 ;\n      RECT 0 0 {w:.3} {h:.3} ;\n  END\nEND {name}\n"
+    )
+}
+
+/// Emit the LIB (Liberty) timing/power view, with values taken from the
+/// characterization models (and therefore consistent with Table II).
+pub fn lib(spec: &SramSpec, clock_mhz: f64) -> String {
+    let name = macro_name(spec);
+    let t = models::timing(spec, None);
+    let p = models::power(spec, clock_mhz * 1e6);
+    let access_ns = t.access_ns;
+    let setup_ns = 0.05;
+    let hold_ns = 0.05;
+    let leakage_mw = p.leakage_w * 1e3;
+    let addr_bits = (usize::BITS - (spec.rows - 1).leading_zeros()) as usize;
+    format!(
+        r#"library({name}) {{
+  delay_model : table_lookup;
+  time_unit : "1ns";
+  voltage_unit : "1V";
+  current_unit : "1mA";
+  leakage_power_unit : "1mW";
+  capacitive_load_unit(1, pf);
+  nom_voltage : 1.1;
+  nom_temperature : 25;
+  cell({name}) {{
+    area : {area:.2};
+    is_macro_cell : true;
+    cell_leakage_power : {leakage_mw:.6};
+    pin(clk) {{ direction : input; clock : true; capacitance : 0.01; }}
+    pin(we_in) {{ direction : input; capacitance : 0.005;
+      timing() {{ related_pin : "clk"; timing_type : setup_rising;
+        rise_constraint(scalar) {{ values("{setup_ns:.3}"); }}
+        fall_constraint(scalar) {{ values("{setup_ns:.3}"); }} }}
+      timing() {{ related_pin : "clk"; timing_type : hold_rising;
+        rise_constraint(scalar) {{ values("{hold_ns:.3}"); }}
+        fall_constraint(scalar) {{ values("{hold_ns:.3}"); }} }}
+    }}
+    bus(addr_in) {{ bus_type : addr_{addr_bits};
+      direction : input; capacitance : 0.005; }}
+    bus(wd_in) {{ bus_type : data_{bits};
+      direction : input; capacitance : 0.005; }}
+    bus(rd_out) {{ bus_type : data_{bits};
+      direction : output;
+      timing() {{ related_pin : "clk"; timing_type : rising_edge;
+        cell_rise(scalar) {{ values("{access_ns:.3}"); }}
+        rise_transition(scalar) {{ values("0.05"); }}
+        cell_fall(scalar) {{ values("{access_ns:.3}"); }}
+        fall_transition(scalar) {{ values("0.05"); }} }}
+    }}
+  }}
+  type(addr_{addr_bits}) {{ base_type : array; data_type : bit;
+    bit_width : {addr_bits}; bit_from : {addr_hi}; bit_to : 0; }}
+  type(data_{bits}) {{ base_type : array; data_type : bit;
+    bit_width : {bits}; bit_from : {bits_hi}; bit_to : 0; }}
+}}
+"#,
+        name = name,
+        area = models::area(spec).total_um2,
+        leakage_mw = leakage_mw,
+        setup_ns = setup_ns,
+        hold_ns = hold_ns,
+        access_ns = access_ns,
+        addr_bits = addr_bits,
+        addr_hi = addr_bits - 1,
+        bits = spec.word_bits,
+        bits_hi = spec.word_bits - 1,
+    )
+}
+
+/// Verilog behavioral model (write-first synchronous RAM), FakeRAM style.
+pub fn verilog(spec: &SramSpec) -> String {
+    let name = macro_name(spec);
+    let addr_bits = (usize::BITS - (spec.rows - 1).leading_zeros()) as usize;
+    format!(
+        r#"// FakeRAM2.0-style behavioral model generated by OpenACM.
+module {name} (
+    input  wire                     clk,
+    input  wire                     ce_in,
+    input  wire                     we_in,
+    input  wire [{ah}:0]            addr_in,
+    input  wire [{dh}:0]            wd_in,
+    output reg  [{dh}:0]            rd_out
+);
+  reg [{dh}:0] mem [0:{rows_m1}];
+  always @(posedge clk) begin
+    if (ce_in) begin
+      if (we_in) mem[addr_in] <= wd_in;
+      rd_out <= mem[addr_in];
+    end
+  end
+endmodule
+"#,
+        name = name,
+        ah = addr_bits - 1,
+        dh = spec.word_bits - 1,
+        rows_m1 = spec.rows - 1,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::spec::SramSpec;
+
+    #[test]
+    fn names_follow_fakeram_convention() {
+        assert_eq!(macro_name(&SramSpec::new(16, 8)), "fakeram45_16x8");
+        assert_eq!(macro_name(&SramSpec::new(256, 16)), "fakeram45_256x16");
+    }
+
+    #[test]
+    fn lef_contains_required_sections() {
+        let s = lef(&SramSpec::new(32, 16));
+        assert!(s.contains("MACRO fakeram45_32x16"));
+        assert!(s.contains("CLASS BLOCK"));
+        assert!(s.contains("PIN rd_out[15]"));
+        assert!(s.contains("PIN addr_in[4]"));
+        assert!(s.contains("SIZE"));
+        assert!(s.contains("END fakeram45_32x16"));
+    }
+
+    #[test]
+    fn lib_reports_model_access_time() {
+        let spec = SramSpec::new(64, 32);
+        let s = lib(&spec, 100.0);
+        let t = models::timing(&spec, None).access_ns;
+        assert!(s.contains(&format!("values(\"{t:.3}\")")));
+        assert!(s.contains("is_macro_cell : true"));
+    }
+
+    #[test]
+    fn verilog_module_shape() {
+        let v = verilog(&SramSpec::new(16, 8));
+        assert!(v.contains("module fakeram45_16x8"));
+        assert!(v.contains("mem [0:15]"));
+        assert!(v.contains("[7:0]"));
+        assert!(v.contains("[3:0]            addr_in"));
+    }
+
+    #[test]
+    fn lef_area_matches_model() {
+        let spec = SramSpec::new(16, 8);
+        let s = lef(&spec);
+        // Extract SIZE W BY H and check W*H ≈ model area.
+        let line = s.lines().find(|l| l.trim().starts_with("SIZE")).unwrap();
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        let w: f64 = toks[1].parse().unwrap();
+        let h: f64 = toks[3].parse().unwrap();
+        let a = models::area(&spec).total_um2;
+        assert!(((w * h) / a - 1.0).abs() < 0.02, "{} vs {}", w * h, a);
+    }
+}

@@ -1,0 +1,181 @@
+//! SRAM macro generator: organization (banks / subarrays / column mux),
+//! peripheral enumeration (hierarchical WL decoders and drivers, precharge,
+//! write drivers, sense amps) and a cycle-level behavioral model used by
+//! the PE simulator and the coordinator's energy accounting.
+
+use anyhow::{bail, Result};
+
+use crate::config::spec::SramSpec;
+
+/// Peripheral inventory of a generated macro (per physical subarray and
+/// total) — the input to the area/power models and the LEF/LIB emitters.
+#[derive(Clone, Debug)]
+pub struct Periphery {
+    pub decoder_stages: usize,
+    pub wl_drivers: usize,
+    pub precharge_units: usize,
+    pub write_drivers: usize,
+    pub sense_amps: usize,
+    pub column_mux_legs: usize,
+}
+
+/// A generated SRAM macro: organization + storage behavioral model.
+#[derive(Clone, Debug)]
+pub struct SramMacro {
+    pub spec: SramSpec,
+    pub periphery: Periphery,
+    /// Word storage (behavioral), rows × word_bits.
+    data: Vec<u64>,
+    /// Read/write access counters for energy accounting.
+    pub reads: u64,
+    pub writes: u64,
+}
+
+impl SramMacro {
+    /// Generate a macro from a validated spec.
+    pub fn generate(spec: &SramSpec) -> Result<SramMacro> {
+        spec.validate()?;
+        let rows_per_sub = spec.rows_per_subarray();
+        if rows_per_sub < 2 {
+            bail!("subarray would have < 2 rows");
+        }
+        let phys_cols = spec.phys_cols();
+        let subarrays = spec.banks * spec.subarrays;
+        let periphery = Periphery {
+            // log2(rows) address bits, decoded hierarchically: a bank/
+            // subarray predecoder stage plus a final row decoder stage.
+            decoder_stages: (usize::BITS - (spec.rows - 1).leading_zeros()) as usize,
+            wl_drivers: rows_per_sub * subarrays,
+            precharge_units: phys_cols * subarrays,
+            write_drivers: spec.word_bits * subarrays,
+            sense_amps: spec.word_bits * subarrays,
+            column_mux_legs: if spec.mux_ratio > 1 {
+                phys_cols * subarrays
+            } else {
+                0
+            },
+        };
+        Ok(SramMacro {
+            spec: spec.clone(),
+            periphery,
+            data: vec![0; spec.rows],
+            reads: 0,
+            writes: 0,
+        })
+    }
+
+    /// Behavioral write of a word.
+    pub fn write(&mut self, row: usize, value: u64) -> Result<()> {
+        if row >= self.spec.rows {
+            bail!("row {row} out of range {}", self.spec.rows);
+        }
+        let mask = if self.spec.word_bits == 64 {
+            u64::MAX
+        } else {
+            (1u64 << self.spec.word_bits) - 1
+        };
+        if value & !mask != 0 {
+            bail!("value {value:#x} exceeds word width {}", self.spec.word_bits);
+        }
+        self.data[row] = value;
+        self.writes += 1;
+        Ok(())
+    }
+
+    /// Behavioral read of a word.
+    pub fn read(&mut self, row: usize) -> Result<u64> {
+        if row >= self.spec.rows {
+            bail!("row {row} out of range {}", self.spec.rows);
+        }
+        self.reads += 1;
+        Ok(self.data[row])
+    }
+
+    /// Load a slice of words starting at row 0 (weight initialisation).
+    pub fn load(&mut self, words: &[u64]) -> Result<()> {
+        if words.len() > self.spec.rows {
+            bail!("{} words exceed {} rows", words.len(), self.spec.rows);
+        }
+        for (i, &w) in words.iter().enumerate() {
+            self.write(i, w)?;
+        }
+        Ok(())
+    }
+
+    /// Which bank/subarray/local row an address maps to (interleaved:
+    /// low bits select the bank for conflict-free sequential streaming).
+    pub fn address_map(&self, row: usize) -> (usize, usize, usize) {
+        let banks = self.spec.banks;
+        let subs = self.spec.subarrays;
+        let bank = row % banks;
+        let sub = (row / banks) % subs;
+        let local = row / (banks * subs);
+        (bank, sub, local)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::spec::SramSpec;
+
+    #[test]
+    fn generate_paper_configs() {
+        for (rows, bits) in [(16, 8), (32, 16), (64, 32)] {
+            let spec = SramSpec::new(rows, bits);
+            let m = SramMacro::generate(&spec).unwrap();
+            assert_eq!(m.periphery.sense_amps, bits);
+            assert_eq!(m.periphery.wl_drivers, rows);
+            assert_eq!(
+                m.periphery.decoder_stages,
+                (usize::BITS - (rows - 1).leading_zeros()) as usize
+            );
+        }
+    }
+
+    #[test]
+    fn read_write_roundtrip() {
+        let mut m = SramMacro::generate(&SramSpec::new(16, 8)).unwrap();
+        for row in 0..16 {
+            m.write(row, (row as u64 * 17) & 0xFF).unwrap();
+        }
+        for row in 0..16 {
+            assert_eq!(m.read(row).unwrap(), (row as u64 * 17) & 0xFF);
+        }
+        assert_eq!(m.writes, 16);
+        assert_eq!(m.reads, 16);
+    }
+
+    #[test]
+    fn bounds_and_width_checks() {
+        let mut m = SramMacro::generate(&SramSpec::new(16, 8)).unwrap();
+        assert!(m.write(16, 0).is_err());
+        assert!(m.write(0, 0x100).is_err());
+        assert!(m.read(99).is_err());
+    }
+
+    #[test]
+    fn banked_address_mapping_covers_all_rows() {
+        let mut spec = SramSpec::new(64, 8);
+        spec.banks = 2;
+        spec.subarrays = 2;
+        let m = SramMacro::generate(&spec).unwrap();
+        let mut seen = std::collections::BTreeSet::new();
+        for row in 0..64 {
+            let (b, s, l) = m.address_map(row);
+            assert!(b < 2 && s < 2 && l < 16);
+            seen.insert((b, s, l));
+        }
+        assert_eq!(seen.len(), 64, "mapping must be injective");
+    }
+
+    #[test]
+    fn mux_ratio_expands_columns() {
+        let mut spec = SramSpec::new(64, 8);
+        spec.mux_ratio = 4;
+        let m = SramMacro::generate(&spec).unwrap();
+        assert_eq!(m.periphery.precharge_units, 32);
+        assert_eq!(m.periphery.sense_amps, 8);
+        assert!(m.periphery.column_mux_legs > 0);
+    }
+}

@@ -1,0 +1,28 @@
+//! SRAM macro compiler (paper §III-D) and its transistor-level
+//! characterization — the substitution for Xyce SPICE + OpenYield
+//! (DESIGN.md §3).
+//!
+//! * [`device`] — long-channel square-law MOSFET model (with a velocity-
+//!   saturation correction) for the FreePDK45 45 nm node;
+//! * [`cell6t`] — the 6T bit cell: DC operating-point solver (bisection on
+//!   the node current balance), butterfly curves, read/write/hold SNM and
+//!   read current, all under per-transistor Vth mismatch;
+//! * [`macro_gen`] — banked/subarrayed array organization with hierarchical
+//!   WL decoders, precharge, write drivers, column mux and sense amps, plus
+//!   a functional read/write behavioral model;
+//! * [`models`] — calibrated area / access-time / power models (the SRAM
+//!   columns of Table II);
+//! * [`fakeram`] — FakeRAM2.0-style LEF + LIB view emission for
+//!   place-and-route black-box integration.
+
+pub mod device;
+pub mod cell6t;
+pub mod macro_gen;
+pub mod models;
+pub mod fakeram;
+pub mod sizing;
+
+pub use cell6t::{Cell6T, CellCorners, SnmReport};
+pub use macro_gen::SramMacro;
+pub use models::{SramArea, SramPower, SramTiming};
+pub use sizing::{optimize as optimize_sizing, SizingResult, SizingTargets};

@@ -1,0 +1,235 @@
+//! Automated transistor sizing optimization (paper §III-D item 1:
+//! "together with automated transistor sizing optimizations", from the
+//! OpenYield integration).
+//!
+//! The optimizer searches the (W_PD, W_PU, W_PG) space for the smallest
+//! cell that meets read-stability, writeability and read-current targets
+//! at the nominal corner plus a k·σ mismatch guard-band — the standard
+//! 6T sizing trade-off: stronger PD helps read SNM but costs area;
+//! stronger PG helps write margin and read current but hurts read SNM.
+//!
+//! Strategy: coarse grid over the legal ratio space, feasibility check at
+//! the guard-band corners, then pick the feasible point with the smallest
+//! total width (area proxy) and locally refine with pattern search.
+
+use anyhow::{bail, Result};
+
+use super::cell6t::{sigma_vth, Cell6T};
+
+/// Sizing requirements.
+#[derive(Clone, Copy, Debug)]
+pub struct SizingTargets {
+    /// Minimum read SNM at the guard-band corner, V.
+    pub min_read_snm: f64,
+    /// Minimum write margin at the guard-band corner, V.
+    pub min_write_margin: f64,
+    /// Minimum read current (nominal), A.
+    pub min_read_current: f64,
+    /// Mismatch guard band in σ (applied in the worst direction).
+    pub k_sigma: f64,
+}
+
+impl Default for SizingTargets {
+    fn default() -> Self {
+        Self {
+            min_read_snm: 0.12,
+            min_write_margin: 0.05,
+            min_read_current: 15e-6,
+            k_sigma: 3.0,
+        }
+    }
+}
+
+/// Optimization result.
+#[derive(Clone, Copy, Debug)]
+pub struct SizingResult {
+    pub wpd: f64,
+    pub wpu: f64,
+    pub wpg: f64,
+    /// Total width (area proxy, in min-width units, ×2 for both halves).
+    pub total_width: f64,
+    /// Guard-banded metrics at the chosen sizing.
+    pub read_snm: f64,
+    pub write_margin: f64,
+    pub read_current: f64,
+    /// Grid + refinement evaluations spent.
+    pub evals: u64,
+}
+
+fn cell(wpd: f64, wpu: f64, wpg: f64) -> Cell6T {
+    Cell6T {
+        wpd,
+        wpu,
+        wpg,
+        dvth: [0.0; 6],
+    }
+}
+
+/// Evaluate the guard-banded metrics for a sizing: read SNM with the
+/// read-hostile mismatch corner (slow PD1, fast PG1), write margin with
+/// the write-hostile corner (fast PD/PU fighting the write, slow PG),
+/// read current with a slow PG.
+fn guard_banded(wpd: f64, wpu: f64, wpg: f64, k: f64) -> (f64, f64, f64, u64) {
+    let base = cell(wpd, wpu, wpg);
+    let sig = sigma_vth(&base);
+    let mut evals = 0u64;
+
+    // Read-hostile: PD1 slow (+kσ), PG1 fast (−kσ).
+    let mut read_cell = base;
+    read_cell.dvth[0] = k * sig[0];
+    read_cell.dvth[2] = -k * sig[2];
+    let r_read = read_cell.characterize_read();
+    evals += 1;
+
+    // Write-hostile: PG1 slow (+kσ), PU2 fast (−kσ) holding the opposite
+    // node up (write fights the cross-coupled pull-up).
+    let mut write_cell = base;
+    write_cell.dvth[2] = k * sig[2];
+    write_cell.dvth[4] = -k * sig[4];
+    let r_write = write_cell.characterize_read();
+    evals += 1;
+
+    // Current-hostile: PG1 and PD1 slow.
+    let mut cur_cell = base;
+    cur_cell.dvth[0] = k * sig[0];
+    cur_cell.dvth[2] = k * sig[2];
+    let r_cur = cur_cell.characterize_read();
+    evals += 1;
+
+    (
+        r_read.read_snm,
+        r_write.write_margin,
+        r_cur.read_current,
+        evals,
+    )
+}
+
+fn feasible(m: (f64, f64, f64, u64), t: &SizingTargets) -> bool {
+    m.0 >= t.min_read_snm && m.1 >= t.min_write_margin && m.2 >= t.min_read_current
+}
+
+/// Run the sizing optimization. Widths are bounded to [1, 4] minimum
+/// widths (the practical 6T envelope).
+pub fn optimize(targets: &SizingTargets) -> Result<SizingResult> {
+    let grid = [1.0, 1.25, 1.5, 2.0, 2.5, 3.0, 4.0];
+    let mut best: Option<SizingResult> = None;
+    let mut total_evals = 0u64;
+    for &wpd in &grid {
+        for &wpu in &[1.0, 1.25, 1.5] {
+            for &wpg in &grid {
+                // Classic legality pre-filter: beta ratio (PD/PG) >= 1 for
+                // read stability, gamma (PG/PU) >= 1 for writeability.
+                if wpd / wpg < 1.0 || wpg / wpu < 0.8 {
+                    continue;
+                }
+                let m = guard_banded(wpd, wpu, wpg, targets.k_sigma);
+                total_evals += m.3;
+                if !feasible(m, targets) {
+                    continue;
+                }
+                let width = 2.0 * (wpd + wpu + wpg);
+                if best
+                    .as_ref()
+                    .map(|b| width < b.total_width)
+                    .unwrap_or(true)
+                {
+                    best = Some(SizingResult {
+                        wpd,
+                        wpu,
+                        wpg,
+                        total_width: width,
+                        read_snm: m.0,
+                        write_margin: m.1,
+                        read_current: m.2,
+                        evals: total_evals,
+                    });
+                }
+            }
+        }
+    }
+    let Some(mut incumbent) = best else {
+        bail!("no feasible sizing in the search envelope for {targets:?}");
+    };
+    // Pattern-search refinement (shrink widths while staying feasible).
+    let mut step = 0.25;
+    while step >= 0.05 {
+        let mut improved = false;
+        for dim in 0..3 {
+            let mut cand = incumbent;
+            match dim {
+                0 => cand.wpd = (cand.wpd - step).max(1.0),
+                1 => cand.wpu = (cand.wpu - step).max(1.0),
+                _ => cand.wpg = (cand.wpg - step).max(1.0),
+            }
+            if cand.wpd / cand.wpg < 1.0 || cand.wpg / cand.wpu < 0.8 {
+                continue;
+            }
+            let m = guard_banded(cand.wpd, cand.wpu, cand.wpg, targets.k_sigma);
+            total_evals += m.3;
+            if feasible(m, targets) {
+                let width = 2.0 * (cand.wpd + cand.wpu + cand.wpg);
+                if width < incumbent.total_width {
+                    incumbent = SizingResult {
+                        total_width: width,
+                        read_snm: m.0,
+                        write_margin: m.1,
+                        read_current: m.2,
+                        evals: total_evals,
+                        ..cand
+                    };
+                    improved = true;
+                }
+            }
+        }
+        if !improved {
+            step *= 0.5;
+        }
+    }
+    incumbent.evals = total_evals;
+    Ok(incumbent)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+    fn default_targets_have_a_feasible_sizing() {
+        let r = optimize(&SizingTargets::default()).unwrap();
+        assert!(r.wpd >= r.wpg, "beta ratio respected: {r:?}");
+        assert!(r.read_snm >= 0.12);
+        assert!(r.write_margin >= 0.05);
+        assert!(r.read_current >= 15e-6);
+        assert!(r.total_width <= 2.0 * (4.0 + 1.5 + 4.0));
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+    fn tighter_snm_target_costs_area() {
+        let loose = optimize(&SizingTargets {
+            min_read_snm: 0.10,
+            ..Default::default()
+        })
+        .unwrap();
+        let tight = optimize(&SizingTargets {
+            min_read_snm: 0.17,
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(
+            tight.total_width >= loose.total_width,
+            "tight {tight:?} vs loose {loose:?}"
+        );
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+    fn impossible_targets_error_cleanly() {
+        let e = optimize(&SizingTargets {
+            min_read_snm: 0.5, // above the hold SNM — unreachable
+            ..Default::default()
+        });
+        assert!(e.is_err());
+    }
+}

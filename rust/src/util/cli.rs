@@ -1,0 +1,179 @@
+//! Tiny CLI argument parser (the offline environment has no `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments and
+//! subcommands. Typed getters parse on demand and produce readable errors.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand, options and positionals.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// First non-flag token (if the caller asked for subcommand mode).
+    pub command: Option<String>,
+    opts: BTreeMap<String, Vec<String>>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    ///
+    /// `boolean_flags` lists options that never take a value; everything else
+    /// written as `--key` consumes the next token as its value (or uses the
+    /// `=`-joined form).
+    pub fn parse<I: IntoIterator<Item = String>>(
+        tokens: I,
+        subcommand: bool,
+        boolean_flags: &[&str],
+    ) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        if subcommand {
+            if let Some(first) = it.peek() {
+                if !first.starts_with('-') {
+                    args.command = it.next();
+                }
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminator: rest is positional
+                    args.positional.extend(it.by_ref());
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    args.opts.entry(k.to_string()).or_default().push(v.to_string());
+                } else if boolean_flags.contains(&body) {
+                    args.flags.push(body.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow!("option --{body} expects a value"))?;
+                    args.opts.entry(body.to_string()).or_default().push(v);
+                }
+            } else if tok.starts_with('-') && tok.len() > 1 {
+                bail!("short options are not supported: {tok}");
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse std::env::args() (skipping argv[0]).
+    pub fn from_env(subcommand: bool, boolean_flags: &[&str]) -> Result<Args> {
+        Self::parse(std::env::args().skip(1), subcommand, boolean_flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.opts
+            .get(name)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn required(&self, name: &str) -> Result<&str> {
+        self.get(name)
+            .ok_or_else(|| anyhow!("missing required option --{name}"))
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<usize>()
+                .with_context(|| format!("--{name} expects an integer, got {s:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<u64>()
+                .with_context(|| format!("--{name} expects an integer, got {s:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<f64>()
+                .with_context(|| format!("--{name} expects a number, got {s:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = Args::parse(
+            toks("ppa --rows 64 --width=32 --verbose extra"),
+            true,
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.command.as_deref(), Some("ppa"));
+        assert_eq!(a.usize_or("rows", 0).unwrap(), 64);
+        assert_eq!(a.usize_or("width", 0).unwrap(), 32);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let e = Args::parse(toks("run --out"), true, &[]).unwrap_err();
+        assert!(e.to_string().contains("--out"));
+    }
+
+    #[test]
+    fn repeated_options_collect() {
+        let a = Args::parse(toks("--mult exact --mult logour"), false, &[]).unwrap();
+        assert_eq!(a.get_all("mult"), vec!["exact", "logour"]);
+        assert_eq!(a.get("mult"), Some("logour")); // last wins for scalar get
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = Args::parse(toks(""), false, &[]).unwrap();
+        assert_eq!(a.usize_or("n", 5).unwrap(), 5);
+        assert!((a.f64_or("x", 1.5).unwrap() - 1.5).abs() < 1e-12);
+        assert!(a.required("name").is_err());
+    }
+
+    #[test]
+    fn double_dash_terminator() {
+        let a = Args::parse(toks("run -- --not-an-option"), true, &[]).unwrap();
+        assert_eq!(a.command.as_deref(), Some("run"));
+        assert_eq!(a.positional, vec!["--not-an-option"]);
+    }
+
+    #[test]
+    fn bad_number_message() {
+        let a = Args::parse(toks("--n abc"), false, &[]).unwrap();
+        let e = a.usize_or("n", 0).unwrap_err();
+        assert!(e.to_string().contains("--n"));
+    }
+}

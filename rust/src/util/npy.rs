@@ -1,0 +1,389 @@
+//! Minimal NumPy `.npy` (format version 1.0) reader/writer.
+//!
+//! This is the interchange format between the Python build path (which emits
+//! approximate-multiplier LUTs, quantized CNN weights, and evaluation
+//! datasets) and the Rust runtime. Only what we need is implemented:
+//! little-endian `i32`, `f32`, `u8`, and `i64` arrays, C-contiguous, any
+//! rank. The header is parsed with a small hand-rolled scanner (no serde in
+//! the offline environment).
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Element type of an array (the subset we use).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    I32,
+    F32,
+    U8,
+    I64,
+}
+
+impl DType {
+    pub fn descr(self) -> &'static str {
+        match self {
+            DType::I32 => "<i4",
+            DType::F32 => "<f4",
+            DType::U8 => "|u1",
+            DType::I64 => "<i8",
+        }
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            DType::I32 | DType::F32 => 4,
+            DType::U8 => 1,
+            DType::I64 => 8,
+        }
+    }
+
+    fn from_descr(s: &str) -> Result<Self> {
+        Ok(match s {
+            "<i4" => DType::I32,
+            "<f4" => DType::F32,
+            "|u1" | "<u1" => DType::U8,
+            "<i8" => DType::I64,
+            other => bail!("unsupported npy dtype descr {other:?}"),
+        })
+    }
+}
+
+/// An n-dimensional array as raw bytes + shape + dtype.
+#[derive(Clone, Debug)]
+pub struct NpyArray {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl NpyArray {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != DType::I32 {
+            bail!("expected i32 array, found {:?}", self.dtype);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            bail!("expected f32 array, found {:?}", self.dtype);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn as_u8(&self) -> Result<Vec<u8>> {
+        if self.dtype != DType::U8 {
+            bail!("expected u8 array, found {:?}", self.dtype);
+        }
+        Ok(self.data.clone())
+    }
+
+    pub fn as_i64(&self) -> Result<Vec<i64>> {
+        if self.dtype != DType::I64 {
+            bail!("expected i64 array, found {:?}", self.dtype);
+        }
+        Ok(self
+            .data
+            .chunks_exact(8)
+            .map(|c| i64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+            .collect())
+    }
+
+    pub fn from_i32(shape: &[usize], values: &[i32]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Self {
+            dtype: DType::I32,
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn from_f32(shape: &[usize], values: &[f32]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Self {
+            dtype: DType::F32,
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn from_u8(shape: &[usize], values: &[u8]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        Self {
+            dtype: DType::U8,
+            shape: shape.to_vec(),
+            data: values.to_vec(),
+        }
+    }
+}
+
+/// Parse the python-dict header, e.g.
+/// `{'descr': '<i4', 'fortran_order': False, 'shape': (256, 256), }`.
+fn parse_header(h: &str) -> Result<(DType, bool, Vec<usize>)> {
+    let grab = |key: &str| -> Result<String> {
+        let kq = format!("'{key}'");
+        let at = h.find(&kq).with_context(|| format!("npy header missing {key}"))?;
+        let rest = &h[at + kq.len()..];
+        let colon = rest.find(':').context("npy header: missing colon")?;
+        Ok(rest[colon + 1..].trim_start().to_string())
+    };
+    let descr_raw = grab("descr")?;
+    let descr = descr_raw
+        .trim_start_matches(['\'', '"'])
+        .chars()
+        .take_while(|c| *c != '\'' && *c != '"')
+        .collect::<String>();
+    let fortran = grab("fortran_order")?.starts_with("True");
+    let shape_raw = grab("shape")?;
+    if !shape_raw.starts_with('(') {
+        bail!("npy header: bad shape field {shape_raw:?}");
+    }
+    let inner: String = shape_raw[1..]
+        .chars()
+        .take_while(|c| *c != ')')
+        .collect();
+    let shape: Vec<usize> = inner
+        .split(',')
+        .map(|s| s.trim())
+        .filter(|s| !s.is_empty())
+        .map(|s| s.parse::<usize>().context("npy header: bad dim"))
+        .collect::<Result<_>>()?;
+    Ok((DType::from_descr(&descr)?, fortran, shape))
+}
+
+/// Read a `.npy` file.
+pub fn read(path: &Path) -> Result<NpyArray> {
+    let bytes =
+        std::fs::read(path).with_context(|| format!("reading npy {}", path.display()))?;
+    read_bytes(&bytes).with_context(|| format!("parsing npy {}", path.display()))
+}
+
+/// Read from an in-memory buffer.
+pub fn read_bytes(bytes: &[u8]) -> Result<NpyArray> {
+    if bytes.len() < 10 || &bytes[..6] != b"\x93NUMPY" {
+        bail!("not a npy file (bad magic)");
+    }
+    let major = bytes[6];
+    let (header_len, header_start) = match major {
+        1 => (
+            u16::from_le_bytes([bytes[8], bytes[9]]) as usize,
+            10usize,
+        ),
+        2 | 3 => (
+            u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize,
+            12usize,
+        ),
+        v => bail!("unsupported npy version {v}"),
+    };
+    let header = std::str::from_utf8(&bytes[header_start..header_start + header_len])
+        .context("npy header not utf8")?;
+    let (dtype, fortran, shape) = parse_header(header)?;
+    if fortran {
+        bail!("fortran-order npy arrays are not supported");
+    }
+    let n: usize = shape.iter().product();
+    let data_start = header_start + header_len;
+    let need = n * dtype.size();
+    if bytes.len() < data_start + need {
+        bail!(
+            "npy payload truncated: need {need} bytes, have {}",
+            bytes.len() - data_start
+        );
+    }
+    Ok(NpyArray {
+        dtype,
+        shape,
+        data: bytes[data_start..data_start + need].to_vec(),
+    })
+}
+
+/// Write a `.npy` file (version 1.0, 64-byte-aligned header).
+pub fn write(path: &Path, arr: &NpyArray) -> Result<()> {
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating npy {}", path.display()))?;
+    write_to(&mut f, arr)
+}
+
+pub fn write_to<W: Write>(w: &mut W, arr: &NpyArray) -> Result<()> {
+    let shape_str = match arr.shape.len() {
+        1 => format!("({},)", arr.shape[0]),
+        _ => format!(
+            "({})",
+            arr.shape
+                .iter()
+                .map(|d| d.to_string())
+                .collect::<Vec<_>>()
+                .join(", ")
+        ),
+    };
+    let mut header = format!(
+        "{{'descr': '{}', 'fortran_order': False, 'shape': {}, }}",
+        arr.dtype.descr(),
+        shape_str
+    );
+    // Pad so that magic(6)+ver(2)+len(2)+header is a multiple of 64, ending in \n.
+    let unpadded = 10 + header.len() + 1;
+    let pad = (64 - unpadded % 64) % 64;
+    header.push_str(&" ".repeat(pad));
+    header.push('\n');
+    w.write_all(b"\x93NUMPY\x01\x00")?;
+    w.write_all(&(header.len() as u16).to_le_bytes())?;
+    w.write_all(header.as_bytes())?;
+    w.write_all(&arr.data)?;
+    Ok(())
+}
+
+/// Convenience: read and keep only the flat i32 payload.
+pub fn read_i32(path: &Path) -> Result<(Vec<usize>, Vec<i32>)> {
+    let a = read(path)?;
+    let v = a.as_i32()?;
+    Ok((a.shape, v))
+}
+
+/// Convenience: read and keep only the flat f32 payload.
+pub fn read_f32(path: &Path) -> Result<(Vec<usize>, Vec<f32>)> {
+    let a = read(path)?;
+    let v = a.as_f32()?;
+    Ok((a.shape, v))
+}
+
+/// Read a whole directory of `.npy` files into (stem, array) pairs.
+pub fn read_dir(dir: &Path) -> Result<Vec<(String, NpyArray)>> {
+    let mut out = Vec::new();
+    let mut entries: Vec<_> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading dir {}", dir.display()))?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().map(|e| e == "npy").unwrap_or(false))
+        .collect();
+    entries.sort();
+    for p in entries {
+        let stem = p
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("")
+            .to_string();
+        out.push((stem, read(&p)?));
+    }
+    Ok(out)
+}
+
+/// Stream-read helper used by tests.
+pub fn read_from<R: Read>(r: &mut R) -> Result<NpyArray> {
+    let mut buf = Vec::new();
+    r.read_to_end(&mut buf)?;
+    read_bytes(&buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_i32() {
+        let arr = NpyArray::from_i32(&[2, 3], &[1, -2, 3, -4, 5, -6]);
+        let mut buf = Vec::new();
+        write_to(&mut buf, &arr).unwrap();
+        let back = read_bytes(&buf).unwrap();
+        assert_eq!(back.dtype, DType::I32);
+        assert_eq!(back.shape, vec![2, 3]);
+        assert_eq!(back.as_i32().unwrap(), vec![1, -2, 3, -4, 5, -6]);
+    }
+
+    #[test]
+    fn roundtrip_f32_1d() {
+        let arr = NpyArray::from_f32(&[4], &[0.5, -1.25, 3.75, 0.0]);
+        let mut buf = Vec::new();
+        write_to(&mut buf, &arr).unwrap();
+        let back = read_bytes(&buf).unwrap();
+        assert_eq!(back.shape, vec![4]);
+        assert_eq!(back.as_f32().unwrap(), vec![0.5, -1.25, 3.75, 0.0]);
+    }
+
+    #[test]
+    fn roundtrip_u8() {
+        let data: Vec<u8> = (0..=255).collect();
+        let arr = NpyArray::from_u8(&[16, 16], &data);
+        let mut buf = Vec::new();
+        write_to(&mut buf, &arr).unwrap();
+        let back = read_bytes(&buf).unwrap();
+        assert_eq!(back.as_u8().unwrap(), data);
+    }
+
+    #[test]
+    fn header_is_64_aligned() {
+        let arr = NpyArray::from_i32(&[1], &[7]);
+        let mut buf = Vec::new();
+        write_to(&mut buf, &arr).unwrap();
+        // data must start at a multiple of 64
+        assert_eq!((buf.len() - 4) % 64, 0);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(read_bytes(b"not a npy").is_err());
+    }
+
+    #[test]
+    fn parses_numpy_style_header_with_spaces() {
+        // Hand-built v1 header mimicking numpy's own output formatting.
+        let header = "{'descr': '<i4', 'fortran_order': False, 'shape': (3,), }";
+        let mut padded = header.to_string();
+        let unpadded = 10 + padded.len() + 1;
+        let pad = (64 - unpadded % 64) % 64;
+        padded.push_str(&" ".repeat(pad));
+        padded.push('\n');
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"\x93NUMPY\x01\x00");
+        buf.extend_from_slice(&(padded.len() as u16).to_le_bytes());
+        buf.extend_from_slice(padded.as_bytes());
+        for v in [10i32, 20, 30] {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        let arr = read_bytes(&buf).unwrap();
+        assert_eq!(arr.as_i32().unwrap(), vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn scalar_dim_zero_rank_rejected_gracefully() {
+        // shape () => product = 1 (empty iterator product); we accept it as len-1.
+        let header = "{'descr': '<f4', 'fortran_order': False, 'shape': (), }";
+        let mut padded = header.to_string();
+        let unpadded = 10 + padded.len() + 1;
+        let pad = (64 - unpadded % 64) % 64;
+        padded.push_str(&" ".repeat(pad));
+        padded.push('\n');
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"\x93NUMPY\x01\x00");
+        buf.extend_from_slice(&(padded.len() as u16).to_le_bytes());
+        buf.extend_from_slice(padded.as_bytes());
+        buf.extend_from_slice(&1.5f32.to_le_bytes());
+        let arr = read_bytes(&buf).unwrap();
+        assert_eq!(arr.as_f32().unwrap(), vec![1.5]);
+    }
+}

@@ -1,0 +1,211 @@
+//! Miniature property-testing harness (no `proptest` crate offline).
+//!
+//! Usage pattern inside a `#[test]`:
+//!
+//! ```ignore
+//! check(1000, 0xSEED, |g| {
+//!     let a = g.u64_bits(8);
+//!     let b = g.u64_bits(8);
+//!     prop_assert(behavioral(a, b) == netlist(a, b), "mismatch");
+//! });
+//! ```
+//!
+//! On failure the harness retries with progressively "smaller" generated
+//! values (halving shrink on integers) and reports the minimal failing case
+//! it found together with the seed, so failures are reproducible.
+
+use crate::util::rng::Pcg32;
+
+/// Value generator handed to properties. Records drawn integers so the
+/// harness can shrink them.
+pub struct Gen<'a> {
+    rng: &'a mut Pcg32,
+    drawn: Vec<u64>,
+    replay: Option<Vec<u64>>,
+    cursor: usize,
+}
+
+impl<'a> Gen<'a> {
+    fn new(rng: &'a mut Pcg32, replay: Option<Vec<u64>>) -> Self {
+        Self {
+            rng,
+            drawn: Vec::new(),
+            replay,
+            cursor: 0,
+        }
+    }
+
+    fn draw(&mut self, fresh: impl FnOnce(&mut Pcg32) -> u64) -> u64 {
+        let v = match &self.replay {
+            Some(vals) if self.cursor < vals.len() => vals[self.cursor],
+            _ => fresh(self.rng),
+        };
+        self.cursor += 1;
+        self.drawn.push(v);
+        v
+    }
+
+    /// Uniform integer with `bits` random low bits.
+    pub fn u64_bits(&mut self, bits: u32) -> u64 {
+        assert!(bits <= 64);
+        let mask = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
+        self.draw(|r| r.next_u64() & mask)
+    }
+
+    /// Uniform in [0, bound).
+    pub fn usize_below(&mut self, bound: usize) -> usize {
+        assert!(bound > 0);
+        self.draw(|r| r.below(bound as u32) as u64) as usize
+    }
+
+    /// Uniform in [lo, hi] inclusive.
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(hi >= lo);
+        lo + self.draw(|r| r.next_u64() % (hi - lo + 1)) % (hi - lo + 1)
+    }
+
+    /// Uniform f64 in [0,1).
+    pub fn f64_unit(&mut self) -> f64 {
+        self.draw(|r| r.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'b, T>(&mut self, xs: &'b [T]) -> &'b T {
+        &xs[self.usize_below(xs.len())]
+    }
+}
+
+/// Outcome of a single property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Assert inside a property.
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Run `cases` random cases of `prop`; on failure shrink by repeatedly
+/// halving each drawn integer, and panic with the minimal counterexample.
+pub fn check<F>(cases: usize, seed: u64, prop: F)
+where
+    F: Fn(&mut Gen) -> PropResult,
+{
+    let mut rng = Pcg32::new(seed);
+    for case in 0..cases {
+        let mut g = Gen::new(&mut rng, None);
+        if let Err(msg) = prop(&mut g) {
+            let failing = g.drawn.clone();
+            let (min_vals, min_msg) = shrink(&prop, failing, msg);
+            panic!(
+                "property failed (seed={seed}, case={case}):\n  {min_msg}\n  minimal draws: {min_vals:?}"
+            );
+        }
+    }
+}
+
+fn shrink<F>(prop: &F, mut vals: Vec<u64>, mut msg: String) -> (Vec<u64>, String)
+where
+    F: Fn(&mut Gen) -> PropResult,
+{
+    let run = |vals: &[u64]| -> Option<String> {
+        let mut dummy_rng = Pcg32::new(0);
+        let mut g = Gen::new(&mut dummy_rng, Some(vals.to_vec()));
+        prop(&mut g).err()
+    };
+    // Per-coordinate minimization: try 0 directly, else binary-search the
+    // smallest failing value assuming per-coordinate monotonicity (exact
+    // for monotone properties, a good heuristic otherwise). Repeat until
+    // a full pass makes no progress.
+    let mut improved = true;
+    let mut passes = 0;
+    while improved && passes < 8 {
+        improved = false;
+        passes += 1;
+        for i in 0..vals.len() {
+            if vals[i] == 0 {
+                continue;
+            }
+            let mut trial = vals.clone();
+            trial[i] = 0;
+            if let Some(m) = run(&trial) {
+                vals = trial;
+                msg = m;
+                improved = true;
+                continue;
+            }
+            // lo passes, hi = vals[i] fails.
+            let mut lo = 0u64;
+            let mut hi = vals[i];
+            while hi - lo > 1 {
+                let mid = lo + (hi - lo) / 2;
+                let mut t = vals.clone();
+                t[i] = mid;
+                match run(&t) {
+                    Some(m) => {
+                        hi = mid;
+                        msg = m;
+                    }
+                    None => lo = mid,
+                }
+            }
+            if hi != vals[i] {
+                vals[i] = hi;
+                improved = true;
+            }
+        }
+    }
+    (vals, msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check(500, 1, |g| {
+            let a = g.u64_bits(16);
+            let b = g.u64_bits(16);
+            prop_assert(a + b == b + a, "addition commutes")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        check(500, 2, |g| {
+            let a = g.u64_bits(8);
+            prop_assert(a < 200, format!("a={a} exceeded"))
+        });
+    }
+
+    #[test]
+    fn shrinker_finds_small_counterexample() {
+        // Capture the panic message to confirm the shrinker reduced the case.
+        let result = std::panic::catch_unwind(|| {
+            check(1000, 3, |g| {
+                let a = g.u64_bits(16);
+                prop_assert(a < 100, format!("a={a}"))
+            });
+        });
+        let err = result.unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        // Minimal failing value for `a < 100` is 100 exactly.
+        assert!(msg.contains("a=100"), "shrunk message: {msg}");
+    }
+
+    #[test]
+    fn choose_picks_valid_elements() {
+        check(200, 4, |g| {
+            let xs = [1, 2, 3];
+            let x = *g.choose(&xs);
+            prop_assert(xs.contains(&x), "chosen element must be in slice")
+        });
+    }
+}

@@ -1,0 +1,328 @@
+//! Small statistics toolkit: running moments, percentiles, histograms, and
+//! the normal CDF / inverse CDF used by the yield engine (FoM computation,
+//! sigma-to-Pf conversion) and the bench harness.
+
+/// Online mean/variance accumulator (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Moments {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Moments {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance.
+    pub fn var(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    /// Sample variance (n-1).
+    pub fn sample_var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    /// Standard error of the mean.
+    pub fn sem(&self) -> f64 {
+        if self.n == 0 {
+            f64::INFINITY
+        } else {
+            (self.sample_var() / self.n as f64).sqrt()
+        }
+    }
+}
+
+/// Percentile of a sample (linear interpolation). `p` in [0, 100].
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Sort a copy and return (p50, p90, p99).
+pub fn latency_percentiles(xs: &[f64]) -> (f64, f64, f64) {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (
+        percentile(&v, 50.0),
+        percentile(&v, 90.0),
+        percentile(&v, 99.0),
+    )
+}
+
+/// Error function, Abramowitz & Stegun 7.1.26 (|err| < 1.5e-7) refined by a
+/// high-accuracy rational approximation (W. J. Cody style) for the tails.
+pub fn erf(x: f64) -> f64 {
+    // Use erfc for large |x| to keep relative accuracy in the tails.
+    if x < 0.0 {
+        return -erf(-x);
+    }
+    1.0 - erfc(x)
+}
+
+/// Complementary error function (good to ~1e-12 relative for x in [0, 10]).
+pub fn erfc(x: f64) -> f64 {
+    if x < 0.0 {
+        return 2.0 - erfc(-x);
+    }
+    // Chebyshev-fitted approximation from Numerical Recipes (erfc_cheb),
+    // |relative error| < 1.2e-7; adequate for Pf ranges down to ~1e-12 in
+    // *absolute* terms which is what the yield engine needs.
+    let z = x;
+    let t = 2.0 / (2.0 + z);
+    let ty = 4.0 * t - 2.0;
+    const COF: [f64; 28] = [
+        -1.3026537197817094,
+        6.4196979235649026e-1,
+        1.9476473204185836e-2,
+        -9.561514786808631e-3,
+        -9.46595344482036e-4,
+        3.66839497852761e-4,
+        4.2523324806907e-5,
+        -2.0278578112534e-5,
+        -1.624290004647e-6,
+        1.303655835580e-6,
+        1.5626441722e-8,
+        -8.5238095915e-8,
+        6.529054439e-9,
+        5.059343495e-9,
+        -9.91364156e-10,
+        -2.27365122e-10,
+        9.6467911e-11,
+        2.394038e-12,
+        -6.886027e-12,
+        8.94487e-13,
+        3.13092e-13,
+        -1.12708e-13,
+        3.81e-16,
+        7.106e-15,
+        -1.523e-15,
+        -9.4e-17,
+        1.21e-16,
+        -2.8e-17,
+    ];
+    let mut d = 0.0;
+    let mut dd = 0.0;
+    for j in (1..COF.len()).rev() {
+        let tmp = d;
+        d = ty * d - dd + COF[j];
+        dd = tmp;
+    }
+    t * (-z * z + 0.5 * (COF[0] + ty * d) - dd).exp()
+}
+
+/// Standard normal CDF.
+pub fn phi(x: f64) -> f64 {
+    0.5 * erfc(-x / std::f64::consts::SQRT_2)
+}
+
+/// Inverse standard normal CDF (Acklam's algorithm, |rel err| < 1.15e-9).
+pub fn phi_inv(p: f64) -> f64 {
+    assert!(p > 0.0 && p < 1.0, "phi_inv domain: got {p}");
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    let p_low = 0.02425;
+    let p_high = 1.0 - p_low;
+    let x = if p < p_low {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= p_high {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    };
+    // One step of Halley refinement.
+    let e = phi(x) - p;
+    let u = e * (2.0 * std::f64::consts::PI).sqrt() * (x * x / 2.0).exp();
+    x - u / (1.0 + x * u / 2.0)
+}
+
+/// Fixed-bin histogram over [lo, hi); values outside are clamped to the
+/// first/last bin. Used for latency reporting and error-distribution plots.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    bins: Vec<u64>,
+    count: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
+        assert!(hi > lo && nbins > 0);
+        Self {
+            lo,
+            hi,
+            bins: vec![0; nbins],
+            count: 0,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        let n = self.bins.len();
+        let idx = ((x - self.lo) / (self.hi - self.lo) * n as f64)
+            .floor()
+            .clamp(0.0, (n - 1) as f64) as usize;
+        self.bins[idx] += 1;
+        self.count += 1;
+    }
+
+    pub fn bins(&self) -> &[u64] {
+        &self.bins
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Approximate quantile from bin midpoints.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let target = (q * self.count as f64) as u64;
+        let mut acc = 0;
+        let w = (self.hi - self.lo) / self.bins.len() as f64;
+        for (i, &b) in self.bins.iter().enumerate() {
+            acc += b;
+            if acc >= target {
+                return self.lo + (i as f64 + 0.5) * w;
+            }
+        }
+        self.hi
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn moments_basic() {
+        let mut m = Moments::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            m.push(x);
+        }
+        assert_eq!(m.count(), 8);
+        assert!((m.mean() - 5.0).abs() < 1e-12);
+        assert!((m.var() - 4.0).abs() < 1e-12);
+        assert!((m.std() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interp() {
+        let v = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert!((percentile(&v, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&v, 50.0) - 3.0).abs() < 1e-12);
+        assert!((percentile(&v, 100.0) - 5.0).abs() < 1e-12);
+        assert!((percentile(&v, 25.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn erf_reference_points() {
+        // Known values (15-digit references).
+        assert!((erf(0.0)).abs() < 1e-12);
+        assert!((erf(1.0) - 0.842700792949715).abs() < 1e-7);
+        assert!((erf(2.0) - 0.995322265018953).abs() < 1e-7);
+        assert!((erf(-1.0) + 0.842700792949715).abs() < 1e-7);
+    }
+
+    #[test]
+    fn phi_and_inverse_roundtrip() {
+        for &p in &[1e-9, 1e-6, 1e-3, 0.1, 0.5, 0.9, 0.999, 1.0 - 1e-6] {
+            let x = phi_inv(p);
+            let p2 = phi(x);
+            assert!(
+                (p2 - p).abs() / p.max(1e-12) < 1e-5,
+                "p={p} x={x} phi(x)={p2}"
+            );
+        }
+        // Canonical points.
+        assert!(phi_inv(0.5).abs() < 1e-9);
+        assert!((phi(1.6448536269514722) - 0.95).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tail_probabilities() {
+        // P(Z < -3) ≈ 1.3498980316300945e-3
+        assert!((phi(-3.0) - 1.3498980316300945e-3).abs() < 1e-9);
+        // P(Z < -6) ≈ 9.865876e-10 (absolute accuracy is what matters)
+        assert!((phi(-6.0) - 9.865876450376946e-10).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_quantiles() {
+        let mut h = Histogram::new(0.0, 100.0, 100);
+        for i in 0..1000 {
+            h.push((i % 100) as f64);
+        }
+        let q50 = h.quantile(0.5);
+        assert!((q50 - 50.0).abs() < 2.0, "q50={q50}");
+    }
+}

@@ -1,0 +1,164 @@
+//! A small fixed-size thread pool with a work-stealing-free, channel-based
+//! design (the offline environment has no tokio/rayon). Two entry points:
+//!
+//! * [`ThreadPool::execute`] — fire-and-forget jobs.
+//! * [`parallel_map`] — the main primitive used by the compiler: evenly
+//!   chunked, deterministic, panics propagate.
+//!
+//! Determinism note: `parallel_map` assigns chunk `i` to a worker but writes
+//! results back by index, so output order never depends on scheduling.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size pool of worker threads consuming from a shared queue.
+pub struct ThreadPool {
+    workers: Vec<thread::JoinHandle<()>>,
+    tx: Option<mpsc::Sender<Job>>,
+}
+
+impl ThreadPool {
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..n)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                thread::spawn(move || loop {
+                    let job = { rx.lock().unwrap().recv() };
+                    match job {
+                        Ok(job) => job(),
+                        Err(_) => break,
+                    }
+                })
+            })
+            .collect();
+        Self {
+            workers,
+            tx: Some(tx),
+        }
+    }
+
+    /// Number of logical CPUs (fallback 4).
+    pub fn default_parallelism() -> usize {
+        thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    }
+
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("worker threads gone");
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Apply `f` to `0..n` across `threads` scoped workers and collect results
+/// in index order. Panics in workers propagate to the caller.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let slots: Vec<Mutex<&mut Option<T>>> = out.iter_mut().map(Mutex::new).collect();
+    thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                **slots[i].lock().unwrap() = Some(v);
+            });
+        }
+    });
+    drop(slots);
+    out.into_iter().map(|v| v.expect("slot not filled")).collect()
+}
+
+/// Parallel fold: run `chunks` independent accumulations of `f` (given the
+/// chunk index) then reduce with `merge`. Deterministic reduction order.
+pub fn parallel_fold<A, F, M>(chunks: usize, threads: usize, f: F, merge: M) -> A
+where
+    A: Send,
+    F: Fn(usize) -> A + Sync,
+    M: Fn(A, A) -> A,
+{
+    let parts = parallel_map(chunks, threads, f);
+    let mut it = parts.into_iter();
+    let first = it.next().expect("parallel_fold needs >= 1 chunk");
+    it.fold(first, merge)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let counter = Arc::new(AtomicU64::new(0));
+        {
+            let pool = ThreadPool::new(4);
+            for _ in 0..100 {
+                let c = Arc::clone(&counter);
+                pool.execute(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            // Drop waits for completion.
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn parallel_map_order_and_completeness() {
+        let v = parallel_map(1000, 8, |i| i * i);
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i * i);
+        }
+    }
+
+    #[test]
+    fn parallel_map_single_thread_path() {
+        let v = parallel_map(5, 1, |i| i + 1);
+        assert_eq!(v, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn parallel_fold_sums() {
+        let total = parallel_fold(16, 4, |i| (i as u64) * 10, |a, b| a + b);
+        assert_eq!(total, (0..16u64).map(|i| i * 10).sum());
+    }
+
+    #[test]
+    fn parallel_map_empty() {
+        let v: Vec<usize> = parallel_map(0, 4, |i| i);
+        assert!(v.is_empty());
+    }
+}

@@ -1,0 +1,137 @@
+//! `openacm yield` — reproduce Table V: MC vs MNIS yield analysis on
+//! trimmed N×2 SRAM arrays.
+
+use anyhow::Result;
+
+use super::{run_mc, run_mnis, SramYieldProblem};
+use crate::bench::harness::{sci, Table};
+use crate::util::cli::Args;
+use crate::util::threadpool::ThreadPool;
+
+/// One Table V row.
+#[derive(Clone, Debug)]
+pub struct YieldRow {
+    pub size: usize,
+    pub mc_pf: f64,
+    pub mc_fom: f64,
+    pub mc_sims: u64,
+    pub mnis_pf: f64,
+    pub mnis_fom: f64,
+    pub mnis_sims: u64,
+}
+
+impl YieldRow {
+    pub fn speedup(&self) -> f64 {
+        self.mc_sims as f64 / self.mnis_sims.max(1) as f64
+    }
+}
+
+/// Run the comparison for one trimmed array size.
+pub fn run_size(
+    rows: usize,
+    fom_target: f64,
+    mc_max: u64,
+    mnis_max: u64,
+    seed: u64,
+    threads: usize,
+) -> YieldRow {
+    let problem = SramYieldProblem::table5(rows);
+    let mc = run_mc(&problem, fom_target, mc_max, seed, threads);
+    let is = run_mnis(&problem, fom_target, mnis_max, seed);
+    YieldRow {
+        size: rows,
+        mc_pf: mc.pf,
+        mc_fom: mc.fom,
+        mc_sims: mc.sims,
+        mnis_pf: is.pf,
+        mnis_fom: is.fom,
+        mnis_sims: is.sims,
+    }
+}
+
+/// Build the Table V table for a list of sizes.
+pub fn table5(rows: &[YieldRow]) -> Table {
+    let mut t = Table::new(
+        "Table V: MC vs MNIS yield analysis (trimmed Nx2 arrays)",
+        &[
+            "Size", "MC Pf", "MC FoM", "MC #Sim", "MNIS Pf", "MNIS FoM", "MNIS #Sim", "Speedup",
+        ],
+    );
+    for r in rows {
+        t.row(&[
+            format!("{}x2", r.size),
+            sci(r.mc_pf),
+            format!("{:.2}", r.mc_fom),
+            r.mc_sims.to_string(),
+            sci(r.mnis_pf),
+            format!("{:.2}", r.mnis_fom),
+            r.mnis_sims.to_string(),
+            format!("{:.1}x", r.speedup()),
+        ]);
+    }
+    t
+}
+
+pub fn cmd_yield(args: &Args) -> Result<()> {
+    let fom = args.f64_or("fom", 0.05)?;
+    let mc_max = args.u64_or("mc-max", 500_000)?;
+    let mnis_max = args.u64_or("mnis-max", 50_000)?;
+    let seed = args.u64_or("seed", 2026)?;
+    let threads = args.usize_or("threads", ThreadPool::default_parallelism())?;
+    let sizes: Vec<usize> = match args.get("size") {
+        Some(s) => vec![s.parse()?],
+        None => vec![16, 32, 64],
+    };
+    let mut out = Vec::new();
+    for rows in sizes {
+        eprintln!("running {rows}x2 (MC then MNIS)...");
+        out.push(run_size(rows, fom, mc_max, mnis_max, seed, threads));
+    }
+    table5(&out).print();
+    println!(
+        "\npaper Table V reference: 16x2 Pf 1.6E-4 (55,600 sims) vs MNIS 3.2E-4 (2,985) = 18x;\n\
+         32x2 6.4E-2 (22,900) vs 1.7E-2 (2,260) = 10x; 64x2 3.9E-3 (41,500) vs 1.5E-3 (4,260) = 9.7x"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+    fn small_yield_run_produces_consistent_estimates() {
+        // Loose FoM + small caps so the test runs in seconds.
+        let row = run_size(16, 0.5, 4_000, 4_000, 7, 2);
+        assert!(row.mc_sims > 0 && row.mnis_sims > 0);
+        // Both estimators must agree on the Pf decade when both found
+        // failures.
+        if row.mc_pf > 0.0 && row.mnis_pf > 0.0 {
+            let ratio = row.mc_pf / row.mnis_pf;
+            assert!(
+                (0.02..50.0).contains(&ratio),
+                "mc {} vs mnis {}",
+                row.mc_pf,
+                row.mnis_pf
+            );
+        }
+    }
+
+    #[test]
+    fn table_renders_all_columns() {
+        let t = table5(&[YieldRow {
+            size: 16,
+            mc_pf: 1.6e-4,
+            mc_fom: 0.1,
+            mc_sims: 55_600,
+            mnis_pf: 3.2e-4,
+            mnis_fom: 0.05,
+            mnis_sims: 2_985,
+
+        }]);
+        let s = t.render();
+        assert!(s.contains("16x2"));
+        assert!(s.contains("18.6x")); // 55600/2985
+    }
+}

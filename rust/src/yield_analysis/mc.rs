@@ -1,0 +1,132 @@
+//! Plain Monte-Carlo yield estimation with FoM-based sequential stopping.
+//!
+//! FoM = std(P̂f)/P̂f (the paper's Table V figure of merit). For a Bernoulli
+//! estimator, std(P̂f) = sqrt(Pf(1−Pf)/N), so the run stops once the
+//! *empirical* FoM reaches the target (or the simulation budget is spent).
+
+use super::problem::FailureProblem;
+use crate::util::rng::Pcg32;
+use crate::util::threadpool::parallel_fold;
+
+/// Monte-Carlo result.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct McResult {
+    pub pf: f64,
+    pub fom: f64,
+    pub sims: u64,
+    pub failures: u64,
+}
+
+/// Run MC until `fom_target` is reached or `max_sims` is exhausted.
+/// Deterministic for a given seed; runs in `threads` parallel chunks.
+pub fn run_mc<P: FailureProblem>(
+    problem: &P,
+    fom_target: f64,
+    max_sims: u64,
+    seed: u64,
+    threads: usize,
+) -> McResult {
+    let dims = problem.dims();
+    let chunk: u64 = 1000;
+    let mut total: u64 = 0;
+    let mut fails: u64 = 0;
+    let mut round = 0u64;
+    while total < max_sims {
+        let chunks = threads.max(1) as u64;
+        let this_round: u64 = (chunk * chunks).min(max_sims - total);
+        let per_chunk = this_round.div_ceil(chunks);
+        let new_fails = parallel_fold(
+            chunks as usize,
+            threads,
+            |ci| {
+                let mut rng =
+                    Pcg32::new(seed ^ (round << 20) ^ ci as u64).fork(0x4D43 ^ ci as u64);
+                let mut x = vec![0f64; dims];
+                let n = per_chunk.min(this_round.saturating_sub(ci as u64 * per_chunk));
+                let mut f = 0u64;
+                for _ in 0..n {
+                    rng.fill_gaussian(&mut x);
+                    if problem.fails(&x) {
+                        f += 1;
+                    }
+                }
+                f
+            },
+            |a, b| a + b,
+        );
+        fails += new_fails;
+        total += this_round;
+        round += 1;
+        if fails >= 10 {
+            let pf = fails as f64 / total as f64;
+            let fom = ((1.0 - pf) / (pf * total as f64)).sqrt();
+            if fom <= fom_target {
+                return McResult {
+                    pf,
+                    fom,
+                    sims: total,
+                    failures: fails,
+                };
+            }
+        }
+    }
+    let pf = fails as f64 / total.max(1) as f64;
+    let fom = if pf > 0.0 {
+        ((1.0 - pf) / (pf * total as f64)).sqrt()
+    } else {
+        f64::INFINITY
+    };
+    McResult {
+        pf,
+        fom,
+        sims: total,
+        failures: fails,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::yield_analysis::problem::LinearProblem;
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+    fn estimates_known_pf() {
+        // Pf = Φ(−2) ≈ 2.275e-2.
+        let p = LinearProblem::new(vec![1.0, 0.5, -0.25], 2.0);
+        let r = run_mc(&p, 0.1, 200_000, 42, 4);
+        let exact = p.exact_pf();
+        assert!(
+            (r.pf - exact).abs() / exact < 0.3,
+            "pf {} vs exact {exact}",
+            r.pf
+        );
+        assert!(r.fom <= 0.1 + 1e-9);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let p = LinearProblem::new(vec![1.0], 1.5);
+        let a = run_mc(&p, 0.2, 20_000, 7, 2);
+        let b = run_mc(&p, 0.2, 20_000, 7, 2);
+        assert_eq!(a.failures, b.failures);
+        assert_eq!(a.sims, b.sims);
+    }
+
+    #[test]
+    fn budget_cap_respected() {
+        // Pf ~ Φ(−5) ≈ 2.9e-7: cannot hit FoM 0.1 within 10k sims.
+        let p = LinearProblem::new(vec![1.0], 5.0);
+        let r = run_mc(&p, 0.1, 10_000, 1, 2);
+        assert_eq!(r.sims, 10_000);
+        assert!(r.fom > 0.1 || r.failures == 0);
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+    fn rarer_events_need_more_sims() {
+        let easy = run_mc(&LinearProblem::new(vec![1.0], 1.0), 0.1, 500_000, 3, 4);
+        let hard = run_mc(&LinearProblem::new(vec![1.0], 2.5), 0.1, 500_000, 3, 4);
+        assert!(hard.sims > easy.sims, "hard {} <= easy {}", hard.sims, easy.sims);
+    }
+}

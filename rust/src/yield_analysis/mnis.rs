@@ -1,0 +1,293 @@
+//! Mean-shifted (minimum-norm) importance sampling — MNIS [29]
+//! ("Breaking the simulation barrier: SRAM evaluation through norm
+//! minimization", Dolecek et al., ICCAD 2008).
+//!
+//! Two phases:
+//!
+//! 1. **Norm minimization** — search the variation space for the failure
+//!    point closest to the origin (the dominant saddle point of the tail
+//!    integral): directional bisection over random + coordinate directions,
+//!    then pattern-search refinement.
+//! 2. **Shifted sampling** — draw from N(x*, I) and reweight each sample by
+//!    the likelihood ratio `w(y) = φ(y)/φ(y−x*) = exp(−y·x* + |x*|²/2)`;
+//!    the estimator is the weighted failure mean, with a sequential stop on
+//!    the empirical FoM of the weighted estimator.
+//!
+//! Every `fails()` evaluation (search *and* sampling) is counted in
+//! `sims`, so the Table V speedup comparison against MC is fair.
+
+use super::problem::FailureProblem;
+use crate::util::rng::Pcg32;
+
+/// MNIS result.
+#[derive(Clone, Debug, Default)]
+pub struct MnisResult {
+    pub pf: f64,
+    pub fom: f64,
+    /// Total simulator invocations (search + sampling).
+    pub sims: u64,
+    /// Norm-minimization evaluations only.
+    pub search_sims: u64,
+    /// The mean-shift point found by phase 1.
+    pub shift: Vec<f64>,
+    /// |x*| — the minimum-norm distance to failure, in σ units.
+    pub beta: f64,
+}
+
+struct CountingProblem<'a, P: FailureProblem> {
+    inner: &'a P,
+    count: std::sync::atomic::AtomicU64,
+}
+
+impl<'a, P: FailureProblem> CountingProblem<'a, P> {
+    fn new(inner: &'a P) -> Self {
+        Self {
+            inner,
+            count: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    fn fails(&self, x: &[f64]) -> bool {
+        self.count
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.inner.fails(x)
+    }
+
+    fn count(&self) -> u64 {
+        self.count.load(std::sync::atomic::Ordering::Relaxed)
+    }
+}
+
+/// Phase 1: find a minimum-norm failing point by directional bisection.
+fn norm_minimize<P: FailureProblem>(
+    problem: &CountingProblem<'_, P>,
+    dims: usize,
+    seed: u64,
+    n_directions: usize,
+) -> Option<Vec<f64>> {
+    let mut rng = Pcg32::new(seed ^ 0x4D4E4953);
+    let t_max = 8.0;
+    let mut best: Option<(f64, Vec<f64>)> = None;
+
+    let try_direction = |d: &[f64], problem: &CountingProblem<'_, P>, best: &mut Option<(f64, Vec<f64>)>| {
+        let norm = d.iter().map(|v| v * v).sum::<f64>().sqrt();
+        if norm < 1e-12 {
+            return;
+        }
+        let dir: Vec<f64> = d.iter().map(|v| v / norm).collect();
+        // Skip directions that do not fail even at t_max.
+        let at = |t: f64| -> Vec<f64> { dir.iter().map(|v| v * t).collect() };
+        // Prune: if we already have a better radius, only probe just below it.
+        let probe_t = best.as_ref().map(|(r, _)| *r).unwrap_or(t_max).min(t_max);
+        if !problem.fails(&at(probe_t)) {
+            return;
+        }
+        // Bisect the boundary in [0, probe_t].
+        let (mut lo, mut hi) = (0.0f64, probe_t);
+        for _ in 0..18 {
+            let mid = 0.5 * (lo + hi);
+            if problem.fails(&at(mid)) {
+                hi = mid;
+            } else {
+                lo = mid;
+            }
+        }
+        let r = hi;
+        if best.as_ref().map(|(br, _)| r < *br).unwrap_or(true) {
+            *best = Some((r, at(r)));
+        }
+    };
+
+    // Coordinate directions (±eᵢ) first: cheap and often near-optimal for
+    // monotone metrics.
+    for i in 0..dims {
+        for sgn in [1.0, -1.0] {
+            let mut d = vec![0.0; dims];
+            d[i] = sgn;
+            try_direction(&d, problem, &mut best);
+        }
+    }
+    // Random directions.
+    let mut d = vec![0.0; dims];
+    for _ in 0..n_directions {
+        rng.fill_gaussian(&mut d);
+        try_direction(&d, problem, &mut best);
+    }
+    // Pattern-search refinement around the incumbent.
+    if let Some((_, x0)) = best.clone() {
+        let mut x = x0;
+        let mut step = 0.25;
+        while step > 0.02 {
+            let mut improved = false;
+            for i in 0..dims {
+                for sgn in [1.0, -1.0] {
+                    let mut cand = x.clone();
+                    cand[i] += sgn * step;
+                    let r_cand = cand.iter().map(|v| v * v).sum::<f64>().sqrt();
+                    let r_cur = x.iter().map(|v| v * v).sum::<f64>().sqrt();
+                    if r_cand < r_cur && problem.fails(&cand) {
+                        x = cand;
+                        improved = true;
+                    }
+                }
+            }
+            if !improved {
+                step *= 0.5;
+            }
+        }
+        let r = x.iter().map(|v| v * v).sum::<f64>().sqrt();
+        best = Some((r, x));
+    }
+    best.map(|(_, x)| x)
+}
+
+/// Run MNIS until `fom_target` or `max_sims`.
+pub fn run_mnis<P: FailureProblem>(
+    problem: &P,
+    fom_target: f64,
+    max_sims: u64,
+    seed: u64,
+) -> MnisResult {
+    let dims = problem.dims();
+    let counting = CountingProblem::new(problem);
+    let shift = match norm_minimize(&counting, dims, seed, 24) {
+        Some(s) => s,
+        None => {
+            // No failure found in any direction: report Pf ~ 0.
+            return MnisResult {
+                pf: 0.0,
+                fom: f64::INFINITY,
+                sims: counting.count(),
+                search_sims: counting.count(),
+                shift: vec![0.0; dims],
+                beta: f64::INFINITY,
+            };
+        }
+    };
+    let search_sims = counting.count();
+    let beta = shift.iter().map(|v| v * v).sum::<f64>().sqrt();
+    let shift_sq_half = 0.5 * beta * beta;
+
+    let mut rng = Pcg32::new(seed ^ 0x49532e32);
+    let mut sum_w = 0f64;
+    let mut sum_w2 = 0f64;
+    let mut n: u64 = 0;
+    let mut fails: u64 = 0;
+    let mut y = vec![0f64; dims];
+    let mut z = vec![0f64; dims];
+    let check_every = 500u64;
+    while counting.count() < max_sims {
+        rng.fill_gaussian(&mut z);
+        for i in 0..dims {
+            y[i] = shift[i] + z[i];
+        }
+        n += 1;
+        if counting.fails(&y) {
+            fails += 1;
+            let dot: f64 = y.iter().zip(&shift).map(|(a, b)| a * b).sum();
+            let w = (-dot + shift_sq_half).exp();
+            sum_w += w;
+            sum_w2 += w * w;
+        }
+        if n % check_every == 0 && fails >= 10 {
+            let pf = sum_w / n as f64;
+            let var = (sum_w2 / n as f64 - pf * pf) / n as f64;
+            let fom = var.max(0.0).sqrt() / pf;
+            if fom <= fom_target {
+                return MnisResult {
+                    pf,
+                    fom,
+                    sims: counting.count(),
+                    search_sims,
+                    shift,
+                    beta,
+                };
+            }
+        }
+    }
+    let pf = if n > 0 { sum_w / n as f64 } else { 0.0 };
+    let var = if n > 0 {
+        (sum_w2 / n as f64 - pf * pf) / n as f64
+    } else {
+        f64::INFINITY
+    };
+    MnisResult {
+        pf,
+        fom: if pf > 0.0 {
+            var.max(0.0).sqrt() / pf
+        } else {
+            f64::INFINITY
+        },
+        sims: counting.count(),
+        search_sims,
+        shift,
+        beta,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::yield_analysis::mc::run_mc;
+    use crate::yield_analysis::problem::LinearProblem;
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+    fn estimates_known_tail_pf() {
+        // Pf = Φ(−3.5) ≈ 2.33e-4 — deep enough that MC at FoM 0.1 would
+        // need ~400k sims.
+        let p = LinearProblem::new(vec![1.0, -0.5, 0.25, 0.1], 3.5);
+        let r = run_mnis(&p, 0.1, 300_000, 11);
+        let exact = p.exact_pf();
+        assert!(
+            (r.pf - exact).abs() / exact < 0.35,
+            "pf {} vs exact {exact}",
+            r.pf
+        );
+        assert!(r.fom <= 0.1 + 1e-9, "fom {}", r.fom);
+        // The min-norm point of a linear boundary is at distance β.
+        assert!((r.beta - 3.5).abs() < 0.25, "beta {}", r.beta);
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+    fn mnis_beats_mc_on_sims_for_same_fom() {
+        let p = LinearProblem::new(vec![0.8, 0.6], 3.0); // Pf ≈ 1.35e-3
+        let mc = run_mc(&p, 0.15, 2_000_000, 5, 4);
+        let is = run_mnis(&p, 0.15, 2_000_000, 5);
+        assert!(mc.fom <= 0.15 + 1e-9 && is.fom <= 0.15 + 1e-9);
+        let speedup = mc.sims as f64 / is.sims as f64;
+        assert!(
+            speedup > 4.0,
+            "expected >4x speedup, got {speedup:.1} ({} vs {})",
+            mc.sims,
+            is.sims
+        );
+    }
+
+    #[test]
+    fn handles_unreachable_failure_region() {
+        // β = 12: nothing fails within the search radius → Pf 0 gracefully.
+        let p = LinearProblem::new(vec![1.0], 12.0);
+        let r = run_mnis(&p, 0.1, 10_000, 3);
+        assert_eq!(r.pf, 0.0);
+        assert!(r.fom.is_infinite());
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let p = LinearProblem::new(vec![1.0, 1.0], 3.0);
+        let a = run_mnis(&p, 0.2, 100_000, 9);
+        let b = run_mnis(&p, 0.2, 100_000, 9);
+        assert_eq!(a.sims, b.sims);
+        assert!((a.pf - b.pf).abs() < 1e-15);
+    }
+
+    #[test]
+    fn search_cost_is_counted() {
+        let p = LinearProblem::new(vec![1.0, 1.0], 3.0);
+        let r = run_mnis(&p, 0.2, 100_000, 13);
+        assert!(r.search_sims > 0);
+        assert!(r.sims > r.search_sims);
+    }
+}

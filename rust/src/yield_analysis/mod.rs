@@ -1,0 +1,18 @@
+//! Variation-aware yield analysis (paper §III-D item 1 and §V-C, Table V):
+//! plain Monte-Carlo versus Mean-shifted (minimum-norm) Importance Sampling
+//! (MNIS [29]) on the SRAM cell's 6-dimensional local-mismatch space.
+//!
+//! The failure metric is the OpenYield-style combination of read-stability
+//! (read SNM below a critical margin), writeability (write margin below
+//! zero) and access-time (bit-line development too slow for the sense
+//! window given the sampled read current and the array's BL/WL loading —
+//! the "trimmed N×2 array with full WL parasitics" setup of Table V).
+
+pub mod problem;
+pub mod mc;
+pub mod mnis;
+pub mod cli;
+
+pub use mc::{run_mc, McResult};
+pub use mnis::{run_mnis, MnisResult};
+pub use problem::{FailureProblem, SramYieldProblem};

@@ -1,0 +1,89 @@
+//! Cross-language consistency: the Python build path
+//! (`python/compile/mults.py`) and the Rust multiplier library must produce
+//! bit-identical product LUTs — otherwise the application-level results
+//! (Tables III/IV) and the AOT graph would silently diverge from the
+//! hardware the compiler generates.
+//!
+//! Requires `make artifacts` (skips with a message when absent, so plain
+//! `cargo test` works in a fresh checkout).
+
+use std::path::Path;
+
+use openacm::config::spec::MultFamily;
+use openacm::mult::behavioral::{int8_lut, paper_families};
+use openacm::util::npy;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("luts").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: artifacts/ missing — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+fn python_and_rust_luts_are_bit_identical() {
+    let Some(dir) = artifacts_dir() else { return };
+    for (name, family) in paper_families() {
+        let path = dir.join(format!("luts/lut_{name}.npy"));
+        let (shape, py_lut) = npy::read_i32(&path).expect("reading python lut");
+        assert_eq!(shape, vec![256, 256], "{name} shape");
+        let rust_lut = int8_lut(&family);
+        let mismatches: Vec<usize> = (0..65536)
+            .filter(|&i| py_lut[i] != rust_lut[i])
+            .take(5)
+            .collect();
+        assert!(
+            mismatches.is_empty(),
+            "{name}: {} mismatches, first at {:?} (py={}, rust={})",
+            (0..65536).filter(|&i| py_lut[i] != rust_lut[i]).count(),
+            mismatches.first(),
+            py_lut[mismatches[0]],
+            rust_lut[mismatches[0]],
+        );
+    }
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+fn lut_error_statistics_match_behavioral_models() {
+    let Some(dir) = artifacts_dir() else { return };
+    // NMED computed from the python LUT must match the rust exhaustive
+    // error metrics (they are the same table, but this guards the
+    // sign-magnitude indexing convention end to end).
+    let (_, lut) = npy::read_i32(&dir.join("luts/lut_logour.npy")).unwrap();
+    let mut abs_sum = 0f64;
+    for a in 0..256i64 {
+        for b in 0..256i64 {
+            let sa = if a >= 128 { a - 256 } else { a };
+            let sb = if b >= 128 { b - 256 } else { b };
+            let got = lut[(a as usize) << 8 | b as usize] as i64;
+            abs_sum += (got - sa * sb).abs() as f64;
+        }
+    }
+    let nmed_lut = abs_sum / 65536.0 / (127.0 * 127.0);
+    let rust =
+        openacm::mult::error_metrics::exhaustive(&MultFamily::LogOur, 8).nmed;
+    // Same family, unsigned-domain NMED vs signed-domain: same order of
+    // magnitude and within 2x (the signed table includes |a|=128).
+    assert!(
+        (nmed_lut / rust) > 0.4 && (nmed_lut / rust) < 2.5,
+        "lut {nmed_lut} vs rust {rust}"
+    );
+}
+
+#[test]
+fn quantized_weights_load_into_rust_model() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cnn = openacm::nn::model::QuantCnn::load(dir).expect("loading weights");
+    assert_eq!(cnn.conv1.w_q.len(), 9 * 8);
+    assert_eq!(cnn.conv2.w_q.len(), 72 * 16);
+    assert_eq!(cnn.fc1.w_q.len(), 64 * 32);
+    assert_eq!(cnn.fc2.w_q.len(), 32 * 10);
+    assert!(cnn.conv1.in_scale > 0.0 && cnn.conv1.w_scale > 0.0);
+    // Weights are genuine int8 values.
+    assert!(cnn.fc2.w_q.iter().all(|&w| (-127..=127).contains(&(w as i64))));
+}

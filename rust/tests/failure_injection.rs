@@ -1,0 +1,144 @@
+//! Failure injection: corrupted/incomplete artifact bundles must produce
+//! clean, actionable errors — never panics or silent misbehavior — because
+//! the coordinator loads these at service start.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use openacm::runtime::ArtifactStore;
+use openacm::util::npy::{self, NpyArray};
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("openacm_fi_{tag}_{}", std::process::id()));
+    fs::remove_dir_all(&d).ok();
+    fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Build a minimal structurally-valid artifact dir.
+fn minimal_artifacts(tag: &str) -> PathBuf {
+    let d = fresh_dir(tag);
+    fs::write(d.join("model.hlo.txt"), "HloModule fake").unwrap();
+    fs::write(d.join("manifest.txt"), "batch=32\n").unwrap();
+    fs::create_dir_all(d.join("luts")).unwrap();
+    let lut = NpyArray::from_i32(&[256, 256], &vec![0i32; 65536]);
+    npy::write(&d.join("luts/lut_exact.npy"), &lut).unwrap();
+    fs::create_dir_all(d.join("dataset")).unwrap();
+    npy::write(
+        &d.join("dataset/test_images.npy"),
+        &NpyArray::from_u8(&[2, 16, 16], &vec![0u8; 512]),
+    )
+    .unwrap();
+    let labels = NpyArray {
+        dtype: openacm::util::npy::DType::I64,
+        shape: vec![2],
+        data: vec![0u8; 16],
+    };
+    npy::write(&d.join("dataset/test_labels.npy"), &labels).unwrap();
+    fs::create_dir_all(d.join("weights")).unwrap();
+    for (name, k, n) in [("conv1", 9, 8), ("conv2", 72, 16), ("fc1", 64, 32), ("fc2", 32, 10)] {
+        npy::write(
+            &d.join(format!("weights/{name}_q.npy")),
+            &NpyArray::from_i32(&[k, n], &vec![0i32; k * n]),
+        )
+        .unwrap();
+        npy::write(
+            &d.join(format!("weights/{name}_b.npy")),
+            &NpyArray::from_f32(&[n], &vec![0f32; n]),
+        )
+        .unwrap();
+    }
+    npy::write(
+        &d.join("weights/scales.npy"),
+        &NpyArray::from_f32(&[8], &[0.01; 8]),
+    )
+    .unwrap();
+    d
+}
+
+#[test]
+fn minimal_bundle_loads() {
+    let d = minimal_artifacts("ok");
+    let s = ArtifactStore::load(&d).unwrap();
+    assert_eq!(s.n_images, 2);
+    assert_eq!(s.batch, 32);
+    assert_eq!(s.weights.len(), 8);
+    fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn wrong_size_lut_is_rejected() {
+    let d = minimal_artifacts("badlut");
+    let bad = NpyArray::from_i32(&[16, 16], &vec![0i32; 256]);
+    npy::write(&d.join("luts/lut_exact.npy"), &bad).unwrap();
+    let e = ArtifactStore::load(&d).unwrap_err();
+    assert!(e.to_string().contains("65536"), "{e:#}");
+    fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn truncated_npy_is_rejected_not_panicking() {
+    let d = minimal_artifacts("trunc");
+    let path = d.join("luts/lut_exact.npy");
+    let bytes = fs::read(&path).unwrap();
+    fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+    let e = ArtifactStore::load(&d).unwrap_err();
+    assert!(
+        format!("{e:#}").contains("truncated") || format!("{e:#}").contains("parsing"),
+        "{e:#}"
+    );
+    fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn missing_weights_are_reported_by_name() {
+    let d = minimal_artifacts("noweights");
+    fs::remove_file(d.join("weights/fc2_q.npy")).unwrap();
+    let e = ArtifactStore::load(&d).unwrap_err();
+    assert!(format!("{e:#}").contains("fc2_q"), "{e:#}");
+    fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn label_image_count_mismatch_is_rejected() {
+    let d = minimal_artifacts("mismatch");
+    let labels = NpyArray {
+        dtype: openacm::util::npy::DType::I64,
+        shape: vec![3],
+        data: vec![0u8; 24],
+    };
+    npy::write(&d.join("dataset/test_labels.npy"), &labels).unwrap();
+    let e = ArtifactStore::load(&d).unwrap_err();
+    assert!(format!("{e:#}").contains("labels"), "{e:#}");
+    fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn garbage_hlo_fails_at_compile_not_load() {
+    // The store only checks presence; the runtime must surface a parse
+    // error with the file path in context.
+    let d = minimal_artifacts("badhlo");
+    let s = ArtifactStore::load(&d).unwrap();
+    let rt = openacm::runtime::Runtime::cpu().unwrap();
+    let e = match rt.compile_hlo_text(&s.model_hlo) {
+        Err(e) => e,
+        Ok(_) => panic!("garbage HLO must not compile"),
+    };
+    assert!(format!("{e:#}").contains("model.hlo"), "{e:#}");
+    fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn corrupt_weight_dtype_is_rejected_by_weight_literals() {
+    let d = minimal_artifacts("baddtype");
+    // biases written as i32 instead of f32 → weight_literals accepts i32
+    // (it is a legal operand type) but the QuantCnn loader must reject it.
+    npy::write(
+        &d.join("weights/conv1_b.npy"),
+        &NpyArray::from_i32(&[8], &vec![0i32; 8]),
+    )
+    .unwrap();
+    let e = openacm::nn::model::QuantCnn::load(Path::new(&d)).unwrap_err();
+    assert!(format!("{e:#}").contains("f32"), "{e:#}");
+    fs::remove_dir_all(&d).ok();
+}

@@ -1,0 +1,59 @@
+//! The shipped spec files in `specs/` must parse, validate, and run
+//! through the whole compiler front end — they are the documented entry
+//! point for users.
+
+use std::path::Path;
+
+use openacm::config::spec::MultFamily;
+use openacm::config::toml::TomlDoc;
+
+fn specs() -> Vec<std::path::PathBuf> {
+    let mut v: Vec<_> = std::fs::read_dir("specs")
+        .expect("specs/ directory")
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().map(|e| e == "toml").unwrap_or(false))
+        .collect();
+    v.sort();
+    assert!(!v.is_empty(), "no spec files shipped");
+    v
+}
+
+#[test]
+fn all_shipped_specs_parse_and_validate() {
+    for path in specs() {
+        let spec = TomlDoc::load(&path)
+            .and_then(|d| d.to_macro_spec())
+            .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+        spec.validate().unwrap();
+    }
+}
+
+#[test]
+fn shipped_specs_cover_the_paper_design_points() {
+    let parsed: Vec<_> = specs()
+        .iter()
+        .map(|p| TomlDoc::load(p).unwrap().to_macro_spec().unwrap())
+        .collect();
+    assert!(parsed
+        .iter()
+        .any(|s| s.sram.rows == 16 && matches!(s.mult.family, MultFamily::Approx42 { .. })));
+    assert!(parsed
+        .iter()
+        .any(|s| s.sram.rows == 64 && matches!(s.mult.family, MultFamily::LogOur)));
+    assert!(parsed.iter().any(|s| s.sram.banks > 1 || s.sram.mux_ratio > 1));
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+fn specs_run_through_the_full_compiler() {
+    let tmp = std::env::temp_dir().join(format!("openacm_specs_{}", std::process::id()));
+    for path in specs() {
+        let spec = TomlDoc::load(&path).unwrap().to_macro_spec().unwrap();
+        let out = tmp.join(path.file_stem().unwrap());
+        let art = openacm::flow::generate_all(&spec, Path::new(&out))
+            .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+        assert!(art.files.len() >= 10, "{}: thin bundle", path.display());
+    }
+    std::fs::remove_dir_all(&tmp).ok();
+}

@@ -9,13 +9,49 @@
 use openacm::bench::harness::{bench, black_box};
 use openacm::config::spec::{CompressorKind, MultFamily};
 use openacm::mult::behavioral::int8_lut;
-use openacm::mult::pptree;
+use openacm::mult::{error_metrics, pptree};
 use openacm::nn::model::QuantCnn;
-use openacm::sim::activity::{activity_bitparallel, mult_workload_vectors};
+use openacm::sim::activity::{activity_bitparallel, activity_parallel, mult_workload_vectors};
 use openacm::sim::event::EventSim;
+use openacm::sim::BitParallelSim;
 use openacm::util::rng::Pcg32;
+use openacm::util::threadpool::ThreadPool;
 
 fn main() {
+    // 0. The headline: exhaustive INT8 characterization (all 65,536 input
+    // vectors, full error metrics) — scalar event-driven engine vs the
+    // 64-lane bit-parallel engine, identical results by construction
+    // (rust/tests/sim_equivalence.rs proves bit-identical outputs+toggles).
+    let nl8 = pptree::build_approx42(8, CompressorKind::Yang1, 8);
+    let fam8 = MultFamily::default_approx(8);
+    let scalar = bench("exhaustive int8 char (scalar event sim)", 0, 3, || {
+        let mut sim = EventSim::new(&nl8);
+        black_box(error_metrics::exhaustive_sim(&mut sim, 8));
+    });
+    bench("exhaustive int8 char (bit-parallel, bool-vec API)", 1, 10, || {
+        let mut sim = BitParallelSim::new(&nl8);
+        black_box(error_metrics::exhaustive_sim(&mut sim, 8));
+    });
+    let packed = bench("exhaustive int8 char (bit-parallel, packed)", 1, 20, || {
+        black_box(error_metrics::exhaustive_netlist(&fam8, 8, 1));
+    });
+    println!(
+        "→ bit-parallel speedup over scalar: {:.1}x (single-threaded)",
+        scalar.mean_ns / packed.mean_ns
+    );
+    let threads = ThreadPool::default_parallelism();
+    let mt = bench(
+        &format!("exhaustive int8 char (packed, {threads} threads)"),
+        1,
+        20,
+        || {
+            black_box(error_metrics::exhaustive_netlist(&fam8, 8, threads));
+        },
+    );
+    println!(
+        "→ combined speedup over scalar: {:.1}x",
+        scalar.mean_ns / mt.mean_ns
+    );
     // 1. Netlist generation (the compiler front end).
     bench("build_exact(32) netlist", 1, 20, || {
         black_box(pptree::build_exact(32));
@@ -37,6 +73,14 @@ fn main() {
     println!(
         "→ {:.1} M gate-evals/s",
         r.throughput((nl.gates().len() * vectors.len()) as f64) / 1e6
+    );
+    bench(
+        &format!("activity_parallel(16b mult, 4096 vecs, {threads}t)"),
+        1,
+        20,
+        || {
+            black_box(activity_parallel(&nl, &vectors, threads));
+        },
     );
 
     // 3. Event-driven simulation (the incremental engine).

@@ -11,10 +11,11 @@ use openacm::bench::harness::{bench, black_box};
 use openacm::config::spec::MacroSpec;
 use openacm::ppa::cli::{full_table2, render_table2};
 use openacm::ppa::report::analyze_macro;
+use openacm::util::threadpool::ThreadPool;
 
 fn main() {
     // --- the table itself ---
-    let rows = full_table2(2000, 0x7AB1E2);
+    let rows = full_table2(2000, 0x7AB1E2, ThreadPool::default_parallelism());
     render_table2(&rows).print();
     println!(
         "\npaper Table II reference (same layout):\n\

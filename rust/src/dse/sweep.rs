@@ -64,7 +64,11 @@ pub fn sweep_configs(rows: usize, bits: usize, n_ops: usize, threads: usize) -> 
             MultFamily::Exact | MultFamily::AdderTree => 0.0,
             f => {
                 if bits <= 10 {
-                    error_metrics::exhaustive(f, bits).nmed
+                    // Characterize the *netlist* on the bit-parallel engine —
+                    // the same gates the PPA model just costed. Single-threaded
+                    // here because the outer parallel_map already owns the
+                    // cores (one worker per design point).
+                    error_metrics::exhaustive_netlist(f, bits, 1).nmed
                 } else {
                     error_metrics::sampled(f, bits, 20_000, 0xD5E).nmed
                 }

@@ -208,12 +208,22 @@ impl Netlist {
     /// parallel sample bits for primary input `i` (declaration order).
     /// Returns all net values (indexable by `NetId`).
     pub fn eval_u64(&self, assignment: &[u64]) -> Vec<u64> {
+        let mut vals = Vec::new();
+        self.eval_u64_into(assignment, &mut vals);
+        vals
+    }
+
+    /// [`Netlist::eval_u64`] into a caller-owned buffer, so sweep loops
+    /// (activity extraction, exhaustive characterization) evaluate without
+    /// a per-batch allocation. The buffer is resized to the net count.
+    pub fn eval_u64_into(&self, assignment: &[u64], vals: &mut Vec<u64>) {
         assert_eq!(
             assignment.len(),
             self.inputs.len(),
             "assignment arity mismatch"
         );
-        let mut vals = vec![0u64; self.gates.len()];
+        vals.clear();
+        vals.resize(self.gates.len(), 0u64);
         let mut next_input = 0;
         for (i, g) in self.gates.iter().enumerate() {
             let a = g.inputs[0];
@@ -240,7 +250,6 @@ impl Netlist {
                 }
             };
         }
-        vals
     }
 
     /// Single-vector evaluation: map named input bits to a named output

@@ -16,6 +16,37 @@
 //! * **L1 (python/compile/kernels/)** — the Pallas LUT-matmul kernel.
 //!
 //! See `DESIGN.md` for the system inventory and per-experiment index.
+//!
+//! ## Simulation engines
+//!
+//! Gate-level simulation is the compiler's hot loop: every DSE point needs
+//! exhaustive error metrics (Tab. IV) and toggle-based activity for power
+//! (Tab. II). Two engines implement the common [`sim::Simulator`] trait and
+//! are proven bit-identical — outputs *and* per-net toggle counts — by an
+//! exhaustive 8-bit sweep over every paper family
+//! (`rust/tests/sim_equivalence.rs`):
+//!
+//! * [`sim::EventSim`] — the scalar event-driven reference. Re-evaluates
+//!   only the changed cone, so prefer it for *narrow-cone* streams (the
+//!   weight-stationary PE, where few input bits move per vector) and for
+//!   debugging, since it processes one vector at a time.
+//! * [`sim::BitParallelSim`] — the throughput engine. Every net carries a
+//!   `u64` **bit-plane**: lane `l` holds the net's value under input vector
+//!   `t + l`, so one topological sweep evaluates 64 vectors with pure
+//!   bitwise ops, and toggle counts fall out of `popcount(x ^ (x >> 1))`
+//!   plus a one-lane boundary stitch between words. Prefer it whenever
+//!   vectors are independent and plentiful: exhaustive characterization,
+//!   activity extraction, Monte-Carlo corruption sampling
+//!   ([`yield_analysis::functional`], which packs 64 MC samples into the
+//!   lanes instead of 64 time steps).
+//!
+//! Batch work on top of the engines is spread across cores with
+//! [`util::threadpool`]: [`mult::error_metrics::exhaustive_netlist`]
+//! partitions the operand space, [`sim::activity_parallel`] splits vector
+//! streams with a one-vector overlap, and the DSE sweep runs one design
+//! point per worker — all deterministic for any thread count.
+//! `cargo bench --bench hotpaths` measures the resulting speedup
+//! (scalar vs bit-parallel exhaustive INT8 characterization).
 
 pub mod util;
 pub mod bench;

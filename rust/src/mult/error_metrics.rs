@@ -8,11 +8,25 @@
 //!   errors behave like noise regularization while Appro4-2's one-sided
 //!   errors accumulate).
 //!
+//! Three characterization paths, all reduced through one accumulator so the
+//! metrics definitions cannot drift:
+//!
+//! * [`exhaustive`] / [`sampled`] — behavioral models (64-lane fast path
+//!   for the PP-tree families via `product_table`);
+//! * [`exhaustive_sim`] — any [`Simulator`] engine over the gate netlist
+//!   (the scalar-vs-bit-parallel comparison in `benches/hotpaths.rs`);
+//! * [`exhaustive_netlist`] — the production path: bit-parallel netlist
+//!   simulation, partitioned across worker threads by operand range.
+//!
 //! Exhaustive for widths ≤ 12 bits; seeded uniform sampling above.
 
-use super::behavioral::behavioral_fn;
-use crate::config::spec::MultFamily;
+use super::behavioral::{behavioral_fn, product_table};
+use crate::config::spec::{MultFamily, MultSpec};
+use crate::sim::activity::mult_workload_vectors;
+use crate::sim::bitparallel::counting_planes;
+use crate::sim::Simulator;
 use crate::util::rng::Pcg32;
+use crate::util::threadpool::parallel_map;
 
 /// Full error report for one multiplier configuration.
 #[derive(Clone, Copy, Debug, Default)]
@@ -27,53 +41,96 @@ pub struct ErrorReport {
     pub samples: u64,
 }
 
-/// Compute metrics exhaustively over all `2^bits × 2^bits` input pairs.
+/// Mergeable partial sums behind every [`ErrorReport`].
+#[derive(Clone, Copy, Debug, Default)]
+struct Accum {
+    abs_sum: f64,
+    signed_sum: f64,
+    rel_sum: f64,
+    rel_n: u64,
+    wrong: u64,
+    wce: u64,
+    samples: u64,
+}
+
+impl Accum {
+    #[inline]
+    fn add(&mut self, exact: i64, got: i64) {
+        let err = got - exact;
+        if err != 0 {
+            self.wrong += 1;
+        }
+        let ae = err.unsigned_abs();
+        self.wce = self.wce.max(ae);
+        self.abs_sum += ae as f64;
+        self.signed_sum += err as f64;
+        if exact != 0 {
+            self.rel_sum += ae as f64 / exact as f64;
+            self.rel_n += 1;
+        }
+        self.samples += 1;
+    }
+
+    fn merge(mut self, other: Accum) -> Accum {
+        self.abs_sum += other.abs_sum;
+        self.signed_sum += other.signed_sum;
+        self.rel_sum += other.rel_sum;
+        self.rel_n += other.rel_n;
+        self.wrong += other.wrong;
+        self.wce = self.wce.max(other.wce);
+        self.samples += other.samples;
+        self
+    }
+
+    fn finalize(&self, p_max: f64) -> ErrorReport {
+        let total = self.samples.max(1) as f64;
+        ErrorReport {
+            nmed: self.abs_sum / total / p_max,
+            mred: self.rel_sum / self.rel_n.max(1) as f64,
+            error_rate: self.wrong as f64 / total,
+            wce: self.wce,
+            normalized_bias: self.signed_sum / total / p_max,
+            samples: self.samples,
+        }
+    }
+}
+
+fn p_max(bits: usize) -> f64 {
+    let top = (1u128 << bits) - 1;
+    (top * top) as f64
+}
+
+/// Compute metrics exhaustively over all `2^bits × 2^bits` input pairs
+/// through the behavioral model (64-lane `product_table` fast path up to
+/// 10 bits, pointwise above).
 pub fn exhaustive(family: &MultFamily, bits: usize) -> ErrorReport {
     assert!(bits <= 12, "exhaustive only up to 12 bits; use sampled()");
-    let f = behavioral_fn(family, bits);
     let n = 1u64 << bits;
-    let p_max = ((n - 1) * (n - 1)) as f64;
-    let mut abs_sum = 0f64;
-    let mut signed_sum = 0f64;
-    let mut rel_sum = 0f64;
-    let mut rel_n = 0u64;
-    let mut wrong = 0u64;
-    let mut wce = 0u64;
-    for a in 0..n {
-        for b in 0..n {
-            let exact = (a * b) as i64;
-            let got = f(a, b) as i64;
-            let err = got - exact;
-            if err != 0 {
-                wrong += 1;
+    let mut acc = Accum::default();
+    if bits <= 10 {
+        let table = product_table(family, bits);
+        for a in 0..n {
+            for b in 0..n {
+                let got = table[((a as usize) << bits) | b as usize] as i64;
+                acc.add((a * b) as i64, got);
             }
-            let ae = err.unsigned_abs();
-            wce = wce.max(ae);
-            abs_sum += ae as f64;
-            signed_sum += err as f64;
-            if exact != 0 {
-                rel_sum += ae as f64 / exact as f64;
-                rel_n += 1;
+        }
+    } else {
+        let f = behavioral_fn(family, bits);
+        for a in 0..n {
+            for b in 0..n {
+                acc.add((a * b) as i64, f(a, b) as i64);
             }
         }
     }
-    let total = (n * n) as f64;
-    ErrorReport {
-        nmed: abs_sum / total / p_max,
-        mred: rel_sum / rel_n as f64,
-        error_rate: wrong as f64 / total,
-        wce,
-        normalized_bias: signed_sum / total / p_max,
-        samples: n * n,
-    }
+    acc.finalize(p_max(bits))
 }
 
 /// Sampled metrics for wide multipliers.
 pub fn sampled(family: &MultFamily, bits: usize, samples: u64, seed: u64) -> ErrorReport {
     let f = behavioral_fn(family, bits);
     let mut rng = Pcg32::new(seed);
-    let mask = (1u128 << bits) - 1;
-    let p_max = (((1u128 << bits) - 1) * ((1u128 << bits) - 1)) as f64;
+    let mask = ((1u128 << bits) - 1) as u64;
     let mut abs_sum = 0f64;
     let mut signed_sum = 0f64;
     let mut rel_sum = 0f64;
@@ -81,8 +138,8 @@ pub fn sampled(family: &MultFamily, bits: usize, samples: u64, seed: u64) -> Err
     let mut wrong = 0u64;
     let mut wce = 0u64;
     for _ in 0..samples {
-        let a = (rng.next_u64() as u128 & mask) as u64;
-        let b = (rng.next_u64() as u128 & mask) as u64;
+        let a = rng.next_u64() & mask;
+        let b = rng.next_u64() & mask;
         let exact = (a as u128 * b as u128) as i128;
         let got = f(a, b) as i128;
         let err = got - exact;
@@ -99,19 +156,120 @@ pub fn sampled(family: &MultFamily, bits: usize, samples: u64, seed: u64) -> Err
         }
     }
     ErrorReport {
-        nmed: abs_sum / samples as f64 / p_max,
+        nmed: abs_sum / samples as f64 / p_max(bits),
         mred: rel_sum / rel_n.max(1) as f64,
         error_rate: wrong as f64 / samples as f64,
         wce,
-        normalized_bias: signed_sum / samples as f64 / p_max,
+        normalized_bias: signed_sum / samples as f64 / p_max(bits),
         samples,
     }
+}
+
+/// Fold a slice of (a, b) pairs through a gate-simulation engine,
+/// accumulating error sums against the exact product. The netlist's output
+/// bus is read LSB-first in declaration order (every multiplier netlist
+/// declares `p[0..2·bits)` that way).
+fn accumulate_pairs(sim: &mut dyn Simulator, bits: usize, pairs: &[(u64, u64)], acc: &mut Accum) {
+    const BATCH: usize = 4096;
+    for chunk in pairs.chunks(BATCH) {
+        let vectors = mult_workload_vectors(bits, chunk);
+        let outs = sim.run(&vectors);
+        for (&(a, b), out) in chunk.iter().zip(&outs) {
+            let got = out
+                .iter()
+                .enumerate()
+                .fold(0u64, |p, (i, &bit)| p | ((bit as u64) << i));
+            acc.add((a * b) as i64, got as i64);
+        }
+    }
+}
+
+/// Exhaustive characterization of a multiplier *netlist* through any
+/// [`Simulator`] engine — the apples-to-apples harness behind the
+/// scalar-vs-bit-parallel speedup measurement in `benches/hotpaths.rs`.
+pub fn exhaustive_sim(sim: &mut dyn Simulator, bits: usize) -> ErrorReport {
+    assert!(bits <= 12, "exhaustive only up to 12 bits");
+    let n = 1u64 << bits;
+    let mut acc = Accum::default();
+    let mut pairs = Vec::with_capacity(n as usize);
+    for a in 0..n {
+        pairs.clear();
+        for b in 0..n {
+            pairs.push((a, b));
+        }
+        accumulate_pairs(sim, bits, &pairs, &mut acc);
+    }
+    acc.finalize(p_max(bits))
+}
+
+/// Exhaustive netlist characterization on the bit-plane evaluator,
+/// partitioned across `threads` workers by the `a`-operand range (each
+/// worker owns its own value buffer over the shared netlist, and the
+/// partial sums merge in a fixed order — deterministic for any thread
+/// count; the integer-valued metrics are even bit-identical across thread
+/// counts). The `b` operand counts through the 64 lanes via
+/// [`counting_planes`], so no per-vector input or output data is ever
+/// materialized — and unlike the [`Simulator`]-trait path this skips
+/// toggle accounting, which pure error characterization never reads.
+/// This is what the DSE sweep calls per design point.
+pub fn exhaustive_netlist(family: &MultFamily, bits: usize, threads: usize) -> ErrorReport {
+    assert!(bits <= 12, "exhaustive only up to 12 bits; use sampled()");
+    let nl = crate::mult::build_netlist(&MultSpec {
+        family: family.clone(),
+        bits,
+        signed: false,
+    });
+    let out_ids: Vec<usize> = nl.outputs().iter().map(|(_, id)| id.idx()).collect();
+    let n = 1u64 << bits;
+    let threads = threads.max(1).min(n as usize);
+    let chunk = (n as usize).div_ceil(threads);
+    let parts = parallel_map(threads, threads, |ci| {
+        let a_lo = (ci * chunk) as u64;
+        let a_hi = ((ci + 1) * chunk).min(n as usize) as u64;
+        let mut acc = Accum::default();
+        if a_lo >= a_hi {
+            return acc;
+        }
+        // assignment = [a planes (broadcast) | b planes (lane-counting)];
+        // the b planes depend only on the block start, so build the n/64
+        // block plane sets once instead of per (a, block).
+        let b_planes: Vec<Vec<u64>> = (0..n)
+            .step_by(64)
+            .map(|b0| counting_planes(b0, bits))
+            .collect();
+        let mut assignment = vec![0u64; 2 * bits];
+        let mut vals = Vec::new();
+        for a in a_lo..a_hi {
+            for i in 0..bits {
+                assignment[i] = if (a >> i) & 1 == 1 { u64::MAX } else { 0 };
+            }
+            let mut b0 = 0u64;
+            while b0 < n {
+                let lanes = (n - b0).min(64);
+                assignment[bits..2 * bits].copy_from_slice(&b_planes[(b0 / 64) as usize]);
+                nl.eval_u64_into(&assignment, &mut vals);
+                for lane in 0..lanes {
+                    let p = out_ids.iter().enumerate().fold(0u64, |p, (i, &idx)| {
+                        p | (((vals[idx] >> lane) & 1) << i)
+                    });
+                    acc.add((a * (b0 + lane)) as i64, p as i64);
+                }
+                b0 += lanes;
+            }
+        }
+        acc
+    });
+    parts
+        .into_iter()
+        .fold(Accum::default(), Accum::merge)
+        .finalize(p_max(bits))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::spec::CompressorKind;
+    use crate::sim::{BitParallelSim, EventSim};
 
     #[test]
     fn exact_families_have_zero_error() {
@@ -122,6 +280,73 @@ mod tests {
             assert_eq!(r.error_rate, 0.0);
             assert_eq!(r.wce, 0);
         }
+    }
+
+    #[test]
+    fn netlist_engine_matches_behavioral_for_pptree_families() {
+        // SoftFabric and the gate netlist are the same circuit by
+        // construction, so the reports must be identical — not just close.
+        for fam in [
+            MultFamily::Exact,
+            MultFamily::Approx42 {
+                compressor: CompressorKind::Yang1,
+                approx_cols: 6,
+            },
+        ] {
+            let behavioral = exhaustive(&fam, 6);
+            let netlist = exhaustive_netlist(&fam, 6, 2);
+            assert_eq!(behavioral.nmed, netlist.nmed, "{fam:?}");
+            assert_eq!(behavioral.wce, netlist.wce, "{fam:?}");
+            assert_eq!(behavioral.error_rate, netlist.error_rate, "{fam:?}");
+            assert_eq!(behavioral.samples, netlist.samples);
+        }
+    }
+
+    #[test]
+    fn netlist_engine_deterministic_across_thread_counts() {
+        let fam = MultFamily::Approx42 {
+            compressor: CompressorKind::Momeni,
+            approx_cols: 6,
+        };
+        let one = exhaustive_netlist(&fam, 6, 1);
+        for threads in [2, 3, 5, 8] {
+            let multi = exhaustive_netlist(&fam, 6, threads);
+            // nmed/bias sum exactly-representable integers, so they are
+            // bit-equal for any partitioning; mred sums ratios, where the
+            // merge grouping can shift the last ulp.
+            assert_eq!(one.nmed, multi.nmed, "threads={threads}");
+            assert_eq!(one.normalized_bias, multi.normalized_bias);
+            assert_eq!(one.wce, multi.wce);
+            assert_eq!(one.error_rate, multi.error_rate);
+            assert!((one.mred - multi.mred).abs() < 1e-12 * one.mred.max(1.0));
+        }
+    }
+
+    #[test]
+    fn scalar_and_bitparallel_sim_agree_on_reports() {
+        let fam = MultFamily::Approx42 {
+            compressor: CompressorKind::Yang1,
+            approx_cols: 5,
+        };
+        let nl = crate::mult::build_netlist(&MultSpec {
+            family: fam.clone(),
+            bits: 5,
+            signed: false,
+        });
+        let mut scalar = EventSim::new(&nl);
+        let mut lanes = BitParallelSim::new(&nl);
+        let a = exhaustive_sim(&mut scalar, 5);
+        let b = exhaustive_sim(&mut lanes, 5);
+        let c = exhaustive_netlist(&fam, 5, 2); // packed fast path
+        assert_eq!(a.nmed, b.nmed);
+        assert_eq!(a.wce, b.wce);
+        assert_eq!(a.error_rate, b.error_rate);
+        assert_eq!(scalar.total_toggles(), lanes.total_toggles());
+        assert_eq!(a.nmed, c.nmed);
+        assert_eq!(a.wce, c.wce);
+        assert_eq!(a.normalized_bias, c.normalized_bias);
+        assert_eq!(a.samples, c.samples);
+        assert!((a.mred - c.mred).abs() < 1e-12 * a.mred.max(1.0));
     }
 
     #[test]

@@ -2,10 +2,11 @@
 
 use anyhow::Result;
 
-use super::report::{analyze_macro, MacroPpa};
+use super::report::{analyze_macro, analyze_macro_threads, MacroPpa};
 use crate::bench::harness::{sci, Table};
 use crate::config::spec::{MacroSpec, MultFamily};
 use crate::util::cli::Args;
+use crate::util::threadpool::ThreadPool;
 
 /// Parse a multiplier family from CLI-ish strings.
 pub fn parse_family(s: &str, _bits: usize, compressor: &str, approx_cols: usize) -> Result<MultFamily> {
@@ -22,13 +23,14 @@ pub fn parse_family(s: &str, _bits: usize, compressor: &str, approx_cols: usize)
     })
 }
 
-/// Compute the full Table II (3 sizes × 4 families).
-pub fn full_table2(n_ops: usize, seed: u64) -> Vec<MacroPpa> {
+/// Compute the full Table II (3 sizes × 4 families). Top-level entry, so
+/// each row's activity extraction spreads across `threads` cores.
+pub fn full_table2(n_ops: usize, seed: u64, threads: usize) -> Vec<MacroPpa> {
     let mut rows = Vec::new();
     for (r, b) in [(16usize, 8usize), (32, 16), (64, 32)] {
         for fam in MacroSpec::table2_families(b) {
             let spec = MacroSpec::new(&format!("dcim{r}x{b}"), r, b, fam);
-            rows.push(analyze_macro(&spec, n_ops, seed));
+            rows.push(analyze_macro_threads(&spec, n_ops, seed, threads));
         }
     }
     rows
@@ -60,10 +62,11 @@ pub fn render_table2(rows: &[MacroPpa]) -> Table {
 pub fn cmd_ppa(args: &Args) -> Result<()> {
     let n_ops = args.usize_or("ops", 2000)?;
     let seed = args.u64_or("seed", 0x7AB1E2)?;
+    let threads = args.usize_or("threads", ThreadPool::default_parallelism())?;
     match args.get("rows") {
         None => {
             // Full table.
-            let rows = full_table2(n_ops, seed);
+            let rows = full_table2(n_ops, seed, threads);
             render_table2(&rows).print();
         }
         Some(r) => {
@@ -76,7 +79,7 @@ pub fn cmd_ppa(args: &Args) -> Result<()> {
                 args.usize_or("approx-cols", bits)?,
             )?;
             let spec = MacroSpec::new(&format!("dcim{rows}x{bits}"), rows, bits, fam);
-            let row = analyze_macro(&spec, n_ops, seed);
+            let row = analyze_macro_threads(&spec, n_ops, seed, threads);
             render_table2(&[row]).print();
         }
     }

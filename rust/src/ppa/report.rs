@@ -12,7 +12,7 @@ use crate::pe::control::build_fsm_logic;
 use crate::ppa::area::{self, DFF_ENERGY_PER_CYCLE_FJ, DFF_LEAKAGE_NW};
 use crate::ppa::cells::CellLibrary;
 use crate::ppa::{power, timing};
-use crate::sim::activity::{activity_bitparallel, mult_workload_vectors};
+use crate::sim::activity::{activity_parallel, mult_workload_vectors};
 use crate::sram::models as sram_models;
 use crate::util::rng::Pcg32;
 
@@ -42,7 +42,18 @@ pub struct MacroPpa {
 /// Analyze one macro spec under a seeded random workload of `n_ops`
 /// multiplications. The same `seed` across families gives the identical
 /// operand stream the paper's comparison requires.
+///
+/// Single-threaded — the right default for nested callers (the DSE sweep
+/// already runs one design point per worker). Top-level callers with the
+/// cores to spare should use [`analyze_macro_threads`].
 pub fn analyze_macro(spec: &MacroSpec, n_ops: usize, seed: u64) -> MacroPpa {
+    analyze_macro_threads(spec, n_ops, seed, 1)
+}
+
+/// [`analyze_macro`] with the activity stream split across `threads`
+/// workers (bit-identical results for any thread count; see
+/// [`activity_parallel`]).
+pub fn analyze_macro_threads(spec: &MacroSpec, n_ops: usize, seed: u64, threads: usize) -> MacroPpa {
     spec.validate().expect("spec must validate");
     let lib = CellLibrary::nangate45();
     let clock_hz = spec.clock_mhz * 1e6;
@@ -59,7 +70,7 @@ pub fn analyze_macro(spec: &MacroSpec, n_ops: usize, seed: u64) -> MacroPpa {
         .map(|_| (rng.next_u64() & mask, rng.next_u64() & mask))
         .collect();
     let vectors = mult_workload_vectors(spec.mult.bits, &pairs);
-    let act = activity_bitparallel(&mult_nl, &vectors);
+    let act = activity_parallel(&mult_nl, &vectors, threads);
 
     // --- logic power ---
     let mult_power = power::analyze(&mult_nl, &lib, &act, clock_hz, load_ff);

@@ -1,13 +1,17 @@
-//! Bit-parallel switching-activity extraction.
+//! Switching-activity extraction on top of the bit-parallel engine.
 //!
 //! A vector *stream* v₀, v₁, …, v_T is applied to the netlist; the toggle
 //! count of a net is the number of t where its value differs between
-//! consecutive vectors. We pack 64 consecutive vectors into the 64 lanes of
-//! one bit-parallel evaluation, then count intra-word transitions with
-//! `popcount(x ^ (x << 1))` and stitch word boundaries with the previous
-//! word's last lane.
+//! consecutive vectors. The heavy lifting lives in
+//! [`super::bitparallel::BitParallelSim`] (64 vectors per topological sweep,
+//! toggles via XOR/popcount); this module adds the workload helpers, the
+//! [`ActivityReport`] consumed by the power model, and a multi-threaded
+//! extractor that splits the stream across cores with one-vector overlap so
+//! the merged counts stay bit-identical to a sequential run.
 
+use super::bitparallel::BitParallelSim;
 use crate::gates::Netlist;
+use crate::util::threadpool::parallel_map;
 
 /// Switching-activity result for one workload.
 #[derive(Clone, Debug)]
@@ -33,72 +37,60 @@ impl ActivityReport {
     }
 }
 
-/// Run a stream of input vectors (each a `Vec<u64>` of operand words per
-/// primary-input *bit*, i.e. already bit-expanded lane-packed input is
-/// produced internally) and count toggles per net.
-///
-/// `vector_bits[t]` is the t-th vector as one `bool` per primary input, in
-/// declaration order. The stream is processed 64 vectors per batch.
+/// Run a stream of input vectors through the bit-parallel engine and count
+/// toggles per net. `vector_bits[t]` is the t-th vector as one `bool` per
+/// primary input, in declaration order. Batches go through the engine's
+/// output-free [`BitParallelSim::run_bools`] path — activity extraction
+/// only reads toggle counts, so no per-vector output data is materialized.
 pub fn activity_bitparallel(nl: &Netlist, vector_bits: &[Vec<bool>]) -> ActivityReport {
-    let n_inputs = nl.inputs().len();
-    let n_nets = nl.gates().len();
-    let mut toggles = vec![0u64; n_nets];
     if vector_bits.is_empty() {
         return ActivityReport {
-            toggles,
+            toggles: vec![0u64; nl.gates().len()],
             transitions: 0,
         };
     }
-    let mut prev_last: Option<Vec<bool>> = None;
-    let mut t = 0usize;
-    while t < vector_bits.len() {
-        let batch_end = (t + 64).min(vector_bits.len());
-        let lanes = batch_end - t;
-        // Pack: lane l = vector t+l.
-        let mut assignment = vec![0u64; n_inputs];
-        for (l, vec) in vector_bits[t..batch_end].iter().enumerate() {
-            assert_eq!(vec.len(), n_inputs, "vector arity");
-            for (i, &bit) in vec.iter().enumerate() {
-                if bit {
-                    assignment[i] |= 1u64 << l;
-                }
-            }
+    let mut sim = BitParallelSim::new(nl);
+    for batch in vector_bits.chunks(64) {
+        sim.run_bools(batch);
+    }
+    ActivityReport {
+        transitions: (vector_bits.len() - 1) as u64,
+        toggles: sim.toggles().to_vec(),
+    }
+}
+
+/// Multi-threaded [`activity_bitparallel`]: the stream is split into
+/// `threads` contiguous chunks, each chunk is simulated with a one-vector
+/// overlap into its predecessor (so every consecutive-vector transition is
+/// counted exactly once, by exactly one worker), and the per-net counts are
+/// summed. Bit-identical to the sequential run for any thread count.
+pub fn activity_parallel(nl: &Netlist, vector_bits: &[Vec<bool>], threads: usize) -> ActivityReport {
+    let n = vector_bits.len();
+    let threads = threads.max(1);
+    if threads == 1 || n < 2 * threads {
+        return activity_bitparallel(nl, vector_bits);
+    }
+    let chunk = n.div_ceil(threads);
+    let parts = parallel_map(threads, threads, |ci| {
+        let start = ci * chunk;
+        let end = (start + chunk).min(n);
+        if start >= n {
+            return vec![0u64; nl.gates().len()];
         }
-        let vals = nl.eval_u64(&assignment);
-        let mask = if lanes == 64 {
-            u64::MAX
-        } else {
-            (1u64 << lanes) - 1
-        };
-        // Intra-word transitions: lane l vs lane l+1 → bits of (x ^ (x>>1))
-        // restricted to lanes 0..lanes-1.
-        let intra_mask = mask >> 1;
-        for (net, &x) in vals.iter().enumerate() {
-            let x = x & mask;
-            toggles[net] += ((x ^ (x >> 1)) & intra_mask).count_ones() as u64;
+        // Overlap one vector backwards: this worker owns the transitions
+        // landing on vectors start..end (worker 0 owns 1..end).
+        let from = start.saturating_sub(1);
+        activity_bitparallel(nl, &vector_bits[from..end]).toggles
+    });
+    let mut toggles = vec![0u64; nl.gates().len()];
+    for part in parts {
+        for (t, p) in toggles.iter_mut().zip(part) {
+            *t += p;
         }
-        // Boundary with previous batch: compare prev last lane vs lane 0.
-        if let Some(prev) = &prev_last {
-            // Re-evaluate lane-0 values bitwise from vals (lane 0 bit).
-            for (net, &x) in vals.iter().enumerate() {
-                let lane0 = x & 1 != 0;
-                if lane0 != prev[net] {
-                    toggles[net] += 1;
-                }
-            }
-        }
-        // Record last lane values for the next boundary.
-        let last_bit = lanes - 1;
-        prev_last = Some(
-            vals.iter()
-                .map(|&x| (x >> last_bit) & 1 != 0)
-                .collect(),
-        );
-        t = batch_end;
     }
     ActivityReport {
         toggles,
-        transitions: (vector_bits.len() - 1) as u64,
+        transitions: (n - 1) as u64,
     }
 }
 
@@ -146,6 +138,22 @@ mod tests {
             ev.toggles(),
             "bit-parallel and event-driven toggle counts must agree"
         );
+    }
+
+    #[test]
+    fn parallel_matches_sequential_for_any_thread_count() {
+        let nl = crate::mult::pptree::build_exact(5);
+        let mut rng = Pcg32::new(0x9A7);
+        let pairs: Vec<(u64, u64)> = (0..257)
+            .map(|_| (rng.below(32) as u64, rng.below(32) as u64))
+            .collect();
+        let vectors = mult_workload_vectors(5, &pairs);
+        let seq = activity_bitparallel(&nl, &vectors);
+        for threads in [1, 2, 3, 4, 7] {
+            let par = activity_parallel(&nl, &vectors, threads);
+            assert_eq!(par.toggles, seq.toggles, "threads={threads}");
+            assert_eq!(par.transitions, seq.transitions);
+        }
     }
 
     #[test]

@@ -1,0 +1,322 @@
+//! 64-way bit-parallel gate simulation.
+//!
+//! Every net carries a `u64` *bit-plane*: lane `l` of the word is the net's
+//! boolean value under input vector `t + l`. One topological sweep over the
+//! netlist therefore evaluates 64 input vectors with pure bitwise ops
+//! (AND/OR/XOR/NOT and the mux as AND-OR), i.e. the per-vector cost is
+//! `gates / 64` word operations — 50×+ faster than scalar event-driven
+//! simulation on the random/exhaustive workloads where most of the cone
+//! toggles every cycle (see `benches/hotpaths.rs`).
+//!
+//! Toggle semantics are bit-identical to [`super::event::EventSim`]:
+//! applying the very first vector establishes state without counting, and
+//! every later consecutive-vector transition contributes
+//! `popcount(prev ^ next)` per net. Within a batch that is
+//! `popcount((x ^ (x >> 1)) & intra_mask)`; across batch (and across
+//! [`Simulator::run`] call) boundaries the last lane of the previous word
+//! is compared against lane 0 of the next.
+//!
+//! Two entry points:
+//!
+//! * the [`Simulator`] trait (`bool`-vector streams) — convenient, shared
+//!   with the scalar engine, used by the cross-engine equivalence tests;
+//! * [`BitParallelSim::run_packed`] — the zero-copy fast path for callers
+//!   that produce lane-packed input planes directly ([`counting_planes`]
+//!   builds the planes of 64 consecutive operand values in O(bits), which
+//!   is how exhaustive characterization feeds the evaluator without
+//!   materializing any per-vector data; see
+//!   `mult::error_metrics::exhaustive_netlist`).
+
+use super::Simulator;
+use crate::gates::Netlist;
+
+/// Stateful 64-lane bit-parallel simulator for one netlist.
+pub struct BitParallelSim<'a> {
+    nl: &'a Netlist,
+    /// Per-net cumulative toggle counts.
+    toggles: Vec<u64>,
+    /// Value of every net under the last applied vector (batch boundary).
+    prev_last: Option<Vec<bool>>,
+    /// Number of vectors applied.
+    vectors: u64,
+    /// Scratch: lane-packed input assignment (one word per primary input).
+    assign: Vec<u64>,
+    /// Scratch: lane-packed value per net.
+    vals: Vec<u64>,
+}
+
+impl<'a> BitParallelSim<'a> {
+    pub fn new(nl: &'a Netlist) -> Self {
+        Self {
+            nl,
+            toggles: vec![0; nl.gates().len()],
+            prev_last: None,
+            vectors: 0,
+            assign: vec![0; nl.inputs().len()],
+            vals: Vec::new(),
+        }
+    }
+
+    /// Fast path: apply `lanes` vectors already packed as one bit-plane
+    /// word per primary input (declaration order; lane `l` = vector `l` of
+    /// the batch, lanes beyond `lanes` are ignored). Toggle accounting is
+    /// identical to the trait path. Returns the packed value of every net
+    /// (indexable by `NetId`), valid until the next call.
+    pub fn run_packed(&mut self, assignment: &[u64], lanes: usize) -> &[u64] {
+        assert!(0 < lanes && lanes <= 64, "1..=64 lanes per sweep");
+        let mut vals = std::mem::take(&mut self.vals);
+        self.nl.eval_u64_into(assignment, &mut vals);
+
+        let mask = if lanes == 64 {
+            u64::MAX
+        } else {
+            (1u64 << lanes) - 1
+        };
+        // Lane l vs lane l+1 transitions live in bits 0..lanes-1 of x^(x>>1).
+        let intra_mask = mask >> 1;
+        match &mut self.prev_last {
+            Some(prev) => {
+                for (net, &x) in vals.iter().enumerate() {
+                    let x = x & mask;
+                    self.toggles[net] += ((x ^ (x >> 1)) & intra_mask).count_ones() as u64;
+                    // Boundary: previous batch's last vector vs lane 0.
+                    if (x & 1 != 0) != prev[net] {
+                        self.toggles[net] += 1;
+                    }
+                    prev[net] = (x >> (lanes - 1)) & 1 != 0;
+                }
+            }
+            None => {
+                let mut prev = Vec::with_capacity(vals.len());
+                for (net, &x) in vals.iter().enumerate() {
+                    let x = x & mask;
+                    self.toggles[net] += ((x ^ (x >> 1)) & intra_mask).count_ones() as u64;
+                    prev.push((x >> (lanes - 1)) & 1 != 0);
+                }
+                self.prev_last = Some(prev);
+            }
+        }
+        self.vectors += lanes as u64;
+        self.vals = vals;
+        &self.vals
+    }
+
+    /// Pack up to 64 `bool`-vectors into lane planes and sweep them,
+    /// discarding outputs. Toggle accounting still applies — this is the
+    /// path for callers that only read toggle counts (activity extraction).
+    pub fn run_bools(&mut self, batch: &[Vec<bool>]) {
+        let lanes = batch.len();
+        let n_inputs = self.nl.inputs().len();
+        let mut assign = std::mem::take(&mut self.assign);
+        for w in assign.iter_mut() {
+            *w = 0;
+        }
+        for (l, vec) in batch.iter().enumerate() {
+            assert_eq!(vec.len(), n_inputs, "vector arity");
+            for (i, &bit) in vec.iter().enumerate() {
+                if bit {
+                    assign[i] |= 1u64 << l;
+                }
+            }
+        }
+        self.run_packed(&assign, lanes);
+        self.assign = assign;
+    }
+
+    /// Apply up to 64 `bool`-vectors in one sweep; returns per-vector
+    /// output bits.
+    fn run_batch(&mut self, batch: &[Vec<bool>]) -> Vec<Vec<bool>> {
+        self.run_bools(batch);
+        let lanes = batch.len();
+        let outs = self.nl.outputs();
+        let vals = &self.vals;
+        (0..lanes)
+            .map(|l| {
+                outs.iter()
+                    .map(|(_, id)| (vals[id.idx()] >> l) & 1 != 0)
+                    .collect()
+            })
+            .collect()
+    }
+
+    pub fn toggles(&self) -> &[u64] {
+        &self.toggles
+    }
+
+    pub fn total_toggles(&self) -> u64 {
+        self.toggles.iter().sum()
+    }
+
+    pub fn vectors(&self) -> u64 {
+        self.vectors
+    }
+}
+
+impl Simulator for BitParallelSim<'_> {
+    fn name(&self) -> &'static str {
+        "bit-parallel"
+    }
+
+    fn run(&mut self, vectors: &[Vec<bool>]) -> Vec<Vec<bool>> {
+        let mut out = Vec::with_capacity(vectors.len());
+        for batch in vectors.chunks(64) {
+            out.extend(self.run_batch(batch));
+        }
+        out
+    }
+
+    fn toggles(&self) -> &[u64] {
+        &self.toggles
+    }
+
+    fn vectors(&self) -> u64 {
+        self.vectors
+    }
+}
+
+/// Bit-planes of 64 consecutive operand values: plane `i` holds bit `i` of
+/// `start + l` in lane `l`. Lanes of an exhaustive sweep count through the
+/// operand space, so the low six planes are fixed lane patterns and the
+/// rest broadcast `start`'s bits — no per-vector work at all.
+/// `start` must be 64-aligned (0 qualifies, covering sub-64-lane sweeps).
+pub fn counting_planes(start: u64, bits: usize) -> Vec<u64> {
+    assert_eq!(start % 64, 0, "counting block must be 64-aligned");
+    const LANE_BIT: [u64; 6] = [
+        0xAAAA_AAAA_AAAA_AAAA,
+        0xCCCC_CCCC_CCCC_CCCC,
+        0xF0F0_F0F0_F0F0_F0F0,
+        0xFF00_FF00_FF00_FF00,
+        0xFFFF_0000_FFFF_0000,
+        0xFFFF_FFFF_0000_0000,
+    ];
+    (0..bits)
+        .map(|i| {
+            if i < 6 {
+                LANE_BIT[i]
+            } else if (start >> i) & 1 == 1 {
+                u64::MAX
+            } else {
+                0
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::event::EventSim;
+    use crate::sim::Simulator;
+    use crate::util::rng::Pcg32;
+
+    fn random_vectors(n_inputs: usize, n: usize, seed: u64) -> Vec<Vec<bool>> {
+        let mut rng = Pcg32::new(seed);
+        (0..n)
+            .map(|_| (0..n_inputs).map(|_| rng.next_u32() & 1 != 0).collect())
+            .collect()
+    }
+
+    #[test]
+    fn outputs_match_event_sim_on_random_stream() {
+        let nl = crate::mult::pptree::build_exact(6);
+        let vectors = random_vectors(nl.inputs().len(), 200, 0xB17);
+        let mut bp = BitParallelSim::new(&nl);
+        let mut ev = EventSim::new(&nl);
+        let bp_out = Simulator::run(&mut bp, &vectors);
+        let ev_out = Simulator::run(&mut ev, &vectors);
+        assert_eq!(bp_out, ev_out);
+        assert_eq!(bp.toggles(), ev.toggles());
+        assert_eq!(BitParallelSim::vectors(&bp), 200);
+    }
+
+    #[test]
+    fn state_carries_across_run_calls() {
+        // Many small run() calls must equal one big call (boundary stitching).
+        let nl = crate::mult::pptree::build_exact(4);
+        let vectors = random_vectors(nl.inputs().len(), 130, 7);
+        let mut whole = BitParallelSim::new(&nl);
+        Simulator::run(&mut whole, &vectors);
+        let mut pieces = BitParallelSim::new(&nl);
+        for chunk in vectors.chunks(17) {
+            Simulator::run(&mut pieces, chunk);
+        }
+        assert_eq!(whole.toggles(), pieces.toggles());
+    }
+
+    #[test]
+    fn first_vector_counts_no_toggles() {
+        let nl = crate::mult::pptree::build_exact(4);
+        let mut bp = BitParallelSim::new(&nl);
+        let v: Vec<bool> = vec![true; nl.inputs().len()];
+        Simulator::run(&mut bp, std::slice::from_ref(&v));
+        assert_eq!(bp.total_toggles(), 0);
+        // Re-applying the identical vector still toggles nothing.
+        Simulator::run(&mut bp, std::slice::from_ref(&v));
+        assert_eq!(bp.total_toggles(), 0);
+    }
+
+    #[test]
+    fn empty_run_is_a_no_op() {
+        let nl = crate::mult::pptree::build_exact(4);
+        let mut bp = BitParallelSim::new(&nl);
+        let out = Simulator::run(&mut bp, &[]);
+        assert!(out.is_empty());
+        assert_eq!(BitParallelSim::vectors(&bp), 0);
+    }
+
+    #[test]
+    fn counting_planes_enumerate_consecutive_values() {
+        for start in [0u64, 64, 192] {
+            let planes = counting_planes(start, 9);
+            for lane in 0..64u64 {
+                let v = planes.iter().enumerate().fold(0u64, |acc, (i, &w)| {
+                    acc | (((w >> lane) & 1) << i)
+                });
+                assert_eq!(v, (start + lane) & 0x1FF, "start={start} lane={lane}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_path_matches_trait_path() {
+        // Same 128 consecutive-b vectors through run_packed and run().
+        let nl = crate::mult::pptree::build_exact(6);
+        let a = 0b101101u64;
+        let vectors: Vec<Vec<bool>> = (0..128u64)
+            .map(|b| {
+                let mut v = Vec::with_capacity(12);
+                for i in 0..6 {
+                    v.push((a >> i) & 1 != 0);
+                }
+                for i in 0..6 {
+                    v.push((b % 64 >> i) & 1 != 0);
+                }
+                v
+            })
+            .collect();
+        let mut via_trait = BitParallelSim::new(&nl);
+        let trait_out = Simulator::run(&mut via_trait, &vectors);
+
+        let mut packed = BitParallelSim::new(&nl);
+        let mut assignment = Vec::new();
+        for i in 0..6 {
+            assignment.push(if (a >> i) & 1 == 1 { u64::MAX } else { 0 });
+        }
+        assignment.extend(counting_planes(0, 6));
+        let out_ids: Vec<usize> = nl.outputs().iter().map(|(_, id)| id.idx()).collect();
+        let mut packed_out = Vec::new();
+        for _block in 0..2 {
+            let vals = packed.run_packed(&assignment, 64);
+            for lane in 0..64 {
+                packed_out.push(
+                    out_ids
+                        .iter()
+                        .map(|&idx| (vals[idx] >> lane) & 1 != 0)
+                        .collect::<Vec<bool>>(),
+                );
+            }
+        }
+        assert_eq!(trait_out, packed_out);
+        assert_eq!(via_trait.toggles(), packed.toggles());
+    }
+}

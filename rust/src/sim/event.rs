@@ -6,6 +6,7 @@
 //! gates dirty when an output changes. Complexity per vector is
 //! O(changed cone) rather than O(netlist).
 
+use super::Simulator;
 use crate::gates::{GateKind, Netlist};
 
 /// Incremental simulator state for one netlist.
@@ -220,6 +221,24 @@ impl<'a> EventSim<'a> {
     }
 
     pub fn vectors(&self) -> u64 {
+        self.vectors
+    }
+}
+
+impl Simulator for EventSim<'_> {
+    fn name(&self) -> &'static str {
+        "event-driven"
+    }
+
+    fn run(&mut self, vectors: &[Vec<bool>]) -> Vec<Vec<bool>> {
+        vectors.iter().map(|v| self.step(v)).collect()
+    }
+
+    fn toggles(&self) -> &[u64] {
+        &self.toggles
+    }
+
+    fn vectors(&self) -> u64 {
         self.vectors
     }
 }

@@ -1,18 +1,58 @@
 //! Gate-level simulation for functional verification and switching-activity
 //! extraction (the power model's input).
 //!
-//! Two engines, cross-checked against each other in tests:
+//! Two engines behind one [`Simulator`] trait, cross-checked bit-for-bit
+//! against each other in tests (`rust/tests/sim_equivalence.rs`):
 //!
-//! * [`event::EventSim`] — a classic event-driven two-value simulator:
-//!   only gates whose inputs changed are re-evaluated, toggle counts are
-//!   accumulated per net. This is the engine the PE-level workloads use.
-//! * [`activity::activity_bitparallel`] — a 64-way bit-parallel sweep:
-//!   64 consecutive input vectors are evaluated per pass and toggles are
-//!   counted with XOR/popcount. This is the hot path for Table II's
-//!   fixed multiplication workloads (see benches/hotpaths.rs).
+//! * [`event::EventSim`] — the scalar reference: a classic event-driven
+//!   two-value simulator. Only gates whose inputs changed are re-evaluated,
+//!   so it wins on *narrow-cone* streams (weight-stationary PE traffic where
+//!   few input bits move per cycle) and it is the engine the PE-level
+//!   workloads use.
+//! * [`bitparallel::BitParallelSim`] — the throughput engine: every net is a
+//!   `u64` bit-plane (lane `l` = input vector `t + l`), so one topological
+//!   sweep evaluates 64 vectors with pure bitwise ops and toggles are
+//!   counted with XOR/popcount. This is the hot path for exhaustive error
+//!   characterization, activity-based power (Table II) and the DSE sweep —
+//!   50×+ faster than the scalar engine on random/exhaustive workloads
+//!   (measured in `benches/hotpaths.rs`).
+//!
+//! [`activity`] layers workload helpers and a multi-threaded activity
+//! extractor on top of the bit-parallel engine.
 
 pub mod event;
+pub mod bitparallel;
 pub mod activity;
 
-pub use activity::{activity_bitparallel, ActivityReport};
+pub use activity::{activity_bitparallel, activity_parallel, ActivityReport};
+pub use bitparallel::BitParallelSim;
 pub use event::EventSim;
+
+/// Common interface over the gate-simulation engines.
+///
+/// Both engines are *stateful* stream simulators: toggle counts accumulate
+/// across [`Simulator::run`] calls, the first vector ever applied
+/// establishes net state without counting toggles, and every later
+/// consecutive-vector transition adds `value_changed(net)` to that net's
+/// count — so a stream split across calls gives bit-identical results to
+/// one call with the concatenated stream.
+pub trait Simulator {
+    /// Engine name for reports and benches.
+    fn name(&self) -> &'static str;
+
+    /// Apply a stream of input vectors (one `bool` per primary input, in
+    /// declaration order) and return the primary-output bits per vector
+    /// (declaration order).
+    fn run(&mut self, vectors: &[Vec<bool>]) -> Vec<Vec<bool>>;
+
+    /// Per-net cumulative toggle counts (indexed by `NetId`).
+    fn toggles(&self) -> &[u64];
+
+    /// Number of vectors applied so far.
+    fn vectors(&self) -> u64;
+
+    /// Total toggles across all nets.
+    fn total_toggles(&self) -> u64 {
+        self.toggles().iter().sum()
+    }
+}

@@ -1,0 +1,226 @@
+//! Functional yield of the DCiM datapath under SRAM read-bit corruption.
+//!
+//! The analog yield problems ([`super::problem`]) ask "does the bit cell
+//! still read correctly?"; this module asks the system-level question the
+//! compiler actually cares about: *if* weight-storage bits are corrupted
+//! with some per-column probability (derived from the cell-level Pf), does
+//! the macro's arithmetic still meet its accuracy spec on a given workload?
+//!
+//! Monte-Carlo over corruption patterns rides the bit-parallel gate engine:
+//! the 64 lanes of each bit-plane carry 64 *independent corruption samples*
+//! (rather than 64 time steps), so one topological sweep per workload pair
+//! scores 64 Monte-Carlo samples at once. Sample blocks are distributed
+//! across worker threads with per-block forked RNG streams, so results are
+//! deterministic for any thread count.
+
+use super::mc::McResult;
+use crate::gates::Netlist;
+use crate::util::rng::Pcg32;
+use crate::util::threadpool::parallel_fold;
+
+/// One functional-yield question: netlist + workload + failure criterion.
+pub struct FunctionalYieldProblem<'a> {
+    /// Multiplier netlist (inputs `a[0..bits)`, `b[0..bits)`, output bus).
+    pub nl: &'a Netlist,
+    /// Operand width.
+    pub bits: usize,
+    /// Per-column probability that a read of stored-operand bit `i` flips
+    /// (length `bits`; column 0 = LSB).
+    pub flip_prob: Vec<f64>,
+    /// Workload pairs `(a, b)` where `a` is the stored (corruptible) operand.
+    pub workload: Vec<(u64, u64)>,
+    /// A sample fails when `|p̂ − a·b| / p_max` exceeds this on any pair.
+    pub err_threshold: f64,
+}
+
+impl<'a> FunctionalYieldProblem<'a> {
+    pub fn new(
+        nl: &'a Netlist,
+        bits: usize,
+        flip_prob: Vec<f64>,
+        workload: Vec<(u64, u64)>,
+        err_threshold: f64,
+    ) -> Self {
+        assert_eq!(flip_prob.len(), bits, "one flip probability per column");
+        assert_eq!(nl.inputs().len(), 2 * bits, "2-operand netlist expected");
+        assert!(!workload.is_empty(), "empty workload");
+        Self {
+            nl,
+            bits,
+            flip_prob,
+            workload,
+            err_threshold,
+        }
+    }
+
+    /// Evaluate up to 64 corruption samples (one per lane of `masks`) over
+    /// the whole workload; returns a bitmask of *failing* lanes.
+    pub fn failing_lanes(&self, masks: &[u64]) -> u64 {
+        let lanes = masks.len();
+        assert!(0 < lanes && lanes <= 64);
+        let p_max = {
+            let top = ((1u64 << self.bits) - 1) as f64;
+            top * top
+        };
+        let mut assignment = vec![0u64; 2 * self.bits];
+        let mut vals = Vec::new();
+        let mut failing = 0u64;
+        let all = if lanes == 64 {
+            u64::MAX
+        } else {
+            (1u64 << lanes) - 1
+        };
+        for &(a, b) in &self.workload {
+            if failing == all {
+                break; // every lane already failed
+            }
+            for i in 0..self.bits {
+                let a_bit = (a >> i) & 1;
+                let mut word = 0u64;
+                for (l, &mask) in masks.iter().enumerate() {
+                    if (a_bit ^ ((mask >> i) & 1)) == 1 {
+                        word |= 1u64 << l;
+                    }
+                }
+                assignment[i] = word;
+                assignment[self.bits + i] = if (b >> i) & 1 == 1 { all } else { 0 };
+            }
+            self.nl.eval_u64_into(&assignment, &mut vals);
+            let exact = (a * b) as i64;
+            let outs = self.nl.outputs();
+            for l in 0..lanes {
+                if failing & (1u64 << l) != 0 {
+                    continue;
+                }
+                let p = outs
+                    .iter()
+                    .enumerate()
+                    .fold(0u64, |acc, (i, (_, id))| {
+                        acc | (((vals[id.idx()] >> l) & 1) << i)
+                    });
+                let err = (p as i64 - exact).unsigned_abs() as f64 / p_max;
+                if err > self.err_threshold {
+                    failing |= 1u64 << l;
+                }
+            }
+        }
+        failing
+    }
+}
+
+/// Monte-Carlo functional yield: `samples` corruption patterns, evaluated
+/// 64 per gate-level sweep, distributed across `threads` workers.
+pub fn run_functional_mc(
+    problem: &FunctionalYieldProblem,
+    samples: u64,
+    seed: u64,
+    threads: usize,
+) -> McResult {
+    if samples == 0 {
+        return McResult {
+            pf: 0.0,
+            fom: f64::INFINITY,
+            sims: 0,
+            failures: 0,
+        };
+    }
+    let blocks = samples.div_ceil(64);
+    let failures = parallel_fold(
+        blocks as usize,
+        threads.max(1),
+        |block| {
+            // Fork on the bare block index: distinct per block by
+            // construction (an OR-ed tag would alias high block indices).
+            let mut rng = Pcg32::new(seed ^ 0xFC17_0000_0000_0000).fork(block as u64);
+            let lanes = (samples - block as u64 * 64).min(64) as usize;
+            let mut masks = Vec::with_capacity(lanes);
+            for _ in 0..lanes {
+                let mut mask = 0u64;
+                for (i, &p) in problem.flip_prob.iter().enumerate() {
+                    if rng.next_f64() < p {
+                        mask |= 1u64 << i;
+                    }
+                }
+                masks.push(mask);
+            }
+            problem.failing_lanes(&masks).count_ones() as u64
+        },
+        |a, b| a + b,
+    );
+    let pf = failures as f64 / samples.max(1) as f64;
+    let fom = if pf > 0.0 {
+        ((1.0 - pf) / (pf * samples as f64)).sqrt()
+    } else {
+        f64::INFINITY
+    };
+    McResult {
+        pf,
+        fom,
+        sims: samples,
+        failures,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn workload(bits: usize, n: usize, seed: u64) -> Vec<(u64, u64)> {
+        let mut rng = Pcg32::new(seed);
+        (0..n)
+            .map(|_| {
+                (
+                    rng.below(1 << bits) as u64,
+                    rng.below(1 << bits) as u64,
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn clean_reads_never_fail() {
+        let nl = crate::mult::pptree::build_exact(4);
+        let p = FunctionalYieldProblem::new(&nl, 4, vec![0.0; 4], workload(4, 20, 1), 1e-6);
+        let r = run_functional_mc(&p, 500, 42, 2);
+        assert_eq!(r.failures, 0);
+        assert_eq!(r.pf, 0.0);
+        assert_eq!(r.sims, 500);
+    }
+
+    #[test]
+    fn certain_msb_flip_fails_every_sample() {
+        let nl = crate::mult::pptree::build_exact(4);
+        // MSB always flips; workload guarantees the MSB of `a` matters.
+        let mut fp = vec![0.0; 4];
+        fp[3] = 1.0;
+        let p = FunctionalYieldProblem::new(&nl, 4, fp, vec![(0b1000, 15)], 1e-3);
+        let r = run_functional_mc(&p, 200, 7, 3);
+        assert_eq!(r.failures, 200);
+        assert_eq!(r.pf, 1.0);
+    }
+
+    #[test]
+    fn deterministic_across_thread_counts() {
+        let nl = crate::mult::pptree::build_exact(4);
+        let p = FunctionalYieldProblem::new(&nl, 4, vec![0.05; 4], workload(4, 30, 3), 5e-3);
+        let a = run_functional_mc(&p, 1000, 99, 1);
+        let b = run_functional_mc(&p, 1000, 99, 4);
+        assert_eq!(a.failures, b.failures);
+        assert_eq!(a.pf, b.pf);
+    }
+
+    #[test]
+    fn lenient_threshold_tolerates_lsb_noise() {
+        let nl = crate::mult::pptree::build_exact(4);
+        let mut fp = vec![0.0; 4];
+        fp[0] = 1.0; // LSB always flips: worst product error 15 of p_max 225
+        let wl = workload(4, 10, 5);
+        let strict = FunctionalYieldProblem::new(&nl, 4, fp.clone(), wl.clone(), 1e-6);
+        let lenient = FunctionalYieldProblem::new(&nl, 4, fp, wl, 0.5);
+        let rs = run_functional_mc(&strict, 64, 11, 2);
+        let rl = run_functional_mc(&lenient, 64, 11, 2);
+        assert!(rs.failures > 0, "strict criterion must catch LSB flips");
+        assert_eq!(rl.failures, 0, "lenient criterion must tolerate them");
+    }
+}

@@ -7,12 +7,19 @@
 //! zero) and access-time (bit-line development too slow for the sense
 //! window given the sampled read current and the array's BL/WL loading —
 //! the "trimmed N×2 array with full WL parasitics" setup of Table V).
+//!
+//! [`functional`] lifts the cell-level failure probabilities to the system
+//! level: Monte-Carlo over weight-storage bit corruption, scored against an
+//! arithmetic accuracy criterion on the gate netlist, with 64 corruption
+//! samples per bit-parallel sweep.
 
 pub mod problem;
 pub mod mc;
 pub mod mnis;
+pub mod functional;
 pub mod cli;
 
+pub use functional::{run_functional_mc, FunctionalYieldProblem};
 pub use mc::{run_mc, McResult};
 pub use mnis::{run_mnis, MnisResult};
 pub use problem::{FailureProblem, SramYieldProblem};

@@ -1,0 +1,114 @@
+//! Property tests (via the in-tree `util::proptest` harness) for the
+//! error-metric invariants the DSE engine leans on:
+//!
+//! * exact multipliers score zero on every metric,
+//! * NMED is a true normalized mean (always in [0, 1]),
+//! * for the tunable Appro4-2 family, the worst-case error is monotone
+//!   non-decreasing in the approximation degree (the approximate-column
+//!   budget) — the invariant that makes the accuracy knob a knob.
+
+use openacm::config::spec::{CompressorKind, MultFamily};
+use openacm::mult::error_metrics::{exhaustive, sampled};
+use openacm::util::proptest::{check, prop_assert, Gen};
+
+fn random_family(g: &mut Gen) -> MultFamily {
+    match g.usize_below(4) {
+        0 => MultFamily::Approx42 {
+            compressor: *g.choose(CompressorKind::all_approx()),
+            approx_cols: g.usize_below(17),
+        },
+        1 => MultFamily::LogOur,
+        2 => MultFamily::Mitchell,
+        _ => MultFamily::AdderTree,
+    }
+}
+
+#[test]
+fn exact_multiplier_scores_zero_on_every_metric() {
+    check(12, 0xE0, |g| {
+        let bits = 2 + g.usize_below(7); // 2..=8
+        let r = exhaustive(&MultFamily::Exact, bits);
+        prop_assert(
+            r.nmed == 0.0
+                && r.mred == 0.0
+                && r.error_rate == 0.0
+                && r.wce == 0
+                && r.normalized_bias == 0.0,
+            format!("exact multiplier at {bits} bits scored nonzero: {r:?}"),
+        )
+    });
+}
+
+#[test]
+fn nmed_is_normalized_into_unit_interval() {
+    check(24, 0xE1, |g| {
+        let bits = 4 + g.usize_below(5); // 4..=8
+        let family = random_family(g);
+        let r = exhaustive(&family, bits);
+        prop_assert(
+            (0.0..=1.0).contains(&r.nmed) && r.nmed.is_finite(),
+            format!("NMED {:.3e} outside [0,1] for {family:?} at {bits} bits", r.nmed),
+        )?;
+        prop_assert(
+            r.error_rate >= 0.0 && r.error_rate <= 1.0,
+            format!("ER {} outside [0,1]", r.error_rate),
+        )?;
+        prop_assert(
+            r.normalized_bias.abs() <= r.nmed + 1e-12,
+            format!("|bias| {:.3e} exceeds NMED {:.3e}", r.normalized_bias, r.nmed),
+        )
+    });
+}
+
+#[test]
+fn sampled_nmed_also_normalized_for_wide_multipliers() {
+    check(6, 0xE2, |g| {
+        let bits = 12 + g.usize_below(9); // 12..=20
+        let family = random_family(g);
+        let r = sampled(&family, bits, 2_000, 0x5EED ^ bits as u64);
+        prop_assert(
+            (0.0..=1.0).contains(&r.nmed) && r.nmed.is_finite(),
+            format!("sampled NMED {:.3e} outside [0,1] at {bits} bits", r.nmed),
+        )
+    });
+}
+
+#[test]
+fn wce_is_monotone_in_the_approximation_degree() {
+    // More approximated columns can only widen the worst case: the Fig 2
+    // accuracy knob must be monotone or the DSE ordering is meaningless.
+    check(20, 0xE3, |g| {
+        let compressor = *g.choose(CompressorKind::all_approx());
+        let lo = g.usize_below(17);
+        let hi = g.usize_below(17);
+        let (lo, hi) = (lo.min(hi), lo.max(hi));
+        let mk = |cols| MultFamily::Approx42 {
+            compressor,
+            approx_cols: cols,
+        };
+        let wce_lo = exhaustive(&mk(lo), 8).wce;
+        let wce_hi = exhaustive(&mk(hi), 8).wce;
+        prop_assert(
+            wce_lo <= wce_hi,
+            format!("{compressor:?}: WCE({lo} cols)={wce_lo} > WCE({hi} cols)={wce_hi}"),
+        )
+    });
+}
+
+#[test]
+fn zero_approx_columns_degrades_to_exact() {
+    check(6, 0xE4, |g| {
+        let compressor = *g.choose(CompressorKind::all_approx());
+        let r = exhaustive(
+            &MultFamily::Approx42 {
+                compressor,
+                approx_cols: 0,
+            },
+            8,
+        );
+        prop_assert(
+            r.wce == 0 && r.nmed == 0.0,
+            format!("{compressor:?} with 0 approx columns is not exact: {r:?}"),
+        )
+    });
+}

@@ -1,0 +1,212 @@
+//! Offline drop-in subset of the `anyhow` crate.
+//!
+//! The build environment has no network access, so the small slice of the
+//! anyhow API this workspace actually uses is reimplemented here and wired
+//! in through a path dependency: [`Error`], [`Result`], the [`Context`]
+//! extension trait (on both `Result` and `Option`), and the [`anyhow!`] /
+//! [`bail!`] / [`ensure!`] macros.
+//!
+//! Semantics match upstream where it matters to callers:
+//!
+//! * `{}` on [`Error`] prints the outermost message;
+//! * `{:#}` prints the whole context chain joined with `": "`;
+//! * `{:?}` prints the chain in upstream's "Caused by" layout;
+//! * `?` converts any `std::error::Error + Send + Sync + 'static`.
+
+use std::fmt;
+
+/// Error type: an outermost message plus the chain of underlying causes,
+/// outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context/cause messages, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The outermost message.
+    pub fn root_message(&self) -> &str {
+        &self.chain[0]
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, cause) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// `Error` deliberately does not implement `std::error::Error` (same as
+// upstream): that is what makes the blanket `From` below coherent.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(err: E) -> Error {
+        let mut chain = vec![err.to_string()];
+        let mut source = err.source();
+        while let Some(cause) = source {
+            chain.push(cause.to_string());
+            source = cause.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>` alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context extension for `Result` and `Option`.
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+
+    /// Wrap the error with a lazily evaluated context message.
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a printable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an [`Error`] if the condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !$cond {
+            return ::std::result::Result::Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn context_chain_formats() {
+        let r: Result<()> = Err(io_err().into());
+        let e = r.context("reading spec").unwrap_err();
+        assert_eq!(format!("{e}"), "reading spec");
+        assert_eq!(format!("{e:#}"), "reading spec: missing thing");
+        assert!(format!("{e:?}").contains("Caused by"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("nothing here").unwrap_err();
+        assert_eq!(format!("{e}"), "nothing here");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("unlucky {}", x);
+            }
+            Ok(x)
+        }
+        assert_eq!(f(1).unwrap(), 1);
+        assert_eq!(format!("{}", f(3).unwrap_err()), "unlucky 3");
+        assert_eq!(format!("{}", f(11).unwrap_err()), "x too big: 11");
+        let e = anyhow!("plain");
+        assert_eq!(format!("{e}"), "plain");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i64> {
+            Ok(s.parse::<i64>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+}

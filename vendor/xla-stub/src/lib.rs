@@ -1,0 +1,220 @@
+//! Offline stub of the `xla` crate (PJRT bindings).
+//!
+//! The real backend needs `libxla_extension`, which the offline build
+//! environment does not ship. This stub keeps the whole workspace — the
+//! `openacm::runtime` wrapper, the coordinator, and the serving tests —
+//! compiling and running:
+//!
+//! * [`Literal`] is a real, pure-Rust implementation (shape + typed data),
+//!   so literal construction/reshaping/decoding works everywhere;
+//! * [`PjRtClient::cpu`] succeeds and reports the `"stub-cpu"` platform;
+//! * compiling or executing an HLO module returns a clean [`Error`], which
+//!   the callers already surface (the serving paths skip gracefully when
+//!   AOT artifacts are absent, which is the only time they would execute).
+//!
+//! Swap this path dependency for the real `xla` crate to run the PJRT
+//! serving experiments.
+
+use std::fmt;
+
+/// Stub error type.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl Error {
+    fn unsupported(what: &str) -> Error {
+        Error(format!(
+            "{what} is unavailable: openacm was built against the offline xla stub \
+             (vendor/xla-stub); link the real xla crate to enable PJRT execution"
+        ))
+    }
+}
+
+type Result<T> = std::result::Result<T, Error>;
+
+/// Typed literal payload.
+#[derive(Clone, Debug)]
+enum Data {
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+    U8(Vec<u8>),
+}
+
+impl Data {
+    fn len(&self) -> usize {
+        match self {
+            Data::I32(v) => v.len(),
+            Data::I64(v) => v.len(),
+            Data::F32(v) => v.len(),
+            Data::F64(v) => v.len(),
+            Data::U8(v) => v.len(),
+        }
+    }
+}
+
+/// Element types a [`Literal`] can carry.
+pub trait NativeType: Sized + Clone {
+    fn wrap(values: Vec<Self>) -> Data;
+    fn unwrap(data: &Data) -> Option<Vec<Self>>;
+}
+
+macro_rules! native {
+    ($ty:ty, $variant:ident) => {
+        impl NativeType for $ty {
+            fn wrap(values: Vec<Self>) -> Data {
+                Data::$variant(values)
+            }
+            fn unwrap(data: &Data) -> Option<Vec<Self>> {
+                match data {
+                    Data::$variant(v) => Some(v.clone()),
+                    _ => None,
+                }
+            }
+        }
+    };
+}
+
+native!(i32, I32);
+native!(i64, I64);
+native!(f32, F32);
+native!(f64, F64);
+native!(u8, U8);
+
+/// A host-side array literal: shape + typed data.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Data,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(values: &[T]) -> Literal {
+        Literal {
+            dims: vec![values.len() as i64],
+            data: T::wrap(values.to_vec()),
+        }
+    }
+
+    /// Reshape to the given dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let count: i64 = dims.iter().product();
+        if count as usize != self.data.len() {
+            return Err(Error(format!(
+                "cannot reshape {} elements to {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal {
+            dims: dims.to_vec(),
+            data: self.data.clone(),
+        })
+    }
+
+    pub fn shape(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Decode to a typed vector; errors on a dtype mismatch.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data).ok_or_else(|| Error("literal dtype mismatch".to_string()))
+    }
+
+    /// Unwrap a 1-tuple result. The stub never produces tuples, so this is
+    /// the identity (it is only reachable after a successful `execute`,
+    /// which the stub does not provide).
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Ok(self)
+    }
+}
+
+/// Parsed HLO module handle (opaque in the stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::unsupported("parsing HLO text"))
+    }
+}
+
+/// XLA computation handle (opaque in the stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device-side buffer handle.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unsupported("device-to-host transfer"))
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unsupported("PJRT execution"))
+    }
+}
+
+/// PJRT client handle.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub-cpu".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unsupported("HLO compilation"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1i32, 2, 3, 4, 5, 6]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.shape(), &[2, 3]);
+        assert_eq!(r.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4, 5, 6]);
+        assert!(l.reshape(&[7]).is_err());
+        assert!(l.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn client_up_but_execution_gated() {
+        let c = PjRtClient::cpu().unwrap();
+        assert_eq!(c.platform_name(), "stub-cpu");
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+        let exe = PjRtLoadedExecutable;
+        assert!(exe.execute::<Literal>(&[]).is_err());
+    }
+}

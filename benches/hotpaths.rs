@@ -1,12 +1,14 @@
 //! Micro-benchmarks of the compiler's hot paths — the §Perf targets in
 //! EXPERIMENTS.md. Each one prints mean/p50/p99 so before/after deltas of
-//! optimization work are directly comparable.
+//! optimization work are directly comparable, and the whole run is written
+//! to `BENCH_hotpaths.json` (per-case ns/iter + speedup ratios) so the
+//! perf trajectory is tracked across PRs.
 //!
 //! ```text
 //! cargo bench --bench hotpaths
 //! ```
 
-use openacm::bench::harness::{bench, black_box};
+use openacm::bench::harness::{bench, black_box, BenchJson};
 use openacm::config::spec::{CompressorKind, MultFamily};
 use openacm::mult::behavioral::int8_lut;
 use openacm::mult::{error_metrics, pptree};
@@ -18,6 +20,7 @@ use openacm::util::rng::Pcg32;
 use openacm::util::threadpool::ThreadPool;
 
 fn main() {
+    let mut json = BenchJson::new("hotpaths");
     // 0. The headline: exhaustive INT8 characterization (all 65,536 input
     // vectors, full error metrics) — scalar event-driven engine vs the
     // 64-lane bit-parallel engine, identical results by construction
@@ -28,17 +31,21 @@ fn main() {
         let mut sim = EventSim::new(&nl8);
         black_box(error_metrics::exhaustive_sim(&mut sim, 8));
     });
-    bench("exhaustive int8 char (bit-parallel, bool-vec API)", 1, 10, || {
+    json.case(&scalar);
+    let boolvec = bench("exhaustive int8 char (bit-parallel, bool-vec API)", 1, 10, || {
         let mut sim = BitParallelSim::new(&nl8);
         black_box(error_metrics::exhaustive_sim(&mut sim, 8));
     });
+    json.case(&boolvec);
     let packed = bench("exhaustive int8 char (bit-parallel, packed)", 1, 20, || {
         black_box(error_metrics::exhaustive_netlist(&fam8, 8, 1));
     });
+    json.case(&packed);
     println!(
         "→ bit-parallel speedup over scalar: {:.1}x (single-threaded)",
         scalar.mean_ns / packed.mean_ns
     );
+    json.ratio("bitparallel_packed_over_scalar", scalar.mean_ns / packed.mean_ns);
     let threads = ThreadPool::default_parallelism();
     let mt = bench(
         &format!("exhaustive int8 char (packed, {threads} threads)"),
@@ -48,17 +55,21 @@ fn main() {
             black_box(error_metrics::exhaustive_netlist(&fam8, 8, threads));
         },
     );
+    json.case(&mt);
     println!(
         "→ combined speedup over scalar: {:.1}x",
         scalar.mean_ns / mt.mean_ns
     );
+    json.ratio("combined_over_scalar", scalar.mean_ns / mt.mean_ns);
     // 1. Netlist generation (the compiler front end).
-    bench("build_exact(32) netlist", 1, 20, || {
+    let r = bench("build_exact(32) netlist", 1, 20, || {
         black_box(pptree::build_exact(32));
     });
-    bench("build_logour(32) netlist", 1, 20, || {
+    json.case(&r);
+    let r = bench("build_logour(32) netlist", 1, 20, || {
         black_box(openacm::mult::logarithmic::build_logour(32));
     });
+    json.case(&r);
 
     // 2. Bit-parallel activity extraction (the Table II power hot path).
     let nl = pptree::build_exact(16);
@@ -74,7 +85,8 @@ fn main() {
         "→ {:.1} M gate-evals/s",
         r.throughput((nl.gates().len() * vectors.len()) as f64) / 1e6
     );
-    bench(
+    json.case(&r);
+    let r = bench(
         &format!("activity_parallel(16b mult, 4096 vecs, {threads}t)"),
         1,
         20,
@@ -82,6 +94,7 @@ fn main() {
             black_box(activity_parallel(&nl, &vectors, threads));
         },
     );
+    json.case(&r);
 
     // 3. Event-driven simulation (the incremental engine).
     let mut sim = EventSim::new(&nl);
@@ -94,6 +107,7 @@ fn main() {
         "→ {:.0} K vectors/s event-driven (wide cones: random operands)",
         r.throughput(vectors.len() as f64) / 1e3
     );
+    json.case(&r);
 
     // 3b. Narrow-cone workload (weight-stationary PE: only the streaming
     // operand's low bits move) — the case the worklist engine targets.
@@ -109,6 +123,7 @@ fn main() {
         "→ {:.0} K vectors/s event-driven (narrow cones)",
         r.throughput(narrow_vecs.len() as f64) / 1e3
     );
+    json.case(&r);
 
     // 4. 64-lane behavioral multiply (LUT generation hot path).
     let lanes_a: Vec<u64> = (0..64).collect();
@@ -123,14 +138,17 @@ fn main() {
         ));
     });
     println!("→ {:.1} M mults/s", r.throughput(64.0) / 1e6);
+    json.case(&r);
 
     // 5. int8 LUT generation (python-parity path).
-    bench("int8_lut(logour)", 1, 10, || {
+    let r = bench("int8_lut(logour)", 1, 10, || {
         black_box(int8_lut(&MultFamily::LogOur));
     });
-    bench("int8_lut(appro42/yang1)", 1, 5, || {
+    json.case(&r);
+    let r = bench("int8_lut(appro42/yang1)", 1, 5, || {
         black_box(int8_lut(&MultFamily::default_approx(8)));
     });
+    json.case(&r);
 
     // 6. Native quantized CNN forward (the no-PJRT fallback).
     let cnn = QuantCnn::random(7);
@@ -140,4 +158,10 @@ fn main() {
         black_box(cnn.forward(&lut, &img));
     });
     println!("→ {:.0} images/s native", r.throughput(1.0));
+    json.case(&r);
+
+    match json.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench json: {e}"),
+    }
 }

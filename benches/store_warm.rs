@@ -1,0 +1,91 @@
+//! Warm-vs-cold DSE sweep through the design-point store — the store's
+//! headline number: a repeated sweep must be served from disk at a wide
+//! margin over recomputation, with bit-identical results.
+//!
+//! ```text
+//! cargo bench --bench store_warm              # full size (8-bit, 1500 ops)
+//! OPENACM_SMOKE=1 cargo bench --bench store_warm   # CI smoke (5-bit)
+//! ```
+//!
+//! Writes `BENCH_store_warm.json` (per-case ns/iter + the warm_over_cold
+//! ratio) for the CI artifact trail.
+
+use openacm::bench::harness::{bench, black_box, BenchJson};
+use openacm::dse::sweep_configs_cached;
+use openacm::store::DesignPointStore;
+use openacm::util::threadpool::ThreadPool;
+
+fn main() {
+    let smoke_env = std::env::var("OPENACM_SMOKE")
+        .map(|v| !v.is_empty() && v != "0" && !v.eq_ignore_ascii_case("false"))
+        .unwrap_or(false);
+    let smoke = smoke_env || std::env::args().any(|a| a == "--smoke");
+    // Smoke mode keeps CI cheap: tiny bitwidth, small workload.
+    let (bits, rows, n_ops) = if smoke { (5, 16, 200) } else { (8, 16, 1500) };
+    let threads = ThreadPool::default_parallelism();
+    let dir = std::env::temp_dir().join(format!(
+        "openacm_store_warm_bench_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    println!(
+        "store warm-vs-cold: {rows}x{bits} sweep, {n_ops} ops, {threads} threads{}",
+        if smoke { " [smoke]" } else { "" }
+    );
+
+    let mut json = BenchJson::new("store_warm");
+
+    // Cold: every iteration starts from an empty store (the wipe is part
+    // of the measured loop but negligible next to the sweep itself).
+    let cold = bench(
+        &format!("dse sweep {rows}x{bits} (cold store)"),
+        0,
+        if smoke { 2 } else { 3 },
+        || {
+            let _ = std::fs::remove_dir_all(&dir);
+            let store = DesignPointStore::open(&dir).expect("open store");
+            black_box(sweep_configs_cached(rows, bits, n_ops, threads, Some(&store)));
+        },
+    );
+    json.case(&cold);
+
+    // Warm: the store is populated (by the last cold iteration); each
+    // iteration re-opens it — index rescan + record reads, no simulation.
+    let warm = bench(
+        &format!("dse sweep {rows}x{bits} (warm store)"),
+        1,
+        if smoke { 5 } else { 10 },
+        || {
+            let store = DesignPointStore::open(&dir).expect("open store");
+            black_box(sweep_configs_cached(rows, bits, n_ops, threads, Some(&store)));
+        },
+    );
+    json.case(&warm);
+
+    let speedup = cold.mean_ns / warm.mean_ns;
+    println!("→ warm-cache speedup over cold sweep: {speedup:.1}x");
+    json.ratio("warm_over_cold", speedup);
+
+    // Sanity: the warm run must actually have been served from the store.
+    let store = DesignPointStore::open(&dir).expect("open store");
+    let before = store.stats();
+    let _ = black_box(sweep_configs_cached(rows, bits, n_ops, threads, Some(&store)));
+    let s = store.stats().since(&before);
+    println!(
+        "→ verification pass: {} hits / {} misses ({:.0}% served from store)",
+        s.hits,
+        s.misses,
+        s.hit_rate() * 100.0
+    );
+    assert!(
+        s.hit_rate() >= 0.9,
+        "warm sweep only {:.0}% cached",
+        s.hit_rate() * 100.0
+    );
+
+    match json.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench json: {e}"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -4,26 +4,32 @@
 //! frontier plus accuracy-constrained selections — the compiler knob the
 //! paper's §VI roadmap calls for, implemented.
 //!
+//! Runs through the persistent design-point store by default, so a
+//! repeated exploration is served from disk (bit-identical results); pass
+//! `--no-cache` to force recomputation. Hit/miss counts print at the end.
+//!
 //! ```text
 //! cargo run --release --example dse_pareto -- [--rows 16] [--word-bits 8]
+//!     [--no-cache] [--store DIR]
 //! ```
 
 use anyhow::Result;
 
 use openacm::bench::harness::{sci, Table};
-use openacm::dse::{pareto_front, sweep_configs};
+use openacm::dse::{pareto_front, sweep_configs_cached};
 use openacm::dse::pareto::select_under_constraint;
 use openacm::util::cli::Args;
 use openacm::util::threadpool::ThreadPool;
 
 fn main() -> Result<()> {
-    let args = Args::from_env(false, &[])?;
+    let args = Args::from_env(false, &["no-cache"])?;
     let rows = args.usize_or("rows", 16)?;
     let bits = args.usize_or("word-bits", 8)?;
     let threads = args.usize_or("threads", ThreadPool::default_parallelism())?;
+    let store = openacm::store::cli::store_from_args(&args)?;
 
     eprintln!("sweeping candidates at {rows}x{bits} with {threads} threads...");
-    let points = sweep_configs(rows, bits, 1500, threads);
+    let points = sweep_configs_cached(rows, bits, 1500, threads, store.as_ref());
     println!("evaluated {} design points", points.len());
 
     let front = pareto_front(&points);
@@ -56,6 +62,15 @@ fn main() -> Result<()> {
             ),
             None => println!("  NMED <= {budget:.0e}: (only exact qualifies)"),
         }
+    }
+
+    match &store {
+        Some(store) => println!(
+            "\ndesign-point store {}: {}",
+            store.root().display(),
+            store.stats().summary()
+        ),
+        None => println!("\ndesign-point store disabled (--no-cache)"),
     }
     Ok(())
 }

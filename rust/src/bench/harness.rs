@@ -77,6 +77,99 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
     r
 }
 
+/// Machine-readable bench emission: collects [`BenchResult`]s plus named
+/// speedup ratios and writes them as `BENCH_<name>.json` in the working
+/// directory (the package root under `cargo bench`). CI uploads these as
+/// artifacts so the perf trajectory is tracked across PRs.
+#[derive(Clone, Debug)]
+pub struct BenchJson {
+    name: String,
+    cases: Vec<BenchResult>,
+    ratios: Vec<(String, f64)>,
+}
+
+impl BenchJson {
+    pub fn new(name: &str) -> BenchJson {
+        BenchJson {
+            name: name.to_string(),
+            cases: Vec::new(),
+            ratios: Vec::new(),
+        }
+    }
+
+    /// Record one benchmark case.
+    pub fn case(&mut self, r: &BenchResult) {
+        self.cases.push(r.clone());
+    }
+
+    /// Record a named speedup ratio (e.g. `"warm_over_cold"` → 42.0).
+    pub fn ratio(&mut self, label: &str, value: f64) {
+        self.ratios.push((label.to_string(), value));
+    }
+
+    /// Render the JSON document (hand-rolled: the build is offline, no
+    /// serde). Non-finite numbers serialize as `null`.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"name\": \"{}\",\n", json_escape(&self.name)));
+        s.push_str("  \"cases\": [\n");
+        for (i, c) in self.cases.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"name\": \"{}\", \"iters\": {}, \"mean_ns\": {}, \"p50_ns\": {}, \"p99_ns\": {}, \"min_ns\": {}}}{}\n",
+                json_escape(&c.name),
+                c.iters,
+                json_num(c.mean_ns),
+                json_num(c.p50_ns),
+                json_num(c.p99_ns),
+                json_num(c.min_ns),
+                if i + 1 < self.cases.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ],\n");
+        s.push_str("  \"ratios\": {\n");
+        for (i, (k, v)) in self.ratios.iter().enumerate() {
+            s.push_str(&format!(
+                "    \"{}\": {}{}\n",
+                json_escape(k),
+                json_num(*v),
+                if i + 1 < self.ratios.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  }\n}\n");
+        s
+    }
+
+    /// Write `BENCH_<name>.json`; returns the path written.
+    pub fn write(&self) -> std::io::Result<std::path::PathBuf> {
+        let path = std::path::PathBuf::from(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, self.render())?;
+        Ok(path)
+    }
+}
+
+fn json_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 /// Fixed-width ASCII table, used to print the reproduced paper tables in the
 /// same row/column layout the paper reports.
 #[derive(Clone, Debug, Default)]
@@ -180,6 +273,30 @@ mod tests {
     fn sci_formatting() {
         assert_eq!(sci(2.82e-4), "2.82E-4");
         assert_eq!(sci(0.0), "0.00E+00");
+    }
+
+    #[test]
+    fn bench_json_renders_and_writes() {
+        let mut j = BenchJson::new("unit_test");
+        j.case(&BenchResult {
+            name: "case \"a\"".into(),
+            iters: 3,
+            mean_ns: 1500.0,
+            p50_ns: 1400.0,
+            p99_ns: 2000.0,
+            min_ns: 1000.0,
+        });
+        j.ratio("warm_over_cold", 42.5);
+        j.ratio("bad", f64::INFINITY);
+        let s = j.render();
+        assert!(s.contains("\"name\": \"unit_test\""));
+        assert!(s.contains("case \\\"a\\\""));
+        assert!(s.contains("\"mean_ns\": 1500"));
+        assert!(s.contains("\"warm_over_cold\": 42.5"));
+        assert!(s.contains("\"bad\": null"));
+        // Balanced braces/brackets (cheap well-formedness check).
+        assert_eq!(s.matches('{').count(), s.matches('}').count());
+        assert_eq!(s.matches('[').count(), s.matches(']').count());
     }
 
     #[test]

@@ -4,4 +4,4 @@
 
 pub mod harness;
 
-pub use harness::{bench, BenchResult, Table};
+pub use harness::{bench, BenchJson, BenchResult, Table};

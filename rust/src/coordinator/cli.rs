@@ -8,7 +8,10 @@ use std::time::Duration;
 
 use super::batcher::BatchPolicy;
 use super::server::InferenceServer;
+use super::warmstart::warm_start_profiles;
+use crate::bench::harness::sci;
 use crate::runtime::ArtifactStore;
+use crate::store::DesignPointStore;
 use crate::util::cli::Args;
 
 pub fn cmd_serve(args: &Args) -> Result<()> {
@@ -29,7 +32,49 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         policy.max_batch,
         store.batch
     );
-    let server = InferenceServer::start(&store, policy)?;
+    let mut server = InferenceServer::start(&store, policy)?;
+
+    // Warm-start the serving tables from the design-point store: every
+    // variant whose family an earlier DSE/PPA sweep characterized gets its
+    // accuracy/energy profile for free (O(disk read), no simulation).
+    let store_dir = args
+        .get("store")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(DesignPointStore::default_dir);
+    // Warm-start is an optimization: any failure here (missing dir,
+    // unreadable path, a file where the dir should be) degrades to cold
+    // serving tables, never to a failed boot.
+    match DesignPointStore::open(&store_dir) {
+        Ok(dp_store) => {
+            server.attach_profiles(warm_start_profiles(&dp_store, 8));
+            let mut warmed = 0usize;
+            for v in server.variants() {
+                if let Some(p) = server.profile(&v) {
+                    warmed += 1;
+                    println!(
+                        "warm-start {v:>8}: family {:18} nmed {} energy/op {} ({} records)",
+                        p.family,
+                        p.nmed.map(sci).unwrap_or_else(|| "-".into()),
+                        p.energy_per_op_j
+                            .map(|e| format!("{} J", sci(e)))
+                            .unwrap_or_else(|| "-".into()),
+                        p.records
+                    );
+                }
+            }
+            if warmed == 0 {
+                println!(
+                    "design-point store {} holds no 8-bit records — serving tables cold \
+                     (run `openacm dse` to populate)",
+                    store_dir.display()
+                );
+            }
+        }
+        _ => println!(
+            "could not open design-point store at {} — serving tables cold",
+            store_dir.display()
+        ),
+    }
     let variants = server.variants();
 
     // Drive: round-robin requests across variants from the test set.

@@ -21,8 +21,10 @@ pub mod admission;
 pub mod batcher;
 pub mod server;
 pub mod metrics;
+pub mod warmstart;
 pub mod cli;
 
 pub use admission::{Admission, AdmissionController};
 pub use metrics::ServerMetrics;
 pub use server::{InferenceServer, Request, Response};
+pub use warmstart::{profile_for_variant, warm_start_profiles, VariantProfile};

@@ -11,6 +11,7 @@ use std::time::Instant;
 use super::admission::{Admission, AdmissionController, Ticket};
 use super::batcher::{next_batch, BatchPolicy};
 use super::metrics::ServerMetrics;
+use super::warmstart::{profile_for_variant, VariantProfile};
 use crate::runtime::{client, ArtifactStore, Runtime};
 
 /// A classification request: one 16×16 grayscale image + target variant.
@@ -42,6 +43,9 @@ pub struct InferenceServer {
     pub metrics: Arc<ServerMetrics>,
     pub admission: Arc<AdmissionController>,
     pub batch: usize,
+    /// Per-family accuracy/energy tables, warm-started from the
+    /// design-point store at boot (empty when no store is available).
+    pub profiles: BTreeMap<String, VariantProfile>,
 }
 
 impl InferenceServer {
@@ -161,7 +165,20 @@ impl InferenceServer {
             metrics,
             admission,
             batch: b,
+            profiles: BTreeMap::new(),
         })
+    }
+
+    /// Install warm-started serving tables (see
+    /// [`super::warmstart::warm_start_profiles`]).
+    pub fn attach_profiles(&mut self, profiles: BTreeMap<String, VariantProfile>) {
+        self.profiles = profiles;
+    }
+
+    /// The characterization profile behind a serving variant, if the store
+    /// held one at boot.
+    pub fn profile(&self, variant: &str) -> Option<&VariantProfile> {
+        profile_for_variant(&self.profiles, variant)
     }
 
     /// Route one request. Errors on unknown variants and on shed load

@@ -1,0 +1,251 @@
+//! Warm-starting the coordinator's serving tables from the design-point
+//! store.
+//!
+//! The serving path routes requests by multiplier *variant* ("exact",
+//! "appro42", "logour", "lm") and wants to report the accuracy/energy
+//! trade-off each variant buys — exactly what DSE/PPA characterization
+//! produced. Instead of recomputing at boot, the coordinator folds every
+//! matching store record into per-family [`VariantProfile`]s: O(disk read)
+//! over records that earlier sweeps already paid for.
+
+use std::collections::BTreeMap;
+
+use crate::store::DesignPointStore;
+
+/// Per-family serving profile assembled from store records.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct VariantProfile {
+    /// Full family descriptor, e.g. `appro42[yang1x8]`.
+    pub family: String,
+    /// NMED from the error-metric section, when any record carried one.
+    pub nmed: Option<f64>,
+    /// Energy per multiply from the PPA section, J.
+    pub energy_per_op_j: Option<f64>,
+    /// Placed logic area from the PPA section, µm².
+    pub logic_area_um2: Option<f64>,
+    /// How many store records were folded into this profile.
+    pub records: u64,
+}
+
+/// Scan the store and fold every record characterizing a `bits`-bit
+/// datapath into per-family profiles. Only records carrying an error or
+/// PPA section participate (functional-yield records label themselves with
+/// the netlist instance name, which is not a family). When a family was
+/// characterized more than once, the winner is deterministic and
+/// preference-ordered, not hash-ordered: the error stats with the most
+/// samples (exhaustive beats sampled), and the PPA summary with the
+/// largest workload — ties broken toward the smaller macro, then by key
+/// order (records visit in sorted key order, and only a strictly better
+/// rank replaces).
+pub fn warm_start_profiles(
+    store: &DesignPointStore,
+    bits: u32,
+) -> BTreeMap<String, VariantProfile> {
+    let mut out: BTreeMap<String, VariantProfile> = BTreeMap::new();
+    let mut err_rank: BTreeMap<String, u64> = BTreeMap::new();
+    let mut ppa_rank: BTreeMap<String, (u64, std::cmp::Reverse<u32>)> = BTreeMap::new();
+    store.for_each_record(|_, rec| {
+        if rec.bits != bits || rec.family.is_empty() {
+            return;
+        }
+        if rec.error.is_none() && rec.ppa.is_none() {
+            return;
+        }
+        let p = out.entry(rec.family.clone()).or_default();
+        p.family = rec.family.clone();
+        p.records += 1;
+        if let Some(e) = &rec.error {
+            let better = match err_rank.get(&rec.family) {
+                Some(&r) => e.samples > r,
+                None => true,
+            };
+            if better {
+                err_rank.insert(rec.family.clone(), e.samples);
+                p.nmed = Some(e.nmed);
+            }
+        }
+        if let Some(ppa) = &rec.ppa {
+            let rank = (rec.n_ops, std::cmp::Reverse(rec.rows));
+            let better = match ppa_rank.get(&rec.family) {
+                Some(r) => rank > *r,
+                None => true,
+            };
+            if better {
+                ppa_rank.insert(rec.family.clone(), rank);
+                p.energy_per_op_j = Some(ppa.energy_per_op_j);
+                p.logic_area_um2 = Some(ppa.logic_area_um2);
+            }
+        }
+    });
+    out
+}
+
+/// Resolve a serving variant name against the profile table. Variant names
+/// are short ("lm", "logour"); family descriptors are canonical
+/// ("lm-mitchell", "log-our", "appro42[yang1x8]") — matching is on
+/// normalized (alphanumeric, lowercase) prefixes, exact matches first.
+pub fn profile_for_variant<'a>(
+    profiles: &'a BTreeMap<String, VariantProfile>,
+    variant: &str,
+) -> Option<&'a VariantProfile> {
+    let v = norm(variant);
+    if v.is_empty() {
+        return None;
+    }
+    profiles
+        .iter()
+        .map(|(k, p)| (norm(k), p))
+        .filter(|(n, _)| *n == v || n.starts_with(&v))
+        .min_by_key(|(n, _)| (n != &v, n.len()))
+        .map(|(_, p)| p)
+}
+
+fn norm(s: &str) -> String {
+    s.chars()
+        .filter(|c| c.is_ascii_alphanumeric())
+        .collect::<String>()
+        .to_ascii_lowercase()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table(families: &[&str]) -> BTreeMap<String, VariantProfile> {
+        families
+            .iter()
+            .map(|f| {
+                (
+                    f.to_string(),
+                    VariantProfile {
+                        family: f.to_string(),
+                        records: 1,
+                        ..Default::default()
+                    },
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn variant_names_resolve_to_canonical_families() {
+        let t = table(&["exact", "appro42[yang1x8]", "log-our", "lm-mitchell", "adder-tree"]);
+        for (variant, family) in [
+            ("exact", "exact"),
+            ("appro42", "appro42[yang1x8]"),
+            ("logour", "log-our"),
+            ("lm", "lm-mitchell"),
+        ] {
+            assert_eq!(
+                profile_for_variant(&t, variant).map(|p| p.family.as_str()),
+                Some(family),
+                "variant {variant}"
+            );
+        }
+        assert!(profile_for_variant(&t, "unknown").is_none());
+        assert!(profile_for_variant(&t, "").is_none());
+    }
+
+    #[test]
+    fn fold_prefers_best_characterization_and_skips_yield_only_records() {
+        use crate::store::{
+            DesignPointRecord, DesignPointStore, ErrorStats, KeyBuilder, PpaSummary, YieldStats,
+        };
+        let dir = std::env::temp_dir().join(format!(
+            "openacm_warmstart_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let store = DesignPointStore::open(&dir).unwrap();
+        let err = |nmed: f64, samples: u64| ErrorStats {
+            nmed,
+            mred: 0.0,
+            error_rate: 0.0,
+            wce: 0,
+            normalized_bias: 0.0,
+            samples,
+        };
+        let ppa = |energy: f64| PpaSummary {
+            delay_ns: 5.0,
+            logic_area_um2: 1.0,
+            sram_area_um2: 1.0,
+            pnr_area_um2: 2.0,
+            power_w: 1.0,
+            energy_per_op_j: energy,
+            logic_power_w: 0.5,
+            mult_gates: 10,
+        };
+        // Sampled (few samples) and exhaustive (many) error records, plus
+        // PPA at two workload sizes — regardless of hash order, the
+        // exhaustive nmed and the larger-workload energy must win.
+        let recs = [
+            DesignPointRecord {
+                family: "log-our".into(),
+                bits: 8,
+                error: Some(err(0.111, 500)),
+                ..Default::default()
+            },
+            DesignPointRecord {
+                family: "log-our".into(),
+                bits: 8,
+                error: Some(err(0.004, 65536)),
+                ..Default::default()
+            },
+            DesignPointRecord {
+                family: "log-our".into(),
+                bits: 8,
+                rows: 16,
+                n_ops: 300,
+                ppa: Some(ppa(3e-12)),
+                ..Default::default()
+            },
+            DesignPointRecord {
+                family: "log-our".into(),
+                bits: 8,
+                rows: 16,
+                n_ops: 1500,
+                ppa: Some(ppa(2e-12)),
+                ..Default::default()
+            },
+            // Yield-only record labelled with a netlist instance name: must
+            // not produce a profile entry.
+            DesignPointRecord {
+                family: "log8_instance".into(),
+                bits: 8,
+                fyield: Some(YieldStats {
+                    pf: 0.1,
+                    fom: 1.0,
+                    sims: 64,
+                    failures: 6,
+                }),
+                ..Default::default()
+            },
+        ];
+        for (i, rec) in recs.iter().enumerate() {
+            let key = KeyBuilder::new("warmstart-test/1").u64(i as u64).finish();
+            store.put(key, rec).unwrap();
+        }
+        let profiles = warm_start_profiles(&store, 8);
+        assert_eq!(profiles.len(), 1, "yield-only record must not appear");
+        let p = &profiles["log-our"];
+        assert_eq!(p.records, 4);
+        assert_eq!(p.nmed, Some(0.004), "exhaustive error stats must win");
+        assert_eq!(
+            p.energy_per_op_j,
+            Some(2e-12),
+            "larger-workload PPA must win"
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn exact_normalized_match_beats_prefix() {
+        // "lm-mitchell" and a hypothetical "lm" family: the exact match
+        // must win over the longer prefix candidate.
+        let t = table(&["lm", "lm-mitchell"]);
+        assert_eq!(
+            profile_for_variant(&t, "lm").map(|p| p.family.as_str()),
+            Some("lm")
+        );
+    }
+}

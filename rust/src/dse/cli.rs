@@ -3,7 +3,7 @@
 use anyhow::Result;
 
 use super::pareto::{pareto_front, select_under_constraint};
-use super::sweep::sweep_configs;
+use super::sweep::sweep_configs_cached;
 use crate::bench::harness::{sci, Table};
 use crate::util::cli::Args;
 use crate::util::threadpool::ThreadPool;
@@ -14,9 +14,10 @@ pub fn cmd_dse(args: &Args) -> Result<()> {
     let n_ops = args.usize_or("ops", 1500)?;
     let threads = args.usize_or("threads", ThreadPool::default_parallelism())?;
     let budget = args.f64_or("nmed-budget", 1e-3)?;
+    let store = crate::store::cli::store_from_args(args)?;
 
     eprintln!("sweeping {} candidates at {rows}x{bits}...", super::sweep::candidates(bits).len());
-    let points = sweep_configs(rows, bits, n_ops, threads);
+    let points = sweep_configs_cached(rows, bits, n_ops, threads, store.as_ref());
     let front = pareto_front(&points);
 
     let mut t = Table::new(
@@ -45,6 +46,9 @@ pub fn cmd_dse(args: &Args) -> Result<()> {
             best.energy_ratio * 100.0
         ),
         None => println!("\nno design meets NMED <= {budget:.1e}"),
+    }
+    if let Some(store) = &store {
+        println!("store {}: {}", store.root().display(), store.stats().summary());
     }
     Ok(())
 }

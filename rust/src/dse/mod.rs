@@ -9,4 +9,4 @@ pub mod pareto;
 pub mod cli;
 
 pub use pareto::pareto_front;
-pub use sweep::{sweep_configs, DsePoint};
+pub use sweep::{sweep_configs, sweep_configs_cached, DsePoint};

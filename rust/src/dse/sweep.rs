@@ -4,8 +4,13 @@
 
 use crate::config::spec::{CompressorKind, MacroSpec, MultFamily};
 use crate::mult::error_metrics;
-use crate::ppa::report::analyze_macro;
+use crate::ppa::report::analyze_macro_cached;
+use crate::store::DesignPointStore;
 use crate::util::threadpool::parallel_map;
+
+/// The fixed workload seed shared by every candidate (and therefore part
+/// of every design-point key).
+pub const DSE_SEED: u64 = 0xD5E;
 
 /// One evaluated design point.
 #[derive(Clone, Debug)]
@@ -50,6 +55,22 @@ pub fn candidates(bits: usize) -> Vec<MultFamily> {
 /// Evaluate every candidate at the given macro geometry. Parallel over
 /// candidates; deterministic (seeded workload shared across candidates).
 pub fn sweep_configs(rows: usize, bits: usize, n_ops: usize, threads: usize) -> Vec<DsePoint> {
+    sweep_configs_cached(rows, bits, n_ops, threads, None)
+}
+
+/// [`sweep_configs`] backed by the design-point store: every candidate's
+/// PPA analysis and error characterization consult the store before
+/// simulating and write back on a miss, so a repeated sweep (or one
+/// overlapping an earlier sweep at a different row count — error records
+/// are geometry-independent) is served from disk. Results are bit-identical
+/// to the uncached path; hit/miss accounting is on `store.stats()`.
+pub fn sweep_configs_cached(
+    rows: usize,
+    bits: usize,
+    n_ops: usize,
+    threads: usize,
+    store: Option<&DesignPointStore>,
+) -> Vec<DsePoint> {
     let cands = candidates(bits);
     let points: Vec<DsePoint> = parallel_map(cands.len(), threads, |i| {
         let family = cands[i].clone();
@@ -59,7 +80,7 @@ pub fn sweep_configs(rows: usize, bits: usize, n_ops: usize, threads: usize) -> 
             bits,
             family.clone(),
         );
-        let ppa = analyze_macro(&spec, n_ops, 0xD5E);
+        let ppa = analyze_macro_cached(&spec, n_ops, DSE_SEED, 1, store);
         let nmed = match &family {
             MultFamily::Exact | MultFamily::AdderTree => 0.0,
             f => {
@@ -68,9 +89,9 @@ pub fn sweep_configs(rows: usize, bits: usize, n_ops: usize, threads: usize) -> 
                     // the same gates the PPA model just costed. Single-threaded
                     // here because the outer parallel_map already owns the
                     // cores (one worker per design point).
-                    error_metrics::exhaustive_netlist(f, bits, 1).nmed
+                    error_metrics::exhaustive_netlist_cached(f, bits, 1, store).nmed
                 } else {
-                    error_metrics::sampled(f, bits, 20_000, 0xD5E).nmed
+                    error_metrics::sampled_cached(f, bits, 20_000, DSE_SEED, store).nmed
                 }
             }
         };

@@ -184,6 +184,33 @@ impl Netlist {
         self.net_names.get(&net).map(|s| s.as_str())
     }
 
+    /// Append the canonical structural byte encoding of this netlist —
+    /// gate kinds + connectivity (arity-many inputs only) and the port
+    /// declarations, all length-prefixed and little-endian. Instance
+    /// `name` and debug `net_names` are deliberately excluded, so two
+    /// structurally identical circuits encode identically regardless of
+    /// how they were labelled. This is the content-addressing basis for
+    /// the design-point store (`store::KeyBuilder::netlist`).
+    pub fn canonical_bytes(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&(self.gates.len() as u32).to_le_bytes());
+        for g in &self.gates {
+            out.push(g.kind as u8);
+            for i in 0..g.kind.arity() {
+                out.extend_from_slice(&g.inputs[i].0.to_le_bytes());
+            }
+        }
+        let ports = |out: &mut Vec<u8>, list: &[(String, NetId)]| {
+            out.extend_from_slice(&(list.len() as u32).to_le_bytes());
+            for (name, id) in list {
+                out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+                out.extend_from_slice(name.as_bytes());
+                out.extend_from_slice(&id.0.to_le_bytes());
+            }
+        };
+        ports(out, &self.inputs);
+        ports(out, &self.outputs);
+    }
+
     /// Validate structural invariants (topological order, port references).
     pub fn validate(&self) -> Result<()> {
         for (i, g) in self.gates.iter().enumerate() {
@@ -390,6 +417,36 @@ mod tests {
                 assert_eq!(total, xv + yv, "{xv}+{yv}");
             }
         }
+    }
+
+    #[test]
+    fn canonical_bytes_ignore_labels_but_not_structure() {
+        let build = |kind: GateKind| {
+            let mut nl = Netlist::new("x");
+            let a = nl.add_input("a");
+            let b = nl.add_input("b");
+            let o = nl.push_gate(kind, [a, b, NetId(0)]);
+            nl.mark_output("o", o);
+            nl
+        };
+        let mut base = Vec::new();
+        build(GateKind::And2).canonical_bytes(&mut base);
+        // Instance name and debug net names don't change the encoding...
+        let mut relabelled = build(GateKind::And2);
+        relabelled.name = "renamed".into();
+        relabelled.name_net(NetId(2), "debug");
+        let mut rl = Vec::new();
+        relabelled.canonical_bytes(&mut rl);
+        assert_eq!(base, rl);
+        // ...but a gate kind or a port name does.
+        let mut other = Vec::new();
+        build(GateKind::Or2).canonical_bytes(&mut other);
+        assert_ne!(base, other);
+        let mut renamed_port = build(GateKind::And2);
+        renamed_port.outputs[0].0 = "q".into();
+        let mut rp = Vec::new();
+        renamed_port.canonical_bytes(&mut rp);
+        assert_ne!(base, rp);
     }
 
     #[test]

@@ -47,9 +47,42 @@
 //! point per worker — all deterministic for any thread count.
 //! `cargo bench --bench hotpaths` measures the resulting speedup
 //! (scalar vs bit-parallel exhaustive INT8 characterization).
+//!
+//! ## Design-point store
+//!
+//! Every characterization result is a pure function of a netlist and its
+//! parameters, so the [`store`] subsystem makes them persistent and
+//! content-addressed:
+//!
+//! * **Key derivation** — [`store::KeyBuilder`] hashes the netlist's
+//!   canonical structural encoding ([`gates::Netlist::canonical_bytes`]:
+//!   gate kinds + connectivity + ports, *excluding* instance/debug names)
+//!   together with the characterization parameters and a per-domain tag
+//!   (`"error-exhaustive/1"`, `"ppa/1"`, `"fyield/1"`, …) into a stable
+//!   128-bit [`store::Key128`] (MurmurHash3 x64-128).
+//! * **On-disk layout** — `<root>/<hh>/<32-hex-key>.dpr`, 256-way
+//!   directory fan-out by the key's top byte; the in-memory index is
+//!   sharded across `RwLock`s by the same prefix. Records are written to a
+//!   temp file and atomically renamed; every file carries a magic, format
+//!   version, length and checksum footer, so torn or bit-rotted records
+//!   are detected, deleted and recomputed — never trusted.
+//! * **Invalidation** — bumping [`store::FORMAT_VERSION`] invalidates
+//!   every record; bumping one domain tag invalidates one record kind;
+//!   structural or parameter changes change the key itself. A size-bounded
+//!   oldest-first GC (`openacm store gc`) reclaims stale files.
+//!
+//! Consumers: [`dse::sweep_configs_cached`] serves repeated sweeps from
+//! disk (bit-identical to recompute), [`ppa::analyze_macro_cached`] and
+//! [`yield_analysis::run_functional_mc_cached`] flow through the same
+//! record types, and the serving coordinator warm-starts its per-variant
+//! accuracy/energy tables from the store at boot
+//! ([`coordinator::warm_start_profiles`]). `cargo bench --bench
+//! store_warm` prints the warm-vs-cold sweep speedup and writes
+//! `BENCH_store_warm.json`.
 
 pub mod util;
 pub mod bench;
+pub mod store;
 pub mod gates;
 pub mod mult;
 pub mod sim;

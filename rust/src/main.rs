@@ -22,15 +22,18 @@ COMMANDS:
              [--artifacts DIR]
   yield      Reproduce Table V (MC vs MNIS) [--size 16|32|64] [--seed N]
   dse        Accuracy-energy design-space exploration (Pareto frontier)
+             [--no-cache] [--store DIR]
+  store      Inspect/maintain the design-point store: stats | verify | gc
+             [--dir DIR] [--repair] [--max-mb N]
   serve      Start the inference coordinator on AOT artifacts
-             [--artifacts DIR] [--batch N] [--requests N]
+             [--artifacts DIR] [--batch N] [--requests N] [--store DIR]
   luts       Emit behavioral-multiplier LUTs (npy) for cross-checking
              [--out DIR]
   help       Show this message
 "#;
 
 fn main() -> Result<()> {
-    let args = Args::from_env(true, &["verbose", "fast"])?;
+    let args = Args::from_env(true, &["verbose", "fast", "no-cache", "repair"])?;
     match args.command.as_deref() {
         Some("generate") => openacm::flow::cli::cmd_generate(&args),
         Some("ppa") => openacm::ppa::cli::cmd_ppa(&args),
@@ -38,6 +41,7 @@ fn main() -> Result<()> {
         Some("nn") => openacm::nn::cli::cmd_nn(&args),
         Some("yield") => openacm::yield_analysis::cli::cmd_yield(&args),
         Some("dse") => openacm::dse::cli::cmd_dse(&args),
+        Some("store") => openacm::store::cli::cmd_store(&args),
         Some("serve") => openacm::coordinator::cli::cmd_serve(&args),
         Some("luts") => openacm::mult::cli::cmd_luts(&args),
         Some("help") | None => {

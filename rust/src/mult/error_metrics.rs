@@ -22,9 +22,11 @@
 
 use super::behavioral::{behavioral_fn, product_table};
 use crate::config::spec::{MultFamily, MultSpec};
+use crate::gates::Netlist;
 use crate::sim::activity::mult_workload_vectors;
 use crate::sim::bitparallel::counting_planes;
 use crate::sim::Simulator;
+use crate::store::{DesignPointRecord, DesignPointStore, ErrorStats, KeyBuilder};
 use crate::util::rng::Pcg32;
 use crate::util::threadpool::parallel_map;
 
@@ -214,11 +216,91 @@ pub fn exhaustive_sim(sim: &mut dyn Simulator, bits: usize) -> ErrorReport {
 /// This is what the DSE sweep calls per design point.
 pub fn exhaustive_netlist(family: &MultFamily, bits: usize, threads: usize) -> ErrorReport {
     assert!(bits <= 12, "exhaustive only up to 12 bits; use sampled()");
-    let nl = crate::mult::build_netlist(&MultSpec {
+    let nl = build_mult_netlist(family, bits);
+    exhaustive_of_netlist(&nl, bits, threads)
+}
+
+/// [`exhaustive_netlist`] consulting the design-point store first: the key
+/// is the netlist's canonical structure + the operand width, so a config
+/// already characterized by *any* caller (a previous sweep, the `ppa`
+/// command, another process sharing the store) is served from disk.
+pub fn exhaustive_netlist_cached(
+    family: &MultFamily,
+    bits: usize,
+    threads: usize,
+    store: Option<&DesignPointStore>,
+) -> ErrorReport {
+    assert!(bits <= 12, "exhaustive only up to 12 bits; use sampled()");
+    let nl = build_mult_netlist(family, bits);
+    let Some(store) = store else {
+        return exhaustive_of_netlist(&nl, bits, threads);
+    };
+    let key = KeyBuilder::new("error-exhaustive/1")
+        .netlist(&nl)
+        .u32(bits as u32)
+        .finish();
+    let (rec, _hit) = store.get_or_put_with(key, || {
+        let report = exhaustive_of_netlist(&nl, bits, threads);
+        DesignPointRecord {
+            family: family.name(),
+            bits: bits as u32,
+            n_ops: report.samples,
+            error: Some(ErrorStats::from_report(&report)),
+            ..Default::default()
+        }
+    });
+    match rec.error {
+        Some(e) => e.to_report(),
+        None => exhaustive_of_netlist(&nl, bits, threads),
+    }
+}
+
+/// [`sampled`] consulting the design-point store first. Keyed on the
+/// netlist structure (the behavioral model is bit-exact with it) plus the
+/// sampling parameters.
+pub fn sampled_cached(
+    family: &MultFamily,
+    bits: usize,
+    samples: u64,
+    seed: u64,
+    store: Option<&DesignPointStore>,
+) -> ErrorReport {
+    let Some(store) = store else {
+        return sampled(family, bits, samples, seed);
+    };
+    let nl = build_mult_netlist(family, bits);
+    let key = KeyBuilder::new("error-sampled/1")
+        .netlist(&nl)
+        .u32(bits as u32)
+        .u64(samples)
+        .u64(seed)
+        .finish();
+    let (rec, _hit) = store.get_or_put_with(key, || {
+        let report = sampled(family, bits, samples, seed);
+        DesignPointRecord {
+            family: family.name(),
+            bits: bits as u32,
+            n_ops: samples,
+            seed,
+            error: Some(ErrorStats::from_report(&report)),
+            ..Default::default()
+        }
+    });
+    match rec.error {
+        Some(e) => e.to_report(),
+        None => sampled(family, bits, samples, seed),
+    }
+}
+
+fn build_mult_netlist(family: &MultFamily, bits: usize) -> Netlist {
+    crate::mult::build_netlist(&MultSpec {
         family: family.clone(),
         bits,
         signed: false,
-    });
+    })
+}
+
+fn exhaustive_of_netlist(nl: &Netlist, bits: usize, threads: usize) -> ErrorReport {
     let out_ids: Vec<usize> = nl.outputs().iter().map(|(_, id)| id.idx()).collect();
     let n = 1u64 << bits;
     let threads = threads.max(1).min(n as usize);
@@ -320,6 +402,37 @@ mod tests {
             assert_eq!(one.error_rate, multi.error_rate);
             assert!((one.mred - multi.mred).abs() < 1e-12 * one.mred.max(1.0));
         }
+    }
+
+    #[test]
+    fn cached_characterization_is_bit_identical() {
+        let dir = std::env::temp_dir().join(format!(
+            "openacm_err_cache_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let store = crate::store::DesignPointStore::open(&dir).unwrap();
+        let fam = MultFamily::Approx42 {
+            compressor: CompressorKind::Yang1,
+            approx_cols: 5,
+        };
+        let plain = exhaustive_netlist(&fam, 5, 2);
+        let miss = exhaustive_netlist_cached(&fam, 5, 2, Some(&store));
+        let hit = exhaustive_netlist_cached(&fam, 5, 2, Some(&store));
+        for r in [&miss, &hit] {
+            assert_eq!(r.nmed.to_bits(), plain.nmed.to_bits());
+            assert_eq!(r.mred.to_bits(), plain.mred.to_bits());
+            assert_eq!(r.wce, plain.wce);
+            assert_eq!(r.samples, plain.samples);
+        }
+        let s = store.stats();
+        assert_eq!((s.hits, s.misses, s.writes), (1, 1, 1));
+        // Sampled path caches under its own domain (no cross-domain hit).
+        let sa = sampled(&fam, 5, 500, 11);
+        let sc = sampled_cached(&fam, 5, 500, 11, Some(&store));
+        assert_eq!(sa.nmed.to_bits(), sc.nmed.to_bits());
+        assert_eq!(store.stats().writes, 2);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -21,4 +21,4 @@ pub mod report;
 pub mod cli;
 
 pub use cells::CellLibrary;
-pub use report::{analyze_macro, analyze_macro_threads, MacroPpa};
+pub use report::{analyze_macro, analyze_macro_cached, analyze_macro_threads, MacroPpa};

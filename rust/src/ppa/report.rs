@@ -7,13 +7,17 @@
 //! logic + SRAM total.
 
 use crate::config::spec::MacroSpec;
+use crate::gates::Netlist;
 use crate::pe::buffers;
 use crate::pe::control::build_fsm_logic;
 use crate::ppa::area::{self, DFF_ENERGY_PER_CYCLE_FJ, DFF_LEAKAGE_NW};
 use crate::ppa::cells::CellLibrary;
 use crate::ppa::{power, timing};
-use crate::sim::activity::{activity_parallel, mult_workload_vectors};
+use crate::sim::activity::{activity_parallel, mult_workload_vectors, ActivityReport};
 use crate::sram::models as sram_models;
+use crate::store::{
+    ActivityStats, DesignPointRecord, DesignPointStore, Key128, KeyBuilder, PpaSummary,
+};
 use crate::util::rng::Pcg32;
 
 /// One Table II row.
@@ -54,13 +58,82 @@ pub fn analyze_macro(spec: &MacroSpec, n_ops: usize, seed: u64) -> MacroPpa {
 /// workers (bit-identical results for any thread count; see
 /// [`activity_parallel`]).
 pub fn analyze_macro_threads(spec: &MacroSpec, n_ops: usize, seed: u64, threads: usize) -> MacroPpa {
+    let mult_nl = crate::mult::build_netlist(&spec.mult);
+    analyze_with_netlist(spec, &mult_nl, n_ops, seed, threads).0
+}
+
+/// [`analyze_macro_threads`] consulting the design-point store first. The
+/// key covers everything the result depends on — the multiplier netlist
+/// structure, the full SRAM organization + timing knobs, clock, load and
+/// the workload `(n_ops, seed)` — but *not* the instance name, so two
+/// specs naming the same design share one record. On a miss the full
+/// analysis runs and the record (PPA summary + per-net toggle activity)
+/// is written back.
+pub fn analyze_macro_cached(
+    spec: &MacroSpec,
+    n_ops: usize,
+    seed: u64,
+    threads: usize,
+    store: Option<&DesignPointStore>,
+) -> MacroPpa {
+    let Some(store) = store else {
+        return analyze_macro_threads(spec, n_ops, seed, threads);
+    };
+    let mult_nl = crate::mult::build_netlist(&spec.mult);
+    let key = ppa_key(spec, &mult_nl, n_ops, seed);
+    let (rec, _hit) = store.get_or_put_with(key, || {
+        let (ppa, act) = analyze_with_netlist(spec, &mult_nl, n_ops, seed, threads);
+        DesignPointRecord {
+            family: spec.mult.family.name(),
+            bits: spec.mult.bits as u32,
+            rows: spec.sram.rows as u32,
+            n_ops: n_ops as u64,
+            seed,
+            ppa: Some(PpaSummary::from_ppa(&ppa)),
+            activity: Some(ActivityStats::from_report(&act)),
+            ..Default::default()
+        }
+    });
+    match rec.ppa {
+        Some(p) => p.to_ppa(&spec.name, spec.mult.family.paper_label()),
+        None => analyze_with_netlist(spec, &mult_nl, n_ops, seed, threads).0,
+    }
+}
+
+fn ppa_key(spec: &MacroSpec, mult_nl: &Netlist, n_ops: usize, seed: u64) -> Key128 {
+    let s = &spec.sram;
+    KeyBuilder::new("ppa/1")
+        .netlist(mult_nl)
+        .u32(spec.mult.bits as u32)
+        .u8(spec.mult.signed as u8)
+        .u32(s.rows as u32)
+        .u32(s.word_bits as u32)
+        .u32(s.banks as u32)
+        .u32(s.subarrays as u32)
+        .u32(s.mux_ratio as u32)
+        .f64(s.timing.sae_delay_ps)
+        .f64(s.timing.precharge_ps)
+        .f64(s.timing.wl_pulse_ps)
+        .f64(spec.clock_mhz)
+        .f64(spec.load_pf)
+        .u64(n_ops as u64)
+        .u64(seed)
+        .finish()
+}
+
+fn analyze_with_netlist(
+    spec: &MacroSpec,
+    mult_nl: &Netlist,
+    n_ops: usize,
+    seed: u64,
+    threads: usize,
+) -> (MacroPpa, ActivityReport) {
     spec.validate().expect("spec must validate");
     let lib = CellLibrary::nangate45();
     let clock_hz = spec.clock_mhz * 1e6;
     let load_ff = spec.load_pf * 1000.0;
 
-    // --- netlists: multiplier + control FSM logic ---
-    let mult_nl = crate::mult::build_netlist(&spec.mult);
+    // --- netlists: control FSM logic (multiplier supplied by caller) ---
     let fsm_nl = build_fsm_logic();
 
     // --- workload: same operand stream for every family at this size ---
@@ -70,10 +143,10 @@ pub fn analyze_macro_threads(spec: &MacroSpec, n_ops: usize, seed: u64, threads:
         .map(|_| (rng.next_u64() & mask, rng.next_u64() & mask))
         .collect();
     let vectors = mult_workload_vectors(spec.mult.bits, &pairs);
-    let act = activity_parallel(&mult_nl, &vectors, threads);
+    let act = activity_parallel(mult_nl, &vectors, threads);
 
     // --- logic power ---
-    let mult_power = power::analyze(&mult_nl, &lib, &act, clock_hz, load_ff);
+    let mult_power = power::analyze(mult_nl, &lib, &act, clock_hz, load_ff);
     let regs = buffers::budget(spec);
     let reg_power_w = regs.total() as f64
         * (DFF_ENERGY_PER_CYCLE_FJ * 1e-15 * clock_hz + DFF_LEAKAGE_NW * 1e-9);
@@ -83,20 +156,20 @@ pub fn analyze_macro_threads(spec: &MacroSpec, n_ops: usize, seed: u64, threads:
     let logic_power_w = mult_power.total_w() + reg_power_w + fsm_power_w;
 
     // --- areas ---
-    let logic = area::logic_area(&mult_nl, &lib, regs.total());
+    let logic = area::logic_area(mult_nl, &lib, regs.total());
     let logic_area_um2 = logic.placed_um2 + fsm_area / area::PLACEMENT_UTILIZATION;
     let sram_area_um2 = sram_models::area(&spec.sram).total_um2;
 
     // --- timing ---
     let sram_t = sram_models::timing(&spec.sram, None);
-    let logic_t = timing::analyze(&mult_nl, &lib, load_ff);
+    let logic_t = timing::analyze(mult_nl, &lib, load_ff);
     let delay_ns = sram_t.access_ns.max(logic_t.critical_ps / 1000.0);
 
     // --- SRAM power (one read per multiply) ---
     let sram_p = sram_models::power(&spec.sram, clock_hz);
 
     let power_w = logic_power_w + sram_p.total_w();
-    MacroPpa {
+    let ppa = MacroPpa {
         name: spec.name.clone(),
         family_label: spec.mult.family.paper_label().to_string(),
         delay_ns,
@@ -107,7 +180,8 @@ pub fn analyze_macro_threads(spec: &MacroSpec, n_ops: usize, seed: u64, threads:
         energy_per_op_j: power_w / clock_hz,
         logic_power_w,
         mult_gates: mult_nl.logic_gate_count(),
-    }
+    };
+    (ppa, act)
 }
 
 #[cfg(test)]
@@ -128,6 +202,36 @@ mod tests {
         assert!((e.delay_ns - l.delay_ns).abs() < 1e-9);
         assert!((e.delay_ns - a.delay_ns).abs() < 1e-9);
         assert!((4.8..5.8).contains(&e.delay_ns), "delay {}", e.delay_ns);
+    }
+
+    #[test]
+    fn cached_analysis_is_bit_identical_and_name_independent() {
+        let dir = std::env::temp_dir().join(format!(
+            "openacm_ppa_cache_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let store = DesignPointStore::open(&dir).unwrap();
+        let spec = MacroSpec::new("t_cached", 16, 8, MultFamily::default_approx(8));
+        let fresh = analyze_macro(&spec, 300, 0x7AB1E2);
+        let miss = analyze_macro_cached(&spec, 300, 0x7AB1E2, 1, Some(&store));
+        let hit = analyze_macro_cached(&spec, 300, 0x7AB1E2, 1, Some(&store));
+        for r in [&miss, &hit] {
+            assert_eq!(r.power_w.to_bits(), fresh.power_w.to_bits());
+            assert_eq!(r.energy_per_op_j.to_bits(), fresh.energy_per_op_j.to_bits());
+            assert_eq!(r.logic_area_um2.to_bits(), fresh.logic_area_um2.to_bits());
+            assert_eq!(r.delay_ns.to_bits(), fresh.delay_ns.to_bits());
+            assert_eq!(r.mult_gates, fresh.mult_gates);
+        }
+        // Content addressing: a different instance name maps to the SAME
+        // record (the name is reattached on the way out).
+        let renamed = MacroSpec::new("other_name", 16, 8, MultFamily::default_approx(8));
+        let r = analyze_macro_cached(&renamed, 300, 0x7AB1E2, 1, Some(&store));
+        assert_eq!(r.name, "other_name");
+        assert_eq!(r.power_w.to_bits(), fresh.power_w.to_bits());
+        let s = store.stats();
+        assert_eq!((s.hits, s.misses, s.writes), (2, 1, 1));
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -1,0 +1,142 @@
+//! `openacm store` — inspect and maintain the design-point store.
+//!
+//! * `openacm store stats [--dir D]` — record counts, footprint, and a
+//!   per-family / per-section breakdown;
+//! * `openacm store verify [--dir D] [--repair]` — full integrity scan
+//!   (checksums, format version); `--repair` deletes corrupt records so
+//!   the next access recomputes them;
+//! * `openacm store gc [--dir D] [--max-mb N]` — size-bounded, oldest-first
+//!   eviction.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use super::DesignPointStore;
+use crate::bench::harness::Table;
+use crate::util::cli::Args;
+
+/// Shared CLI resolution for store-backed commands: `--no-cache` disables
+/// the store entirely, `--store DIR` overrides the default root. An
+/// explicitly requested store that cannot be opened is a hard error; an
+/// unusable *default* store (read-only checkout, unwritable CWD) degrades
+/// to uncached operation with a warning — the sweep itself has no
+/// filesystem dependency and must keep working.
+pub fn store_from_args(args: &Args) -> Result<Option<DesignPointStore>> {
+    if args.flag("no-cache") {
+        return Ok(None);
+    }
+    match args.get("store") {
+        Some(dir) => Ok(Some(DesignPointStore::open(&PathBuf::from(dir))?)),
+        None => match DesignPointStore::open(&DesignPointStore::default_dir()) {
+            Ok(store) => Ok(Some(store)),
+            Err(e) => {
+                eprintln!("design-point store unavailable ({e:#}); running uncached");
+                Ok(None)
+            }
+        },
+    }
+}
+
+pub fn cmd_store(args: &Args) -> Result<()> {
+    let dir = args
+        .get("dir")
+        .map(PathBuf::from)
+        .unwrap_or_else(DesignPointStore::default_dir);
+    let action = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("stats");
+    let store = DesignPointStore::open(&dir)?;
+    match action {
+        "stats" => cmd_stats(&store),
+        "verify" => cmd_verify(&store, args.flag("repair")),
+        "gc" => {
+            let max_mb = args.f64_or("max-mb", 256.0)?;
+            if max_mb < 0.0 {
+                bail!("--max-mb must be non-negative");
+            }
+            let evicted = store.gc((max_mb * 1e6) as u64);
+            let s = store.stats();
+            println!(
+                "gc: evicted {evicted} records; {} records / {:.2} MB remain (budget {max_mb} MB)",
+                s.records,
+                s.bytes as f64 / 1e6
+            );
+            Ok(())
+        }
+        other => bail!("unknown store action {other:?}; expected stats|verify|gc"),
+    }
+}
+
+fn cmd_stats(store: &DesignPointStore) -> Result<()> {
+    #[derive(Default)]
+    struct FamilyAgg {
+        records: u64,
+        error: u64,
+        ppa: u64,
+        activity: u64,
+        fyield: u64,
+    }
+    let mut by_family: BTreeMap<String, FamilyAgg> = BTreeMap::new();
+    store.for_each_record(|_, rec| {
+        let f = by_family.entry(rec.family.clone()).or_default();
+        f.records += 1;
+        f.error += rec.error.is_some() as u64;
+        f.ppa += rec.ppa.is_some() as u64;
+        f.activity += rec.activity.is_some() as u64;
+        f.fyield += rec.fyield.is_some() as u64;
+    });
+    let s = store.stats();
+    println!(
+        "store {}: {} records, {:.2} MB (format v{})",
+        store.root().display(),
+        s.records,
+        s.bytes as f64 / 1e6,
+        super::FORMAT_VERSION
+    );
+    let mut t = Table::new(
+        "records by family",
+        &["Family", "Records", "Error", "PPA", "Activity", "Yield"],
+    );
+    for (family, agg) in &by_family {
+        t.row(&[
+            family.clone(),
+            agg.records.to_string(),
+            agg.error.to_string(),
+            agg.ppa.to_string(),
+            agg.activity.to_string(),
+            agg.fyield.to_string(),
+        ]);
+    }
+    if by_family.is_empty() {
+        println!("(empty — run `openacm dse` or `openacm ppa` to populate)");
+    } else {
+        t.print();
+    }
+    Ok(())
+}
+
+fn cmd_verify(store: &DesignPointStore, repair: bool) -> Result<()> {
+    let report = store.verify(repair);
+    println!(
+        "verify {}: {} checked, {} ok, {} corrupt{}",
+        store.root().display(),
+        report.checked,
+        report.ok,
+        report.corrupt.len(),
+        if repair && !report.corrupt.is_empty() {
+            " (removed)"
+        } else {
+            ""
+        }
+    );
+    for p in &report.corrupt {
+        println!("  corrupt: {}", p.display());
+    }
+    if !report.corrupt.is_empty() && !repair {
+        println!("re-run with --repair to delete corrupt records");
+    }
+    Ok(())
+}

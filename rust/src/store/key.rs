@@ -1,0 +1,277 @@
+//! Content-addressed keys for design-point records.
+//!
+//! A [`Key128`] is derived from a *canonical byte encoding* of everything
+//! that determines a characterization result: the netlist structure (via
+//! [`crate::gates::Netlist::canonical_bytes`] — gate kinds, connectivity
+//! and port declarations, but *not* instance names or debug net names) plus
+//! the characterization parameters (bit width, workload size, seed, SRAM
+//! geometry, …), all folded through MurmurHash3 x64-128. Every key domain
+//! starts with a tag string (`"error-exhaustive/1"`, `"ppa/1"`, …) so
+//! records of different kinds can never collide, and bumping the tag
+//! version invalidates exactly that domain.
+//!
+//! The hash is seeded with a fixed constant — keys are stable across runs,
+//! processes and machines, which is what makes the on-disk store shareable.
+
+use crate::gates::Netlist;
+
+/// A stable 128-bit content hash.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Key128(pub u128);
+
+impl Key128 {
+    /// 32-hex-digit file stem.
+    pub fn hex(&self) -> String {
+        format!("{:032x}", self.0)
+    }
+
+    /// Parse a 32-hex-digit stem back into a key (used when scanning the
+    /// on-disk layout into the index).
+    pub fn from_hex(s: &str) -> Option<Key128> {
+        if s.len() != 32 {
+            return None;
+        }
+        u128::from_str_radix(s, 16).ok().map(Key128)
+    }
+
+    /// Shard selector: the top byte of the key (matches the two-hex-digit
+    /// directory fan-out on disk).
+    pub fn shard_byte(&self) -> u8 {
+        (self.0 >> 120) as u8
+    }
+}
+
+/// Canonical encoder: accumulates fields into a byte buffer, then hashes
+/// the whole buffer. Scalars are raw little-endian (NOT self-describing);
+/// strings and lists are length-prefixed. Collision-freedom therefore
+/// rests on each domain tag implying one fixed field sequence — a domain
+/// must never encode conditionally-present scalars (wrap variability in a
+/// length-prefixed list or add an explicit presence byte instead).
+/// Encoding before hashing keeps the canonical form trivially auditable.
+pub struct KeyBuilder {
+    buf: Vec<u8>,
+}
+
+impl KeyBuilder {
+    /// `domain` tags the record kind *and* its schema version; change it to
+    /// invalidate all keys of one kind.
+    pub fn new(domain: &str) -> KeyBuilder {
+        let mut b = KeyBuilder { buf: Vec::with_capacity(256) };
+        b.str(domain);
+        b
+    }
+
+    pub fn u8(&mut self, v: u8) -> &mut Self {
+        self.buf.push(v);
+        self
+    }
+
+    pub fn u32(&mut self, v: u32) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn u64(&mut self, v: u64) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    /// Floats are keyed by their exact bit pattern — two runs agree on a
+    /// key iff they agree on the parameter to the last ulp.
+    pub fn f64(&mut self, v: f64) -> &mut Self {
+        self.u64(v.to_bits())
+    }
+
+    pub fn str(&mut self, s: &str) -> &mut Self {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+        self
+    }
+
+    pub fn f64s(&mut self, vs: &[f64]) -> &mut Self {
+        self.u32(vs.len() as u32);
+        for &v in vs {
+            self.f64(v);
+        }
+        self
+    }
+
+    pub fn pairs(&mut self, vs: &[(u64, u64)]) -> &mut Self {
+        self.u32(vs.len() as u32);
+        for &(a, b) in vs {
+            self.u64(a).u64(b);
+        }
+        self
+    }
+
+    /// Fold in the canonical structural form of a netlist.
+    pub fn netlist(&mut self, nl: &Netlist) -> &mut Self {
+        nl.canonical_bytes(&mut self.buf);
+        self
+    }
+
+    pub fn finish(&self) -> Key128 {
+        let (h1, h2) = murmur3_x64_128(&self.buf, 0x0ACA_CE11);
+        Key128(((h1 as u128) << 64) | h2 as u128)
+    }
+}
+
+/// 64-bit content checksum (the record footer) — the low half of the same
+/// 128-bit hash, under a distinct seed from key derivation.
+pub fn checksum64(data: &[u8]) -> u64 {
+    murmur3_x64_128(data, 0xC0DE_F00D).1
+}
+
+#[inline]
+fn fmix64(mut k: u64) -> u64 {
+    k ^= k >> 33;
+    k = k.wrapping_mul(0xff51afd7ed558ccd);
+    k ^= k >> 33;
+    k = k.wrapping_mul(0xc4ceb9fe1a85ec53);
+    k ^= k >> 33;
+    k
+}
+
+/// Reference MurmurHash3 x64-128 (Appleby, public domain algorithm).
+fn murmur3_x64_128(data: &[u8], seed: u64) -> (u64, u64) {
+    const C1: u64 = 0x87c37b91114253d5;
+    const C2: u64 = 0x4cf5ad432745937f;
+    let mut h1 = seed;
+    let mut h2 = seed;
+    let mut chunks = data.chunks_exact(16);
+    for block in &mut chunks {
+        let mut k1 = u64::from_le_bytes(block[0..8].try_into().unwrap());
+        let mut k2 = u64::from_le_bytes(block[8..16].try_into().unwrap());
+        k1 = k1.wrapping_mul(C1).rotate_left(31).wrapping_mul(C2);
+        h1 ^= k1;
+        h1 = h1
+            .rotate_left(27)
+            .wrapping_add(h2)
+            .wrapping_mul(5)
+            .wrapping_add(0x52dce729);
+        k2 = k2.wrapping_mul(C2).rotate_left(33).wrapping_mul(C1);
+        h2 ^= k2;
+        h2 = h2
+            .rotate_left(31)
+            .wrapping_add(h1)
+            .wrapping_mul(5)
+            .wrapping_add(0x38495ab5);
+    }
+    let tail = chunks.remainder();
+    if !tail.is_empty() {
+        let mut k1 = 0u64;
+        let mut k2 = 0u64;
+        for (i, &b) in tail.iter().enumerate() {
+            if i < 8 {
+                k1 |= (b as u64) << (8 * i);
+            } else {
+                k2 |= (b as u64) << (8 * (i - 8));
+            }
+        }
+        k2 = k2.wrapping_mul(C2).rotate_left(33).wrapping_mul(C1);
+        h2 ^= k2;
+        k1 = k1.wrapping_mul(C1).rotate_left(31).wrapping_mul(C2);
+        h1 ^= k1;
+    }
+    let len = data.len() as u64;
+    h1 ^= len;
+    h2 ^= len;
+    h1 = h1.wrapping_add(h2);
+    h2 = h2.wrapping_add(h1);
+    h1 = fmix64(h1);
+    h2 = fmix64(h2);
+    h1 = h1.wrapping_add(h2);
+    h2 = h2.wrapping_add(h1);
+    (h1, h2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::spec::{CompressorKind, MultFamily, MultSpec};
+
+    fn netlist(family: MultFamily, bits: usize) -> Netlist {
+        crate::mult::build_netlist(&MultSpec {
+            family,
+            bits,
+            signed: false,
+        })
+    }
+
+    #[test]
+    fn hex_roundtrip() {
+        let k = Key128(0x0123_4567_89ab_cdef_fedc_ba98_7654_3210);
+        assert_eq!(Key128::from_hex(&k.hex()), Some(k));
+        assert_eq!(Key128::from_hex("zz"), None);
+        assert_eq!(k.shard_byte(), 0x01);
+    }
+
+    #[test]
+    fn keys_stable_across_builders() {
+        let nl = netlist(MultFamily::Exact, 6);
+        let a = KeyBuilder::new("t/1").netlist(&nl).u32(6).finish();
+        let b = KeyBuilder::new("t/1").netlist(&nl).u32(6).finish();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn domain_and_params_separate_keys() {
+        let nl = netlist(MultFamily::Exact, 6);
+        let a = KeyBuilder::new("t/1").netlist(&nl).u32(6).finish();
+        let b = KeyBuilder::new("t/2").netlist(&nl).u32(6).finish();
+        let c = KeyBuilder::new("t/1").netlist(&nl).u32(7).finish();
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn structurally_different_netlists_differ() {
+        let exact = netlist(MultFamily::Exact, 6);
+        let approx = netlist(
+            MultFamily::Approx42 {
+                compressor: CompressorKind::Yang1,
+                approx_cols: 6,
+            },
+            6,
+        );
+        let a = KeyBuilder::new("t/1").netlist(&exact).finish();
+        let b = KeyBuilder::new("t/1").netlist(&approx).finish();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn instance_name_does_not_affect_key() {
+        // Content addressing: the same circuit under two instance names
+        // (e.g. "dse_exact" vs "ppa_exact") must share one record.
+        let mut a = netlist(MultFamily::Exact, 6);
+        let mut b = netlist(MultFamily::Exact, 6);
+        a.name = "one".into();
+        b.name = "two".into();
+        let ka = KeyBuilder::new("t/1").netlist(&a).finish();
+        let kb = KeyBuilder::new("t/1").netlist(&b).finish();
+        assert_eq!(ka, kb);
+    }
+
+    #[test]
+    fn murmur_reference_vectors() {
+        // Self-consistency + avalanche sanity (a one-bit input change flips
+        // roughly half the output bits).
+        let (a1, a2) = murmur3_x64_128(b"hello, world", 0);
+        let (b1, b2) = murmur3_x64_128(b"hello, worle", 0);
+        assert_ne!((a1, a2), (b1, b2));
+        let flipped = ((a1 ^ b1).count_ones() + (a2 ^ b2).count_ones()) as i32;
+        assert!((32..=96).contains(&flipped), "poor avalanche: {flipped}");
+        // Block + tail path both exercised for every length 0..48.
+        let data: Vec<u8> = (0..48u8).collect();
+        let mut seen = std::collections::BTreeSet::new();
+        for len in 0..=48 {
+            assert!(seen.insert(murmur3_x64_128(&data[..len], 7)));
+        }
+    }
+
+    #[test]
+    fn checksum_differs_from_key_hash() {
+        let k = KeyBuilder::new("x").finish();
+        assert_ne!(checksum64(b"x"), k.0 as u64);
+    }
+}

@@ -1,0 +1,557 @@
+//! Content-addressed, sharded, persistent design-point store.
+//!
+//! Every OpenACM design point — a `(netlist structure, characterization
+//! parameters)` pair — is fully deterministic, yet the DSE sweep, the PPA
+//! engine and the functional-yield MC historically recomputed everything
+//! from scratch on every invocation. This subsystem turns repeated sweeps,
+//! Pareto refinements and coordinator warm-starts from *O(full recompute)*
+//! into *O(disk read)*:
+//!
+//! * [`key`] — canonical structural hashing of [`crate::gates::Netlist`]
+//!   plus characterization parameters into a stable 128-bit [`Key128`]
+//!   (MurmurHash3 x64-128 over a tagged canonical byte encoding);
+//! * [`record`] — versioned binary [`DesignPointRecord`]s (error metrics,
+//!   per-net activity, PPA summary, functional-yield stats) with a checksum
+//!   footer, written via temp-file + atomic rename so torn writes are
+//!   detected and recomputed, never trusted;
+//! * [`DesignPointStore`] — a sharded in-memory index (one `RwLock` shard
+//!   per hash-prefix bucket) over an on-disk two-level directory layout,
+//!   with hit/miss/write/evict/corrupt counters, integrity [`verify`] and a
+//!   size-bounded, oldest-first [`gc`].
+//!
+//! On-disk layout: `<root>/<hh>/<32-hex-key>.dpr` where `hh` is the key's
+//! top byte — 256-way fan-out keeps directories small at millions of
+//! records. Writers serialize to `<root>/<hh>/.tmp-*` and `rename(2)` into
+//! place, so concurrent writers of the same key race benignly (last full
+//! record wins; readers only ever observe complete files).
+//!
+//! [`verify`]: DesignPointStore::verify
+//! [`gc`]: DesignPointStore::gc
+
+pub mod cli;
+pub mod key;
+pub mod record;
+
+pub use key::{Key128, KeyBuilder};
+pub use record::{
+    ActivityStats, DesignPointRecord, ErrorStats, PpaSummary, YieldStats, FORMAT_VERSION,
+};
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+/// Number of index shards (keyed by the top bits of the hash). Lock
+/// contention is per-shard, so concurrent sweep workers rarely collide.
+const SHARDS: usize = 16;
+
+/// Record file extension.
+const EXT: &str = "dpr";
+
+#[derive(Clone, Copy, Debug)]
+struct IndexEntry {
+    bytes: u64,
+    /// Modification time as nanos since epoch (eviction order).
+    mtime_ns: u64,
+}
+
+/// Aggregate counters, readable at any time (e.g. printed by
+/// `examples/dse_pareto.rs` and asserted by the warm-sweep integration
+/// test).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub writes: u64,
+    pub evictions: u64,
+    /// Records rejected by validation (bad magic/version/checksum) — each
+    /// one became a miss + recompute instead of garbage data.
+    pub corrupt: u64,
+    /// Records currently indexed.
+    pub records: u64,
+    /// Total indexed bytes on disk.
+    pub bytes: u64,
+}
+
+impl StoreStats {
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups() as f64
+        }
+    }
+
+    /// One-line human summary shared by the CLI/example reporters.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} hits / {} misses ({:.0}% hit rate), {} records / {:.2} MB on disk",
+            self.hits,
+            self.misses,
+            self.hit_rate() * 100.0,
+            self.records,
+            self.bytes as f64 / 1e6
+        )
+    }
+
+    /// Counter deltas since an earlier snapshot (per-phase accounting).
+    pub fn since(&self, earlier: &StoreStats) -> StoreStats {
+        StoreStats {
+            hits: self.hits - earlier.hits,
+            misses: self.misses - earlier.misses,
+            writes: self.writes - earlier.writes,
+            evictions: self.evictions - earlier.evictions,
+            corrupt: self.corrupt - earlier.corrupt,
+            records: self.records,
+            bytes: self.bytes,
+        }
+    }
+}
+
+/// Result of a full-store integrity scan.
+#[derive(Clone, Debug, Default)]
+pub struct VerifyReport {
+    pub checked: u64,
+    pub ok: u64,
+    pub corrupt: Vec<PathBuf>,
+}
+
+/// The persistent characterization store. All methods take `&self` and are
+/// safe to call from many threads (sweep workers cache-fill concurrently).
+pub struct DesignPointStore {
+    root: PathBuf,
+    shards: Vec<RwLock<HashMap<u128, IndexEntry>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    writes: AtomicU64,
+    evictions: AtomicU64,
+    corrupt: AtomicU64,
+    tmp_counter: AtomicU64,
+}
+
+impl DesignPointStore {
+    /// Default store root: `$OPENACM_STORE` or `.openacm_store` in the
+    /// working directory.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("OPENACM_STORE")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from(".openacm_store"))
+    }
+
+    /// Open (creating if needed) a store rooted at `root` and index every
+    /// record already on disk.
+    pub fn open(root: &Path) -> Result<DesignPointStore> {
+        fs::create_dir_all(root)
+            .with_context(|| format!("creating store root {}", root.display()))?;
+        let store = DesignPointStore {
+            root: root.to_path_buf(),
+            shards: (0..SHARDS).map(|_| RwLock::new(HashMap::new())).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            writes: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            corrupt: AtomicU64::new(0),
+            tmp_counter: AtomicU64::new(0),
+        };
+        store.rescan()?;
+        Ok(store)
+    }
+
+    /// Rebuild the in-memory index from the on-disk layout.
+    pub fn rescan(&self) -> Result<()> {
+        for shard in &self.shards {
+            shard.write().unwrap().clear();
+        }
+        let Ok(top) = fs::read_dir(&self.root) else {
+            return Ok(());
+        };
+        for dir in top.flatten() {
+            if !dir.file_type().map(|t| t.is_dir()).unwrap_or(false) {
+                continue;
+            }
+            let Ok(files) = fs::read_dir(dir.path()) else {
+                continue;
+            };
+            for f in files.flatten() {
+                let path = f.path();
+                if path.extension().and_then(|e| e.to_str()) != Some(EXT) {
+                    // Reclaim temp files orphaned by crashed writers. Only
+                    // stale ones: a live writer in another process may be
+                    // about to rename a fresh `.tmp-*` into place.
+                    let stale_ns = 3_600_000_000_000u64; // 1 hour
+                    let is_tmp = path
+                        .file_name()
+                        .and_then(|n| n.to_str())
+                        .is_some_and(|n| n.starts_with(".tmp-"));
+                    if is_tmp {
+                        if let Ok(meta) = f.metadata() {
+                            if now_ns().saturating_sub(mtime_ns(&meta)) > stale_ns {
+                                let _ = fs::remove_file(&path);
+                            }
+                        }
+                    }
+                    continue;
+                }
+                let Some(key) = path
+                    .file_stem()
+                    .and_then(|s| s.to_str())
+                    .and_then(Key128::from_hex)
+                else {
+                    continue;
+                };
+                if let Ok(meta) = f.metadata() {
+                    self.shard(key)
+                        .write()
+                        .unwrap()
+                        .insert(key.0, IndexEntry { bytes: meta.len(), mtime_ns: mtime_ns(&meta) });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// On-disk path of one key (`<root>/<hh>/<32-hex>.dpr`).
+    pub fn path_for(&self, key: Key128) -> PathBuf {
+        self.root
+            .join(format!("{:02x}", key.shard_byte()))
+            .join(format!("{}.{EXT}", key.hex()))
+    }
+
+    fn shard(&self, key: Key128) -> &RwLock<HashMap<u128, IndexEntry>> {
+        &self.shards[(key.shard_byte() as usize) % SHARDS]
+    }
+
+    /// Look up one record. Reads and fully validates the on-disk bytes; a
+    /// missing file is a miss, and a record that fails validation (torn
+    /// write, bit rot, format-version skew) is dropped, counted under
+    /// `corrupt`, and reported as a miss so the caller recomputes.
+    pub fn get(&self, key: Key128) -> Option<DesignPointRecord> {
+        let path = self.path_for(key);
+        let bytes = match fs::read(&path) {
+            Ok(b) => b,
+            Err(_) => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+        };
+        match DesignPointRecord::decode(&bytes, Some(key)) {
+            Ok((_, rec)) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(rec)
+            }
+            Err(_) => {
+                self.corrupt.fetch_add(1, Ordering::Relaxed);
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                let _ = fs::remove_file(&path);
+                self.shard(key).write().unwrap().remove(&key.0);
+                None
+            }
+        }
+    }
+
+    /// Persist one record: serialize with checksum footer, write to a
+    /// shard-local temp file, then atomically rename into place.
+    pub fn put(&self, key: Key128, record: &DesignPointRecord) -> Result<()> {
+        let path = self.path_for(key);
+        let dir = path.parent().expect("record path has a shard dir");
+        fs::create_dir_all(dir).with_context(|| format!("creating shard dir {}", dir.display()))?;
+        let bytes = record.encode(key);
+        let tmp = dir.join(format!(
+            ".tmp-{}-{}-{}",
+            key.hex(),
+            std::process::id(),
+            self.tmp_counter.fetch_add(1, Ordering::Relaxed)
+        ));
+        {
+            let mut f = fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(&bytes)?;
+            f.sync_all().ok();
+        }
+        if let Err(e) = fs::rename(&tmp, &path) {
+            let _ = fs::remove_file(&tmp);
+            return Err(e).with_context(|| format!("renaming into {}", path.display()));
+        }
+        self.writes.fetch_add(1, Ordering::Relaxed);
+        self.shard(key).write().unwrap().insert(
+            key.0,
+            IndexEntry { bytes: bytes.len() as u64, mtime_ns: now_ns() },
+        );
+        Ok(())
+    }
+
+    /// Cache-through convenience: return the stored record for `key`, or
+    /// compute + persist it. The `bool` is `true` on a hit. A failed write
+    /// degrades to cache-off behavior (the computed record is still
+    /// returned).
+    pub fn get_or_put_with<F: FnOnce() -> DesignPointRecord>(
+        &self,
+        key: Key128,
+        compute: F,
+    ) -> (DesignPointRecord, bool) {
+        if let Some(rec) = self.get(key) {
+            return (rec, true);
+        }
+        let rec = compute();
+        let _ = self.put(key, &rec);
+        (rec, false)
+    }
+
+    /// Counter + size snapshot.
+    pub fn stats(&self) -> StoreStats {
+        let mut records = 0u64;
+        let mut bytes = 0u64;
+        for shard in &self.shards {
+            let s = shard.read().unwrap();
+            records += s.len() as u64;
+            bytes += s.values().map(|e| e.bytes).sum::<u64>();
+        }
+        StoreStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            writes: self.writes.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            corrupt: self.corrupt.load(Ordering::Relaxed),
+            records,
+            bytes,
+        }
+    }
+
+    /// Visit every currently-indexed record that still validates. This is
+    /// a *read-only* scan: corrupt records are skipped without touching
+    /// the hit/miss/corrupt counters and without deleting anything (that
+    /// is `verify --repair`'s opt-in job, or a real lookup's). Used by the
+    /// coordinator warm-start and `store stats`.
+    pub fn for_each_record<F: FnMut(Key128, &DesignPointRecord)>(&self, mut f: F) {
+        for key in self.indexed_keys() {
+            if let Some(rec) = self.read_quiet(key) {
+                f(key, &rec);
+            }
+        }
+    }
+
+    /// Read + validate one record with no side effects (no counters, no
+    /// corrupt-file deletion) — the primitive behind read-only scans.
+    fn read_quiet(&self, key: Key128) -> Option<DesignPointRecord> {
+        let bytes = fs::read(self.path_for(key)).ok()?;
+        DesignPointRecord::decode(&bytes, Some(key))
+            .ok()
+            .map(|(_, rec)| rec)
+    }
+
+    /// Full integrity scan (`openacm store verify`). With `repair`, corrupt
+    /// files are deleted so the next access recomputes them.
+    pub fn verify(&self, repair: bool) -> VerifyReport {
+        let mut report = VerifyReport::default();
+        for key in self.indexed_keys() {
+            let path = self.path_for(key);
+            report.checked += 1;
+            let ok = fs::read(&path)
+                .ok()
+                .and_then(|b| DesignPointRecord::decode(&b, Some(key)).ok())
+                .is_some();
+            if ok {
+                report.ok += 1;
+            } else {
+                // Reported on the VerifyReport only — the persistent
+                // `corrupt` counter tracks lookups that fell back to
+                // recompute, and a scan is not a lookup (re-running verify
+                // must not inflate it).
+                report.corrupt.push(path.clone());
+                if repair {
+                    let _ = fs::remove_file(&path);
+                    self.shard(key).write().unwrap().remove(&key.0);
+                }
+            }
+        }
+        report
+    }
+
+    /// Size-bounded GC: evict oldest-first until the indexed footprint is
+    /// within `max_bytes`. Returns the number of evicted records.
+    pub fn gc(&self, max_bytes: u64) -> u64 {
+        let mut entries: Vec<(Key128, IndexEntry)> = Vec::new();
+        for shard in &self.shards {
+            let s = shard.read().unwrap();
+            entries.extend(s.iter().map(|(&k, &e)| (Key128(k), e)));
+        }
+        let mut total: u64 = entries.iter().map(|(_, e)| e.bytes).sum();
+        if total <= max_bytes {
+            return 0;
+        }
+        // Oldest first; key breaks mtime ties deterministically.
+        entries.sort_by_key(|(k, e)| (e.mtime_ns, k.0));
+        let mut evicted = 0u64;
+        for (key, entry) in entries {
+            if total <= max_bytes {
+                break;
+            }
+            let _ = fs::remove_file(self.path_for(key));
+            self.shard(key).write().unwrap().remove(&key.0);
+            total -= entry.bytes;
+            evicted += 1;
+        }
+        self.evictions.fetch_add(evicted, Ordering::Relaxed);
+        evicted
+    }
+
+    fn indexed_keys(&self) -> Vec<Key128> {
+        let mut keys: Vec<Key128> = self
+            .shards
+            .iter()
+            .flat_map(|s| s.read().unwrap().keys().map(|&k| Key128(k)).collect::<Vec<_>>())
+            .collect();
+        keys.sort();
+        keys
+    }
+}
+
+fn mtime_ns(meta: &fs::Metadata) -> u64 {
+    meta.modified()
+        .ok()
+        .and_then(|t| t.duration_since(std::time::UNIX_EPOCH).ok())
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0)
+}
+
+fn now_ns() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "openacm_store_unit_{tag}_{}_{}",
+            std::process::id(),
+            now_ns()
+        ))
+    }
+
+    fn rec(i: u64) -> DesignPointRecord {
+        DesignPointRecord {
+            family: format!("fam{i}"),
+            bits: 8,
+            rows: 16,
+            n_ops: i,
+            seed: i * 3,
+            error: Some(ErrorStats {
+                nmed: i as f64 * 1e-4,
+                mred: 0.0,
+                error_rate: 0.5,
+                wce: i,
+                normalized_bias: 0.0,
+                samples: 100,
+            }),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn put_get_persists_across_reopen() {
+        let dir = scratch("reopen");
+        let key = KeyBuilder::new("unit/1").u64(42).finish();
+        {
+            let store = DesignPointStore::open(&dir).unwrap();
+            assert!(store.get(key).is_none());
+            store.put(key, &rec(42)).unwrap();
+            assert_eq!(store.get(key).unwrap(), rec(42));
+        }
+        let store = DesignPointStore::open(&dir).unwrap();
+        let s = store.stats();
+        assert_eq!(s.records, 1);
+        assert!(s.bytes > 0);
+        assert_eq!(store.get(key).unwrap(), rec(42));
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn counters_track_hits_and_misses() {
+        let dir = scratch("counters");
+        let store = DesignPointStore::open(&dir).unwrap();
+        let key = KeyBuilder::new("unit/1").u64(1).finish();
+        let (_, hit) = store.get_or_put_with(key, || rec(1));
+        assert!(!hit);
+        let (r, hit) = store.get_or_put_with(key, || panic!("must not recompute"));
+        assert!(hit);
+        assert_eq!(r, rec(1));
+        let s = store.stats();
+        assert_eq!((s.hits, s.misses, s.writes), (1, 1, 1));
+        assert_eq!(s.hit_rate(), 0.5);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn gc_evicts_oldest_first_to_budget() {
+        let dir = scratch("gc");
+        let store = DesignPointStore::open(&dir).unwrap();
+        let keys: Vec<Key128> = (0..8)
+            .map(|i| {
+                let k = KeyBuilder::new("unit/1").u64(i).finish();
+                store.put(k, &rec(i)).unwrap();
+                // Distinct mtimes so eviction order is by age.
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                k
+            })
+            .collect();
+        let before = store.stats();
+        assert_eq!(before.records, 8);
+        let per_rec = before.bytes / 8;
+        let evicted = store.gc(per_rec * 3);
+        assert_eq!(evicted, 5);
+        let after = store.stats();
+        assert_eq!(after.records, 3);
+        assert!(after.bytes <= per_rec * 3);
+        // The newest records survive.
+        for k in &keys[5..] {
+            assert!(store.get(*k).is_some());
+        }
+        for k in &keys[..5] {
+            assert!(store.get(*k).is_none());
+        }
+        assert_eq!(store.gc(u64::MAX), 0);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn verify_reports_and_repairs() {
+        let dir = scratch("verify");
+        let store = DesignPointStore::open(&dir).unwrap();
+        let k1 = KeyBuilder::new("unit/1").u64(1).finish();
+        let k2 = KeyBuilder::new("unit/1").u64(2).finish();
+        store.put(k1, &rec(1)).unwrap();
+        store.put(k2, &rec(2)).unwrap();
+        // Corrupt k2 on disk.
+        let path = store.path_for(k2);
+        let mut bytes = fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        fs::write(&path, &bytes).unwrap();
+        let report = store.verify(false);
+        assert_eq!((report.checked, report.ok), (2, 1));
+        assert_eq!(report.corrupt, vec![path.clone()]);
+        assert!(path.exists());
+        let report = store.verify(true);
+        assert_eq!(report.corrupt.len(), 1);
+        assert!(!path.exists());
+        assert_eq!(store.stats().records, 1);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,522 @@
+//! Versioned binary (de)serialization of design-point records.
+//!
+//! On-disk layout of one `.dpr` file:
+//!
+//! ```text
+//! magic     8 B   "OACMDPR\0"
+//! version   4 B   FORMAT_VERSION (LE) — mismatches are treated as a miss
+//! key      16 B   the content hash the record was stored under
+//! length    8 B   payload byte count
+//! payload   N B   the record body (length-prefixed, tag-prefixed fields)
+//! checksum  8 B   checksum64 over everything above
+//! ```
+//!
+//! The checksum footer plus atomic rename-on-write means a torn, truncated
+//! or bit-flipped record is *detected and recomputed*, never trusted; a
+//! [`FORMAT_VERSION`] bump invalidates every existing record at once (old
+//! files are reclaimed by GC). All integers little-endian; floats stored as
+//! their exact bit patterns, so a cache round-trip is bit-identical.
+
+use anyhow::{bail, Result};
+
+use super::key::{checksum64, Key128};
+use crate::mult::error_metrics::ErrorReport;
+use crate::ppa::report::MacroPpa;
+use crate::sim::activity::ActivityReport;
+use crate::yield_analysis::mc::McResult;
+
+pub const MAGIC: &[u8; 8] = b"OACMDPR\0";
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Error-metric section (mirrors [`ErrorReport`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ErrorStats {
+    pub nmed: f64,
+    pub mred: f64,
+    pub error_rate: f64,
+    pub wce: u64,
+    pub normalized_bias: f64,
+    pub samples: u64,
+}
+
+impl ErrorStats {
+    pub fn from_report(r: &ErrorReport) -> ErrorStats {
+        ErrorStats {
+            nmed: r.nmed,
+            mred: r.mred,
+            error_rate: r.error_rate,
+            wce: r.wce,
+            normalized_bias: r.normalized_bias,
+            samples: r.samples,
+        }
+    }
+
+    pub fn to_report(self) -> ErrorReport {
+        ErrorReport {
+            nmed: self.nmed,
+            mred: self.mred,
+            error_rate: self.error_rate,
+            wce: self.wce,
+            normalized_bias: self.normalized_bias,
+            samples: self.samples,
+        }
+    }
+}
+
+/// PPA section (the numeric core of [`MacroPpa`]; instance name and family
+/// label are reattached from the spec on the way out, so two specs naming
+/// the same structure share one record).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PpaSummary {
+    pub delay_ns: f64,
+    pub logic_area_um2: f64,
+    pub sram_area_um2: f64,
+    pub pnr_area_um2: f64,
+    pub power_w: f64,
+    pub energy_per_op_j: f64,
+    pub logic_power_w: f64,
+    pub mult_gates: u64,
+}
+
+impl PpaSummary {
+    pub fn from_ppa(p: &MacroPpa) -> PpaSummary {
+        PpaSummary {
+            delay_ns: p.delay_ns,
+            logic_area_um2: p.logic_area_um2,
+            sram_area_um2: p.sram_area_um2,
+            pnr_area_um2: p.pnr_area_um2,
+            power_w: p.power_w,
+            energy_per_op_j: p.energy_per_op_j,
+            logic_power_w: p.logic_power_w,
+            mult_gates: p.mult_gates as u64,
+        }
+    }
+
+    pub fn to_ppa(self, name: &str, family_label: &str) -> MacroPpa {
+        MacroPpa {
+            name: name.to_string(),
+            family_label: family_label.to_string(),
+            delay_ns: self.delay_ns,
+            logic_area_um2: self.logic_area_um2,
+            sram_area_um2: self.sram_area_um2,
+            pnr_area_um2: self.pnr_area_um2,
+            power_w: self.power_w,
+            energy_per_op_j: self.energy_per_op_j,
+            logic_power_w: self.logic_power_w,
+            mult_gates: self.mult_gates as usize,
+        }
+    }
+}
+
+/// Per-net toggle activity section (mirrors [`ActivityReport`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ActivityStats {
+    pub toggles: Vec<u64>,
+    pub transitions: u64,
+}
+
+impl ActivityStats {
+    pub fn from_report(r: &ActivityReport) -> ActivityStats {
+        ActivityStats {
+            toggles: r.toggles.clone(),
+            transitions: r.transitions,
+        }
+    }
+
+    pub fn to_report(&self) -> ActivityReport {
+        ActivityReport {
+            toggles: self.toggles.clone(),
+            transitions: self.transitions,
+        }
+    }
+}
+
+/// Functional-yield section (mirrors [`McResult`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct YieldStats {
+    pub pf: f64,
+    pub fom: f64,
+    pub sims: u64,
+    pub failures: u64,
+}
+
+impl YieldStats {
+    pub fn from_mc(r: &McResult) -> YieldStats {
+        YieldStats {
+            pf: r.pf,
+            fom: r.fom,
+            sims: r.sims,
+            failures: r.failures,
+        }
+    }
+
+    pub fn to_mc(self) -> McResult {
+        McResult {
+            pf: self.pf,
+            fom: self.fom,
+            sims: self.sims,
+            failures: self.failures,
+        }
+    }
+}
+
+/// One persistent characterization record. Sections are optional so the
+/// error-metric, PPA/activity and functional-yield producers all flow
+/// through the same type (and file format) while only paying for what they
+/// computed.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DesignPointRecord {
+    /// Family descriptor (e.g. `appro42[yang1x8]`) — metadata for `store
+    /// stats` and warm-start matching, *not* part of the key.
+    pub family: String,
+    pub bits: u32,
+    pub rows: u32,
+    /// Workload size the dynamic sections were characterized with.
+    pub n_ops: u64,
+    pub seed: u64,
+    pub error: Option<ErrorStats>,
+    pub ppa: Option<PpaSummary>,
+    pub activity: Option<ActivityStats>,
+    pub fyield: Option<YieldStats>,
+}
+
+impl DesignPointRecord {
+    /// Serialize with header + checksum footer, ready for atomic write.
+    pub fn encode(&self, key: Key128) -> Vec<u8> {
+        let toggle_count = self.activity.as_ref().map_or(0, |a| a.toggles.len());
+        let mut payload = Vec::with_capacity(128 + 8 * toggle_count);
+        put_str(&mut payload, &self.family);
+        put_u32(&mut payload, self.bits);
+        put_u32(&mut payload, self.rows);
+        put_u64(&mut payload, self.n_ops);
+        put_u64(&mut payload, self.seed);
+        match &self.error {
+            None => payload.push(0),
+            Some(e) => {
+                payload.push(1);
+                put_f64(&mut payload, e.nmed);
+                put_f64(&mut payload, e.mred);
+                put_f64(&mut payload, e.error_rate);
+                put_u64(&mut payload, e.wce);
+                put_f64(&mut payload, e.normalized_bias);
+                put_u64(&mut payload, e.samples);
+            }
+        }
+        match &self.ppa {
+            None => payload.push(0),
+            Some(p) => {
+                payload.push(1);
+                put_f64(&mut payload, p.delay_ns);
+                put_f64(&mut payload, p.logic_area_um2);
+                put_f64(&mut payload, p.sram_area_um2);
+                put_f64(&mut payload, p.pnr_area_um2);
+                put_f64(&mut payload, p.power_w);
+                put_f64(&mut payload, p.energy_per_op_j);
+                put_f64(&mut payload, p.logic_power_w);
+                put_u64(&mut payload, p.mult_gates);
+            }
+        }
+        match &self.activity {
+            None => payload.push(0),
+            Some(a) => {
+                payload.push(1);
+                put_u64(&mut payload, a.transitions);
+                put_u32(&mut payload, a.toggles.len() as u32);
+                for &t in &a.toggles {
+                    put_u64(&mut payload, t);
+                }
+            }
+        }
+        match &self.fyield {
+            None => payload.push(0),
+            Some(y) => {
+                payload.push(1);
+                put_f64(&mut payload, y.pf);
+                put_f64(&mut payload, y.fom);
+                put_u64(&mut payload, y.sims);
+                put_u64(&mut payload, y.failures);
+            }
+        }
+
+        let mut out = Vec::with_capacity(44 + payload.len());
+        out.extend_from_slice(MAGIC);
+        put_u32(&mut out, FORMAT_VERSION);
+        out.extend_from_slice(&key.0.to_le_bytes());
+        put_u64(&mut out, payload.len() as u64);
+        out.extend_from_slice(&payload);
+        let sum = checksum64(&out);
+        put_u64(&mut out, sum);
+        out
+    }
+
+    /// Decode and fully validate one record image. Every failure mode —
+    /// short file, bad magic, version skew, truncated payload, checksum
+    /// mismatch, key mismatch — is an `Err`, which the store maps to a
+    /// *miss* (recompute), never to garbage data.
+    pub fn decode(bytes: &[u8], expect_key: Option<Key128>) -> Result<(Key128, DesignPointRecord)> {
+        if bytes.len() < 44 {
+            bail!("record too short: {} bytes", bytes.len());
+        }
+        if &bytes[..8] != MAGIC {
+            bail!("bad magic");
+        }
+        let body = &bytes[..bytes.len() - 8];
+        let sum = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+        if checksum64(body) != sum {
+            bail!("checksum mismatch (torn or corrupted record)");
+        }
+        let mut r = Reader { buf: body, pos: 8 };
+        let version = r.u32()?;
+        if version != FORMAT_VERSION {
+            bail!("format version {version} != {FORMAT_VERSION}");
+        }
+        let key = Key128(u128::from_le_bytes(r.take(16)?.try_into().unwrap()));
+        if let Some(k) = expect_key {
+            if k != key {
+                bail!("key mismatch: file holds {}", key.hex());
+            }
+        }
+        let payload_len = r.u64()? as usize;
+        if r.buf.len() - r.pos != payload_len {
+            bail!(
+                "payload length {} != header claim {payload_len}",
+                r.buf.len() - r.pos
+            );
+        }
+        let family = r.str()?;
+        let bits = r.u32()?;
+        let rows = r.u32()?;
+        let n_ops = r.u64()?;
+        let seed = r.u64()?;
+        let error = if r.u8()? == 1 {
+            Some(ErrorStats {
+                nmed: r.f64()?,
+                mred: r.f64()?,
+                error_rate: r.f64()?,
+                wce: r.u64()?,
+                normalized_bias: r.f64()?,
+                samples: r.u64()?,
+            })
+        } else {
+            None
+        };
+        let ppa = if r.u8()? == 1 {
+            Some(PpaSummary {
+                delay_ns: r.f64()?,
+                logic_area_um2: r.f64()?,
+                sram_area_um2: r.f64()?,
+                pnr_area_um2: r.f64()?,
+                power_w: r.f64()?,
+                energy_per_op_j: r.f64()?,
+                logic_power_w: r.f64()?,
+                mult_gates: r.u64()?,
+            })
+        } else {
+            None
+        };
+        let activity = if r.u8()? == 1 {
+            let transitions = r.u64()?;
+            let n = r.u32()? as usize;
+            if n > (r.buf.len() - r.pos) / 8 {
+                bail!("activity length {n} exceeds remaining payload");
+            }
+            let mut toggles = Vec::with_capacity(n);
+            for _ in 0..n {
+                toggles.push(r.u64()?);
+            }
+            Some(ActivityStats { toggles, transitions })
+        } else {
+            None
+        };
+        let fyield = if r.u8()? == 1 {
+            Some(YieldStats {
+                pf: r.f64()?,
+                fom: r.f64()?,
+                sims: r.u64()?,
+                failures: r.u64()?,
+            })
+        } else {
+            None
+        };
+        if r.pos != r.buf.len() {
+            bail!("{} trailing payload bytes", r.buf.len() - r.pos);
+        }
+        Ok((
+            key,
+            DesignPointRecord {
+                family,
+                bits,
+                rows,
+                n_ops,
+                seed,
+                error,
+                ppa,
+                activity,
+                fyield,
+            },
+        ))
+    }
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    put_u64(out, v.to_bits());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len() - self.pos < n {
+            bail!("record truncated at byte {}", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        Ok(String::from_utf8_lossy(bytes).into_owned())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> DesignPointRecord {
+        DesignPointRecord {
+            family: "appro42[yang1x8]".into(),
+            bits: 8,
+            rows: 16,
+            n_ops: 1500,
+            seed: 0xD5E,
+            error: Some(ErrorStats {
+                nmed: 2.82e-4,
+                mred: 1.1e-3,
+                error_rate: 0.47,
+                wce: 1234,
+                normalized_bias: -2.7e-4,
+                samples: 65536,
+            }),
+            ppa: Some(PpaSummary {
+                delay_ns: 5.2,
+                logic_area_um2: 812.0,
+                sram_area_um2: 300.5,
+                pnr_area_um2: 1112.5,
+                power_w: 2.1e-4,
+                energy_per_op_j: 2.1e-12,
+                logic_power_w: 1.4e-4,
+                mult_gates: 431,
+            }),
+            activity: Some(ActivityStats {
+                toggles: (0..64u64).map(|i| i * 17).collect(),
+                transitions: 1499,
+            }),
+            fyield: Some(YieldStats {
+                pf: 0.015625,
+                fom: 0.9,
+                sims: 640,
+                failures: 10,
+            }),
+        }
+    }
+
+    #[test]
+    fn roundtrip_bit_identical() {
+        let rec = sample();
+        let key = Key128(0xABCD_EF01_2345_6789_9876_5432_10FE_DCBA);
+        let bytes = rec.encode(key);
+        let (k, back) = DesignPointRecord::decode(&bytes, Some(key)).unwrap();
+        assert_eq!(k, key);
+        assert_eq!(back, rec);
+        // f64 round-trip is bit-exact, not approximately-equal.
+        assert_eq!(
+            back.error.unwrap().nmed.to_bits(),
+            rec.error.unwrap().nmed.to_bits()
+        );
+    }
+
+    #[test]
+    fn empty_sections_roundtrip() {
+        let rec = DesignPointRecord {
+            family: "exact".into(),
+            bits: 6,
+            ..Default::default()
+        };
+        let key = Key128(7);
+        let (_, back) = DesignPointRecord::decode(&rec.encode(key), Some(key)).unwrap();
+        assert_eq!(back, rec);
+        assert!(back.error.is_none() && back.ppa.is_none());
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let bytes = sample().encode(Key128(9));
+        for cut in [0, 10, 43, bytes.len() - 9, bytes.len() - 1] {
+            assert!(
+                DesignPointRecord::decode(&bytes[..cut], Some(Key128(9))).is_err(),
+                "cut at {cut} must fail"
+            );
+        }
+    }
+
+    #[test]
+    fn every_single_bit_flip_detected() {
+        let bytes = sample().encode(Key128(3));
+        // Flipping any single bit anywhere must be caught (checksum, magic
+        // or structural validation).
+        for byte in (0..bytes.len()).step_by(7) {
+            for bit in 0..8 {
+                let mut b = bytes.clone();
+                b[byte] ^= 1 << bit;
+                assert!(
+                    DesignPointRecord::decode(&b, Some(Key128(3))).is_err(),
+                    "flip at {byte}.{bit} undetected"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn key_and_version_skew_rejected() {
+        let bytes = sample().encode(Key128(5));
+        assert!(DesignPointRecord::decode(&bytes, Some(Key128(6))).is_err());
+        // Decoding under no expectation still returns the stored key.
+        let (k, _) = DesignPointRecord::decode(&bytes, None).unwrap();
+        assert_eq!(k, Key128(5));
+    }
+}

@@ -15,6 +15,7 @@
 
 use super::mc::McResult;
 use crate::gates::Netlist;
+use crate::store::{DesignPointRecord, DesignPointStore, KeyBuilder, YieldStats};
 use crate::util::rng::Pcg32;
 use crate::util::threadpool::parallel_fold;
 
@@ -161,6 +162,47 @@ pub fn run_functional_mc(
     }
 }
 
+/// [`run_functional_mc`] through the design-point store: the key covers
+/// the netlist structure, the corruption model (per-column flip
+/// probabilities), the workload, the failure criterion and the MC budget
+/// `(samples, seed)` — everything the estimate depends on — so repeated
+/// yield sweeps are served from disk through the same record type as the
+/// DSE and PPA caches.
+pub fn run_functional_mc_cached(
+    problem: &FunctionalYieldProblem,
+    samples: u64,
+    seed: u64,
+    threads: usize,
+    store: Option<&DesignPointStore>,
+) -> McResult {
+    let Some(store) = store else {
+        return run_functional_mc(problem, samples, seed, threads);
+    };
+    let mut kb = KeyBuilder::new("fyield/1");
+    kb.netlist(problem.nl)
+        .u32(problem.bits as u32)
+        .f64s(&problem.flip_prob)
+        .pairs(&problem.workload)
+        .f64(problem.err_threshold)
+        .u64(samples)
+        .u64(seed);
+    let key = kb.finish();
+    let (rec, _hit) = store.get_or_put_with(key, || DesignPointRecord {
+        family: problem.nl.name.clone(),
+        bits: problem.bits as u32,
+        n_ops: problem.workload.len() as u64,
+        seed,
+        fyield: Some(YieldStats::from_mc(&run_functional_mc(
+            problem, samples, seed, threads,
+        ))),
+        ..Default::default()
+    });
+    match rec.fyield {
+        Some(y) => y.to_mc(),
+        None => run_functional_mc(problem, samples, seed, threads),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -208,6 +250,32 @@ mod tests {
         let b = run_functional_mc(&p, 1000, 99, 4);
         assert_eq!(a.failures, b.failures);
         assert_eq!(a.pf, b.pf);
+    }
+
+    #[test]
+    fn cached_mc_matches_uncached_and_hits_second_time() {
+        let dir = std::env::temp_dir().join(format!(
+            "openacm_fyield_cache_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let store = crate::store::DesignPointStore::open(&dir).unwrap();
+        let nl = crate::mult::pptree::build_exact(4);
+        let p = FunctionalYieldProblem::new(&nl, 4, vec![0.05; 4], workload(4, 30, 3), 5e-3);
+        let plain = run_functional_mc(&p, 640, 99, 2);
+        let miss = run_functional_mc_cached(&p, 640, 99, 2, Some(&store));
+        let hit = run_functional_mc_cached(&p, 640, 99, 2, Some(&store));
+        for r in [&miss, &hit] {
+            assert_eq!(r.failures, plain.failures);
+            assert_eq!(r.pf.to_bits(), plain.pf.to_bits());
+            assert_eq!(r.sims, plain.sims);
+        }
+        // A different corruption model must not alias the record.
+        let p2 = FunctionalYieldProblem::new(&nl, 4, vec![0.06; 4], workload(4, 30, 3), 5e-3);
+        let _ = run_functional_mc_cached(&p2, 640, 99, 2, Some(&store));
+        let s = store.stats();
+        assert_eq!((s.hits, s.misses, s.writes), (1, 2, 2));
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

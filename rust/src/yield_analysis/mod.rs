@@ -19,7 +19,7 @@ pub mod mnis;
 pub mod functional;
 pub mod cli;
 
-pub use functional::{run_functional_mc, FunctionalYieldProblem};
+pub use functional::{run_functional_mc, run_functional_mc_cached, FunctionalYieldProblem};
 pub use mc::{run_mc, McResult};
 pub use mnis::{run_mnis, MnisResult};
 pub use problem::{FailureProblem, SramYieldProblem};

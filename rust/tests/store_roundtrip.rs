@@ -1,0 +1,133 @@
+//! Acceptance: two identical `dse::sweep` runs through the store produce
+//! bit-identical Pareto output, with the second run served ≥ 90% from
+//! disk; the coordinator warm-starts its serving tables from the same
+//! records.
+
+use std::path::PathBuf;
+
+use openacm::coordinator::{profile_for_variant, warm_start_profiles};
+use openacm::dse::pareto::pareto_front;
+use openacm::dse::sweep_configs_cached;
+use openacm::store::DesignPointStore;
+
+fn scratch(tag: &str) -> PathBuf {
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap()
+        .as_nanos();
+    std::env::temp_dir().join(format!(
+        "openacm_store_roundtrip_{tag}_{}_{nanos}",
+        std::process::id()
+    ))
+}
+
+const ROWS: usize = 16;
+const BITS: usize = 6;
+const N_OPS: usize = 200;
+
+#[test]
+fn repeated_sweep_is_bit_identical_and_served_from_store() {
+    let dir = scratch("sweep");
+    let store = DesignPointStore::open(&dir).unwrap();
+
+    let cold = sweep_configs_cached(ROWS, BITS, N_OPS, 2, Some(&store));
+    let after_cold = store.stats();
+    assert!(after_cold.writes > 0, "cold sweep must populate the store");
+    assert!(after_cold.misses > 0);
+
+    let warm = sweep_configs_cached(ROWS, BITS, N_OPS, 2, Some(&store));
+    let warm_stats = store.stats().since(&after_cold);
+
+    // ≥ 90% of the second run's lookups served from the store (acceptance
+    // criterion; in practice it is 100%).
+    assert!(warm_stats.lookups() > 0);
+    assert!(
+        warm_stats.hit_rate() >= 0.9,
+        "warm sweep hit rate {:.0}% < 90% ({} hits / {} misses)",
+        warm_stats.hit_rate() * 100.0,
+        warm_stats.hits,
+        warm_stats.misses
+    );
+
+    // Bit-identical points: every float compares by bit pattern, not
+    // tolerance.
+    assert_eq!(cold.len(), warm.len());
+    for (c, w) in cold.iter().zip(&warm) {
+        assert_eq!(c.label, w.label);
+        assert_eq!(c.family, w.family);
+        assert_eq!(c.nmed.to_bits(), w.nmed.to_bits(), "{}", c.label);
+        assert_eq!(
+            c.energy_per_op_j.to_bits(),
+            w.energy_per_op_j.to_bits(),
+            "{}",
+            c.label
+        );
+        assert_eq!(
+            c.logic_area_um2.to_bits(),
+            w.logic_area_um2.to_bits(),
+            "{}",
+            c.label
+        );
+        assert_eq!(c.energy_ratio.to_bits(), w.energy_ratio.to_bits(), "{}", c.label);
+    }
+
+    // ...and therefore bit-identical Pareto output.
+    let front_cold: Vec<(String, u64, u64)> = pareto_front(&cold)
+        .iter()
+        .map(|p| (p.label.clone(), p.nmed.to_bits(), p.energy_per_op_j.to_bits()))
+        .collect();
+    let front_warm: Vec<(String, u64, u64)> = pareto_front(&warm)
+        .iter()
+        .map(|p| (p.label.clone(), p.nmed.to_bits(), p.energy_per_op_j.to_bits()))
+        .collect();
+    assert_eq!(front_cold, front_warm);
+
+    // The cached path matches the uncached reference exactly.
+    let reference = sweep_configs_cached(ROWS, BITS, N_OPS, 2, None);
+    for (c, r) in cold.iter().zip(&reference) {
+        assert_eq!(c.label, r.label);
+        assert_eq!(c.nmed.to_bits(), r.nmed.to_bits());
+        assert_eq!(c.energy_per_op_j.to_bits(), r.energy_per_op_j.to_bits());
+    }
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn sweep_survives_store_reopen_and_warm_starts_coordinator_tables() {
+    let dir = scratch("reopen");
+    {
+        let store = DesignPointStore::open(&dir).unwrap();
+        let _ = sweep_configs_cached(ROWS, BITS, N_OPS, 2, Some(&store));
+    }
+    // A brand-new process (fresh index, same directory) is still warm.
+    let store = DesignPointStore::open(&dir).unwrap();
+    let before = store.stats();
+    assert!(before.records > 0, "records must persist across reopen");
+    let _ = sweep_configs_cached(ROWS, BITS, N_OPS, 2, Some(&store));
+    let delta = store.stats().since(&before);
+    assert!(
+        delta.hit_rate() >= 0.9,
+        "reopened store hit rate {:.0}%",
+        delta.hit_rate() * 100.0
+    );
+
+    // Coordinator warm-start: the serving tables come straight from the
+    // records the sweep just persisted.
+    let profiles = warm_start_profiles(&store, BITS as u32);
+    assert!(!profiles.is_empty());
+    let exact = profile_for_variant(&profiles, "exact").expect("exact profile");
+    assert!(exact.energy_per_op_j.is_some(), "PPA flowed into profile");
+    assert!(exact.records >= 1);
+    let logour = profile_for_variant(&profiles, "logour").expect("log-our profile");
+    assert_eq!(logour.family, "log-our");
+    assert!(
+        logour.nmed.is_some(),
+        "error metrics flowed into the log-our profile"
+    );
+    assert!(logour.nmed.unwrap() > 0.0);
+    // A width filter that matches nothing yields no profiles.
+    assert!(warm_start_profiles(&store, 31).is_empty());
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -1,0 +1,107 @@
+//! Scalar vs batched vs blocked native inference — the serving backend's
+//! headline number: the batched, cache-blocked, threadpool-parallel
+//! LUT-GEMM path must beat the naive per-image scalar forward by a wide
+//! margin at serving batch sizes (acceptance: ≥ 5× at batch 32).
+//!
+//! ```text
+//! cargo bench --bench nn_forward              # full size
+//! OPENACM_SMOKE=1 cargo bench --bench nn_forward   # CI smoke
+//! ```
+//!
+//! Writes `BENCH_nn_forward.json` (per-case ns/iter + the speedup ratios)
+//! for the CI artifact trail, next to `BENCH_store_warm.json`.
+
+use openacm::bench::harness::{bench, black_box, BenchJson};
+use openacm::config::spec::MultFamily;
+use openacm::mult::behavioral::int8_lut;
+use openacm::nn::model::{synthetic_images, QuantCnn};
+use openacm::nn::quant::{lut_matmul, lut_matmul_batched};
+use openacm::util::threadpool::ThreadPool;
+
+fn main() {
+    let smoke_env = std::env::var("OPENACM_SMOKE")
+        .map(|v| !v.is_empty() && v != "0" && !v.eq_ignore_ascii_case("false"))
+        .unwrap_or(false);
+    let smoke = smoke_env || std::env::args().any(|a| a == "--smoke");
+    let threads = ThreadPool::default_parallelism();
+    let iters = if smoke { 3 } else { 10 };
+    let batches: &[usize] = if smoke { &[1, 32] } else { &[1, 8, 32, 64] };
+    println!(
+        "native inference: scalar vs batched vs blocked, {threads} threads{}",
+        if smoke { " [smoke]" } else { "" }
+    );
+
+    let cnn = QuantCnn::random(42);
+    let lut = int8_lut(&MultFamily::Exact);
+    let mut json = BenchJson::new("nn_forward");
+    let mut scalar_b32 = f64::NAN;
+    let mut blocked_b32 = f64::NAN;
+
+    for &bsz in batches {
+        let images = synthetic_images(bsz, 7 + bsz as u64);
+        let views: Vec<&[u8]> = images.chunks(256).collect();
+
+        // Scalar reference: one naive triple-loop forward per image.
+        let scalar = bench(&format!("forward scalar x{bsz}"), 1, iters, || {
+            for v in &views {
+                black_box(cnn.forward(&lut, v));
+            }
+        });
+        json.case(&scalar);
+
+        // Batched single-thread: batch-of-N im2col + blocked GEMM, no
+        // threadpool — isolates the cache-blocking/layout win.
+        let batched = bench(&format!("forward_batch x{bsz} 1thr"), 1, iters, || {
+            black_box(cnn.forward_batch(&lut, &views, 1));
+        });
+        json.case(&batched);
+
+        // Blocked + threadpool: the serving configuration.
+        let blocked = bench(
+            &format!("forward_batch x{bsz} {threads}thr"),
+            1,
+            iters,
+            || {
+                black_box(cnn.forward_batch(&lut, &views, threads));
+            },
+        );
+        json.case(&blocked);
+
+        if bsz == 32 {
+            scalar_b32 = scalar.mean_ns;
+            blocked_b32 = blocked.mean_ns;
+            json.ratio("batched_1thr_over_scalar_b32", scalar.mean_ns / batched.mean_ns);
+        }
+    }
+
+    let speedup = scalar_b32 / blocked_b32;
+    println!("→ batched blocked speedup over per-image scalar at batch 32: {speedup:.1}x");
+    json.ratio("batched_blocked_over_scalar_b32", speedup);
+
+    // Raw GEMM: conv2's batch-32 shape (m = 32·25 rows, k = 72, n = 16) —
+    // the kernel-level view of the same win.
+    {
+        let (m, k, n) = (32 * 25, 72, 16);
+        let a: Vec<i8> = (0..m * k).map(|i| ((i * 37) % 255) as i64 as i8).collect();
+        let b: Vec<i8> = (0..k * n).map(|i| ((i * 91) % 251) as i64 as i8).collect();
+        let reference = bench(&format!("lut_matmul ref {m}x{k}x{n}"), 1, iters, || {
+            black_box(lut_matmul(&lut, &a, &b, m, k, n, 0.02, 0.03));
+        });
+        json.case(&reference);
+        let fast = bench(
+            &format!("lut_matmul_batched {m}x{k}x{n} {threads}thr"),
+            1,
+            iters,
+            || {
+                black_box(lut_matmul_batched(&lut, &a, &b, m, k, n, 0.02, 0.03, threads));
+            },
+        );
+        json.case(&fast);
+        json.ratio("blocked_gemm_over_reference", reference.mean_ns / fast.mean_ns);
+    }
+
+    match json.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench json: {e}"),
+    }
+}

@@ -3,8 +3,18 @@
 //!
 //! * L1/L2 — the Pallas LUT-matmul kernel inside the AOT-compiled JAX
 //!   quantized-CNN graph (built by `make artifacts`);
-//! * L3 — the Rust coordinator: per-variant dynamic batchers executing the
-//!   graph through PJRT, with Python nowhere on the request path.
+//! * L3 — the Rust coordinator: per-variant dynamic batchers executing
+//!   through a pluggable backend, with Python nowhere on the request path.
+//!
+//! Backends (`--backend native|pjrt|auto`, default `auto`):
+//!
+//! * `pjrt` — the AOT graph through PJRT (needs `make artifacts`);
+//! * `native` — the batched, cache-blocked Rust LUT-GEMM path. With
+//!   artifacts present it serves the real weights/LUTs/dataset; with no
+//!   artifacts at all it runs a fully synthetic workload (deterministic
+//!   random model, behavioral LUTs, labels = exact-variant predictions),
+//!   so the complete serving stack — admission → batcher → execute →
+//!   respond — is exercised end to end with zero build-path outputs.
 //!
 //! Submits a few hundred classification requests against all four
 //! multiplier variants concurrently, then reports per-variant Top-1,
@@ -14,6 +24,7 @@
 //! in EXPERIMENTS.md.
 //!
 //! ```text
+//! cargo run --release --example e2e_serving -- --backend native --requests 400
 //! make artifacts && cargo run --release --example e2e_serving -- --requests 400
 //! ```
 
@@ -27,26 +38,34 @@ use openacm::config::spec::{MacroSpec, MultFamily};
 use openacm::coordinator::batcher::BatchPolicy;
 use openacm::coordinator::server::{InferenceServer, Request};
 use openacm::ppa::report::analyze_macro;
-use openacm::runtime::ArtifactStore;
+use openacm::runtime::backend::select_backend;
+use openacm::runtime::{ArtifactStore, BackendChoice, BackendFactory};
 use openacm::util::cli::Args;
+use openacm::util::threadpool::ThreadPool;
 
 fn main() -> Result<()> {
     let args = Args::from_env(false, &[])?;
     let n_requests = args.usize_or("requests", 400)?;
-    let store = ArtifactStore::load(&ArtifactStore::default_dir())?;
+    let choice = BackendChoice::parse(args.str_or("backend", "auto"))?;
+    let threads = ThreadPool::default_parallelism();
+    let dir = ArtifactStore::default_dir();
+    let (factory, workload) = select_backend(choice, &dir, 32, threads, 42)?;
+
     println!(
-        "artifacts: {} images, {} variants, graph batch {}",
-        store.n_images,
-        store.luts.len(),
-        store.batch
+        "backend {}: {} images, {} variants, batch capacity {}",
+        factory.backend_name(),
+        workload.n_images,
+        factory.variants().len(),
+        factory.max_batch()
     );
 
-    let server = InferenceServer::start(
-        &store,
+    let server = InferenceServer::start_with_backend(
+        factory,
         BatchPolicy {
             max_batch: 32,
             max_wait: Duration::from_millis(2),
         },
+        4096,
     )?;
     let variants = server.variants();
 
@@ -54,11 +73,11 @@ fn main() -> Result<()> {
     let t0 = Instant::now();
     let mut pending = Vec::with_capacity(n_requests);
     for i in 0..n_requests {
-        let idx = i % store.n_images;
+        let idx = i % workload.n_images;
         let variant = variants[i % variants.len()].clone();
         let (tx, rx) = channel();
         server.submit(Request {
-            image: store.image(idx).to_vec(),
+            image: workload.image(idx).to_vec(),
             variant: variant.clone(),
             respond: tx,
         })?;
@@ -69,7 +88,7 @@ fn main() -> Result<()> {
         let resp = rx.recv()?;
         let e = correct.entry(variant).or_insert((0, 0));
         e.1 += 1;
-        if resp.predicted == store.labels[idx] {
+        if resp.predicted == workload.labels[idx] {
             e.0 += 1;
         }
     }

@@ -1,6 +1,14 @@
-//! `openacm serve` — start the coordinator on the AOT artifacts and drive
-//! it with a synthetic request stream (the standalone serving demo; the
-//! richer end-to-end driver is examples/e2e_serving.rs).
+//! `openacm serve` — start the coordinator and drive it with a synthetic
+//! request stream (the standalone serving demo; the richer end-to-end
+//! driver is examples/e2e_serving.rs).
+//!
+//! Backend dispatch (`--backend native|pjrt|auto`, default `auto`):
+//! `pjrt` executes the AOT artifacts and therefore requires `make
+//! artifacts`; `native` runs the batched Rust-native quantized CNN — with
+//! artifacts it serves the real weights/LUTs/dataset, without them it
+//! falls back to a fully synthetic workload (random model, behavioral
+//! LUTs, labels = exact-variant predictions). `auto` picks `pjrt` when
+//! artifacts exist, `native` otherwise.
 
 use anyhow::Result;
 use std::path::Path;
@@ -10,9 +18,11 @@ use super::batcher::BatchPolicy;
 use super::server::InferenceServer;
 use super::warmstart::warm_start_profiles;
 use crate::bench::harness::sci;
-use crate::runtime::ArtifactStore;
+use crate::runtime::backend::select_backend;
+use crate::runtime::{ArtifactStore, BackendChoice, BackendFactory};
 use crate::store::DesignPointStore;
 use crate::util::cli::Args;
+use crate::util::threadpool::ThreadPool;
 
 pub fn cmd_serve(args: &Args) -> Result<()> {
     let dir = args
@@ -20,19 +30,25 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         .map(Path::new)
         .map(Path::to_path_buf)
         .unwrap_or_else(ArtifactStore::default_dir);
-    let store = ArtifactStore::load(&dir)?;
     let n_requests = args.usize_or("requests", 256)?;
+    let max_batch = args.usize_or("batch", 32)?;
     let policy = BatchPolicy {
-        max_batch: args.usize_or("batch", 32)?,
+        max_batch,
         max_wait: Duration::from_millis(args.u64_or("max-wait-ms", 2)?),
     };
+    let choice = BackendChoice::parse(args.str_or("backend", "auto"))?;
+    let threads = ThreadPool::default_parallelism();
+    let (factory, workload) =
+        select_backend(choice, &dir, max_batch, threads, args.u64_or("seed", 42)?)?;
+
     println!(
-        "starting coordinator: {} variants, batch {} (graph batch {})",
-        store.luts.len(),
+        "starting coordinator: backend {}, {} variants, batch {} (capacity {})",
+        factory.backend_name(),
+        factory.variants().len(),
         policy.max_batch,
-        store.batch
+        factory.max_batch()
     );
-    let mut server = InferenceServer::start(&store, policy)?;
+    let mut server = InferenceServer::start_with_backend(factory, policy, 4096)?;
 
     // Warm-start the serving tables from the design-point store: every
     // variant whose family an earlier DSE/PPA sweep characterized gets its
@@ -77,13 +93,13 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     }
     let variants = server.variants();
 
-    // Drive: round-robin requests across variants from the test set.
+    // Drive: round-robin requests across variants from the workload.
     let mut correct = 0usize;
     for i in 0..n_requests {
-        let idx = i % store.n_images;
+        let idx = i % workload.n_images;
         let variant = &variants[i % variants.len()];
-        let resp = server.infer(store.image(idx).to_vec(), variant)?;
-        if resp.predicted == store.labels[idx] {
+        let resp = server.infer(workload.image(idx).to_vec(), variant)?;
+        if resp.predicted == workload.labels[idx] {
             correct += 1;
         }
     }

@@ -1,17 +1,21 @@
 //! Inference coordinator (Layer 3 serving path): a threaded request
-//! router + dynamic batcher executing the AOT-compiled quantized-CNN graph
-//! through PJRT. Python is never on this path.
+//! router + dynamic batcher executing through a pluggable
+//! [`crate::runtime::Backend`] — the AOT-compiled quantized-CNN graph via
+//! PJRT, or the batched Rust-native quantized CNN with zero artifacts.
+//! Python is never on this path.
 //!
 //! Design (vllm-router-like, scaled to this workload):
 //!
 //! * clients submit single-image classification requests tagged with a
 //!   multiplier *variant* (exact / appro42 / logour / lm);
 //! * the router keeps one dynamic batcher per variant; a batcher drains its
-//!   queue until `batch` requests or `max_wait` elapses, pads the batch to
-//!   the graph's static shape, executes, and completes each request with
+//!   queue until `batch` requests or `max_wait` elapses and hands the whole
+//!   batch to its backend (`infer_batch`), then completes each request with
 //!   its logits;
-//! * all multiplier variants share ONE compiled executable — the LUT is a
-//!   runtime operand, so switching precision is free (no recompilation);
+//! * each batcher worker owns its backend instance, built on the worker
+//!   thread by a [`crate::runtime::BackendFactory`] (PJRT executables are
+//!   per-thread; on the PJRT path all variants share one *graph* — the LUT
+//!   is a runtime operand, so switching precision never recompiles);
 //! * metrics: per-request latency (enqueue→response) percentiles and
 //!   aggregate throughput, plus the per-inference energy estimate from the
 //!   PPA engine (the paper's accuracy-energy headline, measured end to

@@ -1,5 +1,6 @@
-//! The inference server: router + per-variant batcher workers over the
-//! PJRT executable.
+//! The inference server: router + per-variant batcher workers over a
+//! pluggable execution [`Backend`] (PJRT graph or the batched native
+//! quantized CNN — see `runtime::backend` for the dispatch rules).
 
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
@@ -12,7 +13,9 @@ use super::admission::{Admission, AdmissionController, Ticket};
 use super::batcher::{next_batch, BatchPolicy};
 use super::metrics::ServerMetrics;
 use super::warmstart::{profile_for_variant, VariantProfile};
-use crate::runtime::{client, ArtifactStore, Runtime};
+use crate::nn::eval::argmax;
+use crate::runtime::backend::IMAGE_BYTES;
+use crate::runtime::{ArtifactStore, Backend, BackendFactory, PjrtFactory};
 
 /// A classification request: one 16×16 grayscale image + target variant.
 pub struct Request {
@@ -42,104 +45,101 @@ pub struct InferenceServer {
     workers: Vec<JoinHandle<()>>,
     pub metrics: Arc<ServerMetrics>,
     pub admission: Arc<AdmissionController>,
+    /// The backend's per-execute batch capacity.
     pub batch: usize,
+    /// Backend label ("pjrt" / "native").
+    pub backend: &'static str,
     /// Per-family accuracy/energy tables, warm-started from the
     /// design-point store at boot (empty when no store is available).
     pub profiles: BTreeMap<String, VariantProfile>,
 }
 
 impl InferenceServer {
-    /// Start: compile the model once per variant worker (each worker owns
-    /// its executable — PJRT executables are not shared across threads)
-    /// and spawn one batcher thread per LUT variant.
+    /// Start on the PJRT backend over AOT artifacts (the historical entry
+    /// point; equivalent to `start_with_backend(PjrtFactory::…)`).
     pub fn start(store: &ArtifactStore, policy: BatchPolicy) -> Result<InferenceServer> {
         Self::start_with_queue_limit(store, policy, 4096)
     }
 
-    /// Start with an explicit per-variant queue-depth limit (admission
-    /// control / backpressure): submissions beyond the limit are shed with
-    /// an error instead of growing queue latency without bound.
+    /// PJRT start with an explicit per-variant queue-depth limit.
     pub fn start_with_queue_limit(
         store: &ArtifactStore,
         policy: BatchPolicy,
         queue_limit: usize,
     ) -> Result<InferenceServer> {
+        Self::start_with_backend(Arc::new(PjrtFactory::from_artifacts(store)), policy, queue_limit)
+    }
+
+    /// Start one batcher worker per variant, each executing through a
+    /// backend built by `factory` **on the worker thread** (PJRT
+    /// executables are per-thread; the native backend keeps per-worker
+    /// scratch). Submissions beyond `queue_limit` per variant are shed
+    /// with an error instead of growing queue latency without bound.
+    pub fn start_with_backend(
+        factory: Arc<dyn BackendFactory>,
+        policy: BatchPolicy,
+        queue_limit: usize,
+    ) -> Result<InferenceServer> {
+        let variants = factory.variants();
+        if variants.is_empty() {
+            bail!("backend factory exposes no variants");
+        }
         let metrics = Arc::new(ServerMetrics::new());
         let admission = Arc::new(AdmissionController::new(
             queue_limit,
-            store.luts.keys().cloned(),
+            variants.iter().cloned(),
         ));
         let mut routes = BTreeMap::new();
         let mut workers = Vec::new();
-        let b = store.batch;
-        for (variant, lut) in &store.luts {
+        // Workers report backend construction over this channel so boot
+        // fails fast instead of "serving" with dead workers (e.g. PJRT
+        // behind the offline xla stub, or missing weights).
+        let (ready_tx, ready_rx) = channel::<std::result::Result<(), String>>();
+        for variant in &variants {
             let (tx, rx): (Sender<QueuedRequest>, Receiver<QueuedRequest>) = channel();
             routes.insert(variant.clone(), tx);
-            let lut = lut.clone();
-            let hlo = store.model_hlo.clone();
-            let weights = store.weights.clone();
+            let factory = Arc::clone(&factory);
+            let variant = variant.clone();
             let metrics = Arc::clone(&metrics);
-            let policy = BatchPolicy {
-                max_batch: policy.max_batch.min(b),
-                ..policy
-            };
+            let ready = ready_tx.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("batcher-{variant}"))
                 .spawn(move || {
-                    // Each worker compiles its own executable.
-                    let rt = match Runtime::cpu() {
-                        Ok(r) => r,
+                    let mut backend = match factory.create(&variant) {
+                        Ok(b) => {
+                            // Boot may already have failed on a sibling;
+                            // a closed channel is fine to ignore.
+                            let _ = ready.send(Ok(()));
+                            b
+                        }
                         Err(e) => {
-                            eprintln!("worker init failed: {e:#}");
+                            let _ = ready.send(Err(format!("{variant}: {e:#}")));
                             return;
                         }
                     };
-                    let model = match rt.compile_hlo_text(&hlo) {
-                        Ok(m) => m,
-                        Err(e) => {
-                            eprintln!("compile failed: {e:#}");
-                            return;
-                        }
-                    };
-                    let lut_lit = match client::literal_i32(&[65536], &lut) {
-                        Ok(l) => l,
-                        Err(e) => {
-                            eprintln!("lut literal failed: {e:#}");
-                            return;
-                        }
-                    };
-                    let weight_lits = match client::weight_literals(&weights) {
-                        Ok(w) => w,
-                        Err(e) => {
-                            eprintln!("weight literals failed: {e:#}");
-                            return;
-                        }
+                    // Never drain more than one backend execution's worth.
+                    let policy = BatchPolicy {
+                        max_batch: policy.max_batch.min(backend.max_batch()).max(1),
+                        ..policy
                     };
                     while let Some(batch) = next_batch(&rx, &policy) {
                         let n = batch.len();
-                        // Pad to the static batch size.
-                        let mut px = vec![0i32; b * 256];
-                        for (j, q) in batch.iter().enumerate() {
-                            for (k, &p) in q.image.iter().enumerate() {
-                                px[j * 256 + k] = p as i32;
+                        let images: Vec<&[u8]> =
+                            batch.iter().map(|q| q.image.as_slice()).collect();
+                        let rows = match backend.infer_batch(&images) {
+                            Ok(r) => r,
+                            Err(e) => {
+                                eprintln!("execute failed ({variant}): {e:#}");
+                                continue;
                             }
+                        };
+                        if rows.len() != n {
+                            eprintln!(
+                                "backend returned {} rows for a batch of {n} ({variant})",
+                                rows.len()
+                            );
+                            continue;
                         }
-                        let img = match client::literal_i32(&[b, 16, 16], &px) {
-                            Ok(l) => l,
-                            Err(e) => {
-                                eprintln!("image literal failed: {e:#}");
-                                continue;
-                            }
-                        };
-                        let mut args = vec![img, lut_lit.clone()];
-                        args.extend(weight_lits.iter().cloned());
-                        let out = match model.run_f32(&args, b * 10) {
-                            Ok(o) => o,
-                            Err(e) => {
-                                eprintln!("execute failed: {e:#}");
-                                continue;
-                            }
-                        };
                         // Record metrics BEFORE completing the requests so a
                         // caller that snapshots right after the last response
                         // sees every batch counted.
@@ -148,8 +148,7 @@ impl InferenceServer {
                             .map(|q| q.enqueued.elapsed().as_micros() as f64)
                             .collect();
                         metrics.record_batch(n, &lats);
-                        for (j, q) in batch.into_iter().enumerate() {
-                            let logits = out[j * 10..(j + 1) * 10].to_vec();
+                        for (q, logits) in batch.into_iter().zip(rows) {
                             let predicted = argmax(&logits);
                             // Receiver may have gone away; ignore.
                             let _ = q.respond.send(Response { logits, predicted });
@@ -159,12 +158,31 @@ impl InferenceServer {
                 .context("spawning batcher thread")?;
             workers.push(handle);
         }
+        drop(ready_tx);
+        // Block until every worker's backend is up; tear down and error
+        // if any cannot initialize (all-or-nothing boot).
+        for _ in 0..workers.len() {
+            let failure = match ready_rx.recv() {
+                Ok(Ok(())) => None,
+                Ok(Err(msg)) => Some(msg),
+                Err(_) => Some("a worker exited before reporting readiness".to_string()),
+            };
+            if let Some(msg) = failure {
+                // Closing the routes ends every worker's request loop.
+                routes.clear();
+                for w in workers.drain(..) {
+                    let _ = w.join();
+                }
+                bail!("backend worker failed to initialize: {msg}");
+            }
+        }
         Ok(InferenceServer {
             routes,
             workers,
             metrics,
             admission,
-            batch: b,
+            batch: factory.max_batch(),
+            backend: factory.backend_name(),
             profiles: BTreeMap::new(),
         })
     }
@@ -181,9 +199,18 @@ impl InferenceServer {
         profile_for_variant(&self.profiles, variant)
     }
 
-    /// Route one request. Errors on unknown variants and on shed load
-    /// (queue depth above the admission limit).
+    /// Route one request. Errors on malformed images, unknown variants
+    /// and on shed load (queue depth above the admission limit).
     pub fn submit(&self, req: Request) -> Result<()> {
+        // Reject bad payloads at the door: a malformed image inside a
+        // batch would otherwise fail the whole backend execution and
+        // drop every batchmate's response with it.
+        if req.image.len() != IMAGE_BYTES {
+            bail!(
+                "image has {} bytes, want {IMAGE_BYTES} (16×16 grayscale)",
+                req.image.len()
+            );
+        }
         let route = match self.routes.get(&req.variant) {
             Some(r) => r,
             None => bail!(
@@ -236,22 +263,8 @@ impl InferenceServer {
     }
 }
 
-fn argmax(xs: &[f32]) -> usize {
-    xs.iter()
-        .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .map(|(i, _)| i)
-        .unwrap_or(0)
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn argmax_basic() {
-        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
-        assert_eq!(argmax(&[3.0]), 0);
-    }
-    // Full server tests live in rust/tests/serving.rs (they need artifacts).
-}
+// `argmax` comes from `nn::eval` so server responses, workload labels and
+// accuracy scoring all share one total-ordering argmax (NaN-safe).
+//
+// Full server tests live in rust/tests/serving.rs: the native-backend
+// soak suite runs everywhere; the PJRT suite needs artifacts.

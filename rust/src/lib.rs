@@ -79,6 +79,20 @@
 //! ([`coordinator::warm_start_profiles`]). `cargo bench --bench
 //! store_warm` prints the warm-vs-cold sweep speedup and writes
 //! `BENCH_store_warm.json`.
+//!
+//! ## Serving backends
+//!
+//! The coordinator's batcher workers execute through the
+//! [`runtime::Backend`] trait: [`runtime::PjrtBackend`] runs the
+//! AOT-compiled JAX graph (needs `make artifacts`), while
+//! [`runtime::NativeBackend`] runs the batched Rust-native quantized CNN
+//! — [`nn::quant::lut_matmul_batched`], a tile-blocked int8 LUT-GEMM with
+//! i32→i64 accumulation that is *bit-identical* to the naive reference —
+//! so the whole serving stack works with zero artifacts
+//! (`openacm serve --backend native`). See `runtime::backend` for the
+//! dispatch rules and batching invariants, and `cargo bench --bench
+//! nn_forward` for the scalar-vs-batched speedup trail
+//! (`BENCH_nn_forward.json`).
 
 pub mod util;
 pub mod bench;

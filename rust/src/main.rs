@@ -25,8 +25,10 @@ COMMANDS:
              [--no-cache] [--store DIR]
   store      Inspect/maintain the design-point store: stats | verify | gc
              [--dir DIR] [--repair] [--max-mb N]
-  serve      Start the inference coordinator on AOT artifacts
-             [--artifacts DIR] [--batch N] [--requests N] [--store DIR]
+  serve      Start the inference coordinator (PJRT on AOT artifacts, or the
+             artifact-free batched native backend)
+             [--backend native|pjrt|auto] [--artifacts DIR] [--batch N]
+             [--requests N] [--store DIR] [--seed N]
   luts       Emit behavioral-multiplier LUTs (npy) for cross-checking
              [--out DIR]
   help       Show this message

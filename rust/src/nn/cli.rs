@@ -27,10 +27,14 @@ pub struct NnRow {
     pub mred: f64,
 }
 
-/// Evaluate all families natively over `limit` test images.
+/// Evaluate all families natively over `limit` test images — batched
+/// through the blocked LUT-GEMM kernel (bit-identical to the per-image
+/// scalar forward, at batch speed).
 pub fn eval_native(store: &ArtifactStore, limit: usize) -> Result<Vec<NnRow>> {
     let cnn = QuantCnn::load(&store.dir)?;
     let n = store.n_images.min(limit);
+    let threads = crate::util::threadpool::ThreadPool::default_parallelism();
+    let views: Vec<&[u8]> = (0..n).map(|i| store.image(i)).collect();
     let mut rows = Vec::new();
     for (name, family) in paper_families() {
         let lut = store
@@ -38,8 +42,8 @@ pub fn eval_native(store: &ArtifactStore, limit: usize) -> Result<Vec<NnRow>> {
             .get(&name)
             .with_context(|| format!("missing LUT {name}"))?;
         let mut logits = Vec::with_capacity(n);
-        for i in 0..n {
-            logits.push(cnn.forward(lut, store.image(i)));
+        for chunk in views.chunks(64) {
+            logits.extend(cnn.forward_batch(lut, chunk, threads));
         }
         let result = topk_accuracy(&logits, &store.labels[..n]);
         let (nmed, mred) = family_error(&family);

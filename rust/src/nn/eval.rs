@@ -1,5 +1,17 @@
 //! Top-1 / Top-5 accuracy scoring (Table IV's metrics).
 
+/// Index of the largest logit under **total ordering** — the one argmax
+/// every consumer (server responses, workload labels, accuracy scoring)
+/// must share so ties and NaNs break identically everywhere. NaN sorts
+/// above +inf and wins; an empty slice maps to class 0.
+pub fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
 /// Accuracy result.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct EvalResult {
@@ -15,7 +27,11 @@ pub fn topk_accuracy(logits: &[Vec<f32>], labels: &[usize]) -> EvalResult {
     let mut top5 = 0usize;
     for (row, &label) in logits.iter().zip(labels) {
         let mut idx: Vec<usize> = (0..row.len()).collect();
-        idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap());
+        // Total ordering: NaN logits (e.g. from a corrupted LUT or an
+        // overflowing backend) must score as a wrong answer, not panic the
+        // whole evaluation. Under `total_cmp`, NaN sorts above +inf, and
+        // the stable sort keeps ties (all-NaN rows) in index order.
+        idx.sort_by(|&a, &b| row[b].total_cmp(&row[a]));
         if idx[0] == label {
             top1 += 1;
         }
@@ -43,6 +59,35 @@ mod tests {
         let r = topk_accuracy(&logits, &[1, 4]);
         assert_eq!(r.top1, 0.5);
         assert_eq!(r.top5, 1.0);
+    }
+
+    #[test]
+    fn argmax_total_order() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+        assert_eq!(argmax(&[3.0]), 0);
+        assert_eq!(argmax(&[]), 0);
+        // NaN handled via total order — wins, no panic.
+        assert_eq!(argmax(&[0.1, f32::NAN, 0.5]), 1);
+        // `max_by` returns the last of equal maxima — pin the tie-break.
+        assert_eq!(argmax(&[1.0, 1.0]), 1);
+    }
+
+    #[test]
+    fn nan_logits_score_without_panicking() {
+        // Regression: this used to hit `partial_cmp().unwrap()` and panic.
+        let mut poisoned = vec![f32::NAN, 0.9, 0.8, 0.7, 0.6, 0.5, 0.0, 0.0, 0.0, 0.0];
+        let all_nan = vec![f32::NAN; 10];
+        let r = topk_accuracy(&[poisoned.clone(), all_nan], &[1, 0]);
+        assert_eq!(r.n, 2);
+        // Row 0: the NaN wins top-1 under total order, so label 1 is a
+        // top-1 miss but still inside top-5. Row 1: stable sort keeps the
+        // all-NaN tie in index order, so index 0 == label 0.
+        assert_eq!(r.top1, 0.5);
+        assert_eq!(r.top5, 1.0);
+        // -NaN sorts *below* everything; label 1 then wins top-1 outright.
+        poisoned[0] = -f32::NAN;
+        let r2 = topk_accuracy(&[poisoned], &[1]);
+        assert_eq!(r2.top1, 1.0);
     }
 
     #[test]

@@ -9,10 +9,15 @@
 //! the 8-bit multiplier LUT.
 //!
 //! * [`quant`] — the static symmetric quantization scheme (mirrors
-//!   `python/compile/mults.py` / `model.py` exactly);
-//! * [`model`] — the Rust-native quantized CNN forward (LUT matmul), used
-//!   to cross-check the AOT JAX graph and as a no-artifacts fallback;
-//! * [`eval`] — Top-1/Top-5 scoring;
+//!   `python/compile/mults.py` / `model.py` exactly) plus the two LUT-GEMM
+//!   kernels: the naive reference ([`quant::lut_matmul`]) and the
+//!   tile-blocked, threadpool-parallel batched kernel
+//!   ([`quant::lut_matmul_batched`]), proven bit-identical;
+//! * [`model`] — the Rust-native quantized CNN: scalar
+//!   [`QuantCnn::forward`] (the oracle) and batched
+//!   [`QuantCnn::forward_batch`] (the serving path behind
+//!   [`crate::runtime::NativeBackend`]);
+//! * [`eval`] — Top-1/Top-5 scoring (NaN-safe total ordering);
 //! * [`cli`] — `openacm nn`: Table IV (accuracy + NMED/MRED).
 
 pub mod quant;
@@ -20,5 +25,5 @@ pub mod model;
 pub mod eval;
 pub mod cli;
 
-pub use eval::{topk_accuracy, EvalResult};
-pub use model::QuantCnn;
+pub use eval::{argmax, topk_accuracy, EvalResult};
+pub use model::{synthetic_images, QuantCnn};

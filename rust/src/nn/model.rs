@@ -11,8 +11,9 @@
 use anyhow::{bail, Context, Result};
 use std::path::Path;
 
-use super::quant::{lut_matmul, quantize_all};
+use super::quant::{lut_matmul, lut_matmul_batched, quantize, quantize_all};
 use crate::util::npy;
+use crate::util::threadpool::parallel_map;
 
 /// One quantized layer: int8 weights + scales.
 #[derive(Clone, Debug)]
@@ -45,18 +46,19 @@ pub const C2_OUT: usize = 16;
 pub const FC1_OUT: usize = 32;
 pub const CLASSES: usize = 10;
 
-fn im2col(
-    input: &[f32],
+fn im2col_gen<T: Copy>(
+    input: &[T],
     h: usize,
     w: usize,
     c: usize,
     k: usize,
-) -> (Vec<f32>, usize, usize) {
+    zero: T,
+) -> (Vec<T>, usize, usize) {
     // input layout HWC; output rows = (h-k+1)*(w-k+1), cols = k*k*c
     let oh = h - k + 1;
     let ow = w - k + 1;
     let cols = k * k * c;
-    let mut out = vec![0f32; oh * ow * cols];
+    let mut out = vec![zero; oh * ow * cols];
     for oy in 0..oh {
         for ox in 0..ow {
             let row = oy * ow + ox;
@@ -72,6 +74,41 @@ fn im2col(
         }
     }
     (out, oh * ow, cols)
+}
+
+fn im2col(input: &[f32], h: usize, w: usize, c: usize, k: usize) -> (Vec<f32>, usize, usize) {
+    im2col_gen(input, h, w, c, k, 0f32)
+}
+
+/// Batch-of-N im2col over *already quantized* activations: images are
+/// stacked along the row axis, so one GEMM covers the whole batch and
+/// every weight tile is reused `N` times. Operating on i8 after
+/// quantization is bit-equivalent to the scalar path's quantize-after-
+/// im2col (im2col only copies elements, and quantization is a pure
+/// per-element map), but quantizes each activation once instead of once
+/// per patch it appears in (~k·k times).
+/// Returns (matrix, rows per image, cols); total rows = `batch * rows`.
+fn im2col_batch_i8(
+    input: &[i8],
+    batch: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+) -> (Vec<i8>, usize, usize) {
+    let per_image = h * w * c;
+    assert_eq!(input.len(), batch * per_image);
+    let oh = h - k + 1;
+    let ow = w - k + 1;
+    let cols = k * k * c;
+    let mut out = Vec::with_capacity(batch * oh * ow * cols);
+    let mut rows = oh * ow;
+    for i in 0..batch {
+        let (one, m, _) = im2col_gen(&input[i * per_image..(i + 1) * per_image], h, w, c, k, 0i8);
+        rows = m;
+        out.extend_from_slice(&one);
+    }
+    (out, rows, cols)
 }
 
 fn relu(xs: &mut [f32]) {
@@ -145,6 +182,141 @@ impl QuantCnn {
         self.layer_forward(lut, &self.fc2, &h3, 1, FC1_OUT, CLASSES)
     }
 
+    /// Batched [`QuantCnn::layer_forward`] over pre-quantized activations:
+    /// identical math, one blocked GEMM over all rows of the whole batch.
+    #[allow(clippy::too_many_arguments)]
+    fn layer_forward_batched_q(
+        &self,
+        lut: &[i32],
+        layer: &QuantLayer,
+        a_q: &[i8],
+        m: usize,
+        k: usize,
+        n: usize,
+        threads: usize,
+    ) -> Vec<f32> {
+        let mut out = lut_matmul_batched(
+            lut,
+            a_q,
+            &layer.w_q,
+            m,
+            k,
+            n,
+            layer.in_scale,
+            layer.w_scale,
+            threads,
+        );
+        for row in 0..m {
+            for j in 0..n {
+                out[row * n + j] += layer.bias[j];
+            }
+        }
+        out
+    }
+
+    /// The batched pipeline for one contiguous image group; `gemm_threads`
+    /// parallelizes inside the GEMMs only (see [`QuantCnn::forward_batch`]
+    /// for the group-level split).
+    fn forward_batch_core(
+        &self,
+        lut: &[i32],
+        images: &[&[u8]],
+        gemm_threads: usize,
+    ) -> Vec<Vec<f32>> {
+        let bsz = images.len();
+        // Normalize + quantize the whole batch once, BEFORE im2col:
+        // im2col only copies elements and quantization is a pure
+        // per-element map, so quantize∘im2col == im2col∘quantize — but
+        // this way each activation quantizes once, not once per patch.
+        let mut xq = Vec::with_capacity(bsz * IMG * IMG);
+        for img in images {
+            assert_eq!(img.len(), IMG * IMG);
+            xq.extend(
+                img.iter()
+                    .map(|&p| quantize(p as f32 / 255.0, self.conv1.in_scale)),
+            );
+        }
+        // conv1 over the stacked batch: weight tiles reused across images.
+        let (a1, m1, k1) = im2col_batch_i8(&xq, bsz, IMG, IMG, 1, 3);
+        let mut h1 =
+            self.layer_forward_batched_q(lut, &self.conv1, &a1, bsz * m1, k1, C1_OUT, gemm_threads);
+        relu(&mut h1);
+        let (c1h, c1w) = (IMG - 2, IMG - 2);
+        let per1 = c1h * c1w * C1_OUT;
+        let mut p1 = Vec::with_capacity(bsz * per1 / 4);
+        let (mut p1h, mut p1w) = (1, 1);
+        for i in 0..bsz {
+            let (p, hh, ww) = maxpool2(&h1[i * per1..(i + 1) * per1], c1h, c1w, C1_OUT);
+            p1h = hh;
+            p1w = ww;
+            p1.extend_from_slice(&p);
+        }
+        // conv2 over the stacked batch.
+        let p1q = quantize_all(&p1, self.conv2.in_scale);
+        let (a2, m2, k2) = im2col_batch_i8(&p1q, bsz, p1h, p1w, C1_OUT, 3);
+        let mut h2 =
+            self.layer_forward_batched_q(lut, &self.conv2, &a2, bsz * m2, k2, C2_OUT, gemm_threads);
+        relu(&mut h2);
+        let (c2h, c2w) = (p1h - 2, p1w - 2);
+        let per2 = c2h * c2w * C2_OUT;
+        let mut p2 = Vec::with_capacity(bsz * per2 / 4);
+        let (mut p2h, mut p2w) = (1, 1);
+        for i in 0..bsz {
+            let (p, hh, ww) = maxpool2(&h2[i * per2..(i + 1) * per2], c2h, c2w, C2_OUT);
+            p2h = hh;
+            p2w = ww;
+            p2.extend_from_slice(&p);
+        }
+        // fc1/fc2: one GEMM row per image.
+        let flat_len = p2h * p2w * C2_OUT;
+        let p2q = quantize_all(&p2, self.fc1.in_scale);
+        let mut h3 =
+            self.layer_forward_batched_q(lut, &self.fc1, &p2q, bsz, flat_len, FC1_OUT, gemm_threads);
+        relu(&mut h3);
+        let h3q = quantize_all(&h3, self.fc2.in_scale);
+        let logits =
+            self.layer_forward_batched_q(lut, &self.fc2, &h3q, bsz, FC1_OUT, CLASSES, gemm_threads);
+        logits.chunks(CLASSES).map(|row| row.to_vec()).collect()
+    }
+
+    /// Forward a batch of images (each a 256-byte 16×16 grayscale) in one
+    /// pass: conv layers run as a single blocked GEMM over the stacked
+    /// batch-of-N im2col matrix (weight tiles reused across the batch), fc
+    /// layers as one GEMM with one row per image.
+    ///
+    /// With `threads > 1` the batch splits into contiguous image groups,
+    /// one per worker, and each group runs the whole pipeline (quantize,
+    /// im2col, GEMM, pool) serially — so every stage scales with cores,
+    /// not just the GEMM inner loops. A single image with spare threads
+    /// instead parallelizes over GEMM row-tiles.
+    ///
+    /// **Bit-identical** to calling [`QuantCnn::forward`] per image, for
+    /// every LUT, batch size, grouping and thread count: each output row's
+    /// integer accumulation sums the same products (order-independent),
+    /// and every float op (normalize, quantize, bias add, relu, maxpool,
+    /// dequantize) is applied per element exactly as in the scalar path.
+    /// The equivalence suite (`rust/tests/nn_batch_equivalence.rs`) pins
+    /// this down.
+    pub fn forward_batch(&self, lut: &[i32], images: &[&[u8]], threads: usize) -> Vec<Vec<f32>> {
+        let bsz = images.len();
+        if bsz == 0 {
+            return Vec::new();
+        }
+        let threads = threads.max(1);
+        if threads == 1 || bsz == 1 {
+            return self.forward_batch_core(lut, images, threads);
+        }
+        let groups = threads.min(bsz);
+        let base = bsz / groups;
+        let rem = bsz % groups;
+        let grouped = parallel_map(groups, threads, |g| {
+            let start = g * base + g.min(rem);
+            let len = base + usize::from(g < rem);
+            self.forward_batch_core(lut, &images[start..start + len], 1)
+        });
+        grouped.into_iter().flatten().collect()
+    }
+
     /// Load from the artifacts directory written by `python/compile/aot.py`
     /// (weights/{name}_q.npy int8-as-i32, weights/{name}_b.npy f32, and
     /// weights/scales.npy = [in1, w1, in2, w2, in3, w3, in4, w4]).
@@ -196,6 +368,14 @@ impl QuantCnn {
     }
 }
 
+/// `n` deterministic pseudo-random 16×16 grayscale images (flattened to
+/// `n * 256` bytes) — the artifact-free workload for benches, the serving
+/// soak test, and `--backend native` demos without a dataset on disk.
+pub fn synthetic_images(n: usize, seed: u64) -> Vec<u8> {
+    let mut rng = crate::util::rng::Pcg32::new(seed);
+    (0..n * IMG * IMG).map(|_| rng.below(256) as u8).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -232,6 +412,38 @@ mod tests {
             .sum::<f32>()
             / 10.0;
         assert!(dev < 0.5 * scale, "dev {dev} vs scale {scale}");
+    }
+
+    #[test]
+    fn forward_batch_matches_forward_small() {
+        // Debug-friendly bit-exactness smoke (the full family × batch-size
+        // matrix lives in rust/tests/nn_batch_equivalence.rs).
+        let cnn = QuantCnn::random(7);
+        let mut lut = vec![0i32; 65536];
+        for a in -128i32..=127 {
+            for b in -128i32..=127 {
+                lut[(((a as u8) as usize) << 8) | ((b as u8) as usize)] = a * b;
+            }
+        }
+        let images = synthetic_images(2, 3);
+        let views: Vec<&[u8]> = images.chunks(IMG * IMG).collect();
+        let batched = cnn.forward_batch(&lut, &views, 2);
+        assert_eq!(batched.len(), 2);
+        for (i, v) in views.iter().enumerate() {
+            assert_eq!(batched[i], cnn.forward(&lut, v), "image {i}");
+        }
+    }
+
+    #[test]
+    fn im2col_batch_stacks_per_image_blocks() {
+        let x: Vec<i8> = (1..=18).collect(); // two 3x3 images
+        let (cols, m, k) = super::im2col_batch_i8(&x, 2, 3, 3, 1, 2);
+        assert_eq!((m, k), (4, 4));
+        assert_eq!(cols.len(), 2 * 4 * 4);
+        let (one, _, _) = super::im2col_gen(&x[0..9], 3, 3, 1, 2, 0i8);
+        let (two, _, _) = super::im2col_gen(&x[9..18], 3, 3, 1, 2, 0i8);
+        assert_eq!(&cols[0..16], &one[..]);
+        assert_eq!(&cols[16..32], &two[..]);
     }
 
     #[test]

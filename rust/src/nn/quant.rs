@@ -4,6 +4,21 @@
 //! `q = clamp(round(x / scale), -127, 127)` with a per-tensor scale fixed
 //! at calibration time. Products are looked up in the 256×256 LUT indexed
 //! by the two int8 bit patterns; accumulation is exact i64.
+//!
+//! Two GEMM entry points share that contract:
+//!
+//! * [`lut_matmul`] — the naive triple-loop reference (kept as the
+//!   bit-exactness oracle);
+//! * [`lut_matmul_batched`] — the serving kernel: tile-blocked over
+//!   m/n/k, i32 inner accumulation widened into i64 per k-tile, LUT rows
+//!   reused across an output row, zero-activation rows skipped when the
+//!   LUT maps them to zero, and row-tiles spread over the thread pool.
+//!   Because every partial sum is integer, any accumulation order yields
+//!   the same i64 total, so the kernel is *bit-identical* to the
+//!   reference for every LUT and shape
+//!   (`rust/tests/nn_batch_equivalence.rs`).
+
+use crate::util::threadpool::parallel_map;
 
 /// Quantize one value.
 #[inline]
@@ -57,6 +72,106 @@ pub fn lut_matmul(
     out
 }
 
+/// Output-row tile: one parallel work unit; `TILE_M × n` i64 accumulators
+/// stay resident (≤ 16 KiB for n ≤ 64).
+const TILE_M: usize = 32;
+/// Reduction tile: at most `TILE_K` products accumulate in i32 before the
+/// widening flush. Worst case `128 × 127 × 127 ≈ 2.1e6` — four orders of
+/// magnitude inside i32 range, so the narrow accumulator can never wrap.
+const TILE_K: usize = 128;
+/// Column tile: bounds the i32 partial-sum strip (`TILE_N × 4 B` in L1).
+const TILE_N: usize = 64;
+
+/// Blocked, batched LUT-GEMM: `A (m×k, int8) × B (k×n, int8)` with the
+/// same contract as [`lut_matmul`] and bit-identical output.
+///
+/// Layout of the hot loop: for each (row-tile, k-tile, n-tile), walk one
+/// output row at a time; each A element selects a contiguous 256-entry LUT
+/// row that is reused across the whole B row slice (n-tile wide,
+/// contiguous), so the inner loop is a sequential gather instead of the
+/// reference's strided 256 KiB-wide lookups. Rows whose A element is zero
+/// are skipped entirely when the LUT's zero row is all zeros (true for the
+/// exact multiplier and cheap to test once) — after ReLU that is a large
+/// fraction of all activations.
+///
+/// `threads` spreads row-tiles across scoped workers (1 = fully serial);
+/// the result is independent of the thread count.
+///
+/// **Precondition** (debug-asserted): every LUT entry must satisfy
+/// `|entry| ≤ i32::MAX / 128` (≈ 16.8M), or a k-tile's i32 partial sum
+/// could wrap and break bit-identity with the reference. Every int8
+/// product LUT is bounded by 128·128 = 16384, four orders of magnitude
+/// inside the limit.
+#[allow(clippy::too_many_arguments)]
+pub fn lut_matmul_batched(
+    lut: &[i32],
+    a: &[i8],
+    b: &[i8],
+    m: usize,
+    k: usize,
+    n: usize,
+    scale_a: f32,
+    scale_b: f32,
+    threads: usize,
+) -> Vec<f32> {
+    assert_eq!(lut.len(), 65536);
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    debug_assert!(
+        lut.iter()
+            .all(|&v| (v as i64).abs() <= i32::MAX as i64 / TILE_K as i64),
+        "LUT entries exceed the blocked kernel's i32 partial-sum bound"
+    );
+    let s = scale_a * scale_b;
+    // a == 0 contributes nothing iff the LUT's zero row is identically
+    // zero; skipping it then adds the same zeros the reference adds.
+    let zero_row_is_zero = lut[..256].iter().all(|&v| v == 0);
+    let row_tiles = m.div_ceil(TILE_M);
+    let tiles: Vec<Vec<i64>> = parallel_map(row_tiles, threads, |t| {
+        let i0 = t * TILE_M;
+        let i1 = (i0 + TILE_M).min(m);
+        let mut acc = vec![0i64; (i1 - i0) * n];
+        let mut strip = [0i32; TILE_N];
+        for k0 in (0..k).step_by(TILE_K) {
+            let k1 = (k0 + TILE_K).min(k);
+            for j0 in (0..n).step_by(TILE_N) {
+                let j1 = (j0 + TILE_N).min(n);
+                let width = j1 - j0;
+                for i in i0..i1 {
+                    let a_row = &a[i * k..(i + 1) * k];
+                    let partial = &mut strip[..width];
+                    partial.fill(0);
+                    for p in k0..k1 {
+                        let av = a_row[p];
+                        if av == 0 && zero_row_is_zero {
+                            continue;
+                        }
+                        let lut_row = &lut[((av as u8 as usize) << 8)..][..256];
+                        let b_row = &b[p * n + j0..p * n + j1];
+                        for (ps, &bv) in partial.iter_mut().zip(b_row) {
+                            *ps += lut_row[bv as u8 as usize];
+                        }
+                    }
+                    let out_row = &mut acc[(i - i0) * n + j0..(i - i0) * n + j1];
+                    for (o, &ps) in out_row.iter_mut().zip(partial.iter()) {
+                        *o += ps as i64;
+                    }
+                }
+            }
+        }
+        acc
+    });
+    let mut out = vec![0f32; m * n];
+    for (t, acc) in tiles.into_iter().enumerate() {
+        let base = t * TILE_M * n;
+        for (off, v) in acc.into_iter().enumerate() {
+            // Identical final op to the reference: `acc as f32 * s`.
+            out[base + off] = v as f32 * s;
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -78,6 +193,43 @@ mod tests {
         let s = calibrate(&xs);
         assert!((s - 2.0 / 127.0).abs() < 1e-9);
         assert_eq!(quantize(-2.0, s), -127);
+    }
+
+    #[test]
+    fn batched_matches_reference_on_small_odd_shape() {
+        // Tiny LUT-shaped check that runs even in debug: a synthetic
+        // "multiplier" LUT (a*b + 1 so the zero row is non-zero and the
+        // zero-skip stays disabled) over a 5×7×3 GEMM.
+        let mut lut = vec![0i32; 65536];
+        for a in -128i32..=127 {
+            for b in -128i32..=127 {
+                lut[(((a as u8) as usize) << 8) | ((b as u8) as usize)] = a * b + 1;
+            }
+        }
+        let a: Vec<i8> = (0..35).map(|i| ((i * 89 + 3) % 256) as u8 as i8).collect();
+        let b: Vec<i8> = (0..21).map(|i| ((i * 57 + 11) % 256) as u8 as i8).collect();
+        let reference = lut_matmul(&lut, &a, &b, 5, 7, 3, 0.1, 0.2);
+        for threads in [1, 3] {
+            let fast = lut_matmul_batched(&lut, &a, &b, 5, 7, 3, 0.1, 0.2, threads);
+            assert_eq!(fast, reference, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn batched_zero_skip_is_exact() {
+        // Zero row all-zero (exact multiplier semantics) + zero-heavy A:
+        // the skip path must add exactly the zeros the reference adds.
+        let mut lut = vec![0i32; 65536];
+        for a in -128i32..=127 {
+            for b in -128i32..=127 {
+                lut[(((a as u8) as usize) << 8) | ((b as u8) as usize)] = a * b;
+            }
+        }
+        let a: Vec<i8> = (0..40).map(|i| if i % 3 == 0 { 0 } else { (i % 120) as i8 - 60 }).collect();
+        let b: Vec<i8> = (0..50).map(|i| ((i * 7) % 256) as u8 as i8).collect();
+        let reference = lut_matmul(&lut, &a, &b, 8, 5, 10, 0.5, 0.5);
+        let fast = lut_matmul_batched(&lut, &a, &b, 8, 5, 10, 0.5, 0.5, 2);
+        assert_eq!(fast, reference);
     }
 
     #[test]

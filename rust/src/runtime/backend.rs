@@ -1,0 +1,552 @@
+//! Execution backends for the serving coordinator.
+//!
+//! The coordinator's batcher workers are generic over [`Backend`]: a
+//! classify-a-batch engine. Two implementations ship:
+//!
+//! * [`PjrtBackend`] — the AOT-compiled JAX graph through the PJRT
+//!   runtime ([`super::CompiledModel`]); requires on-disk artifacts from
+//!   `make artifacts` and a real `xla` crate behind [`super::Runtime`].
+//! * [`NativeBackend`] — the pure-Rust batched quantized CNN
+//!   ([`QuantCnn::forward_batch`] over the blocked LUT-GEMM kernel);
+//!   needs **no artifacts and no PJRT**, so the full serving stack
+//!   (admission → batcher → execute → respond) runs anywhere the crate
+//!   compiles.
+//!
+//! ## Batching invariants (every backend must uphold)
+//!
+//! 1. `infer_batch` accepts `1..=max_batch()` images of exactly 256 bytes
+//!    and returns exactly one 10-logit row per input, in input order.
+//! 2. A request's logits are independent of its batchmates: padding a
+//!    partial batch must never leak into real rows (the PJRT path pads
+//!    with zero images and discards the padded rows; the native path has
+//!    no padding at all).
+//! 3. Determinism per backend: the native path is bit-identical to the
+//!    scalar [`QuantCnn::forward`] reference for any batch size and
+//!    thread count; the PJRT path is numerically equal to it within fp
+//!    tolerance (`rust/tests/serving.rs::pjrt_and_native_forward_agree`).
+//!
+//! ## Dispatch rules
+//!
+//! Workers each own one backend instance — PJRT executables are not
+//! shareable across threads, and the native path keeps per-worker scratch
+//! — so the server is handed a [`BackendFactory`] and calls
+//! [`BackendFactory::create`] once per variant worker, on the worker
+//! thread. `openacm serve --backend auto` (the default) picks PJRT when
+//! artifacts exist and the native backend otherwise; `--backend pjrt` /
+//! `--backend native` force the choice ([`BackendChoice`]).
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use super::artifacts::ArtifactStore;
+use super::client;
+use crate::mult::behavioral::{int8_lut, paper_families};
+use crate::nn::eval::argmax;
+use crate::nn::model::{synthetic_images, QuantCnn};
+use crate::util::npy::NpyArray;
+
+/// Number of logits per image (the 10-class quantized CNN).
+pub const LOGITS: usize = 10;
+/// Image payload size in bytes (16×16 grayscale).
+pub const IMAGE_BYTES: usize = 256;
+
+/// A batch-classification engine owned by one batcher worker.
+pub trait Backend: Send {
+    /// Short label for logs and metrics ("native" / "pjrt").
+    fn name(&self) -> &'static str;
+
+    /// Largest batch one `infer_batch` call accepts.
+    fn max_batch(&self) -> usize;
+
+    /// Classify `images` (each 256 bytes); returns one 10-logit row per
+    /// image, in input order.
+    fn infer_batch(&mut self, images: &[&[u8]]) -> Result<Vec<Vec<f32>>>;
+}
+
+/// Per-variant constructor for [`Backend`] instances. Shared by the
+/// server handle and every worker thread.
+pub trait BackendFactory: Send + Sync {
+    /// Backend label, e.g. for the boot banner.
+    fn backend_name(&self) -> &'static str;
+
+    /// The multiplier variants this factory can serve (route keys).
+    fn variants(&self) -> Vec<String>;
+
+    /// Upper bound on any worker's batch (the server clamps its batching
+    /// policy to this).
+    fn max_batch(&self) -> usize;
+
+    /// Build the backend for one variant. Called on the worker thread.
+    fn create(&self, variant: &str) -> Result<Box<dyn Backend>>;
+}
+
+/// Which backend `openacm serve` / the e2e example should use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendChoice {
+    /// PJRT when artifacts exist, native otherwise.
+    Auto,
+    Native,
+    Pjrt,
+}
+
+impl BackendChoice {
+    pub fn parse(s: &str) -> Result<BackendChoice> {
+        match s {
+            "auto" => Ok(BackendChoice::Auto),
+            "native" => Ok(BackendChoice::Native),
+            "pjrt" => Ok(BackendChoice::Pjrt),
+            other => bail!("unknown backend {other:?} (expected native|pjrt|auto)"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Native backend
+// ---------------------------------------------------------------------------
+
+/// Artifact-free backend: the batched Rust-native quantized CNN.
+pub struct NativeBackend {
+    cnn: Arc<QuantCnn>,
+    lut: Arc<Vec<i32>>,
+    threads: usize,
+    max_batch: usize,
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn infer_batch(&mut self, images: &[&[u8]]) -> Result<Vec<Vec<f32>>> {
+        if images.len() > self.max_batch {
+            bail!(
+                "batch of {} exceeds native backend capacity {}",
+                images.len(),
+                self.max_batch
+            );
+        }
+        for (i, img) in images.iter().enumerate() {
+            if img.len() != IMAGE_BYTES {
+                bail!("image {i} has {} bytes, want {IMAGE_BYTES}", img.len());
+            }
+        }
+        Ok(self.cnn.forward_batch(&self.lut, images, self.threads))
+    }
+}
+
+/// Builds [`NativeBackend`]s: one shared quantized model + one LUT per
+/// variant.
+pub struct NativeFactory {
+    cnn: Arc<QuantCnn>,
+    luts: BTreeMap<String, Arc<Vec<i32>>>,
+    max_batch: usize,
+    threads: usize,
+}
+
+impl NativeFactory {
+    /// From explicit parts. `threads` is the intra-batch GEMM parallelism
+    /// *per worker* (1 = serial, deterministic output either way).
+    pub fn new(
+        cnn: QuantCnn,
+        luts: BTreeMap<String, Vec<i32>>,
+        max_batch: usize,
+        threads: usize,
+    ) -> NativeFactory {
+        NativeFactory {
+            cnn: Arc::new(cnn),
+            luts: luts.into_iter().map(|(k, v)| (k, Arc::new(v))).collect(),
+            max_batch: max_batch.max(1),
+            threads: threads.max(1),
+        }
+    }
+
+    /// Real weights + real LUTs from the AOT artifact bundle, executed
+    /// natively (no PJRT anywhere).
+    pub fn from_artifacts(
+        store: &ArtifactStore,
+        max_batch: usize,
+        threads: usize,
+    ) -> Result<NativeFactory> {
+        let cnn = QuantCnn::load(&store.dir).context("loading quantized weights")?;
+        let luts = store
+            .luts
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect();
+        Ok(NativeFactory::new(cnn, luts, max_batch, threads))
+    }
+
+    /// Fully artifact-free: behavioral LUTs for the four paper families
+    /// computed in-process, around the given model (typically
+    /// [`QuantCnn::random`]).
+    pub fn paper_default(cnn: QuantCnn, max_batch: usize, threads: usize) -> NativeFactory {
+        let luts = paper_families()
+            .into_iter()
+            .map(|(name, family)| (name, int8_lut(&family)))
+            .collect();
+        NativeFactory::new(cnn, luts, max_batch, threads)
+    }
+
+    /// The LUT behind one variant (for reference checks in tests).
+    pub fn lut(&self, variant: &str) -> Option<&Arc<Vec<i32>>> {
+        self.luts.get(variant)
+    }
+
+    /// The shared model.
+    pub fn model(&self) -> &Arc<QuantCnn> {
+        &self.cnn
+    }
+}
+
+impl BackendFactory for NativeFactory {
+    fn backend_name(&self) -> &'static str {
+        "native"
+    }
+
+    fn variants(&self) -> Vec<String> {
+        self.luts.keys().cloned().collect()
+    }
+
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn create(&self, variant: &str) -> Result<Box<dyn Backend>> {
+        let lut = self
+            .luts
+            .get(variant)
+            .with_context(|| format!("no LUT for variant {variant:?}"))?;
+        Ok(Box::new(NativeBackend {
+            cnn: Arc::clone(&self.cnn),
+            lut: Arc::clone(lut),
+            threads: self.threads,
+            max_batch: self.max_batch,
+        }))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT backend
+// ---------------------------------------------------------------------------
+
+/// One worker's compiled PJRT executable + resident operands.
+pub struct PjrtBackend {
+    /// Keeps the PJRT client alive for the executable's lifetime.
+    _runtime: super::Runtime,
+    model: super::CompiledModel,
+    lut_lit: xla::Literal,
+    weight_lits: Vec<xla::Literal>,
+    /// The static batch the graph was lowered with (pad target).
+    batch: usize,
+}
+
+impl PjrtBackend {
+    /// Compile the graph and stage the LUT + weight operands.
+    pub fn new(
+        hlo: &std::path::Path,
+        weights: &[NpyArray],
+        lut: &[i32],
+        batch: usize,
+    ) -> Result<PjrtBackend> {
+        let runtime = super::Runtime::cpu()?;
+        let model = runtime.compile_hlo_text(hlo)?;
+        let lut_lit = client::literal_i32(&[65536], lut)?;
+        let weight_lits = client::weight_literals(weights)?;
+        Ok(PjrtBackend {
+            _runtime: runtime,
+            model,
+            lut_lit,
+            weight_lits,
+            batch: batch.max(1),
+        })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn max_batch(&self) -> usize {
+        self.batch
+    }
+
+    fn infer_batch(&mut self, images: &[&[u8]]) -> Result<Vec<Vec<f32>>> {
+        let n = images.len();
+        if n > self.batch {
+            bail!("batch of {n} exceeds the graph's static batch {}", self.batch);
+        }
+        // Pad to the static batch with zero images; padded rows are
+        // computed and discarded (invariant 2: no leakage into real rows).
+        let b = self.batch;
+        let mut px = vec![0i32; b * IMAGE_BYTES];
+        for (j, img) in images.iter().enumerate() {
+            if img.len() != IMAGE_BYTES {
+                bail!("image {j} has {} bytes, want {IMAGE_BYTES}", img.len());
+            }
+            for (k, &p) in img.iter().enumerate() {
+                px[j * IMAGE_BYTES + k] = p as i32;
+            }
+        }
+        let img_lit = client::literal_i32(&[b, 16, 16], &px)?;
+        let mut args = vec![img_lit, self.lut_lit.clone()];
+        args.extend(self.weight_lits.iter().cloned());
+        let out = self.model.run_f32(&args, b * LOGITS)?;
+        Ok((0..n).map(|j| out[j * LOGITS..(j + 1) * LOGITS].to_vec()).collect())
+    }
+}
+
+/// Builds [`PjrtBackend`]s from the artifact bundle; compilation happens
+/// on each worker thread (executables are per-thread).
+pub struct PjrtFactory {
+    hlo: PathBuf,
+    weights: Vec<NpyArray>,
+    luts: BTreeMap<String, Arc<Vec<i32>>>,
+    batch: usize,
+}
+
+impl PjrtFactory {
+    pub fn from_artifacts(store: &ArtifactStore) -> PjrtFactory {
+        PjrtFactory {
+            hlo: store.model_hlo.clone(),
+            weights: store.weights.clone(),
+            luts: store
+                .luts
+                .iter()
+                .map(|(k, v)| (k.clone(), Arc::new(v.clone())))
+                .collect(),
+            batch: store.batch,
+        }
+    }
+}
+
+impl BackendFactory for PjrtFactory {
+    fn backend_name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn variants(&self) -> Vec<String> {
+        self.luts.keys().cloned().collect()
+    }
+
+    fn max_batch(&self) -> usize {
+        self.batch
+    }
+
+    fn create(&self, variant: &str) -> Result<Box<dyn Backend>> {
+        let lut = self
+            .luts
+            .get(variant)
+            .with_context(|| format!("no LUT for variant {variant:?}"))?;
+        Ok(Box::new(PjrtBackend::new(
+            &self.hlo,
+            &self.weights,
+            lut,
+            self.batch,
+        )?))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Serving workloads + backend selection
+// ---------------------------------------------------------------------------
+
+/// The evaluation workload a serving demo drives requests from: either a
+/// snapshot of the artifact dataset, or — with no artifacts anywhere —
+/// deterministic synthetic images labeled by the *exact* variant of the
+/// served model, so each approximate variant's "Top-1" reads as agreement
+/// with exact-multiplier inference.
+pub struct ServingWorkload {
+    /// `n_images * 256` bytes, 16×16 each.
+    pub images: Vec<u8>,
+    pub n_images: usize,
+    /// Ground-truth (artifact dataset) or exact-forward-argmax (synthetic)
+    /// label per image.
+    pub labels: Vec<usize>,
+}
+
+impl ServingWorkload {
+    /// Snapshot the artifact dataset as a serving workload.
+    pub fn from_store(store: &ArtifactStore) -> ServingWorkload {
+        ServingWorkload {
+            images: store.images.clone(),
+            n_images: store.n_images,
+            labels: store.labels.clone(),
+        }
+    }
+
+    /// One image as a 256-byte slice.
+    pub fn image(&self, idx: usize) -> &[u8] {
+        &self.images[idx * IMAGE_BYTES..(idx + 1) * IMAGE_BYTES]
+    }
+}
+
+/// Build the artifact-free native serving setup: a deterministic random
+/// quantized CNN, behavioral LUTs for the paper families, and a labeled
+/// synthetic workload (labels via the shared [`argmax`], the same one the
+/// server applies to responses).
+pub fn synthetic_serving_setup(
+    n_images: usize,
+    seed: u64,
+    max_batch: usize,
+    threads: usize,
+) -> (NativeFactory, ServingWorkload) {
+    let factory = NativeFactory::paper_default(QuantCnn::random(seed), max_batch, threads);
+    let images = synthetic_images(n_images, seed ^ 0x5EED_1A6E);
+    let exact = factory
+        .lut("exact")
+        .expect("paper families always include exact");
+    let views: Vec<&[u8]> = images.chunks(IMAGE_BYTES).collect();
+    let labels = factory
+        .model()
+        .forward_batch(exact, &views, threads)
+        .iter()
+        .map(|logits| argmax(logits))
+        .collect();
+    (
+        factory,
+        ServingWorkload {
+            images,
+            n_images,
+            labels,
+        },
+    )
+}
+
+/// Resolve `--backend native|pjrt|auto` against what is on disk in `dir`
+/// into a ready factory + the workload to drive it with — the one
+/// dispatch-rule implementation shared by `openacm serve` and
+/// `examples/e2e_serving.rs`. Prints a one-line notice when falling back
+/// to the synthetic workload.
+///
+/// `threads` is the machine-wide parallelism budget: since the server
+/// runs one batcher worker per variant and all variants serve
+/// concurrently, each native worker gets `threads / variant-count`
+/// intra-batch GEMM threads (min 1) instead of oversubscribing every
+/// core per worker.
+pub fn select_backend(
+    choice: BackendChoice,
+    dir: &Path,
+    max_batch: usize,
+    threads: usize,
+    seed: u64,
+) -> Result<(Arc<dyn BackendFactory>, ServingWorkload)> {
+    let have_artifacts = ArtifactStore::exists(dir);
+    match (choice, have_artifacts) {
+        (BackendChoice::Pjrt, false) => bail!(
+            "--backend pjrt needs artifacts in {} — run `make artifacts` \
+             (or use --backend native)",
+            dir.display()
+        ),
+        (BackendChoice::Pjrt | BackendChoice::Auto, true) => {
+            let store = ArtifactStore::load(dir)?;
+            let workload = ServingWorkload::from_store(&store);
+            Ok((Arc::new(PjrtFactory::from_artifacts(&store)), workload))
+        }
+        (BackendChoice::Native, true) => {
+            let store = ArtifactStore::load(dir)?;
+            let workload = ServingWorkload::from_store(&store);
+            let per_worker = (threads / store.luts.len().max(1)).max(1);
+            Ok((
+                Arc::new(NativeFactory::from_artifacts(&store, max_batch, per_worker)?),
+                workload,
+            ))
+        }
+        (BackendChoice::Native | BackendChoice::Auto, false) => {
+            println!(
+                "no artifacts in {} — native backend on a synthetic workload \
+                 (labels = exact-variant predictions)",
+                dir.display()
+            );
+            // Four paper-family variants share the budget.
+            let per_worker = (threads / paper_families().len().max(1)).max(1);
+            let (factory, workload) = synthetic_serving_setup(256, seed, max_batch, per_worker);
+            Ok((Arc::new(factory), workload))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_choice_parses() {
+        assert_eq!(BackendChoice::parse("auto").unwrap(), BackendChoice::Auto);
+        assert_eq!(BackendChoice::parse("native").unwrap(), BackendChoice::Native);
+        assert_eq!(BackendChoice::parse("pjrt").unwrap(), BackendChoice::Pjrt);
+        assert!(BackendChoice::parse("tpu").is_err());
+    }
+
+    #[test]
+    fn native_factory_serves_requested_variants() {
+        let mut luts = BTreeMap::new();
+        luts.insert("exact".to_string(), vec![0i32; 65536]);
+        let f = NativeFactory::new(QuantCnn::random(1), luts, 8, 1);
+        assert_eq!(f.variants(), vec!["exact".to_string()]);
+        assert_eq!(f.max_batch(), 8);
+        let mut be = f.create("exact").unwrap();
+        assert_eq!(be.name(), "native");
+        assert_eq!(be.max_batch(), 8);
+        assert!(f.create("nope").is_err());
+        // All-zero LUT → every product 0 → logits are exactly the biases.
+        let img = vec![0u8; IMAGE_BYTES];
+        let rows = be.infer_batch(&[img.as_slice(), img.as_slice()]).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].len(), LOGITS);
+        assert_eq!(rows[0], rows[1]);
+    }
+
+    #[test]
+    fn native_backend_rejects_bad_shapes() {
+        let mut luts = BTreeMap::new();
+        luts.insert("exact".to_string(), vec![0i32; 65536]);
+        let f = NativeFactory::new(QuantCnn::random(1), luts, 2, 1);
+        let mut be = f.create("exact").unwrap();
+        let img = vec![0u8; IMAGE_BYTES];
+        let short = vec![0u8; 100];
+        assert!(
+            be.infer_batch(&[img.as_slice(), img.as_slice(), img.as_slice()])
+                .is_err(),
+            "over capacity"
+        );
+        assert!(be.infer_batch(&[short.as_slice()]).is_err(), "truncated image");
+        assert!(be.infer_batch(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn synthetic_workload_is_deterministic_and_labeled() {
+        let (f1, w1) = synthetic_serving_setup(6, 42, 8, 1);
+        let (_, w2) = synthetic_serving_setup(6, 42, 8, 2);
+        assert_eq!(w1.images, w2.images);
+        assert_eq!(w1.labels, w2.labels);
+        assert_eq!(w1.n_images, 6);
+        assert_eq!(w1.labels.len(), 6);
+        assert!(w1.labels.iter().all(|&l| l < LOGITS));
+        // Labels really are the exact variant's argmax.
+        let mut be = f1.create("exact").unwrap();
+        let rows = be.infer_batch(&[w1.image(3)]).unwrap();
+        assert_eq!(argmax(&rows[0]), w1.labels[3]);
+    }
+
+    #[test]
+    fn select_backend_dispatch_rules_without_artifacts() {
+        let nowhere = Path::new("/nonexistent/openacm-artifacts");
+        // pjrt without artifacts fails fast with an actionable message.
+        let err = select_backend(BackendChoice::Pjrt, nowhere, 8, 1, 1).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+        // native and auto both fall back to the synthetic setup.
+        for choice in [BackendChoice::Native, BackendChoice::Auto] {
+            let (factory, workload) = select_backend(choice, nowhere, 8, 1, 1).unwrap();
+            assert_eq!(factory.backend_name(), "native");
+            assert_eq!(workload.n_images, 256);
+            assert_eq!(factory.variants().len(), 4);
+        }
+    }
+}

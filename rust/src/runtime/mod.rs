@@ -1,14 +1,27 @@
-//! PJRT runtime: loads the HLO-text artifacts produced by the Python
-//! build path (`python/compile/aot.py`) and executes them on the CPU PJRT
-//! client. This is the only module that touches the `xla` crate; Python is
-//! never on the request path (the artifacts are ahead-of-time compiled).
+//! Model execution runtimes and the serving [`Backend`] abstraction.
 //!
-//! Interchange is HLO *text*, not serialized protos — jax ≥ 0.5 emits
-//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids (see /opt/xla-example/README.md).
+//! * [`client`] / [`artifacts`] — the PJRT path: loads the HLO-text
+//!   artifacts produced by the Python build path
+//!   (`python/compile/aot.py`) and executes them on the CPU PJRT client.
+//!   This is the only module that touches the `xla` crate; Python is
+//!   never on the request path (the artifacts are ahead-of-time
+//!   compiled). Interchange is HLO *text*, not serialized protos — jax
+//!   ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
+//!   rejects; the text parser reassigns ids (see
+//!   /opt/xla-example/README.md).
+//! * [`backend`] — the [`Backend`] trait the coordinator's batcher
+//!   workers execute through, with a PJRT implementation and a
+//!   pure-Rust [`NativeBackend`] (batched blocked LUT-GEMM) that needs
+//!   no artifacts at all. See the module docs for the dispatch rules and
+//!   the batching invariants every backend must uphold.
 
 pub mod client;
 pub mod artifacts;
+pub mod backend;
 
 pub use artifacts::ArtifactStore;
+pub use backend::{
+    Backend, BackendChoice, BackendFactory, NativeBackend, NativeFactory, PjrtBackend,
+    PjrtFactory, ServingWorkload,
+};
 pub use client::{CompiledModel, Runtime};

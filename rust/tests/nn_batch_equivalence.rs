@@ -1,0 +1,117 @@
+//! Bit-exactness of the batched inference path against the scalar
+//! reference, across every paper multiplier family, batch sizes
+//! {1, 3, 32, 64}, thread counts, and GEMM shapes that are deliberately
+//! not multiples of the kernel tiles.
+//!
+//! These are the invariants the serving stack leans on: a batched
+//! response must be THE SAME BITS the per-image evaluator would have
+//! produced, so accuracy sweeps, the soak suite and the coordinator can
+//! use `forward_batch` interchangeably with `forward`.
+
+use openacm::config::spec::MultFamily;
+use openacm::mult::behavioral::{int8_lut, paper_families};
+use openacm::nn::model::{synthetic_images, QuantCnn};
+use openacm::nn::quant::{lut_matmul, lut_matmul_batched};
+use openacm::util::rng::Pcg32;
+
+#[test]
+fn forward_batch_bit_identical_to_forward_for_every_family() {
+    let cnn = QuantCnn::random(5);
+    for (name, family) in paper_families() {
+        let lut = int8_lut(&family);
+        for &bsz in &[1usize, 3, 32, 64] {
+            let images = synthetic_images(bsz, 0xBA7C + bsz as u64);
+            let views: Vec<&[u8]> = images.chunks(256).collect();
+            let reference: Vec<Vec<f32>> = views.iter().map(|v| cnn.forward(&lut, v)).collect();
+            for &threads in &[1usize, 3] {
+                let batched = cnn.forward_batch(&lut, &views, threads);
+                assert_eq!(batched.len(), bsz);
+                for (i, row) in batched.iter().enumerate() {
+                    assert_eq!(
+                        row.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                        reference[i].iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                        "family {name} batch {bsz} threads {threads} image {i}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn blocked_gemm_bit_identical_across_non_tile_multiple_shapes() {
+    // TILE_M = 32, TILE_K = 128, TILE_N = 64 — every shape here straddles
+    // at least one tile boundary or stays strictly inside one.
+    let shapes: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (3, 5, 2),
+        (31, 9, 8),
+        (33, 129, 17),
+        (40, 200, 65),
+        (196, 72, 16),
+        (64, 128, 64), // exact tile multiples too
+    ];
+    for (lut_name, family) in [
+        ("exact", MultFamily::Exact),
+        ("logour", MultFamily::LogOur),
+    ] {
+        let lut = int8_lut(&family);
+        let mut rng = Pcg32::new(99);
+        for &(m, k, n) in shapes {
+            // Full int8 range including -128 to stress the LUT indexing.
+            let a: Vec<i8> = (0..m * k)
+                .map(|_| (rng.below(256) as i64 - 128) as i8)
+                .collect();
+            let b: Vec<i8> = (0..k * n)
+                .map(|_| (rng.below(256) as i64 - 128) as i8)
+                .collect();
+            let reference = lut_matmul(&lut, &a, &b, m, k, n, 0.03, 0.07);
+            for threads in [1usize, 4] {
+                let fast = lut_matmul_batched(&lut, &a, &b, m, k, n, 0.03, 0.07, threads);
+                assert_eq!(
+                    fast.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    reference.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "{lut_name} {m}x{k}x{n} threads {threads}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn blocked_gemm_zero_heavy_rows_match_reference() {
+    // Post-ReLU activations are zero-heavy; the kernel's zero-row skip
+    // must be a pure no-op semantically for LUTs whose zero row is zero
+    // (exact) AND stay disabled for LUTs where it is not.
+    let lut = int8_lut(&MultFamily::Exact);
+    let mut rng = Pcg32::new(7);
+    let (m, k, n) = (50, 70, 12);
+    let a: Vec<i8> = (0..m * k)
+        .map(|_| {
+            if rng.below(2) == 0 {
+                0
+            } else {
+                (rng.below(255) as i64 - 127) as i8
+            }
+        })
+        .collect();
+    let b: Vec<i8> = (0..k * n)
+        .map(|_| (rng.below(255) as i64 - 127) as i8)
+        .collect();
+    let reference = lut_matmul(&lut, &a, &b, m, k, n, 0.01, 0.02);
+    let fast = lut_matmul_batched(&lut, &a, &b, m, k, n, 0.01, 0.02, 2);
+    assert_eq!(fast, reference);
+}
+
+#[test]
+fn forward_batch_rows_independent_of_batchmates() {
+    // The same image must produce the same bits no matter what else is in
+    // the batch (the "no padding leakage" serving invariant).
+    let cnn = QuantCnn::random(13);
+    let lut = int8_lut(&MultFamily::Mitchell);
+    let images = synthetic_images(9, 77);
+    let views: Vec<&[u8]> = images.chunks(256).collect();
+    let solo = cnn.forward_batch(&lut, &views[4..5], 1);
+    let full = cnn.forward_batch(&lut, &views, 2);
+    assert_eq!(solo[0], full[4]);
+}

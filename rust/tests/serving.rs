@@ -1,17 +1,193 @@
-//! Integration tests over the AOT artifacts: PJRT execution of the JAX
-//! graph, native-vs-PJRT agreement, and the full coordinator (routing +
-//! dynamic batching) under concurrent load.
+//! Serving integration tests, in two tiers:
 //!
-//! All tests skip gracefully when `make artifacts` has not run.
+//! * **Native-backend suite** (always runs, zero artifacts): the full
+//!   coordinator — admission → batcher → execute → respond — over the
+//!   batched Rust-native quantized CNN, including a 500-request soak with
+//!   exact accounting, per-variant FIFO, and bit-exact logits against the
+//!   scalar reference forward.
+//! * **PJRT suite** (skips gracefully when `make artifacts` has not run):
+//!   PJRT execution of the JAX graph, native-vs-PJRT agreement, and the
+//!   coordinator over the compiled executable.
 
+use std::collections::{BTreeMap, HashMap};
 use std::path::Path;
 use std::sync::mpsc::channel;
+use std::sync::Arc;
 use std::time::Duration;
 
+use openacm::config::spec::MultFamily;
 use openacm::coordinator::batcher::BatchPolicy;
 use openacm::coordinator::server::{InferenceServer, Request};
-use openacm::nn::model::QuantCnn;
-use openacm::runtime::{client, ArtifactStore, Runtime};
+use openacm::mult::behavioral::int8_lut;
+use openacm::nn::eval::argmax;
+use openacm::nn::model::{synthetic_images, QuantCnn};
+use openacm::runtime::{client, ArtifactStore, NativeFactory, Runtime};
+
+// ---------------------------------------------------------------------------
+// Native-backend suite (no artifacts, no PJRT)
+// ---------------------------------------------------------------------------
+
+/// The soak's three serving variants.
+const SOAK_FAMILIES: [(&str, MultFamily); 3] = [
+    ("exact", MultFamily::Exact),
+    ("logour", MultFamily::LogOur),
+    ("lm", MultFamily::Mitchell),
+];
+
+#[test]
+fn native_soak_500_requests_accounting_fifo_and_exact_logits() {
+    const N: usize = 500;
+    let cnn = QuantCnn::random(11);
+    let luts: BTreeMap<String, Vec<i32>> = SOAK_FAMILIES
+        .iter()
+        .map(|(name, fam)| (name.to_string(), int8_lut(fam)))
+        .collect();
+    let variant_of = |seq: usize| SOAK_FAMILIES[seq % SOAK_FAMILIES.len()].0;
+
+    // One distinct deterministic image per request, and its reference
+    // logits from the scalar forward (the bit-exactness oracle). The
+    // logits' bit patterns key responses back to their request.
+    let images: Vec<Vec<u8>> = (0..N)
+        .map(|seq| synthetic_images(1, 0x50AC + seq as u64))
+        .collect();
+    let mut expect: BTreeMap<&str, HashMap<Vec<u32>, usize>> = BTreeMap::new();
+    for seq in 0..N {
+        let v = variant_of(seq);
+        let logits = cnn.forward(&luts[v], &images[seq]);
+        let key: Vec<u32> = logits.iter().map(|x| x.to_bits()).collect();
+        let dup = expect.entry(v).or_default().insert(key, seq);
+        assert!(dup.is_none(), "reference logits collide — change the seed");
+    }
+
+    let server = InferenceServer::start_with_backend(
+        Arc::new(NativeFactory::new(cnn, luts, 32, 1)),
+        BatchPolicy {
+            max_batch: 32,
+            max_wait: Duration::from_millis(1),
+        },
+        64, // small enough that a 500-burst may shed; accounting must hold
+    )
+    .unwrap();
+    assert_eq!(server.backend, "native");
+
+    // Burst all 500 submissions. Responses for one variant funnel through
+    // ONE shared channel, so arrival order is exactly the worker's
+    // completion order.
+    let chans: BTreeMap<&str, _> = SOAK_FAMILIES
+        .iter()
+        .map(|(name, _)| (*name, channel()))
+        .collect();
+    let mut admitted: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+    let mut shed = 0usize;
+    for (seq, image) in images.iter().enumerate() {
+        let v = variant_of(seq);
+        match server.submit(Request {
+            image: image.clone(),
+            variant: v.to_string(),
+            respond: chans[v].0.clone(),
+        }) {
+            Ok(()) => admitted.entry(v).or_default().push(seq),
+            Err(e) => {
+                assert!(e.to_string().contains("shed"), "unexpected submit error: {e:#}");
+                shed += 1;
+            }
+        }
+    }
+    let admitted_total: usize = admitted.values().map(|s| s.len()).sum();
+    assert_eq!(
+        admitted_total + shed,
+        N,
+        "shed ({shed}) + admitted ({admitted_total}) must equal submitted ({N})"
+    );
+    assert_eq!(server.admission.shed_total(), shed);
+
+    // Drain: every admitted request must produce exactly one response, in
+    // FIFO order per variant, with logits bit-identical to the reference.
+    for (v, seqs) in &admitted {
+        let rx = &chans[v].1;
+        let mut got = Vec::with_capacity(seqs.len());
+        for i in 0..seqs.len() {
+            let resp = rx
+                .recv_timeout(Duration::from_secs(60))
+                .unwrap_or_else(|_| panic!("variant {v}: response {i}/{} lost", seqs.len()));
+            assert_eq!(resp.logits.len(), 10);
+            assert_eq!(
+                resp.predicted,
+                argmax(&resp.logits),
+                "predicted must be argmax of logits"
+            );
+            let key: Vec<u32> = resp.logits.iter().map(|x| x.to_bits()).collect();
+            let seq = *expect[v]
+                .get(&key)
+                .expect("delivered logits must bit-match a reference forward");
+            got.push(seq);
+        }
+        assert_eq!(&got, seqs, "variant {v}: FIFO violated, or a response lost/duplicated");
+        assert!(
+            rx.try_recv().is_err(),
+            "variant {v}: spurious extra response after all admitted were served"
+        );
+    }
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.completed, admitted_total as u64);
+    server.shutdown();
+}
+
+#[test]
+fn native_server_serves_all_paper_variants_without_artifacts() {
+    use openacm::runtime::backend::synthetic_serving_setup;
+    let (factory, workload) = synthetic_serving_setup(16, 42, 8, 1);
+    let server = InferenceServer::start_with_backend(
+        Arc::new(factory),
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+        },
+        4096,
+    )
+    .unwrap();
+    let variants = server.variants();
+    assert_eq!(
+        variants,
+        vec!["appro42".to_string(), "exact".into(), "lm".into(), "logour".into()],
+        "BTreeMap route order"
+    );
+    // The exact variant must reproduce the workload labels perfectly —
+    // they were defined as its own predictions.
+    for i in 0..workload.n_images {
+        let resp = server.infer(workload.image(i).to_vec(), "exact").unwrap();
+        assert_eq!(resp.predicted, workload.labels[i], "image {i}");
+    }
+    // Unknown variants still bounce with a useful error.
+    let (tx, _rx) = channel();
+    let err = server
+        .submit(Request {
+            image: vec![0; 256],
+            variant: "no-such-family".into(),
+            respond: tx,
+        })
+        .unwrap_err();
+    assert!(err.to_string().contains("unknown variant"));
+    // Malformed images are rejected at the door — they must never reach
+    // a batch, where they would sink their batchmates' responses too.
+    let (tx, _rx) = channel();
+    let err = server
+        .submit(Request {
+            image: vec![0; 100],
+            variant: "exact".into(),
+            respond: tx,
+        })
+        .unwrap_err();
+    assert!(err.to_string().contains("256"), "{err:#}");
+    // Well-formed traffic keeps flowing afterwards.
+    let resp = server.infer(workload.image(0).to_vec(), "exact").unwrap();
+    assert_eq!(resp.predicted, workload.labels[0]);
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// PJRT suite (needs `make artifacts`)
+// ---------------------------------------------------------------------------
 
 fn store() -> Option<ArtifactStore> {
     let dir = Path::new("artifacts");

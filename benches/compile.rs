@@ -1,0 +1,107 @@
+//! Cold-vs-warm accuracy-budgeted compile through the design-point store
+//! — the compile pass's headline numbers: a repeated compile must be
+//! served from memoized measurements at a wide margin, and the emitted
+//! plan must beat the all-exact baseline's energy within budget.
+//!
+//! ```text
+//! cargo bench --bench compile               # full candidate space
+//! OPENACM_SMOKE=1 cargo bench --bench compile   # CI smoke (2 fc layers)
+//! ```
+//!
+//! Writes `BENCH_compile.json` (per-case ns/iter, warm_over_cold, and the
+//! plan-vs-exact energy ratio) for the CI artifact trail.
+
+use openacm::bench::harness::{bench, black_box, BenchJson};
+use openacm::compile::search::{compile_budgeted, CalibrationSet, CompileOptions};
+use openacm::nn::model::QuantCnn;
+use openacm::store::DesignPointStore;
+use openacm::util::threadpool::ThreadPool;
+
+fn main() {
+    let smoke_env = std::env::var("OPENACM_SMOKE")
+        .map(|v| !v.is_empty() && v != "0" && !v.eq_ignore_ascii_case("false"))
+        .unwrap_or(false);
+    let smoke = smoke_env || std::env::args().any(|a| a == "--smoke");
+    let mut opts = if smoke {
+        CompileOptions::smoke(0.005)
+    } else {
+        CompileOptions::new(0.005)
+    };
+    opts.threads = ThreadPool::default_parallelism();
+    if !smoke {
+        opts.calib_n = 128;
+        opts.ppa_ops = 300;
+    }
+    let model = QuantCnn::random(opts.seed);
+    let calib = CalibrationSet::synthetic(&model, opts.calib_n, opts.seed, opts.threads);
+    let dir = std::env::temp_dir().join(format!("openacm_compile_bench_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    println!(
+        "compile cold-vs-warm: budget {:.2}%, {} calibration images, {} threads{}",
+        opts.budget_drop * 100.0,
+        calib.n,
+        opts.threads,
+        if smoke { " [smoke]" } else { "" }
+    );
+
+    let mut json = BenchJson::new("compile");
+
+    // Cold: every iteration starts from an empty store.
+    let cold = bench("budgeted compile (cold store)", 0, 2, || {
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = DesignPointStore::open(&dir).expect("open store");
+        black_box(compile_budgeted(&model, &calib, &opts, Some(&store)));
+    });
+    json.case(&cold);
+
+    // Warm: the store holds every measurement from the last cold run.
+    let warm = bench("budgeted compile (warm store)", 1, if smoke { 5 } else { 3 }, || {
+        let store = DesignPointStore::open(&dir).expect("open store");
+        black_box(compile_budgeted(&model, &calib, &opts, Some(&store)));
+    });
+    json.case(&warm);
+
+    let speedup = cold.mean_ns / warm.mean_ns;
+    println!("→ warm-store speedup over cold compile: {speedup:.1}x");
+    json.ratio("warm_over_cold", speedup);
+
+    // Verification pass: the warm compile must really be store-served and
+    // the plan must beat all-exact energy within the budget.
+    let store = DesignPointStore::open(&dir).expect("open store");
+    let before = store.stats();
+    let plan = compile_budgeted(&model, &calib, &opts, Some(&store));
+    let s = store.stats().since(&before);
+    println!(
+        "→ verification pass: {} hits / {} misses ({:.0}% served from store)",
+        s.hits,
+        s.misses,
+        s.hit_rate() * 100.0
+    );
+    assert!(
+        s.hit_rate() >= 0.9,
+        "warm compile only {:.0}% cached",
+        s.hit_rate() * 100.0
+    );
+    assert!(
+        plan.drop_vs_exact() <= opts.budget_drop + 1e-9,
+        "plan drop {} exceeds budget {}",
+        plan.drop_vs_exact(),
+        opts.budget_drop
+    );
+    println!(
+        "→ plan [{}]: drop {:.2}%, energy {:.1}% of exact",
+        plan.assignment_label(),
+        plan.drop_vs_exact() * 100.0,
+        (1.0 - plan.energy_saving()) * 100.0
+    );
+    json.ratio(
+        "plan_energy_over_exact",
+        plan.plan_energy_per_image_j / plan.exact_energy_per_image_j,
+    );
+
+    match json.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench json: {e}"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,87 @@
+//! Accuracy-budget sweep through the compile pass: compile the same
+//! model under a 0%, 0.5% and 2% top-1 drop budget and print each
+//! resulting per-layer multiplier assignment with its estimated energy
+//! saving vs the all-exact plan — the paper's "bridge application error
+//! tolerance to hardware automation" loop, end to end.
+//!
+//! All three compiles share one design-point store, so the sensitivity
+//! profile and every overlapping assignment measurement is paid for once
+//! (the budget sweep is mostly store-warm after the first compile).
+//!
+//! ```text
+//! cargo run --release --example compile_budget -- [--calib 256] [--seed N]
+//!     [--rows 16] [--smoke] [--no-cache] [--store DIR]
+//! ```
+
+use anyhow::Result;
+
+use openacm::bench::harness::{sci, Table};
+use openacm::compile::cli::print_plan;
+use openacm::compile::search::{compile_budgeted, CalibrationSet, CompileOptions};
+use openacm::nn::model::QuantCnn;
+use openacm::util::cli::Args;
+use openacm::util::threadpool::ThreadPool;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(false, &["no-cache", "smoke"])?;
+    let smoke = args.flag("smoke");
+    let budgets_pct = [0.0f64, 0.5, 2.0];
+    let threads = args.usize_or("threads", ThreadPool::default_parallelism())?;
+    let store = openacm::store::cli::store_from_args(&args)?;
+
+    let mut base = if smoke {
+        CompileOptions::smoke(0.0)
+    } else {
+        CompileOptions::new(0.0)
+    };
+    base.rows = args.usize_or("rows", base.rows)?;
+    base.calib_n = args.usize_or("calib", base.calib_n)?;
+    base.seed = args.u64_or("seed", base.seed)?;
+    base.threads = threads;
+
+    let model = QuantCnn::random(base.seed);
+    let calib = CalibrationSet::synthetic(&model, base.calib_n, base.seed, threads);
+    eprintln!(
+        "budget sweep over {:?}% on {} calibration images{}...",
+        budgets_pct,
+        calib.n,
+        if smoke { " [smoke]" } else { "" }
+    );
+
+    let mut summary = Table::new(
+        "accuracy budget → heterogeneous assignment",
+        &["Budget", "conv1", "conv2", "fc1", "fc2", "Drop", "Energy saving"],
+    );
+    for &pct in &budgets_pct {
+        let opts = CompileOptions {
+            budget_drop: pct / 100.0,
+            ..base.clone()
+        };
+        let mut plan = compile_budgeted(&model, &calib, &opts, store.as_ref());
+        plan.name = format!("sweep_b{pct}");
+
+        print_plan(&plan);
+        println!(
+            "  measured top-1 {:.4} vs exact {:.4} (drop {:.2}%), energy/image {} J vs {} J\n",
+            plan.plan_top1,
+            plan.exact_top1,
+            plan.drop_vs_exact() * 100.0,
+            sci(plan.plan_energy_per_image_j),
+            sci(plan.exact_energy_per_image_j)
+        );
+        summary.row(&[
+            format!("{pct}%"),
+            plan.layers[0].family.name(),
+            plan.layers[1].family.name(),
+            plan.layers[2].family.name(),
+            plan.layers[3].family.name(),
+            format!("{:.2}%", plan.drop_vs_exact() * 100.0),
+            format!("{:.1}%", plan.energy_saving() * 100.0),
+        ]);
+    }
+    summary.print();
+    if let Some(store) = &store {
+        println!("\nstore {}: {}", store.root().display(), store.stats().summary());
+    }
+    Ok(())
+}

@@ -1,0 +1,145 @@
+//! `openacm compile` — the accuracy-budgeted compiler pass.
+//!
+//! ```text
+//! openacm compile --spec specs/dcim16x8_appro42.toml --budget 0.5
+//!     [--calib N] [--seed N] [--threads N] [--out plan.acmplan]
+//!     [--artifacts DIR] [--store DIR | --no-cache] [--smoke]
+//! ```
+//!
+//! `--budget` is the allowed top-1 drop vs the all-exact baseline in
+//! percentage points (0.5 = 0.5%). The spec supplies the macro geometry
+//! behind the energy model; the quantized model comes from the AOT
+//! artifact bundle when present, else a deterministic synthetic model.
+//! `--smoke` runs the CI configuration: tiny calibration set, reduced
+//! candidate space, only the two fc layers searchable.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use super::plan::CompiledPlan;
+use super::search::{compile_budgeted, CalibrationSet, CompileOptions};
+use crate::bench::harness::{sci, Table};
+use crate::config::toml::TomlDoc;
+use crate::nn::model::{QuantCnn, IMG};
+use crate::runtime::ArtifactStore;
+use crate::util::cli::Args;
+use crate::util::threadpool::ThreadPool;
+
+pub fn cmd_compile(args: &Args) -> Result<()> {
+    let budget_pct = args.f64_or("budget", 0.5)?;
+    if !(0.0..=100.0).contains(&budget_pct) {
+        bail!("--budget is a top-1 drop in percentage points (0..=100), got {budget_pct}");
+    }
+    let smoke = args.flag("smoke");
+    let mut opts = if smoke {
+        CompileOptions::smoke(budget_pct / 100.0)
+    } else {
+        CompileOptions::new(budget_pct / 100.0)
+    };
+
+    let (spec_name, rows) = match args.get("spec") {
+        Some(path) => {
+            let spec = TomlDoc::load(Path::new(path))?
+                .to_macro_spec()
+                .with_context(|| format!("loading spec {path}"))?;
+            if spec.mult.bits != 8 {
+                bail!(
+                    "compile targets the int8 LUT datapath; spec {} is {}-bit \
+                     (use an 8-bit spec such as specs/dcim16x8_appro42.toml)",
+                    spec.name,
+                    spec.mult.bits
+                );
+            }
+            (spec.name, spec.sram.rows)
+        }
+        None => ("synthetic".to_string(), 16),
+    };
+    opts.rows = rows;
+    opts.calib_n = args.usize_or("calib", opts.calib_n)?;
+    opts.seed = args.u64_or("seed", opts.seed)?;
+    opts.threads = args.usize_or("threads", ThreadPool::default_parallelism())?;
+    let store = crate::store::cli::store_from_args(args)?;
+
+    // Real quantized weights AND the real labeled dataset when the AOT
+    // artifact bundle is on disk — the budget guarantee must be measured
+    // on the distribution the plan will serve, not on noise. Without
+    // artifacts: the deterministic synthetic model + exact-labeled
+    // synthetic images (same fallback as serving).
+    let artifacts = args
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(ArtifactStore::default_dir);
+    let (model, calib) = if ArtifactStore::exists(&artifacts) {
+        println!(
+            "model: quantized weights + calibration dataset from {}",
+            artifacts.display()
+        );
+        let bundle = ArtifactStore::load(&artifacts)?;
+        let model = QuantCnn::load(&artifacts)?;
+        let n = opts.calib_n.min(bundle.n_images);
+        let calib = CalibrationSet::from_parts(
+            bundle.images[..n * IMG * IMG].to_vec(),
+            bundle.labels[..n].to_vec(),
+        );
+        (model, calib)
+    } else {
+        println!(
+            "model: synthetic QuantCnn (seed {}) — no artifacts in {}",
+            opts.seed,
+            artifacts.display()
+        );
+        let model = QuantCnn::random(opts.seed);
+        let calib = CalibrationSet::synthetic(&model, opts.calib_n, opts.seed, opts.threads);
+        (model, calib)
+    };
+
+    println!(
+        "compiling {spec_name}: budget {budget_pct}% top-1 drop, {} calibration images{}",
+        calib.n,
+        if smoke { " [smoke]" } else { "" }
+    );
+    let t0 = Instant::now();
+    let mut plan = compile_budgeted(&model, &calib, &opts, store.as_ref());
+    plan.name = format!("{spec_name}_b{budget_pct}");
+    let elapsed = t0.elapsed();
+
+    print_plan(&plan);
+    println!(
+        "\ncompiled in {:.2}s: measured top-1 {:.4} (exact {:.4}, drop {:.2}% <= budget {budget_pct}%), \
+         energy/image {} J vs exact {} J ({:.1}% saving)",
+        elapsed.as_secs_f64(),
+        plan.plan_top1,
+        plan.exact_top1,
+        plan.drop_vs_exact() * 100.0,
+        sci(plan.plan_energy_per_image_j),
+        sci(plan.exact_energy_per_image_j),
+        plan.energy_saving() * 100.0
+    );
+
+    let out = PathBuf::from(args.str_or("out", "compiled_plan.acmplan"));
+    plan.save(&out)?;
+    println!("wrote plan {}", out.display());
+    if let Some(store) = &store {
+        println!("store {}: {}", store.root().display(), store.stats().summary());
+    }
+    Ok(())
+}
+
+/// Print a plan's per-layer assignment table.
+pub fn print_plan(plan: &CompiledPlan) {
+    let mut t = Table::new(
+        &format!("compiled plan {} (budget {:.2}%)", plan.name, plan.budget_drop * 100.0),
+        &["Layer", "Multiplier", "Energy/op (J)", "MACs/image", "Solo drop"],
+    );
+    for l in &plan.layers {
+        t.row(&[
+            l.layer.clone(),
+            l.family.name(),
+            sci(l.energy_per_op_j),
+            l.macs_per_image.to_string(),
+            format!("{:.2}%", l.solo_drop * 100.0),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,33 @@
+//! The accuracy-budgeted compiler pass (the paper's §III-A promise made
+//! executable): given a quantized model and a top-1 accuracy budget,
+//! search **per-layer** heterogeneous multiplier assignments over the
+//! full `mult::` family space and emit a versioned, checksummed
+//! [`CompiledPlan`] artifact that the serving stack loads and executes
+//! directly.
+//!
+//! * [`search`] — the optimizer: per-layer sensitivity profiling, greedy
+//!   energy descent with true-accuracy validation, pairwise-swap local
+//!   refinement; every measurement memoized in the design-point store
+//!   (`model hash × assignment × calibration hash`), so repeated compiles
+//!   and budget sweeps are store-warm.
+//! * [`plan`] — the `.acmplan` artifact: per-layer multiplier config +
+//!   energy/MAC bookkeeping + baseline/plan accuracy, with magic/version/
+//!   checksum framing; [`CompiledPlan::build_luts`] reconstructs the
+//!   bit-identical per-layer LUTs on load.
+//! * [`cli`] — `openacm compile`.
+//!
+//! Execution: [`crate::nn::model::QuantCnn::forward_batch_hetero`]
+//! dispatches each layer through its own LUT, and
+//! [`crate::runtime::NativeFactory::add_plan`] registers a plan as a
+//! serving variant, so a compiled heterogeneous design round-trips
+//! through the coordinator with logits bit-matching a direct forward.
+
+pub mod cli;
+pub mod plan;
+pub mod search;
+
+pub use plan::{CompiledPlan, LayerPlan, PlanLuts, PLAN_VERSION};
+pub use search::{
+    compile_budgeted, candidate_space, model_content_hash, CalibrationSet, Candidate,
+    CompileOptions, Compiler,
+};

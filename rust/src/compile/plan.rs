@@ -1,0 +1,449 @@
+//! The compiled-plan artifact: a versioned, checksummed, per-layer
+//! heterogeneous multiplier assignment that the serving stack loads and
+//! executes directly.
+//!
+//! On-disk layout of one `.acmplan` file (all integers little-endian,
+//! floats as exact bit patterns — a save/load round-trip is bit-identical):
+//!
+//! ```text
+//! magic     8 B   "OACMPLAN"
+//! version   4 B   PLAN_VERSION (LE) — mismatches are a hard load error
+//! length    8 B   payload byte count
+//! payload   N B   plan body (name, budget, hashes, baseline + plan
+//!                 accuracy/energy, one entry per layer)
+//! checksum  8 B   checksum64 over everything above
+//! ```
+//!
+//! The plan stores each layer's multiplier *configuration*, not its LUT:
+//! LUTs are pure functions of the family ([`int8_lut`]), so
+//! [`CompiledPlan::build_luts`] reconstructs bit-identical tables on load
+//! and the artifact stays a few hundred bytes instead of megabytes.
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::config::spec::{CompressorKind, MultFamily};
+use crate::mult::behavioral::int8_lut;
+use crate::nn::model::{LayerLuts, LAYER_NAMES, N_LAYERS};
+use crate::store::key::checksum64;
+use crate::store::wire::{put_f64, put_str, put_u32, put_u64, Reader};
+
+pub const PLAN_MAGIC: &[u8; 8] = b"OACMPLAN";
+pub const PLAN_VERSION: u32 = 1;
+/// Plan file extension (`<name>.acmplan`).
+pub const PLAN_EXT: &str = "acmplan";
+
+/// One layer's slot in a compiled plan.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerPlan {
+    /// Layer name (matches [`LAYER_NAMES`]).
+    pub layer: String,
+    /// The multiplier configuration assigned to this layer.
+    pub family: MultFamily,
+    /// Energy per multiply for this configuration, J (PPA estimate).
+    pub energy_per_op_j: f64,
+    /// Multiply count of this layer per image.
+    pub macs_per_image: u64,
+    /// Solo sensitivity: measured top-1 drop when only this layer runs
+    /// this configuration (0 for exact; informational).
+    pub solo_drop: f64,
+}
+
+/// A compiled heterogeneous multiplier plan — the compile pass's output
+/// and the serving stack's input.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompiledPlan {
+    /// Human-readable plan name (spec name + budget by convention).
+    pub name: String,
+    /// Operand width of the LUT datapath (always 8 today).
+    pub bits: u32,
+    /// The accuracy budget the search ran under: allowed top-1 drop vs
+    /// the all-exact baseline, as a fraction (0.005 = 0.5%).
+    pub budget_drop: f64,
+    /// Content hash of the quantized model the plan was compiled for.
+    pub model_hash: u128,
+    /// Content hash of the calibration set.
+    pub calib_hash: u128,
+    /// Calibration-set size.
+    pub calib_n: u64,
+    /// Measured top-1 of the all-exact baseline on the calibration set.
+    pub exact_top1: f64,
+    /// Measured top-1 of this plan on the calibration set.
+    pub plan_top1: f64,
+    /// Energy-per-image estimate of the all-exact baseline, J.
+    pub exact_energy_per_image_j: f64,
+    /// Energy-per-image estimate of this plan, J.
+    pub plan_energy_per_image_j: f64,
+    /// Per-layer assignments, in [`LAYER_NAMES`] order.
+    pub layers: Vec<LayerPlan>,
+}
+
+impl CompiledPlan {
+    /// Measured top-1 drop vs the all-exact baseline (the quantity the
+    /// budget constrains).
+    pub fn drop_vs_exact(&self) -> f64 {
+        self.exact_top1 - self.plan_top1
+    }
+
+    /// Estimated energy saving vs all-exact, as a fraction (0.3 = 30%).
+    pub fn energy_saving(&self) -> f64 {
+        if self.exact_energy_per_image_j <= 0.0 {
+            return 0.0;
+        }
+        1.0 - self.plan_energy_per_image_j / self.exact_energy_per_image_j
+    }
+
+    /// Mean energy per multiply under this plan, J (plan energy spread
+    /// over the total MAC count) — the unit serving profiles report.
+    pub fn energy_per_op_j(&self) -> f64 {
+        let macs: u64 = self.layers.iter().map(|l| l.macs_per_image).sum();
+        if macs == 0 {
+            return 0.0;
+        }
+        self.plan_energy_per_image_j / macs as f64
+    }
+
+    /// Compact one-line assignment descriptor, e.g.
+    /// `exact,appro42[kongx4],log-our,exact`.
+    pub fn assignment_label(&self) -> String {
+        self.layers
+            .iter()
+            .map(|l| l.family.name())
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Build the per-layer LUTs this plan executes through. Deterministic
+    /// (LUTs are pure functions of the family), so a loaded plan serves
+    /// bit-identically to the plan the compiler measured.
+    pub fn build_luts(&self) -> PlanLuts {
+        assert_eq!(self.layers.len(), N_LAYERS, "plan must cover every layer");
+        let mut layers: Vec<Arc<Vec<i32>>> = Vec::with_capacity(N_LAYERS);
+        for (i, lp) in self.layers.iter().enumerate() {
+            // Reuse an identical earlier LUT (common: several layers share
+            // one family) instead of recomputing the 65536-entry table.
+            let lut = match self.layers[..i].iter().position(|p| p.family == lp.family) {
+                Some(j) => Arc::clone(&layers[j]),
+                None => Arc::new(int8_lut(&lp.family)),
+            };
+            layers.push(lut);
+        }
+        PlanLuts {
+            layers: layers.try_into().expect("exactly N_LAYERS entries"),
+        }
+    }
+
+    // -- serialization ------------------------------------------------------
+
+    /// Serialize with header + checksum footer.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut payload = Vec::with_capacity(256);
+        put_str(&mut payload, &self.name);
+        put_u32(&mut payload, self.bits);
+        put_f64(&mut payload, self.budget_drop);
+        payload.extend_from_slice(&self.model_hash.to_le_bytes());
+        payload.extend_from_slice(&self.calib_hash.to_le_bytes());
+        put_u64(&mut payload, self.calib_n);
+        put_f64(&mut payload, self.exact_top1);
+        put_f64(&mut payload, self.plan_top1);
+        put_f64(&mut payload, self.exact_energy_per_image_j);
+        put_f64(&mut payload, self.plan_energy_per_image_j);
+        put_u32(&mut payload, self.layers.len() as u32);
+        for l in &self.layers {
+            put_str(&mut payload, &l.layer);
+            put_family(&mut payload, &l.family);
+            put_f64(&mut payload, l.energy_per_op_j);
+            put_u64(&mut payload, l.macs_per_image);
+            put_f64(&mut payload, l.solo_drop);
+        }
+        let mut out = Vec::with_capacity(28 + payload.len());
+        out.extend_from_slice(PLAN_MAGIC);
+        put_u32(&mut out, PLAN_VERSION);
+        put_u64(&mut out, payload.len() as u64);
+        out.extend_from_slice(&payload);
+        let sum = checksum64(&out);
+        put_u64(&mut out, sum);
+        out
+    }
+
+    /// Decode and fully validate one plan image. Every failure mode —
+    /// short file, bad magic, version skew, truncation, checksum mismatch,
+    /// wrong layer count or order — is an `Err`: a plan either loads
+    /// exactly as compiled or not at all.
+    pub fn decode(bytes: &[u8]) -> Result<CompiledPlan> {
+        if bytes.len() < 28 {
+            bail!("plan too short: {} bytes", bytes.len());
+        }
+        if &bytes[..8] != PLAN_MAGIC {
+            bail!("bad plan magic (not an .acmplan file)");
+        }
+        let body = &bytes[..bytes.len() - 8];
+        let sum = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+        if checksum64(body) != sum {
+            bail!("plan checksum mismatch (torn or corrupted file)");
+        }
+        let mut r = Reader { buf: body, pos: 8 };
+        let version = r.u32()?;
+        if version != PLAN_VERSION {
+            bail!("plan version {version} != {PLAN_VERSION}");
+        }
+        let payload_len = r.u64()? as usize;
+        if r.buf.len() - r.pos != payload_len {
+            bail!(
+                "payload length {} != header claim {payload_len}",
+                r.buf.len() - r.pos
+            );
+        }
+        let name = r.str()?;
+        let bits = r.u32()?;
+        let budget_drop = r.f64()?;
+        let model_hash = u128::from_le_bytes(r.take(16)?.try_into().unwrap());
+        let calib_hash = u128::from_le_bytes(r.take(16)?.try_into().unwrap());
+        let calib_n = r.u64()?;
+        let exact_top1 = r.f64()?;
+        let plan_top1 = r.f64()?;
+        let exact_energy_per_image_j = r.f64()?;
+        let plan_energy_per_image_j = r.f64()?;
+        let n_layers = r.u32()? as usize;
+        if n_layers != N_LAYERS {
+            bail!("plan covers {n_layers} layers, this network has {N_LAYERS}");
+        }
+        let mut layers = Vec::with_capacity(n_layers);
+        for i in 0..n_layers {
+            let layer = r.str()?;
+            if layer != LAYER_NAMES[i] {
+                bail!(
+                    "layer {i} is {layer:?}, expected {:?} (plans are ordered)",
+                    LAYER_NAMES[i]
+                );
+            }
+            let family = read_family(&mut r)?;
+            let energy_per_op_j = r.f64()?;
+            let macs_per_image = r.u64()?;
+            let solo_drop = r.f64()?;
+            layers.push(LayerPlan {
+                layer,
+                family,
+                energy_per_op_j,
+                macs_per_image,
+                solo_drop,
+            });
+        }
+        if r.pos != r.buf.len() {
+            bail!("{} trailing payload bytes", r.buf.len() - r.pos);
+        }
+        Ok(CompiledPlan {
+            name,
+            bits,
+            budget_drop,
+            model_hash,
+            calib_hash,
+            calib_n,
+            exact_top1,
+            plan_top1,
+            exact_energy_per_image_j,
+            plan_energy_per_image_j,
+            layers,
+        })
+    }
+
+    /// Write the plan to `path` — temp file, fsync, then rename, the same
+    /// durability convention as store records (a crash can never leave a
+    /// torn plan at the final path with its data unflushed).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let bytes = self.encode();
+        let tmp = path.with_extension("acmplan.tmp");
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            std::io::Write::write_all(&mut f, &bytes)
+                .with_context(|| format!("writing {}", tmp.display()))?;
+            f.sync_all().ok();
+        }
+        if let Err(e) = std::fs::rename(&tmp, path) {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e).with_context(|| format!("renaming into {}", path.display()));
+        }
+        Ok(())
+    }
+
+    /// Load and validate a plan from `path`.
+    pub fn load(path: &Path) -> Result<CompiledPlan> {
+        let bytes =
+            std::fs::read(path).with_context(|| format!("reading plan {}", path.display()))?;
+        Self::decode(&bytes).with_context(|| format!("decoding plan {}", path.display()))
+    }
+}
+
+/// The materialized per-layer LUTs of a compiled plan (layers sharing a
+/// family share one `Arc`'d table).
+#[derive(Clone, Debug)]
+pub struct PlanLuts {
+    pub layers: [Arc<Vec<i32>>; N_LAYERS],
+}
+
+impl PlanLuts {
+    /// One LUT on every layer (the uniform/homogeneous configuration).
+    pub fn uniform(lut: Arc<Vec<i32>>) -> PlanLuts {
+        PlanLuts {
+            layers: [Arc::clone(&lut), Arc::clone(&lut), Arc::clone(&lut), lut],
+        }
+    }
+
+    /// Borrowed view for the forward paths.
+    pub fn layer_luts(&self) -> LayerLuts<'_> {
+        LayerLuts {
+            conv1: &self.layers[0],
+            conv2: &self.layers[1],
+            fc1: &self.layers[2],
+            fc2: &self.layers[3],
+        }
+    }
+}
+
+// -- family (de)serialization -----------------------------------------------
+
+fn put_family(out: &mut Vec<u8>, f: &MultFamily) {
+    match f {
+        MultFamily::Exact => out.push(0),
+        MultFamily::Approx42 {
+            compressor,
+            approx_cols,
+        } => {
+            out.push(1);
+            put_str(out, compressor.name());
+            put_u32(out, *approx_cols as u32);
+        }
+        MultFamily::LogOur => out.push(2),
+        MultFamily::Mitchell => out.push(3),
+        MultFamily::AdderTree => out.push(4),
+    }
+}
+
+fn read_family(r: &mut Reader) -> Result<MultFamily> {
+    Ok(match r.u8()? {
+        0 => MultFamily::Exact,
+        1 => {
+            let comp = CompressorKind::parse(&r.str()?)?;
+            let cols = r.u32()? as usize;
+            MultFamily::Approx42 {
+                compressor: comp,
+                approx_cols: cols,
+            }
+        }
+        2 => MultFamily::LogOur,
+        3 => MultFamily::Mitchell,
+        4 => MultFamily::AdderTree,
+        tag => bail!("unknown multiplier-family tag {tag}"),
+    })
+}
+
+// Wire helpers (`put_*`, `Reader`) live in `crate::store::wire`, shared
+// with the design-point record format.
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::model::layer_macs_per_image;
+
+    pub(super) fn sample_plan() -> CompiledPlan {
+        let macs = layer_macs_per_image();
+        let families = [
+            MultFamily::Exact,
+            MultFamily::Approx42 {
+                compressor: CompressorKind::Kong,
+                approx_cols: 4,
+            },
+            MultFamily::LogOur,
+            MultFamily::Exact,
+        ];
+        let energies = [2.5e-12, 2.1e-12, 1.4e-12, 2.5e-12];
+        let layers: Vec<LayerPlan> = (0..N_LAYERS)
+            .map(|i| LayerPlan {
+                layer: LAYER_NAMES[i].to_string(),
+                family: families[i].clone(),
+                energy_per_op_j: energies[i],
+                macs_per_image: macs[i],
+                solo_drop: if i == 0 || i == 3 { 0.0 } else { 0.01 },
+            })
+            .collect();
+        let total_macs: u64 = macs.iter().sum();
+        let plan_energy: f64 = layers
+            .iter()
+            .map(|l| l.macs_per_image as f64 * l.energy_per_op_j)
+            .sum();
+        CompiledPlan {
+            name: "unit".into(),
+            bits: 8,
+            budget_drop: 0.02,
+            model_hash: 0x1234_5678_9abc_def0_0fed_cba9_8765_4321,
+            calib_hash: 42,
+            calib_n: 128,
+            exact_top1: 1.0,
+            plan_top1: 0.984375,
+            exact_energy_per_image_j: total_macs as f64 * 2.5e-12,
+            plan_energy_per_image_j: plan_energy,
+            layers,
+        }
+    }
+
+    #[test]
+    fn roundtrip_bit_identical() {
+        let plan = sample_plan();
+        let back = CompiledPlan::decode(&plan.encode()).unwrap();
+        assert_eq!(back, plan);
+        assert_eq!(back.plan_top1.to_bits(), plan.plan_top1.to_bits());
+    }
+
+    #[test]
+    fn derived_quantities() {
+        let plan = sample_plan();
+        assert!((plan.drop_vs_exact() - (1.0 - 0.984375)).abs() < 1e-12);
+        assert!(plan.energy_saving() > 0.0 && plan.energy_saving() < 1.0);
+        assert!(plan.energy_per_op_j() > 0.0);
+        assert_eq!(
+            plan.assignment_label(),
+            "exact,appro42[kongx4],log-our,exact"
+        );
+    }
+
+    #[test]
+    fn corruption_and_truncation_detected() {
+        let bytes = sample_plan().encode();
+        for cut in [0, 7, 20, bytes.len() - 9, bytes.len() - 1] {
+            assert!(CompiledPlan::decode(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+        for byte in (0..bytes.len()).step_by(11) {
+            let mut b = bytes.clone();
+            b[byte] ^= 0x10;
+            assert!(CompiledPlan::decode(&b).is_err(), "flip at {byte}");
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!(
+            "openacm_plan_unit_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("p.acmplan");
+        let plan = sample_plan();
+        plan.save(&path).unwrap();
+        assert_eq!(CompiledPlan::load(&path).unwrap(), plan);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn shared_families_share_luts() {
+        let plan = sample_plan(); // conv1 and fc2 are both exact
+        let luts = plan.build_luts();
+        assert!(Arc::ptr_eq(&luts.layers[0], &luts.layers[3]));
+        assert!(!Arc::ptr_eq(&luts.layers[0], &luts.layers[1]));
+        // The uniform constructor shares one table four ways.
+        let u = PlanLuts::uniform(Arc::new(vec![0i32; 65536]));
+        assert!(Arc::ptr_eq(&u.layers[0], &u.layers[3]));
+    }
+}

@@ -1,0 +1,699 @@
+//! The accuracy-budgeted search: per-layer sensitivity profiling, greedy
+//! energy descent over the joint assignment, and pairwise-swap local
+//! refinement — every accepted candidate validated by its *true* measured
+//! top-1 on the calibration set, every measurement memoized in the
+//! design-point store.
+//!
+//! ## Algorithm
+//!
+//! 1. **Candidate space** — the full multiplier family space at the LUT
+//!    width ([`candidates`]): exact, both logarithmic designs, and every
+//!    (compressor, `approx_cols`) combination. Each candidate gets an
+//!    energy-per-multiply estimate from the PPA engine (store-backed,
+//!    [`analyze_macro_cached`]) and a behavioral int8 LUT.
+//! 2. **Sensitivity profiling** — for each (layer, candidate): swap only
+//!    that layer's LUT through [`QuantCnn::forward_batch_hetero`] on the
+//!    calibration set and record the top-1 drop vs the all-exact baseline.
+//! 3. **Greedy energy descent** — from all-exact, repeatedly apply the
+//!    single-layer move with the largest energy saving whose *measured*
+//!    joint accuracy stays within budget. Moves whose solo drop already
+//!    exceeds the budget are pruned (monotonicity heuristic — pruning only
+//!    skips candidates, it can never admit a budget violation, because
+//!    every accepted move is validated by a real joint measurement).
+//! 4. **Pairwise refinement** — bounded passes over layer pairs, trying
+//!    joint two-layer swaps drawn from per-layer shortlists (cheapest
+//!    configs + exact + current): accept the best strictly-energy-
+//!    improving, budget-respecting swap. This escapes greedy local minima
+//!    where one layer must be *upgraded* to afford a bigger downgrade
+//!    elsewhere.
+//!
+//! ## Memoization
+//!
+//! Every accuracy measurement is keyed on
+//! `model hash × assignment × calibration hash` (domain
+//! `"compile-accuracy/1"`) and persisted as an
+//! [`crate::store::AccuracyStats`] record, so a repeated compile — or a
+//! budget sweep sharing one store — is served from disk. The search is
+//! deterministic, so a warm re-compile replays the identical key sequence
+//! and returns a bit-identical plan.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::config::spec::{CompressorKind, MacroSpec, MultFamily};
+use crate::dse::sweep::{candidates, DSE_SEED};
+use crate::mult::behavioral::int8_lut;
+use crate::nn::eval::argmax;
+use crate::nn::model::{
+    layer_macs_per_image, synthetic_images, LayerLuts, QuantCnn, IMG, LAYER_NAMES, N_LAYERS,
+};
+use crate::ppa::report::analyze_macro_cached;
+use crate::store::{AccuracyStats, DesignPointRecord, DesignPointStore, Key128, KeyBuilder};
+use crate::util::threadpool::parallel_map;
+
+use super::plan::{CompiledPlan, LayerPlan};
+
+/// Comparison slack for budget checks (accuracy values are exact k/n
+/// fractions; this only absorbs the final f64 subtraction's rounding).
+const BUDGET_EPS: f64 = 1e-9;
+
+/// Knobs of one compile run.
+#[derive(Clone, Debug)]
+pub struct CompileOptions {
+    /// Allowed top-1 drop vs the all-exact baseline, as a fraction
+    /// (0.005 = 0.5%).
+    pub budget_drop: f64,
+    /// Calibration-set size (synthetic sets only; ignored for
+    /// caller-provided sets).
+    pub calib_n: usize,
+    /// Seed for the synthetic calibration set / model.
+    pub seed: u64,
+    /// Thread budget for the calibration forward passes.
+    pub threads: usize,
+    /// SRAM rows of the macro geometry behind the energy model.
+    pub rows: usize,
+    /// Workload size for the PPA energy characterization.
+    pub ppa_ops: usize,
+    /// Which layers the search may touch (unmasked layers stay exact) —
+    /// smoke mode restricts to the two fc layers.
+    pub layer_mask: [bool; N_LAYERS],
+    /// Pairwise-refinement passes (0 disables refinement).
+    pub refine_passes: usize,
+    /// Per-layer shortlist size for pairwise refinement.
+    pub shortlist: usize,
+    /// Use the reduced smoke candidate space instead of the full family
+    /// space.
+    pub smoke_space: bool,
+}
+
+impl CompileOptions {
+    /// Full-strength defaults at the given accuracy budget. The default
+    /// seed matches `openacm serve`'s default, so an artifact-free
+    /// compile → serve flow compiles for the same synthetic model it
+    /// then serves.
+    pub fn new(budget_drop: f64) -> CompileOptions {
+        CompileOptions {
+            budget_drop,
+            calib_n: 256,
+            seed: 42,
+            threads: 1,
+            rows: 16,
+            ppa_ops: 1500,
+            layer_mask: [true; N_LAYERS],
+            refine_passes: 2,
+            shortlist: 4,
+            smoke_space: false,
+        }
+    }
+
+    /// CI smoke configuration: tiny calibration set, reduced candidate
+    /// space, and only the two fc layers searchable.
+    pub fn smoke(budget_drop: f64) -> CompileOptions {
+        CompileOptions {
+            calib_n: 32,
+            ppa_ops: 200,
+            layer_mask: [false, false, true, true],
+            refine_passes: 1,
+            shortlist: 2,
+            smoke_space: true,
+            ..CompileOptions::new(budget_drop)
+        }
+    }
+}
+
+/// The labeled image set every candidate assignment is validated on.
+pub struct CalibrationSet {
+    /// `n * 256` bytes, 16×16 grayscale each.
+    pub images: Vec<u8>,
+    pub n: usize,
+    /// One label per image.
+    pub labels: Vec<usize>,
+    /// Content hash over images + labels (part of every memoization key).
+    pub hash: Key128,
+}
+
+impl CalibrationSet {
+    /// From explicit images + labels (e.g. a real dataset snapshot).
+    pub fn from_parts(images: Vec<u8>, labels: Vec<usize>) -> CalibrationSet {
+        assert_eq!(images.len(), labels.len() * IMG * IMG);
+        let label_bytes: Vec<u8> = labels.iter().map(|&l| l as u8).collect();
+        let hash = KeyBuilder::new("compile-calib/1")
+            .bytes(&images)
+            .bytes(&label_bytes)
+            .finish();
+        CalibrationSet {
+            n: labels.len(),
+            images,
+            labels,
+            hash,
+        }
+    }
+
+    /// Deterministic synthetic calibration set labeled by the *exact*
+    /// multiplier's predictions on `model` — "accuracy" then reads as
+    /// agreement with exact inference, and the all-exact baseline scores
+    /// exactly 1.0.
+    pub fn synthetic(model: &QuantCnn, n: usize, seed: u64, threads: usize) -> CalibrationSet {
+        let images = synthetic_images(n, seed ^ 0x5EED_CA11);
+        let exact = int8_lut(&MultFamily::Exact);
+        let views: Vec<&[u8]> = images.chunks(IMG * IMG).collect();
+        let labels = model
+            .forward_batch(&exact, &views, threads)
+            .iter()
+            .map(|row| argmax(row))
+            .collect();
+        CalibrationSet::from_parts(images, labels)
+    }
+
+    /// Per-image 256-byte views.
+    pub fn views(&self) -> Vec<&[u8]> {
+        self.images.chunks(IMG * IMG).collect()
+    }
+}
+
+/// One multiplier configuration a layer can be assigned.
+#[derive(Clone)]
+pub struct Candidate {
+    pub family: MultFamily,
+    /// Energy per multiply, J (PPA estimate at the compile geometry).
+    pub energy_per_op_j: f64,
+    /// The int8 product LUT the layer would execute through.
+    pub lut: Arc<Vec<i32>>,
+}
+
+/// Build the candidate configurations: family space + PPA energy + LUT.
+/// Candidate 0 is always the exact multiplier. Characterization runs one
+/// family per worker (the same split the DSE sweep uses — results are
+/// index-ordered and deterministic for any thread count), and PPA
+/// analyses are store-backed, so repeated compiles (and DSE sweeps
+/// sharing the store) pay for each family once.
+pub fn candidate_space(opts: &CompileOptions, store: Option<&DesignPointStore>) -> Vec<Candidate> {
+    let families: Vec<MultFamily> = if opts.smoke_space {
+        vec![
+            MultFamily::Exact,
+            MultFamily::LogOur,
+            MultFamily::Mitchell,
+            MultFamily::default_approx(8),
+            MultFamily::Approx42 {
+                compressor: CompressorKind::Kong,
+                approx_cols: 4,
+            },
+        ]
+    } else {
+        candidates(8)
+    };
+    assert!(
+        matches!(families[0], MultFamily::Exact),
+        "candidate 0 must be the exact multiplier"
+    );
+    parallel_map(families.len(), opts.threads, |i| {
+        let family = families[i].clone();
+        let spec = MacroSpec::new(
+            &format!("compile_{}", family.name()),
+            opts.rows,
+            8,
+            family.clone(),
+        );
+        let ppa = analyze_macro_cached(&spec, opts.ppa_ops, DSE_SEED, 1, store);
+        Candidate {
+            lut: Arc::new(int8_lut(&family)),
+            family,
+            energy_per_op_j: ppa.energy_per_op_j,
+        }
+    })
+}
+
+/// Content hash of a quantized model: weights, scales and biases by exact
+/// bit pattern — part of every memoization key, stored in the plan so a
+/// served plan can be matched back to the model it was compiled for.
+pub fn model_content_hash(model: &QuantCnn) -> Key128 {
+    let mut kb = KeyBuilder::new("compile-model/1");
+    for layer in [&model.conv1, &model.conv2, &model.fc1, &model.fc2] {
+        let wq: Vec<u8> = layer.w_q.iter().map(|&v| v as u8).collect();
+        kb.bytes(&wq);
+        kb.f64(layer.w_scale as f64);
+        kb.f64(layer.in_scale as f64);
+        let bias: Vec<f64> = layer.bias.iter().map(|&b| b as f64).collect();
+        kb.f64s(&bias);
+    }
+    kb.finish()
+}
+
+/// A per-layer assignment: candidate index per layer (0 = exact).
+pub type Assignment = [usize; N_LAYERS];
+
+/// The search engine. Holds the model, calibration set, candidate space
+/// and store handle for one compile run.
+pub struct Compiler<'a> {
+    model: &'a QuantCnn,
+    model_hash: Key128,
+    calib: &'a CalibrationSet,
+    calib_views: Vec<&'a [u8]>,
+    cands: Vec<Candidate>,
+    macs: [u64; N_LAYERS],
+    opts: CompileOptions,
+    store: Option<&'a DesignPointStore>,
+    /// In-memory measurement memo: the phases revisit assignments (a
+    /// sensitivity trial is also greedy's first validation of that move,
+    /// refinement passes retry combinations), and without it every revisit
+    /// in a store-less run would pay a full calibration forward.
+    evals: RefCell<HashMap<Assignment, f64>>,
+}
+
+impl<'a> Compiler<'a> {
+    pub fn new(
+        model: &'a QuantCnn,
+        calib: &'a CalibrationSet,
+        opts: CompileOptions,
+        store: Option<&'a DesignPointStore>,
+    ) -> Compiler<'a> {
+        let cands = candidate_space(&opts, store);
+        Compiler {
+            model,
+            model_hash: model_content_hash(model),
+            calib_views: calib.views(),
+            calib,
+            cands,
+            macs: layer_macs_per_image(),
+            opts,
+            store,
+            evals: RefCell::new(HashMap::new()),
+        }
+    }
+
+    /// The candidate configurations this run searches over.
+    pub fn candidates(&self) -> &[Candidate] {
+        &self.cands
+    }
+
+    fn assignment_label(&self, asg: &Assignment) -> String {
+        asg.iter()
+            .map(|&c| self.cands[c].family.name())
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Memoization key: model hash × assignment × calibration hash.
+    fn assignment_key(&self, asg: &Assignment) -> Key128 {
+        let mut kb = KeyBuilder::new("compile-accuracy/1");
+        kb.key(self.model_hash).key(self.calib.hash).u32(8);
+        for &c in asg.iter() {
+            kb.str(&self.cands[c].family.name());
+        }
+        kb.finish()
+    }
+
+    fn measure(&self, asg: &Assignment) -> f64 {
+        let luts = LayerLuts {
+            conv1: &self.cands[asg[0]].lut,
+            conv2: &self.cands[asg[1]].lut,
+            fc1: &self.cands[asg[2]].lut,
+            fc2: &self.cands[asg[3]].lut,
+        };
+        let logits = self
+            .model
+            .forward_batch_hetero(&luts, &self.calib_views, self.opts.threads);
+        let mut correct = 0usize;
+        for (row, &label) in logits.iter().zip(&self.calib.labels) {
+            if argmax(row) == label {
+                correct += 1;
+            }
+        }
+        correct as f64 / self.calib.n.max(1) as f64
+    }
+
+    /// Measured top-1 of an assignment on the calibration set — memoized
+    /// in memory for this run and persistently in the store (bit-identical
+    /// on a warm hit: the record stores the f64's exact bit pattern).
+    pub fn measured_top1(&self, asg: &Assignment) -> f64 {
+        if let Some(&top1) = self.evals.borrow().get(asg) {
+            return top1;
+        }
+        let top1 = match self.store {
+            None => self.measure(asg),
+            Some(store) => {
+                let key = self.assignment_key(asg);
+                let (rec, _hit) = store.get_or_put_with(key, || DesignPointRecord {
+                    family: format!("compile[{}]", self.assignment_label(asg)),
+                    bits: 8,
+                    n_ops: self.calib.n as u64,
+                    seed: self.opts.seed,
+                    accuracy: Some(AccuracyStats {
+                        top1: self.measure(asg),
+                        samples: self.calib.n as u64,
+                    }),
+                    ..Default::default()
+                });
+                match rec.accuracy {
+                    Some(a) => a.top1,
+                    None => self.measure(asg),
+                }
+            }
+        };
+        self.evals.borrow_mut().insert(*asg, top1);
+        top1
+    }
+
+    /// Estimated energy per image of an assignment, J.
+    pub fn plan_energy(&self, asg: &Assignment) -> f64 {
+        (0..N_LAYERS)
+            .map(|l| self.macs[l] as f64 * self.cands[asg[l]].energy_per_op_j)
+            .sum()
+    }
+
+    /// Phase (a): solo sensitivity per (layer, candidate) — the top-1 drop
+    /// when only that layer runs that candidate. Unmasked layers and the
+    /// exact candidate read 0.
+    pub fn sensitivity(&self, exact_top1: f64) -> Vec<Vec<f64>> {
+        let mut out = vec![vec![0.0f64; self.cands.len()]; N_LAYERS];
+        for l in 0..N_LAYERS {
+            if !self.opts.layer_mask[l] {
+                continue;
+            }
+            for c in 1..self.cands.len() {
+                let mut asg: Assignment = [0; N_LAYERS];
+                asg[l] = c;
+                out[l][c] = exact_top1 - self.measured_top1(&asg);
+            }
+        }
+        out
+    }
+
+    /// Pairwise-refinement shortlist around a layer's current candidate:
+    /// exact + current + the cheapest `shortlist` energy-saving configs.
+    fn shortlist(&self, current: usize) -> Vec<usize> {
+        let exact_e = self.cands[0].energy_per_op_j;
+        let mut cheap: Vec<usize> = (1..self.cands.len())
+            .filter(|&c| self.cands[c].energy_per_op_j < exact_e)
+            .collect();
+        cheap.sort_by(|&a, &b| {
+            self.cands[a]
+                .energy_per_op_j
+                .total_cmp(&self.cands[b].energy_per_op_j)
+                .then(a.cmp(&b))
+        });
+        cheap.truncate(self.opts.shortlist);
+        let mut out = vec![0, current];
+        out.extend(cheap);
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Run phases (a)–(c) and assemble the plan artifact. Deterministic
+    /// for a given (model, calibration set, options) — thread counts only
+    /// parallelize bit-identical forwards.
+    pub fn compile(&self) -> CompiledPlan {
+        let exact_asg: Assignment = [0; N_LAYERS];
+        let exact_top1 = self.measured_top1(&exact_asg);
+        let sens = self.sensitivity(exact_top1);
+        let budget = self.opts.budget_drop;
+
+        // (b) Greedy energy descent: always apply the largest-saving move
+        // whose measured joint accuracy stays within budget. `banned`
+        // records (layer, candidate) moves that failed validation — as
+        // the assignment only ever gets *more* approximate, a failed move
+        // can only fail harder later (the same monotonicity heuristic the
+        // sensitivity pruning uses).
+        let mut cur = exact_asg;
+        let mut banned = vec![vec![false; self.cands.len()]; N_LAYERS];
+        loop {
+            let mut moves: Vec<(f64, usize, usize)> = Vec::new();
+            for l in 0..N_LAYERS {
+                if !self.opts.layer_mask[l] {
+                    continue;
+                }
+                let cur_e = self.cands[cur[l]].energy_per_op_j;
+                for c in 0..self.cands.len() {
+                    if c == cur[l] || banned[l][c] {
+                        continue;
+                    }
+                    let saving = (cur_e - self.cands[c].energy_per_op_j) * self.macs[l] as f64;
+                    if saving <= 0.0 {
+                        continue;
+                    }
+                    if sens[l][c] > budget + BUDGET_EPS {
+                        banned[l][c] = true;
+                        continue;
+                    }
+                    moves.push((saving, l, c));
+                }
+            }
+            moves.sort_by(|a, b| {
+                b.0.total_cmp(&a.0)
+                    .then(a.1.cmp(&b.1))
+                    .then(a.2.cmp(&b.2))
+            });
+            let mut accepted = false;
+            for &(_, l, c) in &moves {
+                let mut trial = cur;
+                trial[l] = c;
+                let drop = exact_top1 - self.measured_top1(&trial);
+                if drop <= budget + BUDGET_EPS {
+                    cur = trial;
+                    accepted = true;
+                    break;
+                }
+                banned[l][c] = true;
+            }
+            if !accepted {
+                break;
+            }
+        }
+
+        // (c) Pairwise refinement: best strictly-energy-improving joint
+        // two-layer swap within budget, up to `refine_passes` rounds.
+        for _ in 0..self.opts.refine_passes {
+            let cur_energy = self.plan_energy(&cur);
+            let mut best: Option<(f64, Assignment)> = None;
+            for i in 0..N_LAYERS {
+                if !self.opts.layer_mask[i] {
+                    continue;
+                }
+                for j in (i + 1)..N_LAYERS {
+                    if !self.opts.layer_mask[j] {
+                        continue;
+                    }
+                    for &ci in &self.shortlist(cur[i]) {
+                        for &cj in &self.shortlist(cur[j]) {
+                            if ci == cur[i] && cj == cur[j] {
+                                continue;
+                            }
+                            let mut trial = cur;
+                            trial[i] = ci;
+                            trial[j] = cj;
+                            let e = self.plan_energy(&trial);
+                            if e >= cur_energy * (1.0 - 1e-9) {
+                                continue;
+                            }
+                            if best.as_ref().is_some_and(|&(be, _)| e >= be) {
+                                continue;
+                            }
+                            let drop = exact_top1 - self.measured_top1(&trial);
+                            if drop <= budget + BUDGET_EPS {
+                                best = Some((e, trial));
+                            }
+                        }
+                    }
+                }
+            }
+            match best {
+                Some((_, trial)) => cur = trial,
+                None => break,
+            }
+        }
+
+        let plan_top1 = self.measured_top1(&cur);
+        let layers: Vec<LayerPlan> = (0..N_LAYERS)
+            .map(|l| LayerPlan {
+                layer: LAYER_NAMES[l].to_string(),
+                family: self.cands[cur[l]].family.clone(),
+                energy_per_op_j: self.cands[cur[l]].energy_per_op_j,
+                macs_per_image: self.macs[l],
+                solo_drop: sens[l][cur[l]],
+            })
+            .collect();
+        CompiledPlan {
+            name: "plan".into(),
+            bits: 8,
+            budget_drop: budget,
+            model_hash: self.model_hash.0,
+            calib_hash: self.calib.hash.0,
+            calib_n: self.calib.n as u64,
+            exact_top1,
+            plan_top1,
+            exact_energy_per_image_j: self.plan_energy(&exact_asg),
+            plan_energy_per_image_j: self.plan_energy(&cur),
+            layers,
+        }
+    }
+}
+
+/// One-call front end: build the candidate space, search under the
+/// budget, return the plan. See [`Compiler`] for the phases.
+pub fn compile_budgeted(
+    model: &QuantCnn,
+    calib: &CalibrationSet,
+    opts: &CompileOptions,
+    store: Option<&DesignPointStore>,
+) -> CompiledPlan {
+    Compiler::new(model, calib, opts.clone(), store).compile()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exact_lut() -> Vec<i32> {
+        let mut lut = vec![0i32; 65536];
+        for a in -128i32..=127 {
+            for b in -128i32..=127 {
+                lut[(((a as u8) as usize) << 8) | ((b as u8) as usize)] = a * b;
+            }
+        }
+        lut
+    }
+
+    /// A Compiler over a synthetic candidate space (no PPA, no behavioral
+    /// LUT builds): candidate 0 = exact product at 3 pJ, candidate 1 = an
+    /// all-zero LUT at 1 pJ (cheap but wrecks accuracy), candidate 2 = the
+    /// exact product again at 2 pJ (a "free" saving). Family labels are
+    /// only key material here.
+    fn tiny_compiler<'a>(
+        model: &'a QuantCnn,
+        calib: &'a CalibrationSet,
+        opts: CompileOptions,
+        store: Option<&'a DesignPointStore>,
+    ) -> Compiler<'a> {
+        let exact = Arc::new(exact_lut());
+        let cands = vec![
+            Candidate {
+                family: MultFamily::Exact,
+                energy_per_op_j: 3e-12,
+                lut: Arc::clone(&exact),
+            },
+            Candidate {
+                family: MultFamily::Mitchell,
+                energy_per_op_j: 1e-12,
+                lut: Arc::new(vec![0i32; 65536]),
+            },
+            Candidate {
+                family: MultFamily::LogOur,
+                energy_per_op_j: 2e-12,
+                lut: exact,
+            },
+        ];
+        Compiler {
+            model,
+            model_hash: model_content_hash(model),
+            calib_views: calib.views(),
+            calib,
+            cands,
+            macs: layer_macs_per_image(),
+            opts,
+            store,
+            evals: RefCell::new(HashMap::new()),
+        }
+    }
+
+    fn calib_for(model: &QuantCnn, n: usize) -> CalibrationSet {
+        // Label with the same exact LUT the tiny candidate space uses.
+        let images = synthetic_images(n, 77);
+        let lut = exact_lut();
+        let views: Vec<&[u8]> = images.chunks(IMG * IMG).collect();
+        let labels = model
+            .forward_batch(&lut, &views, 1)
+            .iter()
+            .map(|row| argmax(row))
+            .collect();
+        CalibrationSet::from_parts(images, labels)
+    }
+
+    #[test]
+    fn zero_budget_takes_free_savings_and_never_loses_accuracy() {
+        let model = QuantCnn::random(3);
+        let calib = calib_for(&model, 8);
+        let opts = CompileOptions {
+            budget_drop: 0.0,
+            refine_passes: 1,
+            ..CompileOptions::new(0.0)
+        };
+        let c = tiny_compiler(&model, &calib, opts, None);
+        let plan = c.compile();
+        // Labels are the exact LUT's own predictions, so all-exact scores
+        // exactly 1.0 — and a zero budget means the plan must too: every
+        // accepted move was validated at drop == 0.
+        assert_eq!(plan.exact_top1, 1.0);
+        assert_eq!(plan.plan_top1, 1.0);
+        // Candidate 2 carries the identical exact-product LUT at 2/3 the
+        // energy: a guaranteed-free saving on every layer, so the plan
+        // must save at least 1/3 regardless of how the zero-LUT candidate
+        // scores.
+        assert!(plan.plan_energy_per_image_j < plan.exact_energy_per_image_j);
+        assert!(plan.energy_saving() >= 1.0 / 3.0 - 1e-9);
+    }
+
+    #[test]
+    fn layer_mask_pins_unmasked_layers_to_exact() {
+        let model = QuantCnn::random(3);
+        let calib = calib_for(&model, 4);
+        let opts = CompileOptions {
+            layer_mask: [false, false, true, true],
+            refine_passes: 1,
+            ..CompileOptions::new(1.0)
+        };
+        let c = tiny_compiler(&model, &calib, opts, None);
+        let plan = c.compile();
+        assert_eq!(plan.layers[0].family, MultFamily::Exact);
+        assert_eq!(plan.layers[1].family, MultFamily::Exact);
+        // With a 100% budget even the zero LUT is admissible on the two
+        // searchable layers — the cheapest candidate wins there.
+        assert_eq!(plan.layers[2].family, MultFamily::Mitchell);
+        assert_eq!(plan.layers[3].family, MultFamily::Mitchell);
+    }
+
+    #[test]
+    fn memoized_recompile_is_warm_and_bit_identical() {
+        let dir = std::env::temp_dir().join(format!(
+            "openacm_compile_memo_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = DesignPointStore::open(&dir).unwrap();
+        let model = QuantCnn::random(9);
+        let calib = calib_for(&model, 8);
+        let opts = CompileOptions {
+            budget_drop: 0.0,
+            refine_passes: 1,
+            ..CompileOptions::new(0.0)
+        };
+        let cold =
+            tiny_compiler(&model, &calib, opts.clone(), Some(&store)).compile();
+        let before = store.stats();
+        let warm = tiny_compiler(&model, &calib, opts, Some(&store)).compile();
+        let delta = store.stats().since(&before);
+        assert_eq!(warm, cold, "warm compile must replay bit-identically");
+        assert_eq!(delta.misses, 0, "second compile must be fully store-warm");
+        assert!(delta.hits > 0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn assignment_keys_separate_models_calibsets_and_assignments() {
+        let m1 = QuantCnn::random(1);
+        let m2 = QuantCnn::random(2);
+        let c1 = calib_for(&m1, 2);
+        let c2 = calib_for(&m2, 2);
+        let opts = CompileOptions::new(0.0);
+        let a = tiny_compiler(&m1, &c1, opts.clone(), None);
+        let b = tiny_compiler(&m2, &c1, opts.clone(), None);
+        let c = tiny_compiler(&m1, &c2, opts, None);
+        let asg: Assignment = [0, 1, 2, 0];
+        let asg2: Assignment = [0, 2, 1, 0];
+        assert_ne!(a.assignment_key(&asg), b.assignment_key(&asg), "model");
+        assert_ne!(a.assignment_key(&asg), c.assignment_key(&asg), "calib");
+        assert_ne!(a.assignment_key(&asg), a.assignment_key(&asg2), "order");
+    }
+}

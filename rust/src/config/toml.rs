@@ -92,7 +92,63 @@ impl TomlDoc {
         }
     }
 
-    /// Build a [`MacroSpec`] from a parsed document.
+    /// Iterate over every flattened `section.key` in the document.
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|k| k.as_str())
+    }
+
+    /// Reject any key [`Self::to_macro_spec`] would not consume. A
+    /// misspelled knob (`aprox_cols`) silently falling back to its
+    /// default is the worst failure mode a spec loader can have — the
+    /// user asked for one design and characterizes another. Unknown keys
+    /// are a hard error, with a "did you mean" suggestion when a known
+    /// key is within small edit distance.
+    pub fn check_known_keys(&self) -> Result<()> {
+        // Must list exactly the keys `to_macro_spec` reads — when adding a
+        // getter there, add its key here (and to the
+        // `all_documented_keys_are_accepted` test, which pins the overlap).
+        const KNOWN: &[&str] = &[
+            "name",
+            "sram.rows",
+            "sram.word_bits",
+            "sram.banks",
+            "sram.subarrays",
+            "sram.mux_ratio",
+            "sram.sae_delay_ps",
+            "sram.precharge_ps",
+            "sram.wl_pulse_ps",
+            "mult.family",
+            "mult.compressor",
+            "mult.approx_cols",
+            "mult.bits",
+            "mult.signed",
+            "target.clock_mhz",
+            "target.load_pf",
+        ];
+        for key in self.keys() {
+            if KNOWN.contains(&key) {
+                continue;
+            }
+            let nearest = KNOWN
+                .iter()
+                .map(|k| (levenshtein(key, k), *k))
+                .min()
+                .expect("KNOWN is non-empty");
+            // Suggest only plausible typos (distance within a third of
+            // the known key's length, minimum 2).
+            if nearest.0 <= (nearest.1.len() / 3).max(2) {
+                bail!(
+                    "unknown spec key {key:?} — did you mean {:?}?",
+                    nearest.1
+                );
+            }
+            bail!("unknown spec key {key:?}");
+        }
+        Ok(())
+    }
+
+    /// Build a [`MacroSpec`] from a parsed document. Unknown keys are
+    /// rejected ([`Self::check_known_keys`]) before anything is read.
     ///
     /// Expected layout (all keys optional except dimensions):
     /// ```toml
@@ -115,6 +171,7 @@ impl TomlDoc {
     /// load_pf = 0.5
     /// ```
     pub fn to_macro_spec(&self) -> Result<MacroSpec> {
+        self.check_known_keys()?;
         let rows = self
             .get_int("sram.rows")
             .context("missing sram.rows")? as usize;
@@ -184,6 +241,25 @@ impl TomlDoc {
         spec.validate()?;
         Ok(spec)
     }
+}
+
+/// Classic two-row Levenshtein edit distance (insert/delete/substitute,
+/// unit costs) — small enough to run on every unknown key without
+/// mattering.
+fn levenshtein(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
 }
 
 fn strip_comment(line: &str) -> &str {
@@ -293,5 +369,69 @@ load_pf = 0.5
     fn missing_required_keys() {
         let doc = TomlDoc::parse("name = \"x\"").unwrap();
         assert!(doc.to_macro_spec().is_err());
+    }
+
+    #[test]
+    fn misspelled_key_is_rejected_with_suggestion() {
+        // Regression: a misspelled `approx_cols` used to be silently
+        // ignored, so the spec characterized the *default* column budget
+        // instead of the requested one.
+        let src = SAMPLE.replace("approx_cols = 16", "aprox_cols = 16");
+        let err = TomlDoc::parse(&src).unwrap().to_macro_spec().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("mult.aprox_cols"), "message: {msg}");
+        assert!(
+            msg.contains("did you mean") && msg.contains("mult.approx_cols"),
+            "message: {msg}"
+        );
+    }
+
+    #[test]
+    fn unknown_key_without_plausible_match_is_still_rejected() {
+        let err = TomlDoc::parse("zzz_entirely_unrelated = 3\n[sram]\nrows = 16\nword_bits = 8")
+            .unwrap()
+            .to_macro_spec()
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown spec key"), "message: {msg}");
+        assert!(!msg.contains("did you mean"), "message: {msg}");
+    }
+
+    #[test]
+    fn all_documented_keys_are_accepted() {
+        let src = r#"
+name = "full"
+[sram]
+rows = 16
+word_bits = 8
+banks = 1
+subarrays = 1
+mux_ratio = 1
+sae_delay_ps = 180.0
+precharge_ps = 250.0
+wl_pulse_ps = 450.0
+[mult]
+family = "appro42"
+compressor = "yang1"
+approx_cols = 8
+bits = 8
+signed = false
+[target]
+clock_mhz = 100.0
+load_pf = 0.5
+"#;
+        TomlDoc::parse(src).unwrap().to_macro_spec().unwrap();
+    }
+
+    #[test]
+    fn levenshtein_reference_cases() {
+        assert_eq!(super::levenshtein("", ""), 0);
+        assert_eq!(super::levenshtein("abc", "abc"), 0);
+        assert_eq!(super::levenshtein("abc", ""), 3);
+        assert_eq!(super::levenshtein("kitten", "sitting"), 3);
+        assert_eq!(
+            super::levenshtein("mult.aprox_cols", "mult.approx_cols"),
+            1
+        );
     }
 }

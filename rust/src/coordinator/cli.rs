@@ -9,6 +9,10 @@
 //! falls back to a fully synthetic workload (random model, behavioral
 //! LUTs, labels = exact-variant predictions). `auto` picks `pjrt` when
 //! artifacts exist, `native` otherwise.
+//!
+//! `--plan FILE.acmplan` additionally serves a compiled heterogeneous
+//! plan (`openacm compile`) as the "plan" variant: native per-layer LUT
+//! dispatch, profile warm-started from the plan artifact itself.
 
 use anyhow::Result;
 use std::path::Path;
@@ -16,9 +20,10 @@ use std::time::Duration;
 
 use super::batcher::BatchPolicy;
 use super::server::InferenceServer;
-use super::warmstart::warm_start_profiles;
+use super::warmstart::{plan_profile, warm_start_profiles};
 use crate::bench::harness::sci;
-use crate::runtime::backend::select_backend;
+use crate::compile::plan::CompiledPlan;
+use crate::runtime::backend::select_backend_with_plan;
 use crate::runtime::{ArtifactStore, BackendChoice, BackendFactory};
 use crate::store::DesignPointStore;
 use crate::util::cli::Args;
@@ -38,8 +43,30 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     };
     let choice = BackendChoice::parse(args.str_or("backend", "auto"))?;
     let threads = ThreadPool::default_parallelism();
-    let (factory, workload) =
-        select_backend(choice, &dir, max_batch, threads, args.u64_or("seed", 42)?)?;
+    // A compiled heterogeneous plan (`openacm compile`) serves as its own
+    // variant named "plan", executed natively with per-layer LUT dispatch.
+    let plan = match args.get("plan") {
+        Some(path) => {
+            let plan = CompiledPlan::load(Path::new(path))?;
+            println!(
+                "serving compiled plan {} [{}]: measured drop {:.2}%, {:.1}% energy saving",
+                plan.name,
+                plan.assignment_label(),
+                plan.drop_vs_exact() * 100.0,
+                plan.energy_saving() * 100.0
+            );
+            Some(plan)
+        }
+        None => None,
+    };
+    let (factory, workload) = select_backend_with_plan(
+        choice,
+        &dir,
+        max_batch,
+        threads,
+        args.u64_or("seed", 42)?,
+        plan.as_ref().map(|p| ("plan", p)),
+    )?;
 
     println!(
         "starting coordinator: backend {}, {} variants, batch {} (capacity {})",
@@ -60,36 +87,43 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     // Warm-start is an optimization: any failure here (missing dir,
     // unreadable path, a file where the dir should be) degrades to cold
     // serving tables, never to a failed boot.
-    match DesignPointStore::open(&store_dir) {
-        Ok(dp_store) => {
-            server.attach_profiles(warm_start_profiles(&dp_store, 8));
-            let mut warmed = 0usize;
-            for v in server.variants() {
-                if let Some(p) = server.profile(&v) {
-                    warmed += 1;
-                    println!(
-                        "warm-start {v:>8}: family {:18} nmed {} energy/op {} ({} records)",
-                        p.family,
-                        p.nmed.map(sci).unwrap_or_else(|| "-".into()),
-                        p.energy_per_op_j
-                            .map(|e| format!("{} J", sci(e)))
-                            .unwrap_or_else(|| "-".into()),
-                        p.records
-                    );
-                }
-            }
-            if warmed == 0 {
-                println!(
-                    "design-point store {} holds no 8-bit records — serving tables cold \
-                     (run `openacm dse` to populate)",
-                    store_dir.display()
-                );
-            }
+    let (mut profiles, store_ok) = match DesignPointStore::open(&store_dir) {
+        Ok(dp_store) => (warm_start_profiles(&dp_store, 8), true),
+        _ => {
+            println!(
+                "could not open design-point store at {} — serving tables cold",
+                store_dir.display()
+            );
+            (Default::default(), false)
         }
-        _ => println!(
-            "could not open design-point store at {} — serving tables cold",
+    };
+    // A served plan is its own profile source: the compile pass already
+    // measured its accuracy and energy.
+    if let Some(plan) = &plan {
+        profiles.insert("plan".to_string(), plan_profile(plan));
+    }
+    server.attach_profiles(profiles);
+    let mut warmed = 0usize;
+    for v in server.variants() {
+        if let Some(p) = server.profile(&v) {
+            warmed += 1;
+            println!(
+                "warm-start {v:>8}: family {:18} nmed {} energy/op {} ({} records)",
+                p.family,
+                p.nmed.map(sci).unwrap_or_else(|| "-".into()),
+                p.energy_per_op_j
+                    .map(|e| format!("{} J", sci(e)))
+                    .unwrap_or_else(|| "-".into()),
+                p.records
+            );
+        }
+    }
+    if warmed == 0 && store_ok {
+        println!(
+            "design-point store {} holds no 8-bit records — serving tables cold \
+             (run `openacm dse` to populate)",
             store_dir.display()
-        ),
+        );
     }
     let variants = server.variants();
 

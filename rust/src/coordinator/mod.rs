@@ -31,4 +31,4 @@ pub mod cli;
 pub use admission::{Admission, AdmissionController};
 pub use metrics::ServerMetrics;
 pub use server::{InferenceServer, Request, Response};
-pub use warmstart::{profile_for_variant, warm_start_profiles, VariantProfile};
+pub use warmstart::{plan_profile, profile_for_variant, warm_start_profiles, VariantProfile};

@@ -10,6 +10,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::compile::plan::CompiledPlan;
 use crate::store::DesignPointStore;
 
 /// Per-family serving profile assembled from store records.
@@ -78,6 +79,23 @@ pub fn warm_start_profiles(
         }
     });
     out
+}
+
+/// The serving profile of a compiled heterogeneous plan: the compile pass
+/// already measured everything a warm-start would want, so the plan
+/// artifact itself is the profile source (no store scan needed). Energy
+/// reports per multiply ([`CompiledPlan::energy_per_op_j`]) to stay in
+/// the same unit as the PPA-derived profiles; `nmed` stays empty — a
+/// heterogeneous assignment has no single multiplier NMED, its quality
+/// metric is the measured calibration drop carried by the plan.
+pub fn plan_profile(plan: &CompiledPlan) -> VariantProfile {
+    VariantProfile {
+        family: format!("plan[{}]", plan.assignment_label()),
+        nmed: None,
+        energy_per_op_j: Some(plan.energy_per_op_j()),
+        logic_area_um2: None,
+        records: plan.layers.len() as u64,
+    }
 }
 
 /// Resolve a serving variant name against the profile table. Variant names
@@ -236,6 +254,48 @@ mod tests {
             "larger-workload PPA must win"
         );
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn plan_profile_reports_per_op_energy() {
+        use crate::compile::plan::{LayerPlan, PlanLuts};
+        use crate::config::spec::MultFamily;
+        use crate::nn::model::{LAYER_NAMES, N_LAYERS};
+        use std::sync::Arc;
+
+        let plan = CompiledPlan {
+            name: "p".into(),
+            bits: 8,
+            budget_drop: 0.005,
+            model_hash: 0,
+            calib_hash: 0,
+            calib_n: 16,
+            exact_top1: 1.0,
+            plan_top1: 0.9375,
+            exact_energy_per_image_j: 4e-8,
+            plan_energy_per_image_j: 2e-8,
+            layers: (0..N_LAYERS)
+                .map(|i| LayerPlan {
+                    layer: LAYER_NAMES[i].to_string(),
+                    family: MultFamily::Exact,
+                    energy_per_op_j: 2e-12,
+                    macs_per_image: 10_000,
+                    solo_drop: 0.0,
+                })
+                .collect(),
+        };
+        let p = plan_profile(&plan);
+        assert_eq!(p.records, N_LAYERS as u64);
+        assert!((p.energy_per_op_j.unwrap() - 2e-8 / 40_000.0).abs() < 1e-20);
+        assert!(p.family.starts_with("plan["));
+        // The profile resolves under the "plan" variant name.
+        let mut t = table(&["exact"]);
+        t.insert("plan".into(), p);
+        let resolved = profile_for_variant(&t, "plan").expect("plan variant resolves");
+        assert!(resolved.family.starts_with("plan["));
+        // Uniform plans share LUT storage (smoke-checks the Arc sharing).
+        let u = PlanLuts::uniform(Arc::new(vec![0i32; 65536]));
+        assert!(Arc::ptr_eq(&u.layers[0], &u.layers[2]));
     }
 
     #[test]

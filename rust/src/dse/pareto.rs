@@ -5,7 +5,13 @@
 use super::sweep::DsePoint;
 
 /// Points not dominated in (nmed, energy): a point dominates another if it
-/// is no worse in both and strictly better in one. Returned sorted by nmed.
+/// is no worse in both and strictly better in one. Returned sorted by
+/// nmed, energy non-increasing, with coordinate duplicates removed (two
+/// designs landing on the identical (nmed, energy) point keep only the
+/// first in input order — one frontier entry per distinct trade-off).
+/// The invariants (sorted, deduplicated, no dominated point survives,
+/// every input point dominated-or-equalled by a frontier member) are
+/// pinned by a seeded-random property test below.
 pub fn pareto_front(points: &[DsePoint]) -> Vec<DsePoint> {
     let mut front: Vec<DsePoint> = Vec::new();
     for p in points {
@@ -18,7 +24,13 @@ pub fn pareto_front(points: &[DsePoint]) -> Vec<DsePoint> {
         }
     }
     front.sort_by(|a, b| a.nmed.partial_cmp(&b.nmed).unwrap());
-    front.dedup_by(|a, b| a.label == b.label);
+    // Survivors sharing an nmed all carry the group's minimal energy
+    // (anything else is dominated), so coordinate duplicates are adjacent
+    // after the sort and consecutive dedup is complete.
+    front.dedup_by(|a, b| {
+        a.nmed.to_bits() == b.nmed.to_bits()
+            && a.energy_per_op_j.to_bits() == b.energy_per_op_j.to_bits()
+    });
     front
 }
 
@@ -72,6 +84,74 @@ mod tests {
             assert!(w[0].nmed <= w[1].nmed);
             assert!(w[0].energy_per_op_j >= w[1].energy_per_op_j);
         }
+    }
+
+    #[test]
+    fn duplicate_coordinates_collapse_to_one_entry() {
+        let pts = vec![
+            pt("a", 0.01, 5.0),
+            pt("twin-of-a", 0.01, 5.0),
+            pt("b", 0.02, 3.0),
+        ];
+        let f = pareto_front(&pts);
+        let labels: Vec<&str> = f.iter().map(|p| p.label.as_str()).collect();
+        assert_eq!(labels, vec!["a", "b"]);
+    }
+
+    fn dominates(q: &DsePoint, p: &DsePoint) -> bool {
+        (q.nmed < p.nmed && q.energy_per_op_j <= p.energy_per_op_j)
+            || (q.nmed <= p.nmed && q.energy_per_op_j < p.energy_per_op_j)
+    }
+
+    #[test]
+    fn frontier_properties_on_seeded_random_clouds() {
+        use crate::util::proptest::{check, prop_assert};
+        check(300, 0x9A9E70, |g| {
+            // Quantized coordinates force plenty of ties and exact
+            // duplicates — the cases a naive frontier gets wrong.
+            let n = 1 + g.usize_below(40);
+            let pts: Vec<DsePoint> = (0..n)
+                .map(|i| {
+                    let nmed = g.usize_below(8) as f64 * 0.01;
+                    let energy = (1 + g.usize_below(8)) as f64 * 1e-12;
+                    pt(&format!("p{i}"), nmed, energy)
+                })
+                .collect();
+            let f = pareto_front(&pts);
+            prop_assert(!f.is_empty(), "frontier of a non-empty cloud is non-empty")?;
+            for w in f.windows(2) {
+                prop_assert(w[0].nmed <= w[1].nmed, "sorted by nmed")?;
+                prop_assert(
+                    w[0].energy_per_op_j >= w[1].energy_per_op_j,
+                    "energy non-increasing along the frontier",
+                )?;
+                prop_assert(
+                    !(w[0].nmed == w[1].nmed
+                        && w[0].energy_per_op_j == w[1].energy_per_op_j),
+                    "frontier is deduplicated",
+                )?;
+            }
+            for p in &f {
+                prop_assert(
+                    pts.iter().any(|q| q.label == p.label),
+                    "frontier points come from the input",
+                )?;
+                prop_assert(
+                    !pts.iter().any(|q| dominates(q, p)),
+                    "no dominated point survives",
+                )?;
+            }
+            for p in &pts {
+                prop_assert(
+                    f.iter().any(|q| {
+                        dominates(q, p)
+                            || (q.nmed == p.nmed && q.energy_per_op_j == p.energy_per_op_j)
+                    }),
+                    "every input point is dominated or equalled by the frontier",
+                )?;
+            }
+            Ok(())
+        });
     }
 
     #[test]

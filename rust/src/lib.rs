@@ -93,6 +93,23 @@
 //! dispatch rules and batching invariants, and `cargo bench --bench
 //! nn_forward` for the scalar-vs-batched speedup trail
 //! (`BENCH_nn_forward.json`).
+//!
+//! ## The compile pass
+//!
+//! [`compile`] closes the loop from "accuracy budget in" to "deployable
+//! heterogeneous design out": `openacm compile --spec … --budget 0.5`
+//! profiles per-layer sensitivity (one layer's LUT swapped at a time
+//! through [`nn::model::QuantCnn::forward_batch_hetero`]), runs a greedy
+//! energy descent with pairwise-swap refinement over the joint per-layer
+//! assignment — every accepted step validated by its *measured* top-1 on
+//! the calibration set — and emits a versioned [`compile::CompiledPlan`]
+//! artifact (layer → multiplier config + energy estimate). Plans execute
+//! natively ([`runtime::NativeFactory::add_plan`] registers a plan as a
+//! serving variant; logits bit-match a direct heterogeneous forward) and
+//! every accuracy measurement is store-memoized on
+//! `model hash × assignment × calibration hash`, so repeated compiles and
+//! budget sweeps are warm (`cargo bench --bench compile`,
+//! `BENCH_compile.json`).
 
 pub mod util;
 pub mod bench;
@@ -111,3 +128,4 @@ pub mod nn;
 pub mod runtime;
 pub mod coordinator;
 pub mod config;
+pub mod compile;

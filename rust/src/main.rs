@@ -23,19 +23,27 @@ COMMANDS:
   yield      Reproduce Table V (MC vs MNIS) [--size 16|32|64] [--seed N]
   dse        Accuracy-energy design-space exploration (Pareto frontier)
              [--no-cache] [--store DIR]
+  compile    Accuracy-budgeted per-layer multiplier mapping: emit a
+             compiled heterogeneous plan (.acmplan) the serving stack
+             executes directly
+             --budget PCT [--spec FILE] [--calib N] [--seed N]
+             [--out FILE] [--artifacts DIR] [--store DIR] [--no-cache]
+             [--smoke]
   store      Inspect/maintain the design-point store: stats | verify | gc
              [--dir DIR] [--repair] [--max-mb N]
   serve      Start the inference coordinator (PJRT on AOT artifacts, or the
              artifact-free batched native backend)
              [--backend native|pjrt|auto] [--artifacts DIR] [--batch N]
              [--requests N] [--store DIR] [--seed N]
+             [--plan FILE.acmplan]  serve a compiled heterogeneous plan as
+             the "plan" variant (native per-layer LUT dispatch)
   luts       Emit behavioral-multiplier LUTs (npy) for cross-checking
              [--out DIR]
   help       Show this message
 "#;
 
 fn main() -> Result<()> {
-    let args = Args::from_env(true, &["verbose", "fast", "no-cache", "repair"])?;
+    let args = Args::from_env(true, &["verbose", "fast", "no-cache", "repair", "smoke"])?;
     match args.command.as_deref() {
         Some("generate") => openacm::flow::cli::cmd_generate(&args),
         Some("ppa") => openacm::ppa::cli::cmd_ppa(&args),
@@ -43,6 +51,7 @@ fn main() -> Result<()> {
         Some("nn") => openacm::nn::cli::cmd_nn(&args),
         Some("yield") => openacm::yield_analysis::cli::cmd_yield(&args),
         Some("dse") => openacm::dse::cli::cmd_dse(&args),
+        Some("compile") => openacm::compile::cli::cmd_compile(&args),
         Some("store") => openacm::store::cli::cmd_store(&args),
         Some("serve") => openacm::coordinator::cli::cmd_serve(&args),
         Some("luts") => openacm::mult::cli::cmd_luts(&args),

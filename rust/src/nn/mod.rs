@@ -16,7 +16,11 @@
 //! * [`model`] — the Rust-native quantized CNN: scalar
 //!   [`QuantCnn::forward`] (the oracle) and batched
 //!   [`QuantCnn::forward_batch`] (the serving path behind
-//!   [`crate::runtime::NativeBackend`]);
+//!   [`crate::runtime::NativeBackend`]). Both dispatch through
+//!   [`model::LayerLuts`] — one LUT per layer — so heterogeneous
+//!   per-layer multiplier assignments (the [`crate::compile`] pass's
+//!   output) execute on the same code path as the uniform configuration
+//!   ([`QuantCnn::forward_hetero`] / [`QuantCnn::forward_batch_hetero`]);
 //! * [`eval`] — Top-1/Top-5 scoring (NaN-safe total ordering);
 //! * [`cli`] — `openacm nn`: Table IV (accuracy + NMED/MRED).
 
@@ -26,4 +30,4 @@ pub mod eval;
 pub mod cli;
 
 pub use eval::{argmax, topk_accuracy, EvalResult};
-pub use model::{synthetic_images, QuantCnn};
+pub use model::{synthetic_images, LayerLuts, QuantCnn};

@@ -46,6 +46,56 @@ pub const C2_OUT: usize = 16;
 pub const FC1_OUT: usize = 32;
 pub const CLASSES: usize = 10;
 
+/// Number of LUT-routed layers in the network.
+pub const N_LAYERS: usize = 4;
+/// Canonical layer names, in forward order — the index space shared by
+/// [`LayerLuts`], the compile pass and every plan artifact.
+pub const LAYER_NAMES: [&str; N_LAYERS] = ["conv1", "conv2", "fc1", "fc2"];
+
+/// One int8-product LUT per layer — the heterogeneous-multiplier view of
+/// the network. Every forward path dispatches each layer's multiplies
+/// through its own LUT; the historical single-LUT entry points are the
+/// uniform special case ([`LayerLuts::uniform`]), so a uniform assignment
+/// is *definitionally* bit-identical to the single-LUT path.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerLuts<'a> {
+    pub conv1: &'a [i32],
+    pub conv2: &'a [i32],
+    pub fc1: &'a [i32],
+    pub fc2: &'a [i32],
+}
+
+impl<'a> LayerLuts<'a> {
+    /// The same LUT on every layer (the classic homogeneous configuration).
+    pub fn uniform(lut: &'a [i32]) -> LayerLuts<'a> {
+        LayerLuts {
+            conv1: lut,
+            conv2: lut,
+            fc1: lut,
+            fc2: lut,
+        }
+    }
+
+}
+
+/// Multiply–accumulate count per image per layer, in [`LAYER_NAMES`]
+/// order — the weights the compile pass uses to turn per-multiplier
+/// energy into per-layer (and per-image) energy estimates. Derived from
+/// the fixed architecture: conv layers count im2col-rows × k × out,
+/// fc layers in × out.
+pub fn layer_macs_per_image() -> [u64; N_LAYERS] {
+    let c1h = IMG - 2; // 3x3 valid conv
+    let conv1 = (c1h * c1h * 9 * C1_OUT) as u64;
+    let p1 = c1h / 2; // maxpool2
+    let c2h = p1 - 2;
+    let conv2 = (c2h * c2h * 9 * C1_OUT * C2_OUT) as u64;
+    let p2 = c2h / 2;
+    let flat = p2 * p2 * C2_OUT;
+    let fc1 = (flat * FC1_OUT) as u64;
+    let fc2 = (FC1_OUT * CLASSES) as u64;
+    [conv1, conv2, fc1, fc2]
+}
+
 fn im2col_gen<T: Copy>(
     input: &[T],
     h: usize,
@@ -162,24 +212,31 @@ impl QuantCnn {
 
     /// Forward one image (u8 16×16 grayscale) → 10 logits.
     pub fn forward(&self, lut: &[i32], image: &[u8]) -> Vec<f32> {
+        self.forward_hetero(&LayerLuts::uniform(lut), image)
+    }
+
+    /// [`QuantCnn::forward`] with a per-layer LUT assignment: each layer's
+    /// multiplies go through its own LUT. With [`LayerLuts::uniform`] this
+    /// *is* `forward` (same code path).
+    pub fn forward_hetero(&self, luts: &LayerLuts, image: &[u8]) -> Vec<f32> {
         assert_eq!(image.len(), IMG * IMG);
         // Normalize to [0,1].
         let x: Vec<f32> = image.iter().map(|&p| p as f32 / 255.0).collect();
         // conv1
         let (cols, m, k) = im2col(&x, IMG, IMG, 1, 3);
-        let mut h1 = self.layer_forward(lut, &self.conv1, &cols, m, k, C1_OUT);
+        let mut h1 = self.layer_forward(luts.conv1, &self.conv1, &cols, m, k, C1_OUT);
         relu(&mut h1);
         let (p1, h1h, h1w) = maxpool2(&h1, IMG - 2, IMG - 2, C1_OUT);
         // conv2
         let (cols2, m2, k2) = im2col(&p1, h1h, h1w, C1_OUT, 3);
-        let mut h2 = self.layer_forward(lut, &self.conv2, &cols2, m2, k2, C2_OUT);
+        let mut h2 = self.layer_forward(luts.conv2, &self.conv2, &cols2, m2, k2, C2_OUT);
         relu(&mut h2);
         let (p2, p2h, p2w) = maxpool2(&h2, h1h - 2, h1w - 2, C2_OUT);
         // flatten → fc1 → fc2
         let flat_len = p2h * p2w * C2_OUT;
-        let mut h3 = self.layer_forward(lut, &self.fc1, &p2, 1, flat_len, FC1_OUT);
+        let mut h3 = self.layer_forward(luts.fc1, &self.fc1, &p2, 1, flat_len, FC1_OUT);
         relu(&mut h3);
-        self.layer_forward(lut, &self.fc2, &h3, 1, FC1_OUT, CLASSES)
+        self.layer_forward(luts.fc2, &self.fc2, &h3, 1, FC1_OUT, CLASSES)
     }
 
     /// Batched [`QuantCnn::layer_forward`] over pre-quantized activations:
@@ -219,7 +276,7 @@ impl QuantCnn {
     /// for the group-level split).
     fn forward_batch_core(
         &self,
-        lut: &[i32],
+        luts: &LayerLuts,
         images: &[&[u8]],
         gemm_threads: usize,
     ) -> Vec<Vec<f32>> {
@@ -238,8 +295,15 @@ impl QuantCnn {
         }
         // conv1 over the stacked batch: weight tiles reused across images.
         let (a1, m1, k1) = im2col_batch_i8(&xq, bsz, IMG, IMG, 1, 3);
-        let mut h1 =
-            self.layer_forward_batched_q(lut, &self.conv1, &a1, bsz * m1, k1, C1_OUT, gemm_threads);
+        let mut h1 = self.layer_forward_batched_q(
+            luts.conv1,
+            &self.conv1,
+            &a1,
+            bsz * m1,
+            k1,
+            C1_OUT,
+            gemm_threads,
+        );
         relu(&mut h1);
         let (c1h, c1w) = (IMG - 2, IMG - 2);
         let per1 = c1h * c1w * C1_OUT;
@@ -254,8 +318,15 @@ impl QuantCnn {
         // conv2 over the stacked batch.
         let p1q = quantize_all(&p1, self.conv2.in_scale);
         let (a2, m2, k2) = im2col_batch_i8(&p1q, bsz, p1h, p1w, C1_OUT, 3);
-        let mut h2 =
-            self.layer_forward_batched_q(lut, &self.conv2, &a2, bsz * m2, k2, C2_OUT, gemm_threads);
+        let mut h2 = self.layer_forward_batched_q(
+            luts.conv2,
+            &self.conv2,
+            &a2,
+            bsz * m2,
+            k2,
+            C2_OUT,
+            gemm_threads,
+        );
         relu(&mut h2);
         let (c2h, c2w) = (p1h - 2, p1w - 2);
         let per2 = c2h * c2w * C2_OUT;
@@ -270,12 +341,26 @@ impl QuantCnn {
         // fc1/fc2: one GEMM row per image.
         let flat_len = p2h * p2w * C2_OUT;
         let p2q = quantize_all(&p2, self.fc1.in_scale);
-        let mut h3 =
-            self.layer_forward_batched_q(lut, &self.fc1, &p2q, bsz, flat_len, FC1_OUT, gemm_threads);
+        let mut h3 = self.layer_forward_batched_q(
+            luts.fc1,
+            &self.fc1,
+            &p2q,
+            bsz,
+            flat_len,
+            FC1_OUT,
+            gemm_threads,
+        );
         relu(&mut h3);
         let h3q = quantize_all(&h3, self.fc2.in_scale);
-        let logits =
-            self.layer_forward_batched_q(lut, &self.fc2, &h3q, bsz, FC1_OUT, CLASSES, gemm_threads);
+        let logits = self.layer_forward_batched_q(
+            luts.fc2,
+            &self.fc2,
+            &h3q,
+            bsz,
+            FC1_OUT,
+            CLASSES,
+            gemm_threads,
+        );
         logits.chunks(CLASSES).map(|row| row.to_vec()).collect()
     }
 
@@ -298,13 +383,29 @@ impl QuantCnn {
     /// The equivalence suite (`rust/tests/nn_batch_equivalence.rs`) pins
     /// this down.
     pub fn forward_batch(&self, lut: &[i32], images: &[&[u8]], threads: usize) -> Vec<Vec<f32>> {
+        self.forward_batch_hetero(&LayerLuts::uniform(lut), images, threads)
+    }
+
+    /// [`QuantCnn::forward_batch`] with a per-layer LUT assignment — the
+    /// execution path for compiled heterogeneous plans. Bit-identical to
+    /// [`QuantCnn::forward_hetero`] per image for any batch size, grouping
+    /// and thread count (same argument as the uniform case: integer
+    /// accumulation per output element is order-independent, float ops are
+    /// per-element identical), and with [`LayerLuts::uniform`] it *is*
+    /// `forward_batch`.
+    pub fn forward_batch_hetero(
+        &self,
+        luts: &LayerLuts,
+        images: &[&[u8]],
+        threads: usize,
+    ) -> Vec<Vec<f32>> {
         let bsz = images.len();
         if bsz == 0 {
             return Vec::new();
         }
         let threads = threads.max(1);
         if threads == 1 || bsz == 1 {
-            return self.forward_batch_core(lut, images, threads);
+            return self.forward_batch_core(luts, images, threads);
         }
         let groups = threads.min(bsz);
         let base = bsz / groups;
@@ -312,7 +413,7 @@ impl QuantCnn {
         let grouped = parallel_map(groups, threads, |g| {
             let start = g * base + g.min(rem);
             let len = base + usize::from(g < rem);
-            self.forward_batch_core(lut, &images[start..start + len], 1)
+            self.forward_batch_core(luts, &images[start..start + len], 1)
         });
         grouped.into_iter().flatten().collect()
     }
@@ -431,6 +532,60 @@ mod tests {
         assert_eq!(batched.len(), 2);
         for (i, v) in views.iter().enumerate() {
             assert_eq!(batched[i], cnn.forward(&lut, v), "image {i}");
+        }
+    }
+
+    #[test]
+    fn layer_macs_match_architecture() {
+        // conv1: 14·14 patches × 9 taps × 8 out; conv2: 5·5 × 72 × 16;
+        // fc1: 64×32; fc2: 32×10.
+        assert_eq!(layer_macs_per_image(), [14112, 28800, 2048, 320]);
+    }
+
+    #[test]
+    fn hetero_uniform_is_bit_identical_to_uniform() {
+        let cnn = QuantCnn::random(11);
+        let mut lut = vec![0i32; 65536];
+        for a in -128i32..=127 {
+            for b in -128i32..=127 {
+                lut[(((a as u8) as usize) << 8) | ((b as u8) as usize)] = a * b;
+            }
+        }
+        let images = synthetic_images(3, 9);
+        let views: Vec<&[u8]> = images.chunks(IMG * IMG).collect();
+        let uniform = cnn.forward_batch(&lut, &views, 2);
+        let hetero = cnn.forward_batch_hetero(&LayerLuts::uniform(&lut), &views, 2);
+        assert_eq!(uniform, hetero);
+        assert_eq!(
+            cnn.forward(&lut, views[0]),
+            cnn.forward_hetero(&LayerLuts::uniform(&lut), views[0])
+        );
+    }
+
+    #[test]
+    fn hetero_layer_swap_changes_only_that_layer_path() {
+        // Swapping fc2's LUT to all-zeros must leave conv/fc1 outputs
+        // intact: logits collapse to exactly the fc2 biases.
+        let cnn = QuantCnn::random(4);
+        let mut exact = vec![0i32; 65536];
+        for a in -128i32..=127 {
+            for b in -128i32..=127 {
+                exact[(((a as u8) as usize) << 8) | ((b as u8) as usize)] = a * b;
+            }
+        }
+        let zero = vec![0i32; 65536];
+        let images = synthetic_images(2, 21);
+        let views: Vec<&[u8]> = images.chunks(IMG * IMG).collect();
+        let luts = LayerLuts {
+            conv1: &exact,
+            conv2: &exact,
+            fc1: &exact,
+            fc2: &zero,
+        };
+        for row in cnn.forward_batch_hetero(&luts, &views, 1) {
+            for (j, v) in row.iter().enumerate() {
+                assert_eq!(*v, cnn.fc2.bias[j]);
+            }
         }
     }
 

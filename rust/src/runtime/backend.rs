@@ -36,12 +36,13 @@
 //! `--backend native` force the choice ([`BackendChoice`]).
 
 use anyhow::{bail, Context, Result};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use super::artifacts::ArtifactStore;
 use super::client;
+use crate::compile::plan::{CompiledPlan, PlanLuts};
 use crate::mult::behavioral::{int8_lut, paper_families};
 use crate::nn::eval::argmax;
 use crate::nn::model::{synthetic_images, QuantCnn};
@@ -106,10 +107,14 @@ impl BackendChoice {
 // Native backend
 // ---------------------------------------------------------------------------
 
-/// Artifact-free backend: the batched Rust-native quantized CNN.
+/// Artifact-free backend: the batched Rust-native quantized CNN. Every
+/// variant executes through per-layer LUTs ([`PlanLuts`]): uniform
+/// variants share one table across all four layers, compiled-plan
+/// variants dispatch each layer through its own — the same code path
+/// either way ([`QuantCnn::forward_batch_hetero`]).
 pub struct NativeBackend {
     cnn: Arc<QuantCnn>,
-    lut: Arc<Vec<i32>>,
+    luts: PlanLuts,
     threads: usize,
     max_batch: usize,
 }
@@ -136,15 +141,19 @@ impl Backend for NativeBackend {
                 bail!("image {i} has {} bytes, want {IMAGE_BYTES}", img.len());
             }
         }
-        Ok(self.cnn.forward_batch(&self.lut, images, self.threads))
+        Ok(self
+            .cnn
+            .forward_batch_hetero(&self.luts.layer_luts(), images, self.threads))
     }
 }
 
 /// Builds [`NativeBackend`]s: one shared quantized model + one LUT per
-/// variant.
+/// uniform variant, plus any number of compiled heterogeneous plans
+/// registered via [`NativeFactory::add_plan`].
 pub struct NativeFactory {
     cnn: Arc<QuantCnn>,
     luts: BTreeMap<String, Arc<Vec<i32>>>,
+    plans: BTreeMap<String, PlanLuts>,
     max_batch: usize,
     threads: usize,
 }
@@ -161,9 +170,22 @@ impl NativeFactory {
         NativeFactory {
             cnn: Arc::new(cnn),
             luts: luts.into_iter().map(|(k, v)| (k, Arc::new(v))).collect(),
+            plans: BTreeMap::new(),
             max_batch: max_batch.max(1),
             threads: threads.max(1),
         }
+    }
+
+    /// Register a compiled heterogeneous plan as a serving variant: the
+    /// variant's workers dispatch each layer through the plan's own LUT.
+    /// A plan shadows a uniform variant of the same name.
+    pub fn add_plan(&mut self, variant: &str, plan: &CompiledPlan) {
+        self.plans.insert(variant.to_string(), plan.build_luts());
+    }
+
+    /// The per-layer LUTs behind a plan variant (for reference checks).
+    pub fn plan_luts(&self, variant: &str) -> Option<&PlanLuts> {
+        self.plans.get(variant)
     }
 
     /// Real weights + real LUTs from the AOT artifact bundle, executed
@@ -210,7 +232,13 @@ impl BackendFactory for NativeFactory {
     }
 
     fn variants(&self) -> Vec<String> {
-        self.luts.keys().cloned().collect()
+        self.plans
+            .keys()
+            .chain(self.luts.keys())
+            .cloned()
+            .collect::<BTreeSet<String>>()
+            .into_iter()
+            .collect()
     }
 
     fn max_batch(&self) -> usize {
@@ -218,13 +246,19 @@ impl BackendFactory for NativeFactory {
     }
 
     fn create(&self, variant: &str) -> Result<Box<dyn Backend>> {
-        let lut = self
-            .luts
-            .get(variant)
-            .with_context(|| format!("no LUT for variant {variant:?}"))?;
+        let luts = match self.plans.get(variant) {
+            Some(plan) => plan.clone(),
+            None => {
+                let lut = self
+                    .luts
+                    .get(variant)
+                    .with_context(|| format!("no LUT for variant {variant:?}"))?;
+                PlanLuts::uniform(Arc::clone(lut))
+            }
+        };
         Ok(Box::new(NativeBackend {
             cnn: Arc::clone(&self.cnn),
-            lut: Arc::clone(lut),
+            luts,
             threads: self.threads,
             max_batch: self.max_batch,
         }))
@@ -437,38 +471,85 @@ pub fn select_backend(
     threads: usize,
     seed: u64,
 ) -> Result<(Arc<dyn BackendFactory>, ServingWorkload)> {
+    select_backend_with_plan(choice, dir, max_batch, threads, seed, None)
+}
+
+/// [`select_backend`] that additionally registers a compiled
+/// heterogeneous plan as a serving variant (`openacm serve --plan`).
+/// Plans execute through per-layer LUT dispatch, which only the native
+/// backend implements — combining `--plan` with a forced PJRT backend is
+/// an error, and `auto` with a plan prefers native even when artifacts
+/// exist.
+pub fn select_backend_with_plan(
+    choice: BackendChoice,
+    dir: &Path,
+    max_batch: usize,
+    threads: usize,
+    seed: u64,
+    plan: Option<(&str, &CompiledPlan)>,
+) -> Result<(Arc<dyn BackendFactory>, ServingWorkload)> {
     let have_artifacts = ArtifactStore::exists(dir);
-    match (choice, have_artifacts) {
-        (BackendChoice::Pjrt, false) => bail!(
+    if plan.is_some() && choice == BackendChoice::Pjrt {
+        bail!("compiled plans execute on the native backend; drop --backend pjrt or --plan");
+    }
+    // A plan forces the native path (per-layer LUT dispatch).
+    let native = plan.is_some() || choice == BackendChoice::Native;
+    match (choice, native, have_artifacts) {
+        (BackendChoice::Pjrt, _, false) => bail!(
             "--backend pjrt needs artifacts in {} — run `make artifacts` \
              (or use --backend native)",
             dir.display()
         ),
-        (BackendChoice::Pjrt | BackendChoice::Auto, true) => {
+        (_, false, true) => {
             let store = ArtifactStore::load(dir)?;
             let workload = ServingWorkload::from_store(&store);
             Ok((Arc::new(PjrtFactory::from_artifacts(&store)), workload))
         }
-        (BackendChoice::Native, true) => {
+        (_, true, true) => {
             let store = ArtifactStore::load(dir)?;
             let workload = ServingWorkload::from_store(&store);
-            let per_worker = (threads / store.luts.len().max(1)).max(1);
-            Ok((
-                Arc::new(NativeFactory::from_artifacts(&store, max_batch, per_worker)?),
-                workload,
-            ))
+            let variants = store.luts.len() + usize::from(plan.is_some());
+            let per_worker = (threads / variants.max(1)).max(1);
+            let mut factory = NativeFactory::from_artifacts(&store, max_batch, per_worker)?;
+            if let Some((name, plan)) = plan {
+                warn_on_model_mismatch(plan, factory.model());
+                factory.add_plan(name, plan);
+            }
+            Ok((Arc::new(factory), workload))
         }
-        (BackendChoice::Native | BackendChoice::Auto, false) => {
+        (_, _, false) => {
             println!(
                 "no artifacts in {} — native backend on a synthetic workload \
                  (labels = exact-variant predictions)",
                 dir.display()
             );
-            // Four paper-family variants share the budget.
-            let per_worker = (threads / paper_families().len().max(1)).max(1);
-            let (factory, workload) = synthetic_serving_setup(256, seed, max_batch, per_worker);
+            // Paper-family variants (+ any plan) share the thread budget.
+            let variants = paper_families().len() + usize::from(plan.is_some());
+            let per_worker = (threads / variants.max(1)).max(1);
+            let (mut factory, workload) =
+                synthetic_serving_setup(256, seed, max_batch, per_worker);
+            if let Some((name, plan)) = plan {
+                warn_on_model_mismatch(plan, factory.model());
+                factory.add_plan(name, plan);
+            }
             Ok((Arc::new(factory), workload))
         }
+    }
+}
+
+/// A plan's measured accuracy/energy claims only hold for the model it
+/// was compiled against; serving it on a different model still executes
+/// fine (the LUT assignment is model-independent), but the claims become
+/// meaningless — say so loudly instead of silently reporting compile-time
+/// numbers for the wrong model.
+fn warn_on_model_mismatch(plan: &CompiledPlan, model: &QuantCnn) {
+    if crate::compile::search::model_content_hash(model).0 != plan.model_hash {
+        eprintln!(
+            "WARNING: plan {:?} was compiled for a different model (hash mismatch) — \
+             its measured accuracy drop and energy estimates do not apply to the \
+             model being served; recompile with `openacm compile` against this model",
+            plan.name
+        );
     }
 }
 
@@ -518,6 +599,67 @@ mod tests {
         );
         assert!(be.infer_batch(&[short.as_slice()]).is_err(), "truncated image");
         assert!(be.infer_batch(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn plan_variant_dispatches_per_layer_luts() {
+        use crate::compile::plan::{LayerPlan, PLAN_VERSION};
+        use crate::config::spec::MultFamily;
+        use crate::nn::model::{layer_macs_per_image, LAYER_NAMES, N_LAYERS};
+
+        let macs = layer_macs_per_image();
+        let families = [
+            MultFamily::Exact,
+            MultFamily::Exact,
+            MultFamily::Mitchell,
+            MultFamily::Exact,
+        ];
+        let plan = CompiledPlan {
+            name: "unit".into(),
+            bits: 8,
+            budget_drop: 0.01,
+            model_hash: 1,
+            calib_hash: 2,
+            calib_n: 4,
+            exact_top1: 1.0,
+            plan_top1: 1.0,
+            exact_energy_per_image_j: 1.0,
+            plan_energy_per_image_j: 0.5,
+            layers: (0..N_LAYERS)
+                .map(|i| LayerPlan {
+                    layer: LAYER_NAMES[i].to_string(),
+                    family: families[i].clone(),
+                    energy_per_op_j: 1e-12,
+                    macs_per_image: macs[i],
+                    solo_drop: 0.0,
+                })
+                .collect(),
+        };
+        assert_eq!(PLAN_VERSION, 1);
+
+        let mut luts = BTreeMap::new();
+        luts.insert("exact".to_string(), crate::mult::behavioral::int8_lut(&MultFamily::Exact));
+        let mut f = NativeFactory::new(QuantCnn::random(6), luts, 8, 1);
+        f.add_plan("plan", &plan);
+        assert_eq!(
+            f.variants(),
+            vec!["exact".to_string(), "plan".to_string()]
+        );
+
+        // Served logits must bit-match a direct heterogeneous forward.
+        let images = synthetic_images(3, 13);
+        let views: Vec<&[u8]> = images.chunks(IMAGE_BYTES).collect();
+        let mut be = f.create("plan").unwrap();
+        let served = be.infer_batch(&views).unwrap();
+        let plan_luts = plan.build_luts();
+        let direct = f
+            .model()
+            .forward_batch_hetero(&plan_luts.layer_luts(), &views, 1);
+        assert_eq!(served, direct);
+        // And it must differ from the uniform exact variant (fc1 runs the
+        // Mitchell LUT).
+        let mut exact_be = f.create("exact").unwrap();
+        assert_ne!(exact_be.infer_batch(&views).unwrap(), served);
     }
 
     #[test]

@@ -78,6 +78,7 @@ fn cmd_stats(store: &DesignPointStore) -> Result<()> {
         ppa: u64,
         activity: u64,
         fyield: u64,
+        accuracy: u64,
     }
     let mut by_family: BTreeMap<String, FamilyAgg> = BTreeMap::new();
     store.for_each_record(|_, rec| {
@@ -87,6 +88,7 @@ fn cmd_stats(store: &DesignPointStore) -> Result<()> {
         f.ppa += rec.ppa.is_some() as u64;
         f.activity += rec.activity.is_some() as u64;
         f.fyield += rec.fyield.is_some() as u64;
+        f.accuracy += rec.accuracy.is_some() as u64;
     });
     let s = store.stats();
     println!(
@@ -98,7 +100,7 @@ fn cmd_stats(store: &DesignPointStore) -> Result<()> {
     );
     let mut t = Table::new(
         "records by family",
-        &["Family", "Records", "Error", "PPA", "Activity", "Yield"],
+        &["Family", "Records", "Error", "PPA", "Activity", "Yield", "Accuracy"],
     );
     for (family, agg) in &by_family {
         t.row(&[
@@ -108,6 +110,7 @@ fn cmd_stats(store: &DesignPointStore) -> Result<()> {
             agg.ppa.to_string(),
             agg.activity.to_string(),
             agg.fyield.to_string(),
+            agg.accuracy.to_string(),
         ]);
     }
     if by_family.is_empty() {

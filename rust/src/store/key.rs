@@ -88,6 +88,23 @@ impl KeyBuilder {
         self
     }
 
+    /// Length-prefixed raw bytes (e.g. quantized weight tensors, a
+    /// calibration image set) — the content-addressing primitive behind
+    /// the compile pass's model/calibration hashes.
+    pub fn bytes(&mut self, bs: &[u8]) -> &mut Self {
+        self.u32(bs.len() as u32);
+        self.buf.extend_from_slice(bs);
+        self
+    }
+
+    /// Fold a previously computed key in (hash composition: e.g. the
+    /// compile pass keys on `model hash × assignment × calibration hash`
+    /// without re-hashing the underlying tensors).
+    pub fn key(&mut self, k: Key128) -> &mut Self {
+        self.buf.extend_from_slice(&k.0.to_le_bytes());
+        self
+    }
+
     pub fn f64s(&mut self, vs: &[f64]) -> &mut Self {
         self.u32(vs.len() as u32);
         for &v in vs {
@@ -267,6 +284,21 @@ mod tests {
         for len in 0..=48 {
             assert!(seen.insert(murmur3_x64_128(&data[..len], 7)));
         }
+    }
+
+    #[test]
+    fn bytes_are_length_prefixed_and_composable() {
+        // Length prefixing: ("ab","c") and ("a","bc") must not collide.
+        let a = KeyBuilder::new("t/1").bytes(b"ab").bytes(b"c").finish();
+        let b = KeyBuilder::new("t/1").bytes(b"a").bytes(b"bc").finish();
+        assert_ne!(a, b);
+        // Key composition is deterministic and order-sensitive.
+        let inner = KeyBuilder::new("inner/1").u64(7).finish();
+        let c = KeyBuilder::new("t/1").key(inner).u64(1).finish();
+        let d = KeyBuilder::new("t/1").key(inner).u64(1).finish();
+        let e = KeyBuilder::new("t/1").u64(1).key(inner).finish();
+        assert_eq!(c, d);
+        assert_ne!(c, e);
     }
 
     #[test]

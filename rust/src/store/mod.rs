@@ -31,10 +31,12 @@
 pub mod cli;
 pub mod key;
 pub mod record;
+pub(crate) mod wire;
 
 pub use key::{Key128, KeyBuilder};
 pub use record::{
-    ActivityStats, DesignPointRecord, ErrorStats, PpaSummary, YieldStats, FORMAT_VERSION,
+    AccuracyStats, ActivityStats, DesignPointRecord, ErrorStats, PpaSummary, YieldStats,
+    FORMAT_VERSION,
 };
 
 use anyhow::{Context, Result};

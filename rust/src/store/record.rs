@@ -20,13 +20,18 @@
 use anyhow::{bail, Result};
 
 use super::key::{checksum64, Key128};
+use super::wire::{put_f64, put_str, put_u32, put_u64, Reader};
 use crate::mult::error_metrics::ErrorReport;
 use crate::ppa::report::MacroPpa;
 use crate::sim::activity::ActivityReport;
 use crate::yield_analysis::mc::McResult;
 
 pub const MAGIC: &[u8; 8] = b"OACMDPR\0";
-pub const FORMAT_VERSION: u32 = 1;
+/// v2: added the calibration-accuracy section (the compile pass's
+/// memoized per-assignment top-1 measurements). Every v1 record fails
+/// validation, reads as a miss and is recomputed — the documented
+/// whole-store invalidation path.
+pub const FORMAT_VERSION: u32 = 2;
 
 /// Error-metric section (mirrors [`ErrorReport`]).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -160,10 +165,23 @@ impl YieldStats {
     }
 }
 
+/// Calibration-accuracy section: one compile-pass measurement of a
+/// heterogeneous per-layer multiplier assignment's top-1 accuracy on a
+/// calibration set. The assignment, model and calibration set are all in
+/// the *key* (`"compile-accuracy/1"` domain); the record only carries the
+/// measured result.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AccuracyStats {
+    /// Measured top-1 accuracy on the calibration set, in [0, 1].
+    pub top1: f64,
+    /// Calibration-set size the measurement used.
+    pub samples: u64,
+}
+
 /// One persistent characterization record. Sections are optional so the
-/// error-metric, PPA/activity and functional-yield producers all flow
-/// through the same type (and file format) while only paying for what they
-/// computed.
+/// error-metric, PPA/activity, functional-yield and compile-accuracy
+/// producers all flow through the same type (and file format) while only
+/// paying for what they computed.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct DesignPointRecord {
     /// Family descriptor (e.g. `appro42[yang1x8]`) — metadata for `store
@@ -178,6 +196,7 @@ pub struct DesignPointRecord {
     pub ppa: Option<PpaSummary>,
     pub activity: Option<ActivityStats>,
     pub fyield: Option<YieldStats>,
+    pub accuracy: Option<AccuracyStats>,
 }
 
 impl DesignPointRecord {
@@ -235,6 +254,14 @@ impl DesignPointRecord {
                 put_f64(&mut payload, y.fom);
                 put_u64(&mut payload, y.sims);
                 put_u64(&mut payload, y.failures);
+            }
+        }
+        match &self.accuracy {
+            None => payload.push(0),
+            Some(a) => {
+                payload.push(1);
+                put_f64(&mut payload, a.top1);
+                put_u64(&mut payload, a.samples);
             }
         }
 
@@ -338,6 +365,14 @@ impl DesignPointRecord {
         } else {
             None
         };
+        let accuracy = if r.u8()? == 1 {
+            Some(AccuracyStats {
+                top1: r.f64()?,
+                samples: r.u64()?,
+            })
+        } else {
+            None
+        };
         if r.pos != r.buf.len() {
             bail!("{} trailing payload bytes", r.buf.len() - r.pos);
         }
@@ -353,65 +388,14 @@ impl DesignPointRecord {
                 ppa,
                 activity,
                 fyield,
+                accuracy,
             },
         ))
     }
 }
 
-fn put_u32(out: &mut Vec<u8>, v: u32) {
-    out.extend_from_slice(&v.to_le_bytes());
-}
-
-fn put_u64(out: &mut Vec<u8>, v: u64) {
-    out.extend_from_slice(&v.to_le_bytes());
-}
-
-fn put_f64(out: &mut Vec<u8>, v: f64) {
-    put_u64(out, v.to_bits());
-}
-
-fn put_str(out: &mut Vec<u8>, s: &str) {
-    put_u32(out, s.len() as u32);
-    out.extend_from_slice(s.as_bytes());
-}
-
-struct Reader<'a> {
-    buf: &'a [u8],
-    pos: usize,
-}
-
-impl<'a> Reader<'a> {
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.buf.len() - self.pos < n {
-            bail!("record truncated at byte {}", self.pos);
-        }
-        let s = &self.buf[self.pos..self.pos + n];
-        self.pos += n;
-        Ok(s)
-    }
-
-    fn u8(&mut self) -> Result<u8> {
-        Ok(self.take(1)?[0])
-    }
-
-    fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
-    }
-
-    fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
-    }
-
-    fn f64(&mut self) -> Result<f64> {
-        Ok(f64::from_bits(self.u64()?))
-    }
-
-    fn str(&mut self) -> Result<String> {
-        let n = self.u32()? as usize;
-        let bytes = self.take(n)?;
-        Ok(String::from_utf8_lossy(bytes).into_owned())
-    }
-}
+// Wire helpers (`put_*`, `Reader`) live in `super::wire`, shared with the
+// compiled-plan artifact format.
 
 #[cfg(test)]
 mod tests {
@@ -451,6 +435,10 @@ mod tests {
                 fom: 0.9,
                 sims: 640,
                 failures: 10,
+            }),
+            accuracy: Some(AccuracyStats {
+                top1: 0.96875,
+                samples: 256,
             }),
         }
     }

@@ -1,0 +1,237 @@
+//! The compile pass end to end: heterogeneous per-layer LUT dispatch
+//! bit-exactness, plan artifact round-trips through the serving stack,
+//! and the acceptance criteria of the accuracy-budgeted search (within
+//! budget, strict energy improvement, store-warm recompiles).
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use openacm::compile::plan::{CompiledPlan, LayerPlan, PlanLuts};
+use openacm::compile::search::{compile_budgeted, CalibrationSet, CompileOptions};
+use openacm::config::spec::MultFamily;
+use openacm::mult::behavioral::{int8_lut, paper_families};
+use openacm::nn::model::{
+    layer_macs_per_image, synthetic_images, LayerLuts, QuantCnn, IMG, LAYER_NAMES, N_LAYERS,
+};
+use openacm::runtime::NativeFactory;
+use openacm::store::DesignPointStore;
+
+fn scratch(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "openacm_compile_it_{tag}_{}_{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ))
+}
+
+/// A plan whose every layer runs `family` (energies are placeholders —
+/// these tests exercise execution, not the search).
+fn uniform_plan(family: &MultFamily) -> CompiledPlan {
+    let macs = layer_macs_per_image();
+    CompiledPlan {
+        name: format!("uniform_{}", family.name()),
+        bits: 8,
+        budget_drop: 0.0,
+        model_hash: 0,
+        calib_hash: 0,
+        calib_n: 0,
+        exact_top1: 1.0,
+        plan_top1: 1.0,
+        exact_energy_per_image_j: 1.0,
+        plan_energy_per_image_j: 1.0,
+        layers: (0..N_LAYERS)
+            .map(|l| LayerPlan {
+                layer: LAYER_NAMES[l].to_string(),
+                family: family.clone(),
+                energy_per_op_j: 1e-12,
+                macs_per_image: macs[l],
+                solo_drop: 0.0,
+            })
+            .collect(),
+    }
+}
+
+/// Satellite: per-layer LUT dispatch with a uniform assignment must be
+/// bit-identical to the model "rebuilt" with that single uniform config
+/// (the classic single-LUT path), across all paper families × batch
+/// {1, 32}.
+#[test]
+#[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+fn hetero_dispatch_matches_uniform_rebuild_all_families() {
+    let cnn = QuantCnn::random(0xD15);
+    for (name, family) in paper_families() {
+        let lut = int8_lut(&family);
+        let plan_luts = uniform_plan(&family).build_luts();
+        for batch in [1usize, 32] {
+            let images = synthetic_images(batch, 0xBA7C4 ^ batch as u64);
+            let views: Vec<&[u8]> = images.chunks(IMG * IMG).collect();
+            for threads in [1usize, 4] {
+                let uniform = cnn.forward_batch(&lut, &views, threads);
+                let hetero =
+                    cnn.forward_batch_hetero(&plan_luts.layer_luts(), &views, threads);
+                assert_eq!(
+                    uniform, hetero,
+                    "family {name}, batch {batch}, threads {threads}"
+                );
+            }
+            // Scalar oracle agrees too.
+            let hetero1 = cnn.forward_batch_hetero(&plan_luts.layer_luts(), &views, 1);
+            for (i, v) in views.iter().enumerate() {
+                assert_eq!(hetero1[i], cnn.forward(&lut, v), "family {name}, image {i}");
+            }
+        }
+    }
+}
+
+/// A genuinely mixed assignment served through the native backend must
+/// bit-match a direct heterogeneous forward, and the plan artifact must
+/// survive a disk round-trip on the way.
+#[test]
+fn mixed_plan_roundtrips_through_native_serving() {
+    let dir = scratch("serve");
+    std::fs::create_dir_all(&dir).unwrap();
+    let macs = layer_macs_per_image();
+    let families = [
+        MultFamily::Exact,
+        MultFamily::default_approx(8),
+        MultFamily::LogOur,
+        MultFamily::Exact,
+    ];
+    let plan = CompiledPlan {
+        name: "mixed".into(),
+        bits: 8,
+        budget_drop: 0.02,
+        model_hash: 7,
+        calib_hash: 8,
+        calib_n: 32,
+        exact_top1: 1.0,
+        plan_top1: 0.96875,
+        exact_energy_per_image_j: 2.0e-7,
+        plan_energy_per_image_j: 1.5e-7,
+        layers: (0..N_LAYERS)
+            .map(|l| LayerPlan {
+                layer: LAYER_NAMES[l].to_string(),
+                family: families[l].clone(),
+                energy_per_op_j: 2e-12,
+                macs_per_image: macs[l],
+                solo_drop: 0.0,
+            })
+            .collect(),
+    };
+    let path = dir.join("mixed.acmplan");
+    plan.save(&path).unwrap();
+    let loaded = CompiledPlan::load(&path).unwrap();
+    assert_eq!(loaded, plan);
+
+    let cnn = QuantCnn::random(0x5E12E);
+    let mut luts = BTreeMap::new();
+    luts.insert("exact".to_string(), int8_lut(&MultFamily::Exact));
+    let mut factory = NativeFactory::new(cnn, luts, 8, 1);
+    factory.add_plan("plan", &loaded);
+
+    let images = synthetic_images(5, 3);
+    let views: Vec<&[u8]> = images.chunks(IMG * IMG).collect();
+    let mut be = factory.create("plan").unwrap();
+    let served = be.infer_batch(&views).unwrap();
+
+    // Direct heterogeneous forward with independently built LUTs.
+    let direct_luts: Vec<Vec<i32>> = families.iter().map(int8_lut).collect();
+    let direct = factory.model().forward_batch_hetero(
+        &LayerLuts {
+            conv1: &direct_luts[0],
+            conv2: &direct_luts[1],
+            fc1: &direct_luts[2],
+            fc2: &direct_luts[3],
+        },
+        &views,
+        2,
+    );
+    assert_eq!(served, direct, "served logits must bit-match direct forward");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Acceptance: a budgeted compile lands within budget with strictly
+/// better energy than all-exact, its plan round-trips through the native
+/// backend bit-exactly, and a second compile with the same inputs is
+/// store-warm.
+#[test]
+#[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+fn budgeted_compile_is_within_budget_warm_and_servable() {
+    let dir = scratch("accept");
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = DesignPointStore::open(&dir).unwrap();
+    let model = QuantCnn::random(0xACCE97);
+    let opts = CompileOptions {
+        budget_drop: 0.05,
+        calib_n: 128,
+        ppa_ops: 300,
+        threads: 4,
+        ..CompileOptions::new(0.05)
+    };
+    let calib = CalibrationSet::synthetic(&model, opts.calib_n, opts.seed, opts.threads);
+
+    let plan = compile_budgeted(&model, &calib, &opts, Some(&store));
+
+    // Within budget, by real measurement.
+    assert!(
+        plan.drop_vs_exact() <= opts.budget_drop + 1e-9,
+        "drop {} exceeds budget {}",
+        plan.drop_vs_exact(),
+        opts.budget_drop
+    );
+    // Synthetic labels are the exact predictions, so the baseline is 1.0.
+    assert_eq!(plan.exact_top1, 1.0);
+    // Strictly better energy than the all-exact plan.
+    assert!(
+        plan.plan_energy_per_image_j < plan.exact_energy_per_image_j,
+        "plan energy {} not below exact {}",
+        plan.plan_energy_per_image_j,
+        plan.exact_energy_per_image_j
+    );
+    assert!(plan.layers.iter().any(|l| l.family != MultFamily::Exact));
+
+    // Round-trip through the serving stack: NativeBackend logits
+    // bit-match a direct heterogeneous forward_batch.
+    let plan_luts = plan.build_luts();
+    let mut luts = BTreeMap::new();
+    luts.insert("exact".to_string(), int8_lut(&MultFamily::Exact));
+    let mut factory = NativeFactory::new(model.clone(), luts, 16, 2);
+    factory.add_plan("plan", &plan);
+    let images = synthetic_images(16, 0xF00D);
+    let views: Vec<&[u8]> = images.chunks(IMG * IMG).collect();
+    let mut be = factory.create("plan").unwrap();
+    let served = be.infer_batch(&views).unwrap();
+    let direct = model.forward_batch_hetero(&plan_luts.layer_luts(), &views, 1);
+    assert_eq!(served, direct);
+
+    // Second compile with identical inputs: bit-identical plan, ≥90% of
+    // store lookups served warm.
+    let before = store.stats();
+    let again = compile_budgeted(&model, &calib, &opts, Some(&store));
+    let delta = store.stats().since(&before);
+    assert_eq!(again, plan, "warm recompile must replay bit-identically");
+    assert!(
+        delta.hit_rate() >= 0.9,
+        "recompile only {:.0}% warm ({} hits / {} misses)",
+        delta.hit_rate() * 100.0,
+        delta.hits,
+        delta.misses
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Uniform PlanLuts share one table; a plan over four distinct families
+/// builds four distinct tables.
+#[test]
+fn plan_lut_sharing() {
+    let u = PlanLuts::uniform(Arc::new(vec![0i32; 65536]));
+    for l in 1..N_LAYERS {
+        assert!(Arc::ptr_eq(&u.layers[0], &u.layers[l]));
+    }
+    let plan = uniform_plan(&MultFamily::Mitchell);
+    let luts = plan.build_luts();
+    for l in 1..N_LAYERS {
+        assert!(Arc::ptr_eq(&luts.layers[0], &luts.layers[l]));
+    }
+}

@@ -1,18 +1,28 @@
-//! Cold-vs-warm accuracy-budgeted compile through the design-point store
-//! — the compile pass's headline numbers: a repeated compile must be
-//! served from memoized measurements at a wide margin, and the emitted
-//! plan must beat the all-exact baseline's energy within budget.
+//! Cold / incremental / warm accuracy-budgeted compile through the
+//! design-point store — the compile pass's headline numbers:
+//!
+//! * **cold** runs the historical full-forward evaluator on an empty
+//!   store (every probe pays a whole calibration forward);
+//! * **incremental** runs the suffix-replay evaluator on an empty store
+//!   (prefix checkpoints + sparse delta replay — same measurements, same
+//!   plan bytes, a fraction of the GEMM MACs);
+//! * **warm** re-compiles against the populated store (served from
+//!   memoized measurements at a wide margin).
 //!
 //! ```text
 //! cargo bench --bench compile               # full candidate space
 //! OPENACM_SMOKE=1 cargo bench --bench compile   # CI smoke (2 fc layers)
 //! ```
 //!
-//! Writes `BENCH_compile.json` (per-case ns/iter, warm_over_cold, and the
-//! plan-vs-exact energy ratio) for the CI artifact trail.
+//! Writes `BENCH_compile.json` (per-case ns/iter, warm/incremental
+//! speedups, the replayed-MAC counters of the sensitivity phase, and the
+//! plan-vs-exact energy ratio) for the CI artifact trail. Asserts:
+//! the incremental path replays strictly fewer MACs than cold, the
+//! sensitivity-profiling MAC reduction is ≥ 3×, and the incremental and
+//! cold compiles emit byte-identical `.acmplan` artifacts.
 
 use openacm::bench::harness::{bench, black_box, BenchJson};
-use openacm::compile::search::{compile_budgeted, CalibrationSet, CompileOptions};
+use openacm::compile::search::{compile_budgeted, CalibrationSet, CompileOptions, Compiler};
 use openacm::nn::model::QuantCnn;
 use openacm::store::DesignPointStore;
 use openacm::util::threadpool::ThreadPool;
@@ -32,12 +42,18 @@ fn main() {
         opts.calib_n = 128;
         opts.ppa_ops = 300;
     }
+    let cold_opts = CompileOptions {
+        incremental: false,
+        ..opts.clone()
+    };
     let model = QuantCnn::random(opts.seed);
     let calib = CalibrationSet::synthetic(&model, opts.calib_n, opts.seed, opts.threads);
-    let dir = std::env::temp_dir().join(format!("openacm_compile_bench_{}", std::process::id()));
-    let _ = std::fs::remove_dir_all(&dir);
+    let base = std::env::temp_dir().join(format!("openacm_compile_bench_{}", std::process::id()));
+    let cold_dir = base.join("cold");
+    let inc_dir = base.join("incremental");
+    let _ = std::fs::remove_dir_all(&base);
     println!(
-        "compile cold-vs-warm: budget {:.2}%, {} calibration images, {} threads{}",
+        "compile cold-vs-incremental-vs-warm: budget {:.2}%, {} calibration images, {} threads{}",
         opts.budget_drop * 100.0,
         calib.n,
         opts.threads,
@@ -46,31 +62,99 @@ fn main() {
 
     let mut json = BenchJson::new("compile");
 
-    // Cold: every iteration starts from an empty store.
-    let cold = bench("budgeted compile (cold store)", 0, 2, || {
-        let _ = std::fs::remove_dir_all(&dir);
-        let store = DesignPointStore::open(&dir).expect("open store");
-        black_box(compile_budgeted(&model, &calib, &opts, Some(&store)));
+    // Cold: full-forward evaluator, every iteration from an empty store.
+    let cold = bench("budgeted compile (cold, full forwards)", 0, 2, || {
+        let _ = std::fs::remove_dir_all(&cold_dir);
+        let store = DesignPointStore::open(&cold_dir).expect("open store");
+        black_box(compile_budgeted(&model, &calib, &cold_opts, Some(&store)));
     });
     json.case(&cold);
 
-    // Warm: the store holds every measurement from the last cold run.
-    let warm = bench("budgeted compile (warm store)", 1, if smoke { 5 } else { 3 }, || {
-        let store = DesignPointStore::open(&dir).expect("open store");
+    // Incremental: suffix-replay evaluator, every iteration from an
+    // empty store — same measurements, only the replay work differs.
+    let incremental = bench("budgeted compile (incremental, cold store)", 0, 2, || {
+        let _ = std::fs::remove_dir_all(&inc_dir);
+        let store = DesignPointStore::open(&inc_dir).expect("open store");
         black_box(compile_budgeted(&model, &calib, &opts, Some(&store)));
     });
+    json.case(&incremental);
+
+    // Warm: the store holds every measurement from the last run.
+    let warm = bench(
+        "budgeted compile (warm store)",
+        1,
+        if smoke { 5 } else { 3 },
+        || {
+            let store = DesignPointStore::open(&inc_dir).expect("open store");
+            black_box(compile_budgeted(&model, &calib, &opts, Some(&store)));
+        },
+    );
     json.case(&warm);
 
-    let speedup = cold.mean_ns / warm.mean_ns;
-    println!("→ warm-store speedup over cold compile: {speedup:.1}x");
-    json.ratio("warm_over_cold", speedup);
+    let warm_speedup = cold.mean_ns / warm.mean_ns;
+    let inc_speedup = cold.mean_ns / incremental.mean_ns;
+    println!("→ warm-store speedup over cold compile: {warm_speedup:.1}x");
+    println!("→ incremental wall-clock speedup over cold compile: {inc_speedup:.1}x");
+    json.ratio("warm_over_cold", warm_speedup);
+    json.ratio("incremental_over_cold", inc_speedup);
+
+    // Replayed-MAC accounting of the sensitivity phase (baseline + every
+    // solo probe), measured on a fresh incremental engine with no store:
+    // `full_macs` is exactly what the cold evaluator executes for the
+    // same measurements, `replayed_macs` what the incremental one did.
+    let probe = Compiler::new(&model, &calib, opts.clone(), None);
+    let exact_top1 = probe.measured_top1(&[0; 4]);
+    black_box(probe.sensitivity(exact_top1));
+    let stats = probe.stats();
+    println!(
+        "→ sensitivity profiling: {} replayed vs {} cold-equivalent GEMM MACs \
+         ({:.2}x fewer; {} as sparse deltas, {} free probes)",
+        stats.replayed_macs,
+        stats.full_macs,
+        stats.mac_reduction(),
+        stats.delta_macs,
+        stats.free_probes,
+    );
+    json.ratio("sensitivity_mac_reduction", stats.mac_reduction());
+    json.counter("sensitivity_cold_macs", stats.full_macs as f64);
+    json.counter("sensitivity_incremental_macs", stats.replayed_macs as f64);
+    json.counter("sensitivity_delta_macs", stats.delta_macs as f64);
+    assert!(
+        stats.replayed_macs < stats.full_macs,
+        "incremental sensitivity must replay strictly fewer MACs than cold \
+         ({} vs {})",
+        stats.replayed_macs,
+        stats.full_macs
+    );
+    assert!(
+        stats.mac_reduction() >= 3.0,
+        "sensitivity-profiling MAC reduction below target: {:.2}x < 3x",
+        stats.mac_reduction()
+    );
+
+    // A/B equivalence: the two evaluators' plans must serialize to
+    // identical bytes (each store is warm in its own mode by now, and a
+    // warm replay is bit-identical by the store round-trip guarantee).
+    let cold_store = DesignPointStore::open(&cold_dir).expect("open store");
+    let inc_store = DesignPointStore::open(&inc_dir).expect("open store");
+    let plan_cold = compile_budgeted(&model, &calib, &cold_opts, Some(&cold_store));
+    let before = inc_store.stats();
+    let plan = compile_budgeted(&model, &calib, &opts, Some(&inc_store));
+    let s = inc_store.stats().since(&before);
+    assert_eq!(plan, plan_cold, "incremental and cold plans must match");
+    let pa = base.join("plan_incremental.acmplan");
+    let pb = base.join("plan_cold.acmplan");
+    plan.save(&pa).expect("save plan");
+    plan_cold.save(&pb).expect("save plan");
+    assert_eq!(
+        std::fs::read(&pa).expect("read plan"),
+        std::fs::read(&pb).expect("read plan"),
+        "incremental and cold .acmplan artifacts must be byte-identical"
+    );
+    println!("→ A/B check: incremental and cold .acmplan artifacts byte-identical");
 
     // Verification pass: the warm compile must really be store-served and
     // the plan must beat all-exact energy within the budget.
-    let store = DesignPointStore::open(&dir).expect("open store");
-    let before = store.stats();
-    let plan = compile_budgeted(&model, &calib, &opts, Some(&store));
-    let s = store.stats().since(&before);
     println!(
         "→ verification pass: {} hits / {} misses ({:.0}% served from store)",
         s.hits,
@@ -103,5 +187,5 @@ fn main() {
         Ok(path) => println!("wrote {}", path.display()),
         Err(e) => eprintln!("could not write bench json: {e}"),
     }
-    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&base);
 }

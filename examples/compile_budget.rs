@@ -6,11 +6,16 @@
 //!
 //! All three compiles share one design-point store, so the sensitivity
 //! profile and every overlapping assignment measurement is paid for once
-//! (the budget sweep is mostly store-warm after the first compile).
+//! (the budget sweep is mostly store-warm after the first compile) — and
+//! each engine borrows the calibration set instead of materializing its
+//! own view of it, so sweeping more budget points costs no extra memory.
+//! Fresh measurements run through the incremental suffix-replay evaluator
+//! (`--no-incremental` falls back to full forwards; plans are
+//! byte-identical either way).
 //!
 //! ```text
 //! cargo run --release --example compile_budget -- [--calib 256] [--seed N]
-//!     [--rows 16] [--smoke] [--no-cache] [--store DIR]
+//!     [--rows 16] [--smoke] [--no-cache] [--store DIR] [--no-incremental]
 //! ```
 
 use anyhow::Result;
@@ -23,7 +28,7 @@ use openacm::util::cli::Args;
 use openacm::util::threadpool::ThreadPool;
 
 fn main() -> Result<()> {
-    let args = Args::from_env(false, &["no-cache", "smoke"])?;
+    let args = Args::from_env(false, &["no-cache", "smoke", "no-incremental"])?;
     let smoke = args.flag("smoke");
     let budgets_pct = [0.0f64, 0.5, 2.0];
     let threads = args.usize_or("threads", ThreadPool::default_parallelism())?;
@@ -38,6 +43,7 @@ fn main() -> Result<()> {
     base.calib_n = args.usize_or("calib", base.calib_n)?;
     base.seed = args.u64_or("seed", base.seed)?;
     base.threads = threads;
+    base.incremental = !args.flag("no-incremental");
 
     let model = QuantCnn::random(base.seed);
     let calib = CalibrationSet::synthetic(&model, base.calib_n, base.seed, threads);

@@ -86,6 +86,7 @@ pub struct BenchJson {
     name: String,
     cases: Vec<BenchResult>,
     ratios: Vec<(String, f64)>,
+    counters: Vec<(String, f64)>,
 }
 
 impl BenchJson {
@@ -94,6 +95,7 @@ impl BenchJson {
             name: name.to_string(),
             cases: Vec::new(),
             ratios: Vec::new(),
+            counters: Vec::new(),
         }
     }
 
@@ -105,6 +107,13 @@ impl BenchJson {
     /// Record a named speedup ratio (e.g. `"warm_over_cold"` → 42.0).
     pub fn ratio(&mut self, label: &str, value: f64) {
         self.ratios.push((label.to_string(), value));
+    }
+
+    /// Record a named absolute counter (e.g. `"replayed_macs"` → 1.9e8) —
+    /// kept in a separate JSON section so ratio consumers never chart raw
+    /// counts under ratio semantics.
+    pub fn counter(&mut self, label: &str, value: f64) {
+        self.counters.push((label.to_string(), value));
     }
 
     /// Render the JSON document (hand-rolled: the build is offline, no
@@ -134,6 +143,16 @@ impl BenchJson {
                 json_escape(k),
                 json_num(*v),
                 if i + 1 < self.ratios.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  },\n");
+        s.push_str("  \"counters\": {\n");
+        for (i, (k, v)) in self.counters.iter().enumerate() {
+            s.push_str(&format!(
+                "    \"{}\": {}{}\n",
+                json_escape(k),
+                json_num(*v),
+                if i + 1 < self.counters.len() { "," } else { "" }
             ));
         }
         s.push_str("  }\n}\n");
@@ -288,12 +307,15 @@ mod tests {
         });
         j.ratio("warm_over_cold", 42.5);
         j.ratio("bad", f64::INFINITY);
+        j.counter("replayed_macs", 3.0e9);
         let s = j.render();
         assert!(s.contains("\"name\": \"unit_test\""));
         assert!(s.contains("case \\\"a\\\""));
         assert!(s.contains("\"mean_ns\": 1500"));
         assert!(s.contains("\"warm_over_cold\": 42.5"));
         assert!(s.contains("\"bad\": null"));
+        assert!(s.contains("\"counters\""));
+        assert!(s.contains("\"replayed_macs\": 3000000000"));
         // Balanced braces/brackets (cheap well-formedness check).
         assert_eq!(s.matches('{').count(), s.matches('}').count());
         assert_eq!(s.matches('[').count(), s.matches(']').count());

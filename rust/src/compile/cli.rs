@@ -4,6 +4,7 @@
 //! openacm compile --spec specs/dcim16x8_appro42.toml --budget 0.5
 //!     [--calib N] [--seed N] [--threads N] [--out plan.acmplan]
 //!     [--artifacts DIR] [--store DIR | --no-cache] [--smoke]
+//!     [--no-incremental]
 //! ```
 //!
 //! `--budget` is the allowed top-1 drop vs the all-exact baseline in
@@ -12,13 +13,16 @@
 //! artifact bundle when present, else a deterministic synthetic model.
 //! `--smoke` runs the CI configuration: tiny calibration set, reduced
 //! candidate space, only the two fc layers searchable.
+//! `--no-incremental` disables suffix-replay evaluation (A/B debugging
+//! escape hatch: the emitted plan is byte-identical either way, only the
+//! amount of replayed GEMM work differs — see DESIGN.md §Compile pass).
 
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use super::plan::CompiledPlan;
-use super::search::{compile_budgeted, CalibrationSet, CompileOptions};
+use super::search::{CalibrationSet, CompileOptions, Compiler};
 use crate::bench::harness::{sci, Table};
 use crate::config::toml::TomlDoc;
 use crate::nn::model::{QuantCnn, IMG};
@@ -59,6 +63,7 @@ pub fn cmd_compile(args: &Args) -> Result<()> {
     opts.calib_n = args.usize_or("calib", opts.calib_n)?;
     opts.seed = args.u64_or("seed", opts.seed)?;
     opts.threads = args.usize_or("threads", ThreadPool::default_parallelism())?;
+    opts.incremental = !args.flag("no-incremental");
     let store = crate::store::cli::store_from_args(args)?;
 
     // Real quantized weights AND the real labeled dataset when the AOT
@@ -100,11 +105,28 @@ pub fn cmd_compile(args: &Args) -> Result<()> {
         if smoke { " [smoke]" } else { "" }
     );
     let t0 = Instant::now();
-    let mut plan = compile_budgeted(&model, &calib, &opts, store.as_ref());
+    let compiler = Compiler::new(&model, &calib, opts.clone(), store.as_ref());
+    let mut plan = compiler.compile();
     plan.name = format!("{spec_name}_b{budget_pct}");
     let elapsed = t0.elapsed();
+    let stats = compiler.stats();
 
     print_plan(&plan);
+    if opts.incremental {
+        println!(
+            "incremental evaluation: {} measurements ({} memoized, {} store-served, \
+             {} free via LUT canonicalization), {:.1}x fewer GEMM MACs than cold \
+             ({} replayed vs {} cold-equivalent, {} as sparse deltas)",
+            stats.evaluations,
+            stats.memo_hits,
+            stats.store_hits,
+            stats.free_probes,
+            stats.mac_reduction(),
+            stats.replayed_macs,
+            stats.full_macs,
+            stats.delta_macs,
+        );
+    }
     println!(
         "\ncompiled in {:.2}s: measured top-1 {:.4} (exact {:.4}, drop {:.2}% <= budget {budget_pct}%), \
          energy/image {} J vs exact {} J ({:.1}% saving)",

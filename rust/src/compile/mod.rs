@@ -9,7 +9,13 @@
 //!   energy descent with true-accuracy validation, pairwise-swap local
 //!   refinement; every measurement memoized in the design-point store
 //!   (`model hash × assignment × calibration hash`), so repeated compiles
-//!   and budget sweeps are store-warm.
+//!   and budget sweeps are store-warm. Fresh measurements run through the
+//!   **incremental evaluator**: prefix-activation checkpoints (pinned
+//!   all-exact chain + LRU) and sparse linear delta replay make each
+//!   accuracy probe cost only the suffix from the first changed layer,
+//!   bit-identically to the full forward (see DESIGN.md §Compile pass
+//!   "Incremental evaluation"; `--no-incremental` keeps the full path
+//!   for A/B debugging).
 //! * [`plan`] — the `.acmplan` artifact: per-layer multiplier config +
 //!   energy/MAC bookkeeping + baseline/plan accuracy, with magic/version/
 //!   checksum framing; [`CompiledPlan::build_luts`] reconstructs the
@@ -29,5 +35,5 @@ pub mod search;
 pub use plan::{CompiledPlan, LayerPlan, PlanLuts, PLAN_VERSION};
 pub use search::{
     compile_budgeted, candidate_space, model_content_hash, CalibrationSet, Candidate,
-    CompileOptions, Compiler,
+    CompileOptions, Compiler, SearchStats,
 };

@@ -36,9 +36,43 @@
 //! budget sweep sharing one store — is served from disk. The search is
 //! deterministic, so a warm re-compile replays the identical key sequence
 //! and returns a bit-identical plan.
+//!
+//! ## Incremental evaluation (suffix replay)
+//!
+//! A fresh measurement no longer pays a full calibration forward. The
+//! engine pins the all-exact baseline as a [`ReferenceChain`] (per-layer
+//! checkpoints + raw GEMM accumulators) and keeps a small LRU of prefix
+//! checkpoints keyed on `model hash × calibration hash × per-layer family
+//! prefix`; measuring an assignment then
+//!
+//! 1. **canonicalizes** it by LUT content (families whose int8 LUT is
+//!    byte-identical — e.g. `addertree` vs `exact` — share one
+//!    measurement, served without any forward);
+//! 2. resumes from the **deepest cached prefix** (the pinned all-exact
+//!    chain for exact prefixes — the case every sensitivity probe hits —
+//!    or the LRU, which greedy/refinement trials populate with the
+//!    current assignment's prefixes as a side effect of measuring);
+//! 3. replays plain stages through the **last non-exact layer**, then
+//!    switches to **sparse linear delta replay**
+//!    ([`QuantCnn::delta_resume_exact`]) for the all-exact suffix, whose
+//!    cost scales with the activation entries the swap actually changed.
+//!
+//! Every mechanism reuses only values proven byte-identical (checkpoint
+//! prefixes, LUT contents, exact-LUT linearity), so measured accuracies —
+//! and therefore the emitted plan and every store record — are
+//! bit-identical to the non-incremental path (`--no-incremental`, or
+//! [`CompileOptions::incremental`] = false, keeps that path available for
+//! A/B debugging). Probe batches arrive grouped by earliest-changed layer
+//! by construction: the sensitivity loops vary the candidate within one
+//! layer before moving on, and greedy/refinement trials share the current
+//! assignment's prefix, which the LRU retains between probes. Suffix
+//! GEMMs run on the existing thread pool ([`parallel_map`] row tiles).
+//! [`SearchStats`] counts replayed vs cold-equivalent MACs;
+//! `benches/compile.rs` tracks the reduction across PRs.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
+use std::rc::Rc;
 use std::sync::Arc;
 
 use crate::config::spec::{CompressorKind, MacroSpec, MultFamily};
@@ -46,7 +80,8 @@ use crate::dse::sweep::{candidates, DSE_SEED};
 use crate::mult::behavioral::int8_lut;
 use crate::nn::eval::argmax;
 use crate::nn::model::{
-    layer_macs_per_image, synthetic_images, LayerLuts, QuantCnn, IMG, LAYER_NAMES, N_LAYERS,
+    layer_macs_per_image, synthetic_images, BatchCheckpoint, LayerLuts, QuantCnn, ReferenceChain,
+    IMG, LAYER_NAMES, N_LAYERS,
 };
 use crate::ppa::report::analyze_macro_cached;
 use crate::store::{AccuracyStats, DesignPointRecord, DesignPointStore, Key128, KeyBuilder};
@@ -85,6 +120,10 @@ pub struct CompileOptions {
     /// Use the reduced smoke candidate space instead of the full family
     /// space.
     pub smoke_space: bool,
+    /// Evaluate candidates incrementally (prefix checkpoints + suffix /
+    /// delta replay). Off = the historical full-forward path; results are
+    /// bit-identical either way (`openacm compile --no-incremental`).
+    pub incremental: bool,
 }
 
 impl CompileOptions {
@@ -104,6 +143,7 @@ impl CompileOptions {
             refine_passes: 2,
             shortlist: 4,
             smoke_space: false,
+            incremental: true,
         }
     }
 
@@ -224,6 +264,22 @@ pub fn candidate_space(opts: &CompileOptions, store: Option<&DesignPointStore>) 
     })
 }
 
+/// Candidate index → lowest candidate index with a byte-identical int8
+/// LUT. Different family labels can compile to the same product table
+/// (e.g. the adder-tree baseline is functionally the exact multiplier);
+/// measurements of such twins are interchangeable bit-for-bit, so the
+/// incremental engine evaluates one representative per content class.
+fn canonical_map(cands: &[Candidate]) -> Vec<usize> {
+    let mut canon: Vec<usize> = Vec::with_capacity(cands.len());
+    for (i, c) in cands.iter().enumerate() {
+        let rep = (0..i)
+            .find(|&j| canon[j] == j && cands[j].lut == c.lut)
+            .unwrap_or(i);
+        canon.push(rep);
+    }
+    canon
+}
+
 /// Content hash of a quantized model: weights, scales and biases by exact
 /// bit pattern — part of every memoization key, stored in the plan so a
 /// served plan can be matched back to the model it was compiled for.
@@ -243,14 +299,103 @@ pub fn model_content_hash(model: &QuantCnn) -> Key128 {
 /// A per-layer assignment: candidate index per layer (0 = exact).
 pub type Assignment = [usize; N_LAYERS];
 
+/// Work counters of one compile run — the incremental evaluator's
+/// headline numbers (`benches/compile.rs` asserts on the MAC reduction).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SearchStats {
+    /// In-memory memo hits on the raw assignment (same memo the
+    /// non-incremental engine keeps).
+    pub memo_hits: u64,
+    /// Design-point-store hits.
+    pub store_hits: u64,
+    /// Measurements neither the memo nor the store could serve.
+    pub evaluations: u64,
+    /// Evaluations served through LUT-content canonicalization without
+    /// any forward (byte-identical LUTs ⇒ byte-identical measurement).
+    pub free_probes: u64,
+    /// GEMM MAC-equivalents this engine actually executed (stage GEMMs +
+    /// sparse delta updates).
+    pub replayed_macs: u64,
+    /// MAC-equivalents the full-forward path would have executed for the
+    /// same evaluations; `replayed_macs == full_macs` when incremental
+    /// evaluation is off.
+    pub full_macs: u64,
+    /// Portion of `replayed_macs` executed as sparse linear delta
+    /// updates.
+    pub delta_macs: u64,
+    /// Suffix replays that started from a cached prefix deeper than the
+    /// shared depth-0 input checkpoint.
+    pub prefix_hits: u64,
+    /// All-exact reference-chain builds (one per engine, lazily).
+    pub anchor_builds: u64,
+}
+
+impl SearchStats {
+    /// How many times fewer MACs the engine replayed than the cold
+    /// full-forward path would have (1.0 when incremental is off).
+    pub fn mac_reduction(&self) -> f64 {
+        if self.replayed_macs == 0 {
+            return 1.0;
+        }
+        self.full_macs as f64 / self.replayed_macs as f64
+    }
+}
+
+/// Entries the prefix LRU keeps. Checkpoints are a few hundred KiB per
+/// calibration batch at the conv depths, so a dozen entries comfortably
+/// cover the current assignment's prefix chain plus in-flight probes.
+const PREFIX_CACHE_CAP: usize = 12;
+
+/// Small LRU of prefix checkpoints, keyed on
+/// `model hash × calibration hash × canonical family prefix`.
+struct PrefixCache {
+    cap: usize,
+    /// Front = most recently used.
+    entries: Vec<(Key128, Rc<BatchCheckpoint>)>,
+}
+
+impl PrefixCache {
+    fn new(cap: usize) -> PrefixCache {
+        PrefixCache {
+            cap,
+            entries: Vec::new(),
+        }
+    }
+
+    fn get(&mut self, key: Key128) -> Option<Rc<BatchCheckpoint>> {
+        let pos = self.entries.iter().position(|(k, _)| *k == key)?;
+        let e = self.entries.remove(pos);
+        let ck = Rc::clone(&e.1);
+        self.entries.insert(0, e);
+        Some(ck)
+    }
+
+    fn put(&mut self, key: Key128, ck: Rc<BatchCheckpoint>) {
+        if let Some(pos) = self.entries.iter().position(|(k, _)| *k == key) {
+            self.entries.remove(pos);
+        }
+        self.entries.insert(0, (key, ck));
+        self.entries.truncate(self.cap);
+    }
+}
+
+/// The pinned all-exact baseline: reference chain (prefix checkpoints at
+/// every depth + raw accumulators) and its measured top-1.
+struct Anchor {
+    chain: ReferenceChain,
+    top1: f64,
+}
+
 /// The search engine. Holds the model, calibration set, candidate space
 /// and store handle for one compile run.
 pub struct Compiler<'a> {
     model: &'a QuantCnn,
     model_hash: Key128,
     calib: &'a CalibrationSet,
-    calib_views: Vec<&'a [u8]>,
     cands: Vec<Candidate>,
+    /// Candidate index → lowest candidate index with a byte-identical
+    /// LUT (content canonicalization; `canon[0] == 0` is the exact LUT).
+    canon: Vec<usize>,
     macs: [u64; N_LAYERS],
     opts: CompileOptions,
     store: Option<&'a DesignPointStore>,
@@ -259,6 +404,12 @@ pub struct Compiler<'a> {
     /// refinement passes retry combinations), and without it every revisit
     /// in a store-less run would pay a full calibration forward.
     evals: RefCell<HashMap<Assignment, f64>>,
+    /// Canonical-assignment memo (incremental mode): raw assignments with
+    /// byte-identical LUTs share one measured value.
+    canon_evals: RefCell<HashMap<Assignment, f64>>,
+    anchor: RefCell<Option<Anchor>>,
+    prefixes: RefCell<PrefixCache>,
+    stats: RefCell<SearchStats>,
 }
 
 impl<'a> Compiler<'a> {
@@ -269,17 +420,58 @@ impl<'a> Compiler<'a> {
         store: Option<&'a DesignPointStore>,
     ) -> Compiler<'a> {
         let cands = candidate_space(&opts, store);
+        Compiler::assemble(model, calib, cands, opts, store)
+    }
+
+    /// Wire an engine around an explicit candidate space (tests use this
+    /// to skip PPA characterization).
+    fn assemble(
+        model: &'a QuantCnn,
+        calib: &'a CalibrationSet,
+        cands: Vec<Candidate>,
+        opts: CompileOptions,
+        store: Option<&'a DesignPointStore>,
+    ) -> Compiler<'a> {
+        if opts.incremental {
+            // Sparse delta replay leans on candidate 0's LUT being the
+            // *linear* exact product (`lut[a][w] == a·w`); everything
+            // downstream of a probe is reconstructed under that identity,
+            // so verify it once up front (65536 integer compares).
+            let lut = &cands[0].lut;
+            assert_eq!(lut.len(), 65536);
+            let linear = (0usize..256).all(|a| {
+                let ai = (a as u8) as i8 as i32;
+                (0usize..256).all(|b| {
+                    let bi = (b as u8) as i8 as i32;
+                    lut[(a << 8) | b] == ai * bi
+                })
+            });
+            assert!(
+                linear,
+                "incremental evaluation requires candidate 0 to be the exact product LUT"
+            );
+        }
+        let canon = canonical_map(&cands);
         Compiler {
             model,
             model_hash: model_content_hash(model),
-            calib_views: calib.views(),
             calib,
             cands,
+            canon,
             macs: layer_macs_per_image(),
             opts,
             store,
             evals: RefCell::new(HashMap::new()),
+            canon_evals: RefCell::new(HashMap::new()),
+            anchor: RefCell::new(None),
+            prefixes: RefCell::new(PrefixCache::new(PREFIX_CACHE_CAP)),
+            stats: RefCell::new(SearchStats::default()),
         }
+    }
+
+    /// Work counters of this run so far.
+    pub fn stats(&self) -> SearchStats {
+        *self.stats.borrow()
     }
 
     /// The candidate configurations this run searches over.
@@ -304,16 +496,8 @@ impl<'a> Compiler<'a> {
         kb.finish()
     }
 
-    fn measure(&self, asg: &Assignment) -> f64 {
-        let luts = LayerLuts {
-            conv1: &self.cands[asg[0]].lut,
-            conv2: &self.cands[asg[1]].lut,
-            fc1: &self.cands[asg[2]].lut,
-            fc2: &self.cands[asg[3]].lut,
-        };
-        let logits = self
-            .model
-            .forward_batch_hetero(&luts, &self.calib_views, self.opts.threads);
+    /// Score per-image logits against the calibration labels.
+    fn top1_of_logits(&self, logits: &[Vec<f32>]) -> f64 {
         let mut correct = 0usize;
         for (row, &label) in logits.iter().zip(&self.calib.labels) {
             if argmax(row) == label {
@@ -323,36 +507,209 @@ impl<'a> Compiler<'a> {
         correct as f64 / self.calib.n.max(1) as f64
     }
 
+    /// The historical measurement path: one full calibration forward
+    /// (kept verbatim as the `--no-incremental` A/B baseline and the
+    /// incremental path's oracle).
+    fn measure(&self, asg: &Assignment) -> f64 {
+        let luts = LayerLuts {
+            conv1: &self.cands[asg[0]].lut,
+            conv2: &self.cands[asg[1]].lut,
+            fc1: &self.cands[asg[2]].lut,
+            fc2: &self.cands[asg[3]].lut,
+        };
+        let views = self.calib.views();
+        let logits = self
+            .model
+            .forward_batch_hetero(&luts, &views, self.opts.threads);
+        self.top1_of_logits(&logits)
+    }
+
+    /// MAC-equivalents of one full calibration forward.
+    fn full_forward_macs(&self) -> u64 {
+        self.calib.n as u64 * self.macs.iter().sum::<u64>()
+    }
+
+    /// A measurement neither the raw memo nor the store could serve.
+    /// This is where the cold path pays a full calibration forward and
+    /// the incremental engine replays a suffix instead.
+    fn evaluate(&self, asg: &Assignment) -> f64 {
+        {
+            let mut st = self.stats.borrow_mut();
+            st.evaluations += 1;
+            st.full_macs += self.full_forward_macs();
+        }
+        if !self.opts.incremental {
+            let top1 = self.measure(asg);
+            self.stats.borrow_mut().replayed_macs += self.full_forward_macs();
+            return top1;
+        }
+        let casg = self.canon_asg(asg);
+        if let Some(&top1) = self.canon_evals.borrow().get(&casg) {
+            // A content twin was already measured: byte-identical LUTs
+            // give a byte-identical forward, so the value transfers.
+            self.stats.borrow_mut().free_probes += 1;
+            return top1;
+        }
+        let top1 = self.measure_incremental(&casg);
+        self.canon_evals.borrow_mut().insert(casg, top1);
+        top1
+    }
+
     /// Measured top-1 of an assignment on the calibration set — memoized
     /// in memory for this run and persistently in the store (bit-identical
     /// on a warm hit: the record stores the f64's exact bit pattern).
     pub fn measured_top1(&self, asg: &Assignment) -> f64 {
         if let Some(&top1) = self.evals.borrow().get(asg) {
+            self.stats.borrow_mut().memo_hits += 1;
             return top1;
         }
         let top1 = match self.store {
-            None => self.measure(asg),
+            None => self.evaluate(asg),
             Some(store) => {
                 let key = self.assignment_key(asg);
-                let (rec, _hit) = store.get_or_put_with(key, || DesignPointRecord {
+                let (rec, hit) = store.get_or_put_with(key, || DesignPointRecord {
                     family: format!("compile[{}]", self.assignment_label(asg)),
                     bits: 8,
                     n_ops: self.calib.n as u64,
                     seed: self.opts.seed,
                     accuracy: Some(AccuracyStats {
-                        top1: self.measure(asg),
+                        top1: self.evaluate(asg),
                         samples: self.calib.n as u64,
                     }),
                     ..Default::default()
                 });
+                if hit {
+                    self.stats.borrow_mut().store_hits += 1;
+                }
                 match rec.accuracy {
                     Some(a) => a.top1,
-                    None => self.measure(asg),
+                    None => self.evaluate(asg),
                 }
             }
         };
         self.evals.borrow_mut().insert(*asg, top1);
         top1
+    }
+
+    /// Map an assignment to its LUT-content-canonical representative.
+    fn canon_asg(&self, asg: &Assignment) -> Assignment {
+        let mut out = *asg;
+        for c in out.iter_mut() {
+            *c = self.canon[*c];
+        }
+        out
+    }
+
+    /// In-memory key of a canonical prefix checkpoint.
+    fn prefix_key(&self, prefix: &[usize]) -> Key128 {
+        let mut kb = KeyBuilder::new("compile-prefix/1");
+        kb.key(self.model_hash)
+            .key(self.calib.hash)
+            .u32(prefix.len() as u32);
+        for &c in prefix {
+            kb.str(&self.cands[c].family.name());
+        }
+        kb.finish()
+    }
+
+    /// Build (once) the pinned all-exact reference chain + per-image
+    /// verdicts. Lazy: a fully store-warm compile never forwards at all,
+    /// so it must not pay for an anchor either.
+    fn build_anchor_if_needed(&self) {
+        if self.anchor.borrow().is_some() {
+            return;
+        }
+        let views = self.calib.views();
+        let threads = self.opts.threads;
+        let exact = LayerLuts::uniform(&self.cands[0].lut);
+        let chain = self.model.reference_chain(&exact, &views, threads);
+        let top1 = self.top1_of_logits(chain.logits());
+        {
+            let mut st = self.stats.borrow_mut();
+            st.anchor_builds += 1;
+            st.replayed_macs += self.full_forward_macs();
+        }
+        *self.anchor.borrow_mut() = Some(Anchor { chain, top1 });
+    }
+
+    /// Incremental measurement of a canonical assignment: resume from the
+    /// deepest cached prefix, advance plain stages through the last
+    /// non-exact layer, then delta-replay the all-exact suffix against
+    /// the pinned anchor. Bit-identical to [`Compiler::measure`] — every
+    /// reused value is byte-equal by construction.
+    fn measure_incremental(&self, casg: &Assignment) -> f64 {
+        self.build_anchor_if_needed();
+        let anchor_slot = self.anchor.borrow();
+        let anchor = anchor_slot.as_ref().expect("anchor just built");
+        if *casg == [0usize; N_LAYERS] {
+            // The baseline itself: its verdicts are the anchor's.
+            return anchor.top1;
+        }
+        let bsz = self.calib.n as u64;
+        // Delta replay is valid strictly after the last non-exact layer.
+        let d_hi = (0..N_LAYERS)
+            .rev()
+            .find(|&l| casg[l] != 0)
+            .expect("non-baseline assignment has a non-exact layer");
+        // Deepest reusable prefix: the pinned anchor chain serves every
+        // all-exact prefix (depth 0 — the shared input checkpoint — always
+        // matches), the LRU serves prefixes recent probes replayed.
+        let mut depth = 0usize;
+        let mut cur_rc: Option<Rc<BatchCheckpoint>> = None;
+        for d in (0..N_LAYERS).rev() {
+            if casg[..d].iter().all(|&c| c == 0) {
+                depth = d;
+                break;
+            }
+            if let Some(ck) = self.prefixes.borrow_mut().get(self.prefix_key(&casg[..d])) {
+                depth = d;
+                cur_rc = Some(ck);
+                break;
+            }
+        }
+        if depth > 0 {
+            self.stats.borrow_mut().prefix_hits += 1;
+        }
+        let threads = self.opts.threads;
+        let mut replayed = 0u64;
+        // Plain stage replay through the last non-exact layer (their LUTs
+        // are arbitrary), inserting each new prefix into the LRU.
+        while depth <= d_hi && depth < N_LAYERS - 1 {
+            let next = {
+                let ck: &BatchCheckpoint = match &cur_rc {
+                    Some(rc) => rc,
+                    None => anchor.chain.checkpoint(depth),
+                };
+                let lut = &self.cands[casg[depth]].lut;
+                self.model.advance_checkpoint(ck, lut, threads)
+            };
+            replayed += bsz * self.macs[depth];
+            depth += 1;
+            let rc = Rc::new(next);
+            self.prefixes
+                .borrow_mut()
+                .put(self.prefix_key(&casg[..depth]), Rc::clone(&rc));
+            cur_rc = Some(rc);
+        }
+        let cur_ck: &BatchCheckpoint = match &cur_rc {
+            Some(rc) => rc,
+            None => anchor.chain.checkpoint(depth),
+        };
+        let logits = if d_hi == N_LAYERS - 1 {
+            // The final layer itself is non-exact: plain finish.
+            replayed += bsz * self.macs[N_LAYERS - 1];
+            let lut = &self.cands[casg[N_LAYERS - 1]].lut;
+            self.model.finish_checkpoint(cur_ck, lut, threads)
+        } else {
+            // Everything from `depth` on is the exact multiplier: sparse
+            // linear delta replay against the anchor's accumulators.
+            let (logits, dmacs) = self.model.delta_resume_exact(&anchor.chain, cur_ck);
+            replayed += dmacs;
+            self.stats.borrow_mut().delta_macs += dmacs;
+            logits
+        };
+        self.stats.borrow_mut().replayed_macs += replayed;
+        self.top1_of_logits(&logits)
     }
 
     /// Estimated energy per image of an assignment, J.
@@ -584,17 +941,7 @@ mod tests {
                 lut: exact,
             },
         ];
-        Compiler {
-            model,
-            model_hash: model_content_hash(model),
-            calib_views: calib.views(),
-            calib,
-            cands,
-            macs: layer_macs_per_image(),
-            opts,
-            store,
-            evals: RefCell::new(HashMap::new()),
-        }
+        Compiler::assemble(model, calib, cands, opts, store)
     }
 
     fn calib_for(model: &QuantCnn, n: usize) -> CalibrationSet {
@@ -678,6 +1025,115 @@ mod tests {
         assert_eq!(delta.misses, 0, "second compile must be fully store-warm");
         assert!(delta.hits > 0);
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn incremental_and_full_paths_produce_identical_plans_and_bytes() {
+        // The acceptance criterion in miniature: same model, calibration
+        // set, budget and seed — the incremental engine's plan must be
+        // byte-identical to the full-forward engine's.
+        let model = QuantCnn::random(5);
+        let calib = calib_for(&model, 8);
+        for budget in [0.0, 0.25] {
+            let inc_opts = CompileOptions {
+                budget_drop: budget,
+                refine_passes: 1,
+                ..CompileOptions::new(budget)
+            };
+            let full_opts = CompileOptions {
+                incremental: false,
+                ..inc_opts.clone()
+            };
+            let c_inc = tiny_compiler(&model, &calib, inc_opts, None);
+            let c_full = tiny_compiler(&model, &calib, full_opts, None);
+            let plan_inc = c_inc.compile();
+            let plan_full = c_full.compile();
+            assert_eq!(plan_inc, plan_full, "budget {budget}");
+            // And the serialized artifacts match byte-for-byte.
+            let dir = std::env::temp_dir().join(format!(
+                "openacm_incr_ab_{}_{:?}_{budget}",
+                std::process::id(),
+                std::thread::current().id()
+            ));
+            std::fs::create_dir_all(&dir).unwrap();
+            let pa = dir.join("inc.acmplan");
+            let pb = dir.join("full.acmplan");
+            plan_inc.save(&pa).unwrap();
+            plan_full.save(&pb).unwrap();
+            assert_eq!(
+                std::fs::read(&pa).unwrap(),
+                std::fs::read(&pb).unwrap(),
+                "artifact bytes (budget {budget})"
+            );
+            std::fs::remove_dir_all(&dir).unwrap();
+            // The incremental engine must have done strictly less GEMM
+            // work for the same evaluations, and the full engine exactly
+            // the cold amount.
+            let si = c_inc.stats();
+            let sf = c_full.stats();
+            assert_eq!(si.evaluations, sf.evaluations, "same fresh evals");
+            assert_eq!(sf.replayed_macs, sf.full_macs, "full path replays all");
+            assert!(
+                si.replayed_macs < si.full_macs,
+                "incremental must replay fewer MACs: {} vs {}",
+                si.replayed_macs,
+                si.full_macs
+            );
+        }
+    }
+
+    #[test]
+    fn canonicalization_serves_content_twins_without_forwards() {
+        // Candidate 2 carries the exact LUT bytes under another family
+        // label: measuring it must be a free probe, not a forward.
+        let model = QuantCnn::random(8);
+        let calib = calib_for(&model, 4);
+        let c = tiny_compiler(&model, &calib, CompileOptions::new(0.0), None);
+        let exact_top1 = c.measured_top1(&[0, 0, 0, 0]);
+        let twin_top1 = c.measured_top1(&[0, 0, 0, 2]);
+        assert_eq!(exact_top1.to_bits(), twin_top1.to_bits());
+        let st = c.stats();
+        assert_eq!(st.free_probes, 1);
+        // Only the anchor build ran a forward-equivalent.
+        assert_eq!(st.anchor_builds, 1);
+        assert_eq!(st.replayed_macs, st.full_macs / 2);
+    }
+
+    #[test]
+    fn sensitivity_probes_replay_only_suffixes() {
+        let model = QuantCnn::random(6);
+        let calib = calib_for(&model, 4);
+        let c = tiny_compiler(&model, &calib, CompileOptions::new(1.0), None);
+        let exact_top1 = c.measured_top1(&[0, 0, 0, 0]);
+        let _sens = c.sensitivity(exact_top1);
+        let st = c.stats();
+        // Baseline + 2 probe candidates × 4 layers (candidate 2 probes
+        // are free via canonicalization).
+        assert_eq!(st.evaluations, 9);
+        assert_eq!(st.free_probes, 4);
+        assert!(
+            st.replayed_macs < st.full_macs / 3,
+            "sensitivity must replay under a third of cold MACs: {} vs {}",
+            st.replayed_macs,
+            st.full_macs
+        );
+    }
+
+    #[test]
+    fn prefix_cache_evicts_lru_and_moves_hits_to_front() {
+        let model = QuantCnn::random(1);
+        let images = synthetic_images(1, 1);
+        let views: Vec<&[u8]> = images.chunks(IMG * IMG).collect();
+        let ck = Rc::new(model.input_checkpoint(&views));
+        let mut cache = PrefixCache::new(2);
+        let key = |v: u32| KeyBuilder::new("test").u32(v).finish();
+        cache.put(key(1), Rc::clone(&ck));
+        cache.put(key(2), Rc::clone(&ck));
+        assert!(cache.get(key(1)).is_some()); // 1 becomes MRU
+        cache.put(key(3), Rc::clone(&ck)); // evicts 2 (LRU)
+        assert!(cache.get(key(2)).is_none());
+        assert!(cache.get(key(1)).is_some());
+        assert!(cache.get(key(3)).is_some());
     }
 
     #[test]

@@ -109,7 +109,15 @@
 //! every accuracy measurement is store-memoized on
 //! `model hash × assignment × calibration hash`, so repeated compiles and
 //! budget sweeps are warm (`cargo bench --bench compile`,
-//! `BENCH_compile.json`).
+//! `BENCH_compile.json`). Fresh measurements are **incremental**: the
+//! batched forward is split into resumable per-layer stages
+//! ([`nn::model::BatchCheckpoint`]), so a probe replays only the suffix
+//! from its first changed layer — and past the last non-exact layer, a
+//! sparse linear delta against the pinned all-exact
+//! [`nn::model::ReferenceChain`] — bit-identically to a full forward at
+//! a fraction of the GEMM MACs (DESIGN.md §Compile pass, "Incremental
+//! evaluation"; `--no-incremental` keeps the full path for A/B
+//! debugging).
 
 pub mod util;
 pub mod bench;

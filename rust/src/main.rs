@@ -28,7 +28,7 @@ COMMANDS:
              executes directly
              --budget PCT [--spec FILE] [--calib N] [--seed N]
              [--out FILE] [--artifacts DIR] [--store DIR] [--no-cache]
-             [--smoke]
+             [--smoke] [--no-incremental]
   store      Inspect/maintain the design-point store: stats | verify | gc
              [--dir DIR] [--repair] [--max-mb N]
   serve      Start the inference coordinator (PJRT on AOT artifacts, or the
@@ -43,7 +43,10 @@ COMMANDS:
 "#;
 
 fn main() -> Result<()> {
-    let args = Args::from_env(true, &["verbose", "fast", "no-cache", "repair", "smoke"])?;
+    let args = Args::from_env(
+        true,
+        &["verbose", "fast", "no-cache", "repair", "smoke", "no-incremental"],
+    )?;
     match args.command.as_deref() {
         Some("generate") => openacm::flow::cli::cmd_generate(&args),
         Some("ppa") => openacm::ppa::cli::cmd_ppa(&args),

@@ -20,7 +20,11 @@
 //!   [`model::LayerLuts`] — one LUT per layer — so heterogeneous
 //!   per-layer multiplier assignments (the [`crate::compile`] pass's
 //!   output) execute on the same code path as the uniform configuration
-//!   ([`QuantCnn::forward_hetero`] / [`QuantCnn::forward_batch_hetero`]);
+//!   ([`QuantCnn::forward_hetero`] / [`QuantCnn::forward_batch_hetero`]).
+//!   The batched pipeline is split into resumable per-layer stages
+//!   ([`model::BatchCheckpoint`], [`model::ReferenceChain`]) so the
+//!   compile search replays only the suffix a candidate assignment
+//!   actually changes;
 //! * [`eval`] — Top-1/Top-5 scoring (NaN-safe total ordering);
 //! * [`cli`] — `openacm nn`: Table IV (accuracy + NMED/MRED).
 
@@ -30,4 +34,4 @@ pub mod eval;
 pub mod cli;
 
 pub use eval::{argmax, topk_accuracy, EvalResult};
-pub use model::{synthetic_images, LayerLuts, QuantCnn};
+pub use model::{synthetic_images, BatchCheckpoint, LayerLuts, QuantCnn, ReferenceChain};

@@ -3,6 +3,17 @@
 //! same LUT-routed multiplies). Used to cross-check the AOT JAX graph and
 //! as a fallback evaluator when PJRT artifacts are absent.
 //!
+//! The batched forward is built from **resumable stages** split at layer
+//! boundaries: [`QuantCnn::input_checkpoint`] →
+//! [`QuantCnn::advance_checkpoint`]* → [`QuantCnn::finish_checkpoint`],
+//! with [`BatchCheckpoint`] carrying the quantized (and im2col'd) GEMM
+//! input between stages. `forward_batch_hetero` is exactly that stage
+//! chain, so replaying a suffix from a cached checkpoint is bit-identical
+//! to the full forward by construction — the basis of the compile
+//! search's incremental evaluation (`DESIGN.md` §Compile pass), together
+//! with [`QuantCnn::reference_chain`] / [`QuantCnn::delta_resume_exact`]
+//! (sparse linear delta replay against a pinned all-exact baseline).
+//!
 //! Architecture (16×16×1 input, 10 classes):
 //!   conv3x3(1→8) + relu + maxpool2 → conv3x3(8→16) + relu + maxpool2
 //!   → flatten(2·2·16=64)… wait: 16→14→7→5→2 — flatten 2×2×16 = 64
@@ -11,7 +22,7 @@
 use anyhow::{bail, Context, Result};
 use std::path::Path;
 
-use super::quant::{lut_matmul, lut_matmul_batched, quantize, quantize_all};
+use super::quant::{lut_matmul, lut_matmul_acc, quantize, quantize_all};
 use crate::util::npy;
 use crate::util::threadpool::parallel_map;
 
@@ -76,7 +87,28 @@ impl<'a> LayerLuts<'a> {
         }
     }
 
+    /// The LUT of layer `l`, in [`LAYER_NAMES`] order.
+    pub fn get(&self, l: usize) -> &'a [i32] {
+        match l {
+            0 => self.conv1,
+            1 => self.conv2,
+            2 => self.fc1,
+            3 => self.fc2,
+            _ => panic!("layer index {l} out of range"),
+        }
+    }
 }
+
+/// Per-layer GEMM geometry `(rows per image, reduction depth k, outputs n)`
+/// in [`LAYER_NAMES`] order, fixed by the architecture: conv layers run one
+/// GEMM row per im2col patch, fc layers one row per image. The product
+/// `rows · k · n` equals [`layer_macs_per_image`] per layer.
+pub const LAYER_GEMM: [(usize, usize, usize); N_LAYERS] = [
+    ((IMG - 2) * (IMG - 2), 9, C1_OUT), // conv1: 14·14 patches × 3·3·1 taps
+    (5 * 5, 9 * C1_OUT, C2_OUT),        // conv2: 5·5 patches × 3·3·8 taps
+    (1, 2 * 2 * C2_OUT, FC1_OUT),       // fc1: 64 → 32
+    (1, FC1_OUT, CLASSES),              // fc2: 32 → 10
+];
 
 /// Multiply–accumulate count per image per layer, in [`LAYER_NAMES`]
 /// order — the weights the compile pass uses to turn per-multiplier
@@ -94,6 +126,59 @@ pub fn layer_macs_per_image() -> [u64; N_LAYERS] {
     let fc1 = (flat * FC1_OUT) as u64;
     let fc2 = (FC1_OUT * CLASSES) as u64;
     [conv1, conv2, fc1, fc2]
+}
+
+/// The quantized GEMM input of one layer for a whole image batch — the
+/// unit of the compile search's prefix checkpointing. A checkpoint at
+/// `layer == l` captures everything the forward needs to resume at layer
+/// `l`: the batch-stacked, already-quantized (and, for conv layers,
+/// already-im2col'd) activation matrix. It depends only on the LUTs of
+/// layers `0..l` — quantization is a pure per-element map and im2col a
+/// pure copy of activations, neither reads a LUT — so the matrix is
+/// reusable across every assignment sharing that LUT prefix.
+#[derive(Clone, Debug)]
+pub struct BatchCheckpoint {
+    /// Next layer to execute (index into [`LAYER_NAMES`]).
+    layer: usize,
+    /// Images in the batch.
+    bsz: usize,
+    /// Quantized GEMM input: `bsz · rows_per_image` rows of `k` i8 each
+    /// (geometry per [`LAYER_GEMM`]).
+    a_q: Vec<i8>,
+}
+
+impl BatchCheckpoint {
+    /// Next layer to execute.
+    pub fn layer(&self) -> usize {
+        self.layer
+    }
+
+    /// Images in the batch.
+    pub fn batch(&self) -> usize {
+        self.bsz
+    }
+}
+
+/// A fully expanded forward of one assignment: per-layer checkpoints, raw
+/// i64 GEMM accumulators, and the final logits. Built by
+/// [`QuantCnn::reference_chain`]; consumed as the pinned baseline of the
+/// compile search's incremental evaluator.
+pub struct ReferenceChain {
+    ckpts: Vec<BatchCheckpoint>,
+    accs: Vec<Vec<i64>>,
+    logits: Vec<Vec<f32>>,
+}
+
+impl ReferenceChain {
+    /// The checkpoint at `depth` (input to layer `depth`).
+    pub fn checkpoint(&self, depth: usize) -> &BatchCheckpoint {
+        &self.ckpts[depth]
+    }
+
+    /// Per-image logits of the anchored assignment.
+    pub fn logits(&self) -> &[Vec<f32>] {
+        &self.logits
+    }
 }
 
 fn im2col_gen<T: Copy>(
@@ -239,52 +324,24 @@ impl QuantCnn {
         self.layer_forward(luts.fc2, &self.fc2, &h3, 1, FC1_OUT, CLASSES)
     }
 
-    /// Batched [`QuantCnn::layer_forward`] over pre-quantized activations:
-    /// identical math, one blocked GEMM over all rows of the whole batch.
-    #[allow(clippy::too_many_arguments)]
-    fn layer_forward_batched_q(
-        &self,
-        lut: &[i32],
-        layer: &QuantLayer,
-        a_q: &[i8],
-        m: usize,
-        k: usize,
-        n: usize,
-        threads: usize,
-    ) -> Vec<f32> {
-        let mut out = lut_matmul_batched(
-            lut,
-            a_q,
-            &layer.w_q,
-            m,
-            k,
-            n,
-            layer.in_scale,
-            layer.w_scale,
-            threads,
-        );
-        for row in 0..m {
-            for j in 0..n {
-                out[row * n + j] += layer.bias[j];
-            }
+    /// The layer struct at index `l` ([`LAYER_NAMES`] order).
+    fn layer_at(&self, l: usize) -> &QuantLayer {
+        match l {
+            0 => &self.conv1,
+            1 => &self.conv2,
+            2 => &self.fc1,
+            _ => &self.fc2,
         }
-        out
     }
 
-    /// The batched pipeline for one contiguous image group; `gemm_threads`
-    /// parallelizes inside the GEMMs only (see [`QuantCnn::forward_batch`]
-    /// for the group-level split).
-    fn forward_batch_core(
-        &self,
-        luts: &LayerLuts,
-        images: &[&[u8]],
-        gemm_threads: usize,
-    ) -> Vec<Vec<f32>> {
+    /// Build the depth-0 checkpoint: normalize + quantize the whole batch
+    /// once, BEFORE im2col (im2col only copies elements and quantization
+    /// is a pure per-element map, so quantize∘im2col == im2col∘quantize —
+    /// but this way each activation quantizes once, not once per patch),
+    /// then im2col for conv1. Depends only on the images, so every
+    /// per-layer LUT assignment shares it.
+    pub fn input_checkpoint(&self, images: &[&[u8]]) -> BatchCheckpoint {
         let bsz = images.len();
-        // Normalize + quantize the whole batch once, BEFORE im2col:
-        // im2col only copies elements and quantization is a pure
-        // per-element map, so quantize∘im2col == im2col∘quantize — but
-        // this way each activation quantizes once, not once per patch.
         let mut xq = Vec::with_capacity(bsz * IMG * IMG);
         for img in images {
             assert_eq!(img.len(), IMG * IMG);
@@ -293,75 +350,250 @@ impl QuantCnn {
                     .map(|&p| quantize(p as f32 / 255.0, self.conv1.in_scale)),
             );
         }
-        // conv1 over the stacked batch: weight tiles reused across images.
-        let (a1, m1, k1) = im2col_batch_i8(&xq, bsz, IMG, IMG, 1, 3);
-        let mut h1 = self.layer_forward_batched_q(
-            luts.conv1,
-            &self.conv1,
-            &a1,
-            bsz * m1,
-            k1,
-            C1_OUT,
-            gemm_threads,
-        );
-        relu(&mut h1);
-        let (c1h, c1w) = (IMG - 2, IMG - 2);
-        let per1 = c1h * c1w * C1_OUT;
-        let mut p1 = Vec::with_capacity(bsz * per1 / 4);
-        let (mut p1h, mut p1w) = (1, 1);
-        for i in 0..bsz {
-            let (p, hh, ww) = maxpool2(&h1[i * per1..(i + 1) * per1], c1h, c1w, C1_OUT);
-            p1h = hh;
-            p1w = ww;
-            p1.extend_from_slice(&p);
-        }
-        // conv2 over the stacked batch.
-        let p1q = quantize_all(&p1, self.conv2.in_scale);
-        let (a2, m2, k2) = im2col_batch_i8(&p1q, bsz, p1h, p1w, C1_OUT, 3);
-        let mut h2 = self.layer_forward_batched_q(
-            luts.conv2,
-            &self.conv2,
-            &a2,
-            bsz * m2,
-            k2,
-            C2_OUT,
-            gemm_threads,
-        );
-        relu(&mut h2);
-        let (c2h, c2w) = (p1h - 2, p1w - 2);
-        let per2 = c2h * c2w * C2_OUT;
-        let mut p2 = Vec::with_capacity(bsz * per2 / 4);
-        let (mut p2h, mut p2w) = (1, 1);
-        for i in 0..bsz {
-            let (p, hh, ww) = maxpool2(&h2[i * per2..(i + 1) * per2], c2h, c2w, C2_OUT);
-            p2h = hh;
-            p2w = ww;
-            p2.extend_from_slice(&p);
-        }
-        // fc1/fc2: one GEMM row per image.
-        let flat_len = p2h * p2w * C2_OUT;
-        let p2q = quantize_all(&p2, self.fc1.in_scale);
-        let mut h3 = self.layer_forward_batched_q(
-            luts.fc1,
-            &self.fc1,
-            &p2q,
+        let (a1, _, _) = im2col_batch_i8(&xq, bsz, IMG, IMG, 1, 3);
+        BatchCheckpoint {
+            layer: 0,
             bsz,
-            flat_len,
-            FC1_OUT,
-            gemm_threads,
+            a_q: a1,
+        }
+    }
+
+    /// Raw i64 GEMM accumulators of the checkpoint's layer through `lut`
+    /// (blocked kernel, row-tiles across the thread pool).
+    fn checkpoint_acc(&self, ck: &BatchCheckpoint, lut: &[i32], threads: usize) -> Vec<i64> {
+        let (rows, k, n) = LAYER_GEMM[ck.layer];
+        lut_matmul_acc(
+            lut,
+            &ck.a_q,
+            &self.layer_at(ck.layer).w_q,
+            ck.bsz * rows,
+            k,
+            n,
+            threads,
+        )
+    }
+
+    /// The f32 post-GEMM pipeline of layer `l` from its raw accumulators:
+    /// dequantize, bias, relu, maxpool (conv layers), quantize for the
+    /// next layer, im2col — exactly the op sequence (and order) the
+    /// monolithic forward ran, so stage-by-stage execution is
+    /// bit-identical to it by construction.
+    fn post_ops_checkpoint(&self, l: usize, bsz: usize, acc: &[i64]) -> BatchCheckpoint {
+        let layer = self.layer_at(l);
+        let (_, _, n) = LAYER_GEMM[l];
+        let s = layer.in_scale * layer.w_scale;
+        let mut h: Vec<f32> = Vec::with_capacity(acc.len());
+        for row in acc.chunks_exact(n) {
+            for (&v, &bias) in row.iter().zip(&layer.bias) {
+                h.push(v as f32 * s + bias);
+            }
+        }
+        relu(&mut h);
+        match l {
+            0 => {
+                let side = IMG - 2; // 14×14 conv1 output
+                let per = side * side * C1_OUT;
+                let mut pooled = Vec::with_capacity(bsz * per / 4);
+                let (mut ph, mut pw) = (1, 1);
+                for i in 0..bsz {
+                    let (p, hh, ww) = maxpool2(&h[i * per..(i + 1) * per], side, side, C1_OUT);
+                    ph = hh;
+                    pw = ww;
+                    pooled.extend_from_slice(&p);
+                }
+                let pq = quantize_all(&pooled, self.conv2.in_scale);
+                let (a2, _, _) = im2col_batch_i8(&pq, bsz, ph, pw, C1_OUT, 3);
+                BatchCheckpoint {
+                    layer: 1,
+                    bsz,
+                    a_q: a2,
+                }
+            }
+            1 => {
+                let side = (IMG - 2) / 2 - 2; // 5×5 conv2 output
+                let per = side * side * C2_OUT;
+                let mut pooled = Vec::with_capacity(bsz * per / 4);
+                for i in 0..bsz {
+                    let (p, _, _) = maxpool2(&h[i * per..(i + 1) * per], side, side, C2_OUT);
+                    pooled.extend_from_slice(&p);
+                }
+                let pq = quantize_all(&pooled, self.fc1.in_scale);
+                BatchCheckpoint {
+                    layer: 2,
+                    bsz,
+                    a_q: pq,
+                }
+            }
+            2 => {
+                let hq = quantize_all(&h, self.fc2.in_scale);
+                BatchCheckpoint {
+                    layer: 3,
+                    bsz,
+                    a_q: hq,
+                }
+            }
+            _ => unreachable!("fc2 has no successor checkpoint"),
+        }
+    }
+
+    /// Execute the checkpoint's layer through `lut` and return the next
+    /// layer's checkpoint. Panics on the last layer — use
+    /// [`QuantCnn::finish_checkpoint`] there.
+    pub fn advance_checkpoint(
+        &self,
+        ck: &BatchCheckpoint,
+        lut: &[i32],
+        threads: usize,
+    ) -> BatchCheckpoint {
+        assert!(
+            ck.layer < N_LAYERS - 1,
+            "cannot advance past fc1: use finish_checkpoint"
         );
-        relu(&mut h3);
-        let h3q = quantize_all(&h3, self.fc2.in_scale);
-        let logits = self.layer_forward_batched_q(
-            luts.fc2,
-            &self.fc2,
-            &h3q,
-            bsz,
-            FC1_OUT,
-            CLASSES,
-            gemm_threads,
-        );
-        logits.chunks(CLASSES).map(|row| row.to_vec()).collect()
+        let acc = self.checkpoint_acc(ck, lut, threads);
+        self.post_ops_checkpoint(ck.layer, ck.bsz, &acc)
+    }
+
+    /// Execute the final layer from its checkpoint: per-image logits.
+    pub fn finish_checkpoint(
+        &self,
+        ck: &BatchCheckpoint,
+        lut: &[i32],
+        threads: usize,
+    ) -> Vec<Vec<f32>> {
+        assert_eq!(ck.layer, N_LAYERS - 1, "finish needs the fc2 checkpoint");
+        let acc = self.checkpoint_acc(ck, lut, threads);
+        self.logits_from_acc(&acc, ck.bsz)
+    }
+
+    fn logits_from_acc(&self, acc: &[i64], bsz: usize) -> Vec<Vec<f32>> {
+        let layer = &self.fc2;
+        let s = layer.in_scale * layer.w_scale;
+        (0..bsz)
+            .map(|i| {
+                (0..CLASSES)
+                    .map(|j| acc[i * CLASSES + j] as f32 * s + layer.bias[j])
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Resume the forward from `ck`: run layers `ck.layer()..` under
+    /// `luts`. Bit-identical to the tail of a full
+    /// [`QuantCnn::forward_batch_hetero`] for any checkpoint produced by
+    /// [`QuantCnn::input_checkpoint`] + [`QuantCnn::advance_checkpoint`]
+    /// under the same prefix LUTs — the stages *are* the full forward
+    /// ([`QuantCnn::forward_batch_hetero`] is input_checkpoint + resume).
+    pub fn resume_batch_hetero(
+        &self,
+        ck: &BatchCheckpoint,
+        luts: &LayerLuts,
+        threads: usize,
+    ) -> Vec<Vec<f32>> {
+        if ck.layer == N_LAYERS - 1 {
+            return self.finish_checkpoint(ck, luts.get(N_LAYERS - 1), threads);
+        }
+        let mut cur = self.advance_checkpoint(ck, luts.get(ck.layer), threads);
+        while cur.layer < N_LAYERS - 1 {
+            cur = self.advance_checkpoint(&cur, luts.get(cur.layer), threads);
+        }
+        self.finish_checkpoint(&cur, luts.get(N_LAYERS - 1), threads)
+    }
+
+    /// A fully expanded forward of one assignment: every layer's
+    /// checkpoint plus its raw i64 GEMM accumulators and the final
+    /// logits. The compile search pins one of these for the all-exact
+    /// baseline: the checkpoints serve as pinned replay prefixes, the
+    /// accumulators anchor [`QuantCnn::delta_resume_exact`].
+    pub fn reference_chain(
+        &self,
+        luts: &LayerLuts,
+        images: &[&[u8]],
+        threads: usize,
+    ) -> ReferenceChain {
+        let bsz = images.len();
+        let mut ckpts = vec![self.input_checkpoint(images)];
+        let mut accs = Vec::with_capacity(N_LAYERS);
+        for l in 0..N_LAYERS {
+            let acc = self.checkpoint_acc(&ckpts[l], luts.get(l), threads);
+            if l < N_LAYERS - 1 {
+                ckpts.push(self.post_ops_checkpoint(l, bsz, &acc));
+            }
+            accs.push(acc);
+        }
+        let logits = self.logits_from_acc(&accs[N_LAYERS - 1], bsz);
+        ReferenceChain {
+            ckpts,
+            accs,
+            logits,
+        }
+    }
+
+    /// Replay layers `ck.layer()..` against `anchor`, where both the
+    /// anchor and the assignment run the **exact** multiplier on every
+    /// remaining layer (caller-guaranteed precondition). The exact int8
+    /// LUT is linear (`lut[a][w] == a·w`), so each layer's accumulators
+    /// are reconstructed as `acc' = acc₀ + Σ_changed (a' − a₀)·w` — exact
+    /// integer arithmetic, hence bit-identical to a full replay (integer
+    /// sums are order-independent and the f32 post-ops re-run per element
+    /// exactly as in the full path), at a cost proportional to the
+    /// *changed* activation entries instead of the whole GEMM. Returns
+    /// the per-image logits plus the MAC-equivalent delta updates
+    /// performed (changed entries × layer outputs).
+    pub fn delta_resume_exact(
+        &self,
+        anchor: &ReferenceChain,
+        ck: &BatchCheckpoint,
+    ) -> (Vec<Vec<f32>>, u64) {
+        assert_eq!(ck.bsz, anchor.ckpts[0].bsz, "anchor batch mismatch");
+        let bsz = ck.bsz;
+        let mut delta_macs = 0u64;
+        let mut cur: Option<BatchCheckpoint> = None;
+        for l in ck.layer..N_LAYERS {
+            let acc = {
+                let src = cur.as_ref().unwrap_or(ck);
+                let layer = self.layer_at(l);
+                let (rows_per, k, n) = LAYER_GEMM[l];
+                let rows = bsz * rows_per;
+                let a0 = &anchor.ckpts[l].a_q;
+                debug_assert_eq!(src.a_q.len(), a0.len());
+                let mut acc = anchor.accs[l].clone();
+                for r in 0..rows {
+                    let ar = &src.a_q[r * k..(r + 1) * k];
+                    let a0r = &a0[r * k..(r + 1) * k];
+                    for e in 0..k {
+                        let d = ar[e] as i32 - a0r[e] as i32;
+                        if d != 0 {
+                            let w_row = &layer.w_q[e * n..(e + 1) * n];
+                            let out = &mut acc[r * n..(r + 1) * n];
+                            for (o, &w) in out.iter_mut().zip(w_row) {
+                                *o += d as i64 * w as i64;
+                            }
+                            delta_macs += n as u64;
+                        }
+                    }
+                }
+                acc
+            };
+            if l == N_LAYERS - 1 {
+                return (self.logits_from_acc(&acc, bsz), delta_macs);
+            }
+            cur = Some(self.post_ops_checkpoint(l, bsz, &acc));
+        }
+        unreachable!("loop returns at the last layer")
+    }
+
+    /// The batched pipeline for one contiguous image group, expressed as
+    /// resumable stages: build the depth-0 checkpoint, then replay every
+    /// layer. `gemm_threads` parallelizes inside the GEMMs only (see
+    /// [`QuantCnn::forward_batch`] for the group-level split).
+    fn forward_batch_core(
+        &self,
+        luts: &LayerLuts,
+        images: &[&[u8]],
+        gemm_threads: usize,
+    ) -> Vec<Vec<f32>> {
+        let ck = self.input_checkpoint(images);
+        self.resume_batch_hetero(&ck, luts, gemm_threads)
     }
 
     /// Forward a batch of images (each a 256-byte 16×16 grayscale) in one
@@ -586,6 +818,95 @@ mod tests {
             for (j, v) in row.iter().enumerate() {
                 assert_eq!(*v, cnn.fc2.bias[j]);
             }
+        }
+    }
+
+    fn exact_lut() -> Vec<i32> {
+        int8_lut(&MultFamily::Exact)
+    }
+
+    /// A deliberately perturbed (non-linear) LUT whose zero row stays
+    /// zero: `a*b` with the low bit of odd·odd products cleared.
+    fn perturbed_lut() -> Vec<i32> {
+        let mut lut = exact_lut();
+        for a in -128i32..=127 {
+            for b in -128i32..=127 {
+                if a % 2 != 0 && b % 2 != 0 {
+                    let idx = (((a as u8) as usize) << 8) | ((b as u8) as usize);
+                    lut[idx] &= !1;
+                }
+            }
+        }
+        lut
+    }
+
+    #[test]
+    fn layer_gemm_geometry_matches_macs() {
+        for (l, &(rows, k, n)) in LAYER_GEMM.iter().enumerate() {
+            assert_eq!((rows * k * n) as u64, layer_macs_per_image()[l], "layer {l}");
+        }
+    }
+
+    #[test]
+    fn checkpoint_replay_from_every_depth_matches_forward() {
+        let cnn = QuantCnn::random(13);
+        let exact = exact_lut();
+        let pert = perturbed_lut();
+        let luts = LayerLuts {
+            conv1: &pert,
+            conv2: &exact,
+            fc1: &pert,
+            fc2: &exact,
+        };
+        let images = synthetic_images(3, 31);
+        let views: Vec<&[u8]> = images.chunks(IMG * IMG).collect();
+        let full = cnn.forward_batch_hetero(&luts, &views, 2);
+        let mut ck = cnn.input_checkpoint(&views);
+        for depth in 0..N_LAYERS {
+            let replay = cnn.resume_batch_hetero(&ck, &luts, 1);
+            assert_eq!(replay, full, "replay from depth {depth}");
+            if depth < N_LAYERS - 1 {
+                ck = cnn.advance_checkpoint(&ck, luts.get(depth), 1);
+                assert_eq!(ck.layer(), depth + 1);
+                assert_eq!(ck.batch(), 3);
+            }
+        }
+    }
+
+    #[test]
+    fn delta_resume_matches_full_replay() {
+        // Swap one layer to the perturbed LUT, keep everything downstream
+        // exact: the sparse delta replay must reproduce the full forward
+        // bit-for-bit from the anchor's accumulators.
+        let cnn = QuantCnn::random(23);
+        let exact = exact_lut();
+        let pert = perturbed_lut();
+        let images = synthetic_images(4, 77);
+        let views: Vec<&[u8]> = images.chunks(IMG * IMG).collect();
+        let anchor = cnn.reference_chain(&LayerLuts::uniform(&exact), &views, 1);
+        // The anchor's own logits equal the plain exact forward.
+        assert_eq!(
+            anchor.logits().to_vec(),
+            cnn.forward_batch(&exact, &views, 1)
+        );
+        for swapped in 0..N_LAYERS - 1 {
+            let mut luts = LayerLuts::uniform(&exact);
+            match swapped {
+                0 => luts.conv1 = &pert,
+                1 => luts.conv2 = &pert,
+                _ => luts.fc1 = &pert,
+            }
+            let full = cnn.forward_batch_hetero(&luts, &views, 1);
+            let next = cnn.advance_checkpoint(anchor.checkpoint(swapped), &pert, 1);
+            let (logits, dmacs) = cnn.delta_resume_exact(&anchor, &next);
+            assert_eq!(logits, full, "swapped layer {swapped}");
+            // The delta replay must touch strictly fewer MAC-equivalents
+            // than the full suffix it replaces.
+            let full_suffix: u64 = layer_macs_per_image()[swapped + 1..]
+                .iter()
+                .sum::<u64>()
+                * views.len() as u64;
+            assert!(dmacs < full_suffix, "layer {swapped}: {dmacs} vs {full_suffix}");
         }
     }
 

@@ -7,16 +7,22 @@
 //!
 //! Two GEMM entry points share that contract:
 //!
-//! * [`lut_matmul`] — the naive triple-loop reference (kept as the
-//!   bit-exactness oracle);
+//! * [`lut_matmul`] — the scalar kernel (batch-1 serving and the tests'
+//!   oracle path). It keeps the row-at-a-time structure but borrows the
+//!   batched kernel's contiguous LUT-row gather and zero-activation-row
+//!   skip; a truly naive triple loop lives in the tests as the ultimate
+//!   reference.
 //! * [`lut_matmul_batched`] — the serving kernel: tile-blocked over
 //!   m/n/k, i32 inner accumulation widened into i64 per k-tile, LUT rows
 //!   reused across an output row, zero-activation rows skipped when the
 //!   LUT maps them to zero, and row-tiles spread over the thread pool.
-//!   Because every partial sum is integer, any accumulation order yields
-//!   the same i64 total, so the kernel is *bit-identical* to the
-//!   reference for every LUT and shape
-//!   (`rust/tests/nn_batch_equivalence.rs`).
+//!   Its integer core is exposed as [`lut_matmul_acc`] for the compile
+//!   search's delta-replay path.
+//!
+//! Because every partial sum is integer, any accumulation order yields
+//! the same i64 total, so both kernels are *bit-identical* to the naive
+//! reference for every LUT and shape
+//! (`rust/tests/nn_batch_equivalence.rs`).
 
 use crate::util::threadpool::parallel_map;
 
@@ -46,6 +52,18 @@ pub fn lut_product(lut: &[i32], a: i8, b: i8) -> i32 {
 
 /// Quantized matmul through the LUT: `A (m×k, int8) × B (k×n, int8)` with
 /// i64 accumulation, dequantized by `scale_a * scale_b`.
+///
+/// This is the scalar (batch-1 / oracle) kernel, but it shares the two
+/// cheap structural wins of [`lut_matmul_batched`]: each A element selects
+/// one contiguous 256-entry LUT row reused across the whole B row (a
+/// sequential gather instead of strided 256 KiB-wide lookups), and rows
+/// whose A element is zero are skipped when the LUT's zero row is all
+/// zeros (true for every real multiplier family; after ReLU that is a
+/// large fraction of all activations). Both are bit-identity-preserving:
+/// each output element still accumulates exactly the same i64 products
+/// (integer addition is order-independent, and the skipped terms are
+/// exact zeros), and the final `acc as f32 * s` op is unchanged. The
+/// in-module tests pin this against a naive triple-loop reference.
 pub fn lut_matmul(
     lut: &[i32],
     a: &[i8],
@@ -56,17 +74,28 @@ pub fn lut_matmul(
     scale_a: f32,
     scale_b: f32,
 ) -> Vec<f32> {
+    assert_eq!(lut.len(), 65536);
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
     let s = scale_a * scale_b;
+    let zero_row_is_zero = lut[..256].iter().all(|&v| v == 0);
     let mut out = vec![0f32; m * n];
+    let mut acc = vec![0i64; n];
     for i in 0..m {
-        for j in 0..n {
-            let mut acc: i64 = 0;
-            for p in 0..k {
-                acc += lut_product(lut, a[i * k + p], b[p * n + j]) as i64;
+        acc.fill(0);
+        let a_row = &a[i * k..(i + 1) * k];
+        for (p, &av) in a_row.iter().enumerate() {
+            if av == 0 && zero_row_is_zero {
+                continue;
             }
-            out[i * n + j] = acc as f32 * s;
+            let lut_row = &lut[((av as u8 as usize) << 8)..][..256];
+            let b_row = &b[p * n..(p + 1) * n];
+            for (o, &bv) in acc.iter_mut().zip(b_row) {
+                *o += lut_row[bv as u8 as usize] as i64;
+            }
+        }
+        for (j, &v) in acc.iter().enumerate() {
+            out[i * n + j] = v as f32 * s;
         }
     }
     out
@@ -114,6 +143,56 @@ pub fn lut_matmul_batched(
     scale_b: f32,
     threads: usize,
 ) -> Vec<f32> {
+    let tiles = lut_gemm_tiles(lut, a, b, m, k, n, threads);
+    let s = scale_a * scale_b;
+    let mut out = vec![0f32; m * n];
+    for (t, acc) in tiles.into_iter().enumerate() {
+        let base = t * TILE_M * n;
+        for (off, v) in acc.into_iter().enumerate() {
+            // Identical final op to the reference: `acc as f32 * s`.
+            out[base + off] = v as f32 * s;
+        }
+    }
+    out
+}
+
+/// Integer core of [`lut_matmul_batched`]: the raw i64 accumulators of
+/// `A (m×k) × B (k×n)` through `lut`, before dequantization. Exposed so
+/// the compile search's incremental evaluator can keep a baseline's exact
+/// accumulators and patch them with sparse integer deltas
+/// ([`crate::nn::model::QuantCnn::delta_resume_exact`]); every accumulator
+/// is the exact integer sum of its products, so the value is independent
+/// of tiling and thread count.
+pub fn lut_matmul_acc(
+    lut: &[i32],
+    a: &[i8],
+    b: &[i8],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) -> Vec<i64> {
+    let tiles = lut_gemm_tiles(lut, a, b, m, k, n, threads);
+    let mut out = vec![0i64; m * n];
+    for (t, acc) in tiles.into_iter().enumerate() {
+        let base = t * TILE_M * n;
+        out[base..base + acc.len()].copy_from_slice(&acc);
+    }
+    out
+}
+
+/// The shared blocked-GEMM core: one i64 accumulator block per row tile
+/// ([`TILE_M`] rows each, the last possibly short), computed across the
+/// thread pool. Callers stitch/dequantize in a single pass.
+fn lut_gemm_tiles(
+    lut: &[i32],
+    a: &[i8],
+    b: &[i8],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) -> Vec<Vec<i64>> {
     assert_eq!(lut.len(), 65536);
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
@@ -122,12 +201,11 @@ pub fn lut_matmul_batched(
             .all(|&v| (v as i64).abs() <= i32::MAX as i64 / TILE_K as i64),
         "LUT entries exceed the blocked kernel's i32 partial-sum bound"
     );
-    let s = scale_a * scale_b;
     // a == 0 contributes nothing iff the LUT's zero row is identically
     // zero; skipping it then adds the same zeros the reference adds.
     let zero_row_is_zero = lut[..256].iter().all(|&v| v == 0);
     let row_tiles = m.div_ceil(TILE_M);
-    let tiles: Vec<Vec<i64>> = parallel_map(row_tiles, threads, |t| {
+    parallel_map(row_tiles, threads, |t| {
         let i0 = t * TILE_M;
         let i1 = (i0 + TILE_M).min(m);
         let mut acc = vec![0i64; (i1 - i0) * n];
@@ -160,16 +238,7 @@ pub fn lut_matmul_batched(
             }
         }
         acc
-    });
-    let mut out = vec![0f32; m * n];
-    for (t, acc) in tiles.into_iter().enumerate() {
-        let base = t * TILE_M * n;
-        for (off, v) in acc.into_iter().enumerate() {
-            // Identical final op to the reference: `acc as f32 * s`.
-            out[base + off] = v as f32 * s;
-        }
-    }
-    out
+    })
 }
 
 #[cfg(test)]
@@ -193,6 +262,74 @@ mod tests {
         let s = calibrate(&xs);
         assert!((s - 2.0 / 127.0).abs() < 1e-9);
         assert_eq!(quantize(-2.0, s), -127);
+    }
+
+    /// The truly naive triple loop — the ultimate oracle now that
+    /// [`lut_matmul`] itself gathers LUT rows and skips zero rows.
+    fn naive_lut_matmul(
+        lut: &[i32],
+        a: &[i8],
+        b: &[i8],
+        m: usize,
+        k: usize,
+        n: usize,
+        sa: f32,
+        sb: f32,
+    ) -> Vec<f32> {
+        let s = sa * sb;
+        let mut out = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc: i64 = 0;
+                for p in 0..k {
+                    acc += lut_product(lut, a[i * k + p], b[p * n + j]) as i64;
+                }
+                out[i * n + j] = acc as f32 * s;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn scalar_kernel_matches_naive_reference() {
+        // Covers both skip regimes: a LUT with a non-zero zero row (skip
+        // disabled) and the exact-product LUT with zero-heavy A (skip hot).
+        let mut shifted = vec![0i32; 65536];
+        for x in -128i32..=127 {
+            for y in -128i32..=127 {
+                shifted[(((x as u8) as usize) << 8) | ((y as u8) as usize)] = x * y + 1;
+            }
+        }
+        let exact = int8_lut(&MultFamily::Exact);
+        let a: Vec<i8> = (0..48)
+            .map(|i| if i % 4 == 0 { 0 } else { ((i * 89 + 3) % 256) as u8 as i8 })
+            .collect();
+        let b: Vec<i8> = (0..36).map(|i| ((i * 57 + 11) % 256) as u8 as i8).collect();
+        for lut in [&shifted, &exact] {
+            for (m, k, n) in [(8, 6, 6), (4, 12, 3), (1, 36, 1)] {
+                let fast = lut_matmul(lut, &a[..m * k], &b[..k * n], m, k, n, 0.1, 0.2);
+                let naive = naive_lut_matmul(lut, &a[..m * k], &b[..k * n], m, k, n, 0.1, 0.2);
+                assert_eq!(fast, naive, "m={m} k={k} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn acc_kernel_is_exact_integer_sum() {
+        let lut = int8_lut(&MultFamily::Exact);
+        let a: Vec<i8> = (0..24).map(|i| ((i * 37) % 255) as u8 as i8).collect();
+        let b: Vec<i8> = (0..18).map(|i| ((i * 91) % 251) as u8 as i8).collect();
+        for threads in [1, 2] {
+            let acc = lut_matmul_acc(&lut, &a, &b, 4, 6, 3, threads);
+            for i in 0..4 {
+                for j in 0..3 {
+                    let want: i64 = (0..6)
+                        .map(|p| (a[i * 6 + p] as i64) * (b[p * 3 + j] as i64))
+                        .sum();
+                    assert_eq!(acc[i * 3 + j], want, "({i},{j}) threads={threads}");
+                }
+            }
+        }
     }
 
     #[test]

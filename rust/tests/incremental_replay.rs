@@ -1,0 +1,147 @@
+//! Suffix-replay equivalence: the compile search's incremental evaluator
+//! must be a pure optimization. Seeded property tests
+//! (`util::proptest::check`) drive random per-layer family assignments,
+//! batch sizes {1, 32} and checkpoint depths, asserting that
+//!
+//! * resuming the staged forward from *every* checkpoint depth reproduces
+//!   the full `forward_batch_hetero` bit-for-bit;
+//! * sparse linear delta replay against the all-exact reference chain
+//!   reproduces a one-layer-swap forward bit-for-bit while performing
+//!   strictly fewer MAC-equivalents than the suffix it replaces;
+//! * an incremental compile emits the same plan as a full-forward
+//!   compile, and warm store replays stay bit-identical (covered at unit
+//!   level in `compile::search`; here across real multiplier families).
+
+use openacm::config::spec::{CompressorKind, MultFamily};
+use openacm::mult::behavioral::int8_lut;
+use openacm::nn::model::{
+    layer_macs_per_image, synthetic_images, LayerLuts, QuantCnn, IMG, N_LAYERS,
+};
+use openacm::util::proptest::{check, prop_assert};
+
+/// A small but diverse family palette: the exact multiplier, both log
+/// designs, a mid-aggressiveness compressor config and a high-accuracy
+/// one.
+fn palette() -> Vec<(String, Vec<i32>)> {
+    [
+        MultFamily::Exact,
+        MultFamily::LogOur,
+        MultFamily::Mitchell,
+        MultFamily::Approx42 {
+            compressor: CompressorKind::Yang1,
+            approx_cols: 8,
+        },
+        MultFamily::Approx42 {
+            compressor: CompressorKind::Kong,
+            approx_cols: 4,
+        },
+    ]
+    .iter()
+    .map(|f| (f.name(), int8_lut(f)))
+    .collect()
+}
+
+fn bits_of(rows: &[Vec<f32>]) -> Vec<u32> {
+    rows.iter().flatten().map(|x| x.to_bits()).collect()
+}
+
+fn luts_for<'a>(palette: &'a [(String, Vec<i32>)], asg: &[usize; N_LAYERS]) -> LayerLuts<'a> {
+    LayerLuts {
+        conv1: &palette[asg[0]].1,
+        conv2: &palette[asg[1]].1,
+        fc1: &palette[asg[2]].1,
+        fc2: &palette[asg[3]].1,
+    }
+}
+
+fn run_suffix_replay_cases(batches: &[usize], cases: usize, seed: u64) {
+    let pal = palette();
+    let model = QuantCnn::random(0xACC);
+    check(cases, seed, |g| {
+        let bsz = *g.choose(batches);
+        let images = synthetic_images(bsz, g.u64_bits(16));
+        let views: Vec<&[u8]> = images.chunks(IMG * IMG).collect();
+        let mut asg = [0usize; N_LAYERS];
+        for slot in asg.iter_mut() {
+            *slot = g.usize_below(pal.len());
+        }
+        let luts = luts_for(&pal, &asg);
+        let threads = 1 + g.usize_below(3);
+        let full = model.forward_batch_hetero(&luts, &views, threads);
+
+        // Replay from every depth — not just a sampled one — so a broken
+        // stage boundary cannot hide behind the draw.
+        let mut ck = model.input_checkpoint(&views);
+        for depth in 0..N_LAYERS {
+            let replay = model.resume_batch_hetero(&ck, &luts, 1);
+            prop_assert(
+                bits_of(&replay) == bits_of(&full),
+                format!("replay from depth {depth} diverged (asg {asg:?}, bsz {bsz})"),
+            )?;
+            if depth < N_LAYERS - 1 {
+                ck = model.advance_checkpoint(&ck, luts.get(depth), 1);
+            }
+        }
+        Ok(())
+    });
+}
+
+fn run_delta_replay_cases(batches: &[usize], cases: usize, seed: u64) {
+    let pal = palette();
+    let model = QuantCnn::random(0xDE17A);
+    let exact_luts = LayerLuts::uniform(&pal[0].1);
+    check(cases, seed, |g| {
+        let bsz = *g.choose(batches);
+        let images = synthetic_images(bsz, g.u64_bits(16));
+        let views: Vec<&[u8]> = images.chunks(IMG * IMG).collect();
+        let anchor = model.reference_chain(&exact_luts, &views, 1);
+        // One non-exact layer, everything downstream exact — the shape of
+        // every sensitivity probe.
+        let layer = g.usize_below(N_LAYERS - 1);
+        let cand = 1 + g.usize_below(pal.len() - 1);
+        let mut asg = [0usize; N_LAYERS];
+        asg[layer] = cand;
+        let luts = luts_for(&pal, &asg);
+        let full = model.forward_batch_hetero(&luts, &views, 1);
+        let next = model.advance_checkpoint(anchor.checkpoint(layer), &pal[cand].1, 1);
+        let (logits, dmacs) = model.delta_resume_exact(&anchor, &next);
+        prop_assert(
+            bits_of(&logits) == bits_of(&full),
+            format!(
+                "delta replay diverged (layer {layer} → {}, bsz {bsz})",
+                pal[cand].0
+            ),
+        )?;
+        // Delta cost is bounded by the full suffix (equality only if every
+        // single downstream activation changed); the strict aggregate
+        // saving is asserted in `compile::search`'s stats tests.
+        let full_suffix: u64 =
+            layer_macs_per_image()[layer + 1..].iter().sum::<u64>() * bsz as u64;
+        prop_assert(
+            dmacs <= full_suffix,
+            format!("delta replay exceeded the full suffix: {dmacs} vs {full_suffix}"),
+        )
+    });
+}
+
+#[test]
+fn suffix_replay_bit_identical_small_batches() {
+    run_suffix_replay_cases(&[1, 4], 6, 0x51DE);
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+fn suffix_replay_bit_identical_batch_32() {
+    run_suffix_replay_cases(&[1, 32], 16, 0x51DF);
+}
+
+#[test]
+fn delta_replay_bit_identical_small_batches() {
+    run_delta_replay_cases(&[1, 4], 6, 0xD317);
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "expensive: run with --release (make test)")]
+fn delta_replay_bit_identical_batch_32() {
+    run_delta_replay_cases(&[1, 32], 16, 0xD318);
+}

@@ -5,8 +5,14 @@
 //! perf trajectory is tracked across PRs.
 //!
 //! ```text
-//! cargo bench --bench hotpaths
+//! cargo bench --bench hotpaths                  # full size
+//! OPENACM_SMOKE=1 cargo bench --bench hotpaths  # CI smoke
 //! ```
+//!
+//! The `scalar planes`/`wide planes` columns pin the SIMD plane-group
+//! widening of the bit-parallel engine (`util::simd`, DESIGN.md §"SIMD
+//! kernels"): identical results at every width, speedup tracked as
+//! `wide_planes_over_scalar_planes`.
 
 use openacm::bench::harness::{bench, black_box, BenchJson};
 use openacm::config::spec::{CompressorKind, MultFamily};
@@ -20,37 +26,79 @@ use openacm::util::rng::Pcg32;
 use openacm::util::threadpool::ThreadPool;
 
 fn main() {
+    let smoke_env = std::env::var("OPENACM_SMOKE")
+        .map(|v| !v.is_empty() && v != "0" && !v.eq_ignore_ascii_case("false"))
+        .unwrap_or(false);
+    let smoke = smoke_env || std::env::args().any(|a| a == "--smoke");
+    // Smoke mode trims warmups/iters only — every case still runs once so
+    // the JSON keeps the full column set (CI uploads it per dispatch arm).
+    let (w, iters) = if smoke { (0, 2) } else { (1, 20) };
+    let simd_level = openacm::util::simd::detect();
+    println!(
+        "hotpaths: SIMD level {} ({} plane words){}",
+        simd_level.name(),
+        simd_level.plane_words(),
+        if smoke { " [smoke]" } else { "" }
+    );
+
     let mut json = BenchJson::new("hotpaths");
     // 0. The headline: exhaustive INT8 characterization (all 65,536 input
     // vectors, full error metrics) — scalar event-driven engine vs the
-    // 64-lane bit-parallel engine, identical results by construction
+    // bit-parallel engine, identical results by construction
     // (rust/tests/sim_equivalence.rs proves bit-identical outputs+toggles).
     let nl8 = pptree::build_approx42(8, CompressorKind::Yang1, 8);
     let fam8 = MultFamily::default_approx(8);
-    let scalar = bench("exhaustive int8 char (scalar event sim)", 0, 3, || {
+    let scalar = bench("exhaustive int8 char (scalar event sim)", 0, iters.min(3), || {
         let mut sim = EventSim::new(&nl8);
         black_box(error_metrics::exhaustive_sim(&mut sim, 8));
     });
     json.case(&scalar);
-    let boolvec = bench("exhaustive int8 char (bit-parallel, bool-vec API)", 1, 10, || {
-        let mut sim = BitParallelSim::new(&nl8);
-        black_box(error_metrics::exhaustive_sim(&mut sim, 8));
-    });
+    let boolvec = bench(
+        "exhaustive int8 char (bit-parallel, bool-vec API)",
+        w,
+        iters.min(10),
+        || {
+            let mut sim = BitParallelSim::new(&nl8);
+            black_box(error_metrics::exhaustive_sim(&mut sim, 8));
+        },
+    );
     json.case(&boolvec);
-    let packed = bench("exhaustive int8 char (bit-parallel, packed)", 1, 20, || {
-        black_box(error_metrics::exhaustive_netlist(&fam8, 8, 1));
+    // Packed sweep at a pinned one-word plane group (the scalar-dispatch
+    // oracle) vs the detected SIMD width — same numbers out of both
+    // (rust/tests/sim_equivalence.rs), only the wall clock moves.
+    let packed = bench("exhaustive int8 char (packed, scalar planes)", w, iters, || {
+        black_box(error_metrics::exhaustive_netlist_words(&fam8, 8, 1, 1));
     });
     json.case(&packed);
+    let wide = bench(
+        &format!(
+            "exhaustive int8 char (packed, {} planes x{})",
+            simd_level.name(),
+            simd_level.plane_words()
+        ),
+        w,
+        iters,
+        || {
+            black_box(error_metrics::exhaustive_netlist(&fam8, 8, 1));
+        },
+    );
+    json.case(&wide);
     println!(
-        "→ bit-parallel speedup over scalar: {:.1}x (single-threaded)",
+        "→ bit-parallel speedup over scalar: {:.1}x (single-threaded, scalar planes)",
         scalar.mean_ns / packed.mean_ns
     );
     json.ratio("bitparallel_packed_over_scalar", scalar.mean_ns / packed.mean_ns);
+    println!(
+        "→ wide-plane ({}) speedup over scalar planes: {:.2}x",
+        simd_level.name(),
+        packed.mean_ns / wide.mean_ns
+    );
+    json.ratio("wide_planes_over_scalar_planes", packed.mean_ns / wide.mean_ns);
     let threads = ThreadPool::default_parallelism();
     let mt = bench(
         &format!("exhaustive int8 char (packed, {threads} threads)"),
-        1,
-        20,
+        w,
+        iters,
         || {
             black_box(error_metrics::exhaustive_netlist(&fam8, 8, threads));
         },
@@ -62,11 +110,11 @@ fn main() {
     );
     json.ratio("combined_over_scalar", scalar.mean_ns / mt.mean_ns);
     // 1. Netlist generation (the compiler front end).
-    let r = bench("build_exact(32) netlist", 1, 20, || {
+    let r = bench("build_exact(32) netlist", w, iters, || {
         black_box(pptree::build_exact(32));
     });
     json.case(&r);
-    let r = bench("build_logour(32) netlist", 1, 20, || {
+    let r = bench("build_logour(32) netlist", w, iters, || {
         black_box(openacm::mult::logarithmic::build_logour(32));
     });
     json.case(&r);
@@ -78,7 +126,7 @@ fn main() {
         .map(|_| (rng.next_u64() & 0xFFFF, rng.next_u64() & 0xFFFF))
         .collect();
     let vectors = mult_workload_vectors(16, &pairs);
-    let r = bench("activity_bitparallel(16b mult, 4096 vecs)", 1, 20, || {
+    let r = bench("activity_bitparallel(16b mult, 4096 vecs)", w, iters, || {
         black_box(activity_bitparallel(&nl, &vectors));
     });
     println!(
@@ -88,8 +136,8 @@ fn main() {
     json.case(&r);
     let r = bench(
         &format!("activity_parallel(16b mult, 4096 vecs, {threads}t)"),
-        1,
-        20,
+        w,
+        iters,
         || {
             black_box(activity_parallel(&nl, &vectors, threads));
         },
@@ -98,7 +146,7 @@ fn main() {
 
     // 3. Event-driven simulation (the incremental engine).
     let mut sim = EventSim::new(&nl);
-    let r = bench("event_sim(16b mult, 4096 vecs)", 1, 10, || {
+    let r = bench("event_sim(16b mult, 4096 vecs)", w, iters.min(10), || {
         for v in &vectors {
             black_box(sim.step(v));
         }
@@ -114,7 +162,7 @@ fn main() {
     let narrow: Vec<(u64, u64)> = (0..4096u64).map(|t| (t % 16, 0xBEEF)).collect();
     let narrow_vecs = mult_workload_vectors(16, &narrow);
     let mut sim_n = EventSim::new(&nl);
-    let r = bench("event_sim(16b mult, narrow cone)", 1, 10, || {
+    let r = bench("event_sim(16b mult, narrow cone)", w, iters.min(10), || {
         for v in &narrow_vecs {
             black_box(sim_n.step(v));
         }
@@ -128,7 +176,8 @@ fn main() {
     // 4. 64-lane behavioral multiply (LUT generation hot path).
     let lanes_a: Vec<u64> = (0..64).collect();
     let lanes_b: Vec<u64> = (0..64).map(|i| 255 - i).collect();
-    let r = bench("soft_multiply_lanes(8b yang1, 64 pairs)", 10, 500, || {
+    let (mw, mi) = if smoke { (1, 20) } else { (10, 500) };
+    let r = bench("soft_multiply_lanes(8b yang1, 64 pairs)", mw, mi, || {
         black_box(pptree::soft_multiply_lanes(
             8,
             8,
@@ -141,11 +190,11 @@ fn main() {
     json.case(&r);
 
     // 5. int8 LUT generation (python-parity path).
-    let r = bench("int8_lut(logour)", 1, 10, || {
+    let r = bench("int8_lut(logour)", w, iters.min(10), || {
         black_box(int8_lut(&MultFamily::LogOur));
     });
     json.case(&r);
-    let r = bench("int8_lut(appro42/yang1)", 1, 5, || {
+    let r = bench("int8_lut(appro42/yang1)", w, iters.min(5), || {
         black_box(int8_lut(&MultFamily::default_approx(8)));
     });
     json.case(&r);
@@ -154,7 +203,8 @@ fn main() {
     let cnn = QuantCnn::random(7);
     let lut = int8_lut(&MultFamily::Exact);
     let img: Vec<u8> = (0..256).map(|i| (i * 7 % 256) as u8).collect();
-    let r = bench("native QuantCnn::forward (1 image)", 5, 100, || {
+    let (fw, fi) = if smoke { (1, 10) } else { (5, 100) };
+    let r = bench("native QuantCnn::forward (1 image)", fw, fi, || {
         black_box(cnn.forward(&lut, &img));
     });
     println!("→ {:.0} images/s native", r.throughput(1.0));

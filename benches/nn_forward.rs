@@ -15,7 +15,8 @@ use openacm::bench::harness::{bench, black_box, BenchJson};
 use openacm::config::spec::MultFamily;
 use openacm::mult::behavioral::int8_lut;
 use openacm::nn::model::{synthetic_images, QuantCnn};
-use openacm::nn::quant::{lut_matmul, lut_matmul_batched};
+use openacm::nn::quant::{lut_matmul, lut_matmul_batched, lut_matmul_batched_with};
+use openacm::util::simd::{detect, SimdLevel};
 use openacm::util::threadpool::ThreadPool;
 
 fn main() {
@@ -98,6 +99,51 @@ fn main() {
         );
         json.case(&fast);
         json.ratio("blocked_gemm_over_reference", reference.mean_ns / fast.mean_ns);
+
+        // SIMD dispatch on the same shape, single-threaded so the column
+        // isolates the vector-width win (bit-identical outputs; see
+        // rust/tests/nn_batch_equivalence.rs). On scalar-only hosts (or
+        // under OPENACM_FORCE_SCALAR) both columns run the same code and
+        // the ratio reads ≈ 1.
+        let level = detect();
+        println!("→ SIMD dispatch level: {}", level.name());
+        let scalar_gemm = bench(
+            &format!("lut_matmul_batched {m}x{k}x{n} 1thr scalar"),
+            1,
+            iters,
+            || {
+                black_box(lut_matmul_batched_with(
+                    SimdLevel::Scalar,
+                    &lut,
+                    &a,
+                    &b,
+                    m,
+                    k,
+                    n,
+                    0.02,
+                    0.03,
+                    1,
+                ));
+            },
+        );
+        json.case(&scalar_gemm);
+        let simd_gemm = bench(
+            &format!("lut_matmul_batched {m}x{k}x{n} 1thr {}", level.name()),
+            1,
+            iters,
+            || {
+                black_box(lut_matmul_batched_with(
+                    level, &lut, &a, &b, m, k, n, 0.02, 0.03, 1,
+                ));
+            },
+        );
+        json.case(&simd_gemm);
+        println!(
+            "→ {} GEMM speedup over scalar dispatch: {:.2}x",
+            level.name(),
+            scalar_gemm.mean_ns / simd_gemm.mean_ns
+        );
+        json.ratio("simd_gemm_over_scalar", scalar_gemm.mean_ns / simd_gemm.mean_ns);
     }
 
     match json.write() {

@@ -279,6 +279,171 @@ impl Netlist {
         }
     }
 
+    /// Evaluate `words × 64` input vectors in one topological sweep: every
+    /// net carries a *plane-group* of `words` consecutive `u64` bit-planes
+    /// (word `w`, lane `l` = vector `w·64 + l`). `assignment` is
+    /// input-major — input `i`'s group at `[i·words .. (i+1)·words]` — and
+    /// `vals` comes back net-major with the same per-net layout, so net
+    /// `n`'s word `w` sits at `vals[n·words + w]`. With `words == 1` this
+    /// is exactly [`Netlist::eval_u64_into`].
+    ///
+    /// Every gate op is pure bitwise and identical per word, so the result
+    /// is bit-identical to `words` separate [`Netlist::eval_u64_into`]
+    /// sweeps regardless of dispatch tier; when [`crate::util::simd`]
+    /// detects AVX2 the 4-word groups are evaluated with 256-bit ops (and
+    /// 2-word groups auto-vectorize to NEON on aarch64). This is the
+    /// engine under [`crate::sim::BitParallelSim`]'s wide path, exhaustive
+    /// error characterization and the functional-yield Monte-Carlo.
+    pub fn eval_wide_into(&self, assignment: &[u64], words: usize, vals: &mut Vec<u64>) {
+        assert!(words >= 1, "at least one plane word");
+        assert_eq!(
+            assignment.len(),
+            self.inputs.len() * words,
+            "assignment arity mismatch"
+        );
+        match words {
+            1 => self.eval_u64_into(assignment, vals),
+            2 => {
+                #[cfg(target_arch = "aarch64")]
+                if crate::util::simd::detect() == crate::util::simd::SimdLevel::Neon {
+                    // SAFETY: NEON support was verified at runtime.
+                    unsafe { self.eval_planes_neon(assignment, vals) };
+                    return;
+                }
+                self.eval_planes::<2>(assignment, vals);
+            }
+            4 => {
+                #[cfg(target_arch = "x86_64")]
+                if crate::util::simd::detect() == crate::util::simd::SimdLevel::Avx2 {
+                    // SAFETY: AVX2 support was verified at runtime.
+                    unsafe { self.eval_planes_avx2(assignment, vals) };
+                    return;
+                }
+                self.eval_planes::<4>(assignment, vals);
+            }
+            _ => self.eval_planes_dyn(assignment, words, vals),
+        }
+    }
+
+    /// Shared plane-group body: `W` words per net, unrolled by the const
+    /// generic. `#[inline(always)]` so the `target_feature` wrappers below
+    /// compile it *inside* their feature scope, letting LLVM fold each
+    /// group into full-width vector ops.
+    #[inline(always)]
+    fn eval_planes<const W: usize>(&self, assignment: &[u64], vals: &mut Vec<u64>) {
+        vals.clear();
+        vals.resize(self.gates.len() * W, 0u64);
+        let v = vals.as_mut_slice();
+        let mut next_input = 0;
+        for (i, g) in self.gates.iter().enumerate() {
+            let o = i * W;
+            let a = g.inputs[0].idx() * W;
+            let b = g.inputs[1].idx() * W;
+            match g.kind {
+                GateKind::Const0 => {} // groups start zeroed
+                GateKind::Const1 => {
+                    for w in 0..W {
+                        v[o + w] = u64::MAX;
+                    }
+                }
+                GateKind::Input => {
+                    let src = &assignment[next_input * W..(next_input + 1) * W];
+                    v[o..o + W].copy_from_slice(src);
+                    next_input += 1;
+                }
+                GateKind::Buf => {
+                    v.copy_within(a..a + W, o);
+                }
+                GateKind::Not => {
+                    for w in 0..W {
+                        v[o + w] = !v[a + w];
+                    }
+                }
+                GateKind::And2 => {
+                    for w in 0..W {
+                        v[o + w] = v[a + w] & v[b + w];
+                    }
+                }
+                GateKind::Or2 => {
+                    for w in 0..W {
+                        v[o + w] = v[a + w] | v[b + w];
+                    }
+                }
+                GateKind::Xor2 => {
+                    for w in 0..W {
+                        v[o + w] = v[a + w] ^ v[b + w];
+                    }
+                }
+                GateKind::Nand2 => {
+                    for w in 0..W {
+                        v[o + w] = !(v[a + w] & v[b + w]);
+                    }
+                }
+                GateKind::Nor2 => {
+                    for w in 0..W {
+                        v[o + w] = !(v[a + w] | v[b + w]);
+                    }
+                }
+                GateKind::Xnor2 => {
+                    for w in 0..W {
+                        v[o + w] = !(v[a + w] ^ v[b + w]);
+                    }
+                }
+                GateKind::Mux2 => {
+                    let s = g.inputs[2].idx() * W;
+                    for w in 0..W {
+                        let sv = v[s + w];
+                        v[o + w] = (v[a + w] & !sv) | (v[b + w] & sv);
+                    }
+                }
+            }
+        }
+    }
+
+    /// [`Netlist::eval_planes`] compiled with AVX2 enabled: each 4-word
+    /// plane group becomes one 256-bit lane vector.
+    ///
+    /// # Safety
+    /// The caller must have verified AVX2 support at runtime
+    /// ([`crate::util::simd::detect`]).
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2")]
+    unsafe fn eval_planes_avx2(&self, assignment: &[u64], vals: &mut Vec<u64>) {
+        self.eval_planes::<4>(assignment, vals);
+    }
+
+    /// [`Netlist::eval_planes`] compiled with NEON enabled: each 2-word
+    /// plane group becomes one 128-bit lane vector.
+    ///
+    /// # Safety
+    /// The caller must have verified NEON support at runtime (always true
+    /// on aarch64 std targets, still checked for uniformity).
+    #[cfg(target_arch = "aarch64")]
+    #[target_feature(enable = "neon")]
+    unsafe fn eval_planes_neon(&self, assignment: &[u64], vals: &mut Vec<u64>) {
+        self.eval_planes::<2>(assignment, vals);
+    }
+
+    /// Arbitrary-width fallback (API totality; the dispatched widths are
+    /// 1/2/4): evaluate one column at a time through the scalar engine and
+    /// scatter into the net-major group layout. Bit-identical by
+    /// construction.
+    fn eval_planes_dyn(&self, assignment: &[u64], words: usize, vals: &mut Vec<u64>) {
+        vals.clear();
+        vals.resize(self.gates.len() * words, 0u64);
+        let mut col = Vec::new();
+        let mut a_col = vec![0u64; self.inputs.len()];
+        for w in 0..words {
+            for (i, chunk) in assignment.chunks_exact(words).enumerate() {
+                a_col[i] = chunk[w];
+            }
+            self.eval_u64_into(&a_col, &mut col);
+            for (net, &x) in col.iter().enumerate() {
+                vals[net * words + w] = x;
+            }
+        }
+    }
+
     /// Single-vector evaluation: map named input bits to a named output
     /// word. Inputs/outputs are bit-vectors in declaration order.
     pub fn eval_words(&self, input_bits: &[bool]) -> Vec<bool> {
@@ -447,6 +612,42 @@ mod tests {
         let mut rp = Vec::new();
         renamed_port.canonical_bytes(&mut rp);
         assert_ne!(base, rp);
+    }
+
+    #[test]
+    fn wide_plane_groups_match_column_by_column_eval() {
+        // eval_wide_into(words=W) must equal W independent eval_u64_into
+        // sweeps, one per word — for the dispatched widths and an odd one.
+        let mut b = Builder::new("add4");
+        let x = b.input_bus("x", 4);
+        let y = b.input_bus("y", 4);
+        let (sum, carry) = b.ripple_add(&x, &y);
+        b.output_bus("s", &sum);
+        b.output_bit("c", carry);
+        let nl = b.finish();
+        let n_in = nl.inputs().len();
+        let mut seed = 0x9E37_79B9_7F4A_7C15u64;
+        let mut next = || {
+            seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            seed
+        };
+        for words in [1usize, 2, 3, 4] {
+            let assignment: Vec<u64> = (0..n_in * words).map(|_| next()).collect();
+            let mut wide = Vec::new();
+            nl.eval_wide_into(&assignment, words, &mut wide);
+            assert_eq!(wide.len(), nl.gates().len() * words);
+            let mut col_in = vec![0u64; n_in];
+            let mut col_out = Vec::new();
+            for w in 0..words {
+                for i in 0..n_in {
+                    col_in[i] = assignment[i * words + w];
+                }
+                nl.eval_u64_into(&col_in, &mut col_out);
+                for (net, &v) in col_out.iter().enumerate() {
+                    assert_eq!(wide[net * words + w], v, "words={words} w={w} net={net}");
+                }
+            }
+        }
     }
 
     #[test]

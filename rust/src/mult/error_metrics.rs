@@ -24,7 +24,7 @@ use super::behavioral::{behavioral_fn, product_table};
 use crate::config::spec::{MultFamily, MultSpec};
 use crate::gates::Netlist;
 use crate::sim::activity::mult_workload_vectors;
-use crate::sim::bitparallel::counting_planes;
+use crate::sim::bitparallel::counting_planes_wide;
 use crate::sim::Simulator;
 use crate::store::{DesignPointRecord, DesignPointStore, ErrorStats, KeyBuilder};
 use crate::util::rng::Pcg32;
@@ -209,11 +209,13 @@ pub fn exhaustive_sim(sim: &mut dyn Simulator, bits: usize) -> ErrorReport {
 /// worker owns its own value buffer over the shared netlist, and the
 /// partial sums merge in a fixed order — deterministic for any thread
 /// count; the integer-valued metrics are even bit-identical across thread
-/// counts). The `b` operand counts through the 64 lanes via
-/// [`counting_planes`], so no per-vector input or output data is ever
-/// materialized — and unlike the [`Simulator`]-trait path this skips
-/// toggle accounting, which pure error characterization never reads.
-/// This is what the DSE sweep calls per design point.
+/// counts). The `b` operand counts through the lanes of a SIMD-wide
+/// plane-group via [`counting_planes_wide`] (64 × plane-width vectors per
+/// topological sweep, width from [`crate::util::simd::detect`] — results
+/// are bit-identical for any width), so no per-vector input or output
+/// data is ever materialized — and unlike the [`Simulator`]-trait path
+/// this skips toggle accounting, which pure error characterization never
+/// reads. This is what the DSE sweep calls per design point.
 pub fn exhaustive_netlist(family: &MultFamily, bits: usize, threads: usize) -> ErrorReport {
     assert!(bits <= 12, "exhaustive only up to 12 bits; use sampled()");
     let nl = build_mult_netlist(family, bits);
@@ -301,8 +303,40 @@ fn build_mult_netlist(family: &MultFamily, bits: usize) -> Netlist {
 }
 
 fn exhaustive_of_netlist(nl: &Netlist, bits: usize, threads: usize) -> ErrorReport {
+    exhaustive_of_netlist_words(nl, bits, threads, crate::util::simd::detect().plane_words())
+}
+
+/// [`exhaustive_netlist`] with an explicitly pinned plane-group width
+/// (`words == 1` is the scalar-oracle sweep). Exposed for the SIMD
+/// equivalence tests and the scalar-vs-SIMD bench columns; results are
+/// bit-identical for any `words` at a fixed thread count (integer sums
+/// accumulate in the same (a, b) order regardless of the sweep width).
+#[doc(hidden)]
+pub fn exhaustive_netlist_words(
+    family: &MultFamily,
+    bits: usize,
+    threads: usize,
+    words: usize,
+) -> ErrorReport {
+    assert!(bits <= 12, "exhaustive only up to 12 bits; use sampled()");
+    let nl = build_mult_netlist(family, bits);
+    exhaustive_of_netlist_words(&nl, bits, threads, words)
+}
+
+fn exhaustive_of_netlist_words(
+    nl: &Netlist,
+    bits: usize,
+    threads: usize,
+    words: usize,
+) -> ErrorReport {
     let out_ids: Vec<usize> = nl.outputs().iter().map(|(_, id)| id.idx()).collect();
     let n = 1u64 << bits;
+    // Both n and 64·words are powers of two, so clamping the group width
+    // to ceil(n/64) words means every sweep is exactly `words` words and
+    // either exactly 64·words lanes or (only when n < 64) n lanes — no
+    // partial-word blocks to special-case.
+    let words = words.clamp(1, (n as usize).div_ceil(64));
+    let stride = 64 * words as u64;
     let threads = threads.max(1).min(n as usize);
     let chunk = (n as usize).div_ceil(threads);
     let parts = parallel_map(threads, threads, |ci| {
@@ -312,27 +346,32 @@ fn exhaustive_of_netlist(nl: &Netlist, bits: usize, threads: usize) -> ErrorRepo
         if a_lo >= a_hi {
             return acc;
         }
-        // assignment = [a planes (broadcast) | b planes (lane-counting)];
-        // the b planes depend only on the block start, so build the n/64
-        // block plane sets once instead of per (a, block).
+        // assignment = [a plane-groups (broadcast) | b plane-groups
+        // (lane-counting)]; the b planes depend only on the block start,
+        // so build the n/stride group sets once instead of per (a, block).
         let b_planes: Vec<Vec<u64>> = (0..n)
-            .step_by(64)
-            .map(|b0| counting_planes(b0, bits))
+            .step_by(stride as usize)
+            .map(|b0| counting_planes_wide(b0, bits, words))
             .collect();
-        let mut assignment = vec![0u64; 2 * bits];
+        let mut assignment = vec![0u64; 2 * bits * words];
         let mut vals = Vec::new();
         for a in a_lo..a_hi {
             for i in 0..bits {
-                assignment[i] = if (a >> i) & 1 == 1 { u64::MAX } else { 0 };
+                let word = if (a >> i) & 1 == 1 { u64::MAX } else { 0 };
+                for w in 0..words {
+                    assignment[i * words + w] = word;
+                }
             }
             let mut b0 = 0u64;
             while b0 < n {
-                let lanes = (n - b0).min(64);
-                assignment[bits..2 * bits].copy_from_slice(&b_planes[(b0 / 64) as usize]);
-                nl.eval_u64_into(&assignment, &mut vals);
+                let lanes = (n - b0).min(stride);
+                assignment[bits * words..]
+                    .copy_from_slice(&b_planes[(b0 / stride) as usize]);
+                nl.eval_wide_into(&assignment, words, &mut vals);
                 for lane in 0..lanes {
+                    let (w, bit) = ((lane / 64) as usize, lane % 64);
                     let p = out_ids.iter().enumerate().fold(0u64, |p, (i, &idx)| {
-                        p | (((vals[idx] >> lane) & 1) << i)
+                        p | (((vals[idx * words + w] >> bit) & 1) << i)
                     });
                     acc.add((a * (b0 + lane)) as i64, p as i64);
                 }
@@ -433,6 +472,32 @@ mod tests {
         assert_eq!(sa.nmed.to_bits(), sc.nmed.to_bits());
         assert_eq!(store.stats().writes, 2);
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn plane_width_does_not_change_reports() {
+        // 8 bits so group widths up to 4 words are actually exercised
+        // (n = 256 lanes per a-value). Fixed thread count → the float
+        // accumulation order is identical, so even the f64 metrics are
+        // bit-equal across widths.
+        let fam = MultFamily::Approx42 {
+            compressor: CompressorKind::Yang1,
+            approx_cols: 6,
+        };
+        let narrow = exhaustive_netlist_words(&fam, 8, 2, 1);
+        for words in [2usize, 4] {
+            let wide = exhaustive_netlist_words(&fam, 8, 2, words);
+            assert_eq!(narrow.nmed.to_bits(), wide.nmed.to_bits(), "words={words}");
+            assert_eq!(narrow.mred.to_bits(), wide.mred.to_bits(), "words={words}");
+            assert_eq!(narrow.wce, wide.wce, "words={words}");
+            assert_eq!(narrow.error_rate, wide.error_rate, "words={words}");
+            assert_eq!(
+                narrow.normalized_bias.to_bits(),
+                wide.normalized_bias.to_bits(),
+                "words={words}"
+            );
+            assert_eq!(narrow.samples, wide.samples);
+        }
     }
 
     #[test]

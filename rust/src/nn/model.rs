@@ -14,6 +14,12 @@
 //! with [`QuantCnn::reference_chain`] / [`QuantCnn::delta_resume_exact`]
 //! (sparse linear delta replay against a pinned all-exact baseline).
 //!
+//! All batched GEMMs run through [`super::quant::lut_matmul_batched`],
+//! whose inner strips dispatch at runtime through [`crate::util::simd`]
+//! (AVX2 / NEON / scalar, bit-identical outputs — `DESIGN.md` §"SIMD
+//! kernels"), so every forward here inherits the vectorized kernels
+//! without caring which level the host runs.
+//!
 //! Architecture (16×16×1 input, 10 classes):
 //!   conv3x3(1→8) + relu + maxpool2 → conv3x3(8→16) + relu + maxpool2
 //!   → flatten(2·2·16=64)… wait: 16→14→7→5→2 — flatten 2×2×16 = 64

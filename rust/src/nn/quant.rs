@@ -23,7 +23,24 @@
 //! the same i64 total, so both kernels are *bit-identical* to the naive
 //! reference for every LUT and shape
 //! (`rust/tests/nn_batch_equivalence.rs`).
+//!
+//! ## SIMD dispatch (DESIGN.md §"SIMD kernels")
+//!
+//! The blocked kernel's two inner loops — the contiguous LUT-row gather
+//! into the i32 strip and the i32 → i64 widening flush at each k-tile
+//! boundary — dispatch at runtime through [`crate::util::simd`]: AVX2
+//! (8-wide gather, 4-wide widen) on x86_64, NEON-compiled bodies on
+//! aarch64, and the scalar bodies everywhere else (always compiled; they
+//! are the oracle the vector paths are tested against, and
+//! `OPENACM_FORCE_SCALAR=1` pins dispatch to them). Exact integer
+//! accumulation makes every path bit-identical. The [`TILE_K`] i32
+//! partial-sum bound is *enforced at runtime*: a hostile/degenerate LUT
+//! whose entries exceed `i32::MAX / TILE_K` no longer risks silent i32
+//! wrap (previously only a `debug_assert!`) — the kernel drops to an
+//! i64-widened scalar strip that cannot wrap, and the serving backend
+//! surfaces a warning ([`crate::runtime::backend::Backend::warnings`]).
 
+use crate::util::simd::{self, SimdLevel};
 use crate::util::threadpool::parallel_map;
 
 /// Quantize one value.
@@ -124,13 +141,17 @@ const TILE_N: usize = 64;
 /// fraction of all activations.
 ///
 /// `threads` spreads row-tiles across scoped workers (1 = fully serial);
-/// the result is independent of the thread count.
+/// the result is independent of the thread count. The inner strip loops
+/// dispatch through [`crate::util::simd::detect`]; use
+/// [`lut_matmul_batched_with`] to pin a level explicitly.
 ///
-/// **Precondition** (debug-asserted): every LUT entry must satisfy
-/// `|entry| ≤ i32::MAX / 128` (≈ 16.8M), or a k-tile's i32 partial sum
-/// could wrap and break bit-identity with the reference. Every int8
-/// product LUT is bounded by 128·128 = 16384, four orders of magnitude
-/// inside the limit.
+/// LUT entries are scanned once against the blocked kernel's i32
+/// partial-sum bound (`|entry| ≤ i32::MAX / 128`, see
+/// [`lut_exceeds_blocked_bound`]). Every real int8 product LUT is bounded
+/// by 128·128 = 16384, four orders of magnitude inside the limit; a
+/// hostile LUT that exceeds it is routed to an i64-widened scalar strip
+/// instead of silently wrapping, so the output stays bit-identical to the
+/// reference for *every* LUT.
 #[allow(clippy::too_many_arguments)]
 pub fn lut_matmul_batched(
     lut: &[i32],
@@ -143,7 +164,28 @@ pub fn lut_matmul_batched(
     scale_b: f32,
     threads: usize,
 ) -> Vec<f32> {
-    let tiles = lut_gemm_tiles(lut, a, b, m, k, n, threads);
+    lut_matmul_batched_with(simd::detect(), lut, a, b, m, k, n, scale_a, scale_b, threads)
+}
+
+/// [`lut_matmul_batched`] with an explicit [`SimdLevel`] instead of the
+/// auto-detected one. A level the host cannot execute falls back to
+/// scalar; the output is bit-identical across levels either way. Public
+/// for the equivalence tests and benches.
+#[doc(hidden)]
+#[allow(clippy::too_many_arguments)]
+pub fn lut_matmul_batched_with(
+    level: SimdLevel,
+    lut: &[i32],
+    a: &[i8],
+    b: &[i8],
+    m: usize,
+    k: usize,
+    n: usize,
+    scale_a: f32,
+    scale_b: f32,
+    threads: usize,
+) -> Vec<f32> {
+    let tiles = lut_gemm_tiles(level, lut, a, b, m, k, n, threads);
     let s = scale_a * scale_b;
     let mut out = vec![0f32; m * n];
     for (t, acc) in tiles.into_iter().enumerate() {
@@ -172,7 +214,24 @@ pub fn lut_matmul_acc(
     n: usize,
     threads: usize,
 ) -> Vec<i64> {
-    let tiles = lut_gemm_tiles(lut, a, b, m, k, n, threads);
+    lut_matmul_acc_with(simd::detect(), lut, a, b, m, k, n, threads)
+}
+
+/// [`lut_matmul_acc`] with an explicit [`SimdLevel`]. Public for the
+/// equivalence tests and benches.
+#[doc(hidden)]
+#[allow(clippy::too_many_arguments)]
+pub fn lut_matmul_acc_with(
+    level: SimdLevel,
+    lut: &[i32],
+    a: &[i8],
+    b: &[i8],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) -> Vec<i64> {
+    let tiles = lut_gemm_tiles(level, lut, a, b, m, k, n, threads);
     let mut out = vec![0i64; m * n];
     for (t, acc) in tiles.into_iter().enumerate() {
         let base = t * TILE_M * n;
@@ -181,10 +240,31 @@ pub fn lut_matmul_acc(
     out
 }
 
+/// True iff some LUT entry's magnitude exceeds `i32::MAX / TILE_K`, the
+/// bound that keeps a k-tile's i32 partial sum from wrapping in the
+/// blocked kernel. No real int8 product LUT comes close (|a·b| ≤ 16384 ≪
+/// ≈16.8M); when a synthetic/hostile LUT does, the blocked kernel
+/// transparently switches to an i64-widened scalar strip and the serving
+/// backend reports it via `Backend::warnings`.
+pub fn lut_exceeds_blocked_bound(lut: &[i32]) -> bool {
+    let bound = i32::MAX / TILE_K as i32;
+    lut.iter().any(|&v| v < -bound || v > bound)
+}
+
 /// The shared blocked-GEMM core: one i64 accumulator block per row tile
 /// ([`TILE_M`] rows each, the last possibly short), computed across the
 /// thread pool. Callers stitch/dequantize in a single pass.
+///
+/// The tail tiles need no special-casing: every `min(...)` clamp above
+/// produces a short strip/row slice, and both the scalar and vector
+/// strip bodies take the live `width` explicitly (the vector bodies
+/// handle the sub-vector remainder with a scalar tail loop), so
+/// non-multiple m/k/n shapes walk exactly the same element set as the
+/// reference (`rust/tests/nn_batch_equivalence.rs` pins odd shapes per
+/// level).
+#[allow(clippy::too_many_arguments)]
 fn lut_gemm_tiles(
+    level: SimdLevel,
     lut: &[i32],
     a: &[i8],
     b: &[i8],
@@ -196,11 +276,12 @@ fn lut_gemm_tiles(
     assert_eq!(lut.len(), 65536);
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
-    debug_assert!(
-        lut.iter()
-            .all(|&v| (v as i64).abs() <= i32::MAX as i64 / TILE_K as i64),
-        "LUT entries exceed the blocked kernel's i32 partial-sum bound"
-    );
+    // Runtime guard (was a debug_assert, i.e. a silent i32 wrap in
+    // release): a LUT outside the i32 partial-sum bound takes the
+    // i64-widened scalar strip below, which cannot wrap for any i32
+    // entries (|entry| ≤ 2³¹ summed ≤ 2¹⁷ times fits i64 with > 15 bits
+    // to spare even before the per-tile flush).
+    let wide_acc = lut_exceeds_blocked_bound(lut);
     // a == 0 contributes nothing iff the LUT's zero row is identically
     // zero; skipping it then adds the same zeros the reference adds.
     let zero_row_is_zero = lut[..256].iter().all(|&v| v == 0);
@@ -210,6 +291,7 @@ fn lut_gemm_tiles(
         let i1 = (i0 + TILE_M).min(m);
         let mut acc = vec![0i64; (i1 - i0) * n];
         let mut strip = [0i32; TILE_N];
+        let mut strip64 = [0i64; TILE_N];
         for k0 in (0..k).step_by(TILE_K) {
             let k1 = (k0 + TILE_K).min(k);
             for j0 in (0..n).step_by(TILE_N) {
@@ -217,6 +299,28 @@ fn lut_gemm_tiles(
                 let width = j1 - j0;
                 for i in i0..i1 {
                     let a_row = &a[i * k..(i + 1) * k];
+                    let out_row = &mut acc[(i - i0) * n + j0..(i - i0) * n + j1];
+                    if wide_acc {
+                        // Overflow-proof path for out-of-bound LUTs:
+                        // accumulate straight into i64, scalar only.
+                        let partial = &mut strip64[..width];
+                        partial.fill(0);
+                        for p in k0..k1 {
+                            let av = a_row[p];
+                            if av == 0 && zero_row_is_zero {
+                                continue;
+                            }
+                            let lut_row = &lut[((av as u8 as usize) << 8)..][..256];
+                            let b_row = &b[p * n + j0..p * n + j1];
+                            for (ps, &bv) in partial.iter_mut().zip(b_row) {
+                                *ps += lut_row[bv as u8 as usize] as i64;
+                            }
+                        }
+                        for (o, &ps) in out_row.iter_mut().zip(partial.iter()) {
+                            *o += ps;
+                        }
+                        continue;
+                    }
                     let partial = &mut strip[..width];
                     partial.fill(0);
                     for p in k0..k1 {
@@ -226,19 +330,165 @@ fn lut_gemm_tiles(
                         }
                         let lut_row = &lut[((av as u8 as usize) << 8)..][..256];
                         let b_row = &b[p * n + j0..p * n + j1];
-                        for (ps, &bv) in partial.iter_mut().zip(b_row) {
-                            *ps += lut_row[bv as u8 as usize];
-                        }
+                        strip_accum(level, lut_row, b_row, partial);
                     }
-                    let out_row = &mut acc[(i - i0) * n + j0..(i - i0) * n + j1];
-                    for (o, &ps) in out_row.iter_mut().zip(partial.iter()) {
-                        *o += ps as i64;
-                    }
+                    widen_accum(level, out_row, partial);
                 }
             }
         }
         acc
     })
+}
+
+/// `partial[j] += lut_row[b_row[j] as u8]` over the live strip width,
+/// dispatched on `level`. The scalar body is always compiled and is the
+/// oracle; a level the host lacks (or a cross-arch level) falls through
+/// to it. Exact i32 adds ⇒ bit-identical across levels.
+#[inline]
+fn strip_accum(level: SimdLevel, lut_row: &[i32], b_row: &[i8], partial: &mut [i32]) {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => {
+            if std::is_x86_feature_detected!("avx2") {
+                // SAFETY: AVX2 availability just verified on this host.
+                unsafe { avx2::strip_accum(lut_row, b_row, partial) };
+                return;
+            }
+            strip_accum_scalar(lut_row, b_row, partial);
+        }
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => {
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                // SAFETY: NEON availability just verified on this host.
+                unsafe { neon::strip_accum(lut_row, b_row, partial) };
+                return;
+            }
+            strip_accum_scalar(lut_row, b_row, partial);
+        }
+        _ => strip_accum_scalar(lut_row, b_row, partial),
+    }
+}
+
+/// `out_row[j] += partial[j] as i64` over the live strip width — the
+/// k-tile-boundary widening flush — dispatched on `level` like
+/// [`strip_accum`].
+#[inline]
+fn widen_accum(level: SimdLevel, out_row: &mut [i64], partial: &[i32]) {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => {
+            if std::is_x86_feature_detected!("avx2") {
+                // SAFETY: AVX2 availability just verified on this host.
+                unsafe { avx2::widen_accum(out_row, partial) };
+                return;
+            }
+            widen_accum_scalar(out_row, partial);
+        }
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => {
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                // SAFETY: NEON availability just verified on this host.
+                unsafe { neon::widen_accum(out_row, partial) };
+                return;
+            }
+            widen_accum_scalar(out_row, partial);
+        }
+        _ => widen_accum_scalar(out_row, partial),
+    }
+}
+
+#[inline(always)]
+fn strip_accum_scalar(lut_row: &[i32], b_row: &[i8], partial: &mut [i32]) {
+    for (ps, &bv) in partial.iter_mut().zip(b_row) {
+        *ps += lut_row[bv as u8 as usize];
+    }
+}
+
+#[inline(always)]
+fn widen_accum_scalar(out_row: &mut [i64], partial: &[i32]) {
+    for (o, &ps) in out_row.iter_mut().zip(partial.iter()) {
+        *o += ps as i64;
+    }
+}
+
+/// AVX2 strip bodies. Private; reached only through the dispatchers
+/// above after a runtime `is_x86_feature_detected!("avx2")` check.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// 8-wide gathered `partial += lut_row[b_row as u8]`.
+    ///
+    /// # Safety
+    /// Requires AVX2. Slice accesses stay in bounds: each 8-lane block
+    /// loads 8 bytes of `b_row` and reads/writes 8 i32 of `partial`
+    /// within `len`, and every gather index is a zero-extended byte
+    /// (< 256 = `lut_row.len()`).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn strip_accum(lut_row: &[i32], b_row: &[i8], partial: &mut [i32]) {
+        let len = partial.len().min(b_row.len());
+        let mut j = 0usize;
+        while j + 8 <= len {
+            // 8 int8 indices → zero-extend to 8 u32 lanes.
+            let idx8 = _mm_loadl_epi64(b_row.as_ptr().add(j) as *const __m128i);
+            let idx = _mm256_cvtepu8_epi32(idx8);
+            // Gather lut_row[idx] (scale 4 = i32 stride); the LUT row is
+            // a contiguous 256-entry slice so all lanes hit cache lines
+            // already touched by neighboring strips.
+            let gathered = _mm256_i32gather_epi32::<4>(lut_row.as_ptr(), idx);
+            let ps = _mm256_loadu_si256(partial.as_ptr().add(j) as *const __m256i);
+            let sum = _mm256_add_epi32(ps, gathered);
+            _mm256_storeu_si256(partial.as_mut_ptr().add(j) as *mut __m256i, sum);
+            j += 8;
+        }
+        // Scalar tail (< 8 lanes) — same adds, same order.
+        for jj in j..len {
+            partial[jj] += lut_row[b_row[jj] as u8 as usize];
+        }
+    }
+
+    /// 4-wide widening flush `out_row += partial as i64`.
+    ///
+    /// # Safety
+    /// Requires AVX2. Each 4-lane block reads 4 i32 and reads/writes
+    /// 4 i64 within `len`.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn widen_accum(out_row: &mut [i64], partial: &[i32]) {
+        let len = out_row.len().min(partial.len());
+        let mut j = 0usize;
+        while j + 4 <= len {
+            let ps = _mm_loadu_si128(partial.as_ptr().add(j) as *const __m128i);
+            let wide = _mm256_cvtepi32_epi64(ps);
+            let o = _mm256_loadu_si256(out_row.as_ptr().add(j) as *const __m256i);
+            let sum = _mm256_add_epi64(o, wide);
+            _mm256_storeu_si256(out_row.as_mut_ptr().add(j) as *mut __m256i, sum);
+            j += 4;
+        }
+        for jj in j..len {
+            out_row[jj] += partial[jj] as i64;
+        }
+    }
+}
+
+/// NEON strip bodies: the scalar loops recompiled inside a
+/// `target_feature(enable = "neon")` scope so LLVM auto-vectorizes them
+/// (tbl-free gather stays scalar but the adds/widens vectorize). Private;
+/// reached only through the dispatchers after a runtime NEON check.
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    /// # Safety
+    /// Requires NEON (checked by the caller). Body is safe Rust.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn strip_accum(lut_row: &[i32], b_row: &[i8], partial: &mut [i32]) {
+        super::strip_accum_scalar(lut_row, b_row, partial);
+    }
+
+    /// # Safety
+    /// Requires NEON (checked by the caller). Body is safe Rust.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn widen_accum(out_row: &mut [i64], partial: &[i32]) {
+        super::widen_accum_scalar(out_row, partial);
+    }
 }
 
 #[cfg(test)]
@@ -413,5 +663,65 @@ mod tests {
             / oe.len() as f32;
         assert!(err > 0.0, "logour must differ from exact");
         assert!(err < 0.2 * ref_norm, "relative error too large: {err} vs {ref_norm}");
+    }
+
+    #[test]
+    fn every_simd_level_matches_scalar_on_odd_shapes() {
+        let mut lut = vec![0i32; 65536];
+        for a in -128i32..=127 {
+            for b in -128i32..=127 {
+                lut[(((a as u8) as usize) << 8) | ((b as u8) as usize)] = a * b + 1;
+            }
+        }
+        let levels = crate::util::simd::available_levels();
+        // Shapes straddling every tile boundary: sub-tile, exact-tile,
+        // tile+1 in each of m/k/n, plus the degenerate 1×1×1.
+        for (m, k, n) in [(1, 1, 1), (5, 7, 3), (33, 129, 65), (32, 128, 64), (2, 200, 9)] {
+            let a: Vec<i8> = (0..m * k).map(|i| ((i * 89 + 3) % 256) as u8 as i8).collect();
+            let b: Vec<i8> = (0..k * n).map(|i| ((i * 57 + 11) % 256) as u8 as i8).collect();
+            let oracle = lut_matmul(&lut, &a, &b, m, k, n, 0.1, 0.2);
+            for &level in &levels {
+                let got =
+                    lut_matmul_batched_with(level, &lut, &a, &b, m, k, n, 0.1, 0.2, 2);
+                assert_eq!(got, oracle, "level={} m={m} k={k} n={n}", level.name());
+            }
+        }
+    }
+
+    #[test]
+    fn hostile_lut_beyond_bound_takes_exact_widened_path() {
+        // Entries at the extremes of i32: a single k-tile of 128 same-sign
+        // products would wrap an i32 partial sum ~60× over. Before the
+        // runtime guard this silently wrapped in release builds.
+        let mut lut = vec![0i32; 65536];
+        for a in -128i32..=127 {
+            for b in -128i32..=127 {
+                let sign = if (a ^ b) < 0 { -1i64 } else { 1 };
+                lut[(((a as u8) as usize) << 8) | ((b as u8) as usize)] =
+                    (sign * (i32::MAX as i64 - (a.unsigned_abs() * b.unsigned_abs()) as i64))
+                        as i32;
+            }
+        }
+        assert!(lut_exceeds_blocked_bound(&lut));
+        assert!(!lut_exceeds_blocked_bound(&int8_lut(&MultFamily::Exact)));
+        let (m, k, n) = (3, 300, 5);
+        let a: Vec<i8> = (0..m * k).map(|i| if i % 2 == 0 { 127 } else { -128 }).collect();
+        let b: Vec<i8> = (0..k * n).map(|i| ((i * 13 + 1) % 256) as u8 as i8).collect();
+        let oracle = lut_matmul(&lut, &a, &b, m, k, n, 1.0, 1.0);
+        for &level in &crate::util::simd::available_levels() {
+            let got = lut_matmul_batched_with(level, &lut, &a, &b, m, k, n, 1.0, 1.0, 2);
+            assert_eq!(got, oracle, "level={}", level.name());
+            // f32 rounding of huge i64 sums can collide, so also compare
+            // the raw accumulators against a direct naive i64 reduction.
+            let acc = lut_matmul_acc_with(level, &lut, &a, &b, m, k, n, 1);
+            for i in 0..m {
+                for j in 0..n {
+                    let direct: i64 = (0..k)
+                        .map(|p| lut_product(&lut, a[i * k + p], b[p * n + j]) as i64)
+                        .sum();
+                    assert_eq!(acc[i * n + j], direct, "acc ({i},{j})");
+                }
+            }
+        }
     }
 }

@@ -45,7 +45,7 @@ use super::client;
 use crate::compile::plan::{CompiledPlan, PlanLuts};
 use crate::mult::behavioral::{int8_lut, paper_families};
 use crate::nn::eval::argmax;
-use crate::nn::model::{synthetic_images, QuantCnn};
+use crate::nn::model::{synthetic_images, QuantCnn, LAYER_NAMES};
 use crate::util::npy::NpyArray;
 
 /// Number of logits per image (the 10-class quantized CNN).
@@ -64,6 +64,17 @@ pub trait Backend: Send {
     /// Classify `images` (each 256 bytes); returns one 10-logit row per
     /// image, in input order.
     fn infer_batch(&mut self, images: &[&[u8]]) -> Result<Vec<Vec<f32>>>;
+
+    /// Non-fatal conditions the backend wants surfaced (boot banner,
+    /// tests). The native backend reports layers whose LUT exceeds the
+    /// blocked GEMM's i32 partial-sum bound and therefore runs on the
+    /// i64-widened scalar strip
+    /// ([`crate::nn::quant::lut_exceeds_blocked_bound`]) — correct but
+    /// slower, and worth knowing about since no real multiplier LUT
+    /// triggers it.
+    fn warnings(&self) -> &[String] {
+        &[]
+    }
 }
 
 /// Per-variant constructor for [`Backend`] instances. Shared by the
@@ -117,6 +128,10 @@ pub struct NativeBackend {
     luts: PlanLuts,
     threads: usize,
     max_batch: usize,
+    /// One entry per layer whose LUT fails the blocked kernel's i32
+    /// partial-sum bound (see [`Backend::warnings`]). Empty for every
+    /// real multiplier family.
+    warnings: Vec<String>,
 }
 
 impl Backend for NativeBackend {
@@ -126,6 +141,10 @@ impl Backend for NativeBackend {
 
     fn max_batch(&self) -> usize {
         self.max_batch
+    }
+
+    fn warnings(&self) -> &[String] {
+        &self.warnings
     }
 
     fn infer_batch(&mut self, images: &[&[u8]]) -> Result<Vec<Vec<f32>>> {
@@ -256,11 +275,31 @@ impl BackendFactory for NativeFactory {
                 PlanLuts::uniform(Arc::clone(lut))
             }
         };
+        // Degenerate-LUT sweep: any layer outside the blocked kernel's
+        // i32 partial-sum bound still infers bit-exactly (the kernel
+        // falls back to an i64-widened scalar strip) but deserves a
+        // loud note — no real multiplier family comes near the bound.
+        let warnings: Vec<String> = LAYER_NAMES
+            .iter()
+            .zip(luts.layers.iter())
+            .filter(|(_, lut)| crate::nn::quant::lut_exceeds_blocked_bound(lut))
+            .map(|(layer, _)| {
+                format!(
+                    "variant {variant:?} layer {layer}: LUT entries exceed the blocked \
+                     GEMM's i32 partial-sum bound; inference uses the i64-widened \
+                     scalar fallback (bit-exact, but slower)"
+                )
+            })
+            .collect();
+        for w in &warnings {
+            eprintln!("WARNING: {w}");
+        }
         Ok(Box::new(NativeBackend {
             cnn: Arc::clone(&self.cnn),
             luts,
             threads: self.threads,
             max_batch: self.max_batch,
+            warnings,
         }))
     }
 }
@@ -660,6 +699,44 @@ mod tests {
         // Mitchell LUT).
         let mut exact_be = f.create("exact").unwrap();
         assert_ne!(exact_be.infer_batch(&views).unwrap(), served);
+    }
+
+    #[test]
+    fn degenerate_lut_variant_warns_and_stays_bit_exact() {
+        // A LUT past the blocked kernel's i32 partial-sum bound: serving
+        // must flag it once per layer and still match the scalar
+        // per-image forward bit for bit (i64-widened fallback).
+        let mut hostile = vec![0i32; 65536];
+        for a in -128i32..=127 {
+            for b in -128i32..=127 {
+                hostile[(((a as u8) as usize) << 8) | ((b as u8) as usize)] =
+                    if (a ^ b) < 0 { i32::MIN + 1 } else { i32::MAX };
+            }
+        }
+        let mut luts = BTreeMap::new();
+        luts.insert("hostile".to_string(), hostile.clone());
+        luts.insert("exact".to_string(), crate::mult::behavioral::int8_lut(
+            &crate::config::spec::MultFamily::Exact,
+        ));
+        let f = NativeFactory::new(QuantCnn::random(3), luts, 8, 1);
+
+        let clean = f.create("exact").unwrap();
+        assert!(clean.warnings().is_empty(), "real LUTs must not warn");
+
+        let mut be = f.create("hostile").unwrap();
+        assert_eq!(
+            be.warnings().len(),
+            crate::nn::model::N_LAYERS,
+            "uniform hostile LUT flags every layer"
+        );
+        assert!(be.warnings()[0].contains("i64-widened"));
+
+        let images = synthetic_images(2, 7);
+        let views: Vec<&[u8]> = images.chunks(IMAGE_BYTES).collect();
+        let served = be.infer_batch(&views).unwrap();
+        for (row, img) in served.iter().zip(&views) {
+            assert_eq!(row, &f.model().forward(&hostile, img));
+        }
     }
 
     #[test]

@@ -42,6 +42,9 @@ impl ActivityReport {
 /// primary input, in declaration order. Batches go through the engine's
 /// output-free [`BitParallelSim::run_bools`] path — activity extraction
 /// only reads toggle counts, so no per-vector output data is materialized.
+/// Each sweep covers `64 × plane_words` vectors at the SIMD tier
+/// [`crate::util::simd::detect`] reports; the counts are bit-identical for
+/// any width (`rust/tests/sim_equivalence.rs`).
 pub fn activity_bitparallel(nl: &Netlist, vector_bits: &[Vec<bool>]) -> ActivityReport {
     if vector_bits.is_empty() {
         return ActivityReport {
@@ -50,7 +53,8 @@ pub fn activity_bitparallel(nl: &Netlist, vector_bits: &[Vec<bool>]) -> Activity
         };
     }
     let mut sim = BitParallelSim::new(nl);
-    for batch in vector_bits.chunks(64) {
+    let sweep = 64 * crate::util::simd::detect().plane_words();
+    for batch in vector_bits.chunks(sweep) {
         sim.run_bools(batch);
     }
     ActivityReport {

@@ -1,30 +1,35 @@
-//! 64-way bit-parallel gate simulation.
+//! N×64-way bit-parallel gate simulation.
 //!
-//! Every net carries a `u64` *bit-plane*: lane `l` of the word is the net's
-//! boolean value under input vector `t + l`. One topological sweep over the
-//! netlist therefore evaluates 64 input vectors with pure bitwise ops
-//! (AND/OR/XOR/NOT and the mux as AND-OR), i.e. the per-vector cost is
-//! `gates / 64` word operations — 50×+ faster than scalar event-driven
-//! simulation on the random/exhaustive workloads where most of the cone
-//! toggles every cycle (see `benches/hotpaths.rs`).
+//! Every net carries a *plane-group* of `u64` bit-planes: lane `l` of word
+//! `w` is the net's boolean value under input vector `t + w·64 + l`. One
+//! topological sweep over the netlist therefore evaluates `words × 64`
+//! input vectors with pure bitwise ops (AND/OR/XOR/NOT and the mux as
+//! AND-OR) — 50×+ faster than scalar event-driven simulation on the
+//! random/exhaustive workloads where most of the cone toggles every cycle
+//! (see `benches/hotpaths.rs`). The group width follows the host's SIMD
+//! tier via [`crate::util::simd`] (4 words per 256-bit AVX2 op, 2 per
+//! NEON op, 1 scalar), and every width is bit-identical to the
+//! one-word-at-a-time scalar sweep — see DESIGN.md §"SIMD kernels".
 //!
 //! Toggle semantics are bit-identical to [`super::event::EventSim`]:
 //! applying the very first vector establishes state without counting, and
 //! every later consecutive-vector transition contributes
-//! `popcount(prev ^ next)` per net. Within a batch that is
-//! `popcount((x ^ (x >> 1)) & intra_mask)`; across batch (and across
-//! [`Simulator::run`] call) boundaries the last lane of the previous word
-//! is compared against lane 0 of the next.
+//! `popcount(prev ^ next)` per net. Within a word that is
+//! `popcount((x ^ (x >> 1)) & intra_mask)`; across word, batch and
+//! [`Simulator::run`]-call boundaries the last *live* lane of the previous
+//! word is compared against lane 0 of the next, and dead lanes of a final
+//! partial word are masked out of every popcount.
 //!
-//! Two entry points:
+//! Entry points:
 //!
 //! * the [`Simulator`] trait (`bool`-vector streams) — convenient, shared
 //!   with the scalar engine, used by the cross-engine equivalence tests;
-//! * [`BitParallelSim::run_packed`] — the zero-copy fast path for callers
-//!   that produce lane-packed input planes directly ([`counting_planes`]
-//!   builds the planes of 64 consecutive operand values in O(bits), which
-//!   is how exhaustive characterization feeds the evaluator without
-//!   materializing any per-vector data; see
+//! * [`BitParallelSim::run_packed`] / [`BitParallelSim::run_packed_wide`]
+//!   — the zero-copy fast paths for callers that produce lane-packed
+//!   input planes directly ([`counting_planes`] /
+//!   [`counting_planes_wide`] build the planes of consecutive operand
+//!   values in O(bits·words), which is how exhaustive characterization
+//!   feeds the evaluator without materializing any per-vector data; see
 //!   `mult::error_metrics::exhaustive_netlist`).
 
 use super::Simulator;
@@ -57,69 +62,104 @@ impl<'a> BitParallelSim<'a> {
         }
     }
 
-    /// Fast path: apply `lanes` vectors already packed as one bit-plane
-    /// word per primary input (declaration order; lane `l` = vector `l` of
-    /// the batch, lanes beyond `lanes` are ignored). Toggle accounting is
-    /// identical to the trait path. Returns the packed value of every net
-    /// (indexable by `NetId`), valid until the next call.
+    /// Fast path: apply `lanes` (1..=64) vectors already packed as one
+    /// bit-plane word per primary input (declaration order; lane `l` =
+    /// vector `l` of the batch, lanes beyond `lanes` are ignored). Toggle
+    /// accounting is identical to the trait path. Returns the packed value
+    /// of every net (indexable by `NetId`), valid until the next call.
+    /// The one-word case of [`BitParallelSim::run_packed_wide`].
     pub fn run_packed(&mut self, assignment: &[u64], lanes: usize) -> &[u64] {
         assert!(0 < lanes && lanes <= 64, "1..=64 lanes per sweep");
-        let mut vals = std::mem::take(&mut self.vals);
-        self.nl.eval_u64_into(assignment, &mut vals);
+        self.run_packed_wide(assignment, 1, lanes)
+    }
 
-        let mask = if lanes == 64 {
+    /// Wide fast path: apply `lanes` vectors packed as a plane-group of
+    /// `words` `u64` words per primary input (input-major — input `i`'s
+    /// words at `assignment[i·words .. (i+1)·words]`; word `w` lane `l` =
+    /// vector `w·64 + l` of the batch). `lanes` must fill every word but
+    /// the last, i.e. `words == lanes.div_ceil(64)`.
+    ///
+    /// Toggle accounting is bit-identical to streaming the same vectors
+    /// through [`BitParallelSim::run_packed`] 64 at a time: intra-word
+    /// transitions come from masked `popcount(x ^ (x >> 1))`, word-to-word
+    /// (and batch-to-batch) boundaries compare the previous word's last
+    /// live lane against lane 0 of the next, and dead bits of a final
+    /// partial word are masked out of every count and out of the carried
+    /// boundary state. Returns the packed value of every net, net-major
+    /// (`words` words per net: `vals[net.idx()·words + w]`), valid until
+    /// the next call.
+    pub fn run_packed_wide(&mut self, assignment: &[u64], words: usize, lanes: usize) -> &[u64] {
+        assert!(words >= 1, "at least one plane word");
+        assert!(
+            lanes > (words - 1) * 64 && lanes <= words * 64,
+            "lanes must fill all words but the last (words = lanes.div_ceil(64))"
+        );
+        let mut vals = std::mem::take(&mut self.vals);
+        self.nl.eval_wide_into(assignment, words, &mut vals);
+
+        let last_bits = lanes - (words - 1) * 64; // 1..=64
+        let last_mask = if last_bits == 64 {
             u64::MAX
         } else {
-            (1u64 << lanes) - 1
+            (1u64 << last_bits) - 1
         };
-        // Lane l vs lane l+1 transitions live in bits 0..lanes-1 of x^(x>>1).
-        let intra_mask = mask >> 1;
-        match &mut self.prev_last {
-            Some(prev) => {
-                for (net, &x) in vals.iter().enumerate() {
-                    let x = x & mask;
-                    self.toggles[net] += ((x ^ (x >> 1)) & intra_mask).count_ones() as u64;
-                    // Boundary: previous batch's last vector vs lane 0.
-                    if (x & 1 != 0) != prev[net] {
-                        self.toggles[net] += 1;
-                    }
-                    prev[net] = (x >> (lanes - 1)) & 1 != 0;
+        let first = self.prev_last.is_none();
+        let mut prev = self
+            .prev_last
+            .take()
+            .unwrap_or_else(|| vec![false; self.nl.gates().len()]);
+        for (net, group) in vals.chunks_exact(words).enumerate() {
+            let mut toggles = 0u64;
+            let mut carry = prev[net];
+            for (w, &raw) in group.iter().enumerate() {
+                let (mask, bits) = if w + 1 == words {
+                    (last_mask, last_bits)
+                } else {
+                    (u64::MAX, 64usize)
+                };
+                let x = raw & mask;
+                // Lane l vs l+1 transitions within this word (live lanes).
+                toggles += ((x ^ (x >> 1)) & (mask >> 1)).count_ones() as u64;
+                // Boundary: last live lane of the previous word (or of the
+                // previous batch — skipped for the very first vector ever)
+                // vs lane 0 of this word.
+                if (w > 0 || !first) && ((x & 1 != 0) != carry) {
+                    toggles += 1;
                 }
+                carry = (x >> (bits - 1)) & 1 != 0;
             }
-            None => {
-                let mut prev = Vec::with_capacity(vals.len());
-                for (net, &x) in vals.iter().enumerate() {
-                    let x = x & mask;
-                    self.toggles[net] += ((x ^ (x >> 1)) & intra_mask).count_ones() as u64;
-                    prev.push((x >> (lanes - 1)) & 1 != 0);
-                }
-                self.prev_last = Some(prev);
-            }
+            self.toggles[net] += toggles;
+            prev[net] = carry;
         }
+        self.prev_last = Some(prev);
         self.vectors += lanes as u64;
         self.vals = vals;
         &self.vals
     }
 
-    /// Pack up to 64 `bool`-vectors into lane planes and sweep them,
-    /// discarding outputs. Toggle accounting still applies — this is the
-    /// path for callers that only read toggle counts (activity extraction).
+    /// Pack a batch of `bool`-vectors into lane plane-groups and sweep them
+    /// all in one topological pass (any batch size ≥ 1; the group width is
+    /// `batch.len().div_ceil(64)` words), discarding outputs. Toggle
+    /// accounting still applies — this is the path for callers that only
+    /// read toggle counts (activity extraction).
     pub fn run_bools(&mut self, batch: &[Vec<bool>]) {
         let lanes = batch.len();
+        assert!(lanes > 0, "empty batch");
+        let words = lanes.div_ceil(64);
         let n_inputs = self.nl.inputs().len();
         let mut assign = std::mem::take(&mut self.assign);
-        for w in assign.iter_mut() {
-            *w = 0;
-        }
+        assign.clear();
+        assign.resize(n_inputs * words, 0u64);
         for (l, vec) in batch.iter().enumerate() {
             assert_eq!(vec.len(), n_inputs, "vector arity");
-            for (i, &bit) in vec.iter().enumerate() {
-                if bit {
-                    assign[i] |= 1u64 << l;
+            let (w, bit) = (l / 64, l % 64);
+            for (i, &b) in vec.iter().enumerate() {
+                if b {
+                    assign[i * words + w] |= 1u64 << bit;
                 }
             }
         }
-        self.run_packed(&assign, lanes);
+        self.run_packed_wide(&assign, words, lanes);
         self.assign = assign;
     }
 
@@ -200,6 +240,24 @@ pub fn counting_planes(start: u64, bits: usize) -> Vec<u64> {
             }
         })
         .collect()
+}
+
+/// Plane-group variant of [`counting_planes`]: bit `i` of the values
+/// `start + w·64 + l` lands in word `w`, lane `l`, laid out input-major at
+/// `[i·words + w]` — directly consumable by
+/// [`crate::gates::Netlist::eval_wide_into`] /
+/// [`BitParallelSim::run_packed_wide`] as the planes of `words × 64`
+/// consecutive operand values.
+pub fn counting_planes_wide(start: u64, bits: usize, words: usize) -> Vec<u64> {
+    assert!(words >= 1, "at least one plane word");
+    let mut out = vec![0u64; bits * words];
+    for w in 0..words {
+        let planes = counting_planes(start + 64 * w as u64, bits);
+        for (i, &p) in planes.iter().enumerate() {
+            out[i * words + w] = p;
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -318,5 +376,69 @@ mod tests {
         }
         assert_eq!(trait_out, packed_out);
         assert_eq!(via_trait.toggles(), packed.toggles());
+    }
+
+    #[test]
+    fn wide_sweeps_match_narrow_sweeps_bit_for_bit() {
+        // One run_packed_wide sweep of W words must equal W sequential
+        // run_packed sweeps of the same vectors: outputs, toggles, vectors.
+        let nl = crate::mult::pptree::build_exact(6);
+        let a_planes: Vec<u64> = (0..6)
+            .map(|i| if (0b110101u64 >> i) & 1 == 1 { u64::MAX } else { 0 })
+            .collect();
+        for words in [2usize, 3, 4] {
+            let mut wide = BitParallelSim::new(&nl);
+            let mut narrow = BitParallelSim::new(&nl);
+            for block in 0..2u64 {
+                let start = block * 64 * words as u64;
+                let mut assignment = Vec::with_capacity(12 * words);
+                for &ap in &a_planes {
+                    for _ in 0..words {
+                        assignment.push(ap);
+                    }
+                }
+                assignment.extend(counting_planes_wide(start, 6, words));
+                let vals = wide.run_packed_wide(&assignment, words, words * 64).to_vec();
+                for w in 0..words {
+                    let mut narrow_assign: Vec<u64> = a_planes.clone();
+                    narrow_assign.extend(counting_planes(start + 64 * w as u64, 6));
+                    let nv = narrow.run_packed(&narrow_assign, 64);
+                    for (net, &x) in nv.iter().enumerate() {
+                        assert_eq!(vals[net * words + w], x, "words={words} w={w} net={net}");
+                    }
+                }
+            }
+            assert_eq!(wide.toggles(), narrow.toggles(), "words={words}");
+            assert_eq!(wide.vectors(), narrow.vectors());
+        }
+    }
+
+    #[test]
+    fn partial_final_word_masks_dead_lanes() {
+        // Vector counts straddling the word boundary: wide run_bools (one
+        // sweep) must match the event-driven engine exactly — the dead
+        // lanes of the final partial word must never contribute toggles.
+        let nl = crate::mult::pptree::build_exact(5);
+        for &count in &[1usize, 63, 64, 65, 127, 130, 200] {
+            let vectors = random_vectors(nl.inputs().len(), count, 0xD0 + count as u64);
+            let mut wide = BitParallelSim::new(&nl);
+            wide.run_bools(&vectors); // single sweep, words = ceil(count/64)
+            let mut ev = EventSim::new(&nl);
+            Simulator::run(&mut ev, &vectors);
+            assert_eq!(wide.toggles(), ev.toggles(), "count={count}");
+            assert_eq!(wide.vectors(), count as u64);
+        }
+    }
+
+    #[test]
+    fn counting_planes_wide_layout_matches_narrow_planes() {
+        let wide = counting_planes_wide(128, 9, 3);
+        assert_eq!(wide.len(), 27);
+        for w in 0..3 {
+            let narrow = counting_planes(128 + 64 * w as u64, 9);
+            for (i, &p) in narrow.iter().enumerate() {
+                assert_eq!(wide[i * 3 + w], p, "w={w} bit={i}");
+            }
+        }
     }
 }

@@ -10,9 +10,13 @@
 //!   few input bits move per cycle) and it is the engine the PE-level
 //!   workloads use.
 //! * [`bitparallel::BitParallelSim`] — the throughput engine: every net is a
-//!   `u64` bit-plane (lane `l` = input vector `t + l`), so one topological
-//!   sweep evaluates 64 vectors with pure bitwise ops and toggles are
-//!   counted with XOR/popcount. This is the hot path for exhaustive error
+//!   plane *group* of `u64` words (lane `w·64 + l` = input vector
+//!   `t + w·64 + l`), so one topological sweep evaluates `64 × words`
+//!   vectors with pure bitwise ops and toggles are counted with
+//!   XOR/popcount. The group width follows the host's SIMD tier through
+//!   [`crate::util::simd`] (4 words under AVX2, 2 under NEON, 1 scalar —
+//!   see `DESIGN.md` §"SIMD kernels"); every width is bit-identical to
+//!   the one-word sweep. This is the hot path for exhaustive error
 //!   characterization, activity-based power (Table II) and the DSE sweep —
 //!   50×+ faster than the scalar engine on random/exhaustive workloads
 //!   (measured in `benches/hotpaths.rs`).

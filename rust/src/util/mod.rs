@@ -1,11 +1,13 @@
 //! Shared substrates: deterministic RNG, statistics, `.npy` interchange,
-//! CLI parsing, a scoped thread pool, and a miniature property-testing
-//! harness. All hand-built (the build environment is offline; see
-//! `Cargo.toml`), and each is exercised by its own unit tests.
+//! CLI parsing, a scoped thread pool, runtime SIMD dispatch, and a
+//! miniature property-testing harness. All hand-built (the build
+//! environment is offline; see `Cargo.toml`), and each is exercised by its
+//! own unit tests.
 
 pub mod rng;
 pub mod stats;
 pub mod npy;
 pub mod cli;
 pub mod threadpool;
+pub mod simd;
 pub mod proptest;

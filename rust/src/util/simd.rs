@@ -1,0 +1,149 @@
+//! Runtime SIMD dispatch for the two hot kernels (see DESIGN.md §"SIMD
+//! kernels").
+//!
+//! The crate's raw-speed paths — the blocked LUT-GEMM
+//! ([`crate::nn::quant::lut_matmul_batched`]) and the wide bit-plane gate
+//! evaluator ([`crate::gates::Netlist::eval_wide_into`] /
+//! [`crate::sim::BitParallelSim`]) — pick an instruction tier *at
+//! runtime*: AVX2 on x86_64 hosts that report it, NEON on aarch64, and a
+//! portable scalar body everywhere else. Three invariants keep this safe
+//! and testable:
+//!
+//! 1. **The scalar body is always compiled and always reachable** — it is
+//!    the bit-exactness oracle every vector path is checked against
+//!    (`rust/tests/nn_batch_equivalence.rs`, `rust/tests/sim_equivalence.rs`).
+//! 2. **Vector paths are bit-identical to the scalar body by
+//!    construction**: the GEMM accumulates exact integers (any order gives
+//!    the same sum) and the simulator is pure bitwise logic, so dispatch
+//!    never changes a single output bit, toggle count, or `.acmplan` byte.
+//! 3. **`OPENACM_FORCE_SCALAR=1` pins dispatch to the scalar tier** for
+//!    the whole process — the CI matrix runs the full test suite once per
+//!    dispatch arm so both stay green.
+
+use std::sync::OnceLock;
+
+/// Vector instruction tier a kernel can dispatch to. All variants exist on
+/// every architecture (so tests and benches can name them portably); a
+/// tier that the current host/arch cannot execute is simply never returned
+/// by [`detect`] / [`available_levels`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Portable scalar/u64 code — always compiled, the bit-exactness
+    /// oracle for every vector path.
+    Scalar,
+    /// 256-bit AVX2 paths (x86_64 only; runtime-detected).
+    Avx2,
+    /// 128-bit NEON paths (aarch64 only; baseline on every aarch64 std
+    /// target, still runtime-detected for uniformity).
+    Neon,
+}
+
+impl SimdLevel {
+    /// Short name for logs, bench JSON columns and test skip messages.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Neon => "neon",
+        }
+    }
+
+    /// How many `u64` bit-plane words the gate evaluator processes per net
+    /// per topological sweep at this tier (one 256-bit op = 4 words, one
+    /// 128-bit op = 2): the plane-group width of
+    /// [`crate::gates::Netlist::eval_wide_into`].
+    pub fn plane_words(self) -> usize {
+        match self {
+            SimdLevel::Scalar => 1,
+            SimdLevel::Avx2 => 4,
+            SimdLevel::Neon => 2,
+        }
+    }
+}
+
+/// `OPENACM_FORCE_SCALAR=1` (any value other than empty/`0`/`false`) pins
+/// every dispatch site to [`SimdLevel::Scalar`].
+fn force_scalar() -> bool {
+    match std::env::var("OPENACM_FORCE_SCALAR") {
+        Ok(v) => !v.is_empty() && v != "0" && !v.eq_ignore_ascii_case("false"),
+        Err(_) => false,
+    }
+}
+
+/// The best tier this host can execute, honoring `OPENACM_FORCE_SCALAR`.
+/// Cached after the first call (feature detection and the env read happen
+/// once per process), so hot loops can call it freely.
+pub fn detect() -> SimdLevel {
+    static LEVEL: OnceLock<SimdLevel> = OnceLock::new();
+    *LEVEL.get_or_init(|| {
+        if force_scalar() {
+            SimdLevel::Scalar
+        } else {
+            detect_host()
+        }
+    })
+}
+
+/// Raw host capability, ignoring the env override.
+fn detect_host() -> SimdLevel {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::is_x86_feature_detected!("avx2") {
+            return SimdLevel::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return SimdLevel::Neon;
+        }
+    }
+    SimdLevel::Scalar
+}
+
+/// Every tier runnable right now, scalar first — what the equivalence
+/// tests iterate so each compiled vector path is checked against the
+/// oracle on hosts that can run it (and skipped with a message on hosts
+/// that cannot). Under `OPENACM_FORCE_SCALAR` this is `[Scalar]`, which is
+/// exactly what makes the forced-scalar CI arm meaningful.
+pub fn available_levels() -> Vec<SimdLevel> {
+    let mut levels = vec![SimdLevel::Scalar];
+    let best = detect();
+    if best != SimdLevel::Scalar {
+        levels.push(best);
+    }
+    levels
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_and_plane_words_are_consistent() {
+        for (level, name, words) in [
+            (SimdLevel::Scalar, "scalar", 1usize),
+            (SimdLevel::Avx2, "avx2", 4),
+            (SimdLevel::Neon, "neon", 2),
+        ] {
+            assert_eq!(level.name(), name);
+            assert_eq!(level.plane_words(), words);
+        }
+    }
+
+    #[test]
+    fn detect_is_stable_and_listed() {
+        let a = detect();
+        let b = detect();
+        assert_eq!(a, b, "cached detection must be stable");
+        let levels = available_levels();
+        assert_eq!(levels[0], SimdLevel::Scalar);
+        assert!(levels.contains(&a));
+        // The detected tier must be executable on this architecture.
+        match a {
+            SimdLevel::Scalar => {}
+            SimdLevel::Avx2 => assert!(cfg!(target_arch = "x86_64")),
+            SimdLevel::Neon => assert!(cfg!(target_arch = "aarch64")),
+        }
+    }
+}

@@ -7,11 +7,13 @@
 //! the macro's arithmetic still meet its accuracy spec on a given workload?
 //!
 //! Monte-Carlo over corruption patterns rides the bit-parallel gate engine:
-//! the 64 lanes of each bit-plane carry 64 *independent corruption samples*
-//! (rather than 64 time steps), so one topological sweep per workload pair
-//! scores 64 Monte-Carlo samples at once. Sample blocks are distributed
-//! across worker threads with per-block forked RNG streams, so results are
-//! deterministic for any thread count.
+//! the lanes of each bit-plane group carry *independent corruption
+//! samples* (rather than time steps), so one topological sweep per
+//! workload pair scores `64 × plane-width` Monte-Carlo samples at once
+//! (width from [`crate::util::simd`]; see DESIGN.md §"SIMD kernels").
+//! Sample blocks are distributed across worker threads with per-64-block
+//! forked RNG streams — the forking is *independent of the sweep width*,
+//! so results are bit-identical for any thread count and any SIMD tier.
 
 use super::mc::McResult;
 use crate::gates::Netlist;
@@ -54,68 +56,110 @@ impl<'a> FunctionalYieldProblem<'a> {
         }
     }
 
-    /// Evaluate up to 64 corruption samples (one per lane of `masks`) over
-    /// the whole workload; returns a bitmask of *failing* lanes.
-    pub fn failing_lanes(&self, masks: &[u64]) -> u64 {
+    /// Evaluate any number of corruption samples — sample `w·64 + l` rides
+    /// lane `l` of plane-group word `w`, so the whole batch is scored in
+    /// `ceil(len/64)`-word-wide sweeps ([`Netlist::eval_wide_into`]) —
+    /// over the whole workload; returns how many samples *fail*. With
+    /// ≤ 64 masks this is exactly the original one-word sweep; wider
+    /// batches are bit-identical to evaluating the same masks 64 at a
+    /// time, because the per-lane pass/fail decision only reads that
+    /// lane's own bits.
+    pub fn failing_count(&self, masks: &[u64]) -> u64 {
         let lanes = masks.len();
-        assert!(0 < lanes && lanes <= 64);
+        assert!(lanes > 0, "at least one corruption sample");
+        let words = lanes.div_ceil(64);
         let p_max = {
             let top = ((1u64 << self.bits) - 1) as f64;
             top * top
         };
-        let mut assignment = vec![0u64; 2 * self.bits];
+        let mut assignment = vec![0u64; 2 * self.bits * words];
         let mut vals = Vec::new();
-        let mut failing = 0u64;
-        let all = if lanes == 64 {
-            u64::MAX
-        } else {
-            (1u64 << lanes) - 1
-        };
+        // Per-word live-lane masks: full words, then the final partial one.
+        let live: Vec<u64> = (0..words)
+            .map(|w| {
+                let bits = (lanes - w * 64).min(64);
+                if bits == 64 {
+                    u64::MAX
+                } else {
+                    (1u64 << bits) - 1
+                }
+            })
+            .collect();
+        let mut failing = vec![0u64; words];
+        let outs = self.nl.outputs();
         for &(a, b) in &self.workload {
-            if failing == all {
-                break; // every lane already failed
+            if failing.iter().zip(&live).all(|(f, l)| f == l) {
+                break; // every sample already failed
             }
             for i in 0..self.bits {
                 let a_bit = (a >> i) & 1;
-                let mut word = 0u64;
-                for (l, &mask) in masks.iter().enumerate() {
-                    if (a_bit ^ ((mask >> i) & 1)) == 1 {
-                        word |= 1u64 << l;
+                let b_word = if (b >> i) & 1 == 1 { u64::MAX } else { 0 };
+                for w in 0..words {
+                    let lo = w * 64;
+                    let hi = (lo + 64).min(lanes);
+                    let mut word = 0u64;
+                    for (l, &mask) in masks[lo..hi].iter().enumerate() {
+                        if (a_bit ^ ((mask >> i) & 1)) == 1 {
+                            word |= 1u64 << l;
+                        }
                     }
+                    assignment[i * words + w] = word;
+                    assignment[(self.bits + i) * words + w] = b_word & live[w];
                 }
-                assignment[i] = word;
-                assignment[self.bits + i] = if (b >> i) & 1 == 1 { all } else { 0 };
             }
-            self.nl.eval_u64_into(&assignment, &mut vals);
+            self.nl.eval_wide_into(&assignment, words, &mut vals);
             let exact = (a * b) as i64;
-            let outs = self.nl.outputs();
             for l in 0..lanes {
-                if failing & (1u64 << l) != 0 {
+                let (w, bit) = (l / 64, l % 64);
+                if failing[w] & (1u64 << bit) != 0 {
                     continue;
                 }
                 let p = outs
                     .iter()
                     .enumerate()
                     .fold(0u64, |acc, (i, (_, id))| {
-                        acc | (((vals[id.idx()] >> l) & 1) << i)
+                        acc | (((vals[id.idx() * words + w] >> bit) & 1) << i)
                     });
                 let err = (p as i64 - exact).unsigned_abs() as f64 / p_max;
                 if err > self.err_threshold {
-                    failing |= 1u64 << l;
+                    failing[w] |= 1u64 << bit;
                 }
             }
         }
-        failing
+        failing.iter().map(|f| f.count_ones() as u64).sum()
     }
 }
 
 /// Monte-Carlo functional yield: `samples` corruption patterns, evaluated
-/// 64 per gate-level sweep, distributed across `threads` workers.
+/// `64 × plane-width` per gate-level sweep (width from
+/// [`crate::util::simd::detect`]), distributed across `threads` workers.
+/// Bit-identical for any width and thread count: the RNG streams stay
+/// forked per 64-sample block no matter how many blocks one sweep scores.
 pub fn run_functional_mc(
     problem: &FunctionalYieldProblem,
     samples: u64,
     seed: u64,
     threads: usize,
+) -> McResult {
+    run_functional_mc_words(
+        problem,
+        samples,
+        seed,
+        threads,
+        crate::util::simd::detect().plane_words(),
+    )
+}
+
+/// [`run_functional_mc`] with an explicitly pinned plane-group width
+/// (`words == 1` is the scalar-oracle path). Exposed for the SIMD
+/// equivalence tests.
+#[doc(hidden)]
+pub fn run_functional_mc_words(
+    problem: &FunctionalYieldProblem,
+    samples: u64,
+    seed: u64,
+    threads: usize,
+    words: usize,
 ) -> McResult {
     if samples == 0 {
         return McResult {
@@ -125,26 +169,37 @@ pub fn run_functional_mc(
             failures: 0,
         };
     }
+    let words = words.max(1) as u64;
     let blocks = samples.div_ceil(64);
+    // One work item = a *superblock* of up to `words` consecutive
+    // 64-sample blocks, scored in a single plane-group sweep. Each block
+    // still draws its masks from its own per-block forked RNG stream, so
+    // the sampled corruption patterns — and therefore the whole estimate —
+    // are bit-identical to the scalar (words = 1) path.
+    let groups = blocks.div_ceil(words);
     let failures = parallel_fold(
-        blocks as usize,
+        groups as usize,
         threads.max(1),
-        |block| {
-            // Fork on the bare block index: distinct per block by
-            // construction (an OR-ed tag would alias high block indices).
-            let mut rng = Pcg32::new(seed ^ 0xFC17_0000_0000_0000).fork(block as u64);
-            let lanes = (samples - block as u64 * 64).min(64) as usize;
-            let mut masks = Vec::with_capacity(lanes);
-            for _ in 0..lanes {
-                let mut mask = 0u64;
-                for (i, &p) in problem.flip_prob.iter().enumerate() {
-                    if rng.next_f64() < p {
-                        mask |= 1u64 << i;
+        |group| {
+            let b_lo = group as u64 * words;
+            let b_hi = (b_lo + words).min(blocks);
+            let mut masks = Vec::with_capacity(((b_hi - b_lo) * 64) as usize);
+            for block in b_lo..b_hi {
+                // Fork on the bare block index: distinct per block by
+                // construction (an OR-ed tag would alias high indices).
+                let mut rng = Pcg32::new(seed ^ 0xFC17_0000_0000_0000).fork(block);
+                let lanes = (samples - block * 64).min(64) as usize;
+                for _ in 0..lanes {
+                    let mut mask = 0u64;
+                    for (i, &p) in problem.flip_prob.iter().enumerate() {
+                        if rng.next_f64() < p {
+                            mask |= 1u64 << i;
+                        }
                     }
+                    masks.push(mask);
                 }
-                masks.push(mask);
             }
-            problem.failing_lanes(&masks).count_ones() as u64
+            problem.failing_count(&masks)
         },
         |a, b| a + b,
     );
@@ -250,6 +305,23 @@ mod tests {
         let b = run_functional_mc(&p, 1000, 99, 4);
         assert_eq!(a.failures, b.failures);
         assert_eq!(a.pf, b.pf);
+    }
+
+    #[test]
+    fn plane_width_does_not_change_the_estimate() {
+        // The per-64-block RNG forking is width-independent, so wide
+        // sweeps must reproduce the scalar path bit for bit — including
+        // with a partial final block (1000 % 64 != 0) and for a width
+        // that doesn't divide the block count evenly.
+        let nl = crate::mult::pptree::build_exact(4);
+        let p = FunctionalYieldProblem::new(&nl, 4, vec![0.05; 4], workload(4, 30, 3), 5e-3);
+        let narrow = run_functional_mc_words(&p, 1000, 99, 2, 1);
+        for words in [2usize, 3, 4] {
+            let wide = run_functional_mc_words(&p, 1000, 99, 2, words);
+            assert_eq!(narrow.failures, wide.failures, "words={words}");
+            assert_eq!(narrow.pf.to_bits(), wide.pf.to_bits(), "words={words}");
+            assert_eq!(narrow.sims, wide.sims);
+        }
     }
 
     #[test]

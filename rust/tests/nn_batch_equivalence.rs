@@ -11,8 +11,12 @@
 use openacm::config::spec::MultFamily;
 use openacm::mult::behavioral::{int8_lut, paper_families};
 use openacm::nn::model::{synthetic_images, QuantCnn};
-use openacm::nn::quant::{lut_matmul, lut_matmul_batched};
+use openacm::nn::quant::{
+    lut_exceeds_blocked_bound, lut_matmul, lut_matmul_acc_with, lut_matmul_batched,
+    lut_matmul_batched_with,
+};
 use openacm::util::rng::Pcg32;
+use openacm::util::simd::available_levels;
 
 #[test]
 fn forward_batch_bit_identical_to_forward_for_every_family() {
@@ -101,6 +105,98 @@ fn blocked_gemm_zero_heavy_rows_match_reference() {
     let reference = lut_matmul(&lut, &a, &b, m, k, n, 0.01, 0.02);
     let fast = lut_matmul_batched(&lut, &a, &b, m, k, n, 0.01, 0.02, 2);
     assert_eq!(fast, reference);
+}
+
+#[test]
+fn every_simd_level_bit_identical_across_families_and_odd_shapes() {
+    // The SIMD half of the GEMM proof obligation (DESIGN.md §"SIMD
+    // kernels"): each runnable dispatch level must reproduce the scalar
+    // oracle bit for bit on shapes straddling every tile boundary, for
+    // every paper multiplier family.
+    let levels = available_levels();
+    if levels.len() == 1 {
+        println!(
+            "note: only the scalar level is runnable here (no AVX2/NEON, or \
+             OPENACM_FORCE_SCALAR) — vector dispatch paths not exercised"
+        );
+    } else {
+        println!(
+            "SIMD levels under test: {:?}",
+            levels.iter().map(|l| l.name()).collect::<Vec<_>>()
+        );
+    }
+    let shapes: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (3, 5, 2),     // strictly inside one tile
+        (31, 9, 8),    // m one short of TILE_M
+        (33, 129, 17), // m/k one past TILE_M/TILE_K, ragged n
+        (40, 200, 65), // n one past TILE_N
+        (64, 128, 64), // exact tile multiples
+    ];
+    for (name, family) in paper_families() {
+        let lut = int8_lut(&family);
+        let mut rng = Pcg32::new(0x51D0 ^ name.len() as u64);
+        for &(m, k, n) in shapes {
+            let a: Vec<i8> = (0..m * k)
+                .map(|_| (rng.below(256) as i64 - 128) as i8)
+                .collect();
+            let b: Vec<i8> = (0..k * n)
+                .map(|_| (rng.below(256) as i64 - 128) as i8)
+                .collect();
+            let oracle = lut_matmul(&lut, &a, &b, m, k, n, 0.04, 0.06);
+            let oracle_bits: Vec<u32> = oracle.iter().map(|x| x.to_bits()).collect();
+            for &level in &levels {
+                for threads in [1usize, 3] {
+                    let fast = lut_matmul_batched_with(
+                        level, &lut, &a, &b, m, k, n, 0.04, 0.06, threads,
+                    );
+                    assert_eq!(
+                        fast.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                        oracle_bits,
+                        "family {name} level {} {m}x{k}x{n} threads {threads}",
+                        level.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn maximal_magnitude_lut_is_exact_at_every_level() {
+    // Regression for the overflow bugfix: entries at ±(i32 extremes) used
+    // to silently wrap a k-tile's i32 partial sum in release builds (the
+    // bound was only debug-asserted). The kernel must now detect the LUT
+    // and produce the exact i64 result at every dispatch level.
+    let mut lut = vec![0i32; 65536];
+    for a in -128i32..=127 {
+        for b in -128i32..=127 {
+            lut[(((a as u8) as usize) << 8) | ((b as u8) as usize)] =
+                if (a ^ b) < 0 { i32::MIN + 1 } else { i32::MAX };
+        }
+    }
+    assert!(lut_exceeds_blocked_bound(&lut));
+    // Strictly positive b keeps every LUT hit at ±i32::MAX exactly, so
+    // each accumulator is (#pos − #neg)·i32::MAX = 186·i32::MAX — far past
+    // i32 — and a k-tile's i32 partial sum really would wrap.
+    let (m, k, n) = (4, 310, 7);
+    let a: Vec<i8> = (0..m * k).map(|i| if i % 5 == 0 { -128 } else { 127 }).collect();
+    let b: Vec<i8> = (0..k * n).map(|i| (i % 126 + 1) as i8).collect();
+    for &level in &available_levels() {
+        let acc = lut_matmul_acc_with(level, &lut, &a, &b, m, k, n, 2);
+        for i in 0..m {
+            for j in 0..n {
+                let want: i64 = (0..k)
+                    .map(|p| {
+                        let ai = (a[i * k + p] as u8 as usize) << 8;
+                        lut[ai | (b[p * n + j] as u8 as usize)] as i64
+                    })
+                    .sum();
+                assert!(want.abs() > i32::MAX as i64, "test must exceed i32 ({i},{j})");
+                assert_eq!(acc[i * n + j], want, "level {} ({i},{j})", level.name());
+            }
+        }
+    }
 }
 
 #[test]

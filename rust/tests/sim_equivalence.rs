@@ -1,14 +1,25 @@
-//! Engine equivalence: the 64-lane bit-parallel simulator must be
-//! *bit-identical* to the scalar event-driven reference — outputs AND
-//! per-net toggle counts — for every paper multiplier family, exhaustively
-//! at 8 bits (all 65,536 input pairs). This is the proof obligation behind
-//! routing error metrics, activity/power and the DSE sweep through the
+//! Engine equivalence: the bit-parallel simulator must be *bit-identical*
+//! to the scalar event-driven reference — outputs AND per-net toggle
+//! counts — for every paper multiplier family, exhaustively at 8 bits
+//! (all 65,536 input pairs). This is the proof obligation behind routing
+//! error metrics, activity/power and the DSE sweep through the
 //! bit-parallel engine (see `benches/hotpaths.rs` for the speedup it buys).
+//!
+//! The SIMD half of the suite pins the plane-group widening (DESIGN.md
+//! §"SIMD kernels"): every plane width — scalar 1-word, the NEON 2-word
+//! and AVX2 4-word layouts, and the dynamic N-word path — must reproduce
+//! the scalar engine's outputs and toggle counts bit for bit, and the
+//! width-parameterized consumers (exhaustive error characterization,
+//! functional-yield MC) must report identical numbers at every width.
+//! Widths beyond the host's SIMD tier still run (the const-generic
+//! fallback bodies are always compiled); a message notes when no vector
+//! unit was detected so the intrinsic paths themselves were not exercised.
 
 use openacm::config::spec::MultSpec;
 use openacm::mult::behavioral::paper_families;
 use openacm::mult::build_netlist;
 use openacm::sim::{BitParallelSim, EventSim, Simulator};
+use openacm::util::simd::{available_levels, detect, SimdLevel};
 
 const BITS: usize = 8;
 
@@ -70,6 +81,129 @@ fn bitparallel_is_bit_identical_to_event_sim_for_all_paper_families() {
             Simulator::toggles(&lanes),
             "{name}: per-net toggle counts diverged"
         );
+    }
+}
+
+/// Pseudorandom bool vectors (deterministic, engine-independent).
+fn random_vectors(n_inputs: usize, n: usize, seed: u64) -> Vec<Vec<bool>> {
+    let mut rng = openacm::util::rng::Pcg32::new(seed);
+    (0..n)
+        .map(|_| (0..n_inputs).map(|_| rng.next_u32() & 1 != 0).collect())
+        .collect()
+}
+
+/// One message when the host has no vector unit (or `OPENACM_FORCE_SCALAR`
+/// pinned dispatch): the width-N layouts below still run through the
+/// always-compiled fallback bodies, but the AVX2/NEON intrinsic paths are
+/// not reached on this host.
+fn note_if_scalar_only() {
+    let levels = available_levels();
+    if levels.len() == 1 {
+        println!(
+            "note: SIMD level {:?} only (no AVX2/NEON detected or forced scalar) — \
+             wide-plane layouts run through the portable fallback bodies",
+            levels[0].name()
+        );
+    } else {
+        let names: Vec<_> = levels.iter().map(|l| l.name()).collect();
+        println!("SIMD levels under test: {names:?}");
+    }
+}
+
+#[test]
+fn wide_plane_widths_match_event_sim_for_all_paper_families() {
+    note_if_scalar_only();
+    // Widths: the scalar oracle, both fixed SIMD layouts, a dyn-path
+    // width, and whatever the host detects (redundant when scalar).
+    let mut widths = vec![1usize, 2, 4, 3];
+    let host = detect().plane_words();
+    if !widths.contains(&host) {
+        widths.push(host);
+    }
+    for (name, family) in paper_families() {
+        let nl = build_netlist(&MultSpec {
+            family,
+            bits: BITS,
+            signed: false,
+        });
+        // 517 vectors: multiple sweeps per width plus a ragged tail so the
+        // final sweep has a partial plane-group at every width.
+        let vectors = random_vectors(nl.inputs().len(), 517, 0x51D + BITS as u64);
+        let mut ev = EventSim::new(&nl);
+        Simulator::run(&mut ev, &vectors);
+        for &words in &widths {
+            let mut bp = BitParallelSim::new(&nl);
+            for chunk in vectors.chunks(64 * words) {
+                bp.run_bools(chunk);
+            }
+            assert_eq!(
+                bp.toggles(),
+                Simulator::toggles(&ev),
+                "{name}: width-{words} toggle counts diverged from EventSim"
+            );
+            assert_eq!(bp.vectors(), vectors.len() as u64, "{name} width {words}");
+        }
+    }
+}
+
+#[test]
+fn exhaustive_error_reports_identical_at_every_plane_width() {
+    note_if_scalar_only();
+    use openacm::mult::error_metrics::{exhaustive_netlist, exhaustive_netlist_words};
+    for (name, family) in paper_families() {
+        let auto = exhaustive_netlist(&family, BITS, 2);
+        for words in [1usize, 2, 4] {
+            let r = exhaustive_netlist_words(&family, BITS, 2, words);
+            assert_eq!(r.samples, auto.samples, "{name} words={words}");
+            assert_eq!(r.error_rate.to_bits(), auto.error_rate.to_bits(), "{name} words={words}");
+            assert_eq!(r.nmed.to_bits(), auto.nmed.to_bits(), "{name} words={words}");
+            assert_eq!(r.mred.to_bits(), auto.mred.to_bits(), "{name} words={words}");
+            assert_eq!(r.wce, auto.wce, "{name} words={words}");
+            assert_eq!(
+                r.normalized_bias.to_bits(),
+                auto.normalized_bias.to_bits(),
+                "{name} words={words}"
+            );
+        }
+    }
+}
+
+#[test]
+fn functional_yield_mc_identical_at_every_plane_width() {
+    note_if_scalar_only();
+    use openacm::yield_analysis::functional::{run_functional_mc_words, FunctionalYieldProblem};
+    let nl = build_netlist(&MultSpec {
+        family: openacm::config::spec::MultFamily::Exact,
+        bits: 6,
+        signed: false,
+    });
+    let mut rng = openacm::util::rng::Pcg32::new(0xF1E1D);
+    let workload: Vec<(u64, u64)> = (0..25)
+        .map(|_| (rng.below(64) as u64, rng.below(64) as u64))
+        .collect();
+    let problem = FunctionalYieldProblem::new(&nl, 6, vec![0.04; 6], workload, 4e-3);
+    let scalar = run_functional_mc_words(&problem, 900, 0xCAFE, 2, 1);
+    for words in [2usize, 3, 4] {
+        let wide = run_functional_mc_words(&problem, 900, 0xCAFE, 2, words);
+        assert_eq!(scalar.failures, wide.failures, "words={words}");
+        assert_eq!(scalar.pf.to_bits(), wide.pf.to_bits(), "words={words}");
+        assert_eq!(scalar.sims, wide.sims, "words={words}");
+    }
+}
+
+#[test]
+fn forced_scalar_env_pins_the_scalar_level() {
+    // detect() caches on first use, so we can't toggle the env var inside
+    // one process — but we can assert the dispatch/env contract that CI's
+    // forced-scalar arm relies on: available_levels() always leads with
+    // Scalar, and when OPENACM_FORCE_SCALAR is set (as in that CI arm)
+    // detection reports Scalar with a one-word plane group.
+    let levels = available_levels();
+    assert_eq!(levels[0], SimdLevel::Scalar);
+    assert_eq!(SimdLevel::Scalar.plane_words(), 1);
+    if std::env::var("OPENACM_FORCE_SCALAR").map(|v| v == "1").unwrap_or(false) {
+        assert_eq!(detect(), SimdLevel::Scalar, "OPENACM_FORCE_SCALAR=1 must pin scalar");
+        assert_eq!(levels.len(), 1);
     }
 }
 

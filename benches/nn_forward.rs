@@ -146,6 +146,37 @@ fn main() {
         json.ratio("simd_gemm_over_scalar", scalar_gemm.mean_ns / simd_gemm.mean_ns);
     }
 
+    // Observability overhead guard: the instrumented hot path (spans +
+    // boundary counters, OPENACM_TRACE on) must cost ≤ 2% over the
+    // untraced path on the serving-configuration forward. min_ns is the
+    // noise-robust comparator (best case of each arm); the +20 µs floor
+    // absorbs timer jitter on the smoke configuration.
+    {
+        let images = synthetic_images(32, 7 + 32);
+        let views: Vec<&[u8]> = images.chunks(256).collect();
+        let was_traced = openacm::obs::trace_enabled();
+        openacm::obs::set_trace_enabled(false);
+        let plain = bench("forward_batch x32 obs-off", 1, iters, || {
+            black_box(cnn.forward_batch(&lut, &views, threads));
+        });
+        json.case(&plain);
+        openacm::obs::set_trace_enabled(true);
+        let traced = bench("forward_batch x32 obs-on", 1, iters, || {
+            black_box(cnn.forward_batch(&lut, &views, threads));
+        });
+        json.case(&traced);
+        openacm::obs::set_trace_enabled(was_traced);
+        let overhead = traced.min_ns / plain.min_ns;
+        println!("→ obs instrumentation overhead at batch 32: {:.2}% ", (overhead - 1.0) * 100.0);
+        json.ratio("obs_overhead_b32", overhead);
+        assert!(
+            traced.min_ns <= plain.min_ns * 1.02 + 20_000.0,
+            "obs instrumentation overhead too high: traced {:.0} ns vs plain {:.0} ns",
+            traced.min_ns,
+            plain.min_ns
+        );
+    }
+
     match json.write() {
         Ok(path) => println!("wrote {}", path.display()),
         Err(e) => eprintln!("could not write bench json: {e}"),

@@ -35,6 +35,11 @@ pub fn cmd_compile(args: &Args) -> Result<()> {
     if !(0.0..=100.0).contains(&budget_pct) {
         bail!("--budget is a top-1 drop in percentage points (0..=100), got {budget_pct}");
     }
+    // Telemetry: stream events to the default sink dir and flush a merged
+    // metrics snapshot at the end (shared with `openacm serve`).
+    if let Err(e) = crate::obs::init(&crate::obs::default_dir()) {
+        eprintln!("telemetry sink unavailable ({e:#}); events stay in-process");
+    }
     let smoke = args.flag("smoke");
     let mut opts = if smoke {
         CompileOptions::smoke(budget_pct / 100.0)
@@ -144,6 +149,21 @@ pub fn cmd_compile(args: &Args) -> Result<()> {
     println!("wrote plan {}", out.display());
     if let Some(store) = &store {
         println!("store {}: {}", store.root().display(), store.stats().summary());
+    }
+    // Persist the compile-side telemetry (compile.* counters, span
+    // histograms) so `openacm obs snapshot` after a compile+serve session
+    // shows both subsystems. A sink failure never fails the compile.
+    crate::obs::info(
+        "compile",
+        "compile complete",
+        &[
+            ("plan", plan.name.clone()),
+            ("evaluations", stats.evaluations.to_string()),
+        ],
+    );
+    match crate::obs::flush(&crate::obs::default_dir()) {
+        Ok(path) => println!("telemetry snapshot: {}", path.display()),
+        Err(e) => eprintln!("could not flush telemetry snapshot: {e:#}"),
     }
     Ok(())
 }

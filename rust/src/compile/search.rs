@@ -410,6 +410,9 @@ pub struct Compiler<'a> {
     anchor: RefCell<Option<Anchor>>,
     prefixes: RefCell<PrefixCache>,
     stats: RefCell<SearchStats>,
+    /// High-water mark of `stats` already mirrored into the registry
+    /// (see [`Compiler::publish_stats`]).
+    published: RefCell<SearchStats>,
 }
 
 impl<'a> Compiler<'a> {
@@ -466,12 +469,39 @@ impl<'a> Compiler<'a> {
             anchor: RefCell::new(None),
             prefixes: RefCell::new(PrefixCache::new(PREFIX_CACHE_CAP)),
             stats: RefCell::new(SearchStats::default()),
+            published: RefCell::new(SearchStats::default()),
         }
     }
 
     /// Work counters of this run so far.
     pub fn stats(&self) -> SearchStats {
         *self.stats.borrow()
+    }
+
+    /// Mirror this run's [`SearchStats`] into the process-wide registry
+    /// as `compile.*` counters — the delta since the last publish, so
+    /// repeated calls (and multiple compiles per process) accumulate
+    /// without double-counting. [`Compiler::compile`] calls it once at
+    /// the end; long-running drivers may call it mid-search.
+    pub fn publish_stats(&self) {
+        let now = self.stats();
+        let mut last = self.published.borrow_mut();
+        for (name, value) in [
+            ("compile.memo_hits", now.memo_hits - last.memo_hits),
+            ("compile.store_hits", now.store_hits - last.store_hits),
+            ("compile.evaluations", now.evaluations - last.evaluations),
+            ("compile.free_probes", now.free_probes - last.free_probes),
+            ("compile.replayed_macs", now.replayed_macs - last.replayed_macs),
+            ("compile.full_macs", now.full_macs - last.full_macs),
+            ("compile.delta_macs", now.delta_macs - last.delta_macs),
+            ("compile.prefix_hits", now.prefix_hits - last.prefix_hits),
+            ("compile.anchor_builds", now.anchor_builds - last.anchor_builds),
+        ] {
+            if value > 0 {
+                crate::obs::counter(name).add(value);
+            }
+        }
+        *last = now;
     }
 
     /// The candidate configurations this run searches over.
@@ -533,6 +563,7 @@ impl<'a> Compiler<'a> {
     /// This is where the cold path pays a full calibration forward and
     /// the incremental engine replays a suffix instead.
     fn evaluate(&self, asg: &Assignment) -> f64 {
+        let _probe = crate::obs::span("compile.probe");
         {
             let mut st = self.stats.borrow_mut();
             st.evaluations += 1;
@@ -723,6 +754,7 @@ impl<'a> Compiler<'a> {
     /// when only that layer runs that candidate. Unmasked layers and the
     /// exact candidate read 0.
     pub fn sensitivity(&self, exact_top1: f64) -> Vec<Vec<f64>> {
+        let _span = crate::obs::span("compile.sensitivity");
         let mut out = vec![vec![0.0f64; self.cands.len()]; N_LAYERS];
         for l in 0..N_LAYERS {
             if !self.opts.layer_mask[l] {
@@ -773,6 +805,7 @@ impl<'a> Compiler<'a> {
         // the assignment only ever gets *more* approximate, a failed move
         // can only fail harder later (the same monotonicity heuristic the
         // sensitivity pruning uses).
+        let greedy_span = crate::obs::span("compile.greedy");
         let mut cur = exact_asg;
         let mut banned = vec![vec![false; self.cands.len()]; N_LAYERS];
         loop {
@@ -818,9 +851,11 @@ impl<'a> Compiler<'a> {
                 break;
             }
         }
+        drop(greedy_span);
 
         // (c) Pairwise refinement: best strictly-energy-improving joint
         // two-layer swap within budget, up to `refine_passes` rounds.
+        let refine_span = crate::obs::span("compile.refine");
         for _ in 0..self.opts.refine_passes {
             let cur_energy = self.plan_energy(&cur);
             let mut best: Option<(f64, Assignment)> = None;
@@ -860,8 +895,10 @@ impl<'a> Compiler<'a> {
                 None => break,
             }
         }
+        drop(refine_span);
 
         let plan_top1 = self.measured_top1(&cur);
+        self.publish_stats();
         let layers: Vec<LayerPlan> = (0..N_LAYERS)
             .map(|l| LayerPlan {
                 layer: LAYER_NAMES[l].to_string(),

@@ -25,17 +25,24 @@ pub struct AdmissionController {
     limit: usize,
     depths: BTreeMap<String, Arc<AtomicUsize>>,
     shed_count: AtomicUsize,
+    /// Registry mirrors: the process-wide in-flight gauge (all variants
+    /// summed; RAII-decremented by tickets) and admitted/shed counters.
+    in_flight: crate::obs::Gauge,
+    admitted: crate::obs::Counter,
+    shed: crate::obs::Counter,
 }
 
 /// RAII slot held while a request is in flight.
 #[derive(Debug)]
 pub struct Ticket {
     depth: Arc<AtomicUsize>,
+    in_flight: crate::obs::Gauge,
 }
 
 impl Drop for Ticket {
     fn drop(&mut self) {
         self.depth.fetch_sub(1, Ordering::AcqRel);
+        self.in_flight.add(-1);
     }
 }
 
@@ -48,6 +55,9 @@ impl AdmissionController {
                 .map(|v| (v, Arc::new(AtomicUsize::new(0))))
                 .collect(),
             shed_count: AtomicUsize::new(0),
+            in_flight: crate::obs::gauge("serve.in_flight"),
+            admitted: crate::obs::counter("serve.requests_admitted"),
+            shed: crate::obs::counter("serve.requests_shed"),
         }
     }
 
@@ -59,13 +69,17 @@ impl AdmissionController {
         if prev >= self.limit {
             depth.fetch_sub(1, Ordering::AcqRel);
             self.shed_count.fetch_add(1, Ordering::Relaxed);
+            self.shed.inc();
             return Some(Err(Admission::Shed {
                 depth: prev,
                 limit: self.limit,
             }));
         }
+        self.admitted.inc();
+        self.in_flight.add(1);
         Some(Ok(Ticket {
             depth: Arc::clone(depth),
+            in_flight: self.in_flight.clone(),
         }))
     }
 

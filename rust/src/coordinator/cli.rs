@@ -37,6 +37,17 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         .unwrap_or_else(ArtifactStore::default_dir);
     let n_requests = args.usize_or("requests", 256)?;
     let max_batch = args.usize_or("batch", 32)?;
+    // Telemetry sink: structured events stream to <obs-dir>/events.jsonl;
+    // `--metrics-every N` additionally prints + flushes a registry
+    // snapshot every N driven requests (and once at the end either way).
+    let metrics_every = args.usize_or("metrics-every", 0)?;
+    let obs_dir = args
+        .get("obs-dir")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(crate::obs::default_dir);
+    if let Err(e) = crate::obs::init(&obs_dir) {
+        eprintln!("telemetry sink unavailable ({e:#}); events stay in-process");
+    }
     let policy = BatchPolicy {
         max_batch,
         max_wait: Duration::from_millis(args.u64_or("max-wait-ms", 2)?),
@@ -136,6 +147,21 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         if resp.predicted == workload.labels[idx] {
             correct += 1;
         }
+        if metrics_every > 0 && (i + 1) % metrics_every == 0 {
+            let s = server.metrics.snapshot();
+            println!(
+                "[obs] {}/{n_requests} requests: p50 {:.2} ms p99 {:.2} ms, {:.0} req/s, \
+                 in-flight {}",
+                i + 1,
+                s.p50_ms,
+                s.p99_ms,
+                s.throughput_rps,
+                crate::obs::gauge("serve.in_flight").value()
+            );
+            if let Err(e) = crate::obs::flush(&obs_dir) {
+                eprintln!("could not flush telemetry snapshot: {e:#}");
+            }
+        }
     }
     let snap = server.metrics.snapshot();
     println!(
@@ -143,5 +169,17 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         snap.completed, correct, snap.p50_ms, snap.p90_ms, snap.p99_ms, snap.throughput_rps, snap.mean_batch
     );
     server.shutdown();
+    crate::obs::info(
+        "serve",
+        "drive complete",
+        &[
+            ("requests", snap.completed.to_string()),
+            ("correct", correct.to_string()),
+        ],
+    );
+    match crate::obs::flush(&obs_dir) {
+        Ok(path) => println!("telemetry snapshot: {} (openacm obs snapshot)", path.display()),
+        Err(e) => eprintln!("could not flush telemetry snapshot: {e:#}"),
+    }
     Ok(())
 }

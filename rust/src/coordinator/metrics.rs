@@ -1,22 +1,47 @@
-//! Serving metrics: latency percentiles, throughput, batch-size stats and
-//! the per-inference energy estimate.
+//! Serving metrics: latency percentiles, throughput and batch-size stats,
+//! backed by the `obs::` fixed-memory histograms.
+//!
+//! The original implementation grew an unbounded `latencies_us: Vec<f64>`
+//! behind one mutex and anchored throughput at *construction* time (so a
+//! server idle before its first request under-reported rps forever). Now:
+//!
+//! * latency and batch size land in bounded log-bucketed
+//!   [`crate::obs::Histogram`]s — memory is constant for any request
+//!   count ([`ServerMetrics::resident_bytes`]; asserted by the soak in
+//!   `rust/tests/serving.rs`), the record path is lock-free;
+//! * throughput is anchored at the **first recorded request**;
+//! * everything mirrors into the process-wide registry
+//!   (`serve.latency_us`, `serve.batch_size`, `serve.batches`,
+//!   `serve.requests_completed`) so `openacm obs snapshot` sees it.
+//!
+//! [`MetricsSnapshot`] keeps its exact field set — existing tests and the
+//! e2e drivers read it unchanged; percentiles are now the histogram's
+//! (≤ 12.5% relative error by bucket geometry).
 
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
 use std::time::Instant;
+
+use crate::obs::{Counter, Histogram};
 
 /// Thread-safe metrics sink shared by batcher workers.
 #[derive(Debug)]
 pub struct ServerMetrics {
-    inner: Mutex<Inner>,
-    started: Instant,
-}
-
-#[derive(Debug, Default)]
-struct Inner {
-    latencies_us: Vec<f64>,
-    batches: u64,
-    batched_requests: u64,
-    completed: u64,
+    /// Per-server histograms (a process can run several servers, e.g. the
+    /// test soaks; each server's snapshot must only see its own traffic).
+    latency_us: Histogram,
+    batch_size: Histogram,
+    batches: AtomicU64,
+    batched_requests: AtomicU64,
+    completed: AtomicU64,
+    /// Throughput anchor: set by the first `record_batch`, not at
+    /// construction.
+    first_record: OnceLock<Instant>,
+    /// Process-wide registry mirrors.
+    g_latency_us: Histogram,
+    g_batch_size: Histogram,
+    g_batches: Counter,
+    g_completed: Counter,
 }
 
 /// Snapshot for reporting.
@@ -39,34 +64,65 @@ impl Default for ServerMetrics {
 impl ServerMetrics {
     pub fn new() -> Self {
         Self {
-            inner: Mutex::new(Inner::default()),
-            started: Instant::now(),
+            latency_us: Histogram::new(),
+            batch_size: Histogram::new(),
+            batches: AtomicU64::new(0),
+            batched_requests: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            first_record: OnceLock::new(),
+            g_latency_us: crate::obs::histogram("serve.latency_us"),
+            g_batch_size: crate::obs::histogram("serve.batch_size"),
+            g_batches: crate::obs::counter("serve.batches"),
+            g_completed: crate::obs::counter("serve.requests_completed"),
         }
     }
 
     pub fn record_batch(&self, batch_size: usize, latencies_us: &[f64]) {
-        let mut g = self.inner.lock().unwrap();
-        g.batches += 1;
-        g.batched_requests += batch_size as u64;
-        g.completed += latencies_us.len() as u64;
-        g.latencies_us.extend_from_slice(latencies_us);
+        self.first_record.get_or_init(Instant::now);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests
+            .fetch_add(batch_size as u64, Ordering::Relaxed);
+        self.completed
+            .fetch_add(latencies_us.len() as u64, Ordering::Relaxed);
+        self.batch_size.record(batch_size as u64);
+        self.g_batch_size.record(batch_size as u64);
+        self.g_batches.inc();
+        self.g_completed.add(latencies_us.len() as u64);
+        for &l in latencies_us {
+            let us = l.max(0.0).round() as u64;
+            self.latency_us.record(us);
+            self.g_latency_us.record(us);
+        }
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let g = self.inner.lock().unwrap();
-        if g.latencies_us.is_empty() {
+        let h = self.latency_us.snapshot();
+        if h.count == 0 {
             return MetricsSnapshot::default();
         }
-        let (p50, p90, p99) = crate::util::stats::latency_percentiles(&g.latencies_us);
-        let secs = self.started.elapsed().as_secs_f64().max(1e-9);
+        let secs = self
+            .first_record
+            .get()
+            .map(|t| t.elapsed().as_secs_f64())
+            .unwrap_or(0.0)
+            .max(1e-9);
+        let completed = self.completed.load(Ordering::Relaxed);
+        let batches = self.batches.load(Ordering::Relaxed).max(1);
         MetricsSnapshot {
-            completed: g.completed,
-            p50_ms: p50 / 1e3,
-            p90_ms: p90 / 1e3,
-            p99_ms: p99 / 1e3,
-            throughput_rps: g.completed as f64 / secs,
-            mean_batch: g.batched_requests as f64 / g.batches.max(1) as f64,
+            completed,
+            p50_ms: h.percentile(50.0) as f64 / 1e3,
+            p90_ms: h.percentile(90.0) as f64 / 1e3,
+            p99_ms: h.percentile(99.0) as f64 / 1e3,
+            throughput_rps: completed as f64 / secs,
+            mean_batch: self.batched_requests.load(Ordering::Relaxed) as f64 / batches as f64,
         }
+    }
+
+    /// Bytes held by the latency/batch histograms — constant by
+    /// construction whatever the request count (the property the old
+    /// `Vec`-based sink lacked; the serving soak asserts it).
+    pub fn resident_bytes(&self) -> usize {
+        self.latency_us.resident_bytes() + self.batch_size.resident_bytes()
     }
 }
 
@@ -92,5 +148,36 @@ mod tests {
         let s = ServerMetrics::new().snapshot();
         assert_eq!(s.completed, 0);
         assert_eq!(s.p99_ms, 0.0);
+    }
+
+    #[test]
+    fn memory_is_bounded_for_any_request_count() {
+        let m = ServerMetrics::new();
+        let before = m.resident_bytes();
+        assert!(before > 0);
+        for i in 0..10_000 {
+            m.record_batch(8, &[(i % 7_000) as f64; 8]);
+        }
+        assert_eq!(m.resident_bytes(), before, "histograms must not grow");
+        let s = m.snapshot();
+        assert_eq!(s.completed, 80_000);
+        assert!(s.p99_ms >= s.p50_ms);
+    }
+
+    #[test]
+    fn throughput_is_anchored_at_first_request_not_construction() {
+        let m = ServerMetrics::new();
+        // Simulate a server idle after construction: with the old
+        // construction anchor this sleep would drag rps toward zero.
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        m.record_batch(2, &[100.0, 100.0]);
+        let s = m.snapshot();
+        // 2 requests within a few ms of the first record ⇒ far more than
+        // the ~60 rps the construction anchor would report.
+        assert!(
+            s.throughput_rps > 100.0,
+            "rps {} should ignore pre-first-request idle time",
+            s.throughput_rps
+        );
     }
 }

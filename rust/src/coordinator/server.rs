@@ -89,6 +89,8 @@ impl InferenceServer {
             queue_limit,
             variants.iter().cloned(),
         ));
+        crate::obs::gauge("serve.queue_limit").set(queue_limit as i64);
+        crate::obs::gauge("serve.variants").set(variants.len() as i64);
         let mut routes = BTreeMap::new();
         let mut workers = Vec::new();
         // Workers report backend construction over this channel so boot
@@ -122,22 +124,49 @@ impl InferenceServer {
                         max_batch: policy.max_batch.min(backend.max_batch()).max(1),
                         ..policy
                     };
+                    // Per-worker telemetry handles, resolved once: the
+                    // in-loop record path is lock-free (obs::registry).
+                    let queue_wait = crate::obs::histogram("serve.queue_wait_us");
+                    let execute_failures = crate::obs::counter("serve.execute_failures");
+                    let delivered = crate::obs::counter("serve.responses_delivered");
                     while let Some(batch) = next_batch(&rx, &policy) {
+                        let batch_span = crate::obs::span("serve.batch");
                         let n = batch.len();
+                        for q in &batch {
+                            queue_wait.record(q.enqueued.elapsed().as_micros() as u64);
+                        }
                         let images: Vec<&[u8]> =
                             batch.iter().map(|q| q.image.as_slice()).collect();
-                        let rows = match backend.infer_batch(&images) {
+                        let rows = {
+                            let _execute = crate::obs::span("execute");
+                            backend.infer_batch(&images)
+                        };
+                        let rows = match rows {
                             Ok(r) => r,
                             Err(e) => {
-                                eprintln!("execute failed ({variant}): {e:#}");
+                                crate::obs::error(
+                                    "serve",
+                                    "execute failed",
+                                    &[
+                                        ("variant", variant.clone()),
+                                        ("error", format!("{e:#}")),
+                                    ],
+                                );
+                                execute_failures.inc();
                                 continue;
                             }
                         };
                         if rows.len() != n {
-                            eprintln!(
-                                "backend returned {} rows for a batch of {n} ({variant})",
-                                rows.len()
+                            crate::obs::error(
+                                "serve",
+                                "backend returned a short batch",
+                                &[
+                                    ("variant", variant.clone()),
+                                    ("rows", rows.len().to_string()),
+                                    ("batch", n.to_string()),
+                                ],
                             );
+                            execute_failures.inc();
                             continue;
                         }
                         // Record metrics BEFORE completing the requests so a
@@ -148,11 +177,16 @@ impl InferenceServer {
                             .map(|q| q.enqueued.elapsed().as_micros() as f64)
                             .collect();
                         metrics.record_batch(n, &lats);
-                        for (q, logits) in batch.into_iter().zip(rows) {
-                            let predicted = argmax(&logits);
-                            // Receiver may have gone away; ignore.
-                            let _ = q.respond.send(Response { logits, predicted });
+                        {
+                            let _respond = crate::obs::span("respond");
+                            for (q, logits) in batch.into_iter().zip(rows) {
+                                let predicted = argmax(&logits);
+                                // Receiver may have gone away; ignore.
+                                let _ = q.respond.send(Response { logits, predicted });
+                            }
                         }
+                        delivered.add(n as u64);
+                        drop(batch_span);
                     }
                 })
                 .context("spawning batcher thread")?;
@@ -211,6 +245,7 @@ impl InferenceServer {
                 req.image.len()
             );
         }
+        let _admit = crate::obs::span("serve.admit");
         let route = match self.routes.get(&req.variant) {
             Some(r) => r,
             None => bail!(

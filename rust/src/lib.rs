@@ -118,8 +118,24 @@
 //! a fraction of the GEMM MACs (DESIGN.md §Compile pass, "Incremental
 //! evaluation"; `--no-incremental` keeps the full path for A/B
 //! debugging).
+//!
+//! ## Observability
+//!
+//! Every subsystem reports through one telemetry spine, [`obs`]: a
+//! process-wide metrics registry (named counters/gauges + fixed-memory
+//! log-bucketed latency histograms on sharded atomics), RAII span tracing
+//! (`obs::span`, `OPENACM_TRACE` switch) and a structured JSONL event log
+//! that absorbs the old bare `eprintln!` warnings. The coordinator's
+//! request lifecycle, the compile search's probe/MAC accounting, the
+//! design-point store's hit/miss counters, SIMD dispatch and the
+//! threadpool all land in the same registry; `openacm serve
+//! --metrics-every N` flushes merged snapshots that `openacm obs
+//! snapshot|tail|diff` reads back. See DESIGN.md §Observability for the
+//! architecture, naming conventions and the ≤2% overhead budget
+//! (`benches/nn_forward.rs` enforces it).
 
 pub mod util;
+pub mod obs;
 pub mod bench;
 pub mod store;
 pub mod gates;

@@ -30,13 +30,17 @@ COMMANDS:
              [--out FILE] [--artifacts DIR] [--store DIR] [--no-cache]
              [--smoke] [--no-incremental]
   store      Inspect/maintain the design-point store: stats | verify | gc
-             [--dir DIR] [--repair] [--max-mb N]
+             [--dir DIR] [--repair] [--max-mb N] [--json]
   serve      Start the inference coordinator (PJRT on AOT artifacts, or the
              artifact-free batched native backend)
              [--backend native|pjrt|auto] [--artifacts DIR] [--batch N]
              [--requests N] [--store DIR] [--seed N]
+             [--metrics-every N]  emit + flush a telemetry snapshot every
+             N requests  [--obs-dir DIR]
              [--plan FILE.acmplan]  serve a compiled heterogeneous plan as
              the "plan" variant (native per-layer LUT dispatch)
+  obs        Inspect the telemetry sink: snapshot | tail | diff
+             [--dir DIR] [--n K] [--json]  (see also OPENACM_TRACE)
   luts       Emit behavioral-multiplier LUTs (npy) for cross-checking
              [--out DIR]
   help       Show this message
@@ -45,7 +49,7 @@ COMMANDS:
 fn main() -> Result<()> {
     let args = Args::from_env(
         true,
-        &["verbose", "fast", "no-cache", "repair", "smoke", "no-incremental"],
+        &["verbose", "fast", "no-cache", "repair", "smoke", "no-incremental", "json"],
     )?;
     match args.command.as_deref() {
         Some("generate") => openacm::flow::cli::cmd_generate(&args),
@@ -57,6 +61,7 @@ fn main() -> Result<()> {
         Some("compile") => openacm::compile::cli::cmd_compile(&args),
         Some("store") => openacm::store::cli::cmd_store(&args),
         Some("serve") => openacm::coordinator::cli::cmd_serve(&args),
+        Some("obs") => openacm::obs::cli::cmd_obs(&args),
         Some("luts") => openacm::mult::cli::cmd_luts(&args),
         Some("help") | None => {
             print!("{USAGE}");

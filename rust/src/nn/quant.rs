@@ -286,6 +286,12 @@ fn lut_gemm_tiles(
     // zero; skipping it then adds the same zeros the reference adds.
     let zero_row_is_zero = lut[..256].iter().all(|&v| v == 0);
     let row_tiles = m.div_ceil(TILE_M);
+    // Dispatch accounting at the GEMM boundary, never inside strip loops:
+    // one registry touch per call regardless of shape.
+    crate::obs::record_gemm_dispatch(
+        wide_acc,
+        (m as u64) * k.div_ceil(TILE_K) as u64 * n.div_ceil(TILE_N) as u64,
+    );
     parallel_map(row_tiles, threads, |t| {
         let i0 = t * TILE_M;
         let i1 = (i0 + TILE_M).min(m);

@@ -1,0 +1,153 @@
+//! `openacm obs` — inspect the telemetry sink.
+//!
+//! * `openacm obs snapshot [--dir D] [--json]` — the merged metrics
+//!   snapshot accumulated by `openacm serve` / `openacm compile`;
+//! * `openacm obs tail [--dir D] [--n K] [--json]` — last K structured
+//!   events from `<dir>/events.jsonl`;
+//! * `openacm obs diff A.json B.json [--json]` — what happened between
+//!   two snapshot files (counters/histograms subtract, gauges read from
+//!   the later file).
+
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+
+use super::registry::RegistrySnapshot;
+use super::{json, sink};
+use crate::bench::harness::Table;
+use crate::util::cli::Args;
+
+pub fn cmd_obs(args: &Args) -> Result<()> {
+    let dir = args
+        .get("dir")
+        .map(PathBuf::from)
+        .unwrap_or_else(sink::default_dir);
+    let action = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("snapshot");
+    match action {
+        "snapshot" => {
+            let path = dir.join("snapshot.json");
+            let snap = sink::load(&path).with_context(|| {
+                format!(
+                    "no snapshot at {} — run `openacm serve` or `openacm compile` first",
+                    path.display()
+                )
+            })?;
+            if args.flag("json") {
+                print!("{}", snap.to_json());
+            } else {
+                println!("telemetry snapshot {}", path.display());
+                print_snapshot(&snap);
+            }
+            Ok(())
+        }
+        "tail" => {
+            let n = args.usize_or("n", 20)?;
+            cmd_tail(&dir, n, args.flag("json"))
+        }
+        "diff" => {
+            let (Some(a), Some(b)) = (args.positional.get(1), args.positional.get(2)) else {
+                bail!("usage: openacm obs diff EARLIER.json LATER.json");
+            };
+            let earlier = sink::load(&PathBuf::from(a))?;
+            let later = sink::load(&PathBuf::from(b))?;
+            let d = later.diff(&earlier);
+            if args.flag("json") {
+                print!("{}", d.to_json());
+            } else {
+                println!("telemetry diff: {a} -> {b} (gauges show the later snapshot)");
+                print_snapshot(&d);
+            }
+            Ok(())
+        }
+        other => bail!("unknown obs action {other:?}; expected snapshot|tail|diff"),
+    }
+}
+
+/// Human rendering shared by `snapshot` and `diff`.
+pub fn print_snapshot(snap: &RegistrySnapshot) {
+    if !snap.counters.is_empty() {
+        let mut t = Table::new("counters", &["Name", "Value"]);
+        for (k, v) in &snap.counters {
+            t.row(&[k.clone(), v.to_string()]);
+        }
+        t.print();
+    }
+    if !snap.gauges.is_empty() {
+        let mut t = Table::new("gauges", &["Name", "Value"]);
+        for (k, v) in &snap.gauges {
+            t.row(&[k.clone(), v.to_string()]);
+        }
+        t.print();
+    }
+    if !snap.histograms.is_empty() {
+        let mut t = Table::new(
+            "histograms (log-bucketed, percentiles approximate)",
+            &["Name", "Count", "Mean", "P50", "P90", "P99", "Max"],
+        );
+        for (k, h) in &snap.histograms {
+            t.row(&[
+                k.clone(),
+                h.count.to_string(),
+                format!("{:.1}", h.mean()),
+                h.percentile(50.0).to_string(),
+                h.percentile(90.0).to_string(),
+                h.percentile(99.0).to_string(),
+                h.max.to_string(),
+            ]);
+        }
+        t.print();
+    }
+    if snap.counters.is_empty() && snap.gauges.is_empty() && snap.histograms.is_empty() {
+        println!("(empty)");
+    }
+}
+
+fn cmd_tail(dir: &std::path::Path, n: usize, raw: bool) -> Result<()> {
+    let path = dir.join("events.jsonl");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("no event log at {}", path.display()))?;
+    let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+    let start = lines.len().saturating_sub(n);
+    for line in &lines[start..] {
+        if raw {
+            println!("{line}");
+            continue;
+        }
+        match json::parse(line) {
+            Ok(doc) => {
+                let ts = doc.get("ts_ms").and_then(json::Json::as_u64).unwrap_or(0);
+                let sev = doc
+                    .get("severity")
+                    .and_then(json::Json::as_str)
+                    .unwrap_or("?");
+                let sub = doc
+                    .get("subsystem")
+                    .and_then(json::Json::as_str)
+                    .unwrap_or("?");
+                let msg = doc
+                    .get("message")
+                    .and_then(json::Json::as_str)
+                    .unwrap_or("");
+                let fields = doc
+                    .get("fields")
+                    .and_then(json::Json::as_object)
+                    .map(|pairs| {
+                        pairs
+                            .iter()
+                            .map(|(k, v)| {
+                                format!(" {k}={}", v.as_str().unwrap_or_default())
+                            })
+                            .collect::<String>()
+                    })
+                    .unwrap_or_default();
+                println!("{ts} {sev:5} [{sub}] {msg}{fields}");
+            }
+            // A torn/foreign line should not hide the rest of the tail.
+            Err(_) => println!("{line}"),
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,216 @@
+//! Structured JSONL event log: severity, timestamp, subsystem and
+//! `key=value` fields, absorbing what used to be bare `eprintln!`s.
+//!
+//! Every event lands in a bounded in-memory ring (for `openacm obs tail`
+//! inside the emitting process and for tests) and, when a sink file is
+//! attached ([`attach_file`], done by `openacm serve` / `openacm
+//! compile` via [`super::sink::init`]), is appended as one JSON line.
+//! Warn/Error events mirror to stderr by default so pre-existing behavior
+//! — backend warnings and execute failures being visible on the console —
+//! is unchanged.
+
+use std::collections::VecDeque;
+use std::fs::OpenOptions;
+use std::io::Write;
+use std::path::Path;
+use std::sync::{Mutex, OnceLock};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Event severity, ordered.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Debug,
+    Info,
+    Warn,
+    Error,
+}
+
+impl Severity {
+    pub fn name(self) -> &'static str {
+        match self {
+            Severity::Debug => "debug",
+            Severity::Info => "info",
+            Severity::Warn => "warn",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// One structured event.
+#[derive(Clone, Debug)]
+pub struct Event {
+    /// Milliseconds since the Unix epoch.
+    pub ts_ms: u64,
+    pub severity: Severity,
+    pub subsystem: String,
+    pub message: String,
+    pub fields: Vec<(String, String)>,
+}
+
+impl Event {
+    /// One JSONL line (no trailing newline).
+    pub fn to_jsonl(&self) -> String {
+        fn esc(s: &str) -> String {
+            let mut out = String::with_capacity(s.len());
+            for c in s.chars() {
+                match c {
+                    '"' => out.push_str("\\\""),
+                    '\\' => out.push_str("\\\\"),
+                    '\n' => out.push_str("\\n"),
+                    c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                    c => out.push(c),
+                }
+            }
+            out
+        }
+        let mut s = format!(
+            "{{\"ts_ms\": {}, \"severity\": \"{}\", \"subsystem\": \"{}\", \"message\": \"{}\"",
+            self.ts_ms,
+            self.severity.name(),
+            esc(&self.subsystem),
+            esc(&self.message)
+        );
+        if !self.fields.is_empty() {
+            s.push_str(", \"fields\": {");
+            for (i, (k, v)) in self.fields.iter().enumerate() {
+                if i > 0 {
+                    s.push_str(", ");
+                }
+                s.push_str(&format!("\"{}\": \"{}\"", esc(k), esc(v)));
+            }
+            s.push('}');
+        }
+        s.push('}');
+        s
+    }
+
+    /// The stderr mirror line. Warnings keep the historical `WARNING: …`
+    /// prefix (`runtime::backend` used to print exactly that).
+    fn mirror_line(&self) -> String {
+        let fields: String = self
+            .fields
+            .iter()
+            .map(|(k, v)| format!(" {k}={v}"))
+            .collect();
+        match self.severity {
+            Severity::Warn => format!("WARNING: {}{fields}", self.message),
+            Severity::Error => format!("ERROR ({}): {}{fields}", self.subsystem, self.message),
+            _ => format!("[{}] {}{fields}", self.subsystem, self.message),
+        }
+    }
+}
+
+/// Ring capacity: bounded, like every other obs structure.
+const RING_CAP: usize = 1024;
+
+struct LogState {
+    ring: VecDeque<Event>,
+    file: Option<std::fs::File>,
+    mirror_stderr: bool,
+}
+
+fn log_state() -> &'static Mutex<LogState> {
+    static LOG: OnceLock<Mutex<LogState>> = OnceLock::new();
+    LOG.get_or_init(|| {
+        Mutex::new(LogState {
+            ring: VecDeque::with_capacity(RING_CAP),
+            file: None,
+            mirror_stderr: true,
+        })
+    })
+}
+
+/// Emit one event. `fields` are `(key, value)` pairs; values are already
+/// rendered (events are off the hot path — this allocates freely).
+pub fn emit(severity: Severity, subsystem: &str, message: &str, fields: &[(&str, String)]) {
+    let ev = Event {
+        ts_ms: SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(0),
+        severity,
+        subsystem: subsystem.to_string(),
+        message: message.to_string(),
+        fields: fields
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.clone()))
+            .collect(),
+    };
+    let mut g = log_state().lock().unwrap();
+    if let Some(f) = g.file.as_mut() {
+        // Sink write failures must never take the serving path down;
+        // drop the sink and keep the ring + mirror.
+        if writeln!(f, "{}", ev.to_jsonl()).is_err() {
+            g.file = None;
+        }
+    }
+    if g.mirror_stderr && severity >= Severity::Warn {
+        eprintln!("{}", ev.mirror_line());
+    }
+    if g.ring.len() == RING_CAP {
+        g.ring.pop_front();
+    }
+    g.ring.push_back(ev);
+}
+
+pub fn info(subsystem: &str, message: &str, fields: &[(&str, String)]) {
+    emit(Severity::Info, subsystem, message, fields);
+}
+
+pub fn warn(subsystem: &str, message: &str, fields: &[(&str, String)]) {
+    emit(Severity::Warn, subsystem, message, fields);
+}
+
+pub fn error(subsystem: &str, message: &str, fields: &[(&str, String)]) {
+    emit(Severity::Error, subsystem, message, fields);
+}
+
+/// Append events to `path` (JSONL) from now on.
+pub fn attach_file(path: &Path) -> std::io::Result<()> {
+    let f = OpenOptions::new().create(true).append(true).open(path)?;
+    log_state().lock().unwrap().file = Some(f);
+    Ok(())
+}
+
+/// Toggle the Warn/Error stderr mirror (default on).
+pub fn set_stderr_mirror(on: bool) {
+    log_state().lock().unwrap().mirror_stderr = on;
+}
+
+/// The most recent `n` events (oldest first).
+pub fn recent(n: usize) -> Vec<Event> {
+    let g = log_state().lock().unwrap();
+    g.ring.iter().rev().take(n).rev().cloned().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_ring_and_render_as_parseable_jsonl() {
+        set_stderr_mirror(false);
+        emit(
+            Severity::Warn,
+            "obs_test",
+            "weights look \"odd\"",
+            &[("variant", "exact".to_string()), ("n", "3".to_string())],
+        );
+        set_stderr_mirror(true);
+        let evs = recent(RING_CAP);
+        let ev = evs
+            .iter()
+            .rev()
+            .find(|e| e.subsystem == "obs_test")
+            .expect("event in ring");
+        assert_eq!(ev.severity, Severity::Warn);
+        let line = ev.to_jsonl();
+        let doc = super::super::json::parse(&line).unwrap();
+        assert_eq!(doc.get("severity").unwrap().as_str(), Some("warn"));
+        assert_eq!(doc.get("message").unwrap().as_str(), Some("weights look \"odd\""));
+        assert_eq!(
+            doc.get("fields").unwrap().get("variant").unwrap().as_str(),
+            Some("exact")
+        );
+    }
+}

@@ -1,0 +1,102 @@
+//! `obs::` — the unified telemetry spine: one metrics registry, span
+//! tracing and a structured event log shared by the serving coordinator,
+//! the compile search, the design-point store, SIMD dispatch and the
+//! threadpool (DESIGN.md §Observability).
+//!
+//! Three pillars, pure std (offline/vendored policy — no new deps):
+//!
+//! * [`registry`] — process-wide named **counters**, **gauges** and
+//!   fixed-memory log-bucketed **histograms** on sharded atomics;
+//!   lock-free record path, mergeable [`RegistrySnapshot`]s.
+//! * [`span`] — `obs::span("compile.probe")` RAII guards recording
+//!   `span.<path>.us` duration histograms with parent/child path
+//!   attribution; `OPENACM_TRACE` (default on) switches them off with a
+//!   no-timestamp, no-TLS cheap path.
+//! * [`event`] — severity/timestamp/subsystem/key=value **JSONL events**
+//!   absorbing the old bare `eprintln!`s, with stderr mirroring for
+//!   Warn/Error preserved by default.
+//!
+//! Naming convention: `<subsystem>.<metric>` with `_us` / `_bytes`
+//! suffixes for units (`serve.latency_us`, `store.hits`,
+//! `compile.replayed_macs`, `simd.widened_fallback_strips`,
+//! `threadpool.busy_us`); span histograms are `span.<path>.us`.
+//!
+//! Persistence: [`sink::flush`] merge-writes `<dir>/snapshot.json`
+//! (default dir `$OPENACM_OBS` / `.openacm_obs`) so consecutive commands
+//! accumulate one telemetry trail; `openacm obs snapshot|tail|diff`
+//! ([`cli`]) reads it back. Overhead budget: instrumentation sits at
+//! batch/probe/GEMM boundaries only — `benches/nn_forward.rs` enforces
+//! ≤2% on the hot forward path vs `OPENACM_TRACE=0`.
+
+pub mod cli;
+pub mod event;
+pub mod json;
+pub mod registry;
+pub mod sink;
+pub mod span;
+
+pub use event::{emit, error, info, recent, warn, Event, Severity};
+pub use registry::{
+    Counter, Gauge, Histogram, HistogramSnapshot, MetricsRegistry, RegistrySnapshot,
+};
+pub use sink::{default_dir, flush, init, load};
+pub use span::{set_trace_enabled, span, trace_enabled, Span};
+
+use std::sync::OnceLock;
+
+/// Get-or-register a counter in the process-wide registry.
+pub fn counter(name: &str) -> Counter {
+    registry::global().counter(name)
+}
+
+/// Get-or-register a gauge in the process-wide registry.
+pub fn gauge(name: &str) -> Gauge {
+    registry::global().gauge(name)
+}
+
+/// Get-or-register a histogram in the process-wide registry.
+pub fn histogram(name: &str) -> Histogram {
+    registry::global().histogram(name)
+}
+
+/// Snapshot the process-wide registry.
+pub fn snapshot() -> RegistrySnapshot {
+    registry::global().snapshot()
+}
+
+/// SIMD dispatch accounting for one blocked-GEMM call, invoked at the
+/// GEMM boundary (never inside the strip loops): total calls, and how
+/// many strips ran the i64-widened overflow-fallback path. Handles are
+/// cached so the per-call cost is 1–3 relaxed `fetch_add`s.
+pub fn record_gemm_dispatch(widened: bool, strips: u64) {
+    struct Handles {
+        calls: Counter,
+        widened_gemms: Counter,
+        widened_strips: Counter,
+    }
+    static H: OnceLock<Handles> = OnceLock::new();
+    let h = H.get_or_init(|| Handles {
+        calls: counter("simd.gemm_calls"),
+        widened_gemms: counter("simd.widened_fallback_gemms"),
+        widened_strips: counter("simd.widened_fallback_strips"),
+    });
+    h.calls.inc();
+    if widened {
+        h.widened_gemms.inc();
+        h.widened_strips.add(strips);
+    }
+}
+
+/// Threadpool accounting: `n` tasks entered a pool/`parallel_map` call.
+pub fn record_pool_tasks(n: u64) {
+    static TASKS: OnceLock<Counter> = OnceLock::new();
+    TASKS.get_or_init(|| counter("threadpool.tasks")).add(n);
+}
+
+/// Threadpool accounting: one worker was busy for `us` microseconds
+/// (recorded per drained work loop; only called when tracing is on, so
+/// the disabled path pays no clock reads).
+pub fn record_pool_busy_us(us: u64) {
+    static BUSY: OnceLock<Counter> = OnceLock::new();
+    BUSY.get_or_init(|| counter("threadpool.busy_us")).add(us);
+}

@@ -1,0 +1,660 @@
+//! The process-wide metrics registry: named counters, gauges and
+//! fixed-memory log-bucketed latency histograms.
+//!
+//! Design constraints (DESIGN.md §Observability):
+//!
+//! * **Lock-free record path** — handles are `Arc`s over sharded atomics;
+//!   after the one-time name lookup, `add`/`set`/`record` never take a
+//!   lock. Shards are assigned per thread (round-robin at first touch) so
+//!   concurrent recorders don't contend on one cache line.
+//! * **Fixed memory** — a histogram is ~252 buckets per shard regardless
+//!   of how many values it absorbs: bucket `i` covers a log₂ range split
+//!   into 4 sub-buckets (≤ 12.5% relative error at the midpoint), which
+//!   is what lets `ServerMetrics` retire its unbounded latency `Vec`.
+//! * **Mergeable snapshots** — [`RegistrySnapshot`] supports `merge`
+//!   (accumulate across processes: `openacm compile` then `openacm
+//!   serve` into one `snapshot.json`) and `diff` (what happened between
+//!   two snapshots), both exact for counters and bucket counts.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicI64, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock, RwLock};
+
+use super::json::Json;
+
+/// Counter shards: enough to keep a hot 8-worker batcher from bouncing
+/// one cache line, small enough that snapshotting stays trivial.
+const COUNTER_SHARDS: usize = 8;
+/// Histogram shards (each shard is a full bucket array, so keep it low).
+const HIST_SHARDS: usize = 4;
+/// Sub-bucket resolution: 2 bits = 4 sub-buckets per power of two.
+const SUB_BITS: u32 = 2;
+const SUBS: usize = 1 << SUB_BITS;
+/// Total bucket count for the full `u64` range (see [`bucket_index`]).
+pub const HIST_BUCKETS: usize = (64 - SUB_BITS as usize) * SUBS + SUBS;
+
+/// Log-bucket index of a value: values `< 4` map linearly, above that the
+/// 2 bits after the leading one select a sub-bucket within the octave.
+/// Contiguous and monotone over the whole `u64` range.
+pub fn bucket_index(v: u64) -> usize {
+    if v < SUBS as u64 {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros();
+    let sub = ((v >> (msb - SUB_BITS)) & (SUBS as u64 - 1)) as usize;
+    ((msb - SUB_BITS + 1) as usize) * SUBS + sub
+}
+
+/// Lowest value that lands in bucket `idx` (inverse of [`bucket_index`]).
+pub fn bucket_lo(idx: usize) -> u64 {
+    if idx < SUBS {
+        return idx as u64;
+    }
+    let oct = (idx / SUBS) as u32;
+    let sub = (idx % SUBS) as u64;
+    let msb = oct - 1 + SUB_BITS;
+    (1u64 << msb) | (sub << (msb - SUB_BITS))
+}
+
+/// Highest value that lands in bucket `idx`.
+pub fn bucket_hi(idx: usize) -> u64 {
+    if idx + 1 < HIST_BUCKETS {
+        bucket_lo(idx + 1) - 1
+    } else {
+        u64::MAX
+    }
+}
+
+/// The value a bucket reports for percentiles: its midpoint, which halves
+/// the worst-case relative error to ≤ 12.5%.
+fn bucket_mid(idx: usize) -> u64 {
+    let lo = bucket_lo(idx);
+    let hi = bucket_hi(idx);
+    lo + (hi - lo) / 2
+}
+
+/// Round-robin shard slot for the calling thread, cached in a TLS cell so
+/// the record path costs one TLS read (no `ThreadId` hashing).
+fn shard_idx(shards: usize) -> usize {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    thread_local! {
+        static SLOT: std::cell::Cell<usize> = const { std::cell::Cell::new(usize::MAX) };
+    }
+    SLOT.with(|s| {
+        let mut v = s.get();
+        if v == usize::MAX {
+            v = NEXT.fetch_add(1, Ordering::Relaxed);
+            s.set(v);
+        }
+        v % shards
+    })
+}
+
+/// One cache line per shard so concurrent `fetch_add`s don't false-share.
+#[repr(align(64))]
+#[derive(Debug, Default)]
+struct PaddedU64(AtomicU64);
+
+#[derive(Debug)]
+struct CounterInner {
+    shards: [PaddedU64; COUNTER_SHARDS],
+}
+
+/// A monotonically increasing named counter. Cheap to clone (an `Arc`);
+/// `add` is one relaxed `fetch_add` on a thread-local shard.
+#[derive(Clone, Debug)]
+pub struct Counter(Arc<CounterInner>);
+
+impl Default for Counter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter(Arc::new(CounterInner {
+            shards: Default::default(),
+        }))
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.shards[shard_idx(COUNTER_SHARDS)]
+            .0
+            .fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn value(&self) -> u64 {
+        self.0
+            .shards
+            .iter()
+            .map(|s| s.0.load(Ordering::Relaxed))
+            .sum()
+    }
+}
+
+#[derive(Debug, Default)]
+struct GaugeInner {
+    value: AtomicI64,
+}
+
+/// A last-value-wins signed gauge (queue depth, in-flight count, SIMD
+/// tier). `add` takes negative deltas for RAII decrement-on-drop.
+#[derive(Clone, Debug)]
+pub struct Gauge(Arc<GaugeInner>);
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge(Arc::new(GaugeInner::default()))
+    }
+
+    #[inline]
+    pub fn set(&self, v: i64) {
+        self.0.value.store(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, delta: i64) {
+        self.0.value.fetch_add(delta, Ordering::Relaxed);
+    }
+
+    pub fn value(&self) -> i64 {
+        self.0.value.load(Ordering::Relaxed)
+    }
+}
+
+#[derive(Debug)]
+struct HistShard {
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl HistShard {
+    fn new() -> HistShard {
+        HistShard {
+            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+}
+
+#[derive(Debug)]
+struct HistogramInner {
+    shards: Vec<HistShard>,
+}
+
+/// A fixed-memory log-bucketed histogram (typically of microsecond
+/// durations). Memory is `HIST_SHARDS × HIST_BUCKETS` atomics forever,
+/// independent of how many values are recorded.
+#[derive(Clone, Debug)]
+pub struct Histogram(Arc<HistogramInner>);
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram(Arc::new(HistogramInner {
+            shards: (0..HIST_SHARDS).map(|_| HistShard::new()).collect(),
+        }))
+    }
+
+    #[inline]
+    pub fn record(&self, v: u64) {
+        let s = &self.0.shards[shard_idx(HIST_SHARDS)];
+        s.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        s.count.fetch_add(1, Ordering::Relaxed);
+        s.sum.fetch_add(v, Ordering::Relaxed);
+        s.min.fetch_min(v, Ordering::Relaxed);
+        s.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Merge every shard into one immutable view.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let mut buckets: BTreeMap<u32, u64> = BTreeMap::new();
+        let (mut count, mut sum, mut min, mut max) = (0u64, 0u64, u64::MAX, 0u64);
+        for s in &self.0.shards {
+            count += s.count.load(Ordering::Relaxed);
+            sum += s.sum.load(Ordering::Relaxed);
+            min = min.min(s.min.load(Ordering::Relaxed));
+            max = max.max(s.max.load(Ordering::Relaxed));
+            for (i, b) in s.buckets.iter().enumerate() {
+                let c = b.load(Ordering::Relaxed);
+                if c > 0 {
+                    *buckets.entry(i as u32).or_insert(0) += c;
+                }
+            }
+        }
+        HistogramSnapshot {
+            count,
+            sum,
+            min: if count == 0 { 0 } else { min },
+            max,
+            buckets: buckets.into_iter().collect(),
+        }
+    }
+
+    /// Bytes held by the bucket arrays — constant by construction; the
+    /// serving soak asserts this does not move with request count.
+    pub fn resident_bytes(&self) -> usize {
+        self.0
+            .shards
+            .iter()
+            .map(|s| s.buckets.len() * std::mem::size_of::<AtomicU64>())
+            .sum()
+    }
+}
+
+/// Immutable, mergeable view of one histogram.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    pub min: u64,
+    pub max: u64,
+    /// Sparse `(bucket index, count)` pairs, ascending by index.
+    pub buckets: Vec<(u32, u64)>,
+}
+
+impl HistogramSnapshot {
+    /// Approximate percentile (`p` in 0..=100): the midpoint of the bucket
+    /// holding the rank, clamped to the observed `[min, max]`. Bucket
+    /// geometry bounds the relative error at ≤ 12.5% (see module docs);
+    /// `rust/tests/obs.rs` checks it against the exact sorted reference.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let rank = rank.min(self.count);
+        let mut cum = 0u64;
+        for &(idx, c) in &self.buckets {
+            cum += c;
+            if cum >= rank {
+                return bucket_mid(idx as usize).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Accumulate `other` into `self` (exact for counts and bucket
+    /// contents — the property that makes cross-process snapshot files
+    /// additive).
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        if other.count == 0 {
+            return;
+        }
+        let had = self.count > 0;
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = if had { self.min.min(other.min) } else { other.min };
+        self.max = self.max.max(other.max);
+        let mut map: BTreeMap<u32, u64> = self.buckets.iter().cloned().collect();
+        for &(i, c) in &other.buckets {
+            *map.entry(i).or_insert(0) += c;
+        }
+        self.buckets = map.into_iter().collect();
+    }
+
+    /// What happened after `earlier` (bucket-wise saturating subtraction;
+    /// `min`/`max` keep the later snapshot's values, an approximation the
+    /// CLI labels as such).
+    pub fn diff(&self, earlier: &HistogramSnapshot) -> HistogramSnapshot {
+        let early: BTreeMap<u32, u64> = earlier.buckets.iter().cloned().collect();
+        let buckets: Vec<(u32, u64)> = self
+            .buckets
+            .iter()
+            .filter_map(|&(i, c)| {
+                let d = c.saturating_sub(early.get(&i).copied().unwrap_or(0));
+                (d > 0).then_some((i, d))
+            })
+            .collect();
+        HistogramSnapshot {
+            count: self.count.saturating_sub(earlier.count),
+            sum: self.sum.saturating_sub(earlier.sum),
+            min: self.min,
+            max: self.max,
+            buckets,
+        }
+    }
+}
+
+#[derive(Debug)]
+enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+/// A named-metric registry. One process-wide instance lives behind
+/// [`global`]; tests construct private ones.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    metrics: RwLock<HashMap<String, Metric>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Get-or-register a counter. Panics if `name` is already registered
+    /// as a different metric kind (a programming error, not a data error).
+    pub fn counter(&self, name: &str) -> Counter {
+        if let Some(Metric::Counter(c)) = self.metrics.read().unwrap().get(name) {
+            return c.clone();
+        }
+        let mut w = self.metrics.write().unwrap();
+        match w
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Counter(Counter::new()))
+        {
+            Metric::Counter(c) => c.clone(),
+            other => panic!("metric {name:?} already registered as {other:?}, wanted counter"),
+        }
+    }
+
+    pub fn gauge(&self, name: &str) -> Gauge {
+        if let Some(Metric::Gauge(g)) = self.metrics.read().unwrap().get(name) {
+            return g.clone();
+        }
+        let mut w = self.metrics.write().unwrap();
+        match w
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Gauge(Gauge::new()))
+        {
+            Metric::Gauge(g) => g.clone(),
+            other => panic!("metric {name:?} already registered as {other:?}, wanted gauge"),
+        }
+    }
+
+    pub fn histogram(&self, name: &str) -> Histogram {
+        if let Some(Metric::Histogram(h)) = self.metrics.read().unwrap().get(name) {
+            return h.clone();
+        }
+        let mut w = self.metrics.write().unwrap();
+        match w
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Histogram(Histogram::new()))
+        {
+            Metric::Histogram(h) => h.clone(),
+            other => panic!("metric {name:?} already registered as {other:?}, wanted histogram"),
+        }
+    }
+
+    /// Point-in-time view of every registered metric.
+    pub fn snapshot(&self) -> RegistrySnapshot {
+        let g = self.metrics.read().unwrap();
+        let mut snap = RegistrySnapshot::default();
+        for (name, m) in g.iter() {
+            match m {
+                Metric::Counter(c) => {
+                    snap.counters.insert(name.clone(), c.value());
+                }
+                Metric::Gauge(v) => {
+                    snap.gauges.insert(name.clone(), v.value());
+                }
+                Metric::Histogram(h) => {
+                    snap.histograms.insert(name.clone(), h.snapshot());
+                }
+            }
+        }
+        snap
+    }
+}
+
+/// Immutable view of a whole registry; serializes to/from the JSON the
+/// `openacm obs` CLI and the on-disk `snapshot.json` use.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RegistrySnapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, i64>,
+    pub histograms: BTreeMap<String, HistogramSnapshot>,
+}
+
+impl RegistrySnapshot {
+    /// Accumulate `other`: counters and histogram buckets add, gauges take
+    /// `other`'s (more recent) value.
+    pub fn merge(&mut self, other: &RegistrySnapshot) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.gauges {
+            self.gauges.insert(k.clone(), *v);
+        }
+        for (k, h) in &other.histograms {
+            self.histograms.entry(k.clone()).or_default().merge(h);
+        }
+    }
+
+    /// What happened between `earlier` and `self` (saturating; names only
+    /// present in `earlier` are dropped).
+    pub fn diff(&self, earlier: &RegistrySnapshot) -> RegistrySnapshot {
+        let counters = self
+            .counters
+            .iter()
+            .map(|(k, v)| {
+                let e = earlier.counters.get(k).copied().unwrap_or(0);
+                (k.clone(), v.saturating_sub(e))
+            })
+            .collect();
+        let histograms = self
+            .histograms
+            .iter()
+            .map(|(k, h)| {
+                let e = earlier.histograms.get(k).cloned().unwrap_or_default();
+                (k.clone(), h.diff(&e))
+            })
+            .collect();
+        RegistrySnapshot {
+            counters,
+            gauges: self.gauges.clone(),
+            histograms,
+        }
+    }
+
+    /// Hand-rolled JSON (offline build, no serde) — same convention as
+    /// [`crate::bench::harness::BenchJson`]. Deterministic: maps are
+    /// `BTreeMap`s, so equal snapshots render byte-identically.
+    pub fn to_json(&self) -> String {
+        fn esc(s: &str) -> String {
+            let mut out = String::with_capacity(s.len());
+            for c in s.chars() {
+                match c {
+                    '"' => out.push_str("\\\""),
+                    '\\' => out.push_str("\\\\"),
+                    '\n' => out.push_str("\\n"),
+                    c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                    c => out.push(c),
+                }
+            }
+            out
+        }
+        let mut s = String::from("{\n  \"counters\": {");
+        for (i, (k, v)) in self.counters.iter().enumerate() {
+            s.push_str(if i == 0 { "\n" } else { ",\n" });
+            s.push_str(&format!("    \"{}\": {v}", esc(k)));
+        }
+        s.push_str("\n  },\n  \"gauges\": {");
+        for (i, (k, v)) in self.gauges.iter().enumerate() {
+            s.push_str(if i == 0 { "\n" } else { ",\n" });
+            s.push_str(&format!("    \"{}\": {v}", esc(k)));
+        }
+        s.push_str("\n  },\n  \"histograms\": {");
+        for (i, (k, h)) in self.histograms.iter().enumerate() {
+            s.push_str(if i == 0 { "\n" } else { ",\n" });
+            let buckets: Vec<String> = h
+                .buckets
+                .iter()
+                .map(|(bi, c)| format!("[{bi},{c}]"))
+                .collect();
+            s.push_str(&format!(
+                "    \"{}\": {{\"count\": {}, \"sum\": {}, \"min\": {}, \"max\": {}, \
+                 \"buckets\": [{}]}}",
+                esc(k),
+                h.count,
+                h.sum,
+                h.min,
+                h.max,
+                buckets.join(",")
+            ));
+        }
+        s.push_str("\n  }\n}\n");
+        s
+    }
+
+    /// Parse the format [`Self::to_json`] emits (used by `obs
+    /// snapshot|diff` and the cross-process merge in [`super::sink`]).
+    pub fn from_json(text: &str) -> anyhow::Result<RegistrySnapshot> {
+        let doc = super::json::parse(text)?;
+        let mut snap = RegistrySnapshot::default();
+        if let Some(obj) = doc.get("counters").and_then(Json::as_object) {
+            for (k, v) in obj {
+                snap.counters
+                    .insert(k.clone(), v.as_u64().unwrap_or_default());
+            }
+        }
+        if let Some(obj) = doc.get("gauges").and_then(Json::as_object) {
+            for (k, v) in obj {
+                snap.gauges.insert(k.clone(), v.as_i64().unwrap_or_default());
+            }
+        }
+        if let Some(obj) = doc.get("histograms").and_then(Json::as_object) {
+            for (k, v) in obj {
+                let mut h = HistogramSnapshot {
+                    count: v.get("count").and_then(Json::as_u64).unwrap_or_default(),
+                    sum: v.get("sum").and_then(Json::as_u64).unwrap_or_default(),
+                    min: v.get("min").and_then(Json::as_u64).unwrap_or_default(),
+                    max: v.get("max").and_then(Json::as_u64).unwrap_or_default(),
+                    buckets: Vec::new(),
+                };
+                if let Some(arr) = v.get("buckets").and_then(Json::as_array) {
+                    for pair in arr {
+                        if let Some(p) = pair.as_array() {
+                            if p.len() == 2 {
+                                h.buckets.push((
+                                    p[0].as_u64().unwrap_or_default() as u32,
+                                    p[1].as_u64().unwrap_or_default(),
+                                ));
+                            }
+                        }
+                    }
+                }
+                snap.histograms.insert(k.clone(), h);
+            }
+        }
+        Ok(snap)
+    }
+}
+
+static GLOBAL: OnceLock<MetricsRegistry> = OnceLock::new();
+
+/// The process-wide registry every subsystem reports through.
+pub fn global() -> &'static MetricsRegistry {
+    GLOBAL.get_or_init(MetricsRegistry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_is_contiguous_and_monotone() {
+        // Exhaustive over the small range, spot checks across octaves.
+        let mut prev = 0usize;
+        for v in 0u64..4096 {
+            let idx = bucket_index(v);
+            assert!(idx == prev || idx == prev + 1, "gap at v={v}");
+            assert!(bucket_lo(idx) <= v && v <= bucket_hi(idx), "bounds at v={v}");
+            prev = idx;
+        }
+        for shift in 2..63 {
+            let v = 1u64 << shift;
+            let idx = bucket_index(v);
+            assert_eq!(bucket_lo(idx), v);
+            assert!(bucket_index(v - 1) == idx - 1);
+        }
+        assert!(bucket_index(u64::MAX) < HIST_BUCKETS);
+    }
+
+    #[test]
+    fn counter_gauge_histogram_roundtrip() {
+        let r = MetricsRegistry::new();
+        r.counter("a").add(3);
+        r.counter("a").add(4);
+        r.gauge("g").set(7);
+        r.gauge("g").add(-2);
+        let h = r.histogram("h");
+        for v in [1u64, 10, 100, 1000] {
+            h.record(v);
+        }
+        let s = r.snapshot();
+        assert_eq!(s.counters["a"], 7);
+        assert_eq!(s.gauges["g"], 5);
+        let hs = &s.histograms["h"];
+        assert_eq!(hs.count, 4);
+        assert_eq!(hs.sum, 1111);
+        assert_eq!((hs.min, hs.max), (1, 1000));
+    }
+
+    #[test]
+    fn snapshot_merge_and_diff_are_inverse_for_counters() {
+        let r = MetricsRegistry::new();
+        r.counter("x").add(10);
+        r.histogram("h").record(500);
+        let a = r.snapshot();
+        r.counter("x").add(5);
+        r.histogram("h").record(700);
+        let b = r.snapshot();
+        let d = b.diff(&a);
+        assert_eq!(d.counters["x"], 5);
+        assert_eq!(d.histograms["h"].count, 1);
+        let mut merged = a.clone();
+        merged.merge(&d);
+        assert_eq!(merged.counters["x"], b.counters["x"]);
+        assert_eq!(merged.histograms["h"].count, b.histograms["h"].count);
+    }
+
+    #[test]
+    fn json_roundtrip_is_identity() {
+        let r = MetricsRegistry::new();
+        r.counter("serve.completed").add(42);
+        r.gauge("simd.level").set(1);
+        let h = r.histogram("serve.latency_us");
+        for v in [12u64, 90, 90, 4000] {
+            h.record(v);
+        }
+        let snap = r.snapshot();
+        let back = RegistrySnapshot::from_json(&snap.to_json()).unwrap();
+        assert_eq!(back, snap);
+    }
+}

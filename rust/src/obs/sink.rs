@@ -1,0 +1,101 @@
+//! On-disk telemetry sink: `<dir>/snapshot.json` + `<dir>/events.jsonl`.
+//!
+//! `flush` writes the global registry merged **on top of whatever the file
+//! held when this process first flushed** — so `openacm compile` followed
+//! by `openacm serve` accumulate into one snapshot (the property the
+//! `openacm obs snapshot` acceptance check relies on), while periodic
+//! flushes from one process (`serve --metrics-every N`) never double-count
+//! their own metrics. Writes are temp-file + atomic rename, same as the
+//! design-point store.
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, OnceLock};
+
+use super::registry::{global, RegistrySnapshot};
+
+/// Default sink root: `$OPENACM_OBS` or `.openacm_obs` in the working
+/// directory (mirrors [`crate::store::DesignPointStore::default_dir`]).
+pub fn default_dir() -> PathBuf {
+    std::env::var("OPENACM_OBS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(".openacm_obs"))
+}
+
+/// Create the sink dir and start appending events to
+/// `<dir>/events.jsonl`.
+pub fn init(dir: &Path) -> Result<()> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating obs dir {}", dir.display()))?;
+    super::event::attach_file(&dir.join("events.jsonl"))
+        .with_context(|| format!("opening event log in {}", dir.display()))?;
+    Ok(())
+}
+
+/// Per-dir baseline: the snapshot found on disk the first time this
+/// process flushed there. Every flush rewrites `baseline + live registry`.
+fn baselines() -> &'static Mutex<HashMap<PathBuf, RegistrySnapshot>> {
+    static BASE: OnceLock<Mutex<HashMap<PathBuf, RegistrySnapshot>>> = OnceLock::new();
+    BASE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Write the merged snapshot to `<dir>/snapshot.json`; returns its path.
+pub fn flush(dir: &Path) -> Result<PathBuf> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating obs dir {}", dir.display()))?;
+    let path = dir.join("snapshot.json");
+    let mut merged = {
+        let mut base = baselines().lock().unwrap();
+        base.entry(dir.to_path_buf())
+            .or_insert_with(|| {
+                // A missing or corrupt prior snapshot degrades to an
+                // empty baseline — telemetry must never fail a command.
+                load(&path).unwrap_or_default()
+            })
+            .clone()
+    };
+    merged.merge(&global().snapshot());
+    let tmp = dir.join(format!(".snapshot-{}.tmp", std::process::id()));
+    std::fs::write(&tmp, merged.to_json())
+        .with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, &path)
+        .with_context(|| format!("renaming into {}", path.display()))?;
+    Ok(path)
+}
+
+/// Read a snapshot file written by [`flush`].
+pub fn load(path: &Path) -> Result<RegistrySnapshot> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading snapshot {}", path.display()))?;
+    RegistrySnapshot::from_json(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flush_merges_onto_preexisting_snapshot_without_double_counting() {
+        let dir = std::env::temp_dir().join(format!("openacm-obs-sink-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        // Seed the file as if another process had flushed 100 earlier.
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut prior = RegistrySnapshot::default();
+        prior.counters.insert("obs_sink_test.prior".into(), 100);
+        std::fs::write(dir.join("snapshot.json"), prior.to_json()).unwrap();
+
+        let c = global().counter("obs_sink_test.live");
+        c.add(7);
+        let path = flush(&dir).unwrap();
+        let live_now = global().counter("obs_sink_test.live").value();
+        let first = load(&path).unwrap();
+        assert_eq!(first.counters["obs_sink_test.prior"], 100);
+        assert!(first.counters["obs_sink_test.live"] >= live_now.min(7));
+
+        // A second flush must not re-add the prior file's 100 again.
+        let second = load(&flush(&dir).unwrap()).unwrap();
+        assert_eq!(second.counters["obs_sink_test.prior"], 100);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,127 @@
+//! Lightweight span tracing: RAII guards that record duration histograms
+//! with parent/child phase attribution.
+//!
+//! `obs::span("serve.batch")` opens a phase; a nested `obs::span("execute")`
+//! records under `span.serve.batch/execute.us` — the slash-joined path is
+//! built from a thread-local stack, so attribution needs no plumbing
+//! through call signatures. Spans live at batch/probe/tile boundaries
+//! only, never inside kernel inner loops.
+//!
+//! The switch: `OPENACM_TRACE` (default **on**; `0`/`false`/empty turns it
+//! off). Disabled spans take no timestamp, touch no TLS and record
+//! nothing — the cheap path the ≤2% bench guard compares against
+//! (`benches/nn_forward.rs`). [`set_trace_enabled`] flips it at runtime
+//! for benches and tests.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+fn trace_flag() -> &'static AtomicBool {
+    static FLAG: OnceLock<AtomicBool> = OnceLock::new();
+    FLAG.get_or_init(|| {
+        let on = match std::env::var("OPENACM_TRACE") {
+            Ok(v) => !v.is_empty() && v != "0" && !v.eq_ignore_ascii_case("false"),
+            // Tracing costs one clock read + one histogram record per
+            // span at coarse boundaries, so it defaults on — serving and
+            // compile telemetry should not need opt-in.
+            Err(_) => true,
+        };
+        AtomicBool::new(on)
+    })
+}
+
+/// Whether spans (and the trace-gated threadpool busy-time clocks) record.
+#[inline]
+pub fn trace_enabled() -> bool {
+    trace_flag().load(Ordering::Relaxed)
+}
+
+/// Runtime override of `OPENACM_TRACE` (bench A/B arms, tests).
+pub fn set_trace_enabled(on: bool) {
+    trace_flag().store(on, Ordering::Relaxed);
+}
+
+thread_local! {
+    /// Stack of full span paths for the current thread (parent
+    /// attribution). Innermost last.
+    static STACK: RefCell<Vec<String>> = const { RefCell::new(Vec::new()) };
+}
+
+/// RAII span guard: records `span.<path>.us` on drop. Obtain via [`span`].
+#[must_use = "a span records on drop; binding it to _ ends it immediately"]
+#[derive(Debug)]
+pub struct Span {
+    start: Option<Instant>,
+    path: String,
+}
+
+/// Open a span named `name`, nested under the innermost live span on this
+/// thread. No-op (and allocation-free) when tracing is disabled.
+pub fn span(name: &str) -> Span {
+    if !trace_enabled() {
+        return Span {
+            start: None,
+            path: String::new(),
+        };
+    }
+    let path = STACK.with(|s| {
+        let mut s = s.borrow_mut();
+        let path = match s.last() {
+            Some(parent) => format!("{parent}/{name}"),
+            None => name.to_string(),
+        };
+        s.push(path.clone());
+        path
+    });
+    Span {
+        start: Some(Instant::now()),
+        path,
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(start) = self.start else { return };
+        let us = start.elapsed().as_micros() as u64;
+        STACK.with(|s| {
+            let mut s = s.borrow_mut();
+            // Spans drop LIFO in practice; tolerate out-of-order drops by
+            // removing this path wherever it sits.
+            if let Some(pos) = s.iter().rposition(|p| *p == self.path) {
+                s.remove(pos);
+            }
+        });
+        super::registry::global()
+            .histogram(&format!("span.{}.us", self.path))
+            .record(us);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nested_spans_attribute_parent_child_and_disabled_is_free() {
+        // One test body (not several) because the trace flag is global.
+        let was = trace_enabled();
+        set_trace_enabled(true);
+        {
+            let _outer = span("obs_test.outer");
+            let _inner = span("inner");
+        }
+        let snap = super::super::registry::global().snapshot();
+        assert_eq!(snap.histograms["span.obs_test.outer.us"].count, 1);
+        assert_eq!(snap.histograms["span.obs_test.outer/inner.us"].count, 1);
+
+        set_trace_enabled(false);
+        {
+            let _off = span("obs_test.disabled");
+        }
+        let snap = super::super::registry::global().snapshot();
+        assert!(!snap.histograms.contains_key("span.obs_test.disabled.us"));
+        set_trace_enabled(was);
+    }
+}

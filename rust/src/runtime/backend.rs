@@ -291,8 +291,11 @@ impl BackendFactory for NativeFactory {
                 )
             })
             .collect();
+        // Routed through the structured event log: the stderr mirror
+        // preserves the historical `WARNING: …` line format, and the
+        // JSONL trail makes the warning visible to `openacm obs tail`.
         for w in &warnings {
-            eprintln!("WARNING: {w}");
+            crate::obs::warn("backend", w, &[("variant", variant.to_string())]);
         }
         Ok(Box::new(NativeBackend {
             cnn: Arc::clone(&self.cnn),
@@ -583,11 +586,15 @@ pub fn select_backend_with_plan(
 /// numbers for the wrong model.
 fn warn_on_model_mismatch(plan: &CompiledPlan, model: &QuantCnn) {
     if crate::compile::search::model_content_hash(model).0 != plan.model_hash {
-        eprintln!(
-            "WARNING: plan {:?} was compiled for a different model (hash mismatch) — \
-             its measured accuracy drop and energy estimates do not apply to the \
-             model being served; recompile with `openacm compile` against this model",
-            plan.name
+        crate::obs::warn(
+            "backend",
+            &format!(
+                "plan {:?} was compiled for a different model (hash mismatch) — \
+                 its measured accuracy drop and energy estimates do not apply to the \
+                 model being served; recompile with `openacm compile` against this model",
+                plan.name
+            ),
+            &[("plan", plan.name.clone())],
         );
     }
 }

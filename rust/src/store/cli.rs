@@ -1,7 +1,8 @@
 //! `openacm store` — inspect and maintain the design-point store.
 //!
-//! * `openacm store stats [--dir D]` — record counts, footprint, and a
-//!   per-family / per-section breakdown;
+//! * `openacm store stats [--dir D] [--json]` — record counts, footprint,
+//!   and a per-family / per-section breakdown (`--json` emits a
+//!   machine-readable document for CI and benches);
 //! * `openacm store verify [--dir D] [--repair]` — full integrity scan
 //!   (checksums, format version); `--repair` deletes corrupt records so
 //!   the next access recomputes them;
@@ -50,7 +51,7 @@ pub fn cmd_store(args: &Args) -> Result<()> {
         .unwrap_or("stats");
     let store = DesignPointStore::open(&dir)?;
     match action {
-        "stats" => cmd_stats(&store),
+        "stats" => cmd_stats(&store, args.flag("json")),
         "verify" => cmd_verify(&store, args.flag("repair")),
         "gc" => {
             let max_mb = args.f64_or("max-mb", 256.0)?;
@@ -70,7 +71,7 @@ pub fn cmd_store(args: &Args) -> Result<()> {
     }
 }
 
-fn cmd_stats(store: &DesignPointStore) -> Result<()> {
+fn cmd_stats(store: &DesignPointStore, json: bool) -> Result<()> {
     #[derive(Default)]
     struct FamilyAgg {
         records: u64,
@@ -91,6 +92,37 @@ fn cmd_stats(store: &DesignPointStore) -> Result<()> {
         f.accuracy += rec.accuracy.is_some() as u64;
     });
     let s = store.stats();
+    if json {
+        // Hand-rolled (offline build, no serde) — same convention as
+        // BenchJson / obs snapshots. Family names are \"-escaped.
+        let esc = |t: &str| t.replace('\\', "\\\\").replace('"', "\\\"");
+        let mut out = String::from("{\n");
+        out.push_str(&format!("  \"root\": \"{}\",\n", esc(&store.root().display().to_string())));
+        out.push_str(&format!("  \"format_version\": {},\n", super::FORMAT_VERSION));
+        out.push_str(&format!(
+            "  \"records\": {}, \"bytes\": {}, \"hits\": {}, \"misses\": {}, \
+             \"writes\": {}, \"evictions\": {}, \"corrupt\": {},\n",
+            s.records, s.bytes, s.hits, s.misses, s.writes, s.evictions, s.corrupt
+        ));
+        out.push_str("  \"families\": [");
+        for (i, (family, agg)) in by_family.iter().enumerate() {
+            out.push_str(if i == 0 { "\n" } else { ",\n" });
+            out.push_str(&format!(
+                "    {{\"family\": \"{}\", \"records\": {}, \"error\": {}, \"ppa\": {}, \
+                 \"activity\": {}, \"yield\": {}, \"accuracy\": {}}}",
+                esc(family),
+                agg.records,
+                agg.error,
+                agg.ppa,
+                agg.activity,
+                agg.fyield,
+                agg.accuracy
+            ));
+        }
+        out.push_str("\n  ]\n}\n");
+        print!("{out}");
+        return Ok(());
+    }
     println!(
         "store {}: {} records, {:.2} MB (format v{})",
         store.root().display(),

@@ -137,6 +137,32 @@ pub struct DesignPointStore {
     evictions: AtomicU64,
     corrupt: AtomicU64,
     tmp_counter: AtomicU64,
+    /// Process-wide registry mirrors of the counters above (`store.*`).
+    /// The per-store atomics stay authoritative for [`StoreStats`] (a
+    /// process can hold several stores); these feed `openacm obs`.
+    obs: ObsCounters,
+}
+
+/// Registry handles mirrored by every store op (see `obs::registry`).
+#[derive(Debug)]
+struct ObsCounters {
+    hits: crate::obs::Counter,
+    misses: crate::obs::Counter,
+    writes: crate::obs::Counter,
+    evictions: crate::obs::Counter,
+    corrupt: crate::obs::Counter,
+}
+
+impl ObsCounters {
+    fn new() -> ObsCounters {
+        ObsCounters {
+            hits: crate::obs::counter("store.hits"),
+            misses: crate::obs::counter("store.misses"),
+            writes: crate::obs::counter("store.writes"),
+            evictions: crate::obs::counter("store.evictions"),
+            corrupt: crate::obs::counter("store.corrupt"),
+        }
+    }
 }
 
 impl DesignPointStore {
@@ -162,8 +188,16 @@ impl DesignPointStore {
             evictions: AtomicU64::new(0),
             corrupt: AtomicU64::new(0),
             tmp_counter: AtomicU64::new(0),
+            obs: ObsCounters::new(),
         };
         store.rescan()?;
+        // Boot-time footprint gauges: serving warm-start only *scans* the
+        // store, so these are what make a read-only open visible in
+        // `openacm obs snapshot`.
+        let s = store.stats();
+        crate::obs::gauge("store.records").set(s.records as i64);
+        crate::obs::gauge("store.bytes").set(s.bytes as i64);
+        crate::obs::counter("store.opens").inc();
         Ok(store)
     }
 
@@ -245,17 +279,21 @@ impl DesignPointStore {
             Ok(b) => b,
             Err(_) => {
                 self.misses.fetch_add(1, Ordering::Relaxed);
+                self.obs.misses.inc();
                 return None;
             }
         };
         match DesignPointRecord::decode(&bytes, Some(key)) {
             Ok((_, rec)) => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
+                self.obs.hits.inc();
                 Some(rec)
             }
             Err(_) => {
                 self.corrupt.fetch_add(1, Ordering::Relaxed);
                 self.misses.fetch_add(1, Ordering::Relaxed);
+                self.obs.corrupt.inc();
+                self.obs.misses.inc();
                 let _ = fs::remove_file(&path);
                 self.shard(key).write().unwrap().remove(&key.0);
                 None
@@ -287,6 +325,7 @@ impl DesignPointStore {
             return Err(e).with_context(|| format!("renaming into {}", path.display()));
         }
         self.writes.fetch_add(1, Ordering::Relaxed);
+        self.obs.writes.inc();
         self.shard(key).write().unwrap().insert(
             key.0,
             IndexEntry { bytes: bytes.len() as u64, mtime_ns: now_ns() },
@@ -406,6 +445,7 @@ impl DesignPointStore {
             evicted += 1;
         }
         self.evictions.fetch_add(evicted, Ordering::Relaxed);
+        self.obs.evictions.add(evicted);
         evicted
     }
 

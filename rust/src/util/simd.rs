@@ -76,11 +76,24 @@ fn force_scalar() -> bool {
 pub fn detect() -> SimdLevel {
     static LEVEL: OnceLock<SimdLevel> = OnceLock::new();
     *LEVEL.get_or_init(|| {
-        if force_scalar() {
+        let level = if force_scalar() {
             SimdLevel::Scalar
         } else {
             detect_host()
-        }
+        };
+        // Once per process: expose the chosen tier in the metrics registry
+        // (0=scalar, 1=avx2, 2=neon) and the structured event log.
+        crate::obs::gauge("simd.level").set(match level {
+            SimdLevel::Scalar => 0,
+            SimdLevel::Avx2 => 1,
+            SimdLevel::Neon => 2,
+        });
+        crate::obs::info(
+            "simd",
+            "dispatch level selected",
+            &[("level", level.name().to_string())],
+        );
+        level
     })
 }
 

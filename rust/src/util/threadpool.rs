@@ -32,7 +32,19 @@ impl ThreadPool {
                 thread::spawn(move || loop {
                     let job = { rx.lock().unwrap().recv() };
                     match job {
-                        Ok(job) => job(),
+                        Ok(job) => {
+                            // Busy-time clocks only when tracing is on so
+                            // the disabled path stays two branch-free loads.
+                            if crate::obs::trace_enabled() {
+                                let t0 = std::time::Instant::now();
+                                job();
+                                crate::obs::record_pool_busy_us(
+                                    t0.elapsed().as_micros() as u64
+                                );
+                            } else {
+                                job();
+                            }
+                        }
                         Err(_) => break,
                     }
                 })
@@ -50,6 +62,7 @@ impl ThreadPool {
     }
 
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        crate::obs::record_pool_tasks(1);
         self.tx
             .as_ref()
             .expect("pool shut down")
@@ -79,21 +92,36 @@ where
     F: Fn(usize) -> T + Sync,
 {
     let threads = threads.max(1).min(n.max(1));
+    crate::obs::record_pool_tasks(n as u64);
     if threads <= 1 || n <= 1 {
         return (0..n).map(f).collect();
     }
     let next = AtomicUsize::new(0);
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
     let slots: Vec<Mutex<&mut Option<T>>> = out.iter_mut().map(Mutex::new).collect();
+    let traced = crate::obs::trace_enabled();
     thread::scope(|scope| {
         for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
+            scope.spawn(|| {
+                let mut busy_us = 0u64;
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    if traced {
+                        let t0 = std::time::Instant::now();
+                        let v = f(i);
+                        busy_us += t0.elapsed().as_micros() as u64;
+                        **slots[i].lock().unwrap() = Some(v);
+                    } else {
+                        let v = f(i);
+                        **slots[i].lock().unwrap() = Some(v);
+                    }
                 }
-                let v = f(i);
-                **slots[i].lock().unwrap() = Some(v);
+                if busy_us > 0 {
+                    crate::obs::record_pool_busy_us(busy_us);
+                }
             });
         }
     });

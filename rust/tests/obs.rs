@@ -1,0 +1,201 @@
+//! Integration tests for the `obs::` telemetry spine: concurrent
+//! recording correctness, histogram percentile accuracy against an
+//! exact-sorted reference, snapshot JSON round-trips, and event-log
+//! routing. All registry tests run on *private* `MetricsRegistry`
+//! instances (not the process-wide one) so they stay independent of
+//! whatever other tests in this binary record.
+
+use std::sync::Arc;
+
+use openacm::obs::{Event, HistogramSnapshot, MetricsRegistry, RegistrySnapshot, Severity};
+use openacm::util::stats::percentile;
+
+/// N threads hammer M counters + histograms concurrently; the merged
+/// snapshot must equal the serial sums exactly (sharded atomics lose
+/// nothing).
+#[test]
+fn concurrent_recording_matches_serial_sums() {
+    const THREADS: usize = 8;
+    const METRICS: usize = 5;
+    const PER_THREAD: u64 = 10_000;
+
+    let reg = Arc::new(MetricsRegistry::new());
+    std::thread::scope(|scope| {
+        for t in 0..THREADS {
+            let reg = Arc::clone(&reg);
+            scope.spawn(move || {
+                for m in 0..METRICS {
+                    let c = reg.counter(&format!("c{m}"));
+                    let h = reg.histogram(&format!("h{m}"));
+                    for i in 0..PER_THREAD {
+                        c.add(m as u64 + 1);
+                        h.record(i % 1000 + t as u64);
+                    }
+                }
+            });
+        }
+    });
+    let snap = reg.snapshot();
+    for m in 0..METRICS {
+        assert_eq!(
+            snap.counters[&format!("c{m}")],
+            THREADS as u64 * PER_THREAD * (m as u64 + 1),
+            "counter c{m} lost increments under contention"
+        );
+        let h = &snap.histograms[&format!("h{m}")];
+        assert_eq!(h.count, THREADS as u64 * PER_THREAD);
+        let serial_sum: u64 = (0..THREADS as u64)
+            .map(|t| (0..PER_THREAD).map(|i| i % 1000 + t).sum::<u64>())
+            .sum();
+        assert_eq!(h.sum, serial_sum, "histogram h{m} sum drifted");
+        assert_eq!(h.min, 0);
+        assert_eq!(h.max, 999 + THREADS as u64 - 1);
+    }
+}
+
+/// Log-bucketed percentiles vs the exact sorted reference
+/// (`util::stats::percentile`): the bucket design (4 sub-buckets per
+/// octave) bounds relative error at ~12.5% at bucket midpoints; allow a
+/// modest margin on top for quantile interpolation differences.
+#[test]
+fn histogram_percentiles_track_exact_sorted_reference() {
+    let reg = MetricsRegistry::new();
+    let h = reg.histogram("lat");
+    // Deterministic log-uniform-ish samples spanning ~5 decades — the
+    // shape of real latency data (xorshift, seeded).
+    let mut state = 0x9E37_79B9_7F4A_7C15u64;
+    let mut samples: Vec<f64> = Vec::with_capacity(2000);
+    for _ in 0..2000 {
+        state ^= state << 13;
+        state ^= state >> 7;
+        state ^= state << 17;
+        let exp = (state >> 60) as u32; // 0..16
+        let v = 10 + (state % 1000) * (1u64 << exp);
+        h.record(v);
+        samples.push(v as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let snap = reg.snapshot();
+    let hs = &snap.histograms["lat"];
+    assert_eq!(hs.count, 2000);
+    for p in [10.0, 50.0, 90.0, 99.0] {
+        let exact = percentile(&samples, p);
+        let approx = hs.percentile(p) as f64;
+        let rel = (approx - exact).abs() / exact;
+        assert!(
+            rel <= 0.15,
+            "p{p}: approx {approx} vs exact {exact} ({:.1}% off, want <= 15%)",
+            rel * 100.0
+        );
+    }
+    // Extremes stay inside the observed range (bucket midpoints are
+    // clamped to [min, max]) and within one bucket width of the true ends.
+    let (lo, hi) = (samples[0], samples[samples.len() - 1]);
+    let p0 = hs.percentile(0.0) as f64;
+    let p100 = hs.percentile(100.0) as f64;
+    assert!((lo..=lo * 1.15).contains(&p0), "p0 {p0} vs min {lo}");
+    assert!((hi * 0.85..=hi).contains(&p100), "p100 {p100} vs max {hi}");
+    // Mean is exact (sum and count are exact).
+    let exact_mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    assert!((hs.mean() - exact_mean).abs() < 1e-6);
+}
+
+/// Snapshot → JSON → snapshot is the identity, including u64::MAX-scale
+/// counters (numbers are kept as raw strings in the parser).
+#[test]
+fn snapshot_json_roundtrip_preserves_extremes() {
+    let reg = MetricsRegistry::new();
+    reg.counter("huge").add(u64::MAX - 1);
+    reg.gauge("negative").set(i64::MIN + 1);
+    let h = reg.histogram("spread");
+    h.record(0);
+    h.record(1);
+    h.record(u64::MAX);
+    let snap = reg.snapshot();
+    let back = RegistrySnapshot::from_json(&snap.to_json()).unwrap();
+    assert_eq!(back.counters["huge"], u64::MAX - 1);
+    assert_eq!(back.gauges["negative"], i64::MIN + 1);
+    assert_eq!(back.histograms["spread"].max, u64::MAX);
+    assert_eq!(snap.to_json(), back.to_json());
+}
+
+/// merge is commutative-with-diff: (a merged b).diff(a) == b for
+/// counters and histogram counts.
+#[test]
+fn merge_then_diff_recovers_the_increment() {
+    let mk = |n: u64| {
+        let reg = MetricsRegistry::new();
+        reg.counter("c").add(n);
+        let h = reg.histogram("h");
+        for i in 0..n {
+            h.record(i);
+        }
+        reg.snapshot()
+    };
+    let a = mk(100);
+    let b = mk(42);
+    let mut merged = a.clone();
+    merged.merge(&b);
+    let d = merged.diff(&a);
+    assert_eq!(d.counters["c"], 42);
+    assert_eq!(d.histograms["h"].count, 42);
+}
+
+/// HistogramSnapshot::diff subtracts bucket-wise; percentiles of the
+/// difference reflect only the later interval's samples.
+#[test]
+fn histogram_diff_isolates_the_interval() {
+    let reg = MetricsRegistry::new();
+    let h = reg.histogram("x");
+    for _ in 0..100 {
+        h.record(10);
+    }
+    let early = reg.snapshot().histograms["x"].clone();
+    for _ in 0..100 {
+        h.record(100_000);
+    }
+    let late = reg.snapshot().histograms["x"].clone();
+    let d: HistogramSnapshot = late.diff(&early);
+    assert_eq!(d.count, 100);
+    // Every sample in the interval was 100_000; p50 must land in its
+    // bucket (within the ~12.5% bucket width), nowhere near 10.
+    let p50 = d.percentile(50.0);
+    assert!(p50 > 80_000, "diff p50 {p50} should reflect only late samples");
+}
+
+/// Events route into the in-process ring with fields intact; JSONL
+/// serialization is parseable by the bundled JSON reader.
+#[test]
+fn event_log_records_and_serializes() {
+    openacm::obs::event::set_stderr_mirror(false);
+    openacm::obs::emit(
+        Severity::Info,
+        "obs-test",
+        "hello from the test",
+        &[("k", "v".to_string()), ("n", "7".to_string())],
+    );
+    let recent: Vec<Event> = openacm::obs::recent(64);
+    let ev = recent
+        .iter()
+        .rev()
+        .find(|e| e.subsystem == "obs-test")
+        .expect("emitted event must be in the ring");
+    assert_eq!(ev.message, "hello from the test");
+    assert_eq!(ev.fields, vec![("k".to_string(), "v".to_string()), ("n".into(), "7".into())]);
+    let line = ev.to_jsonl();
+    let parsed = openacm::obs::json::parse(&line).unwrap();
+    assert_eq!(parsed.get("subsystem").and_then(|j| j.as_str()), Some("obs-test"));
+    assert_eq!(parsed.get("severity").and_then(|j| j.as_str()), Some("info"));
+    openacm::obs::event::set_stderr_mirror(true);
+}
+
+/// The process-global registry serves one shared handle per name: two
+/// lookups add into the same underlying metric.
+#[test]
+fn global_registry_handles_alias_by_name() {
+    let a = openacm::obs::counter("obs_test.alias_check");
+    let b = openacm::obs::counter("obs_test.alias_check");
+    a.add(3);
+    b.add(4);
+    assert!(openacm::obs::counter("obs_test.alias_check").value() >= 7);
+}

@@ -69,6 +69,7 @@ fn native_soak_500_requests_accounting_fifo_and_exact_logits() {
     )
     .unwrap();
     assert_eq!(server.backend, "native");
+    let metrics_bytes_at_boot = server.metrics.resident_bytes();
 
     // Burst all 500 submissions. Responses for one variant funnel through
     // ONE shared channel, so arrival order is exactly the worker's
@@ -130,6 +131,13 @@ fn native_soak_500_requests_accounting_fifo_and_exact_logits() {
     }
     let snap = server.metrics.snapshot();
     assert_eq!(snap.completed, admitted_total as u64);
+    // Telemetry memory is fixed-size histograms, not per-request Vecs: the
+    // soak must not have grown the metrics footprint at all.
+    assert_eq!(
+        server.metrics.resident_bytes(),
+        metrics_bytes_at_boot,
+        "serving metrics footprint grew during the soak"
+    );
     server.shutdown();
 }
 

@@ -1,0 +1,213 @@
+//! Sharded serving throughput/latency bench: the adversarial workload
+//! generator replayed at maximum pressure through the fixture-backed
+//! coordinator, for shard counts {1, 4}.
+//!
+//! The fixture backend computes logits as a pure function of
+//! (variant, image) in ~ns, so the measured numbers are the *pipeline's*
+//! overhead — routing, admission, deadline-bucket batching, channel hops,
+//! delivery — not a CNN's. Every `Ok` delivery is bit-verified against
+//! [`fixture_logits`] and the accounting identity
+//! `delivered == admitted` / `admitted + rejected == submitted` is
+//! asserted before any number is reported.
+//!
+//! ```text
+//! cargo bench --bench serving                 # 200k requests per config
+//! OPENACM_SMOKE=1 cargo bench --bench serving # CI smoke (20k)
+//! ```
+//!
+//! Writes `BENCH_serving.json`: per-config mean/p50/p99 latency,
+//! throughput counters, and the shard4_over_shard1 throughput ratio.
+
+use std::collections::HashSet;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use openacm::bench::harness::{BenchJson, BenchResult};
+use openacm::coordinator::batcher::BatchPolicy;
+use openacm::coordinator::server::{Delivery, InferenceServer, Request, ServerConfig, SubmitError};
+use openacm::runtime::{fixture_logits, FixtureFactory};
+use openacm::util::proptest::{adversarial_workload, WorkloadSpec, ADVERSARIAL_PATTERNS};
+use openacm::util::rng::Pcg32;
+
+const MENU: [&str; 4] = ["appro42", "exact", "lm", "logour"];
+
+fn images(n: usize, seed: u64) -> Vec<Vec<u8>> {
+    let mut rng = Pcg32::new(seed);
+    (0..n)
+        .map(|_| (0..256).map(|_| (rng.next_u64() & 0x7f) as u8).collect())
+        .collect()
+}
+
+fn bits(logits: &[f32]) -> Vec<u32> {
+    logits.iter().map(|x| x.to_bits()).collect()
+}
+
+struct DriveStats {
+    result: BenchResult,
+    admitted: u64,
+    rejected: u64,
+    sheds: u64,
+    failed: u64,
+    rps: f64,
+}
+
+/// Replay the four adversarial patterns (n/4 requests each) through a
+/// `shards`-shard server at maximum pressure, retrying sheds so every
+/// well-formed request transits the pipeline exactly once.
+fn drive(shards: usize, n: usize) -> DriveStats {
+    let imgs = images(64, 0xBE9C);
+    // The reference set every delivery must bit-match.
+    let valid: HashSet<(String, Vec<u32>)> = MENU
+        .iter()
+        .flat_map(|v| {
+            imgs.iter()
+                .map(move |img| (v.to_string(), bits(&fixture_logits(v, img))))
+        })
+        .collect();
+    let server = InferenceServer::start_sharded(
+        Arc::new(FixtureFactory::new(&MENU, 32)),
+        ServerConfig {
+            shards,
+            policy: BatchPolicy {
+                max_batch: 32,
+                max_wait: Duration::from_micros(500),
+                slo: Duration::from_millis(100),
+                ..BatchPolicy::default()
+            },
+            queue_limit: 4096,
+        },
+    )
+    .expect("server boots");
+    let metrics = Arc::clone(&server.metrics);
+
+    let (tx, rx) = channel();
+    let drainer = std::thread::spawn(move || {
+        let mut ok = 0u64;
+        let mut failed = 0u64;
+        while let Ok(d) = rx.recv() {
+            match d {
+                Delivery::Ok(resp) => {
+                    assert!(
+                        valid.contains(&(resp.variant.clone(), bits(&resp.logits))),
+                        "delivered logits do not bit-match any (variant, image) reference"
+                    );
+                    ok += 1;
+                }
+                Delivery::Failed(_) => failed += 1,
+            }
+        }
+        (ok, failed)
+    });
+
+    let per_pattern = (n / ADVERSARIAL_PATTERNS.len()).max(1);
+    let mut admitted = 0u64;
+    let mut rejected = 0u64;
+    let mut sheds = 0u64;
+    let t0 = Instant::now();
+    for pattern in ADVERSARIAL_PATTERNS {
+        let spec = WorkloadSpec {
+            pattern,
+            n: per_pattern,
+            images: imgs.len(),
+            variants: MENU.len(),
+            ..WorkloadSpec::default()
+        };
+        for r in adversarial_workload(0x5E12 ^ shards as u64, &spec) {
+            let payload = match r.malformed {
+                Some(size) => vec![0u8; size],
+                None => imgs[r.image].clone(),
+            };
+            loop {
+                let req = Request::to_variant(payload.clone(), MENU[r.variant], tx.clone());
+                match server.submit(req) {
+                    Ok(()) => {
+                        admitted += 1;
+                        break;
+                    }
+                    Err(SubmitError::Shed { .. }) => {
+                        sheds += 1;
+                        std::thread::yield_now();
+                    }
+                    Err(SubmitError::Malformed(_)) => {
+                        assert!(r.malformed.is_some(), "well-formed payload bounced");
+                        rejected += 1;
+                        break;
+                    }
+                    Err(e) => panic!("unexpected submit error: {e}"),
+                }
+            }
+        }
+    }
+    drop(tx);
+    let (ok, failed) = drainer.join().expect("drainer");
+    let wall = t0.elapsed();
+
+    assert_eq!(ok + failed, admitted, "exactly one delivery per admitted request");
+    assert!(server.healthy(), "bench run must stay healthy");
+    let snap = metrics.snapshot();
+    assert_eq!(snap.completed, ok);
+    assert_eq!(snap.failed, failed);
+    server.shutdown();
+
+    let rps = admitted as f64 / wall.as_secs_f64();
+    DriveStats {
+        result: BenchResult {
+            name: format!("serve shards={shards} adversarial mix"),
+            iters: admitted as usize,
+            mean_ns: wall.as_nanos() as f64 / admitted as f64,
+            p50_ns: snap.p50_ms * 1e6,
+            p99_ns: snap.p99_ms * 1e6,
+            min_ns: 0.0,
+        },
+        admitted,
+        rejected,
+        sheds,
+        failed,
+        rps,
+    }
+}
+
+fn main() {
+    let smoke_env = std::env::var("OPENACM_SMOKE")
+        .map(|v| !v.is_empty() && v != "0" && !v.eq_ignore_ascii_case("false"))
+        .unwrap_or(false);
+    let smoke = smoke_env || std::env::args().any(|a| a == "--smoke");
+    let n = if smoke { 20_000 } else { 200_000 };
+    println!(
+        "sharded serving bench: {n} adversarial requests per config{}",
+        if smoke { " [smoke]" } else { "" }
+    );
+
+    let mut json = BenchJson::new("serving");
+    let mut rps_by_shards = Vec::new();
+    for shards in [1usize, 4] {
+        let s = drive(shards, n);
+        println!(
+            "shards={shards}: {} admitted ({} malformed rejected, {} sheds retried, \
+             {} failed) — {:.0} req/s, latency p50 {:.3} ms p99 {:.3} ms",
+            s.admitted,
+            s.rejected,
+            s.sheds,
+            s.failed,
+            s.rps,
+            s.result.p50_ns / 1e6,
+            s.result.p99_ns / 1e6
+        );
+        json.case(&s.result);
+        json.counter(&format!("shards{shards}.admitted"), s.admitted as f64);
+        json.counter(&format!("shards{shards}.rejected_malformed"), s.rejected as f64);
+        json.counter(&format!("shards{shards}.shed_retries"), s.sheds as f64);
+        json.counter(&format!("shards{shards}.failed"), s.failed as f64);
+        json.counter(&format!("shards{shards}.req_per_s"), s.rps);
+        rps_by_shards.push(s.rps);
+    }
+    let ratio = rps_by_shards[1] / rps_by_shards[0];
+    println!("→ shard scaling (4 over 1): {ratio:.2}x throughput");
+    json.ratio("shard4_over_shard1", ratio);
+
+    match json.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench json: {e}"),
+    }
+}

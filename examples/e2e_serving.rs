@@ -36,7 +36,7 @@ use std::time::{Duration, Instant};
 use openacm::bench::harness::{sci, Table};
 use openacm::config::spec::{MacroSpec, MultFamily};
 use openacm::coordinator::batcher::BatchPolicy;
-use openacm::coordinator::server::{InferenceServer, Request};
+use openacm::coordinator::server::{Delivery, InferenceServer, Request};
 use openacm::ppa::report::analyze_macro;
 use openacm::runtime::backend::select_backend;
 use openacm::runtime::{ArtifactStore, BackendChoice, BackendFactory};
@@ -64,6 +64,10 @@ fn main() -> Result<()> {
         BatchPolicy {
             max_batch: 32,
             max_wait: Duration::from_millis(2),
+            // This driver measures accuracy/energy, not SLO conformance —
+            // give requests a deadline they will never hit.
+            slo: Duration::from_secs(60),
+            ..BatchPolicy::default()
         },
         4096,
     )?;
@@ -76,20 +80,21 @@ fn main() -> Result<()> {
         let idx = i % workload.n_images;
         let variant = variants[i % variants.len()].clone();
         let (tx, rx) = channel();
-        server.submit(Request {
-            image: workload.image(idx).to_vec(),
-            variant: variant.clone(),
-            respond: tx,
-        })?;
+        server.submit(Request::to_variant(
+            workload.image(idx).to_vec(),
+            variant.clone(),
+            tx,
+        ))?;
         pending.push((idx, variant, rx));
     }
     let mut correct: BTreeMap<String, (usize, usize)> = BTreeMap::new();
     for (idx, variant, rx) in pending {
-        let resp = rx.recv()?;
         let e = correct.entry(variant).or_insert((0, 0));
         e.1 += 1;
-        if resp.predicted == workload.labels[idx] {
-            e.0 += 1;
+        if let Delivery::Ok(resp) = rx.recv()? {
+            if resp.predicted == workload.labels[idx] {
+                e.0 += 1;
+            }
         }
     }
     let wall = t0.elapsed();

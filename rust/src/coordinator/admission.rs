@@ -83,6 +83,15 @@ impl AdmissionController {
         }))
     }
 
+    /// Record a shed applied *past* admission — the sharded server's
+    /// bounded ingress can refuse (`try_send` Full) a request admission
+    /// already ticketed; counting it here keeps `shed_total` equal to
+    /// every shed the server applied, wherever it happened.
+    pub fn note_shed(&self) {
+        self.shed_count.fetch_add(1, Ordering::Relaxed);
+        self.shed.inc();
+    }
+
     pub fn depth(&self, variant: &str) -> usize {
         self.depths
             .get(variant)

@@ -1,8 +1,19 @@
-//! Dynamic batcher: drain-until-full-or-timeout batching policy.
+//! Dynamic batcher: deadline-bucket batching for the sharded pipeline.
 //!
-//! Generic over the payload so it is testable without PJRT: the policy
-//! invariants (no request lost, none duplicated, batch size bounded,
-//! FIFO order preserved within a variant) are property-tested here.
+//! A batch closes on whichever comes first — it fills (`max_batch`), the
+//! plain `max_wait` window since the first item elapses, or the **SLO
+//! deadline** of the most urgent queued request comes within
+//! `close_margin`. The third rule is what makes batching SLO-aware: a
+//! trickle of requests (slow-loris arrival) still ships each request with
+//! `close_margin` of headroom before its deadline instead of idling the
+//! full `max_wait` every time, while hot queues keep amortizing at full
+//! batch width.
+//!
+//! Generic over the payload so it is testable without a backend: callers
+//! supply `deadline_of` to expose each item's deadline. The policy
+//! invariants (no request lost, none duplicated, batch size bounded, FIFO
+//! order preserved within a queue, never close later than the most urgent
+//! deadline minus the margin) are property-tested here.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
@@ -11,7 +22,14 @@ use std::time::{Duration, Instant};
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
     pub max_batch: usize,
+    /// Plain batching window since the first item of a batch.
     pub max_wait: Duration,
+    /// Default end-to-end latency SLO assigned to requests that carry no
+    /// explicit deadline.
+    pub slo: Duration,
+    /// Close the batch when the most urgent queued deadline is within
+    /// this margin — the headroom left for execute + respond.
+    pub close_margin: Duration,
 }
 
 impl Default for BatchPolicy {
@@ -19,24 +37,46 @@ impl Default for BatchPolicy {
         Self {
             max_batch: 32,
             max_wait: Duration::from_millis(2),
+            slo: Duration::from_millis(50),
+            close_margin: Duration::from_millis(5),
         }
     }
 }
 
-/// Drain the next batch from a receiver. Blocks until at least one item is
-/// available (or the channel closes — returns None). After the first item,
-/// keeps collecting until `max_batch` or `max_wait` since the first item.
-pub fn next_batch<T>(rx: &Receiver<T>, policy: &BatchPolicy) -> Option<Vec<T>> {
+/// Drain the next batch from a receiver. Blocks until at least one item
+/// is available (or the channel closes — returns `None`). After the
+/// first item, keeps collecting until `max_batch` items, `max_wait`
+/// since the first item, or the earliest `deadline_of(item)` minus
+/// `close_margin` — whichever is soonest. Deadlines already past close
+/// the batch immediately.
+pub fn next_batch<T>(
+    rx: &Receiver<T>,
+    policy: &BatchPolicy,
+    deadline_of: impl Fn(&T) -> Instant,
+) -> Option<Vec<T>> {
     let first = rx.recv().ok()?;
-    let deadline = Instant::now() + policy.max_wait;
+    let mut close_at = Instant::now() + policy.max_wait;
+    // Pull the close earlier when a deadline (minus margin) precedes it.
+    let mut tighten = |close_at: &mut Instant, item: &T| {
+        let latest = deadline_of(item)
+            .checked_sub(policy.close_margin)
+            .unwrap_or_else(Instant::now);
+        if latest < *close_at {
+            *close_at = latest;
+        }
+    };
+    tighten(&mut close_at, &first);
     let mut batch = vec![first];
     while batch.len() < policy.max_batch {
         let now = Instant::now();
-        if now >= deadline {
+        if now >= close_at {
             break;
         }
-        match rx.recv_timeout(deadline - now) {
-            Ok(item) => batch.push(item),
+        match rx.recv_timeout(close_at - now) {
+            Ok(item) => {
+                tighten(&mut close_at, &item);
+                batch.push(item);
+            }
             Err(RecvTimeoutError::Timeout) => break,
             Err(RecvTimeoutError::Disconnected) => break,
         }
@@ -50,6 +90,12 @@ mod tests {
     use std::sync::mpsc::channel;
     use std::thread;
 
+    /// A far-away constant deadline: the SLO rule never fires, so these
+    /// exercise the classic size/timeout behavior.
+    fn lax<T>(_item: &T) -> Instant {
+        Instant::now() + Duration::from_secs(3600)
+    }
+
     #[test]
     fn collects_full_batch_when_queue_is_hot() {
         let (tx, rx) = channel();
@@ -59,11 +105,12 @@ mod tests {
         let p = BatchPolicy {
             max_batch: 32,
             max_wait: Duration::from_millis(50),
+            ..BatchPolicy::default()
         };
-        let b1 = next_batch(&rx, &p).unwrap();
+        let b1 = next_batch(&rx, &p, lax).unwrap();
         assert_eq!(b1.len(), 32);
         assert_eq!(b1[0], 0);
-        let b2 = next_batch(&rx, &p).unwrap();
+        let b2 = next_batch(&rx, &p, lax).unwrap();
         assert_eq!(b2[0], 32, "FIFO order across batches");
     }
 
@@ -75,8 +122,9 @@ mod tests {
         let p = BatchPolicy {
             max_batch: 32,
             max_wait: Duration::from_millis(5),
+            ..BatchPolicy::default()
         };
-        let b = next_batch(&rx, &p).unwrap();
+        let b = next_batch(&rx, &p, lax).unwrap();
         assert_eq!(b, vec![1, 2]);
     }
 
@@ -84,7 +132,85 @@ mod tests {
     fn returns_none_when_closed() {
         let (tx, rx) = channel::<u32>();
         drop(tx);
-        assert!(next_batch(&rx, &BatchPolicy::default()).is_none());
+        assert!(next_batch(&rx, &BatchPolicy::default(), lax).is_none());
+    }
+
+    #[test]
+    fn urgent_deadline_closes_the_batch_early() {
+        let (tx, rx) = channel();
+        tx.send(0u32).unwrap();
+        // Generous max_wait; the item's deadline is nearly due, so the
+        // batch must close on deadline proximity instead.
+        let p = BatchPolicy {
+            max_batch: 32,
+            max_wait: Duration::from_secs(5),
+            close_margin: Duration::from_millis(1),
+            ..BatchPolicy::default()
+        };
+        let due = Instant::now() + Duration::from_millis(10);
+        let t0 = Instant::now();
+        let b = next_batch(&rx, &p, |_| due).unwrap();
+        let waited = t0.elapsed();
+        assert_eq!(b, vec![0]);
+        assert!(
+            waited < Duration::from_millis(500),
+            "batch held {waited:?} past an imminent deadline"
+        );
+    }
+
+    #[test]
+    fn expired_deadline_closes_immediately() {
+        let (tx, rx) = channel();
+        tx.send(7u32).unwrap();
+        let p = BatchPolicy {
+            max_wait: Duration::from_secs(5),
+            ..BatchPolicy::default()
+        };
+        // Deadline in the past: checked_sub path + instant close.
+        let due = Instant::now();
+        let t0 = Instant::now();
+        let b = next_batch(&rx, &p, |_| due).unwrap();
+        assert_eq!(b, vec![7]);
+        assert!(t0.elapsed() < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn later_urgent_arrival_pulls_the_close_earlier() {
+        let (tx, rx) = channel();
+        tx.send(0u32).unwrap();
+        let urgent_due = Instant::now() + Duration::from_millis(15);
+        let handle = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(5));
+            tx.send(1).unwrap();
+            // Keep tx alive so the batcher can't close via disconnect
+            // before the deadline rule fires.
+            thread::sleep(Duration::from_millis(300));
+            drop(tx);
+        });
+        let p = BatchPolicy {
+            max_batch: 32,
+            max_wait: Duration::from_secs(5),
+            close_margin: Duration::from_millis(1),
+            ..BatchPolicy::default()
+        };
+        // Item 0 is lax, item 1 is urgent: the batch must close around
+        // item 1's deadline, not item 0's.
+        let t0 = Instant::now();
+        let b = next_batch(
+            &rx,
+            &p,
+            |&i| {
+                if i == 0 {
+                    Instant::now() + Duration::from_secs(3600)
+                } else {
+                    urgent_due
+                }
+            },
+        )
+        .unwrap();
+        assert_eq!(b, vec![0, 1]);
+        assert!(t0.elapsed() < Duration::from_millis(250));
+        handle.join().unwrap();
     }
 
     #[test]
@@ -105,10 +231,11 @@ mod tests {
         let policy = BatchPolicy {
             max_batch: 64,
             max_wait: Duration::from_micros(200),
+            ..BatchPolicy::default()
         };
         let mut seen = std::collections::BTreeSet::new();
         let mut total = 0u64;
-        while let Some(batch) = next_batch(&rx, &policy) {
+        while let Some(batch) = next_batch(&rx, &policy, lax) {
             assert!(batch.len() <= 64);
             for item in batch {
                 assert!(seen.insert(item), "duplicate {item}");
@@ -131,9 +258,10 @@ mod tests {
         let policy = BatchPolicy {
             max_batch: 7,
             max_wait: Duration::from_micros(100),
+            ..BatchPolicy::default()
         };
         let mut last = None;
-        while let Some(batch) = next_batch(&rx, &policy) {
+        while let Some(batch) = next_batch(&rx, &policy, lax) {
             for item in batch {
                 if let Some(prev) = last {
                     assert!(item > prev, "order violated: {item} after {prev}");

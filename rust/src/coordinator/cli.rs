@@ -1,6 +1,6 @@
-//! `openacm serve` — start the coordinator and drive it with a synthetic
-//! request stream (the standalone serving demo; the richer end-to-end
-//! driver is examples/e2e_serving.rs).
+//! `openacm serve` — start the sharded coordinator and drive it with a
+//! synthetic request stream (the standalone serving demo; the richer
+//! end-to-end driver is examples/e2e_serving.rs).
 //!
 //! Backend dispatch (`--backend native|pjrt|auto`, default `auto`):
 //! `pjrt` executes the AOT artifacts and therefore requires `make
@@ -10,16 +10,29 @@
 //! LUTs, labels = exact-variant predictions). `auto` picks `pjrt` when
 //! artifacts exist, `native` otherwise.
 //!
+//! Serving shape: `--shards N` coordinator shards behind consistent-hash
+//! routing, `--slo-ms` the end-to-end latency SLO that deadline-bucket
+//! batching closes against. `--classes gold,silver,…` drives part of the
+//! stream by accuracy class instead of explicit variant — the router
+//! picks the cheapest variant whose store-recorded calibration accuracy
+//! satisfies each class (exact fallback otherwise), and the decision
+//! table is printed at boot.
+//!
 //! `--plan FILE.acmplan` additionally serves a compiled heterogeneous
 //! plan (`openacm compile`) as the "plan" variant: native per-layer LUT
 //! dispatch, profile warm-started from the plan artifact itself.
+//!
+//! A worker panic during execute is never a silent hang: affected
+//! requests fail fast, the event lands in the obs error log, and the
+//! command exits non-zero.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 use std::path::Path;
 use std::time::Duration;
 
 use super::batcher::BatchPolicy;
-use super::server::InferenceServer;
+use super::router::AccuracyClass;
+use super::server::{InferenceServer, Route, ServerConfig};
 use super::warmstart::{plan_profile, warm_start_profiles};
 use crate::bench::harness::sci;
 use crate::compile::plan::CompiledPlan;
@@ -37,6 +50,8 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         .unwrap_or_else(ArtifactStore::default_dir);
     let n_requests = args.usize_or("requests", 256)?;
     let max_batch = args.usize_or("batch", 32)?;
+    let shards = args.usize_or("shards", 1)?;
+    let slo_ms = args.u64_or("slo-ms", 50)?;
     // Telemetry sink: structured events stream to <obs-dir>/events.jsonl;
     // `--metrics-every N` additionally prints + flushes a registry
     // snapshot every N driven requests (and once at the end either way).
@@ -51,6 +66,19 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     let policy = BatchPolicy {
         max_batch,
         max_wait: Duration::from_millis(args.u64_or("max-wait-ms", 2)?),
+        slo: Duration::from_millis(slo_ms.max(1)),
+        // Leave a tenth of the SLO (≥1 ms) as execute+respond headroom.
+        close_margin: Duration::from_millis((slo_ms / 10).max(1)),
+    };
+    // Accuracy-class menu: part of the drive stream routes by class when
+    // one is given (`--classes gold,silver,0.5%`).
+    let classes: Vec<AccuracyClass> = match args.get("classes") {
+        Some(spec) => spec
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(AccuracyClass::parse)
+            .collect::<Result<_>>()?,
+        None => Vec::new(),
     };
     let choice = BackendChoice::parse(args.str_or("backend", "auto"))?;
     let threads = ThreadPool::default_parallelism();
@@ -80,13 +108,22 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     )?;
 
     println!(
-        "starting coordinator: backend {}, {} variants, batch {} (capacity {})",
+        "starting coordinator: backend {}, {} shards, {} variants, batch {} (capacity {}), SLO {} ms",
         factory.backend_name(),
+        shards.max(1),
         factory.variants().len(),
         policy.max_batch,
-        factory.max_batch()
+        factory.max_batch(),
+        slo_ms
     );
-    let mut server = InferenceServer::start_with_backend(factory, policy, 4096)?;
+    let mut server = InferenceServer::start_sharded(
+        factory,
+        ServerConfig {
+            shards,
+            policy,
+            queue_limit: 4096,
+        },
+    )?;
 
     // Warm-start the serving tables from the design-point store: every
     // variant whose family an earlier DSE/PPA sweep characterized gets its
@@ -119,11 +156,14 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         if let Some(p) = server.profile(&v) {
             warmed += 1;
             println!(
-                "warm-start {v:>8}: family {:18} nmed {} energy/op {} ({} records)",
+                "warm-start {v:>8}: family {:18} nmed {} energy/op {} calib-drop {} ({} records)",
                 p.family,
                 p.nmed.map(sci).unwrap_or_else(|| "-".into()),
                 p.energy_per_op_j
                     .map(|e| format!("{} J", sci(e)))
+                    .unwrap_or_else(|| "-".into()),
+                p.calib_drop
+                    .map(|d| format!("{:.2}%", d * 100.0))
                     .unwrap_or_else(|| "-".into()),
                 p.records
             );
@@ -136,16 +176,53 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
             store_dir.display()
         );
     }
+    // Print the routing decision per requested class up front, so the
+    // accuracy→variant mapping is visible even before traffic.
+    for class in &classes {
+        match server.routing().select(class) {
+            Some(d) => println!(
+                "class {:>12} (drop ≤ {:.3}%): -> {}{}",
+                class.name,
+                class.max_drop * 100.0,
+                d.variant,
+                if d.fallback { " (exact fallback)" } else { "" }
+            ),
+            None => println!(
+                "class {:>12} (drop ≤ {:.3}%): unroutable (no satisfying variant, no exact)",
+                class.name,
+                class.max_drop * 100.0
+            ),
+        }
+    }
     let variants = server.variants();
 
-    // Drive: round-robin requests across variants from the workload.
+    // Drive: round-robin requests across variants from the workload; with
+    // an accuracy-class menu, every other request routes by class
+    // instead. Failed deliveries (e.g. an SLO deadline expiring under
+    // load) are counted, not fatal — worker health decides the exit code.
     let mut correct = 0usize;
+    let mut scored = 0usize;
+    let mut failed = 0usize;
     for i in 0..n_requests {
         let idx = i % workload.n_images;
-        let variant = &variants[i % variants.len()];
-        let resp = server.infer(workload.image(idx).to_vec(), variant)?;
-        if resp.predicted == workload.labels[idx] {
-            correct += 1;
+        let route = if !classes.is_empty() && i % 2 == 1 {
+            Route::Class(classes[(i / 2) % classes.len()].clone())
+        } else {
+            Route::Variant(variants[i % variants.len()].clone())
+        };
+        match server.infer_route(workload.image(idx).to_vec(), route, None) {
+            Ok(resp) => {
+                scored += 1;
+                if resp.predicted == workload.labels[idx] {
+                    correct += 1;
+                }
+            }
+            Err(e) => {
+                failed += 1;
+                if failed <= 3 {
+                    eprintln!("request {i} failed: {e:#}");
+                }
+            }
         }
         if metrics_every > 0 && (i + 1) % metrics_every == 0 {
             let s = server.metrics.snapshot();
@@ -165,9 +242,19 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     }
     let snap = server.metrics.snapshot();
     println!(
-        "completed {} requests ({} correct): p50 {:.2} ms p90 {:.2} ms p99 {:.2} ms, {:.0} req/s, mean batch {:.1}",
-        snap.completed, correct, snap.p50_ms, snap.p90_ms, snap.p99_ms, snap.throughput_rps, snap.mean_batch
+        "completed {} requests ({} correct of {} scored, {} failed): p50 {:.2} ms p90 {:.2} ms \
+         p99 {:.2} ms, {:.0} req/s, mean batch {:.1}",
+        snap.completed,
+        correct,
+        scored,
+        failed,
+        snap.p50_ms,
+        snap.p90_ms,
+        snap.p99_ms,
+        snap.throughput_rps,
+        snap.mean_batch
     );
+    let health = server.failure();
     server.shutdown();
     crate::obs::info(
         "serve",
@@ -175,11 +262,16 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         &[
             ("requests", snap.completed.to_string()),
             ("correct", correct.to_string()),
+            ("failed", snap.failed.to_string()),
         ],
     );
     match crate::obs::flush(&obs_dir) {
         Ok(path) => println!("telemetry snapshot: {} (openacm obs snapshot)", path.display()),
         Err(e) => eprintln!("could not flush telemetry snapshot: {e:#}"),
+    }
+    // A panicked worker must surface as a failed run, never a clean exit.
+    if let Some(msg) = health {
+        bail!("serving degraded: {msg}");
     }
     Ok(())
 }

@@ -34,6 +34,7 @@ pub struct ServerMetrics {
     batches: AtomicU64,
     batched_requests: AtomicU64,
     completed: AtomicU64,
+    failed: AtomicU64,
     /// Throughput anchor: set by the first `record_batch`, not at
     /// construction.
     first_record: OnceLock<Instant>,
@@ -42,12 +43,16 @@ pub struct ServerMetrics {
     g_batch_size: Histogram,
     g_batches: Counter,
     g_completed: Counter,
+    g_failed: Counter,
 }
 
 /// Snapshot for reporting.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct MetricsSnapshot {
     pub completed: u64,
+    /// Admitted requests that ended in a [`crate::coordinator::Delivery::Failed`]
+    /// (deadline expired / execute error / worker panic).
+    pub failed: u64,
     pub p50_ms: f64,
     pub p90_ms: f64,
     pub p99_ms: f64,
@@ -69,12 +74,25 @@ impl ServerMetrics {
             batches: AtomicU64::new(0),
             batched_requests: AtomicU64::new(0),
             completed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
             first_record: OnceLock::new(),
             g_latency_us: crate::obs::histogram("serve.latency_us"),
             g_batch_size: crate::obs::histogram("serve.batch_size"),
             g_batches: crate::obs::counter("serve.batches"),
             g_completed: crate::obs::counter("serve.requests_completed"),
+            g_failed: crate::obs::counter("serve.requests_failed"),
         }
+    }
+
+    /// Count admitted requests that terminated in a failure delivery.
+    pub fn record_failed(&self, n: usize) {
+        self.first_record.get_or_init(Instant::now);
+        self.failed.fetch_add(n as u64, Ordering::Relaxed);
+        self.g_failed.add(n as u64);
+    }
+
+    pub fn failed_total(&self) -> u64 {
+        self.failed.load(Ordering::Relaxed)
     }
 
     pub fn record_batch(&self, batch_size: usize, latencies_us: &[f64]) {
@@ -97,8 +115,12 @@ impl ServerMetrics {
 
     pub fn snapshot(&self) -> MetricsSnapshot {
         let h = self.latency_us.snapshot();
+        let failed = self.failed.load(Ordering::Relaxed);
         if h.count == 0 {
-            return MetricsSnapshot::default();
+            return MetricsSnapshot {
+                failed,
+                ..MetricsSnapshot::default()
+            };
         }
         let secs = self
             .first_record
@@ -110,6 +132,7 @@ impl ServerMetrics {
         let batches = self.batches.load(Ordering::Relaxed).max(1);
         MetricsSnapshot {
             completed,
+            failed,
             p50_ms: h.percentile(50.0) as f64 / 1e3,
             p90_ms: h.percentile(90.0) as f64 / 1e3,
             p99_ms: h.percentile(99.0) as f64 / 1e3,
@@ -141,6 +164,20 @@ mod tests {
         assert!(s.p50_ms >= 1.0 && s.p50_ms <= 6.0);
         assert!(s.p99_ms >= s.p50_ms);
         assert!(s.throughput_rps > 0.0);
+    }
+
+    #[test]
+    fn failed_requests_are_counted_separately_from_completed() {
+        let m = ServerMetrics::new();
+        m.record_failed(3);
+        let s = m.snapshot();
+        assert_eq!(s.failed, 3, "failures visible even with no completions");
+        assert_eq!(s.completed, 0);
+        m.record_batch(2, &[100.0, 100.0]);
+        let s = m.snapshot();
+        assert_eq!(s.failed, 3);
+        assert_eq!(s.completed, 2);
+        assert_eq!(m.failed_total(), 3);
     }
 
     #[test]

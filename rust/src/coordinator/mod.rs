@@ -1,34 +1,51 @@
-//! Inference coordinator (Layer 3 serving path): a threaded request
-//! router + dynamic batcher executing through a pluggable
-//! [`crate::runtime::Backend`] — the AOT-compiled quantized-CNN graph via
-//! PJRT, or the batched Rust-native quantized CNN with zero artifacts.
-//! Python is never on this path.
+//! Inference coordinator (Layer 3 serving path): a **sharded**, SLO-aware
+//! request router + deadline-bucket dynamic batcher executing through a
+//! pluggable [`crate::runtime::Backend`] — the AOT-compiled quantized-CNN
+//! graph via PJRT, or the batched Rust-native quantized CNN with zero
+//! artifacts. Python is never on this path.
 //!
-//! Design (vllm-router-like, scaled to this workload):
+//! Design (vllm-router-like, scaled to this workload; full stage diagram
+//! in DESIGN.md §"Sharded serving"):
 //!
-//! * clients submit single-image classification requests tagged with a
-//!   multiplier *variant* (exact / appro42 / logour / lm);
-//! * the router keeps one dynamic batcher per variant; a batcher drains its
-//!   queue until `batch` requests or `max_wait` elapses and hands the whole
-//!   batch to its backend (`infer_batch`), then completes each request with
-//!   its logits;
-//! * each batcher worker owns its backend instance, built on the worker
+//! * clients submit single-image classification requests routed either by
+//!   multiplier *variant* (exact / appro42 / logour / lm / plan) or by an
+//!   [`router::AccuracyClass`] — the router picks the cheapest variant
+//!   whose store-measured calibration accuracy satisfies the class,
+//!   falling back to exact ([`router::RoutingTable`]);
+//! * requests spread across N coordinator shards by consistent hashing of
+//!   the payload ([`router::HashRing`]); within a shard each variant runs
+//!   admission → batching → execute → respond as decoupled stages over
+//!   **bounded** channels ([`pipeline`]) — overload becomes backpressure
+//!   and typed sheds, never unbounded queues;
+//! * the batcher closes batches on size, window, **or SLO-deadline
+//!   proximity** ([`batcher::next_batch`]); requests whose deadline
+//!   expired in queue fail fast with
+//!   [`server::FailReason::DeadlineExpired`];
+//! * each executor owns its backend instance, built on the executor
 //!   thread by a [`crate::runtime::BackendFactory`] (PJRT executables are
-//!   per-thread; on the PJRT path all variants share one *graph* — the LUT
-//!   is a runtime operand, so switching precision never recompiles);
-//! * metrics: per-request latency (enqueue→response) percentiles and
-//!   aggregate throughput, plus the per-inference energy estimate from the
-//!   PPA engine (the paper's accuracy-energy headline, measured end to
-//!   end in examples/e2e_serving.rs).
+//!   per-thread; on the PJRT path all variants share one *graph* — the
+//!   LUT is a runtime operand, so switching precision never recompiles);
+//!   executor panics are caught, poisoning only that worker and failing
+//!   its batches while [`pipeline::Health`] turns the run's exit non-zero;
+//! * metrics: per-request latency (enqueue→response) percentiles,
+//!   aggregate throughput, and exact accounting — every submitted request
+//!   is delivered, shed, or failed, and the three sum to submissions
+//!   (property-tested in rust/tests/serving_shard.rs).
 
 pub mod admission;
 pub mod batcher;
-pub mod server;
-pub mod metrics;
-pub mod warmstart;
 pub mod cli;
+pub mod metrics;
+pub mod pipeline;
+pub mod router;
+pub mod server;
+pub mod warmstart;
 
 pub use admission::{Admission, AdmissionController};
 pub use metrics::ServerMetrics;
-pub use server::{InferenceServer, Request, Response};
+pub use pipeline::Health;
+pub use router::{AccuracyClass, HashRing, RouteDecision, RouteEntry, RoutingTable};
+pub use server::{
+    Delivery, FailReason, InferenceServer, Request, Response, Route, ServerConfig, SubmitError,
+};
 pub use warmstart::{plan_profile, profile_for_variant, warm_start_profiles, VariantProfile};

@@ -1,0 +1,452 @@
+//! Per-shard serving pipeline: admission → batching → execute → respond
+//! as decoupled stages over **bounded** channels.
+//!
+//! ```text
+//!  submit ──try_send──▶ ingress (cap = queue_limit, per variant)
+//!                          │  batcher thread: deadline-bucket next_batch
+//!                          ▼
+//!                       execute queue (cap = 2 batches)
+//!                          │  executor thread: owns the Backend,
+//!                          │  catch_unwind around infer_batch
+//!                          ▼
+//!                       finished queue (cap = 8, shared per shard)
+//!                          │  responder thread: metrics + delivery
+//!                          ▼
+//!                       respond channels (one per request)
+//! ```
+//!
+//! Every stage boundary is a `sync_channel`, so overload turns into
+//! backpressure and ultimately a shed at `submit` (`try_send` Full) —
+//! never an unbounded queue. Shutdown is a channel-close cascade: dropping
+//! the ingress senders lets the batcher drain what is already queued, the
+//! executor finishes the batches in flight, and the responder delivers
+//! everything before its receiver disconnects — in-flight work is drained,
+//! not dropped.
+//!
+//! Failure is a first-class outcome: a deadline that expires in queue, a
+//! backend error, or a worker panic each produce a [`Delivery::Failed`]
+//! for every affected request (exactly one delivery per admitted request,
+//! which is what makes `submitted == delivered + shed + failed` hold). A
+//! panic additionally poisons the executor — subsequent batches fail fast
+//! instead of re-entering a possibly corrupt backend — and reports to
+//! [`Health`], which `openacm serve` maps to a non-zero exit.
+
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::admission::Ticket;
+use super::batcher::{next_batch, BatchPolicy};
+use super::metrics::ServerMetrics;
+use super::server::{Delivery, FailReason, Response};
+use crate::nn::eval::argmax;
+use crate::runtime::{Backend, BackendFactory};
+
+/// A request admitted into a shard: payload + delivery channel + the
+/// deadline the batcher buckets on. The admission [`Ticket`] rides along
+/// and releases its slot when the request leaves the pipeline (drop).
+pub(crate) struct QueuedRequest {
+    pub image: Vec<u8>,
+    pub respond: Sender<Delivery>,
+    pub enqueued: Instant,
+    pub deadline: Instant,
+    pub _ticket: Ticket,
+}
+
+/// A batch leaving the execute stage, bound for the responder.
+enum Finished {
+    Executed {
+        variant: String,
+        batch: Vec<QueuedRequest>,
+        rows: Vec<Vec<f32>>,
+    },
+    Failed {
+        batch: Vec<QueuedRequest>,
+        reason: FailReason,
+    },
+}
+
+type FinishedTx = SyncSender<Finished>;
+
+/// Worker-failure flag shared by every executor of a server. First
+/// failure wins; `openacm serve` checks it after the drive loop and exits
+/// non-zero — a panicked worker must never look like a healthy run.
+#[derive(Debug, Default)]
+pub struct Health {
+    failure: Mutex<Option<String>>,
+}
+
+impl Health {
+    pub fn report(&self, msg: impl Into<String>) {
+        let mut slot = match self.failure.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        if slot.is_none() {
+            *slot = Some(msg.into());
+        }
+    }
+
+    pub fn failure(&self) -> Option<String> {
+        match self.failure.lock() {
+            Ok(g) => g.clone(),
+            Err(poisoned) => poisoned.into_inner().clone(),
+        }
+    }
+
+    pub fn healthy(&self) -> bool {
+        self.failure().is_none()
+    }
+}
+
+/// Everything one shard needs to stand up its stage threads.
+pub(crate) struct ShardCtx {
+    pub shard: usize,
+    pub factory: Arc<dyn BackendFactory>,
+    pub variants: Vec<String>,
+    pub policy: BatchPolicy,
+    pub queue_limit: usize,
+    pub metrics: Arc<ServerMetrics>,
+    pub health: Arc<Health>,
+    /// Backend-construction reports (one per variant) so the server can
+    /// boot all-or-nothing.
+    pub ready: Sender<std::result::Result<(), String>>,
+}
+
+/// One shard's running stages: the per-variant ingress senders plus every
+/// stage thread, joined on shutdown.
+pub(crate) struct ShardPipeline {
+    pub ingress: BTreeMap<String, SyncSender<QueuedRequest>>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl ShardPipeline {
+    /// Graceful shutdown: close the ingress, let the close cascade drain
+    /// every stage, then join.
+    pub fn shutdown(mut self) {
+        self.ingress.clear();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Batches in flight between a batcher and its executor: enough to keep
+/// the executor busy while the next batch forms, small enough that
+/// backpressure reaches the ingress quickly.
+const EXEC_QUEUE_BATCHES: usize = 2;
+/// Finished batches queued for a shard's responder.
+const FINISHED_QUEUE_BATCHES: usize = 8;
+
+pub(crate) fn spawn_shard(ctx: ShardCtx) -> Result<ShardPipeline> {
+    let (fin_tx, fin_rx) = sync_channel::<Finished>(FINISHED_QUEUE_BATCHES);
+    let mut ingress = BTreeMap::new();
+    let mut threads = Vec::new();
+    for variant in &ctx.variants {
+        let (in_tx, in_rx) = sync_channel::<QueuedRequest>(ctx.queue_limit.max(1));
+        ingress.insert(variant.clone(), in_tx);
+        let (ex_tx, ex_rx) = sync_channel::<Vec<QueuedRequest>>(EXEC_QUEUE_BATCHES);
+        // Never form more than one backend execution's worth.
+        let policy = BatchPolicy {
+            max_batch: ctx.policy.max_batch.min(ctx.factory.max_batch()).max(1),
+            ..ctx.policy
+        };
+        threads.push(spawn_batcher(
+            ctx.shard,
+            variant.clone(),
+            in_rx,
+            ex_tx,
+            fin_tx.clone(),
+            policy,
+        )?);
+        threads.push(spawn_executor(
+            &ctx,
+            variant.clone(),
+            ex_rx,
+            fin_tx.clone(),
+        )?);
+    }
+    // The responder must see disconnect once batchers + executors exit.
+    drop(fin_tx);
+    threads.push(spawn_responder(
+        ctx.shard,
+        fin_rx,
+        Arc::clone(&ctx.metrics),
+    )?);
+    Ok(ShardPipeline { ingress, threads })
+}
+
+/// Stage 2: deadline-bucket batching. Pulls from the bounded ingress,
+/// closes batches per [`next_batch`]'s SLO rules, fails what already
+/// expired in queue, and hands live batches to the executor (blocking —
+/// that is the backpressure).
+fn spawn_batcher(
+    shard: usize,
+    variant: String,
+    rx: Receiver<QueuedRequest>,
+    exec: SyncSender<Vec<QueuedRequest>>,
+    finished: FinishedTx,
+    policy: BatchPolicy,
+) -> Result<JoinHandle<()>> {
+    std::thread::Builder::new()
+        .name(format!("batch-{shard}-{variant}"))
+        .spawn(move || {
+            let queue_wait = crate::obs::histogram("serve.queue_wait_us");
+            let slack = crate::obs::histogram("serve.deadline_slack_us");
+            let expired = crate::obs::counter("serve.deadline_expired");
+            while let Some(batch) = next_batch(&rx, &policy, |q: &QueuedRequest| q.deadline) {
+                let now = Instant::now();
+                let mut live = Vec::with_capacity(batch.len());
+                let mut dead = Vec::new();
+                for q in batch {
+                    queue_wait.record(q.enqueued.elapsed().as_micros() as u64);
+                    if q.deadline <= now {
+                        dead.push(q);
+                    } else {
+                        slack.record(q.deadline.saturating_duration_since(now).as_micros() as u64);
+                        live.push(q);
+                    }
+                }
+                if !dead.is_empty() {
+                    expired.add(dead.len() as u64);
+                    forward(
+                        &finished,
+                        Finished::Failed {
+                            batch: dead,
+                            reason: FailReason::DeadlineExpired,
+                        },
+                    );
+                }
+                if live.is_empty() {
+                    continue;
+                }
+                if let Err(err) = exec.send(live) {
+                    // Executor gone (failed boot / poisoned shutdown):
+                    // the batch must still be delivered, as failures.
+                    forward(
+                        &finished,
+                        Finished::Failed {
+                            batch: err.0,
+                            reason: FailReason::WorkerPanicked,
+                        },
+                    );
+                }
+            }
+        })
+        .context("spawning batcher thread")
+}
+
+/// Stage 3: execution. Owns the backend (built on this thread — PJRT
+/// executables are per-thread, the native backend keeps per-worker
+/// scratch); every `infer_batch` runs under `catch_unwind`, so a panic
+/// fails the batch and poisons the worker instead of hanging the server.
+fn spawn_executor(
+    ctx: &ShardCtx,
+    variant: String,
+    rx: Receiver<Vec<QueuedRequest>>,
+    finished: FinishedTx,
+) -> Result<JoinHandle<()>> {
+    let factory = Arc::clone(&ctx.factory);
+    let health = Arc::clone(&ctx.health);
+    let ready = ctx.ready.clone();
+    let shard = ctx.shard;
+    std::thread::Builder::new()
+        .name(format!("exec-{shard}-{variant}"))
+        .spawn(move || {
+            let mut backend: Box<dyn Backend> = match factory.create(&variant) {
+                Ok(b) => {
+                    // Boot may already have failed on a sibling; a closed
+                    // channel is fine to ignore.
+                    let _ = ready.send(Ok(()));
+                    b
+                }
+                Err(e) => {
+                    let _ = ready.send(Err(format!("{variant}: {e:#}")));
+                    return;
+                }
+            };
+            drop(ready);
+            let execute_failures = crate::obs::counter("serve.execute_failures");
+            let mut poisoned = false;
+            while let Ok(batch) = rx.recv() {
+                if poisoned {
+                    forward(
+                        &finished,
+                        Finished::Failed {
+                            batch,
+                            reason: FailReason::WorkerPanicked,
+                        },
+                    );
+                    continue;
+                }
+                let result = {
+                    let _execute = crate::obs::span("execute");
+                    let images: Vec<&[u8]> = batch.iter().map(|q| q.image.as_slice()).collect();
+                    catch_unwind(AssertUnwindSafe(|| backend.infer_batch(&images)))
+                };
+                let msg = match result {
+                    Ok(Ok(rows)) if rows.len() == batch.len() => Finished::Executed {
+                        variant: variant.clone(),
+                        batch,
+                        rows,
+                    },
+                    Ok(Ok(rows)) => {
+                        crate::obs::error(
+                            "serve",
+                            "backend returned a short batch",
+                            &[
+                                ("variant", variant.clone()),
+                                ("rows", rows.len().to_string()),
+                                ("batch", batch.len().to_string()),
+                            ],
+                        );
+                        execute_failures.inc();
+                        Finished::Failed {
+                            batch,
+                            reason: FailReason::ExecuteFailed(format!(
+                                "backend returned {} rows for a batch of {}",
+                                rows.len(),
+                                batch.len()
+                            )),
+                        }
+                    }
+                    Ok(Err(e)) => {
+                        crate::obs::error(
+                            "serve",
+                            "execute failed",
+                            &[("variant", variant.clone()), ("error", format!("{e:#}"))],
+                        );
+                        execute_failures.inc();
+                        Finished::Failed {
+                            batch,
+                            reason: FailReason::ExecuteFailed(format!("{e:#}")),
+                        }
+                    }
+                    Err(panic) => {
+                        let what = panic_message(panic.as_ref());
+                        crate::obs::error(
+                            "serve",
+                            "worker panicked during execute",
+                            &[
+                                ("shard", shard.to_string()),
+                                ("variant", variant.clone()),
+                                ("panic", what.clone()),
+                            ],
+                        );
+                        execute_failures.inc();
+                        health.report(format!(
+                            "shard {shard} variant {variant} worker panicked: {what}"
+                        ));
+                        poisoned = true;
+                        Finished::Failed {
+                            batch,
+                            reason: FailReason::WorkerPanicked,
+                        }
+                    }
+                };
+                forward(&finished, msg);
+            }
+        })
+        .context("spawning executor thread")
+}
+
+/// Stage 4: the shard's single responder — metrics, delivery counters and
+/// the per-request `Delivery` sends, off the executor's critical path.
+fn spawn_responder(
+    shard: usize,
+    rx: Receiver<Finished>,
+    metrics: Arc<ServerMetrics>,
+) -> Result<JoinHandle<()>> {
+    std::thread::Builder::new()
+        .name(format!("respond-{shard}"))
+        .spawn(move || {
+            let shard_delivered = crate::obs::counter(&format!("serve.shard{shard}.delivered"));
+            let shard_failed = crate::obs::counter(&format!("serve.shard{shard}.failed"));
+            let delivered = crate::obs::counter("serve.responses_delivered");
+            let fail_expired = crate::obs::counter("serve.failed.deadline_expired");
+            let fail_execute = crate::obs::counter("serve.failed.execute");
+            let fail_panic = crate::obs::counter("serve.failed.worker_panic");
+            while let Ok(msg) = rx.recv() {
+                let _respond = crate::obs::span("respond");
+                match msg {
+                    Finished::Executed {
+                        variant,
+                        batch,
+                        rows,
+                    } => {
+                        // Record metrics BEFORE completing the requests so
+                        // a caller that snapshots right after the last
+                        // response sees every batch counted.
+                        let lats: Vec<f64> = batch
+                            .iter()
+                            .map(|q| q.enqueued.elapsed().as_micros() as f64)
+                            .collect();
+                        metrics.record_batch(batch.len(), &lats);
+                        delivered.add(batch.len() as u64);
+                        shard_delivered.add(batch.len() as u64);
+                        deliver_rows(variant, batch, rows);
+                    }
+                    Finished::Failed { batch, reason } => {
+                        let n = batch.len() as u64;
+                        metrics.record_failed(batch.len());
+                        shard_failed.add(n);
+                        match &reason {
+                            FailReason::DeadlineExpired => fail_expired.add(n),
+                            FailReason::ExecuteFailed(_) => fail_execute.add(n),
+                            FailReason::WorkerPanicked => fail_panic.add(n),
+                        }
+                        for q in batch {
+                            let _ = q.respond.send(Delivery::Failed(reason.clone()));
+                        }
+                    }
+                }
+            }
+        })
+        .context("spawning responder thread")
+}
+
+/// Hand a finished batch to the responder; if the responder is already
+/// gone (shutdown tail, boot teardown), deliver directly — an admitted
+/// request gets exactly one delivery on every path.
+fn forward(finished: &FinishedTx, msg: Finished) {
+    if let Err(err) = finished.send(msg) {
+        match err.0 {
+            Finished::Executed {
+                variant,
+                batch,
+                rows,
+            } => deliver_rows(variant, batch, rows),
+            Finished::Failed { batch, reason } => {
+                for q in batch {
+                    let _ = q.respond.send(Delivery::Failed(reason.clone()));
+                }
+            }
+        }
+    }
+}
+
+fn deliver_rows(variant: String, batch: Vec<QueuedRequest>, rows: Vec<Vec<f32>>) {
+    for (q, logits) in batch.into_iter().zip(rows) {
+        let predicted = argmax(&logits);
+        // Receiver may have gone away; ignore.
+        let _ = q.respond.send(Delivery::Ok(Response {
+            logits,
+            predicted,
+            variant: variant.clone(),
+        }));
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}

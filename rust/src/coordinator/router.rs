@@ -1,0 +1,380 @@
+//! Request routing for the sharded serving layer: accuracy-class →
+//! cheapest-satisfying-variant selection, and a consistent-hash ring
+//! spreading requests across coordinator shards.
+//!
+//! ## Accuracy-class routing rules
+//!
+//! A request may name its serving variant explicitly (the historical wire
+//! format) or carry an [`AccuracyClass`] — a maximum acceptable top-1 drop
+//! vs the all-exact baseline. The [`RoutingTable`] holds one entry per
+//! servable variant whose calibration accuracy the design-point store (or
+//! a compiled plan artifact) has measured, ordered cheapest-first by
+//! energy per multiply. Selection is:
+//!
+//! 1. the **cheapest** entry with `drop_vs_exact <= class.max_drop` wins;
+//! 2. if no measured entry satisfies the class, the router **falls back to
+//!    exact** (drop 0 by definition) and flags the decision, so the
+//!    `serve.route.fallback_exact` counter exposes classes the current
+//!    variant menu cannot serve cheaply;
+//! 3. ties break by variant name, so decisions are deterministic for any
+//!    table construction order.
+//!
+//! The accuracy column comes from the same `"compile-accuracy/1"` store
+//! records the compile pass persists (uniform per-family assignments), or
+//! from the `.acmplan` artifact for compiled-plan variants — see
+//! [`super::warmstart`]. The energy column is the PPA engine's J/op.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+use super::warmstart::{profile_for_variant, VariantProfile};
+use crate::store::key::checksum64;
+
+/// The accuracy constraint a request carries: the largest top-1 drop vs
+/// the all-exact baseline the caller will accept, as a fraction.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AccuracyClass {
+    /// Class label (metrics, logs); named tiers keep their tier name.
+    pub name: String,
+    /// Maximum acceptable top-1 drop vs exact, in [0, 1].
+    pub max_drop: f64,
+}
+
+impl AccuracyClass {
+    pub fn new(name: impl Into<String>, max_drop: f64) -> AccuracyClass {
+        AccuracyClass {
+            name: name.into(),
+            max_drop,
+        }
+    }
+
+    /// Parse a class from the wire/CLI form: a named tier (`exact`,
+    /// `gold`, `silver`, `bronze`, `best-effort`) or an explicit drop
+    /// budget — a fraction (`0.01`) or a percentage (`1%`).
+    pub fn parse(s: &str) -> Result<AccuracyClass> {
+        let tier = |name: &str, d: f64| Ok(AccuracyClass::new(name, d));
+        match s {
+            "exact" => return tier("exact", 0.0),
+            "gold" => return tier("gold", 0.001),
+            "silver" => return tier("silver", 0.005),
+            "bronze" => return tier("bronze", 0.02),
+            "best-effort" => return tier("best-effort", 1.0),
+            _ => {}
+        }
+        let (num, scale) = match s.strip_suffix('%') {
+            Some(pct) => (pct, 0.01),
+            None => (s, 1.0),
+        };
+        let drop: f64 = match num.parse::<f64>() {
+            Ok(v) => v * scale,
+            Err(_) => bail!(
+                "unknown accuracy class {s:?} (expected exact|gold|silver|bronze|best-effort, \
+                 a fraction like 0.01, or a percentage like 1%)"
+            ),
+        };
+        if !(0.0..=1.0).contains(&drop) {
+            bail!("accuracy-class drop budget {drop} outside [0, 1]");
+        }
+        Ok(AccuracyClass::new(format!("drop<={s}"), drop))
+    }
+}
+
+/// One variant the class router may select.
+#[derive(Clone, Debug)]
+pub struct RouteEntry {
+    /// Serving variant (route key), e.g. `logour` or `plan`.
+    pub variant: String,
+    /// Measured calibration top-1 drop vs the all-exact baseline.
+    pub drop_vs_exact: f64,
+    /// Energy per multiply, J — the cost being minimized. Variants with
+    /// no PPA characterization rank last (`f64::INFINITY`).
+    pub energy_per_op_j: f64,
+}
+
+/// The outcome of routing one accuracy class.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RouteDecision {
+    pub variant: String,
+    /// No measured variant satisfied the class; `variant` is the exact
+    /// fallback.
+    pub fallback: bool,
+}
+
+/// Cheapest-first table of accuracy-characterized serving variants.
+#[derive(Clone, Debug, Default)]
+pub struct RoutingTable {
+    entries: Vec<RouteEntry>,
+    exact: Option<String>,
+}
+
+impl RoutingTable {
+    /// Build from explicit entries (tests and custom deployments).
+    /// `exact` is the fallback variant; entries are re-sorted
+    /// cheapest-first with deterministic name tie-breaks.
+    pub fn new(mut entries: Vec<RouteEntry>, exact: Option<String>) -> RoutingTable {
+        entries.sort_by(|a, b| {
+            a.energy_per_op_j
+                .total_cmp(&b.energy_per_op_j)
+                .then_with(|| a.variant.cmp(&b.variant))
+        });
+        RoutingTable { entries, exact }
+    }
+
+    /// Assemble the table for the servable `variants` from warm-started
+    /// profiles: a variant participates when its profile carries a
+    /// measured calibration drop ([`VariantProfile::calib_drop`]); the
+    /// variant literally named `exact` is the fallback and always
+    /// participates with drop 0.
+    pub fn from_profiles(
+        profiles: &BTreeMap<String, VariantProfile>,
+        variants: &[String],
+    ) -> RoutingTable {
+        let mut entries = Vec::new();
+        let mut exact = None;
+        for v in variants {
+            let profile = profile_for_variant(profiles, v);
+            let energy = profile
+                .and_then(|p| p.energy_per_op_j)
+                .unwrap_or(f64::INFINITY);
+            let drop = if v == "exact" {
+                exact = Some(v.clone());
+                Some(0.0)
+            } else {
+                profile.and_then(|p| p.calib_drop)
+            };
+            if let Some(drop) = drop {
+                entries.push(RouteEntry {
+                    variant: v.clone(),
+                    drop_vs_exact: drop,
+                    energy_per_op_j: energy,
+                });
+            }
+        }
+        RoutingTable::new(entries, exact)
+    }
+
+    /// Route one class: cheapest satisfying entry, else the exact
+    /// fallback, else `None` (nothing servable for this class).
+    pub fn select(&self, class: &AccuracyClass) -> Option<RouteDecision> {
+        for e in &self.entries {
+            if e.drop_vs_exact <= class.max_drop {
+                return Some(RouteDecision {
+                    variant: e.variant.clone(),
+                    fallback: false,
+                });
+            }
+        }
+        self.exact.as_ref().map(|v| RouteDecision {
+            variant: v.clone(),
+            fallback: true,
+        })
+    }
+
+    /// Entries, cheapest first (reporting and table-driven tests).
+    pub fn entries(&self) -> &[RouteEntry] {
+        &self.entries
+    }
+
+    /// The exact fallback variant, when one is being served.
+    pub fn exact_fallback(&self) -> Option<&str> {
+        self.exact.as_deref()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Consistent-hash shard ring
+// ---------------------------------------------------------------------------
+
+/// Virtual nodes per shard: enough that a 64-point-per-shard ring spreads
+/// keys within a few percent of uniform.
+pub const VNODES_PER_SHARD: usize = 64;
+
+/// Consistent-hash ring over coordinator shards. Each shard owns
+/// [`VNODES_PER_SHARD`] points; a request key maps to the first point at
+/// or after it (wrapping). Deterministic: the same key always lands on
+/// the same shard for a given shard count, and growing the ring moves
+/// only the keys the new shard's points capture.
+#[derive(Clone, Debug)]
+pub struct HashRing {
+    /// (point hash, shard index), sorted by hash.
+    points: Vec<(u64, u32)>,
+    shards: usize,
+}
+
+impl HashRing {
+    pub fn new(shards: usize) -> HashRing {
+        let shards = shards.max(1);
+        let mut points = Vec::with_capacity(shards * VNODES_PER_SHARD);
+        for s in 0..shards {
+            for v in 0..VNODES_PER_SHARD {
+                let h = checksum64(format!("shard-{s}/vnode-{v}").as_bytes());
+                points.push((h, s as u32));
+            }
+        }
+        points.sort_unstable();
+        HashRing { points, shards }
+    }
+
+    /// The routing key of a request payload.
+    pub fn key_for(image: &[u8]) -> u64 {
+        checksum64(image)
+    }
+
+    /// Map a key onto a shard index.
+    pub fn shard_for(&self, key: u64) -> usize {
+        let i = self.points.partition_point(|&(h, _)| h < key);
+        let (_, shard) = self.points[if i == self.points.len() { 0 } else { i }];
+        shard as usize
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> RoutingTable {
+        // exact: drop 0, most expensive; three approximations with
+        // increasing drops and decreasing energy.
+        RoutingTable::new(
+            vec![
+                RouteEntry {
+                    variant: "exact".into(),
+                    drop_vs_exact: 0.0,
+                    energy_per_op_j: 2.5e-12,
+                },
+                RouteEntry {
+                    variant: "appro42".into(),
+                    drop_vs_exact: 0.004,
+                    energy_per_op_j: 2.1e-12,
+                },
+                RouteEntry {
+                    variant: "lm".into(),
+                    drop_vs_exact: 0.05,
+                    energy_per_op_j: 1.2e-12,
+                },
+                RouteEntry {
+                    variant: "logour".into(),
+                    drop_vs_exact: 0.018,
+                    energy_per_op_j: 1.4e-12,
+                },
+            ],
+            Some("exact".into()),
+        )
+    }
+
+    #[test]
+    fn class_parse_tiers_and_numbers() {
+        assert_eq!(AccuracyClass::parse("exact").unwrap().max_drop, 0.0);
+        assert_eq!(AccuracyClass::parse("silver").unwrap().max_drop, 0.005);
+        assert_eq!(AccuracyClass::parse("0.01").unwrap().max_drop, 0.01);
+        assert!((AccuracyClass::parse("2%").unwrap().max_drop - 0.02).abs() < 1e-12);
+        assert!(AccuracyClass::parse("platinum").is_err());
+        assert!(AccuracyClass::parse("1.5").is_err());
+        assert!(AccuracyClass::parse("-0.1").is_err());
+    }
+
+    #[test]
+    fn select_picks_cheapest_satisfying_variant() {
+        let t = table();
+        // best-effort: everything satisfies; lm is cheapest.
+        let d = t.select(&AccuracyClass::new("any", 1.0)).unwrap();
+        assert_eq!(d.variant, "lm");
+        assert!(!d.fallback);
+        // 2% budget: lm (5%) is out; logour (1.8%) is the cheapest in.
+        let d = t.select(&AccuracyClass::new("b", 0.02)).unwrap();
+        assert_eq!(d.variant, "logour");
+        // 0.5% budget: only appro42 (0.4%) and exact satisfy; appro42 is
+        // cheaper.
+        let d = t.select(&AccuracyClass::new("s", 0.005)).unwrap();
+        assert_eq!(d.variant, "appro42");
+        // 0.1% budget: nothing approximate satisfies — exact, not as a
+        // fallback (it is a measured drop-0 entry).
+        let d = t.select(&AccuracyClass::new("g", 0.001)).unwrap();
+        assert_eq!(d.variant, "exact");
+        assert!(!d.fallback);
+    }
+
+    #[test]
+    fn select_falls_back_to_exact_when_no_entry_satisfies() {
+        // A table with only uncharacterizable-beyond-budget entries.
+        let t = RoutingTable::new(
+            vec![RouteEntry {
+                variant: "lm".into(),
+                drop_vs_exact: 0.05,
+                energy_per_op_j: 1.2e-12,
+            }],
+            Some("exact".into()),
+        );
+        let d = t.select(&AccuracyClass::new("tight", 0.001)).unwrap();
+        assert_eq!(d.variant, "exact");
+        assert!(d.fallback, "must be flagged as an exact fallback");
+        // No exact served at all: the class is unroutable.
+        let t = RoutingTable::new(vec![], None);
+        assert!(t.select(&AccuracyClass::new("tight", 0.001)).is_none());
+    }
+
+    #[test]
+    fn equal_cost_ties_break_by_name_deterministically() {
+        let mk = |order: &[&str]| {
+            let entries = order
+                .iter()
+                .map(|v| RouteEntry {
+                    variant: v.to_string(),
+                    drop_vs_exact: 0.0,
+                    energy_per_op_j: 1e-12,
+                })
+                .collect();
+            RoutingTable::new(entries, None)
+        };
+        let a = mk(&["b", "a", "c"]);
+        let b = mk(&["c", "b", "a"]);
+        let cls = AccuracyClass::new("any", 1.0);
+        assert_eq!(a.select(&cls), b.select(&cls));
+        assert_eq!(a.select(&cls).unwrap().variant, "a");
+    }
+
+    #[test]
+    fn ring_is_deterministic_and_roughly_balanced() {
+        let ring = HashRing::new(4);
+        let again = HashRing::new(4);
+        let mut counts = [0usize; 4];
+        for i in 0..40_000u64 {
+            let key = checksum64(&i.to_le_bytes());
+            let s = ring.shard_for(key);
+            assert_eq!(s, again.shard_for(key), "ring must be stable");
+            counts[s] += 1;
+        }
+        for (s, &c) in counts.iter().enumerate() {
+            assert!(
+                (4_000..=21_000).contains(&c),
+                "shard {s} got {c}/40000 keys — ring badly unbalanced: {counts:?}"
+            );
+        }
+        // Single-shard ring routes everything to shard 0.
+        let one = HashRing::new(1);
+        assert_eq!(one.shard_for(u64::MAX), 0);
+        assert_eq!(one.shard_for(0), 0);
+    }
+
+    #[test]
+    fn growing_the_ring_only_moves_keys_to_the_new_shard() {
+        let r4 = HashRing::new(4);
+        let r5 = HashRing::new(5);
+        let mut moved_elsewhere = 0;
+        for i in 0..20_000u64 {
+            let key = checksum64(&i.to_le_bytes());
+            let (a, b) = (r4.shard_for(key), r5.shard_for(key));
+            if a != b && b != 4 {
+                moved_elsewhere += 1;
+            }
+        }
+        assert_eq!(
+            moved_elsewhere, 0,
+            "consistent hashing: keys may only move to the added shard"
+        );
+    }
+}

@@ -1,48 +1,200 @@
-//! The inference server: router + per-variant batcher workers over a
-//! pluggable execution [`Backend`] (PJRT graph or the batched native
-//! quantized CNN — see `runtime::backend` for the dispatch rules).
+//! The inference server: a sharded, SLO-aware front door over the
+//! per-shard stage pipelines in [`super::pipeline`].
+//!
+//! ## Request wire format
+//!
+//! A [`Request`] carries the image payload, a [`Route`] — either an
+//! explicit serving variant (the historical form) or an
+//! [`AccuracyClass`], which the [`RoutingTable`] resolves to the cheapest
+//! variant whose store-measured calibration accuracy satisfies it (see
+//! [`super::router`]) — an optional per-request SLO overriding the
+//! server-wide [`BatchPolicy::slo`], and the delivery channel. Every
+//! *admitted* request receives exactly one [`Delivery`]: `Ok(Response)`
+//! with the logits and the variant that actually served it, or
+//! `Failed(FailReason)` when its deadline expired in queue, the backend
+//! errored, or a worker panicked. Rejected submissions return a typed
+//! [`SubmitError`] instead (malformed / unroutable / shed / shutting
+//! down), which is what makes the accounting identity
+//! `submitted == delivered + shed + failed` checkable from the outside —
+//! the soak and property suites in `rust/tests/serving_shard.rs` assert
+//! it across shard counts and adversarial arrival patterns.
+//!
+//! Requests spread across shards by consistent hashing of the image
+//! payload ([`HashRing`]); each shard runs the bounded-channel admission →
+//! batch → execute → respond pipeline.
 
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Sender, TrySendError};
 use std::sync::Arc;
-use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use super::admission::{Admission, AdmissionController, Ticket};
-use super::batcher::{next_batch, BatchPolicy};
+use super::admission::{Admission, AdmissionController};
+use super::batcher::BatchPolicy;
 use super::metrics::ServerMetrics;
+use super::pipeline::{spawn_shard, Health, QueuedRequest, ShardCtx, ShardPipeline};
+use super::router::{AccuracyClass, HashRing, RoutingTable};
 use super::warmstart::{profile_for_variant, VariantProfile};
-use crate::nn::eval::argmax;
 use crate::runtime::backend::IMAGE_BYTES;
-use crate::runtime::{ArtifactStore, Backend, BackendFactory, PjrtFactory};
+use crate::runtime::{ArtifactStore, BackendFactory, PjrtFactory};
 
-/// A classification request: one 16×16 grayscale image + target variant.
-pub struct Request {
-    pub image: Vec<u8>,
-    pub variant: String,
-    pub respond: Sender<Response>,
+/// Where a request wants to execute.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Route {
+    /// A serving variant by name (exact / appro42 / logour / lm / plan).
+    Variant(String),
+    /// An accuracy constraint; the server picks the cheapest satisfying
+    /// variant ([`RoutingTable::select`]).
+    Class(AccuracyClass),
 }
 
-/// The response: 10 logits plus the predicted class.
+/// A classification request: one 16×16 grayscale image + routing +
+/// optional per-request latency SLO.
+pub struct Request {
+    pub image: Vec<u8>,
+    pub route: Route,
+    /// End-to-end deadline budget; `None` uses the server's
+    /// [`BatchPolicy::slo`].
+    pub slo: Option<Duration>,
+    pub respond: Sender<Delivery>,
+}
+
+impl Request {
+    /// The historical wire format: route by explicit variant, server SLO.
+    pub fn to_variant(
+        image: Vec<u8>,
+        variant: impl Into<String>,
+        respond: Sender<Delivery>,
+    ) -> Request {
+        Request {
+            image,
+            route: Route::Variant(variant.into()),
+            slo: None,
+            respond,
+        }
+    }
+
+    /// Route by accuracy class, server SLO.
+    pub fn to_class(image: Vec<u8>, class: AccuracyClass, respond: Sender<Delivery>) -> Request {
+        Request {
+            image,
+            route: Route::Class(class),
+            slo: None,
+            respond,
+        }
+    }
+
+    /// Override the per-request latency SLO.
+    pub fn with_slo(mut self, slo: Duration) -> Request {
+        self.slo = Some(slo);
+        self
+    }
+}
+
+/// The response: 10 logits, the predicted class, and the variant that
+/// actually served the request (= the routing decision under class
+/// routing; echoes the requested variant otherwise).
 #[derive(Clone, Debug)]
 pub struct Response {
     pub logits: Vec<f32>,
     pub predicted: usize,
+    pub variant: String,
 }
 
-struct QueuedRequest {
-    image: Vec<u8>,
-    respond: Sender<Response>,
-    enqueued: Instant,
-    /// Admission slot, released when the response is delivered (drop).
-    _ticket: Ticket,
+/// Why an admitted request failed instead of completing.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FailReason {
+    /// The SLO deadline passed while the request was still queued.
+    DeadlineExpired,
+    /// The backend returned an error (or a short batch).
+    ExecuteFailed(String),
+    /// The executor panicked; the server is unhealthy.
+    WorkerPanicked,
+}
+
+impl std::fmt::Display for FailReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FailReason::DeadlineExpired => write!(f, "deadline expired in queue"),
+            FailReason::ExecuteFailed(e) => write!(f, "execute failed: {e}"),
+            FailReason::WorkerPanicked => write!(f, "worker panicked"),
+        }
+    }
+}
+
+/// Exactly one of these arrives per admitted request.
+#[derive(Clone, Debug)]
+pub enum Delivery {
+    Ok(Response),
+    Failed(FailReason),
+}
+
+/// Typed rejection at `submit` time (the request never entered a shard;
+/// no `Delivery` will arrive).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Bad payload (wrong image size).
+    Malformed(String),
+    /// Unknown variant, or no variant satisfies the accuracy class and no
+    /// exact fallback is served.
+    Unroutable(String),
+    /// Load shed: per-variant admission depth or shard ingress full.
+    Shed {
+        variant: String,
+        depth: usize,
+        limit: usize,
+    },
+    /// The server's shards have shut down.
+    ShuttingDown,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Malformed(m) => write!(f, "malformed request: {m}"),
+            SubmitError::Unroutable(m) => write!(f, "{m}"),
+            SubmitError::Shed {
+                variant,
+                depth,
+                limit,
+            } => write!(f, "shed: variant {variant:?} queue depth {depth} >= limit {limit}"),
+            SubmitError::ShuttingDown => write!(f, "server is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// How to stand the server up.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    /// Coordinator shards behind the consistent-hash ring.
+    pub shards: usize,
+    pub policy: BatchPolicy,
+    /// Per-variant admission depth limit (shared across shards) and
+    /// per-shard ingress channel capacity.
+    pub queue_limit: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            shards: 1,
+            policy: BatchPolicy::default(),
+            queue_limit: 4096,
+        }
+    }
 }
 
 /// Handle to a running server.
 pub struct InferenceServer {
-    routes: BTreeMap<String, Sender<QueuedRequest>>,
-    workers: Vec<JoinHandle<()>>,
+    shards: Vec<ShardPipeline>,
+    ring: HashRing,
+    routing: RoutingTable,
+    policy: BatchPolicy,
+    queue_limit: usize,
+    health: Arc<Health>,
+    variant_names: Vec<String>,
     pub metrics: Arc<ServerMetrics>,
     pub admission: Arc<AdmissionController>,
     /// The backend's per-execute batch capacity.
@@ -70,149 +222,105 @@ impl InferenceServer {
         Self::start_with_backend(Arc::new(PjrtFactory::from_artifacts(store)), policy, queue_limit)
     }
 
-    /// Start one batcher worker per variant, each executing through a
-    /// backend built by `factory` **on the worker thread** (PJRT
-    /// executables are per-thread; the native backend keeps per-worker
-    /// scratch). Submissions beyond `queue_limit` per variant are shed
-    /// with an error instead of growing queue latency without bound.
+    /// Single-shard start (the historical entry point).
     pub fn start_with_backend(
         factory: Arc<dyn BackendFactory>,
         policy: BatchPolicy,
         queue_limit: usize,
     ) -> Result<InferenceServer> {
+        Self::start_sharded(
+            factory,
+            ServerConfig {
+                shards: 1,
+                policy,
+                queue_limit,
+            },
+        )
+    }
+
+    /// Start `cfg.shards` coordinator shards, each running one pipeline
+    /// per variant with backends built **on their executor threads** (PJRT
+    /// executables are per-thread; the native backend keeps per-worker
+    /// scratch). Boot is all-or-nothing: if any of the shards × variants
+    /// backends fails to initialize, everything tears down and the call
+    /// errors.
+    pub fn start_sharded(
+        factory: Arc<dyn BackendFactory>,
+        cfg: ServerConfig,
+    ) -> Result<InferenceServer> {
         let variants = factory.variants();
         if variants.is_empty() {
             bail!("backend factory exposes no variants");
         }
+        let n_shards = cfg.shards.max(1);
         let metrics = Arc::new(ServerMetrics::new());
+        // ONE admission controller across shards keeps the per-variant
+        // depth limit a server-wide property, independent of sharding.
         let admission = Arc::new(AdmissionController::new(
-            queue_limit,
+            cfg.queue_limit,
             variants.iter().cloned(),
         ));
-        crate::obs::gauge("serve.queue_limit").set(queue_limit as i64);
+        let health = Arc::new(Health::default());
+        crate::obs::gauge("serve.queue_limit").set(cfg.queue_limit as i64);
         crate::obs::gauge("serve.variants").set(variants.len() as i64);
-        let mut routes = BTreeMap::new();
-        let mut workers = Vec::new();
-        // Workers report backend construction over this channel so boot
+        crate::obs::gauge("serve.shards").set(n_shards as i64);
+        // Executors report backend construction over this channel so boot
         // fails fast instead of "serving" with dead workers (e.g. PJRT
         // behind the offline xla stub, or missing weights).
         let (ready_tx, ready_rx) = channel::<std::result::Result<(), String>>();
-        for variant in &variants {
-            let (tx, rx): (Sender<QueuedRequest>, Receiver<QueuedRequest>) = channel();
-            routes.insert(variant.clone(), tx);
-            let factory = Arc::clone(&factory);
-            let variant = variant.clone();
-            let metrics = Arc::clone(&metrics);
-            let ready = ready_tx.clone();
-            let handle = std::thread::Builder::new()
-                .name(format!("batcher-{variant}"))
-                .spawn(move || {
-                    let mut backend = match factory.create(&variant) {
-                        Ok(b) => {
-                            // Boot may already have failed on a sibling;
-                            // a closed channel is fine to ignore.
-                            let _ = ready.send(Ok(()));
-                            b
-                        }
-                        Err(e) => {
-                            let _ = ready.send(Err(format!("{variant}: {e:#}")));
-                            return;
-                        }
-                    };
-                    // Never drain more than one backend execution's worth.
-                    let policy = BatchPolicy {
-                        max_batch: policy.max_batch.min(backend.max_batch()).max(1),
-                        ..policy
-                    };
-                    // Per-worker telemetry handles, resolved once: the
-                    // in-loop record path is lock-free (obs::registry).
-                    let queue_wait = crate::obs::histogram("serve.queue_wait_us");
-                    let execute_failures = crate::obs::counter("serve.execute_failures");
-                    let delivered = crate::obs::counter("serve.responses_delivered");
-                    while let Some(batch) = next_batch(&rx, &policy) {
-                        let batch_span = crate::obs::span("serve.batch");
-                        let n = batch.len();
-                        for q in &batch {
-                            queue_wait.record(q.enqueued.elapsed().as_micros() as u64);
-                        }
-                        let images: Vec<&[u8]> =
-                            batch.iter().map(|q| q.image.as_slice()).collect();
-                        let rows = {
-                            let _execute = crate::obs::span("execute");
-                            backend.infer_batch(&images)
-                        };
-                        let rows = match rows {
-                            Ok(r) => r,
-                            Err(e) => {
-                                crate::obs::error(
-                                    "serve",
-                                    "execute failed",
-                                    &[
-                                        ("variant", variant.clone()),
-                                        ("error", format!("{e:#}")),
-                                    ],
-                                );
-                                execute_failures.inc();
-                                continue;
-                            }
-                        };
-                        if rows.len() != n {
-                            crate::obs::error(
-                                "serve",
-                                "backend returned a short batch",
-                                &[
-                                    ("variant", variant.clone()),
-                                    ("rows", rows.len().to_string()),
-                                    ("batch", n.to_string()),
-                                ],
-                            );
-                            execute_failures.inc();
-                            continue;
-                        }
-                        // Record metrics BEFORE completing the requests so a
-                        // caller that snapshots right after the last response
-                        // sees every batch counted.
-                        let lats: Vec<f64> = batch
-                            .iter()
-                            .map(|q| q.enqueued.elapsed().as_micros() as f64)
-                            .collect();
-                        metrics.record_batch(n, &lats);
-                        {
-                            let _respond = crate::obs::span("respond");
-                            for (q, logits) in batch.into_iter().zip(rows) {
-                                let predicted = argmax(&logits);
-                                // Receiver may have gone away; ignore.
-                                let _ = q.respond.send(Response { logits, predicted });
-                            }
-                        }
-                        delivered.add(n as u64);
-                        drop(batch_span);
-                    }
-                })
-                .context("spawning batcher thread")?;
-            workers.push(handle);
-        }
-        drop(ready_tx);
-        // Block until every worker's backend is up; tear down and error
-        // if any cannot initialize (all-or-nothing boot).
-        for _ in 0..workers.len() {
-            let failure = match ready_rx.recv() {
-                Ok(Ok(())) => None,
-                Ok(Err(msg)) => Some(msg),
-                Err(_) => Some("a worker exited before reporting readiness".to_string()),
-            };
-            if let Some(msg) = failure {
-                // Closing the routes ends every worker's request loop.
-                routes.clear();
-                for w in workers.drain(..) {
-                    let _ = w.join();
+        let mut shards = Vec::with_capacity(n_shards);
+        let mut failure: Option<String> = None;
+        for shard in 0..n_shards {
+            match spawn_shard(ShardCtx {
+                shard,
+                factory: Arc::clone(&factory),
+                variants: variants.clone(),
+                policy: cfg.policy,
+                queue_limit: cfg.queue_limit,
+                metrics: Arc::clone(&metrics),
+                health: Arc::clone(&health),
+                ready: ready_tx.clone(),
+            }) {
+                Ok(p) => shards.push(p),
+                Err(e) => {
+                    failure = Some(format!("{e:#}"));
+                    break;
                 }
-                bail!("backend worker failed to initialize: {msg}");
             }
         }
+        drop(ready_tx);
+        // Block until every spawned executor's backend is up; tear down
+        // and error if any cannot initialize (all-or-nothing boot).
+        for _ in 0..shards.len() * variants.len() {
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(msg)) => {
+                    failure.get_or_insert(msg);
+                }
+                Err(_) => {
+                    failure
+                        .get_or_insert_with(|| "a worker exited before reporting readiness".into());
+                    break;
+                }
+            }
+        }
+        if let Some(msg) = failure {
+            for s in shards {
+                s.shutdown();
+            }
+            bail!("backend worker failed to initialize: {msg}");
+        }
+        // Until profiles attach, class routing only knows the exact
+        // fallback (when served).
+        let routing = RoutingTable::from_profiles(&BTreeMap::new(), &variants);
         Ok(InferenceServer {
-            routes,
-            workers,
+            shards,
+            ring: HashRing::new(n_shards),
+            routing,
+            policy: cfg.policy,
+            queue_limit: cfg.queue_limit,
+            health,
+            variant_names: variants,
             metrics,
             admission,
             batch: factory.max_batch(),
@@ -222,9 +330,11 @@ impl InferenceServer {
     }
 
     /// Install warm-started serving tables (see
-    /// [`super::warmstart::warm_start_profiles`]).
+    /// [`super::warmstart::warm_start_profiles`]) and rebuild the
+    /// accuracy-class routing table from them.
     pub fn attach_profiles(&mut self, profiles: BTreeMap<String, VariantProfile>) {
         self.profiles = profiles;
+        self.routing = RoutingTable::from_profiles(&self.profiles, &self.variant_names);
     }
 
     /// The characterization profile behind a serving variant, if the store
@@ -233,67 +343,145 @@ impl InferenceServer {
         profile_for_variant(&self.profiles, variant)
     }
 
-    /// Route one request. Errors on malformed images, unknown variants
-    /// and on shed load (queue depth above the admission limit).
-    pub fn submit(&self, req: Request) -> Result<()> {
+    /// The accuracy-class routing table currently in force.
+    pub fn routing(&self) -> &RoutingTable {
+        &self.routing
+    }
+
+    /// Route one request into its shard. Typed errors for malformed
+    /// payloads, unroutable targets and shed load; `Ok(())` guarantees
+    /// exactly one [`Delivery`] on `respond`.
+    pub fn submit(&self, req: Request) -> std::result::Result<(), SubmitError> {
         // Reject bad payloads at the door: a malformed image inside a
         // batch would otherwise fail the whole backend execution and
         // drop every batchmate's response with it.
         if req.image.len() != IMAGE_BYTES {
-            bail!(
+            return Err(SubmitError::Malformed(format!(
                 "image has {} bytes, want {IMAGE_BYTES} (16×16 grayscale)",
                 req.image.len()
-            );
+            )));
         }
         let _admit = crate::obs::span("serve.admit");
-        let route = match self.routes.get(&req.variant) {
-            Some(r) => r,
-            None => bail!(
-                "unknown variant {:?}; have {:?}",
-                req.variant,
-                self.routes.keys().collect::<Vec<_>>()
-            ),
+        let variant = match &req.route {
+            Route::Variant(v) => {
+                if !self.variant_names.iter().any(|n| n == v) {
+                    return Err(SubmitError::Unroutable(format!(
+                        "unknown variant {v:?}; have {:?}",
+                        self.variant_names
+                    )));
+                }
+                v.clone()
+            }
+            Route::Class(class) => {
+                crate::obs::counter("serve.route.class_requests").inc();
+                match self.routing.select(class) {
+                    Some(d) => {
+                        if d.fallback {
+                            crate::obs::counter("serve.route.fallback_exact").inc();
+                        }
+                        crate::obs::counter(&format!("serve.route.to.{}", d.variant)).inc();
+                        d.variant
+                    }
+                    None => {
+                        return Err(SubmitError::Unroutable(format!(
+                            "no servable variant satisfies accuracy class {:?} \
+                             (max drop {}) and no exact fallback is served",
+                            class.name, class.max_drop
+                        )))
+                    }
+                }
+            }
         };
-        let ticket = match self.admission.admit(&req.variant) {
+        let ticket = match self.admission.admit(&variant) {
             Some(Ok(t)) => t,
             Some(Err(Admission::Shed { depth, limit })) => {
-                bail!("shed: variant {:?} queue depth {depth} >= limit {limit}", req.variant)
+                return Err(SubmitError::Shed {
+                    variant,
+                    depth,
+                    limit,
+                })
             }
             Some(Err(Admission::Admitted)) | None => {
-                bail!("admission state missing for {:?}", req.variant)
+                return Err(SubmitError::Unroutable(format!(
+                    "admission state missing for {variant:?}"
+                )))
             }
         };
-        route
-            .send(QueuedRequest {
-                image: req.image,
-                respond: req.respond,
-                enqueued: Instant::now(),
-                _ticket: ticket,
-            })
-            .map_err(|_| anyhow::anyhow!("variant worker has shut down"))?;
-        Ok(())
+        let now = Instant::now();
+        let deadline = now + req.slo.unwrap_or(self.policy.slo);
+        let shard = self.ring.shard_for(HashRing::key_for(&req.image));
+        let queued = QueuedRequest {
+            image: req.image,
+            respond: req.respond,
+            enqueued: now,
+            deadline,
+            _ticket: ticket,
+        };
+        match self.shards[shard].ingress[&variant].try_send(queued) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(dropped)) => {
+                // Backpressure past admission (shard ingress at capacity):
+                // shed, releasing the ticket.
+                drop(dropped);
+                self.admission.note_shed();
+                Err(SubmitError::Shed {
+                    variant,
+                    depth: self.queue_limit,
+                    limit: self.queue_limit,
+                })
+            }
+            Err(TrySendError::Disconnected(_)) => Err(SubmitError::ShuttingDown),
+        }
     }
 
-    /// Blocking convenience: submit and wait.
+    /// Blocking convenience: submit to a variant and wait.
     pub fn infer(&self, image: Vec<u8>, variant: &str) -> Result<Response> {
+        self.infer_route(image, Route::Variant(variant.to_string()), None)
+    }
+
+    /// Blocking convenience over the full wire format.
+    pub fn infer_route(
+        &self,
+        image: Vec<u8>,
+        route: Route,
+        slo: Option<Duration>,
+    ) -> Result<Response> {
         let (tx, rx) = channel();
         self.submit(Request {
             image,
-            variant: variant.to_string(),
+            route,
+            slo,
             respond: tx,
         })?;
-        rx.recv().context("worker dropped the response")
+        match rx.recv().context("worker dropped the response")? {
+            Delivery::Ok(resp) => Ok(resp),
+            Delivery::Failed(reason) => bail!("request failed: {reason}"),
+        }
     }
 
     pub fn variants(&self) -> Vec<String> {
-        self.routes.keys().cloned().collect()
+        self.variant_names.clone()
     }
 
-    /// Shut down: close all routes and join workers.
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// `Some(description)` once any executor has panicked — the server
+    /// still answers (failing fast) but must not report a healthy exit.
+    pub fn failure(&self) -> Option<String> {
+        self.health.failure()
+    }
+
+    pub fn healthy(&self) -> bool {
+        self.health.healthy()
+    }
+
+    /// Graceful shutdown: close every shard's ingress, drain in-flight
+    /// batches through execute + respond, then join all stage threads.
     pub fn shutdown(mut self) {
-        self.routes.clear();
-        for w in self.workers.drain(..) {
-            let _ = w.join();
+        for s in self.shards.drain(..) {
+            s.shutdown();
         }
     }
 }
@@ -301,5 +489,6 @@ impl InferenceServer {
 // `argmax` comes from `nn::eval` so server responses, workload labels and
 // accuracy scoring all share one total-ordering argmax (NaN-safe).
 //
-// Full server tests live in rust/tests/serving.rs: the native-backend
-// soak suite runs everywhere; the PJRT suite needs artifacts.
+// Full server tests live in rust/tests/serving.rs (single-shard native
+// soak + PJRT suite) and rust/tests/serving_shard.rs (sharded adversarial
+// property suite, million-request soak, panic regression).

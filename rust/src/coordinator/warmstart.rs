@@ -24,20 +24,33 @@ pub struct VariantProfile {
     pub energy_per_op_j: Option<f64>,
     /// Placed logic area from the PPA section, µm².
     pub logic_area_um2: Option<f64>,
+    /// Measured calibration top-1 when the compile pass persisted a
+    /// uniform (`compile[f,f,f,f]`) accuracy record for this family.
+    pub calib_top1: Option<f64>,
+    /// Calibration top-1 **drop vs the uniform-exact baseline** — the
+    /// column accuracy-class routing keys on
+    /// ([`crate::coordinator::router::RoutingTable`]). `Some(0.0)` for the
+    /// exact family; `None` when the store has no exact baseline to
+    /// subtract from (an unverifiable drop must not qualify for a class).
+    pub calib_drop: Option<f64>,
     /// How many store records were folded into this profile.
     pub records: u64,
 }
 
 /// Scan the store and fold every record characterizing a `bits`-bit
-/// datapath into per-family profiles. Only records carrying an error or
-/// PPA section participate (functional-yield records label themselves with
-/// the netlist instance name, which is not a family). When a family was
-/// characterized more than once, the winner is deterministic and
-/// preference-ordered, not hash-ordered: the error stats with the most
-/// samples (exhaustive beats sampled), and the PPA summary with the
-/// largest workload — ties broken toward the smaller macro, then by key
-/// order (records visit in sorted key order, and only a strictly better
-/// rank replaces).
+/// datapath into per-family profiles. Records carrying an error or PPA
+/// section participate directly (functional-yield records label
+/// themselves with the netlist instance name, which is not a family);
+/// **uniform** compile-accuracy records (`compile[f,f,f,f]`, all four
+/// layers the same family) fold their measured calibration top-1 into
+/// family `f`, and the uniform-exact record supplies the baseline that
+/// turns top-1 into the `calib_drop` column accuracy-class routing
+/// consumes. When a family was characterized more than once, the winner
+/// is deterministic and preference-ordered, not hash-ordered: the
+/// error/accuracy stats with the most samples (exhaustive beats sampled),
+/// and the PPA summary with the largest workload — ties broken toward the
+/// smaller macro, then by key order (records visit in sorted key order,
+/// and only a strictly better rank replaces).
 pub fn warm_start_profiles(
     store: &DesignPointStore,
     bits: u32,
@@ -45,9 +58,28 @@ pub fn warm_start_profiles(
     let mut out: BTreeMap<String, VariantProfile> = BTreeMap::new();
     let mut err_rank: BTreeMap<String, u64> = BTreeMap::new();
     let mut ppa_rank: BTreeMap<String, (u64, std::cmp::Reverse<u32>)> = BTreeMap::new();
+    // Best (most-sampled) uniform calibration top-1 per inner family.
+    let mut acc_rank: BTreeMap<String, u64> = BTreeMap::new();
+    let mut acc_top1: BTreeMap<String, f64> = BTreeMap::new();
     store.for_each_record(|_, rec| {
         if rec.bits != bits || rec.family.is_empty() {
             return;
+        }
+        if let Some(acc) = &rec.accuracy {
+            if let Some(inner) = uniform_compile_family(&rec.family) {
+                let better = match acc_rank.get(inner) {
+                    Some(&r) => acc.samples > r,
+                    None => true,
+                };
+                if better {
+                    acc_rank.insert(inner.to_string(), acc.samples);
+                    acc_top1.insert(inner.to_string(), acc.top1);
+                }
+                let p = out.entry(inner.to_string()).or_default();
+                p.family = inner.to_string();
+                p.records += 1;
+                return;
+            }
         }
         if rec.error.is_none() && rec.ppa.is_none() {
             return;
@@ -78,7 +110,34 @@ pub fn warm_start_profiles(
             }
         }
     });
+    // Attach the calibration columns: measured top-1 plus the drop vs the
+    // uniform-exact baseline (exact itself drops 0 by definition; without
+    // an exact baseline a drop is unverifiable and stays `None`).
+    let exact_top1 = acc_top1.get("exact").copied();
+    for (family, p) in out.iter_mut() {
+        if let Some(&top1) = acc_top1.get(family) {
+            p.calib_top1 = Some(top1);
+            p.calib_drop = if family == "exact" {
+                Some(0.0)
+            } else {
+                exact_top1.map(|e| (e - top1).max(0.0))
+            };
+        }
+    }
     out
+}
+
+/// `compile[f,f,f,f]` with all four layer families equal → `Some(f)`.
+/// Family names never contain commas, so the split is unambiguous even
+/// for bracketed names like `appro42[kongx4]`.
+fn uniform_compile_family(family: &str) -> Option<&str> {
+    let inner = family.strip_prefix("compile[")?.strip_suffix(']')?;
+    let mut parts = inner.split(',');
+    let first = parts.next()?;
+    if first.is_empty() || !parts.all(|p| p == first) {
+        return None;
+    }
+    Some(first)
 }
 
 /// The serving profile of a compiled heterogeneous plan: the compile pass
@@ -94,6 +153,8 @@ pub fn plan_profile(plan: &CompiledPlan) -> VariantProfile {
         nmed: None,
         energy_per_op_j: Some(plan.energy_per_op_j()),
         logic_area_um2: None,
+        calib_top1: Some(plan.plan_top1),
+        calib_drop: Some(plan.drop_vs_exact()),
         records: plan.layers.len() as u64,
     }
 }
@@ -254,6 +315,68 @@ mod tests {
             "larger-workload PPA must win"
         );
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn uniform_accuracy_records_fold_into_calibration_columns() {
+        use crate::store::{AccuracyStats, DesignPointRecord, DesignPointStore, KeyBuilder};
+        let dir = std::env::temp_dir().join(format!(
+            "openacm_warmstart_acc_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let store = DesignPointStore::open(&dir).unwrap();
+        let acc = |top1: f64, samples: u64| AccuracyStats { top1, samples };
+        let recs = [
+            // Uniform-exact baseline.
+            ("compile[exact,exact,exact,exact]", acc(0.95, 256)),
+            // Uniform approximate: exhaustive beats the sampled rerun.
+            ("compile[log-our,log-our,log-our,log-our]", acc(0.93, 256)),
+            ("compile[log-our,log-our,log-our,log-our]", acc(0.80, 64)),
+            // Heterogeneous assignment: no single family to credit.
+            ("compile[log-our,exact,exact,exact]", acc(0.10, 256)),
+        ];
+        for (i, (family, accuracy)) in recs.iter().enumerate() {
+            let key = KeyBuilder::new("warmstart-acc-test/1").u64(i as u64).finish();
+            let rec = DesignPointRecord {
+                family: family.to_string(),
+                bits: 8,
+                accuracy: Some(*accuracy),
+                ..Default::default()
+            };
+            store.put(key, &rec).unwrap();
+        }
+        let profiles = warm_start_profiles(&store, 8);
+        assert!(
+            profiles.keys().all(|k| !k.starts_with("compile[")),
+            "raw compile labels must not leak into the profile table: {:?}",
+            profiles.keys().collect::<Vec<_>>()
+        );
+        let exact = &profiles["exact"];
+        assert_eq!(exact.calib_top1, Some(0.95));
+        assert_eq!(exact.calib_drop, Some(0.0), "exact drops 0 by definition");
+        let lo = &profiles["log-our"];
+        assert_eq!(lo.calib_top1, Some(0.93), "most-sampled record must win");
+        let drop = lo.calib_drop.expect("drop derivable from the exact baseline");
+        assert!((drop - 0.02).abs() < 1e-12, "drop {drop} != 0.95-0.93");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn uniform_family_parser_handles_brackets_and_rejects_mixtures() {
+        assert_eq!(
+            uniform_compile_family("compile[exact,exact,exact,exact]"),
+            Some("exact")
+        );
+        assert_eq!(
+            uniform_compile_family(
+                "compile[appro42[kongx4],appro42[kongx4],appro42[kongx4],appro42[kongx4]]"
+            ),
+            Some("appro42[kongx4]")
+        );
+        assert_eq!(uniform_compile_family("compile[log-our,exact,exact,exact]"), None);
+        assert_eq!(uniform_compile_family("log-our"), None);
+        assert_eq!(uniform_compile_family("compile[]"), None);
     }
 
     #[test]

@@ -9,8 +9,8 @@
 //!   an event-driven gate simulator, a FreePDK45-calibrated PPA engine, a
 //!   transistor-level 6T SRAM macro compiler with variation-aware (MC / MNIS
 //!   importance-sampling) characterization, a PE compiler, an OpenROAD
-//!   flow-script generator, a DSE engine — plus a threaded serving
-//!   coordinator that executes AOT-compiled JAX graphs via PJRT.
+//!   flow-script generator, a DSE engine — plus a sharded, SLO-aware
+//!   serving coordinator that executes AOT-compiled JAX graphs via PJRT.
 //! * **L2 (python/compile/model.py)** — a quantized CNN whose multiplies go
 //!   through an approximate-multiplier LUT; lowered once to HLO text.
 //! * **L1 (python/compile/kernels/)** — the Pallas LUT-matmul kernel.
@@ -93,6 +93,28 @@
 //! dispatch rules and batching invariants, and `cargo bench --bench
 //! nn_forward` for the scalar-vs-batched speedup trail
 //! (`BENCH_nn_forward.json`).
+//!
+//! ## Sharded, SLO-aware serving
+//!
+//! [`coordinator`] is a sharded serving layer: requests spread across N
+//! coordinator shards by consistent hashing of the payload
+//! ([`coordinator::HashRing`]); within a shard each variant runs
+//! admission → deadline-bucket batching → execute → respond as decoupled
+//! stages over **bounded** channels, so overload becomes backpressure and
+//! typed sheds rather than unbounded queues. Requests route by explicit
+//! variant or by [`coordinator::AccuracyClass`] — the
+//! [`coordinator::RoutingTable`] picks the cheapest variant whose
+//! store-measured calibration accuracy satisfies the class, falling back
+//! to exact. Worker panics fail fast (never hang), poison only their
+//! worker, and turn the `openacm serve` exit non-zero via
+//! [`coordinator::Health`]. The invariants — exact accounting
+//! (`delivered + shed + rejected == submitted`), bit-identical
+//! deliveries, cheapest-satisfying routing — are property-tested across
+//! shard counts and adversarial arrival patterns
+//! ([`util::proptest::adversarial_workload`]) in
+//! `rust/tests/serving_shard.rs`, soaked at million-request scale
+//! (`--ignored`), and benchmarked by `cargo bench --bench serving`
+//! (`BENCH_serving.json`). See DESIGN.md §"Sharded serving".
 //!
 //! ## The compile pass
 //!

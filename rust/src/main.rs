@@ -31,10 +31,15 @@ COMMANDS:
              [--smoke] [--no-incremental]
   store      Inspect/maintain the design-point store: stats | verify | gc
              [--dir DIR] [--repair] [--max-mb N] [--json]
-  serve      Start the inference coordinator (PJRT on AOT artifacts, or the
-             artifact-free batched native backend)
+  serve      Start the sharded, SLO-aware inference coordinator (PJRT on
+             AOT artifacts, or the artifact-free batched native backend)
              [--backend native|pjrt|auto] [--artifacts DIR] [--batch N]
              [--requests N] [--store DIR] [--seed N]
+             [--shards N]  coordinator shards behind consistent-hash
+             routing  [--slo-ms N]  latency SLO the deadline-bucket
+             batcher closes against
+             [--classes gold,silver,...]  route half the stream by
+             accuracy class (exact|gold|silver|bronze|best-effort|0.5%)
              [--metrics-every N]  emit + flush a telemetry snapshot every
              N requests  [--obs-dir DIR]
              [--plan FILE.acmplan]  serve a compiled heterogeneous plan as

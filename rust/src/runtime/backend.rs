@@ -430,6 +430,127 @@ impl BackendFactory for PjrtFactory {
 }
 
 // ---------------------------------------------------------------------------
+// Fixture backend (tests + serving bench)
+// ---------------------------------------------------------------------------
+
+/// Reference logits of the fixture backend: a pure function of (variant,
+/// image bytes), so a soak harness can bit-verify millions of deliveries
+/// without precomputing anything — recompute and compare.
+pub fn fixture_logits(variant: &str, image: &[u8]) -> Vec<f32> {
+    let seed = crate::store::key::checksum64(image)
+        ^ crate::store::key::checksum64(variant.as_bytes()).rotate_left(17);
+    let mut rng = crate::util::rng::Pcg32::new(seed);
+    (0..LOGITS).map(|_| rng.next_f64() as f32).collect()
+}
+
+/// Constant-time deterministic backend for pipeline tests and the serving
+/// bench: logits come from [`fixture_logits`], so (1) deliveries are
+/// bit-verifiable at million-request scale and (2) measured serving
+/// overhead is the *pipeline's*, not the CNN's. Failure injection is
+/// keyed on the first image byte, letting a workload generator place
+/// backend errors and panics deterministically.
+pub struct FixtureBackend {
+    variant: String,
+    max_batch: usize,
+    fail_on_byte: Option<u8>,
+    panic_on_byte: Option<u8>,
+}
+
+impl Backend for FixtureBackend {
+    fn name(&self) -> &'static str {
+        "fixture"
+    }
+
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn infer_batch(&mut self, images: &[&[u8]]) -> Result<Vec<Vec<f32>>> {
+        if images.len() > self.max_batch {
+            bail!(
+                "batch of {} exceeds fixture backend capacity {}",
+                images.len(),
+                self.max_batch
+            );
+        }
+        for (i, img) in images.iter().enumerate() {
+            if img.len() != IMAGE_BYTES {
+                bail!("image {i} has {} bytes, want {IMAGE_BYTES}", img.len());
+            }
+            if Some(img[0]) == self.panic_on_byte {
+                panic!("injected fixture panic (variant {})", self.variant);
+            }
+            if Some(img[0]) == self.fail_on_byte {
+                bail!("injected fixture failure (variant {})", self.variant);
+            }
+        }
+        Ok(images
+            .iter()
+            .map(|img| fixture_logits(&self.variant, img))
+            .collect())
+    }
+}
+
+/// Builds [`FixtureBackend`]s for an arbitrary variant menu.
+pub struct FixtureFactory {
+    variants: Vec<String>,
+    max_batch: usize,
+    fail_on_byte: Option<u8>,
+    panic_on_byte: Option<u8>,
+}
+
+impl FixtureFactory {
+    pub fn new(variants: &[&str], max_batch: usize) -> FixtureFactory {
+        FixtureFactory {
+            variants: variants.iter().map(|v| v.to_string()).collect(),
+            max_batch: max_batch.max(1),
+            fail_on_byte: None,
+            panic_on_byte: None,
+        }
+    }
+
+    /// Batches containing an image whose first byte equals `b` error out
+    /// (the `ExecuteFailed` path).
+    pub fn fail_on_byte(mut self, b: u8) -> FixtureFactory {
+        self.fail_on_byte = Some(b);
+        self
+    }
+
+    /// Batches containing an image whose first byte equals `b` panic the
+    /// executor (the `WorkerPanicked` / health path).
+    pub fn panic_on_byte(mut self, b: u8) -> FixtureFactory {
+        self.panic_on_byte = Some(b);
+        self
+    }
+}
+
+impl BackendFactory for FixtureFactory {
+    fn backend_name(&self) -> &'static str {
+        "fixture"
+    }
+
+    fn variants(&self) -> Vec<String> {
+        self.variants.clone()
+    }
+
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn create(&self, variant: &str) -> Result<Box<dyn Backend>> {
+        if !self.variants.iter().any(|v| v == variant) {
+            bail!("no fixture variant {variant:?}");
+        }
+        Ok(Box::new(FixtureBackend {
+            variant: variant.to_string(),
+            max_batch: self.max_batch,
+            fail_on_byte: self.fail_on_byte,
+            panic_on_byte: self.panic_on_byte,
+        }))
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Serving workloads + backend selection
 // ---------------------------------------------------------------------------
 
@@ -744,6 +865,42 @@ mod tests {
         for (row, img) in served.iter().zip(&views) {
             assert_eq!(row, &f.model().forward(&hostile, img));
         }
+    }
+
+    #[test]
+    fn fixture_backend_is_deterministic_and_injectable() {
+        let f = FixtureFactory::new(&["a", "b"], 4);
+        assert_eq!(f.variants(), vec!["a".to_string(), "b".to_string()]);
+        assert!(f.create("nope").is_err());
+        let mut be = f.create("a").unwrap();
+        let img1 = vec![7u8; IMAGE_BYTES];
+        let img2 = vec![9u8; IMAGE_BYTES];
+        let rows = be.infer_batch(&[&img1, &img2]).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].len(), LOGITS);
+        // Bit-reproducible from the pure reference function, and
+        // variant-dependent.
+        assert_eq!(rows[0], fixture_logits("a", &img1));
+        assert_eq!(rows[1], fixture_logits("a", &img2));
+        assert_ne!(fixture_logits("a", &img1), fixture_logits("b", &img1));
+        assert_ne!(rows[0], rows[1]);
+        // Shape guards.
+        let short = vec![0u8; 3];
+        assert!(be.infer_batch(&[short.as_slice()]).is_err());
+        assert!(be
+            .infer_batch(&[&img1, &img1, &img1, &img1, &img1])
+            .is_err());
+
+        // Injected failure and panic, keyed on the first image byte.
+        let f = FixtureFactory::new(&["a"], 4).fail_on_byte(0xEE).panic_on_byte(0xDD);
+        let mut be = f.create("a").unwrap();
+        let bad = vec![0xEEu8; IMAGE_BYTES];
+        assert!(be.infer_batch(&[bad.as_slice()]).is_err());
+        let boom = vec![0xDDu8; IMAGE_BYTES];
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = be.infer_batch(&[boom.as_slice()]);
+        }));
+        assert!(r.is_err(), "panic byte must panic");
     }
 
     #[test]

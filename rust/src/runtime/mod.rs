@@ -21,7 +21,7 @@ pub mod backend;
 
 pub use artifacts::ArtifactStore;
 pub use backend::{
-    Backend, BackendChoice, BackendFactory, NativeBackend, NativeFactory, PjrtBackend,
-    PjrtFactory, ServingWorkload,
+    fixture_logits, Backend, BackendChoice, BackendFactory, FixtureBackend, FixtureFactory,
+    NativeBackend, NativeFactory, PjrtBackend, PjrtFactory, ServingWorkload,
 };
 pub use client::{CompiledModel, Runtime};

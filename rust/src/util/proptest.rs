@@ -1,4 +1,6 @@
-//! Miniature property-testing harness (no `proptest` crate offline).
+//! Miniature property-testing harness (no `proptest` crate offline), plus
+//! the deterministic adversarial workload generator the serving test and
+//! bench suites share ([`adversarial_workload`]).
 //!
 //! Usage pattern inside a `#[test]`:
 //!
@@ -160,6 +162,169 @@ where
     (vals, msg)
 }
 
+// ---------------------------------------------------------------------------
+// Adversarial workload generator (serving tests + benches)
+// ---------------------------------------------------------------------------
+
+/// Arrival shapes for the serving harness. All timing is *virtual*
+/// (µs offsets baked into the stream at generation time from the seeded
+/// RNG — no wall-clock randomness anywhere), so the same seed replays
+/// byte-identically; callers may honor the gaps or replay at maximum
+/// pressure by ignoring them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArrivalPattern {
+    /// Independent exponential inter-arrival gaps (open-loop Poisson).
+    Poisson,
+    /// Tight back-to-back bursts separated by long idle gaps — stresses
+    /// admission shedding and batch-width amortization.
+    Burst,
+    /// A trickle with gaps far above the batching window — stresses the
+    /// deadline-proximity close rule (a size/timeout-only batcher idles
+    /// the full window per request).
+    SlowLoris,
+    /// Poisson arrivals where a slice of payloads are malformed
+    /// (wrong-size images) — the server must reject them at the door
+    /// without poisoning batchmates.
+    MalformedFlood,
+}
+
+/// The four adversarial shapes the serving property suite sweeps.
+pub const ADVERSARIAL_PATTERNS: [ArrivalPattern; 4] = [
+    ArrivalPattern::Poisson,
+    ArrivalPattern::Burst,
+    ArrivalPattern::SlowLoris,
+    ArrivalPattern::MalformedFlood,
+];
+
+/// One synthetic request in a generated stream. Pure indices + sizes —
+/// the generator knows nothing about images, variants or classes beyond
+/// the menu sizes in [`WorkloadSpec`], so tests and benches map them onto
+/// whatever pools they own.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SynthRequest {
+    /// Virtual arrival time, µs since stream start (non-decreasing).
+    pub at_us: u64,
+    /// Index into the caller's image pool (`< spec.images`).
+    pub image: usize,
+    /// Index into the caller's variant menu (`< spec.variants`).
+    pub variant: usize,
+    /// `Some(i)`: route by the caller's accuracy class `i`
+    /// (`< spec.classes`) instead of by `variant`.
+    pub class: Option<usize>,
+    /// `Some(n)`: send a malformed payload of `n` bytes (never the
+    /// well-formed size) instead of image `image`.
+    pub malformed: Option<usize>,
+}
+
+/// Shape parameters for [`adversarial_workload`].
+#[derive(Clone, Copy, Debug)]
+pub struct WorkloadSpec {
+    pub pattern: ArrivalPattern,
+    /// Requests to generate.
+    pub n: usize,
+    /// Image-pool size the `image` indices draw from.
+    pub images: usize,
+    /// Variant-menu size the `variant` indices draw from.
+    pub variants: usize,
+    /// Accuracy-class menu size; 0 disables class routing, otherwise
+    /// roughly half the stream routes by class (the "class mix").
+    pub classes: usize,
+    /// Mean inter-arrival gap for [`ArrivalPattern::Poisson`]; bursts
+    /// idle ~50× this between bursts, slow-loris trickles at ~20×.
+    pub mean_gap_us: u64,
+    /// Well-formed payload size in bytes; malformed payloads are sized
+    /// to never equal it.
+    pub payload: usize,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        Self {
+            pattern: ArrivalPattern::Poisson,
+            n: 1000,
+            images: 64,
+            variants: 4,
+            classes: 0,
+            mean_gap_us: 100,
+            payload: 256,
+        }
+    }
+}
+
+/// Generate a deterministic adversarial request stream: same `seed` +
+/// `spec` → an identical `Vec` on every call, machine and run (the RNG is
+/// [`Pcg32`]; no wall clock, no hasher ambient state).
+pub fn adversarial_workload(seed: u64, spec: &WorkloadSpec) -> Vec<SynthRequest> {
+    assert!(spec.images > 0 && spec.variants > 0, "empty image/variant menu");
+    let mut rng = Pcg32::new(seed ^ 0xADE5_A21A_1000_0000u64.wrapping_add(spec.pattern as u64));
+    let mean = spec.mean_gap_us.max(1) as f64;
+    let mut at_us = 0u64;
+    let mut burst_left = 0usize;
+    let mut out = Vec::with_capacity(spec.n);
+    for _ in 0..spec.n {
+        // Arrival-time advance per pattern.
+        let gap = match spec.pattern {
+            ArrivalPattern::Poisson | ArrivalPattern::MalformedFlood => exp_gap(&mut rng, mean),
+            ArrivalPattern::SlowLoris => exp_gap(&mut rng, mean * 20.0) + spec.mean_gap_us * 10,
+            ArrivalPattern::Burst => {
+                if burst_left == 0 {
+                    burst_left = 8 + rng.below(57) as usize; // bursts of 8..=64
+                    exp_gap(&mut rng, mean * 50.0)
+                } else {
+                    0
+                }
+            }
+        };
+        burst_left = burst_left.saturating_sub(1);
+        at_us = at_us.saturating_add(gap);
+        // 1-in-5 payloads of a malformed flood are malformed.
+        let malformed = if spec.pattern == ArrivalPattern::MalformedFlood && rng.below(5) == 0 {
+            Some(malformed_size(&mut rng, spec.payload))
+        } else {
+            None
+        };
+        // Class mix: about half the stream routes by accuracy class.
+        let class = if spec.classes > 0 && rng.below(2) == 0 {
+            Some(rng.below(spec.classes as u32) as usize)
+        } else {
+            None
+        };
+        out.push(SynthRequest {
+            at_us,
+            image: rng.below(spec.images as u32) as usize,
+            variant: rng.below(spec.variants as u32) as usize,
+            class,
+            malformed,
+        });
+    }
+    out
+}
+
+/// Exponential inter-arrival gap with the given mean, in whole µs.
+fn exp_gap(rng: &mut Pcg32, mean_us: f64) -> u64 {
+    let u = rng.next_f64().clamp(1e-12, 1.0 - 1e-12);
+    (-u.ln() * mean_us).round() as u64
+}
+
+/// A payload size that is never the well-formed one: boundary sizes
+/// (0, 1, ±1 around `payload`) plus random small/large outliers.
+fn malformed_size(rng: &mut Pcg32, payload: usize) -> usize {
+    let candidates = [
+        0,
+        1,
+        payload.saturating_sub(1),
+        payload + 1,
+        payload * 16,
+        rng.below(4096) as usize,
+    ];
+    let pick = candidates[rng.below(candidates.len() as u32) as usize];
+    if pick == payload {
+        payload + 1
+    } else {
+        pick
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -198,6 +363,73 @@ mod tests {
             .unwrap_or_default();
         // Minimal failing value for `a < 100` is 100 exactly.
         assert!(msg.contains("a=100"), "shrunk message: {msg}");
+    }
+
+    #[test]
+    fn workload_generator_is_deterministic_and_in_range() {
+        for pattern in ADVERSARIAL_PATTERNS {
+            let spec = WorkloadSpec {
+                pattern,
+                n: 2000,
+                images: 32,
+                variants: 4,
+                classes: 3,
+                ..WorkloadSpec::default()
+            };
+            let a = adversarial_workload(0xFEED, &spec);
+            let b = adversarial_workload(0xFEED, &spec);
+            assert_eq!(a, b, "same seed must replay byte-identically");
+            let c = adversarial_workload(0xBEEF, &spec);
+            assert_ne!(a, c, "different seed must differ");
+            assert_eq!(a.len(), 2000);
+            let mut prev = 0u64;
+            for r in &a {
+                assert!(r.at_us >= prev, "arrival times must be non-decreasing");
+                prev = r.at_us;
+                assert!(r.image < 32 && r.variant < 4);
+                if let Some(cls) = r.class {
+                    assert!(cls < 3);
+                }
+                if let Some(sz) = r.malformed {
+                    assert_ne!(sz, spec.payload, "malformed size equals payload");
+                }
+            }
+            // The class mix really mixes.
+            let classed = a.iter().filter(|r| r.class.is_some()).count();
+            assert!(classed > 500 && classed < 1500, "class mix {classed}/2000");
+        }
+    }
+
+    #[test]
+    fn workload_patterns_have_their_shapes() {
+        let spec = |pattern| WorkloadSpec {
+            pattern,
+            n: 2000,
+            ..WorkloadSpec::default()
+        };
+        // Burst: plenty of zero-gap adjacencies.
+        let burst = adversarial_workload(7, &spec(ArrivalPattern::Burst));
+        let zero_gaps = burst
+            .windows(2)
+            .filter(|w| w[1].at_us == w[0].at_us)
+            .count();
+        assert!(zero_gaps > 1000, "bursts must arrive back-to-back ({zero_gaps})");
+        // Slow loris: every gap dwarfs the Poisson mean.
+        let loris = adversarial_workload(7, &spec(ArrivalPattern::SlowLoris));
+        let min_gap = loris
+            .windows(2)
+            .map(|w| w[1].at_us - w[0].at_us)
+            .min()
+            .unwrap();
+        assert!(min_gap >= 1000, "slow-loris trickle gap {min_gap}µs too small");
+        // Poisson: no malformed payloads; flood: a meaningful slice, but
+        // well-formed requests survive alongside them.
+        assert!(adversarial_workload(7, &spec(ArrivalPattern::Poisson))
+            .iter()
+            .all(|r| r.malformed.is_none()));
+        let flood = adversarial_workload(7, &spec(ArrivalPattern::MalformedFlood));
+        let bad = flood.iter().filter(|r| r.malformed.is_some()).count();
+        assert!(bad > 200 && bad < 800, "flood malformed share {bad}/2000");
     }
 
     #[test]

@@ -17,7 +17,7 @@ use std::time::Duration;
 
 use openacm::config::spec::MultFamily;
 use openacm::coordinator::batcher::BatchPolicy;
-use openacm::coordinator::server::{InferenceServer, Request};
+use openacm::coordinator::server::{Delivery, InferenceServer, Request};
 use openacm::mult::behavioral::int8_lut;
 use openacm::nn::eval::argmax;
 use openacm::nn::model::{synthetic_images, QuantCnn};
@@ -64,6 +64,10 @@ fn native_soak_500_requests_accounting_fifo_and_exact_logits() {
         BatchPolicy {
             max_batch: 32,
             max_wait: Duration::from_millis(1),
+            // A generous SLO: this test asserts bit-exactness and FIFO, not
+            // deadline behavior (that's rust/tests/serving_shard.rs).
+            slo: Duration::from_secs(60),
+            ..BatchPolicy::default()
         },
         64, // small enough that a 500-burst may shed; accounting must hold
     )
@@ -82,11 +86,7 @@ fn native_soak_500_requests_accounting_fifo_and_exact_logits() {
     let mut shed = 0usize;
     for (seq, image) in images.iter().enumerate() {
         let v = variant_of(seq);
-        match server.submit(Request {
-            image: image.clone(),
-            variant: v.to_string(),
-            respond: chans[v].0.clone(),
-        }) {
+        match server.submit(Request::to_variant(image.clone(), *v, chans[v].0.clone())) {
             Ok(()) => admitted.entry(v).or_default().push(seq),
             Err(e) => {
                 assert!(e.to_string().contains("shed"), "unexpected submit error: {e:#}");
@@ -108,10 +108,15 @@ fn native_soak_500_requests_accounting_fifo_and_exact_logits() {
         let rx = &chans[v].1;
         let mut got = Vec::with_capacity(seqs.len());
         for i in 0..seqs.len() {
-            let resp = rx
+            let resp = match rx
                 .recv_timeout(Duration::from_secs(60))
-                .unwrap_or_else(|_| panic!("variant {v}: response {i}/{} lost", seqs.len()));
+                .unwrap_or_else(|_| panic!("variant {v}: response {i}/{} lost", seqs.len()))
+            {
+                Delivery::Ok(resp) => resp,
+                Delivery::Failed(reason) => panic!("variant {v}: request {i} failed: {reason}"),
+            };
             assert_eq!(resp.logits.len(), 10);
+            assert_eq!(resp.variant, *v, "response echoes the serving variant");
             assert_eq!(
                 resp.predicted,
                 argmax(&resp.logits),
@@ -150,6 +155,8 @@ fn native_server_serves_all_paper_variants_without_artifacts() {
         BatchPolicy {
             max_batch: 8,
             max_wait: Duration::from_millis(1),
+            slo: Duration::from_secs(60),
+            ..BatchPolicy::default()
         },
         4096,
     )
@@ -169,22 +176,14 @@ fn native_server_serves_all_paper_variants_without_artifacts() {
     // Unknown variants still bounce with a useful error.
     let (tx, _rx) = channel();
     let err = server
-        .submit(Request {
-            image: vec![0; 256],
-            variant: "no-such-family".into(),
-            respond: tx,
-        })
+        .submit(Request::to_variant(vec![0; 256], "no-such-family", tx))
         .unwrap_err();
     assert!(err.to_string().contains("unknown variant"));
     // Malformed images are rejected at the door — they must never reach
     // a batch, where they would sink their batchmates' responses too.
     let (tx, _rx) = channel();
     let err = server
-        .submit(Request {
-            image: vec![0; 100],
-            variant: "exact".into(),
-            respond: tx,
-        })
+        .submit(Request::to_variant(vec![0; 100], "exact", tx))
         .unwrap_err();
     assert!(err.to_string().contains("256"), "{err:#}");
     // Well-formed traffic keeps flowing afterwards.
@@ -271,6 +270,8 @@ fn coordinator_serves_all_variants_concurrently() {
         BatchPolicy {
             max_batch: 16,
             max_wait: Duration::from_millis(2),
+            slo: Duration::from_secs(60),
+            ..BatchPolicy::default()
         },
     )
     .unwrap();
@@ -283,19 +284,20 @@ fn coordinator_serves_all_variants_concurrently() {
         let (tx, rx) = channel();
         let variant = variants[i % variants.len()].clone();
         server
-            .submit(Request {
-                image: store.image(i % store.n_images).to_vec(),
+            .submit(Request::to_variant(
+                store.image(i % store.n_images).to_vec(),
                 variant,
-                respond: tx,
-            })
+                tx,
+            ))
             .unwrap();
         pending.push((i, rx));
     }
     let mut correct = 0;
     for (i, rx) in pending {
-        let resp = rx
-            .recv_timeout(Duration::from_secs(60))
-            .expect("response arrived");
+        let resp = match rx.recv_timeout(Duration::from_secs(60)).expect("response arrived") {
+            Delivery::Ok(resp) => resp,
+            Delivery::Failed(reason) => panic!("request {i} failed: {reason}"),
+        };
         assert_eq!(resp.logits.len(), 10);
         if resp.predicted == store.labels[i % store.n_images] {
             correct += 1;
@@ -315,11 +317,7 @@ fn coordinator_rejects_unknown_variant() {
     let server = InferenceServer::start(&store, BatchPolicy::default()).unwrap();
     let (tx, _rx) = channel();
     let err = server
-        .submit(Request {
-            image: vec![0; 256],
-            variant: "no-such-family".into(),
-            respond: tx,
-        })
+        .submit(Request::to_variant(vec![0; 256], "no-such-family", tx))
         .unwrap_err();
     assert!(err.to_string().contains("unknown variant"));
     server.shutdown();
@@ -334,6 +332,8 @@ fn admission_sheds_load_beyond_queue_limit() {
         BatchPolicy {
             max_batch: 4,
             max_wait: Duration::from_millis(50),
+            slo: Duration::from_secs(60),
+            ..BatchPolicy::default()
         },
         4,
     )
@@ -343,11 +343,11 @@ fn admission_sheds_load_beyond_queue_limit() {
     let mut shed = 0;
     for i in 0..12 {
         let (tx, rx) = channel();
-        match server.submit(Request {
-            image: store.image(i % store.n_images).to_vec(),
-            variant: variant.clone(),
-            respond: tx,
-        }) {
+        match server.submit(Request::to_variant(
+            store.image(i % store.n_images).to_vec(),
+            variant.clone(),
+            tx,
+        )) {
             Ok(()) => rxs.push(rx),
             Err(e) => {
                 assert!(e.to_string().contains("shed"), "{e:#}");

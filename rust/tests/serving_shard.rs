@@ -1,0 +1,688 @@
+//! Sharded-serving property suite: the adversarial workload generator
+//! (`util::proptest::adversarial_workload`) drives the sharded, SLO-aware
+//! coordinator and every delivery is checked against hard invariants:
+//!
+//! * **exact accounting** — `delivered + shed + rejected == submitted`
+//!   across shard counts {1, 2, 4} × all four adversarial arrival
+//!   patterns, with `ok + failed == delivered` and the server's own
+//!   metrics agreeing with the external count;
+//! * **bit-identical deliveries** — every `Delivery::Ok` bit-matches the
+//!   reference function of (serving variant, image payload): the fixture
+//!   backend's pure [`fixture_logits`], and the real native backend's
+//!   scalar `QuantCnn::forward`;
+//! * **accuracy-class routing** — table-driven proof that the router picks
+//!   the *cheapest* variant whose store-recorded calibration accuracy
+//!   satisfies the class, deterministically, end to end through a live
+//!   sharded server;
+//! * **soak** — ≥10⁶ synthetic requests through the sharded pipeline
+//!   (`--ignored`; a CI-feasible smoke slice runs by default) with zero
+//!   metrics-footprint growth and sane latency percentiles;
+//! * **failure modes** — expired deadlines, injected backend errors, and
+//!   worker panics each fail fast with the right [`FailReason`]; a panic
+//!   marks the server unhealthy (→ non-zero `openacm serve` exit) without
+//!   touching sibling shards; graceful shutdown drains in-flight work.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Duration;
+
+use openacm::coordinator::batcher::BatchPolicy;
+use openacm::coordinator::router::{AccuracyClass, HashRing, RoutingTable};
+use openacm::coordinator::server::{
+    Delivery, FailReason, InferenceServer, Request, Route, ServerConfig, SubmitError,
+};
+use openacm::coordinator::warmstart::warm_start_profiles;
+use openacm::runtime::{fixture_logits, BackendFactory, FixtureFactory};
+use openacm::util::proptest::{adversarial_workload, WorkloadSpec, ADVERSARIAL_PATTERNS};
+use openacm::util::rng::Pcg32;
+
+/// Deterministic 256-byte payload pool. The high bit (and the injection
+/// bytes 0xEE/0xDD) never appear, so failure injection stays opt-in.
+fn images(n: usize, seed: u64) -> Vec<Vec<u8>> {
+    let mut rng = Pcg32::new(seed);
+    (0..n)
+        .map(|_| (0..256).map(|_| (rng.next_u64() & 0x7f) as u8).collect())
+        .collect()
+}
+
+fn bits(logits: &[f32]) -> Vec<u32> {
+    logits.iter().map(|x| x.to_bits()).collect()
+}
+
+/// A policy with an SLO no healthy request will miss: these tests prove
+/// accounting and bit-exactness; deadline behavior is tested explicitly
+/// in `failure_modes_deadline_execute_and_unroutable_class`.
+fn lax_policy(max_batch: usize) -> BatchPolicy {
+    BatchPolicy {
+        max_batch,
+        max_wait: Duration::from_millis(1),
+        slo: Duration::from_secs(60),
+        ..BatchPolicy::default()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Accounting + bit-exactness across shards × adversarial patterns
+// ---------------------------------------------------------------------------
+
+#[test]
+fn accounting_identity_holds_across_shards_and_adversarial_patterns() {
+    const MENU: [&str; 4] = ["appro42", "exact", "lm", "logour"];
+    let imgs = images(64, 0xACC7);
+    let classes = [
+        AccuracyClass::parse("best-effort").unwrap(),
+        AccuracyClass::parse("bronze").unwrap(),
+    ];
+    for shards in [1usize, 2, 4] {
+        for pattern in ADVERSARIAL_PATTERNS {
+            let spec = WorkloadSpec {
+                pattern,
+                n: 400,
+                images: imgs.len(),
+                variants: MENU.len(),
+                classes: classes.len(),
+                ..WorkloadSpec::default()
+            };
+            let seed = 0xBEEF ^ shards as u64;
+            let reqs = adversarial_workload(seed, &spec);
+            assert_eq!(
+                reqs,
+                adversarial_workload(seed, &spec),
+                "generator must replay byte-identically from its seed"
+            );
+            let server = InferenceServer::start_sharded(
+                Arc::new(FixtureFactory::new(&MENU, 16)),
+                ServerConfig {
+                    shards,
+                    policy: lax_policy(16),
+                    // Small enough that burst patterns may shed; the
+                    // accounting identity must hold either way.
+                    queue_limit: 64,
+                },
+            )
+            .unwrap();
+            assert_eq!(server.shards(), shards);
+
+            // Replay at maximum pressure (virtual gaps ignored). Every
+            // admitted request contributes its expected (serving variant,
+            // logits bit pattern) to a multiset the drain checks off.
+            let (tx, rx) = channel();
+            let mut admitted = 0usize;
+            let mut shed = 0usize;
+            let mut rejected = 0usize;
+            let mut expect: HashMap<(String, Vec<u32>), i64> = HashMap::new();
+            for r in &reqs {
+                let (payload, route, served_by) = match r.malformed {
+                    Some(size) => (
+                        vec![0u8; size],
+                        Route::Variant(MENU[r.variant].to_string()),
+                        None,
+                    ),
+                    None => match r.class {
+                        Some(c) => {
+                            let class = classes[c % classes.len()].clone();
+                            let v = server
+                                .routing()
+                                .select(&class)
+                                .expect("exact is served, so every class routes")
+                                .variant;
+                            (imgs[r.image].clone(), Route::Class(class), Some(v))
+                        }
+                        None => {
+                            let v = MENU[r.variant].to_string();
+                            (imgs[r.image].clone(), Route::Variant(v.clone()), Some(v))
+                        }
+                    },
+                };
+                match server.submit(Request {
+                    image: payload,
+                    route,
+                    slo: None,
+                    respond: tx.clone(),
+                }) {
+                    Ok(()) => {
+                        admitted += 1;
+                        let v = served_by.expect("admitted requests resolved a variant");
+                        let key = bits(&fixture_logits(&v, &imgs[r.image]));
+                        *expect.entry((v, key)).or_insert(0) += 1;
+                    }
+                    Err(SubmitError::Shed { .. }) => shed += 1,
+                    Err(SubmitError::Malformed(_)) => {
+                        assert!(
+                            r.malformed.is_some(),
+                            "only generator-malformed payloads may bounce as malformed"
+                        );
+                        rejected += 1;
+                    }
+                    Err(e) => panic!("unexpected submit error: {e}"),
+                }
+            }
+            let generated_malformed = reqs.iter().filter(|r| r.malformed.is_some()).count();
+            assert_eq!(
+                rejected, generated_malformed,
+                "every malformed payload must be rejected at the door \
+                 (shards {shards}, pattern {pattern:?})"
+            );
+            assert_eq!(
+                admitted + shed + rejected,
+                reqs.len(),
+                "accounting identity (shards {shards}, pattern {pattern:?})"
+            );
+            assert_eq!(server.admission.shed_total(), shed);
+
+            // Drain: exactly one delivery per admitted request, every Ok
+            // bit-matching its reference logits.
+            let mut ok = 0usize;
+            let mut failed = 0usize;
+            for i in 0..admitted {
+                let d = rx.recv_timeout(Duration::from_secs(120)).unwrap_or_else(|_| {
+                    panic!("delivery {i}/{admitted} lost (shards {shards}, pattern {pattern:?})")
+                });
+                match d {
+                    Delivery::Ok(resp) => {
+                        let key = (resp.variant.clone(), bits(&resp.logits));
+                        let left = expect.get_mut(&key).unwrap_or_else(|| {
+                            panic!(
+                                "delivered logits bit-match no admitted (variant, image): \
+                                 variant {}",
+                                resp.variant
+                            )
+                        });
+                        *left -= 1;
+                        assert!(*left >= 0, "duplicated delivery for variant {}", resp.variant);
+                        ok += 1;
+                    }
+                    Delivery::Failed(_) => failed += 1,
+                }
+            }
+            assert!(rx.try_recv().is_err(), "spurious extra delivery");
+            assert_eq!(ok + failed, admitted);
+            assert_eq!(
+                failed, 0,
+                "a healthy backend under a 60s SLO must not fail deliveries"
+            );
+            assert!(
+                expect.values().all(|&c| c == 0),
+                "every admitted request must be delivered exactly once"
+            );
+            let snap = server.metrics.snapshot();
+            assert_eq!(snap.completed, ok as u64);
+            assert_eq!(snap.failed, failed as u64);
+            server.shutdown();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Native-backend bit-exactness through the sharded pipeline
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sharded_native_deliveries_bit_match_reference_forward() {
+    use openacm::runtime::backend::synthetic_serving_setup;
+    let (factory, workload) = synthetic_serving_setup(24, 42, 8, 1);
+    let menu = factory.variants();
+    let model = Arc::clone(factory.model());
+    let luts: BTreeMap<String, Arc<Vec<i32>>> = menu
+        .iter()
+        .map(|v| (v.clone(), Arc::clone(factory.lut(v).expect("paper variant has a LUT"))))
+        .collect();
+
+    let server = InferenceServer::start_sharded(
+        Arc::new(factory),
+        ServerConfig {
+            shards: 2,
+            policy: lax_policy(8),
+            queue_limit: 4096,
+        },
+    )
+    .unwrap();
+
+    // Expected multiset: the scalar reference forward of every
+    // (variant, image) pair submitted.
+    let mut expect: HashMap<(String, Vec<u32>), i64> = HashMap::new();
+    let (tx, rx) = channel();
+    let mut submitted = 0usize;
+    for i in 0..workload.n_images {
+        for v in &menu {
+            let img = workload.image(i);
+            let key = bits(&model.forward(&luts[v], img));
+            *expect.entry((v.clone(), key)).or_insert(0) += 1;
+            server
+                .submit(Request::to_variant(img.to_vec(), v.clone(), tx.clone()))
+                .unwrap();
+            submitted += 1;
+        }
+    }
+    for i in 0..submitted {
+        match rx
+            .recv_timeout(Duration::from_secs(120))
+            .unwrap_or_else(|_| panic!("delivery {i}/{submitted} lost"))
+        {
+            Delivery::Ok(resp) => {
+                let key = (resp.variant.clone(), bits(&resp.logits));
+                let left = expect
+                    .get_mut(&key)
+                    .expect("delivered logits must bit-match a reference forward");
+                *left -= 1;
+                assert!(*left >= 0);
+            }
+            Delivery::Failed(reason) => panic!("delivery {i} failed: {reason}"),
+        }
+    }
+    assert!(expect.values().all(|&c| c == 0));
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Accuracy-class routing, table-driven from store records
+// ---------------------------------------------------------------------------
+
+#[test]
+fn class_routing_picks_cheapest_satisfying_variant_from_store_records() {
+    use openacm::store::{
+        AccuracyStats, DesignPointRecord, DesignPointStore, KeyBuilder, PpaSummary,
+    };
+    let dir = std::env::temp_dir().join(format!(
+        "openacm_route_{}_{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let store = DesignPointStore::open(&dir).unwrap();
+    let ppa = |energy: f64| PpaSummary {
+        delay_ns: 5.0,
+        logic_area_um2: 1.0,
+        sram_area_um2: 1.0,
+        pnr_area_um2: 2.0,
+        power_w: 1.0,
+        energy_per_op_j: energy,
+        logic_power_w: 0.5,
+        mult_gates: 10,
+    };
+    // (family, calibration top-1, energy J/op). Drops vs the 0.95 exact
+    // baseline: appro42 0.05%, log-our 1.5%, lm 10%.
+    let specs = [
+        ("exact", 0.95, 2.5e-12),
+        ("appro42[yang1x8]", 0.9495, 2.1e-12),
+        ("log-our", 0.935, 1.4e-12),
+        ("lm-mitchell", 0.85, 1.2e-12),
+    ];
+    for (i, (family, top1, energy)) in specs.iter().enumerate() {
+        let label = [*family; 4].join(",");
+        // The uniform compile-accuracy record (what `openacm compile`
+        // persists when it measures a per-family calibration point)...
+        store
+            .put(
+                KeyBuilder::new("serving-route-test/1").u64(2 * i as u64).finish(),
+                &DesignPointRecord {
+                    family: format!("compile[{label}]"),
+                    bits: 8,
+                    accuracy: Some(AccuracyStats {
+                        top1: *top1,
+                        samples: 256,
+                    }),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        // ...and the PPA record supplying the energy column.
+        store
+            .put(
+                KeyBuilder::new("serving-route-test/1").u64(2 * i as u64 + 1).finish(),
+                &DesignPointRecord {
+                    family: family.to_string(),
+                    bits: 8,
+                    rows: 16,
+                    n_ops: 1000,
+                    ppa: Some(ppa(*energy)),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+    }
+
+    let profiles = warm_start_profiles(&store, 8);
+    let variants: Vec<String> = ["appro42", "exact", "lm", "logour"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let table = RoutingTable::from_profiles(&profiles, &variants);
+    // Cheapest-first, and deterministic across rebuilds.
+    let order: Vec<&str> = table.entries().iter().map(|e| e.variant.as_str()).collect();
+    assert_eq!(order, ["lm", "logour", "appro42", "exact"]);
+    let rebuilt = RoutingTable::from_profiles(&warm_start_profiles(&store, 8), &variants);
+    assert_eq!(
+        rebuilt.entries().iter().map(|e| e.variant.as_str()).collect::<Vec<_>>(),
+        order,
+        "table construction must be deterministic"
+    );
+
+    // Table-driven: each class must pick the CHEAPEST variant whose
+    // measured drop satisfies it (never a cheaper-but-worse or a
+    // costlier-but-better one).
+    let cases = [
+        ("best-effort", "lm"),     // everything satisfies; lm is cheapest
+        ("bronze", "logour"),      // lm (10%) out; logour (1.5%) in
+        ("gold", "appro42"),       // only appro42 (0.05%) and exact; appro42 cheaper
+        ("exact", "exact"),        // only the drop-0 entry satisfies
+    ];
+    for (class, want) in cases {
+        let d = table
+            .select(&AccuracyClass::parse(class).unwrap())
+            .unwrap_or_else(|| panic!("class {class} must be routable"));
+        assert_eq!(d.variant, want, "class {class}");
+        assert!(!d.fallback, "class {class} routed to a measured entry");
+    }
+
+    // End to end through a live sharded server: the response's `variant`
+    // echoes the routing decision and the logits come from that variant.
+    let mut server = InferenceServer::start_sharded(
+        Arc::new(FixtureFactory::new(&["appro42", "exact", "lm", "logour"], 8)),
+        ServerConfig {
+            shards: 2,
+            policy: lax_policy(8),
+            queue_limit: 64,
+        },
+    )
+    .unwrap();
+    server.attach_profiles(profiles);
+    let imgs = images(cases.len(), 0x0A11);
+    for (i, (class, want)) in cases.iter().enumerate() {
+        let resp = server
+            .infer_route(
+                imgs[i].clone(),
+                Route::Class(AccuracyClass::parse(class).unwrap()),
+                None,
+            )
+            .unwrap();
+        assert_eq!(resp.variant, *want, "served variant for class {class}");
+        assert_eq!(
+            resp.logits,
+            fixture_logits(want, &imgs[i]),
+            "logits must come from the routed variant"
+        );
+    }
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Soak: ≥1M requests (full mode), CI-feasible smoke slice by default
+// ---------------------------------------------------------------------------
+
+/// Push `n` requests through a `shards`-shard fixture-backed pipeline at
+/// maximum pressure, retrying sheds so every request eventually transits.
+/// Asserts exact accounting, zero failed deliveries, zero
+/// metrics-footprint growth, and sane percentiles.
+fn soak(n: usize, shards: usize) {
+    const MENU: [&str; 2] = ["approx", "exact"];
+    let imgs = images(64, 0x50AC ^ n as u64);
+    let server = InferenceServer::start_sharded(
+        Arc::new(FixtureFactory::new(&MENU, 32)),
+        ServerConfig {
+            shards,
+            policy: lax_policy(32),
+            queue_limit: 4096,
+        },
+    )
+    .unwrap();
+    let metrics = Arc::clone(&server.metrics);
+    let bytes_at_boot = metrics.resident_bytes();
+
+    let (tx, rx) = channel();
+    let drainer = std::thread::spawn(move || {
+        let mut ok = 0u64;
+        let mut failed = 0u64;
+        for i in 0..n {
+            match rx
+                .recv_timeout(Duration::from_secs(300))
+                .unwrap_or_else(|_| panic!("soak delivery {i}/{n} lost"))
+            {
+                Delivery::Ok(_) => ok += 1,
+                Delivery::Failed(_) => failed += 1,
+            }
+        }
+        (ok, failed)
+    });
+
+    let mut sheds = 0u64;
+    for i in 0..n {
+        let img = &imgs[i % imgs.len()];
+        let variant = MENU[i % MENU.len()];
+        let mut spins = 0u64;
+        loop {
+            match server.submit(Request::to_variant(img.clone(), variant, tx.clone())) {
+                Ok(()) => break,
+                Err(SubmitError::Shed { .. }) => {
+                    // Backpressure, not an error: yield and retry so all
+                    // `n` requests transit the pipeline.
+                    sheds += 1;
+                    spins += 1;
+                    assert!(spins < 10_000_000, "pipeline stopped draining at request {i}");
+                    std::thread::yield_now();
+                }
+                Err(e) => panic!("soak request {i}: unexpected submit error: {e}"),
+            }
+        }
+    }
+    drop(tx);
+    let (ok, failed) = drainer.join().expect("drainer thread");
+    assert_eq!(ok + failed, n as u64, "exactly one delivery per request");
+    assert_eq!(failed, 0, "healthy backend + lax SLO must not fail deliveries");
+    assert_eq!(server.admission.shed_total() as u64, sheds);
+
+    let snap = metrics.snapshot();
+    assert_eq!(snap.completed, n as u64);
+    assert!(
+        snap.p50_ms <= snap.p99_ms,
+        "p50 {} must not exceed p99 {}",
+        snap.p50_ms,
+        snap.p99_ms
+    );
+    assert!(snap.p99_ms.is_finite() && snap.p50_ms >= 0.0);
+    // Fixed-size telemetry: a soak of any length must not grow the
+    // metrics footprint by a single byte (extends the PR 7 guard to the
+    // sharded path).
+    assert_eq!(
+        metrics.resident_bytes(),
+        bytes_at_boot,
+        "metrics footprint grew during a {n}-request soak"
+    );
+    assert!(server.healthy());
+    server.shutdown();
+    eprintln!(
+        "soak shards={shards}: {n} requests, {sheds} sheds retried, \
+         p50 {:.3} ms p99 {:.3} ms, {:.0} req/s",
+        snap.p50_ms, snap.p99_ms, snap.throughput_rps
+    );
+}
+
+/// CI-feasible smoke slice of the soak harness, across shard counts.
+#[test]
+fn soak_smoke_sharded_pipeline() {
+    soak(60_000, 1);
+    soak(60_000, 4);
+}
+
+/// The full million-request soak (`cargo test -- --ignored`); the CI
+/// serving-soak job runs the smoke slice plus the CLI drive instead.
+#[test]
+#[ignore = "million-request soak: run explicitly with --ignored"]
+fn soak_full_million_requests() {
+    soak(1_000_000, 4);
+}
+
+// ---------------------------------------------------------------------------
+// Failure modes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn failure_modes_deadline_execute_and_unroutable_class() {
+    let factory = FixtureFactory::new(&["exact"], 8).fail_on_byte(0xEE);
+    let server = InferenceServer::start_sharded(
+        Arc::new(factory),
+        ServerConfig {
+            shards: 1,
+            policy: lax_policy(8),
+            queue_limit: 16,
+        },
+    )
+    .unwrap();
+    let img = images(1, 7).remove(0);
+
+    // A deadline already expired at submit must fail in the batcher —
+    // deterministically, whatever the scheduler does.
+    let (tx, rx) = channel();
+    server
+        .submit(Request::to_variant(img.clone(), "exact", tx).with_slo(Duration::ZERO))
+        .unwrap();
+    match rx.recv_timeout(Duration::from_secs(30)).expect("delivery") {
+        Delivery::Failed(FailReason::DeadlineExpired) => {}
+        other => panic!("want DeadlineExpired, got {other:?}"),
+    }
+
+    // An injected backend error fails its batch with ExecuteFailed...
+    let mut bad = img.clone();
+    bad[0] = 0xEE;
+    let (tx, rx) = channel();
+    server.submit(Request::to_variant(bad, "exact", tx)).unwrap();
+    match rx.recv_timeout(Duration::from_secs(30)).expect("delivery") {
+        Delivery::Failed(FailReason::ExecuteFailed(_)) => {}
+        other => panic!("want ExecuteFailed, got {other:?}"),
+    }
+
+    // ...but an error is not a panic: the worker is NOT poisoned, traffic
+    // keeps flowing, and the server stays healthy.
+    let resp = server.infer(img.clone(), "exact").unwrap();
+    assert_eq!(resp.logits, fixture_logits("exact", &img));
+    assert!(server.healthy());
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.failed, 2);
+    assert_eq!(snap.completed, 1);
+    server.shutdown();
+
+    // A class is unroutable when no variant satisfies it and exact is not
+    // on the menu: typed rejection, no delivery ever owed.
+    let server = InferenceServer::start_sharded(
+        Arc::new(FixtureFactory::new(&["lm"], 4)),
+        ServerConfig {
+            shards: 1,
+            policy: lax_policy(4),
+            queue_limit: 16,
+        },
+    )
+    .unwrap();
+    let (tx, _rx) = channel();
+    let err = server
+        .submit(Request::to_class(
+            images(1, 8).remove(0),
+            AccuracyClass::parse("gold").unwrap(),
+            tx,
+        ))
+        .unwrap_err();
+    assert!(matches!(err, SubmitError::Unroutable(_)), "{err}");
+    server.shutdown();
+}
+
+#[test]
+fn worker_panic_fails_fast_marks_unhealthy_and_spares_other_shards() {
+    let factory = FixtureFactory::new(&["exact"], 8).panic_on_byte(0xDD);
+    let server = InferenceServer::start_sharded(
+        Arc::new(factory),
+        ServerConfig {
+            shards: 2,
+            policy: lax_policy(8),
+            queue_limit: 16,
+        },
+    )
+    .unwrap();
+    // Craft payloads that land on known shards (the server's ring is
+    // HashRing::new(2) by construction).
+    let ring = HashRing::new(2);
+    let on_shard = |first: u8, shard: usize| -> Vec<u8> {
+        let mut img = vec![0u8; 256];
+        img[0] = first;
+        for b in 0..=255u8 {
+            img[1] = b;
+            if ring.shard_for(HashRing::key_for(&img)) == shard {
+                return img;
+            }
+        }
+        panic!("no payload found for shard {shard}");
+    };
+    let poison = on_shard(0xDD, 0);
+    let same_shard = on_shard(0x01, 0);
+    let other_shard = on_shard(0x02, 1);
+
+    // Baseline: shard 0 serves.
+    let resp = server.infer(same_shard.clone(), "exact").unwrap();
+    assert_eq!(resp.logits, fixture_logits("exact", &same_shard));
+    assert!(server.healthy());
+
+    // The panicked batch FAILS — it must never silently hang.
+    let (tx, rx) = channel();
+    server.submit(Request::to_variant(poison, "exact", tx)).unwrap();
+    match rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("a panicked worker must still deliver a failure, not hang")
+    {
+        Delivery::Failed(FailReason::WorkerPanicked) => {}
+        other => panic!("want WorkerPanicked, got {other:?}"),
+    }
+
+    // Health records the panic (→ `openacm serve` exits non-zero).
+    let failure = server.failure().expect("health must record the panic");
+    assert!(failure.contains("panic"), "{failure}");
+    assert!(!server.healthy());
+
+    // The poisoned worker fails fast instead of re-entering a possibly
+    // corrupt backend...
+    let (tx, rx) = channel();
+    server.submit(Request::to_variant(same_shard, "exact", tx)).unwrap();
+    match rx.recv_timeout(Duration::from_secs(30)).expect("delivery") {
+        Delivery::Failed(FailReason::WorkerPanicked) => {}
+        other => panic!("poisoned worker must fail fast, got {other:?}"),
+    }
+
+    // ...while the sibling shard keeps serving bit-correct results.
+    let resp = server.infer(other_shard.clone(), "exact").unwrap();
+    assert_eq!(resp.logits, fixture_logits("exact", &other_shard));
+    server.shutdown();
+}
+
+#[test]
+fn graceful_shutdown_drains_in_flight_requests() {
+    let server = InferenceServer::start_sharded(
+        Arc::new(FixtureFactory::new(&["exact"], 8)),
+        ServerConfig {
+            shards: 2,
+            policy: lax_policy(8),
+            queue_limit: 64,
+        },
+    )
+    .unwrap();
+    let imgs = images(40, 0xD7A1);
+    let (tx, rx) = channel();
+    for img in &imgs {
+        server
+            .submit(Request::to_variant(img.clone(), "exact", tx.clone()))
+            .unwrap();
+    }
+    drop(tx);
+    // Shut down immediately: the ingress-close cascade must DRAIN every
+    // queued request through execute + respond, not drop it.
+    server.shutdown();
+    let mut ok = 0usize;
+    while let Ok(d) = rx.try_recv() {
+        match d {
+            Delivery::Ok(_) => ok += 1,
+            Delivery::Failed(reason) => panic!("in-flight request dropped as {reason}"),
+        }
+    }
+    assert_eq!(
+        ok,
+        imgs.len(),
+        "graceful shutdown must deliver every in-flight request"
+    );
+}

@@ -206,6 +206,21 @@ fn main() {
     println!("→ shard scaling (4 over 1): {ratio:.2}x throughput");
     json.ratio("shard4_over_shard1", ratio);
 
+    // Trace-context overhead: the shard-1 drive again with tracing (ids,
+    // stage stamps, tail sampling) switched off. Untraced-over-traced
+    // throughput ≈ 1.0 when the carried context is genuinely cheap;
+    // "overhead" in the name marks the ratio lower-is-better for
+    // `openacm obs regress`.
+    openacm::obs::set_trace_enabled(false);
+    let untraced = drive(1, n);
+    openacm::obs::set_trace_enabled(true);
+    let overhead = untraced.rps / rps_by_shards[0];
+    println!(
+        "→ tracing overhead (shard 1): {overhead:.3}x (untraced {:.0} vs traced {:.0} req/s)",
+        untraced.rps, rps_by_shards[0]
+    );
+    json.ratio("serve_trace_overhead_shard1", overhead);
+
     match json.write() {
         Ok(path) => println!("wrote {}", path.display()),
         Err(e) => eprintln!("could not write bench json: {e}"),

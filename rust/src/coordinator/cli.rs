@@ -196,6 +196,19 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     }
     let variants = server.variants();
 
+    // SLO burn-rate engine: one tick per metrics interval over the
+    // process-cumulative serving counters, publishing `serve.slo.*`
+    // gauges and the `[slo]` console line (obs::slo).
+    let mut slo_engine = crate::obs::SloEngine::new(crate::obs::SloPolicy::default());
+    let slo_input = || crate::obs::slo::SloInput {
+        delivered: crate::obs::counter("serve.responses_delivered").value(),
+        failed: crate::obs::counter("serve.requests_failed").value(),
+        shed: crate::obs::counter("serve.requests_shed").value(),
+        delivered_late: crate::obs::counter("serve.delivered_late").value(),
+        class_requests: crate::obs::counter("serve.route.class_requests").value(),
+        class_fallbacks: crate::obs::counter("serve.route.fallback_exact").value(),
+    };
+
     // Drive: round-robin requests across variants from the workload; with
     // an accuracy-class menu, every other request routes by class
     // instead. Failed deliveries (e.g. an SLO deadline expiring under
@@ -235,6 +248,8 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
                 s.throughput_rps,
                 crate::obs::gauge("serve.in_flight").value()
             );
+            let healths = slo_engine.tick_and_publish(slo_input());
+            println!("{}", crate::obs::slo::summary_line(&healths));
             if let Err(e) = crate::obs::flush(&obs_dir) {
                 eprintln!("could not flush telemetry snapshot: {e:#}");
             }
@@ -256,6 +271,10 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     );
     let health = server.failure();
     server.shutdown();
+    // Final SLO tick after the pipeline drained, so the closing summary
+    // and the persisted `serve.slo.*` gauges cover the whole run.
+    let healths = slo_engine.tick_and_publish(slo_input());
+    println!("{}", crate::obs::slo::summary_line(&healths));
     crate::obs::info(
         "serve",
         "drive complete",
@@ -268,6 +287,13 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     match crate::obs::flush(&obs_dir) {
         Ok(path) => println!("telemetry snapshot: {} (openacm obs snapshot)", path.display()),
         Err(e) => eprintln!("could not flush telemetry snapshot: {e:#}"),
+    }
+    // Export the tail-sampled request timelines alongside the snapshot.
+    if crate::obs::trace_enabled() {
+        match crate::obs::trace::export_chrome(&obs_dir) {
+            Ok(path) => println!("request timelines: {} (openacm obs trace)", path.display()),
+            Err(e) => eprintln!("could not export trace timelines: {e:#}"),
+        }
     }
     // A panicked worker must surface as a failed run, never a clean exit.
     if let Some(msg) = health {

@@ -96,6 +96,14 @@ impl ServerMetrics {
     }
 
     pub fn record_batch(&self, batch_size: usize, latencies_us: &[f64]) {
+        let pairs: Vec<(f64, u64)> = latencies_us.iter().map(|&l| (l, 0)).collect();
+        self.record_batch_exemplars(batch_size, &pairs);
+    }
+
+    /// [`Self::record_batch`] with a trace-id exemplar per latency (0 =
+    /// untraced): the id lands on the latency histogram bucket the value
+    /// falls in, linking percentile reads to concrete requests.
+    pub fn record_batch_exemplars(&self, batch_size: usize, latencies_us: &[(f64, u64)]) {
         self.first_record.get_or_init(Instant::now);
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_requests
@@ -106,10 +114,10 @@ impl ServerMetrics {
         self.g_batch_size.record(batch_size as u64);
         self.g_batches.inc();
         self.g_completed.add(latencies_us.len() as u64);
-        for &l in latencies_us {
+        for &(l, exemplar) in latencies_us {
             let us = l.max(0.0).round() as u64;
-            self.latency_us.record(us);
-            self.g_latency_us.record(us);
+            self.latency_us.record_with_exemplar(us, exemplar);
+            self.g_latency_us.record_with_exemplar(us, exemplar);
         }
     }
 
@@ -178,6 +186,23 @@ mod tests {
         assert_eq!(s.failed, 3);
         assert_eq!(s.completed, 2);
         assert_eq!(m.failed_total(), 3);
+    }
+
+    #[test]
+    fn exemplar_trace_ids_reach_the_global_latency_histogram() {
+        let m = ServerMetrics::new();
+        m.record_batch_exemplars(2, &[(1_000.0, 0), (90_000_000.0, 4242)]);
+        let s = m.snapshot();
+        assert_eq!(s.completed, 2);
+        let g = crate::obs::snapshot();
+        let h = &g.histograms["serve.latency_us"];
+        // The untraced (id 0) latency leaves no exemplar; the traced one
+        // tags its bucket.
+        assert!(
+            h.exemplars.iter().any(|&(_, id)| id == 4242),
+            "exemplar missing: {:?}",
+            h.exemplars
+        );
     }
 
     #[test]

@@ -44,16 +44,20 @@ use super::batcher::{next_batch, BatchPolicy};
 use super::metrics::ServerMetrics;
 use super::server::{Delivery, FailReason, Response};
 use crate::nn::eval::argmax;
+use crate::obs::{StageStamps, TraceOutcome};
 use crate::runtime::{Backend, BackendFactory};
 
 /// A request admitted into a shard: payload + delivery channel + the
 /// deadline the batcher buckets on. The admission [`Ticket`] rides along
-/// and releases its slot when the request leaves the pipeline (drop).
+/// and releases its slot when the request leaves the pipeline (drop); the
+/// [`StageStamps`] trace context is stamped at each stage boundary and
+/// closed into the tail-sampling collector at delivery.
 pub(crate) struct QueuedRequest {
     pub image: Vec<u8>,
     pub respond: Sender<Delivery>,
     pub enqueued: Instant,
     pub deadline: Instant,
+    pub stamps: StageStamps,
     pub _ticket: Ticket,
 }
 
@@ -65,6 +69,7 @@ enum Finished {
         rows: Vec<Vec<f32>>,
     },
     Failed {
+        variant: String,
         batch: Vec<QueuedRequest>,
         reason: FailReason,
     },
@@ -199,15 +204,25 @@ fn spawn_batcher(
             let slack = crate::obs::histogram("serve.deadline_slack_us");
             let expired = crate::obs::counter("serve.deadline_expired");
             while let Some(batch) = next_batch(&rx, &policy, |q: &QueuedRequest| q.deadline) {
+                // Explicit full path: the executor (a different thread)
+                // parents its span under this one via
+                // `span_path("serve.batch/execute")`.
+                let _batch_span = crate::obs::span_path("serve.batch");
+                let t_batch = if crate::obs::trace_enabled() {
+                    crate::obs::trace::now_us()
+                } else {
+                    0
+                };
                 let now = Instant::now();
                 let mut live = Vec::with_capacity(batch.len());
                 let mut dead = Vec::new();
-                for q in batch {
+                for mut q in batch {
                     queue_wait.record(q.enqueued.elapsed().as_micros() as u64);
                     if q.deadline <= now {
                         dead.push(q);
                     } else {
                         slack.record(q.deadline.saturating_duration_since(now).as_micros() as u64);
+                        q.stamps.stamp_batch(t_batch);
                         live.push(q);
                     }
                 }
@@ -215,7 +230,9 @@ fn spawn_batcher(
                     expired.add(dead.len() as u64);
                     forward(
                         &finished,
+                        shard as u32,
                         Finished::Failed {
+                            variant: variant.clone(),
                             batch: dead,
                             reason: FailReason::DeadlineExpired,
                         },
@@ -229,7 +246,9 @@ fn spawn_batcher(
                     // the batch must still be delivered, as failures.
                     forward(
                         &finished,
+                        shard as u32,
                         Finished::Failed {
+                            variant: variant.clone(),
                             batch: err.0,
                             reason: FailReason::WorkerPanicked,
                         },
@@ -272,22 +291,34 @@ fn spawn_executor(
             drop(ready);
             let execute_failures = crate::obs::counter("serve.execute_failures");
             let mut poisoned = false;
-            while let Ok(batch) = rx.recv() {
+            while let Ok(mut batch) = rx.recv() {
                 if poisoned {
                     forward(
                         &finished,
+                        shard as u32,
                         Finished::Failed {
+                            variant: variant.clone(),
                             batch,
                             reason: FailReason::WorkerPanicked,
                         },
                     );
                     continue;
                 }
+                let traced = crate::obs::trace_enabled();
+                let t_exec_start = if traced { crate::obs::trace::now_us() } else { 0 };
                 let result = {
-                    let _execute = crate::obs::span("execute");
+                    // Full-path span: this thread's TLS stack is empty, but
+                    // the batch stage semantically parents execution.
+                    let _execute = crate::obs::span_path("serve.batch/execute");
                     let images: Vec<&[u8]> = batch.iter().map(|q| q.image.as_slice()).collect();
                     catch_unwind(AssertUnwindSafe(|| backend.infer_batch(&images)))
                 };
+                if traced {
+                    let t_exec_end = crate::obs::trace::now_us();
+                    for q in &mut batch {
+                        q.stamps.stamp_exec(t_exec_start, t_exec_end);
+                    }
+                }
                 let msg = match result {
                     Ok(Ok(rows)) if rows.len() == batch.len() => Finished::Executed {
                         variant: variant.clone(),
@@ -306,12 +337,13 @@ fn spawn_executor(
                         );
                         execute_failures.inc();
                         Finished::Failed {
-                            batch,
+                            variant: variant.clone(),
                             reason: FailReason::ExecuteFailed(format!(
                                 "backend returned {} rows for a batch of {}",
                                 rows.len(),
                                 batch.len()
                             )),
+                            batch,
                         }
                     }
                     Ok(Err(e)) => {
@@ -322,6 +354,7 @@ fn spawn_executor(
                         );
                         execute_failures.inc();
                         Finished::Failed {
+                            variant: variant.clone(),
                             batch,
                             reason: FailReason::ExecuteFailed(format!("{e:#}")),
                         }
@@ -343,12 +376,13 @@ fn spawn_executor(
                         ));
                         poisoned = true;
                         Finished::Failed {
+                            variant: variant.clone(),
                             batch,
                             reason: FailReason::WorkerPanicked,
                         }
                     }
                 };
-                forward(&finished, msg);
+                forward(&finished, shard as u32, msg);
             }
         })
         .context("spawning executor thread")
@@ -367,6 +401,7 @@ fn spawn_responder(
             let shard_delivered = crate::obs::counter(&format!("serve.shard{shard}.delivered"));
             let shard_failed = crate::obs::counter(&format!("serve.shard{shard}.failed"));
             let delivered = crate::obs::counter("serve.responses_delivered");
+            let delivered_late = crate::obs::counter("serve.delivered_late");
             let fail_expired = crate::obs::counter("serve.failed.deadline_expired");
             let fail_execute = crate::obs::counter("serve.failed.execute");
             let fail_panic = crate::obs::counter("serve.failed.worker_panic");
@@ -380,17 +415,30 @@ fn spawn_responder(
                     } => {
                         // Record metrics BEFORE completing the requests so
                         // a caller that snapshots right after the last
-                        // response sees every batch counted.
-                        let lats: Vec<f64> = batch
+                        // response sees every batch counted. Latencies
+                        // carry the trace id as a histogram exemplar —
+                        // `obs health` links p99 to a concrete request.
+                        let lats: Vec<(f64, u64)> = batch
                             .iter()
-                            .map(|q| q.enqueued.elapsed().as_micros() as f64)
+                            .map(|q| (q.enqueued.elapsed().as_micros() as f64, q.stamps.id))
                             .collect();
-                        metrics.record_batch(batch.len(), &lats);
+                        metrics.record_batch_exemplars(batch.len(), &lats);
                         delivered.add(batch.len() as u64);
                         shard_delivered.add(batch.len() as u64);
-                        deliver_rows(variant, batch, rows);
+                        // Deliveries that landed past their deadline feed
+                        // the latency SLO objective.
+                        let now = Instant::now();
+                        let late = batch.iter().filter(|q| now > q.deadline).count();
+                        if late > 0 {
+                            delivered_late.add(late as u64);
+                        }
+                        deliver_rows(shard as u32, variant, batch, rows);
                     }
-                    Finished::Failed { batch, reason } => {
+                    Finished::Failed {
+                        variant,
+                        batch,
+                        reason,
+                    } => {
                         let n = batch.len() as u64;
                         metrics.record_failed(batch.len());
                         shard_failed.add(n);
@@ -399,9 +447,7 @@ fn spawn_responder(
                             FailReason::ExecuteFailed(_) => fail_execute.add(n),
                             FailReason::WorkerPanicked => fail_panic.add(n),
                         }
-                        for q in batch {
-                            let _ = q.respond.send(Delivery::Failed(reason.clone()));
-                        }
+                        fail_batch(shard as u32, &variant, batch, reason);
                     }
                 }
             }
@@ -411,26 +457,45 @@ fn spawn_responder(
 
 /// Hand a finished batch to the responder; if the responder is already
 /// gone (shutdown tail, boot teardown), deliver directly — an admitted
-/// request gets exactly one delivery on every path.
-fn forward(finished: &FinishedTx, msg: Finished) {
+/// request gets exactly one delivery (and one trace completion) on every
+/// path.
+fn forward(finished: &FinishedTx, shard: u32, msg: Finished) {
     if let Err(err) = finished.send(msg) {
         match err.0 {
             Finished::Executed {
                 variant,
                 batch,
                 rows,
-            } => deliver_rows(variant, batch, rows),
-            Finished::Failed { batch, reason } => {
-                for q in batch {
-                    let _ = q.respond.send(Delivery::Failed(reason.clone()));
-                }
-            }
+            } => deliver_rows(shard, variant, batch, rows),
+            Finished::Failed {
+                variant,
+                batch,
+                reason,
+            } => fail_batch(shard, &variant, batch, reason),
         }
     }
 }
 
-fn deliver_rows(variant: String, batch: Vec<QueuedRequest>, rows: Vec<Vec<f32>>) {
+/// Current µs timestamp for trace completion, free when tracing is off.
+fn trace_now() -> u64 {
+    if crate::obs::trace_enabled() {
+        crate::obs::trace::now_us()
+    } else {
+        0
+    }
+}
+
+fn deliver_rows(shard: u32, variant: String, batch: Vec<QueuedRequest>, rows: Vec<Vec<f32>>) {
+    let t_done = trace_now();
     for (q, logits) in batch.into_iter().zip(rows) {
+        if q.stamps.id != 0 {
+            crate::obs::trace::collector().complete(q.stamps.finish(
+                shard,
+                &variant,
+                TraceOutcome::Delivered,
+                t_done,
+            ));
+        }
         let predicted = argmax(&logits);
         // Receiver may have gone away; ignore.
         let _ = q.respond.send(Delivery::Ok(Response {
@@ -438,6 +503,28 @@ fn deliver_rows(variant: String, batch: Vec<QueuedRequest>, rows: Vec<Vec<f32>>)
             predicted,
             variant: variant.clone(),
         }));
+    }
+}
+
+/// Deliver a failure to every request in the batch, closing each trace
+/// with the outcome matching the [`FailReason`].
+fn fail_batch(shard: u32, variant: &str, batch: Vec<QueuedRequest>, reason: FailReason) {
+    let outcome = match &reason {
+        FailReason::DeadlineExpired => TraceOutcome::DeadlineExpired,
+        FailReason::ExecuteFailed(_) => TraceOutcome::ExecuteFailed,
+        FailReason::WorkerPanicked => TraceOutcome::WorkerPanicked,
+    };
+    let t_done = trace_now();
+    for q in batch {
+        if q.stamps.id != 0 {
+            crate::obs::trace::collector().complete(q.stamps.finish(
+                shard,
+                variant,
+                outcome,
+                t_done,
+            ));
+        }
+        let _ = q.respond.send(Delivery::Failed(reason.clone()));
     }
 }
 

@@ -392,14 +392,21 @@ impl InferenceServer {
                 }
             }
         };
+        // Open the trace context once the request is routable: shed
+        // requests (admission depth, full ingress) complete as `Shed`
+        // timelines; malformed/unroutable rejections never existed as far
+        // as the pipeline is concerned.
+        let stamps = crate::obs::StageStamps::begin();
+        let shard = self.ring.shard_for(HashRing::key_for(&req.image));
         let ticket = match self.admission.admit(&variant) {
             Some(Ok(t)) => t,
             Some(Err(Admission::Shed { depth, limit })) => {
+                complete_shed(stamps, shard as u32, &variant);
                 return Err(SubmitError::Shed {
                     variant,
                     depth,
                     limit,
-                })
+                });
             }
             Some(Err(Admission::Admitted)) | None => {
                 return Err(SubmitError::Unroutable(format!(
@@ -409,12 +416,12 @@ impl InferenceServer {
         };
         let now = Instant::now();
         let deadline = now + req.slo.unwrap_or(self.policy.slo);
-        let shard = self.ring.shard_for(HashRing::key_for(&req.image));
         let queued = QueuedRequest {
             image: req.image,
             respond: req.respond,
             enqueued: now,
             deadline,
+            stamps,
             _ticket: ticket,
         };
         match self.shards[shard].ingress[&variant].try_send(queued) {
@@ -422,6 +429,7 @@ impl InferenceServer {
             Err(TrySendError::Full(dropped)) => {
                 // Backpressure past admission (shard ingress at capacity):
                 // shed, releasing the ticket.
+                complete_shed(dropped.stamps, shard as u32, &variant);
                 drop(dropped);
                 self.admission.note_shed();
                 Err(SubmitError::Shed {
@@ -483,6 +491,19 @@ impl InferenceServer {
         for s in self.shards.drain(..) {
             s.shutdown();
         }
+    }
+}
+
+/// Close a shed request's timeline into the tail-sampling collector
+/// (failure class — always kept). No-op when untraced.
+fn complete_shed(stamps: crate::obs::StageStamps, shard: u32, variant: &str) {
+    if stamps.id != 0 {
+        crate::obs::trace::collector().complete(stamps.finish(
+            shard,
+            variant,
+            crate::obs::TraceOutcome::Shed,
+            crate::obs::trace::now_us(),
+        ));
     }
 }
 

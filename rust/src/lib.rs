@@ -155,6 +155,21 @@
 //! snapshot|tail|diff` reads back. See DESIGN.md §Observability for the
 //! architecture, naming conventions and the ≤2% overhead budget
 //! (`benches/nn_forward.rs` enforces it).
+//!
+//! On top of the spine sits an analysis layer. [`obs::trace`] threads a
+//! zero-allocation trace context through every admitted request
+//! (admission → batch → execute → respond stage timestamps) and
+//! tail-samples at completion: every shed/failed/deadline-missed request
+//! keeps its full timeline, plus the top-K slowest and a 1-in-N healthy
+//! baseline, exported as Chrome trace-event JSON and linked into the
+//! latency histograms as per-bucket exemplar ids (`openacm obs trace`).
+//! [`obs::slo`] runs a Google-SRE-style multi-window burn-rate engine
+//! over availability/latency/routing objectives, publishing
+//! `serve.slo.*` gauges and `[slo]` summary lines (`openacm obs health`
+//! exits 2 while any objective burns at error speed). [`obs::regress`]
+//! gates the benches' `BENCH_*.json` ratios against committed floors in
+//! `benches/baseline/` (`openacm obs regress`, exit 1 on regression —
+//! CI runs it after the smoke benches).
 
 pub mod util;
 pub mod obs;

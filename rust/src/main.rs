@@ -44,8 +44,17 @@ COMMANDS:
              N requests  [--obs-dir DIR]
              [--plan FILE.acmplan]  serve a compiled heterogeneous plan as
              the "plan" variant (native per-layer LUT dispatch)
-  obs        Inspect the telemetry sink: snapshot | tail | diff
+  obs        Inspect the telemetry sink:
+             snapshot | tail | diff | trace | health | regress
              [--dir DIR] [--n K] [--json]  (see also OPENACM_TRACE)
+             tail --follow [--interval-ms MS] [--max-polls K]  follow
+             appends like tail -f; diff exits 1 when non-empty
+             trace [--slowest N] [--failed]  per-request stage timelines
+             from <dir>/trace.json (tail-sampled; Chrome trace format)
+             health [--json]  SLO burn-rate states + p99 exemplar; exits
+             2 while any objective burns at error rate
+             regress --baseline DIR [--current DIR] [--tolerance PCT]
+             [--times]  perf gate over BENCH_*.json; exits 1 on regression
   luts       Emit behavioral-multiplier LUTs (npy) for cross-checking
              [--out DIR]
   help       Show this message
@@ -54,7 +63,18 @@ COMMANDS:
 fn main() -> Result<()> {
     let args = Args::from_env(
         true,
-        &["verbose", "fast", "no-cache", "repair", "smoke", "no-incremental", "json"],
+        &[
+            "verbose",
+            "fast",
+            "no-cache",
+            "repair",
+            "smoke",
+            "no-incremental",
+            "json",
+            "follow",
+            "failed",
+            "times",
+        ],
     )?;
     match args.command.as_deref() {
         Some("generate") => openacm::flow::cli::cmd_generate(&args),

@@ -2,17 +2,32 @@
 //!
 //! * `openacm obs snapshot [--dir D] [--json]` — the merged metrics
 //!   snapshot accumulated by `openacm serve` / `openacm compile`;
-//! * `openacm obs tail [--dir D] [--n K] [--json]` — last K structured
-//!   events from `<dir>/events.jsonl`;
+//! * `openacm obs tail [--dir D] [--n K] [--json] [--follow
+//!   [--interval-ms MS] [--max-polls K]]` — last K structured events
+//!   from `<dir>/events.jsonl`, optionally following appends (and
+//!   surviving rotation) like `tail -f`;
 //! * `openacm obs diff A.json B.json [--json]` — what happened between
 //!   two snapshot files (counters/histograms subtract, gauges read from
-//!   the later file).
+//!   the later file); **exits 1 when the diff is non-empty**, so scripts
+//!   can assert "this command produced no telemetry";
+//! * `openacm obs trace [--dir D] [--slowest N] [--failed] [--json]` —
+//!   per-request stage timelines from `<dir>/trace.json` (written by
+//!   `openacm serve`; Chrome trace-event format, loadable in
+//!   `chrome://tracing`), slowest first;
+//! * `openacm obs health [--dir D] [--json]` — SLO burn-rate states from
+//!   the accumulated snapshot plus the p99 latency exemplar trace;
+//!   exits 2 while any objective is in the error state;
+//! * `openacm obs regress --baseline DIR [--current DIR] [--tolerance
+//!   PCT] [--times] [--json]` — perf-regression gate over `BENCH_*.json`
+//!   emissions ([`super::regress`]); exits 1 on any regression.
 
 use anyhow::{bail, Context, Result};
-use std::path::PathBuf;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
 
 use super::registry::RegistrySnapshot;
-use super::{json, sink};
+use super::{json, regress, sink};
 use crate::bench::harness::Table;
 use crate::util::cli::Args;
 
@@ -45,7 +60,7 @@ pub fn cmd_obs(args: &Args) -> Result<()> {
         }
         "tail" => {
             let n = args.usize_or("n", 20)?;
-            cmd_tail(&dir, n, args.flag("json"))
+            cmd_tail(&dir, n, args)
         }
         "diff" => {
             let (Some(a), Some(b)) = (args.positional.get(1), args.positional.get(2)) else {
@@ -60,10 +75,26 @@ pub fn cmd_obs(args: &Args) -> Result<()> {
                 println!("telemetry diff: {a} -> {b} (gauges show the later snapshot)");
                 print_snapshot(&d);
             }
+            // Scriptable: a non-empty diff (any counter or histogram
+            // movement) exits non-zero, like `diff(1)`.
+            if !d.is_zero() {
+                exit_flushed(1);
+            }
             Ok(())
         }
-        other => bail!("unknown obs action {other:?}; expected snapshot|tail|diff"),
+        "trace" => cmd_trace(&dir, args),
+        "health" => cmd_health(&dir, args),
+        "regress" => cmd_regress(args),
+        other => bail!("unknown obs action {other:?}; expected snapshot|tail|diff|trace|health|regress"),
     }
+}
+
+/// Flush stdout, then exit. `process::exit` skips buffered-writer
+/// destructors; without the flush a piped stdout can lose the report the
+/// exit code refers to.
+fn exit_flushed(code: i32) -> ! {
+    let _ = std::io::stdout().flush();
+    std::process::exit(code);
 }
 
 /// Human rendering shared by `snapshot` and `diff`.
@@ -105,49 +136,359 @@ pub fn print_snapshot(snap: &RegistrySnapshot) {
     }
 }
 
-fn cmd_tail(dir: &std::path::Path, n: usize, raw: bool) -> Result<()> {
+/// Render one JSONL event line for the console (`--json` passes it raw).
+fn print_event_line(line: &str, raw: bool) {
+    if raw {
+        println!("{line}");
+        return;
+    }
+    match json::parse(line) {
+        Ok(doc) => {
+            let ts = doc.get("ts_ms").and_then(json::Json::as_u64).unwrap_or(0);
+            let sev = doc
+                .get("severity")
+                .and_then(json::Json::as_str)
+                .unwrap_or("?");
+            let sub = doc
+                .get("subsystem")
+                .and_then(json::Json::as_str)
+                .unwrap_or("?");
+            let msg = doc
+                .get("message")
+                .and_then(json::Json::as_str)
+                .unwrap_or("");
+            let fields = doc
+                .get("fields")
+                .and_then(json::Json::as_object)
+                .map(|pairs| {
+                    pairs
+                        .iter()
+                        .map(|(k, v)| format!(" {k}={}", v.as_str().unwrap_or_default()))
+                        .collect::<String>()
+                })
+                .unwrap_or_default();
+            println!("{ts} {sev:5} [{sub}] {msg}{fields}");
+        }
+        // A torn/foreign line should not hide the rest of the tail.
+        Err(_) => println!("{line}"),
+    }
+}
+
+fn cmd_tail(dir: &Path, n: usize, args: &Args) -> Result<()> {
     let path = dir.join("events.jsonl");
+    let raw = args.flag("json");
     let text = std::fs::read_to_string(&path)
         .with_context(|| format!("no event log at {}", path.display()))?;
     let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
     let start = lines.len().saturating_sub(n);
     for line in &lines[start..] {
-        if raw {
-            println!("{line}");
+        print_event_line(line, raw);
+    }
+    if args.flag("follow") {
+        let interval = Duration::from_millis(args.u64_or("interval-ms", 500)?);
+        let max_polls = match args.get("max-polls") {
+            Some(_) => Some(args.usize_or("max-polls", 0)?),
+            None => None,
+        };
+        follow_jsonl(&path, interval, max_polls, &mut |line| {
+            print_event_line(line, raw)
+        })?;
+    }
+    Ok(())
+}
+
+/// Follow appends to a JSONL file like `tail -f`: poll `path` every
+/// `interval`, feeding each *complete* new line (partial trailing writes
+/// wait for their newline) to `on_line`. A shrinking file — the event
+/// log rotated — restarts from the head of the fresh file. `max_polls`
+/// bounds the loop for scripts and tests; `None` follows forever.
+pub fn follow_jsonl(
+    path: &Path,
+    interval: Duration,
+    max_polls: Option<usize>,
+    on_line: &mut dyn FnMut(&str),
+) -> Result<()> {
+    let mut offset = std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
+    let mut polls = 0usize;
+    loop {
+        if let Some(max) = max_polls {
+            if polls >= max {
+                return Ok(());
+            }
+        }
+        polls += 1;
+        std::thread::sleep(interval);
+        let len = std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
+        if len < offset {
+            offset = 0; // rotated or truncated underneath us
+        }
+        if len == offset {
             continue;
         }
-        match json::parse(line) {
-            Ok(doc) => {
-                let ts = doc.get("ts_ms").and_then(json::Json::as_u64).unwrap_or(0);
-                let sev = doc
-                    .get("severity")
-                    .and_then(json::Json::as_str)
-                    .unwrap_or("?");
-                let sub = doc
-                    .get("subsystem")
-                    .and_then(json::Json::as_str)
-                    .unwrap_or("?");
-                let msg = doc
-                    .get("message")
-                    .and_then(json::Json::as_str)
-                    .unwrap_or("");
-                let fields = doc
-                    .get("fields")
-                    .and_then(json::Json::as_object)
-                    .map(|pairs| {
-                        pairs
-                            .iter()
-                            .map(|(k, v)| {
-                                format!(" {k}={}", v.as_str().unwrap_or_default())
-                            })
-                            .collect::<String>()
-                    })
-                    .unwrap_or_default();
-                println!("{ts} {sev:5} [{sub}] {msg}{fields}");
+        // Transient read errors (mid-rotation) just wait for the next poll.
+        let Ok(mut f) = std::fs::File::open(path) else {
+            continue;
+        };
+        if f.seek(SeekFrom::Start(offset)).is_err() {
+            continue;
+        }
+        let mut buf = String::new();
+        if f.read_to_string(&mut buf).is_err() {
+            continue;
+        }
+        let consumed = match buf.rfind('\n') {
+            Some(i) => i + 1,
+            None => 0,
+        };
+        for line in buf[..consumed].lines() {
+            if !line.trim().is_empty() {
+                on_line(line);
             }
-            // A torn/foreign line should not hide the rest of the tail.
-            Err(_) => println!("{line}"),
+        }
+        offset += consumed as u64;
+    }
+}
+
+/// One request's reconstructed timeline from the Chrome trace events.
+#[derive(Clone, Debug, Default)]
+struct TraceRow {
+    id: u64,
+    variant: String,
+    outcome: String,
+    shard: u64,
+    start: u64,
+    end: u64,
+    queue_us: u64,
+    execute_us: u64,
+    respond_us: u64,
+}
+
+/// Group `<dir>/trace.json` stage events back into per-request rows.
+fn load_trace_rows(dir: &Path) -> Result<Vec<TraceRow>> {
+    let path = dir.join("trace.json");
+    let text = std::fs::read_to_string(&path).with_context(|| {
+        format!(
+            "no trace at {} — run `openacm serve` (tracing on) first",
+            path.display()
+        )
+    })?;
+    let doc = json::parse(&text)?;
+    let events = doc
+        .get("traceEvents")
+        .and_then(json::Json::as_array)
+        .context("trace.json missing traceEvents")?;
+    let mut rows: std::collections::BTreeMap<u64, TraceRow> = std::collections::BTreeMap::new();
+    for e in events {
+        let Some(args_obj) = e.get("args") else { continue };
+        let Some(id) = args_obj.get("trace").and_then(json::Json::as_u64) else {
+            continue;
+        };
+        let name = e.get("name").and_then(json::Json::as_str).unwrap_or("");
+        let ts = e.get("ts").and_then(json::Json::as_u64).unwrap_or(0);
+        let dur = e.get("dur").and_then(json::Json::as_u64).unwrap_or(0);
+        let row = rows.entry(id).or_default();
+        row.id = id;
+        if let Some(v) = args_obj.get("variant").and_then(json::Json::as_str) {
+            row.variant = v.to_string();
+        }
+        if let Some(o) = args_obj.get("outcome").and_then(json::Json::as_str) {
+            row.outcome = o.to_string();
+        }
+        if let Some(tid) = e.get("tid").and_then(json::Json::as_u64) {
+            row.shard = tid;
+        }
+        if row.start == 0 || ts < row.start {
+            row.start = ts;
+        }
+        row.end = row.end.max(ts + dur);
+        match name {
+            "queue" => row.queue_us += dur,
+            "execute" => row.execute_us += dur,
+            "respond" => row.respond_us += dur,
+            _ => {}
         }
     }
+    Ok(rows.into_values().collect())
+}
+
+fn cmd_trace(dir: &Path, args: &Args) -> Result<()> {
+    let slowest = args.usize_or("slowest", 20)?;
+    let failed_only = args.flag("failed");
+    let mut rows = load_trace_rows(dir)?;
+    let total = rows.len();
+    if failed_only {
+        rows.retain(|r| r.outcome != "delivered");
+    }
+    rows.sort_by_key(|r| std::cmp::Reverse(r.end.saturating_sub(r.start)));
+    rows.truncate(slowest);
+    if args.flag("json") {
+        let items: Vec<String> = rows
+            .iter()
+            .map(|r| {
+                format!(
+                    "{{\"trace\": {}, \"variant\": \"{}\", \"shard\": {}, \"outcome\": \"{}\", \
+                     \"total_us\": {}, \"queue_us\": {}, \"execute_us\": {}, \"respond_us\": {}}}",
+                    r.id,
+                    r.variant,
+                    r.shard,
+                    r.outcome,
+                    r.end.saturating_sub(r.start),
+                    r.queue_us,
+                    r.execute_us,
+                    r.respond_us
+                )
+            })
+            .collect();
+        println!("[{}]", items.join(",\n "));
+        return Ok(());
+    }
+    println!(
+        "request timelines from {} ({} kept{}; slowest first)",
+        dir.join("trace.json").display(),
+        total,
+        if failed_only { ", failures only" } else { "" }
+    );
+    let mut t = Table::new(
+        "traces",
+        &[
+            "Trace", "Variant", "Shard", "Outcome", "Total us", "Queue us", "Exec us",
+            "Respond us",
+        ],
+    );
+    for r in &rows {
+        t.row(&[
+            r.id.to_string(),
+            r.variant.clone(),
+            r.shard.to_string(),
+            r.outcome.clone(),
+            r.end.saturating_sub(r.start).to_string(),
+            r.queue_us.to_string(),
+            r.execute_us.to_string(),
+            r.respond_us.to_string(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_health(dir: &Path, args: &Args) -> Result<()> {
+    let path = dir.join("snapshot.json");
+    let snap = sink::load(&path).with_context(|| {
+        format!(
+            "no snapshot at {} — run `openacm serve` first",
+            path.display()
+        )
+    })?;
+    let slo_gauges: Vec<(&String, &i64)> = snap
+        .gauges
+        .iter()
+        .filter(|(k, _)| k.starts_with("serve.slo."))
+        .collect();
+    let worst_state = slo_gauges
+        .iter()
+        .filter(|(k, _)| k.ends_with(".state"))
+        .map(|&(_, v)| *v)
+        .max()
+        .unwrap_or(0);
+    let latency = snap.histograms.get("serve.latency_us");
+    let p99 = latency.map(|h| h.percentile(99.0)).unwrap_or(0);
+    let exemplar = latency.and_then(|h| h.exemplar_near_percentile(99.0));
+    if args.flag("json") {
+        let mut fields: Vec<String> = slo_gauges
+            .iter()
+            .map(|(k, v)| format!("  \"{k}\": {v}"))
+            .collect();
+        fields.push(format!("  \"latency_p99_us\": {p99}"));
+        fields.push(format!(
+            "  \"latency_p99_exemplar_trace\": {}",
+            exemplar.unwrap_or(0)
+        ));
+        fields.push(format!("  \"worst_state\": {worst_state}"));
+        println!("{{\n{}\n}}", fields.join(",\n"));
+    } else {
+        println!("SLO health from {}", path.display());
+        if slo_gauges.is_empty() {
+            println!("(no serve.slo.* gauges yet — run `openacm serve` with traffic)");
+        } else {
+            let mut t = Table::new("slo", &["Gauge", "Value"]);
+            for (k, v) in &slo_gauges {
+                t.row(&[(*k).clone(), v.to_string()]);
+            }
+            t.print();
+        }
+        match exemplar {
+            Some(id) => println!("serve.latency_us p99 = {p99}us (exemplar trace {id})"),
+            None => println!("serve.latency_us p99 = {p99}us"),
+        }
+    }
+    if worst_state >= 2 {
+        exit_flushed(2);
+    }
+    Ok(())
+}
+
+fn cmd_regress(args: &Args) -> Result<()> {
+    let baseline = PathBuf::from(args.required("baseline")?);
+    let current = PathBuf::from(args.str_or("current", "."));
+    let tol_pct = args.f64_or("tolerance", 30.0)?;
+    if !(0.0..100.0).contains(&tol_pct) {
+        bail!("--tolerance must be a percentage in [0, 100), got {tol_pct}");
+    }
+    let tol = regress::Tolerance {
+        ratio_frac: tol_pct / 100.0,
+        gate_times: args.flag("times"),
+        ..regress::Tolerance::default()
+    };
+    let report = regress::compare_dirs(&baseline, &current, &tol)?;
+    let fmt = |v: Option<f64>| v.map(|x| format!("{x:.4}")).unwrap_or_else(|| "-".to_string());
+    if args.flag("json") {
+        let items: Vec<String> = report
+            .checks
+            .iter()
+            .map(|c| {
+                format!(
+                    "{{\"bench\": \"{}\", \"metric\": \"{}\", \"baseline\": {}, \
+                     \"current\": {}, \"status\": \"{}\", \"gated\": {}}}",
+                    c.bench,
+                    c.metric,
+                    fmt(c.baseline),
+                    fmt(c.current),
+                    c.status.name(),
+                    c.gated
+                )
+            })
+            .collect();
+        println!("[{}]", items.join(",\n "));
+    } else {
+        let mut t = Table::new(
+            &format!(
+                "perf regression gate: {} vs baseline {} (±{tol_pct}% on ratios)",
+                current.display(),
+                baseline.display()
+            ),
+            &["Bench", "Metric", "Baseline", "Current", "Delta", "Status"],
+        );
+        for c in &report.checks {
+            t.row(&[
+                c.bench.clone(),
+                c.metric.clone(),
+                fmt(c.baseline),
+                fmt(c.current),
+                c.delta_frac
+                    .map(|d| format!("{:+.1}%", d * 100.0))
+                    .unwrap_or_else(|| "-".to_string()),
+                c.status.name().to_string(),
+            ]);
+        }
+        t.print();
+    }
+    if !report.passed() {
+        println!(
+            "FAIL: {} regression(s) beyond tolerance",
+            report.regressions()
+        );
+        exit_flushed(1);
+    }
+    println!("ok: no perf regressions");
     Ok(())
 }

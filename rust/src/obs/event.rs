@@ -12,7 +12,7 @@
 use std::collections::VecDeque;
 use std::fs::OpenOptions;
 use std::io::Write;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::{Mutex, OnceLock};
 use std::time::{SystemTime, UNIX_EPOCH};
 
@@ -103,21 +103,66 @@ impl Event {
 /// Ring capacity: bounded, like every other obs structure.
 const RING_CAP: usize = 1024;
 
+/// Default rotation threshold for the JSONL sink file. Long soaks used to
+/// grow `events.jsonl` without limit even though the in-memory ring is
+/// bounded; past the cap the file rotates to `events.jsonl.1` (one
+/// generation kept) and a fresh file starts. Override with
+/// `OPENACM_OBS_EVENTS_MAX_BYTES` or [`set_rotate_cap`].
+const DEFAULT_ROTATE_BYTES: u64 = 8 * 1024 * 1024;
+
 struct LogState {
     ring: VecDeque<Event>,
     file: Option<std::fs::File>,
+    /// Path of the attached sink (needed to rotate it).
+    path: Option<PathBuf>,
+    /// Bytes written to the current sink file (including pre-existing
+    /// content found at attach time).
+    written: u64,
+    rotate_cap: u64,
     mirror_stderr: bool,
 }
 
 fn log_state() -> &'static Mutex<LogState> {
     static LOG: OnceLock<Mutex<LogState>> = OnceLock::new();
     LOG.get_or_init(|| {
+        let cap = std::env::var("OPENACM_OBS_EVENTS_MAX_BYTES")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+            .filter(|&v| v > 0)
+            .unwrap_or(DEFAULT_ROTATE_BYTES);
         Mutex::new(LogState {
             ring: VecDeque::with_capacity(RING_CAP),
             file: None,
+            path: None,
+            written: 0,
+            rotate_cap: cap,
             mirror_stderr: true,
         })
     })
+}
+
+/// Rotate `<path>` to `<path>.1` (replacing any prior generation) and
+/// reopen a fresh sink. On any filesystem error the sink degrades to the
+/// in-memory ring only — telemetry must never take the process down.
+fn rotate(g: &mut LogState) {
+    let Some(path) = g.path.clone() else { return };
+    g.file = None; // close before renaming so the handle can't follow the old inode
+    let rotated = {
+        let mut os = path.clone().into_os_string();
+        os.push(".1");
+        PathBuf::from(os)
+    };
+    let _ = std::fs::rename(&path, &rotated);
+    match OpenOptions::new().create(true).append(true).open(&path) {
+        Ok(f) => {
+            g.written = f.metadata().map(|m| m.len()).unwrap_or(0);
+            g.file = Some(f);
+        }
+        Err(_) => {
+            g.path = None;
+            g.written = 0;
+        }
+    }
 }
 
 /// Emit one event. `fields` are `(key, value)` pairs; values are already
@@ -140,8 +185,14 @@ pub fn emit(severity: Severity, subsystem: &str, message: &str, fields: &[(&str,
     if let Some(f) = g.file.as_mut() {
         // Sink write failures must never take the serving path down;
         // drop the sink and keep the ring + mirror.
-        if writeln!(f, "{}", ev.to_jsonl()).is_err() {
+        let line = ev.to_jsonl();
+        if writeln!(f, "{line}").is_err() {
             g.file = None;
+        } else {
+            g.written += line.len() as u64 + 1;
+            if g.written > g.rotate_cap {
+                rotate(&mut g);
+            }
         }
     }
     if g.mirror_stderr && severity >= Severity::Warn {
@@ -165,16 +216,30 @@ pub fn error(subsystem: &str, message: &str, fields: &[(&str, String)]) {
     emit(Severity::Error, subsystem, message, fields);
 }
 
-/// Append events to `path` (JSONL) from now on.
+/// Append events to `path` (JSONL) from now on. Pre-existing file size
+/// counts toward the rotation cap, so re-attaching to a large old log
+/// rotates on the first overflowing event rather than doubling it.
 pub fn attach_file(path: &Path) -> std::io::Result<()> {
     let f = OpenOptions::new().create(true).append(true).open(path)?;
-    log_state().lock().unwrap().file = Some(f);
+    let written = f.metadata().map(|m| m.len()).unwrap_or(0);
+    let mut g = log_state().lock().unwrap();
+    g.file = Some(f);
+    g.path = Some(path.to_path_buf());
+    g.written = written;
     Ok(())
 }
 
 /// Toggle the Warn/Error stderr mirror (default on).
 pub fn set_stderr_mirror(on: bool) {
     log_state().lock().unwrap().mirror_stderr = on;
+}
+
+/// Override the JSONL sink rotation threshold in bytes (tests; long
+/// soaks with tight disk budgets). Values ≤ 0 are ignored.
+pub fn set_rotate_cap(bytes: u64) {
+    if bytes > 0 {
+        log_state().lock().unwrap().rotate_cap = bytes;
+    }
 }
 
 /// The most recent `n` events (oldest first).
@@ -212,5 +277,35 @@ mod tests {
             doc.get("fields").unwrap().get("variant").unwrap().as_str(),
             Some("exact")
         );
+    }
+
+    #[test]
+    fn sink_file_rotates_at_size_cap() {
+        let dir = std::env::temp_dir().join(format!("openacm-obs-rot-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("events.jsonl");
+        set_stderr_mirror(false);
+        attach_file(&path).unwrap();
+        set_rotate_cap(512);
+        for i in 0..64 {
+            info(
+                "obs_rotate_test",
+                "filler event to overflow the sink",
+                &[("i", i.to_string())],
+            );
+        }
+        set_rotate_cap(DEFAULT_ROTATE_BYTES);
+        set_stderr_mirror(true);
+        let rotated = dir.join("events.jsonl.1");
+        assert!(rotated.exists(), "rotated generation exists");
+        let cur_len = std::fs::metadata(&path).unwrap().len();
+        // Current file restarts after each rotation, so it stays within
+        // one event line of the cap.
+        assert!(cur_len <= 512 + 256, "current file near cap, got {cur_len}");
+        let text = std::fs::read_to_string(&rotated).unwrap();
+        assert!(!text.is_empty());
+        assert!(text.lines().all(|l| super::super::json::parse(l).is_ok()));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -21,26 +21,48 @@
 //! `compile.replayed_macs`, `simd.widened_fallback_strips`,
 //! `threadpool.busy_us`); span histograms are `span.<path>.us`.
 //!
+//! On top of the pillars sits the analysis layer:
+//!
+//! * [`trace`] — per-request **stage timelines** (admit → batch →
+//!   execute → respond) with tail-based sampling: every failed, shed or
+//!   deadline-missed request keeps its full timeline, plus the top-K
+//!   slowest and a probabilistic slice of healthy traffic; exported as
+//!   Chrome trace-event JSON (`<dir>/trace.json`) and linked into
+//!   latency histograms as per-bucket **exemplar** trace ids.
+//! * [`slo`] — sliding-window **burn-rate engine** over availability,
+//!   latency and routing-health objectives (Google-SRE fast/slow window
+//!   pairs), publishing `serve.slo.*` gauges and Warn/Error transition
+//!   events.
+//! * [`regress`] — **perf-regression gate** diffing `BENCH_*.json`
+//!   emissions against a committed baseline with tolerance bands.
+//!
 //! Persistence: [`sink::flush`] merge-writes `<dir>/snapshot.json`
 //! (default dir `$OPENACM_OBS` / `.openacm_obs`) so consecutive commands
-//! accumulate one telemetry trail; `openacm obs snapshot|tail|diff`
-//! ([`cli`]) reads it back. Overhead budget: instrumentation sits at
-//! batch/probe/GEMM boundaries only — `benches/nn_forward.rs` enforces
-//! ≤2% on the hot forward path vs `OPENACM_TRACE=0`.
+//! accumulate one telemetry trail; `openacm obs
+//! snapshot|tail|diff|trace|health|regress` ([`cli`]) reads it back.
+//! Overhead budget: instrumentation sits at batch/probe/GEMM boundaries
+//! only — `benches/nn_forward.rs` enforces ≤2% on the hot forward path
+//! vs `OPENACM_TRACE=0`, a guard the regression gate keeps honest via
+//! the `obs_overhead_b32` ratio.
 
 pub mod cli;
 pub mod event;
 pub mod json;
 pub mod registry;
+pub mod regress;
 pub mod sink;
+pub mod slo;
 pub mod span;
+pub mod trace;
 
 pub use event::{emit, error, info, recent, warn, Event, Severity};
 pub use registry::{
     Counter, Gauge, Histogram, HistogramSnapshot, MetricsRegistry, RegistrySnapshot,
 };
 pub use sink::{default_dir, flush, init, load};
-pub use span::{set_trace_enabled, span, trace_enabled, Span};
+pub use slo::{SloEngine, SloInput, SloPolicy, SloState};
+pub use span::{set_trace_enabled, span, span_path, trace_enabled, Span};
+pub use trace::{StageStamps, TraceOutcome};
 
 use std::sync::OnceLock;
 

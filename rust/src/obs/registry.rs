@@ -199,6 +199,11 @@ impl HistShard {
 #[derive(Debug)]
 struct HistogramInner {
     shards: Vec<HistShard>,
+    /// One exemplar slot per bucket (shared across shards): the trace id
+    /// of the most recent value that landed in that bucket, 0 = none.
+    /// Last-writer-wins relaxed stores keep the record path lock-free;
+    /// fixed memory (`HIST_BUCKETS` atomics) regardless of traffic.
+    exemplars: Box<[AtomicU64]>,
 }
 
 /// A fixed-memory log-bucketed histogram (typically of microsecond
@@ -217,6 +222,7 @@ impl Histogram {
     pub fn new() -> Histogram {
         Histogram(Arc::new(HistogramInner {
             shards: (0..HIST_SHARDS).map(|_| HistShard::new()).collect(),
+            exemplars: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
         }))
     }
 
@@ -228,6 +234,18 @@ impl Histogram {
         s.sum.fetch_add(v, Ordering::Relaxed);
         s.min.fetch_min(v, Ordering::Relaxed);
         s.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// [`Self::record`], additionally tagging the value's bucket with an
+    /// exemplar id (a trace id) so percentile queries can link back to a
+    /// concrete request. `exemplar == 0` means "no exemplar" and degrades
+    /// to a plain `record`.
+    #[inline]
+    pub fn record_with_exemplar(&self, v: u64, exemplar: u64) {
+        self.record(v);
+        if exemplar != 0 {
+            self.0.exemplars[bucket_index(v)].store(exemplar, Ordering::Relaxed);
+        }
     }
 
     /// Merge every shard into one immutable view.
@@ -246,12 +264,23 @@ impl Histogram {
                 }
             }
         }
+        let exemplars: Vec<(u32, u64)> = self
+            .0
+            .exemplars
+            .iter()
+            .enumerate()
+            .filter_map(|(i, e)| {
+                let id = e.load(Ordering::Relaxed);
+                (id != 0).then_some((i as u32, id))
+            })
+            .collect();
         HistogramSnapshot {
             count,
             sum,
             min: if count == 0 { 0 } else { min },
             max,
             buckets: buckets.into_iter().collect(),
+            exemplars,
         }
     }
 
@@ -275,6 +304,9 @@ pub struct HistogramSnapshot {
     pub max: u64,
     /// Sparse `(bucket index, count)` pairs, ascending by index.
     pub buckets: Vec<(u32, u64)>,
+    /// Sparse `(bucket index, trace id)` exemplars, ascending by index:
+    /// the most recent trace that landed in each bucket (0 = never one).
+    pub exemplars: Vec<(u32, u64)>,
 }
 
 impl HistogramSnapshot {
@@ -306,6 +338,35 @@ impl HistogramSnapshot {
         }
     }
 
+    /// The exemplar trace id nearest the bucket that holds percentile `p`:
+    /// the bucket itself first, then widening to neighbours (higher bucket
+    /// preferred on ties — for tail percentiles the slower exemplar is the
+    /// interesting one). `None` when no exemplar was ever recorded.
+    pub fn exemplar_near_percentile(&self, p: f64) -> Option<u64> {
+        if self.count == 0 || self.exemplars.is_empty() {
+            return None;
+        }
+        let rank = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let rank = rank.min(self.count);
+        let mut cum = 0u64;
+        let mut target = self.buckets.last().map(|&(i, _)| i).unwrap_or(0);
+        for &(idx, c) in &self.buckets {
+            cum += c;
+            if cum >= rank {
+                target = idx;
+                break;
+            }
+        }
+        self.exemplars
+            .iter()
+            .min_by_key(|&&(i, _)| {
+                let dist = (i64::from(i) - i64::from(target)).unsigned_abs();
+                // Prefer the higher bucket on equal distance.
+                (dist, i < target)
+            })
+            .map(|&(_, id)| id)
+    }
+
     /// Accumulate `other` into `self` (exact for counts and bucket
     /// contents — the property that makes cross-process snapshot files
     /// additive).
@@ -323,6 +384,12 @@ impl HistogramSnapshot {
             *map.entry(i).or_insert(0) += c;
         }
         self.buckets = map.into_iter().collect();
+        // Exemplars are last-writer-wins: `other` is the more recent side.
+        let mut ex: BTreeMap<u32, u64> = self.exemplars.iter().cloned().collect();
+        for &(i, id) in &other.exemplars {
+            ex.insert(i, id);
+        }
+        self.exemplars = ex.into_iter().collect();
     }
 
     /// What happened after `earlier` (bucket-wise saturating subtraction;
@@ -344,6 +411,8 @@ impl HistogramSnapshot {
             min: self.min,
             max: self.max,
             buckets,
+            // The later snapshot's exemplars are the freshest examples.
+            exemplars: self.exemplars.clone(),
         }
     }
 }
@@ -482,6 +551,15 @@ impl RegistrySnapshot {
         }
     }
 
+    /// True when nothing happened: every counter is zero and every
+    /// histogram is empty. Gauges are excluded — they are levels, not
+    /// activity, and a diff carries the later snapshot's gauges verbatim.
+    /// `openacm obs diff` uses this for its exit code.
+    pub fn is_zero(&self) -> bool {
+        self.counters.values().all(|&v| v == 0)
+            && self.histograms.values().all(|h| h.count == 0)
+    }
+
     /// Hand-rolled JSON (offline build, no serde) — same convention as
     /// [`crate::bench::harness::BenchJson`]. Deterministic: maps are
     /// `BTreeMap`s, so equal snapshots render byte-identically.
@@ -517,15 +595,26 @@ impl RegistrySnapshot {
                 .iter()
                 .map(|(bi, c)| format!("[{bi},{c}]"))
                 .collect();
+            let exemplars = if h.exemplars.is_empty() {
+                String::new()
+            } else {
+                let pairs: Vec<String> = h
+                    .exemplars
+                    .iter()
+                    .map(|(bi, id)| format!("[{bi},{id}]"))
+                    .collect();
+                format!(", \"exemplars\": [{}]", pairs.join(","))
+            };
             s.push_str(&format!(
                 "    \"{}\": {{\"count\": {}, \"sum\": {}, \"min\": {}, \"max\": {}, \
-                 \"buckets\": [{}]}}",
+                 \"buckets\": [{}]{}}}",
                 esc(k),
                 h.count,
                 h.sum,
                 h.min,
                 h.max,
-                buckets.join(",")
+                buckets.join(","),
+                exemplars
             ));
         }
         s.push_str("\n  }\n}\n");
@@ -556,12 +645,25 @@ impl RegistrySnapshot {
                     min: v.get("min").and_then(Json::as_u64).unwrap_or_default(),
                     max: v.get("max").and_then(Json::as_u64).unwrap_or_default(),
                     buckets: Vec::new(),
+                    exemplars: Vec::new(),
                 };
                 if let Some(arr) = v.get("buckets").and_then(Json::as_array) {
                     for pair in arr {
                         if let Some(p) = pair.as_array() {
                             if p.len() == 2 {
                                 h.buckets.push((
+                                    p[0].as_u64().unwrap_or_default() as u32,
+                                    p[1].as_u64().unwrap_or_default(),
+                                ));
+                            }
+                        }
+                    }
+                }
+                if let Some(arr) = v.get("exemplars").and_then(Json::as_array) {
+                    for pair in arr {
+                        if let Some(p) = pair.as_array() {
+                            if p.len() == 2 {
+                                h.exemplars.push((
                                     p[0].as_u64().unwrap_or_default() as u32,
                                     p[1].as_u64().unwrap_or_default(),
                                 ));
@@ -638,10 +740,37 @@ mod tests {
         let d = b.diff(&a);
         assert_eq!(d.counters["x"], 5);
         assert_eq!(d.histograms["h"].count, 1);
+        assert!(!d.is_zero());
+        assert!(b.diff(&b).is_zero(), "self-diff is empty");
         let mut merged = a.clone();
         merged.merge(&d);
         assert_eq!(merged.counters["x"], b.counters["x"]);
         assert_eq!(merged.histograms["h"].count, b.histograms["h"].count);
+    }
+
+    #[test]
+    fn exemplars_tag_buckets_and_survive_json_and_merge() {
+        let r = MetricsRegistry::new();
+        let h = r.histogram("serve.latency_us");
+        h.record_with_exemplar(10, 0); // id 0 = no exemplar
+        h.record_with_exemplar(10, 7);
+        h.record_with_exemplar(100_000, 42);
+        let s = r.snapshot();
+        let hs = &s.histograms["serve.latency_us"];
+        assert_eq!(hs.exemplars.len(), 2);
+        assert_eq!(hs.exemplar_near_percentile(99.0), Some(42));
+        assert_eq!(hs.exemplar_near_percentile(1.0), Some(7));
+        // Round-trips through the snapshot JSON.
+        let back = RegistrySnapshot::from_json(&s.to_json()).unwrap();
+        assert_eq!(back, s);
+        // Merge: the other (more recent) side's exemplar wins per bucket.
+        let mut a = hs.clone();
+        let mut b = hs.clone();
+        b.exemplars = vec![(bucket_index(10) as u32, 9)];
+        a.merge(&b);
+        let map: std::collections::BTreeMap<u32, u64> = a.exemplars.into_iter().collect();
+        assert_eq!(map[&(bucket_index(10) as u32)], 9);
+        assert_eq!(map[&(bucket_index(100_000) as u32)], 42);
     }
 
     #[test]

@@ -1,0 +1,478 @@
+//! Perf-regression gate: diff the current `BENCH_*.json` emission against
+//! a committed baseline directory with per-metric tolerance bands.
+//!
+//! The benches already leave a machine-readable trail
+//! ([`crate::bench::harness::BenchJson`]: cases with ns timings, named
+//! speedup **ratios**, absolute **counters**). This module turns that
+//! trail into an enforced curve: `openacm obs regress --baseline
+//! benches/baseline` compares every metric the baseline names and exits
+//! non-zero when one regresses beyond tolerance.
+//!
+//! Gating policy (what CI machines make reasonable):
+//!
+//! * **Ratios gate by default** — they are machine-normalized speedups
+//!   (blocked-over-scalar, warm-over-cold, shard4-over-shard1), stable
+//!   across runner generations. Direction heuristic: a ratio whose name
+//!   contains `"overhead"` is lower-is-better; every other ratio is
+//!   higher-is-better.
+//! * **Absolute case times are informational by default** (`--times`
+//!   opts them in with their own, looser band) — wall-ns varies with the
+//!   runner.
+//! * **Counters never gate** — they are workload descriptors, not
+//!   performance.
+//! * A metric the baseline names but the current emission lacks is a
+//!   **gated regression** (a bench silently dropping a tracked column is
+//!   exactly what the gate exists to catch); metrics only the current
+//!   emission has are reported as new, ungated.
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::json::{parse, Json};
+
+/// One parsed `BENCH_<name>.json` document.
+#[derive(Clone, Debug, Default)]
+pub struct BenchDoc {
+    pub name: String,
+    /// Case name → `mean_ns`.
+    pub cases: Vec<(String, f64)>,
+    pub ratios: Vec<(String, f64)>,
+    pub counters: Vec<(String, f64)>,
+}
+
+/// Parse the format [`crate::bench::harness::BenchJson::render`] emits.
+/// Non-finite metrics (serialized as `null`) are skipped.
+pub fn parse_bench(text: &str) -> Result<BenchDoc> {
+    let doc = parse(text)?;
+    let name = doc
+        .get("name")
+        .and_then(Json::as_str)
+        .context("bench json missing \"name\"")?
+        .to_string();
+    let mut out = BenchDoc {
+        name,
+        ..BenchDoc::default()
+    };
+    if let Some(cases) = doc.get("cases").and_then(Json::as_array) {
+        for c in cases {
+            let (Some(n), Some(v)) = (
+                c.get("name").and_then(Json::as_str),
+                c.get("mean_ns").and_then(Json::as_f64),
+            ) else {
+                continue;
+            };
+            out.cases.push((n.to_string(), v));
+        }
+    }
+    for (section, into) in [("ratios", &mut out.ratios), ("counters", &mut out.counters)] {
+        if let Some(obj) = doc.get(section).and_then(Json::as_object) {
+            for (k, v) in obj {
+                if let Some(x) = v.as_f64() {
+                    into.push((k.clone(), x));
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Tolerance bands; fractions of the baseline value.
+#[derive(Clone, Copy, Debug)]
+pub struct Tolerance {
+    /// Band for ratios (default 0.30: a 10× speedup may sag to 7×).
+    pub ratio_frac: f64,
+    /// Band for absolute case times when gated (default 0.50).
+    pub time_frac: f64,
+    /// Gate absolute case times too (`--times`).
+    pub gate_times: bool,
+}
+
+impl Default for Tolerance {
+    fn default() -> Tolerance {
+        Tolerance {
+            ratio_frac: 0.30,
+            time_frac: 0.50,
+            gate_times: false,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CheckStatus {
+    /// Within band.
+    Ok,
+    /// Beyond band in the good direction.
+    Improved,
+    /// Beyond band in the bad direction.
+    Regressed,
+    /// Baseline names it; current emission lacks it.
+    Missing,
+    /// Current emission has it; baseline doesn't (informational).
+    New,
+    /// Tracked but never gated (counters; times without `--times`).
+    Info,
+}
+
+impl CheckStatus {
+    pub fn name(self) -> &'static str {
+        match self {
+            CheckStatus::Ok => "ok",
+            CheckStatus::Improved => "improved",
+            CheckStatus::Regressed => "REGRESSED",
+            CheckStatus::Missing => "MISSING",
+            CheckStatus::New => "new",
+            CheckStatus::Info => "info",
+        }
+    }
+}
+
+/// One metric comparison.
+#[derive(Clone, Debug)]
+pub struct Check {
+    /// Bench document name (`nn_forward`, `serving`, …).
+    pub bench: String,
+    /// `ratio:<name>`, `case:<name>` or `counter:<name>`.
+    pub metric: String,
+    pub baseline: Option<f64>,
+    pub current: Option<f64>,
+    /// Signed `(current - baseline) / baseline`.
+    pub delta_frac: Option<f64>,
+    pub lower_better: bool,
+    /// Whether this check can fail the gate.
+    pub gated: bool,
+    pub status: CheckStatus,
+}
+
+impl Check {
+    pub fn is_regression(&self) -> bool {
+        self.gated && matches!(self.status, CheckStatus::Regressed | CheckStatus::Missing)
+    }
+}
+
+/// Full gate result.
+#[derive(Clone, Debug, Default)]
+pub struct RegressReport {
+    pub checks: Vec<Check>,
+}
+
+impl RegressReport {
+    pub fn regressions(&self) -> usize {
+        self.checks.iter().filter(|c| c.is_regression()).count()
+    }
+
+    pub fn passed(&self) -> bool {
+        self.regressions() == 0
+    }
+}
+
+fn lower_better(metric_kind: &str, name: &str) -> bool {
+    match metric_kind {
+        // Wall time: smaller is faster.
+        "case" => true,
+        // Speedup ratios, except self-overhead ratios (traced/untraced).
+        "ratio" => name.contains("overhead"),
+        _ => false,
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn check_metric(
+    out: &mut Vec<Check>,
+    bench: &str,
+    kind: &str,
+    name: &str,
+    base: f64,
+    cur: Option<f64>,
+    band: f64,
+    gated: bool,
+) {
+    let lower = lower_better(kind, name);
+    let metric = format!("{kind}:{name}");
+    let Some(cur) = cur else {
+        out.push(Check {
+            bench: bench.to_string(),
+            metric,
+            baseline: Some(base),
+            current: None,
+            delta_frac: None,
+            lower_better: lower,
+            gated,
+            status: CheckStatus::Missing,
+        });
+        return;
+    };
+    let delta = if base.abs() > f64::EPSILON {
+        (cur - base) / base
+    } else {
+        0.0
+    };
+    let status = if !gated {
+        CheckStatus::Info
+    } else if (lower && delta > band) || (!lower && delta < -band) {
+        CheckStatus::Regressed
+    } else if (lower && delta < -band) || (!lower && delta > band) {
+        CheckStatus::Improved
+    } else {
+        CheckStatus::Ok
+    };
+    out.push(Check {
+        bench: bench.to_string(),
+        metric,
+        baseline: Some(base),
+        current: Some(cur),
+        delta_frac: Some(delta),
+        lower_better: lower,
+        gated,
+        status,
+    });
+}
+
+/// Compare one bench document pair.
+pub fn compare(baseline: &BenchDoc, current: &BenchDoc, tol: &Tolerance) -> Vec<Check> {
+    let mut out = Vec::new();
+    let find = |hay: &[(String, f64)], k: &str| {
+        hay.iter().find(|(n, _)| n == k).map(|&(_, v)| v)
+    };
+    for (name, base) in &baseline.ratios {
+        check_metric(
+            &mut out,
+            &baseline.name,
+            "ratio",
+            name,
+            *base,
+            find(&current.ratios, name),
+            tol.ratio_frac,
+            true,
+        );
+    }
+    for (name, base) in &baseline.cases {
+        check_metric(
+            &mut out,
+            &baseline.name,
+            "case",
+            name,
+            *base,
+            find(&current.cases, name),
+            tol.time_frac,
+            tol.gate_times,
+        );
+    }
+    for (name, base) in &baseline.counters {
+        check_metric(
+            &mut out,
+            &baseline.name,
+            "counter",
+            name,
+            *base,
+            find(&current.counters, name),
+            f64::INFINITY,
+            false,
+        );
+    }
+    // Metrics the current emission gained since the baseline: surface,
+    // never gate.
+    for (name, cur) in &current.ratios {
+        if find(&baseline.ratios, name).is_none() {
+            out.push(Check {
+                bench: baseline.name.clone(),
+                metric: format!("ratio:{name}"),
+                baseline: None,
+                current: Some(*cur),
+                delta_frac: None,
+                lower_better: lower_better("ratio", name),
+                gated: false,
+                status: CheckStatus::New,
+            });
+        }
+    }
+    out
+}
+
+fn bench_files(dir: &Path) -> Result<Vec<std::path::PathBuf>> {
+    let mut out = Vec::new();
+    for entry in
+        fs::read_dir(dir).with_context(|| format!("reading baseline dir {}", dir.display()))?
+    {
+        let path = entry?.path();
+        let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if name.starts_with("BENCH_") && name.ends_with(".json") {
+            out.push(path);
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Compare every `BENCH_*.json` in `baseline_dir` against its
+/// counterpart in `current_dir`. A baseline file with no current
+/// counterpart is a gated regression — the bench stopped emitting.
+pub fn compare_dirs(baseline_dir: &Path, current_dir: &Path, tol: &Tolerance) -> Result<RegressReport> {
+    let files = bench_files(baseline_dir)?;
+    if files.is_empty() {
+        bail!("no BENCH_*.json files in {}", baseline_dir.display());
+    }
+    let mut report = RegressReport::default();
+    for path in files {
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let base = parse_bench(&text)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        let cur_path = current_dir.join(path.file_name().expect("bench file name"));
+        match fs::read_to_string(&cur_path) {
+            Ok(cur_text) => {
+                let cur = parse_bench(&cur_text)
+                    .with_context(|| format!("parsing {}", cur_path.display()))?;
+                report.checks.extend(compare(&base, &cur, tol));
+            }
+            Err(_) => report.checks.push(Check {
+                bench: base.name.clone(),
+                metric: "file".to_string(),
+                baseline: None,
+                current: None,
+                delta_frac: None,
+                lower_better: false,
+                gated: true,
+                status: CheckStatus::Missing,
+            }),
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::harness::{BenchJson, BenchResult};
+
+    fn doc(ratios: &[(&str, f64)]) -> BenchDoc {
+        BenchDoc {
+            name: "t".to_string(),
+            cases: vec![("fwd".to_string(), 1000.0)],
+            ratios: ratios.iter().map(|&(n, v)| (n.to_string(), v)).collect(),
+            counters: vec![("reqs".to_string(), 100.0)],
+        }
+    }
+
+    #[test]
+    fn parses_the_harness_emission_format() {
+        let mut j = BenchJson::new("roundtrip");
+        j.case(&BenchResult {
+            name: "fwd b=32".into(),
+            iters: 5,
+            mean_ns: 1234.5,
+            p50_ns: 1200.0,
+            p99_ns: 1500.0,
+            min_ns: 1100.0,
+        });
+        j.ratio("blocked_over_scalar", 7.5);
+        j.ratio("obs_overhead_b32", f64::INFINITY); // serializes as null
+        j.counter("requests", 4096.0);
+        let doc = parse_bench(&j.render()).unwrap();
+        assert_eq!(doc.name, "roundtrip");
+        assert_eq!(doc.cases, vec![("fwd b=32".to_string(), 1234.5)]);
+        assert_eq!(doc.ratios, vec![("blocked_over_scalar".to_string(), 7.5)]);
+        assert_eq!(doc.counters, vec![("requests".to_string(), 4096.0)]);
+    }
+
+    #[test]
+    fn unchanged_tree_passes_and_degradation_fails() {
+        let tol = Tolerance::default();
+        let base = doc(&[("speedup", 8.0), ("obs_overhead", 1.01)]);
+        // Identical emission: every gated check Ok.
+        let same = compare(&base, &base, &tol);
+        assert!(same.iter().all(|c| !c.is_regression()));
+        assert!(same
+            .iter()
+            .any(|c| c.metric == "ratio:speedup" && c.status == CheckStatus::Ok));
+
+        // Speedup sagging beyond the 30% band is a regression…
+        let worse = doc(&[("speedup", 4.0), ("obs_overhead", 1.01)]);
+        let checks = compare(&base, &worse, &tol);
+        let r = checks.iter().find(|c| c.metric == "ratio:speedup").unwrap();
+        assert_eq!(r.status, CheckStatus::Regressed);
+        assert!(r.is_regression());
+        // …and an overhead ratio *growing* beyond band is too
+        // (lower-is-better direction heuristic).
+        let slow = doc(&[("speedup", 8.0), ("obs_overhead", 2.0)]);
+        let checks = compare(&base, &slow, &tol);
+        let r = checks.iter().find(|c| c.metric == "ratio:obs_overhead").unwrap();
+        assert!(r.lower_better);
+        assert_eq!(r.status, CheckStatus::Regressed);
+
+        // Within band: ok. Far better: improved, not a regression.
+        let better = doc(&[("speedup", 20.0), ("obs_overhead", 1.0)]);
+        let checks = compare(&base, &better, &tol);
+        let r = checks.iter().find(|c| c.metric == "ratio:speedup").unwrap();
+        assert_eq!(r.status, CheckStatus::Improved);
+        assert!(!r.is_regression());
+    }
+
+    #[test]
+    fn missing_tracked_metric_gates_and_new_metric_does_not() {
+        let tol = Tolerance::default();
+        let base = doc(&[("speedup", 8.0)]);
+        let dropped = doc(&[]);
+        let checks = compare(&base, &dropped, &tol);
+        let r = checks.iter().find(|c| c.metric == "ratio:speedup").unwrap();
+        assert_eq!(r.status, CheckStatus::Missing);
+        assert!(r.is_regression());
+
+        let gained = doc(&[("speedup", 8.0), ("extra", 2.0)]);
+        let checks = compare(&base, &gained, &tol);
+        let n = checks.iter().find(|c| c.metric == "ratio:extra").unwrap();
+        assert_eq!(n.status, CheckStatus::New);
+        assert!(!n.is_regression());
+    }
+
+    #[test]
+    fn times_gate_only_when_opted_in_and_counters_never() {
+        let base = doc(&[]);
+        let mut slower = base.clone();
+        slower.cases[0].1 = 10_000.0; // 10× slower
+        slower.counters[0].1 = 9999.0; // counters drift freely
+        let default_tol = Tolerance::default();
+        let checks = compare(&base, &slower, &default_tol);
+        assert_eq!(
+            checks.iter().filter(|c| c.is_regression()).count(),
+            0,
+            "{checks:?}"
+        );
+        let strict = Tolerance {
+            gate_times: true,
+            ..Tolerance::default()
+        };
+        let checks = compare(&base, &slower, &strict);
+        let r = checks.iter().find(|c| c.metric == "case:fwd").unwrap();
+        assert_eq!(r.status, CheckStatus::Regressed);
+        assert!(r.is_regression());
+        let c = checks.iter().find(|c| c.metric == "counter:reqs").unwrap();
+        assert_eq!(c.status, CheckStatus::Info);
+        assert!(!c.is_regression());
+    }
+
+    #[test]
+    fn dir_comparison_flags_a_missing_bench_file() {
+        let root = std::env::temp_dir().join(format!("openacm-regress-{}", std::process::id()));
+        let base_dir = root.join("baseline");
+        let cur_dir = root.join("current");
+        let _ = fs::remove_dir_all(&root);
+        fs::create_dir_all(&base_dir).unwrap();
+        fs::create_dir_all(&cur_dir).unwrap();
+        let mut j = BenchJson::new("solo");
+        j.ratio("speedup", 4.0);
+        fs::write(base_dir.join("BENCH_solo.json"), j.render()).unwrap();
+
+        // No current file at all: gated regression.
+        let report = compare_dirs(&base_dir, &cur_dir, &Tolerance::default()).unwrap();
+        assert_eq!(report.regressions(), 1);
+        assert!(!report.passed());
+
+        // Matching file: passes.
+        fs::write(cur_dir.join("BENCH_solo.json"), j.render()).unwrap();
+        let report = compare_dirs(&base_dir, &cur_dir, &Tolerance::default()).unwrap();
+        assert!(report.passed());
+        let _ = fs::remove_dir_all(&root);
+    }
+}

@@ -1,0 +1,359 @@
+//! SLO burn-rate engine: sliding-window objectives evaluated over a
+//! fast/slow window pair (Google-SRE-style multi-window burn alerting).
+//!
+//! Three serving objectives, each a bad/total ratio over a window of
+//! evaluation ticks:
+//!
+//! * **availability** — user-visible errors (failed deliveries + sheds)
+//!   over all settled requests; the issue's `delivered/admitted` framing,
+//!   widened to count overload rejections as unavailability;
+//! * **latency** — deliveries that landed past their per-request deadline
+//!   (`serve.delivered_late`, i.e. the `--slo-ms` objective) over all
+//!   deliveries;
+//! * **routing** — accuracy-class requests that fell back to the exact
+//!   variant over all class-routed requests.
+//!
+//! **Burn rate** = error ratio ÷ error budget: burn 1.0 spends exactly
+//! the allowed budget, burn 10 exhausts it 10× too fast. A state flips
+//! only when *both* windows agree — the fast window gives reaction time,
+//! the slow window filters blips (the classic page/ticket pairing):
+//! `Error` when fast ∧ slow ≥ `error_burn`, `Warn` when fast ∧ slow ≥
+//! `warn_burn`. Transitions emit typed warn/error events; the current
+//! burn/state surface as `serve.slo.*` gauges, the per-interval `[slo]`
+//! line during `openacm serve`, and `openacm obs health --json`.
+//!
+//! The engine itself is pure (feed [`SloInput`]s, read
+//! [`ObjectiveHealth`]s) so the warn→error flip is property-testable
+//! without a pipeline; [`SloEngine::tick_and_publish`] is the wired-up
+//! form `cmd_serve` drives once per metrics interval.
+
+use std::collections::VecDeque;
+
+/// Cumulative pipeline totals at one evaluation instant (monotone
+/// counters, not deltas — the engine differences them per window).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SloInput {
+    pub delivered: u64,
+    /// Admitted but failed (deadline expired, execute failure, panic).
+    pub failed: u64,
+    /// Rejected at admission / full queues.
+    pub shed: u64,
+    /// Delivered, but past the request's deadline.
+    pub delivered_late: u64,
+    /// Accuracy-class routed requests, and how many fell back to exact.
+    pub class_requests: u64,
+    pub class_fallbacks: u64,
+}
+
+/// Objectives, budgets and window geometry.
+#[derive(Clone, Copy, Debug)]
+pub struct SloPolicy {
+    /// Allowed (failed + shed) / settled ratio, e.g. 0.01 = 99% available.
+    pub availability_budget: f64,
+    /// Allowed late-delivery ratio against the `--slo-ms` deadline.
+    pub latency_budget: f64,
+    /// Allowed class-fallback ratio (fallbacks cost energy, not errors,
+    /// so the budget is looser).
+    pub routing_budget: f64,
+    /// Window lengths in evaluation ticks (a tick = one `--metrics-every`
+    /// interval in `openacm serve`).
+    pub fast_window: usize,
+    pub slow_window: usize,
+    /// Burn thresholds: ≥ `warn_burn` in both windows ⇒ Warn, ≥
+    /// `error_burn` in both ⇒ Error.
+    pub warn_burn: f64,
+    pub error_burn: f64,
+}
+
+impl Default for SloPolicy {
+    fn default() -> SloPolicy {
+        SloPolicy {
+            availability_budget: 0.01,
+            latency_budget: 0.01,
+            routing_budget: 0.05,
+            fast_window: 3,
+            slow_window: 12,
+            warn_burn: 1.0,
+            error_burn: 10.0,
+        }
+    }
+}
+
+/// Health state of one objective, ordered by severity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SloState {
+    Ok,
+    Warn,
+    Error,
+}
+
+impl SloState {
+    pub fn name(self) -> &'static str {
+        match self {
+            SloState::Ok => "ok",
+            SloState::Warn => "warn",
+            SloState::Error => "error",
+        }
+    }
+
+    /// Gauge encoding (0/1/2) used for `serve.slo.<objective>.state`.
+    pub fn code(self) -> i64 {
+        match self {
+            SloState::Ok => 0,
+            SloState::Warn => 1,
+            SloState::Error => 2,
+        }
+    }
+}
+
+/// One objective's evaluation at a tick.
+#[derive(Clone, Copy, Debug)]
+pub struct ObjectiveHealth {
+    pub objective: &'static str,
+    pub burn_fast: f64,
+    pub burn_slow: f64,
+    pub state: SloState,
+}
+
+const OBJECTIVES: usize = 3;
+
+/// The burn-rate engine. Feed it cumulative [`SloInput`]s once per tick.
+pub struct SloEngine {
+    policy: SloPolicy,
+    /// Cumulative inputs, oldest first; bounded at `slow_window + 1`.
+    history: VecDeque<SloInput>,
+    last_states: [SloState; OBJECTIVES],
+}
+
+impl SloEngine {
+    pub fn new(policy: SloPolicy) -> SloEngine {
+        SloEngine {
+            policy,
+            history: VecDeque::new(),
+            last_states: [SloState::Ok; OBJECTIVES],
+        }
+    }
+
+    pub fn policy(&self) -> &SloPolicy {
+        &self.policy
+    }
+
+    /// Bad/total ratio over the last `window` ticks (differencing the
+    /// cumulative inputs); 0 when nothing happened in the window.
+    fn window_ratio(
+        &self,
+        window: usize,
+        bad: impl Fn(&SloInput) -> u64,
+        total: impl Fn(&SloInput) -> u64,
+    ) -> f64 {
+        let Some(newest) = self.history.back() else {
+            return 0.0;
+        };
+        let base_idx = self.history.len().saturating_sub(window + 1);
+        let base = &self.history[base_idx];
+        let d_total = total(newest).saturating_sub(total(base));
+        if d_total == 0 {
+            return 0.0;
+        }
+        let d_bad = bad(newest).saturating_sub(bad(base));
+        d_bad as f64 / d_total as f64
+    }
+
+    fn evaluate(
+        &self,
+        objective: &'static str,
+        budget: f64,
+        bad: impl Fn(&SloInput) -> u64 + Copy,
+        total: impl Fn(&SloInput) -> u64 + Copy,
+    ) -> ObjectiveHealth {
+        let burn_of = |ratio: f64| if budget > 0.0 { ratio / budget } else { 0.0 };
+        let burn_fast = burn_of(self.window_ratio(self.policy.fast_window, bad, total));
+        let burn_slow = burn_of(self.window_ratio(self.policy.slow_window, bad, total));
+        let both_over = |t: f64| burn_fast >= t && burn_slow >= t;
+        let state = if both_over(self.policy.error_burn) {
+            SloState::Error
+        } else if both_over(self.policy.warn_burn) {
+            SloState::Warn
+        } else {
+            SloState::Ok
+        };
+        ObjectiveHealth {
+            objective,
+            burn_fast,
+            burn_slow,
+            state,
+        }
+    }
+
+    /// Absorb one cumulative input and evaluate every objective. Pure:
+    /// no gauges, no events (see [`Self::tick_and_publish`]).
+    pub fn tick(&mut self, input: SloInput) -> Vec<ObjectiveHealth> {
+        self.history.push_back(input);
+        while self.history.len() > self.policy.slow_window + 1 {
+            self.history.pop_front();
+        }
+        let settled = |i: &SloInput| i.delivered + i.failed + i.shed;
+        vec![
+            self.evaluate(
+                "availability",
+                self.policy.availability_budget,
+                |i| i.failed + i.shed,
+                settled,
+            ),
+            self.evaluate(
+                "latency",
+                self.policy.latency_budget,
+                |i| i.delivered_late,
+                |i| i.delivered,
+            ),
+            self.evaluate(
+                "routing",
+                self.policy.routing_budget,
+                |i| i.class_fallbacks,
+                |i| i.class_requests,
+            ),
+        ]
+    }
+
+    /// [`Self::tick`], then publish: `serve.slo.<objective>.burn_milli` /
+    /// `.state` gauges, the aggregate `serve.slo.burn_rate` gauge (max
+    /// fast burn × 1000), and typed warn/error events on each state
+    /// transition (recovery logs at info).
+    pub fn tick_and_publish(&mut self, input: SloInput) -> Vec<ObjectiveHealth> {
+        let healths = self.tick(input);
+        let mut max_burn_milli = 0i64;
+        for (idx, h) in healths.iter().enumerate() {
+            let milli = (h.burn_fast * 1000.0).round() as i64;
+            max_burn_milli = max_burn_milli.max(milli);
+            super::gauge(&format!("serve.slo.{}.burn_milli", h.objective)).set(milli);
+            super::gauge(&format!("serve.slo.{}.state", h.objective)).set(h.state.code());
+            let prev = self.last_states[idx];
+            if h.state != prev {
+                let fields = [
+                    ("objective", h.objective.to_string()),
+                    ("burn_fast", format!("{:.2}", h.burn_fast)),
+                    ("burn_slow", format!("{:.2}", h.burn_slow)),
+                    ("from", prev.name().to_string()),
+                    ("to", h.state.name().to_string()),
+                ];
+                match h.state {
+                    SloState::Error => super::error("slo", "SLO burn critical", &fields),
+                    SloState::Warn => super::warn("slo", "SLO burn elevated", &fields),
+                    SloState::Ok => super::info("slo", "SLO recovered", &fields),
+                }
+                self.last_states[idx] = h.state;
+            }
+        }
+        super::gauge("serve.slo.burn_rate").set(max_burn_milli);
+        healths
+    }
+}
+
+/// One-line health summary for the `openacm serve` console, e.g.
+/// `[slo] availability 0.0x ok | latency 2.3x warn | routing 0.0x ok`.
+pub fn summary_line(healths: &[ObjectiveHealth]) -> String {
+    let parts: Vec<String> = healths
+        .iter()
+        .map(|h| format!("{} {:.1}x {}", h.objective, h.burn_fast, h.state.name()))
+        .collect();
+    format!("[slo] {}", parts.join(" | "))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A steady stream of ticks: `per_tick` requests settle each tick,
+    /// `bad_frac` of them failing.
+    fn feed(eng: &mut SloEngine, last: &mut SloInput, per_tick: u64, bad_frac: f64) -> SloState {
+        let bad = (per_tick as f64 * bad_frac).round() as u64;
+        last.failed += bad;
+        last.delivered += per_tick - bad;
+        let healths = eng.tick(*last);
+        healths[0].state
+    }
+
+    #[test]
+    fn burn_states_flip_warn_then_error_under_injected_overload() {
+        // Budget 1%, warn at burn 1, error at burn 10, windows 3/9 ticks.
+        let policy = SloPolicy {
+            availability_budget: 0.01,
+            fast_window: 3,
+            slow_window: 9,
+            warn_burn: 1.0,
+            error_burn: 10.0,
+            ..SloPolicy::default()
+        };
+        let mut eng = SloEngine::new(policy);
+        let mut cum = SloInput::default();
+
+        // Healthy traffic: state stays Ok through both windows.
+        for _ in 0..12 {
+            assert_eq!(feed(&mut eng, &mut cum, 1000, 0.0), SloState::Ok);
+        }
+
+        // Injected overload: 20% failures = burn 20 per overloaded tick.
+        // The fast window saturates quickly (reaction), the slow window
+        // lags (confirmation) — so the state must pass through Warn
+        // before reaching Error, and reach Error while overload persists.
+        let mut states = Vec::new();
+        for _ in 0..9 {
+            states.push(feed(&mut eng, &mut cum, 1000, 0.2));
+        }
+        let first_warn = states.iter().position(|&s| s >= SloState::Warn);
+        let first_error = states.iter().position(|&s| s == SloState::Error);
+        assert!(first_warn.is_some(), "overload must raise Warn, got {states:?}");
+        assert!(first_error.is_some(), "overload must raise Error, got {states:?}");
+        assert!(
+            first_warn.unwrap() < first_error.unwrap(),
+            "Warn must precede Error: {states:?}"
+        );
+        assert!(
+            states[first_warn.unwrap()] == SloState::Warn,
+            "first elevated state is Warn, not an instant Error jump: {states:?}"
+        );
+
+        // Recovery: healthy ticks flush both windows back to Ok.
+        let mut recovered = SloState::Error;
+        for _ in 0..12 {
+            recovered = feed(&mut eng, &mut cum, 1000, 0.0);
+        }
+        assert_eq!(recovered, SloState::Ok);
+    }
+
+    #[test]
+    fn latency_and_routing_objectives_use_their_own_denominators() {
+        let mut eng = SloEngine::new(SloPolicy {
+            fast_window: 1,
+            slow_window: 2,
+            ..SloPolicy::default()
+        });
+        eng.tick(SloInput::default());
+        let healths = eng.tick(SloInput {
+            delivered: 100,
+            delivered_late: 50, // 50% late / 1% budget = burn 50
+            class_requests: 10,
+            class_fallbacks: 1, // 10% fallback / 5% budget = burn 2
+            ..SloInput::default()
+        });
+        let lat = healths.iter().find(|h| h.objective == "latency").unwrap();
+        assert_eq!(lat.state, SloState::Error);
+        assert!((lat.burn_fast - 50.0).abs() < 1e-9);
+        let routing = healths.iter().find(|h| h.objective == "routing").unwrap();
+        assert_eq!(routing.state, SloState::Warn);
+        assert!((routing.burn_fast - 2.0).abs() < 1e-9);
+        // No traffic at all ⇒ burn 0, Ok.
+        let avail_only = SloEngine::new(SloPolicy::default()).tick(SloInput::default());
+        assert!(avail_only.iter().all(|h| h.state == SloState::Ok));
+    }
+
+    #[test]
+    fn summary_line_mentions_every_objective() {
+        let mut eng = SloEngine::new(SloPolicy::default());
+        let line = summary_line(&eng.tick(SloInput::default()));
+        for name in ["availability", "latency", "routing"] {
+            assert!(line.contains(name), "{line} missing {name}");
+        }
+        assert!(line.starts_with("[slo] "));
+    }
+}

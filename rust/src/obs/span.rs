@@ -81,6 +81,27 @@ pub fn span(name: &str) -> Span {
     }
 }
 
+/// Open a span at an explicit full `path`, ignoring the caller's span
+/// stack. This is for cross-thread stage attribution where the logical
+/// parent lives on another thread — the pipeline's batcher opens
+/// `span("serve.batch")` on its own thread, and the executor thread uses
+/// `span_path("serve.batch/execute")` so the histogram name still carries
+/// the parentage. Spans opened on this thread while the guard is live
+/// nest under `path` as usual.
+pub fn span_path(path: &str) -> Span {
+    if !trace_enabled() {
+        return Span {
+            start: None,
+            path: String::new(),
+        };
+    }
+    STACK.with(|s| s.borrow_mut().push(path.to_string()));
+    Span {
+        start: Some(Instant::now()),
+        path: path.to_string(),
+    }
+}
+
 impl Drop for Span {
     fn drop(&mut self) {
         let Some(start) = self.start else { return };
@@ -116,12 +137,25 @@ mod tests {
         assert_eq!(snap.histograms["span.obs_test.outer.us"].count, 1);
         assert_eq!(snap.histograms["span.obs_test.outer/inner.us"].count, 1);
 
+        {
+            let _stage = span_path("obs_test.remote/stage");
+            let _child = span("leaf");
+        }
+        let snap = super::super::registry::global().snapshot();
+        assert_eq!(snap.histograms["span.obs_test.remote/stage.us"].count, 1);
+        assert_eq!(
+            snap.histograms["span.obs_test.remote/stage/leaf.us"].count,
+            1
+        );
+
         set_trace_enabled(false);
         {
             let _off = span("obs_test.disabled");
+            let _off_path = span_path("obs_test.disabled/path");
         }
         let snap = super::super::registry::global().snapshot();
         assert!(!snap.histograms.contains_key("span.obs_test.disabled.us"));
+        assert!(!snap.histograms.contains_key("span.obs_test.disabled/path.us"));
         set_trace_enabled(was);
     }
 }

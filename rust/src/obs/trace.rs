@@ -1,0 +1,522 @@
+//! End-to-end request tracing with tail-based sampling.
+//!
+//! Every admitted request gets a **trace context**: a process-unique id
+//! plus monotonic stage timestamps (µs since a process-wide epoch)
+//! stamped at the pipeline's admission → batch-close → execute → respond
+//! boundaries. The context is a few `u64`s carried inside the queued
+//! request — no allocation, no locks on the hot path, and when tracing is
+//! disabled (`OPENACM_TRACE=0`) the id is 0 and every stamp is a no-op
+//! with zero clock reads, which is what keeps the ≤2% instrumentation
+//! guard in `benches/nn_forward.rs` honest.
+//!
+//! **Tail-based sampling** decides *at completion time* what to keep,
+//! so the interesting requests always survive:
+//!
+//! * every shed, failed, deadline-missed request — bounded ring of
+//!   [`FAILURE_CAP`]; overflow is counted (`trace.failures_dropped`) and
+//!   logged, never silent;
+//! * the top-[`SLOWEST_K`] slowest delivered requests (kept via an atomic
+//!   latency floor so the common fast path takes no lock);
+//! * 1-in-[`SAMPLE_EVERY`] healthy requests as a behaviour baseline,
+//!   bounded ring of [`SAMPLED_CAP`].
+//!
+//! Kept timelines export as Chrome trace-event JSON
+//! (`$OPENACM_OBS/trace.json`, load in `chrome://tracing` / Perfetto) via
+//! [`export_chrome`]; `openacm obs trace` renders them in the terminal.
+//! The responder also tags `serve.latency_us` histogram buckets with
+//! exemplar trace ids ([`super::registry::Histogram::record_with_exemplar`])
+//! so a p99 read links to a concrete offending request.
+
+use std::collections::VecDeque;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::span::trace_enabled;
+
+/// Bound on retained failure-class timelines (sheds, deadline misses,
+/// execute failures). Sized above the CI smoke soak (60k requests) so
+/// "every failure has a timeline" holds there; past it, drops are counted.
+pub const FAILURE_CAP: usize = 1 << 17;
+/// How many slowest delivered requests keep their full timeline.
+pub const SLOWEST_K: usize = 64;
+/// Healthy requests sampled 1-in-N by trace id (deterministic).
+pub const SAMPLE_EVERY: u64 = 64;
+/// Bound on retained healthy-sample timelines.
+pub const SAMPLED_CAP: usize = 4096;
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds since the process trace epoch (first call fixes zero).
+pub fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Allocate the next trace id; 0 (the "untraced" id) when tracing is
+/// disabled, which turns every downstream stamp and keep-decision into a
+/// no-op.
+pub fn next_id() -> u64 {
+    if !trace_enabled() {
+        return 0;
+    }
+    NEXT_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// The id the *next* trace will receive — lets tests scope assertions to
+/// traces created after a point in time.
+pub fn id_watermark() -> u64 {
+    NEXT_ID.load(Ordering::Relaxed)
+}
+
+/// How a traced request left the pipeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceOutcome {
+    Delivered,
+    /// Rejected at admission or by a full ingress/stage queue.
+    Shed,
+    DeadlineExpired,
+    ExecuteFailed,
+    WorkerPanicked,
+}
+
+impl TraceOutcome {
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceOutcome::Delivered => "delivered",
+            TraceOutcome::Shed => "shed",
+            TraceOutcome::DeadlineExpired => "deadline_expired",
+            TraceOutcome::ExecuteFailed => "execute_failed",
+            TraceOutcome::WorkerPanicked => "worker_panicked",
+        }
+    }
+
+    pub fn is_failure(self) -> bool {
+        !matches!(self, TraceOutcome::Delivered)
+    }
+}
+
+/// The in-flight trace context carried inside a queued request: the id
+/// plus stage timestamps stamped as the request crosses pipeline
+/// boundaries. `Copy`, all-`u64`, zero-allocation; every method is a
+/// no-op when `id == 0` (tracing disabled).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageStamps {
+    pub id: u64,
+    /// Admission accepted the request (also the queue-enter time).
+    pub t_admit: u64,
+    /// The deadline-bucket batcher closed this request's batch.
+    pub t_batch: u64,
+    /// Executor began / finished the batch containing this request.
+    pub t_exec_start: u64,
+    pub t_exec_end: u64,
+}
+
+impl StageStamps {
+    /// Open a trace context at admission. Free (id 0, no clock read) when
+    /// tracing is disabled.
+    pub fn begin() -> StageStamps {
+        let id = next_id();
+        if id == 0 {
+            return StageStamps::default();
+        }
+        StageStamps {
+            id,
+            t_admit: now_us(),
+            ..StageStamps::default()
+        }
+    }
+
+    #[inline]
+    pub fn stamp_batch(&mut self, t: u64) {
+        if self.id != 0 {
+            self.t_batch = t;
+        }
+    }
+
+    #[inline]
+    pub fn stamp_exec(&mut self, start: u64, end: u64) {
+        if self.id != 0 {
+            self.t_exec_start = start;
+            self.t_exec_end = end;
+        }
+    }
+
+    /// Close the timeline into a [`RequestTrace`] ready for the collector.
+    pub fn finish(
+        self,
+        shard: u32,
+        variant: &str,
+        outcome: TraceOutcome,
+        t_done: u64,
+    ) -> RequestTrace {
+        RequestTrace {
+            id: self.id,
+            shard,
+            variant: variant.to_string(),
+            outcome,
+            t_admit: self.t_admit,
+            t_batch: self.t_batch,
+            t_exec_start: self.t_exec_start,
+            t_exec_end: self.t_exec_end,
+            t_done,
+        }
+    }
+}
+
+/// One completed request timeline (timestamps in µs since the process
+/// trace epoch; 0 = the request never reached that stage).
+#[derive(Clone, Debug)]
+pub struct RequestTrace {
+    pub id: u64,
+    pub shard: u32,
+    pub variant: String,
+    pub outcome: TraceOutcome,
+    pub t_admit: u64,
+    pub t_batch: u64,
+    pub t_exec_start: u64,
+    pub t_exec_end: u64,
+    pub t_done: u64,
+}
+
+impl RequestTrace {
+    /// Admission-to-completion wall time.
+    pub fn latency_us(&self) -> u64 {
+        self.t_done.saturating_sub(self.t_admit)
+    }
+}
+
+/// Point-in-time view of everything the collector kept.
+#[derive(Clone, Debug, Default)]
+pub struct TraceSnapshot {
+    /// Every failure-class timeline, oldest first (bounded; see
+    /// `failures_dropped`).
+    pub failures: Vec<RequestTrace>,
+    /// Slowest delivered requests, slowest first.
+    pub slowest: Vec<RequestTrace>,
+    /// Probabilistic healthy sample, oldest first.
+    pub sampled: Vec<RequestTrace>,
+    /// Failure timelines evicted because the ring was full.
+    pub failures_dropped: u64,
+}
+
+impl TraceSnapshot {
+    /// All kept traces: failures, then slowest, then sampled.
+    pub fn all(&self) -> Vec<&RequestTrace> {
+        self.failures
+            .iter()
+            .chain(self.slowest.iter())
+            .chain(self.sampled.iter())
+            .collect()
+    }
+}
+
+#[derive(Default)]
+struct CollectorState {
+    failures: VecDeque<RequestTrace>,
+    failures_dropped: u64,
+    /// Unsorted; bounded at [`SLOWEST_K`] by min-replacement.
+    slowest: Vec<RequestTrace>,
+    sampled: VecDeque<RequestTrace>,
+}
+
+/// The process-wide tail-sampling trace collector.
+pub struct TraceCollector {
+    state: Mutex<CollectorState>,
+    /// Latency (µs) of the fastest request currently in `slowest` once it
+    /// is full — delivered requests at or below the floor that are not
+    /// sampled skip the lock entirely.
+    floor: AtomicU64,
+}
+
+impl TraceCollector {
+    fn new() -> TraceCollector {
+        TraceCollector {
+            state: Mutex::new(CollectorState::default()),
+            floor: AtomicU64::new(0),
+        }
+    }
+
+    /// Submit a completed timeline; the tail-sampling keep decision
+    /// happens here. No-op for untraced (`id == 0`) requests.
+    pub fn complete(&self, t: RequestTrace) {
+        if t.id == 0 {
+            return;
+        }
+        if t.outcome.is_failure() {
+            let mut g = self.state.lock().unwrap();
+            if g.failures.len() >= FAILURE_CAP {
+                g.failures.pop_front();
+                g.failures_dropped += 1;
+                if g.failures_dropped == 1 {
+                    super::warn(
+                        "trace",
+                        "failure timeline ring full; evicting oldest",
+                        &[("cap", FAILURE_CAP.to_string())],
+                    );
+                }
+                super::counter("trace.failures_dropped").inc();
+            }
+            g.failures.push_back(t);
+            return;
+        }
+        let latency = t.latency_us();
+        let sampled = t.id % SAMPLE_EVERY == 0;
+        if !sampled && latency <= self.floor.load(Ordering::Relaxed) {
+            return;
+        }
+        let mut g = self.state.lock().unwrap();
+        if sampled {
+            if g.sampled.len() >= SAMPLED_CAP {
+                g.sampled.pop_front();
+            }
+            g.sampled.push_back(t.clone());
+        }
+        if g.slowest.len() < SLOWEST_K {
+            g.slowest.push(t);
+        } else {
+            let (mi, min_lat) = g
+                .slowest
+                .iter()
+                .enumerate()
+                .map(|(i, r)| (i, r.latency_us()))
+                .min_by_key(|&(_, l)| l)
+                .expect("slowest is non-empty");
+            if latency > min_lat {
+                g.slowest[mi] = t;
+            }
+        }
+        if g.slowest.len() >= SLOWEST_K {
+            let floor = g
+                .slowest
+                .iter()
+                .map(RequestTrace::latency_us)
+                .min()
+                .unwrap_or(0);
+            self.floor.store(floor, Ordering::Relaxed);
+        }
+    }
+
+    /// Clone out everything currently kept.
+    pub fn snapshot(&self) -> TraceSnapshot {
+        let g = self.state.lock().unwrap();
+        let mut slowest: Vec<RequestTrace> = g.slowest.clone();
+        slowest.sort_by_key(|r| std::cmp::Reverse(r.latency_us()));
+        TraceSnapshot {
+            failures: g.failures.iter().cloned().collect(),
+            slowest,
+            sampled: g.sampled.iter().cloned().collect(),
+            failures_dropped: g.failures_dropped,
+        }
+    }
+
+    /// [`Self::snapshot`], then reset the collector (tests; long soaks
+    /// that want per-phase trace files).
+    pub fn take(&self) -> TraceSnapshot {
+        let snap = {
+            let mut g = self.state.lock().unwrap();
+            let snap = CollectorState {
+                failures: std::mem::take(&mut g.failures),
+                failures_dropped: std::mem::take(&mut g.failures_dropped),
+                slowest: std::mem::take(&mut g.slowest),
+                sampled: std::mem::take(&mut g.sampled),
+            };
+            self.floor.store(0, Ordering::Relaxed);
+            snap
+        };
+        let mut slowest = snap.slowest;
+        slowest.sort_by_key(|r| std::cmp::Reverse(r.latency_us()));
+        TraceSnapshot {
+            failures: snap.failures.into_iter().collect(),
+            slowest,
+            sampled: snap.sampled.into_iter().collect(),
+            failures_dropped: snap.failures_dropped,
+        }
+    }
+}
+
+/// The process-wide collector every pipeline reports through.
+pub fn collector() -> &'static TraceCollector {
+    static GLOBAL: OnceLock<TraceCollector> = OnceLock::new();
+    GLOBAL.get_or_init(TraceCollector::new)
+}
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn push_event(out: &mut Vec<String>, t: &RequestTrace, stage: &str, ts: u64, end: u64) {
+    out.push(format!(
+        "{{\"name\":\"{}\",\"cat\":\"serve\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\
+         \"pid\":1,\"tid\":{},\"args\":{{\"trace\":{},\"variant\":\"{}\",\"outcome\":\"{}\"}}}}",
+        stage,
+        ts,
+        end.saturating_sub(ts),
+        t.shard,
+        t.id,
+        esc(&t.variant),
+        t.outcome.name()
+    ))
+}
+
+/// Render one timeline as its Chrome trace-event stage slices:
+/// `queue` (admit → batch-close), `execute`, `respond`. Stages the
+/// request never reached are omitted; a shed request collapses to a
+/// zero-length `queue` slice whose `args.outcome` says why.
+fn chrome_events(t: &RequestTrace, out: &mut Vec<String>) {
+    let queue_end = if t.t_batch > 0 { t.t_batch } else { t.t_done };
+    if queue_end >= t.t_admit {
+        push_event(out, t, "queue", t.t_admit, queue_end);
+    }
+    if t.t_exec_start > 0 && t.t_exec_end >= t.t_exec_start {
+        push_event(out, t, "execute", t.t_exec_start, t.t_exec_end);
+    }
+    let resp_start = if t.t_exec_end > 0 {
+        t.t_exec_end
+    } else if t.t_batch > 0 {
+        t.t_batch
+    } else {
+        t.t_admit
+    };
+    if t.t_done >= resp_start && (t.t_exec_end > 0 || t.t_batch > 0) {
+        push_event(out, t, "respond", resp_start, t.t_done);
+    }
+}
+
+/// Serialize a trace snapshot as Chrome trace-event JSON.
+pub fn to_chrome_json(snap: &TraceSnapshot) -> String {
+    let mut events: Vec<String> = Vec::new();
+    for t in snap.all() {
+        chrome_events(t, &mut events);
+    }
+    let mut s = String::from("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[\n");
+    s.push_str(&events.join(",\n"));
+    s.push_str("\n]}\n");
+    s
+}
+
+/// Write the collector's kept timelines to `<dir>/trace.json` (Chrome
+/// trace-event format), atomically (temp file + rename), and return the
+/// path. The collector is left intact, so periodic exports accumulate.
+pub fn export_chrome(dir: &Path) -> Result<PathBuf> {
+    fs::create_dir_all(dir)
+        .with_context(|| format!("creating obs dir {}", dir.display()))?;
+    let snap = collector().snapshot();
+    let path = dir.join("trace.json");
+    let tmp = dir.join(".trace.json.tmp");
+    fs::write(&tmp, to_chrome_json(&snap))
+        .with_context(|| format!("writing {}", tmp.display()))?;
+    fs::rename(&tmp, &path)
+        .with_context(|| format!("renaming into {}", path.display()))?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace(id: u64, outcome: TraceOutcome, admit: u64, done: u64) -> RequestTrace {
+        RequestTrace {
+            id,
+            shard: 0,
+            variant: "t".to_string(),
+            outcome,
+            t_admit: admit,
+            t_batch: if outcome == TraceOutcome::Shed { 0 } else { admit + 1 },
+            t_exec_start: if outcome == TraceOutcome::Delivered { admit + 2 } else { 0 },
+            t_exec_end: if outcome == TraceOutcome::Delivered { done - 1 } else { 0 },
+            t_done: done,
+        }
+    }
+
+    #[test]
+    fn tail_sampling_keeps_failures_slowest_and_samples() {
+        let c = TraceCollector::new();
+        // Failures always kept, regardless of latency.
+        c.complete(trace(1, TraceOutcome::Shed, 0, 1));
+        c.complete(trace(3, TraceOutcome::DeadlineExpired, 0, 5));
+        // Untraced id never kept.
+        c.complete(trace(0, TraceOutcome::Shed, 0, 1));
+        // Fill slowest beyond K with increasing latencies; the floor must
+        // evict the fast ones.
+        for i in 0..(SLOWEST_K as u64 + 10) {
+            // Avoid multiples of SAMPLE_EVERY so the sample ring stays
+            // deterministic in this test.
+            let id = i * 2 + 1001;
+            c.complete(trace(id, TraceOutcome::Delivered, 0, 10 + i * 10));
+        }
+        // One sampled healthy fast request.
+        c.complete(trace(SAMPLE_EVERY * 5, TraceOutcome::Delivered, 0, 3));
+        let snap = c.snapshot();
+        assert_eq!(snap.failures.len(), 2);
+        assert_eq!(snap.slowest.len(), SLOWEST_K);
+        // Slowest is sorted descending and holds the top-K latencies.
+        assert!(snap.slowest[0].latency_us() >= snap.slowest.last().unwrap().latency_us());
+        assert_eq!(snap.slowest[0].latency_us(), 10 + (SLOWEST_K as u64 + 9) * 10);
+        assert!(snap.sampled.iter().any(|t| t.id == SAMPLE_EVERY * 5));
+        assert_eq!(snap.failures_dropped, 0);
+
+        // take() drains.
+        let taken = c.take();
+        assert_eq!(taken.failures.len(), 2);
+        assert!(c.snapshot().failures.is_empty());
+    }
+
+    #[test]
+    fn chrome_export_emits_stage_slices_per_trace() {
+        let mut snap = TraceSnapshot::default();
+        snap.failures.push(trace(9, TraceOutcome::Shed, 100, 100));
+        snap.slowest.push(trace(4, TraceOutcome::Delivered, 10, 50));
+        let json = to_chrome_json(&snap);
+        let doc = crate::obs::json::parse(&json).unwrap();
+        let evs = doc
+            .get("traceEvents")
+            .and_then(crate::obs::json::Json::as_array)
+            .unwrap();
+        // Shed: queue only. Delivered: queue + execute + respond.
+        assert_eq!(evs.len(), 4);
+        let names: Vec<&str> = evs
+            .iter()
+            .filter_map(|e| e.get("name").and_then(crate::obs::json::Json::as_str))
+            .collect();
+        assert_eq!(names, ["queue", "queue", "execute", "respond"]);
+        // Every event carries its trace id + outcome for regrouping.
+        for e in evs {
+            let args = e.get("args").unwrap();
+            assert!(args.get("trace").and_then(crate::obs::json::Json::as_u64).is_some());
+            assert!(args.get("outcome").and_then(crate::obs::json::Json::as_str).is_some());
+        }
+    }
+
+    #[test]
+    fn disabled_tracing_yields_untraced_stamps() {
+        let was = trace_enabled();
+        crate::obs::set_trace_enabled(false);
+        let s = StageStamps::begin();
+        crate::obs::set_trace_enabled(was);
+        assert_eq!(s.id, 0);
+        assert_eq!(s.t_admit, 0);
+        let mut s2 = s;
+        s2.stamp_batch(123);
+        s2.stamp_exec(1, 2);
+        assert_eq!((s2.t_batch, s2.t_exec_start, s2.t_exec_end), (0, 0, 0));
+    }
+}

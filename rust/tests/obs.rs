@@ -199,3 +199,150 @@ fn global_registry_handles_alias_by_name() {
     b.add(4);
     assert!(openacm::obs::counter("obs_test.alias_check").value() >= 7);
 }
+
+// ---------------------------------------------------------------------------
+// CLI exit codes + follow mode
+// ---------------------------------------------------------------------------
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "openacm_obs_{tag}_{}_{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// `obs diff` is scriptable like `diff(1)`: identical snapshots exit 0,
+/// any counter/histogram movement exits 1 (while the report still reaches
+/// stdout — the exit path must flush).
+#[test]
+fn obs_diff_exit_code_flags_nonempty_diffs() {
+    use std::process::Command;
+    let dir = temp_dir("diff");
+    let reg = MetricsRegistry::new();
+    reg.counter("c").add(5);
+    std::fs::write(dir.join("a.json"), reg.snapshot().to_json()).unwrap();
+    reg.counter("c").add(3);
+    reg.histogram("h").record(10);
+    std::fs::write(dir.join("b.json"), reg.snapshot().to_json()).unwrap();
+    let run = |a: &str, b: &str| {
+        Command::new(env!("CARGO_BIN_EXE_openacm"))
+            .args(["obs", "diff"])
+            .arg(dir.join(a))
+            .arg(dir.join(b))
+            .env("OPENACM_OBS", &dir)
+            .output()
+            .expect("spawn openacm obs diff")
+    };
+    let same = run("a.json", "a.json");
+    assert!(
+        same.status.success(),
+        "self-diff must exit 0: {:?}",
+        same.status
+    );
+    let moved = run("a.json", "b.json");
+    assert_eq!(
+        moved.status.code(),
+        Some(1),
+        "non-empty diff must exit 1: {}",
+        String::from_utf8_lossy(&moved.stderr)
+    );
+    let report = String::from_utf8_lossy(&moved.stdout);
+    assert!(
+        report.contains("telemetry diff"),
+        "diff report must reach stdout before the non-zero exit: {report}"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// `obs tail --follow --max-polls K` drains the existing tail, follows
+/// briefly, and terminates — the bounded mode scripts and CI rely on.
+#[test]
+fn obs_tail_follow_terminates_at_max_polls() {
+    use std::process::Command;
+    let dir = temp_dir("tail");
+    std::fs::write(
+        dir.join("events.jsonl"),
+        "{\"ts_ms\":1,\"severity\":\"info\",\"subsystem\":\"t\",\
+         \"message\":\"hello follow\",\"fields\":{}}\n",
+    )
+    .unwrap();
+    let out = Command::new(env!("CARGO_BIN_EXE_openacm"))
+        .args(["obs", "tail", "--follow", "--interval-ms", "5", "--max-polls", "3", "--dir"])
+        .arg(&dir)
+        .output()
+        .expect("spawn openacm obs tail");
+    assert!(out.status.success(), "{:?}", out.status);
+    assert!(
+        String::from_utf8_lossy(&out.stdout).contains("hello follow"),
+        "tail must print the existing line before following"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// `follow_jsonl` streams only *complete* appended lines, never replays
+/// the pre-existing tail, and restarts from the head when the file
+/// shrinks underneath it (event-log rotation).
+#[test]
+fn follow_jsonl_streams_appends_and_survives_rotation() {
+    use std::io::Write as _;
+    use std::sync::Mutex;
+    use std::time::{Duration, Instant};
+    let dir = temp_dir("follow");
+    let path = dir.join("events.jsonl");
+    std::fs::write(&path, "old\n").unwrap();
+
+    let got = Arc::new(Mutex::new(Vec::<String>::new()));
+    let sink = Arc::clone(&got);
+    let follow_path = path.clone();
+    // Bounded follower in the background; detached — it ends on its own
+    // after max_polls, and the assertions below are what the test is for.
+    std::thread::spawn(move || {
+        openacm::obs::cli::follow_jsonl(
+            &follow_path,
+            Duration::from_millis(1),
+            Some(30_000),
+            &mut |line| sink.lock().unwrap().push(line.to_string()),
+        )
+        .unwrap();
+    });
+    let wait_for = |want: &str| {
+        let deadline = Instant::now() + Duration::from_secs(20);
+        loop {
+            if got.lock().unwrap().iter().any(|l| l == want) {
+                return;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "timed out waiting for {want:?}; got {:?}",
+                got.lock().unwrap()
+            );
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    };
+
+    // A complete line plus a torn partial append: only the complete line
+    // may stream; the partial must wait for its newline.
+    let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+    f.write_all(b"two\nthr").unwrap();
+    f.flush().unwrap();
+    wait_for("two");
+    assert!(
+        !got.lock().unwrap().iter().any(|l| l.starts_with("thr")),
+        "partial line without its newline must not be delivered"
+    );
+    f.write_all(b"ee\n").unwrap();
+    drop(f);
+    wait_for("three");
+
+    // Rotation: the file is replaced by a shorter fresh one; the follower
+    // must reset its offset to the head and stream the new content.
+    std::fs::write(&path, "four\n").unwrap();
+    wait_for("four");
+    assert!(
+        !got.lock().unwrap().iter().any(|l| l == "old"),
+        "the pre-existing tail must never replay"
+    );
+}

@@ -651,6 +651,235 @@ fn worker_panic_fails_fast_marks_unhealthy_and_spares_other_shards() {
     server.shutdown();
 }
 
+// ---------------------------------------------------------------------------
+// Request tracing: tail-sampled timelines + span path attribution
+// ---------------------------------------------------------------------------
+
+/// 60k-request adversarial-mix smoke soak with tracing on: max-pressure
+/// submission against a tiny queue (sheds), injected backend failures,
+/// and pre-expired deadlines. **Every** shed / failed / deadline-missed
+/// request must keep a complete stage timeline in the tail-sampling
+/// collector and appear in the Chrome trace export — the tracing
+/// tentpole's acceptance property. Assertions are scoped to this test's
+/// traces via the id watermark + distinctive `trc-*` variant names, so
+/// sibling tests in this binary can run concurrently.
+#[test]
+fn traced_soak_keeps_complete_timelines_for_every_failure() {
+    use openacm::obs::trace::{collector, id_watermark};
+    use openacm::obs::TraceOutcome;
+    const MENU: [&str; 2] = ["trc-approx", "trc-exact"];
+    const N: usize = 60_000;
+    openacm::obs::set_trace_enabled(true);
+    // Fix the trace epoch strictly before any stamp this test asserts on,
+    // so every `t_admit` is > 0.
+    let _ = openacm::obs::trace::now_us();
+    std::thread::sleep(Duration::from_millis(2));
+    let watermark = id_watermark();
+
+    let server = InferenceServer::start_sharded(
+        Arc::new(FixtureFactory::new(&MENU, 32).fail_on_byte(0xEE)),
+        ServerConfig {
+            shards: 2,
+            policy: lax_policy(32),
+            // Tiny on purpose: max-pressure submission must shed.
+            queue_limit: 64,
+        },
+    )
+    .unwrap();
+    let imgs = images(64, 0x7A3E);
+    let (tx, rx) = channel();
+    let mut admitted = 0usize;
+    let mut shed = 0usize;
+    for i in 0..N {
+        let variant = MENU[i % MENU.len()];
+        let mut img = imgs[i % imgs.len()].clone();
+        // Adversarial mix: every 101st request trips the injected backend
+        // failure; every 97th arrives with an already-expired deadline.
+        let req = if i % 101 == 0 {
+            img[0] = 0xEE;
+            Request::to_variant(img, variant, tx.clone())
+        } else if i % 97 == 0 {
+            Request::to_variant(img, variant, tx.clone()).with_slo(Duration::ZERO)
+        } else {
+            Request::to_variant(img, variant, tx.clone())
+        };
+        match server.submit(req) {
+            Ok(()) => admitted += 1,
+            Err(SubmitError::Shed { .. }) => shed += 1,
+            Err(e) => panic!("request {i}: unexpected submit error: {e}"),
+        }
+    }
+    drop(tx);
+    let mut delivered = 0usize;
+    let mut deadline_missed = 0usize;
+    let mut exec_failed = 0usize;
+    for i in 0..admitted {
+        match rx
+            .recv_timeout(Duration::from_secs(300))
+            .unwrap_or_else(|_| panic!("delivery {i}/{admitted} lost"))
+        {
+            Delivery::Ok(_) => delivered += 1,
+            Delivery::Failed(FailReason::DeadlineExpired) => deadline_missed += 1,
+            Delivery::Failed(FailReason::ExecuteFailed(_)) => exec_failed += 1,
+            Delivery::Failed(other) => panic!("unexpected failure: {other}"),
+        }
+    }
+    server.shutdown();
+    assert_eq!(delivered + deadline_missed + exec_failed, admitted);
+    assert!(shed > 0, "max pressure against queue_limit 64 must shed");
+    assert!(deadline_missed > 0 && exec_failed > 0);
+
+    // Every failure class is fully accounted in the collector: one kept
+    // timeline per shed/failed/deadline-missed request, none dropped.
+    let snap = collector().snapshot();
+    assert_eq!(snap.failures_dropped, 0);
+    let ours: Vec<_> = snap
+        .failures
+        .iter()
+        .filter(|t| t.id >= watermark && t.variant.starts_with("trc-"))
+        .collect();
+    let count = |o: TraceOutcome| ours.iter().filter(|t| t.outcome == o).count();
+    assert_eq!(count(TraceOutcome::Shed), shed, "one timeline per shed");
+    assert_eq!(
+        count(TraceOutcome::DeadlineExpired),
+        deadline_missed,
+        "one timeline per deadline miss"
+    );
+    assert_eq!(
+        count(TraceOutcome::ExecuteFailed),
+        exec_failed,
+        "one timeline per execute failure"
+    );
+    assert_eq!(ours.len(), shed + deadline_missed + exec_failed);
+
+    // ...and each timeline is complete for its outcome: stamps cover
+    // exactly the stages the request reached, in order.
+    for t in &ours {
+        assert!(t.id > 0 && t.t_admit > 0, "traced request must stamp admission");
+        assert!(t.t_done >= t.t_admit, "completion precedes admission: {t:?}");
+        assert!(t.shard < 2, "shard id out of range: {t:?}");
+        match t.outcome {
+            TraceOutcome::Shed => {
+                assert_eq!((t.t_batch, t.t_exec_start), (0, 0), "shed before batching: {t:?}");
+            }
+            TraceOutcome::DeadlineExpired => {
+                assert_eq!(t.t_exec_start, 0, "expired requests never execute: {t:?}");
+            }
+            TraceOutcome::ExecuteFailed => {
+                assert!(t.t_batch >= t.t_admit && t.t_batch > 0, "{t:?}");
+                assert!(t.t_exec_start > 0 && t.t_exec_end >= t.t_exec_start, "{t:?}");
+                assert!(t.t_done >= t.t_exec_end, "{t:?}");
+            }
+            other => panic!("unexpected failure outcome {other:?}"),
+        }
+    }
+
+    // The Chrome export carries every one of those timelines as stage
+    // slices regrouped by `args.trace`.
+    let dir = std::env::temp_dir().join(format!(
+        "openacm_trace_{}_{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let path = openacm::obs::trace::export_chrome(&dir).unwrap();
+    let doc = openacm::obs::json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let events = doc
+        .get("traceEvents")
+        .and_then(openacm::obs::json::Json::as_array)
+        .expect("chrome export has traceEvents");
+    let mut queued: std::collections::HashSet<u64> = std::collections::HashSet::new();
+    for e in events {
+        let name = e.get("name").and_then(openacm::obs::json::Json::as_str);
+        let id = e
+            .get("args")
+            .and_then(|a| a.get("trace"))
+            .and_then(openacm::obs::json::Json::as_u64);
+        if let (Some("queue"), Some(id)) = (name, id) {
+            queued.insert(id);
+        }
+    }
+    for t in &ours {
+        assert!(
+            queued.contains(&t.id),
+            "failure trace {} missing from the chrome export",
+            t.id
+        );
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Span path attribution through the sharded pipeline: the batcher and
+/// executor live on different threads, yet their spans must land in the
+/// parent/child histograms `span.serve.batch.us` and
+/// `span.serve.batch/execute.us` (explicit full paths), at shard counts
+/// {1, 4} with concurrent submitters. The flat pre-refactor name
+/// `span.execute.us` must no longer be recorded.
+#[test]
+fn span_paths_attribute_batch_and_execute_across_shards() {
+    openacm::obs::set_trace_enabled(true);
+    for shards in [1usize, 4] {
+        let before = openacm::obs::snapshot();
+        let count = |s: &openacm::obs::RegistrySnapshot, name: &str| {
+            s.histograms.get(name).map(|h| h.count).unwrap_or(0)
+        };
+        let server = InferenceServer::start_sharded(
+            Arc::new(FixtureFactory::new(&["exact"], 16)),
+            ServerConfig {
+                shards,
+                policy: lax_policy(16),
+                queue_limit: 4096,
+            },
+        )
+        .unwrap();
+        std::thread::scope(|scope| {
+            for w in 0..4usize {
+                let server = &server;
+                let imgs = images(16, 0x5AA5 ^ w as u64);
+                scope.spawn(move || {
+                    let (tx, rx) = channel();
+                    for i in 0..500usize {
+                        let img = imgs[i % imgs.len()].clone();
+                        loop {
+                            match server.submit(Request::to_variant(img.clone(), "exact", tx.clone()))
+                            {
+                                Ok(()) => break,
+                                Err(SubmitError::Shed { .. }) => std::thread::yield_now(),
+                                Err(e) => panic!("worker {w}: {e}"),
+                            }
+                        }
+                    }
+                    drop(tx);
+                    for i in 0..500usize {
+                        match rx
+                            .recv_timeout(Duration::from_secs(120))
+                            .unwrap_or_else(|_| panic!("worker {w}: delivery {i}/500 lost"))
+                        {
+                            Delivery::Ok(_) => {}
+                            Delivery::Failed(r) => panic!("worker {w}: delivery failed: {r}"),
+                        }
+                    }
+                });
+            }
+        });
+        server.shutdown();
+        let after = openacm::obs::snapshot();
+        assert!(
+            count(&after, "span.serve.batch.us") > count(&before, "span.serve.batch.us"),
+            "shards={shards}: batcher spans must record under span.serve.batch.us"
+        );
+        assert!(
+            count(&after, "span.serve.batch/execute.us")
+                > count(&before, "span.serve.batch/execute.us"),
+            "shards={shards}: executor spans must parent under serve.batch"
+        );
+        assert_eq!(
+            count(&after, "span.execute.us"),
+            0,
+            "the flat execute span name must be gone"
+        );
+    }
+}
+
 #[test]
 fn graceful_shutdown_drains_in_flight_requests() {
     let server = InferenceServer::start_sharded(

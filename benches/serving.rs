@@ -16,7 +16,11 @@
 //! ```
 //!
 //! Writes `BENCH_serving.json`: per-config mean/p50/p99 latency,
-//! throughput counters, and the shard4_over_shard1 throughput ratio.
+//! throughput counters, the shard4_over_shard1 throughput ratio, the
+//! tracing-overhead ratio, and two resilience columns — fault-burst
+//! recovery (retries vs shed-only delivered counts, seeded
+//! [`FaultPlan`]) and step-load elasticity (autoscaled vs fixed pool
+//! under a deadline-pressuring slow backend).
 
 use std::collections::HashSet;
 use std::sync::mpsc::channel;
@@ -26,7 +30,8 @@ use std::time::{Duration, Instant};
 use openacm::bench::harness::{BenchJson, BenchResult};
 use openacm::coordinator::batcher::BatchPolicy;
 use openacm::coordinator::server::{Delivery, InferenceServer, Request, ServerConfig, SubmitError};
-use openacm::runtime::{fixture_logits, FixtureFactory};
+use openacm::coordinator::{AutoscalePolicy, ResilienceConfig};
+use openacm::runtime::{fixture_logits, FaultPlan, FixtureFactory, TransientBursts};
 use openacm::util::proptest::{adversarial_workload, WorkloadSpec, ADVERSARIAL_PATTERNS};
 use openacm::util::rng::Pcg32;
 
@@ -168,6 +173,143 @@ fn drive(shards: usize, n: usize) -> DriveStats {
     }
 }
 
+/// Drive `n` single-request batches through a 1-shard server whose
+/// backend fails 2 of every 8 calls (seeded periodic transient bursts).
+/// With `retries == 0` every faulted call becomes a `Failed` delivery
+/// (the shed-only posture); with retries the executor absorbs the bursts
+/// and delivers everything. Returns `(delivered, failed)`.
+fn drive_fault_burst(n: usize, retries: u32) -> (u64, u64) {
+    let imgs = images(64, 0xFA01);
+    let plan = FaultPlan {
+        seed: 0xFB,
+        transient: Some(TransientBursts {
+            start: 0,
+            len: 2,
+            period: 8,
+        }),
+        ..FaultPlan::default()
+    };
+    let res = ResilienceConfig {
+        retries,
+        retry_backoff: Duration::from_micros(50),
+        ..ResilienceConfig::default()
+    };
+    let server = InferenceServer::start_resilient(
+        Arc::new(FixtureFactory::new(&["exact"], 1).with_fault_plan(plan)),
+        ServerConfig {
+            shards: 1,
+            policy: BatchPolicy {
+                max_batch: 1,
+                max_wait: Duration::from_micros(200),
+                slo: Duration::from_secs(30),
+                ..BatchPolicy::default()
+            },
+            queue_limit: 1024,
+        },
+        res,
+    )
+    .expect("fault-burst server boots");
+    let valid: HashSet<Vec<u32>> = imgs
+        .iter()
+        .map(|img| bits(&fixture_logits("exact", img)))
+        .collect();
+    let (tx, rx) = channel();
+    let drainer = std::thread::spawn(move || {
+        let mut ok = 0u64;
+        let mut failed = 0u64;
+        while let Ok(d) = rx.recv() {
+            match d {
+                Delivery::Ok(resp) => {
+                    assert!(
+                        valid.contains(&bits(&resp.logits)),
+                        "retried delivery does not bit-match its reference"
+                    );
+                    ok += 1;
+                }
+                Delivery::Failed(_) => failed += 1,
+            }
+        }
+        (ok, failed)
+    });
+    for i in 0..n {
+        loop {
+            let req = Request::to_variant(imgs[i % imgs.len()].clone(), "exact", tx.clone());
+            match server.submit(req) {
+                Ok(()) => break,
+                Err(SubmitError::Shed { .. }) => std::thread::yield_now(),
+                Err(e) => panic!("unexpected submit error: {e}"),
+            }
+        }
+    }
+    drop(tx);
+    let (ok, failed) = drainer.join().expect("drainer");
+    assert_eq!(ok + failed, n as u64, "exactly one delivery per request");
+    assert!(server.healthy());
+    server.shutdown();
+    (ok, failed)
+}
+
+/// Step-load elasticity: max-pressure traffic against a 300 µs/call
+/// backend under a 25 ms SLO. A fixed single-worker pool falls behind —
+/// queued requests blow their deadline and fail — while an autoscaled
+/// pool grows to `max_workers` and keeps delivering. Returns
+/// `(delivered, failed)`.
+fn drive_step_load(n: usize, autoscale: Option<AutoscalePolicy>) -> (u64, u64) {
+    let imgs = images(64, 0xFA02);
+    let plan = FaultPlan {
+        seed: 0x51,
+        exec_delay_us: 300,
+        ..FaultPlan::default()
+    };
+    let res = ResilienceConfig {
+        autoscale,
+        ..ResilienceConfig::default()
+    };
+    let server = InferenceServer::start_resilient(
+        Arc::new(FixtureFactory::new(&["exact"], 4).with_fault_plan(plan)),
+        ServerConfig {
+            shards: 1,
+            policy: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_micros(200),
+                slo: Duration::from_millis(25),
+                ..BatchPolicy::default()
+            },
+            queue_limit: 512,
+        },
+        res,
+    )
+    .expect("step-load server boots");
+    let (tx, rx) = channel();
+    let drainer = std::thread::spawn(move || {
+        let mut ok = 0u64;
+        let mut failed = 0u64;
+        while let Ok(d) = rx.recv() {
+            match d {
+                Delivery::Ok(_) => ok += 1,
+                Delivery::Failed(_) => failed += 1,
+            }
+        }
+        (ok, failed)
+    });
+    for i in 0..n {
+        loop {
+            let req = Request::to_variant(imgs[i % imgs.len()].clone(), "exact", tx.clone());
+            match server.submit(req) {
+                Ok(()) => break,
+                Err(SubmitError::Shed { .. }) => std::thread::yield_now(),
+                Err(e) => panic!("unexpected submit error: {e}"),
+            }
+        }
+    }
+    drop(tx);
+    let (ok, failed) = drainer.join().expect("drainer");
+    assert_eq!(ok + failed, n as u64, "exactly one delivery per request");
+    assert!(server.healthy());
+    server.shutdown();
+    (ok, failed)
+}
+
 fn main() {
     let smoke_env = std::env::var("OPENACM_SMOKE")
         .map(|v| !v.is_empty() && v != "0" && !v.eq_ignore_ascii_case("false"))
@@ -220,6 +362,68 @@ fn main() {
         untraced.rps, rps_by_shards[0]
     );
     json.ratio("serve_trace_overhead_shard1", overhead);
+
+    // Fault burst: the same recoverable fault schedule, shed-only
+    // (retries 0 — every faulted call is a failed delivery) vs retrying.
+    // The ISSUE acceptance bar: the fault-tolerant posture delivers
+    // strictly more.
+    let n_fault = if smoke { 2_000 } else { 12_000 };
+    let (shed_ok, shed_failed) = drive_fault_burst(n_fault, 0);
+    let (res_ok, res_failed) = drive_fault_burst(n_fault, 4);
+    assert!(
+        shed_failed > 0,
+        "the fault plan must actually fail shed-only deliveries"
+    );
+    assert!(
+        res_ok > shed_ok,
+        "retries must deliver strictly more than shed-only \
+         ({res_ok} vs {shed_ok})"
+    );
+    let recovery = res_ok as f64 / shed_ok.max(1) as f64;
+    println!(
+        "fault burst ({n_fault} reqs): shed-only delivered {shed_ok} (failed {shed_failed}), \
+         retries delivered {res_ok} (failed {res_failed}) — {recovery:.2}x recovery"
+    );
+    json.counter("fault_burst.shed_only.delivered", shed_ok as f64);
+    json.counter("fault_burst.shed_only.failed", shed_failed as f64);
+    json.counter("fault_burst.resilient.delivered", res_ok as f64);
+    json.counter("fault_burst.resilient.failed", res_failed as f64);
+    json.ratio("fault_recovery_delivered_over_shed_only", recovery);
+
+    // Step load: a 300 µs/call backend under a 25 ms SLO. Fixed
+    // single-worker pools drown (deadline expiries); the autoscaled pool
+    // grows to 3 workers and keeps delivering.
+    let n_step = if smoke { 4_000 } else { 20_000 };
+    let scale_ups_before = openacm::obs::counter("serve.autoscale.scale_ups").value();
+    let (fixed_ok, fixed_failed) = drive_step_load(n_step, None);
+    let (auto_ok, auto_failed) = drive_step_load(
+        n_step,
+        Some(AutoscalePolicy {
+            max_workers: 3,
+            scale_up_wait: Duration::from_micros(500),
+            scale_down_wait: Duration::from_micros(100),
+            tick: Duration::from_millis(2),
+        }),
+    );
+    assert!(
+        openacm::obs::counter("serve.autoscale.scale_ups").value() > scale_ups_before,
+        "step load must trigger at least one scale-up"
+    );
+    assert!(
+        auto_ok > fixed_ok,
+        "the autoscaled pool must deliver strictly more than the fixed \
+         pool ({auto_ok} vs {fixed_ok})"
+    );
+    let elastic = auto_ok as f64 / fixed_ok.max(1) as f64;
+    println!(
+        "step load ({n_step} reqs): fixed delivered {fixed_ok} (failed {fixed_failed}), \
+         autoscaled delivered {auto_ok} (failed {auto_failed}) — {elastic:.2}x elastic win"
+    );
+    json.counter("step_load.fixed.delivered", fixed_ok as f64);
+    json.counter("step_load.fixed.failed", fixed_failed as f64);
+    json.counter("step_load.autoscaled.delivered", auto_ok as f64);
+    json.counter("step_load.autoscaled.failed", auto_failed as f64);
+    json.ratio("elastic_step_delivered_over_fixed", elastic);
 
     match json.write() {
         Ok(path) => println!("wrote {}", path.display()),

@@ -25,22 +25,69 @@
 //! A worker panic during execute is never a silent hang: affected
 //! requests fail fast, the event lands in the obs error log, and the
 //! command exits non-zero.
+//!
+//! Resilience knobs (all off by default; see DESIGN.md §"Fault tolerance
+//! & elasticity"): `--retries N` retries transient execute failures with
+//! backoff, `--hedge MS` hedges requests whose SLO leaves ≥ MS of slack
+//! onto a second shard, `--breaker` arms per-variant circuit breakers
+//! (and the queue-pressure degradation ladder), `--respawn N` lets a
+//! panicked executor respawn up to N times, `--autoscale N` lets each
+//! variant's executor pool grow to N workers under queue-wait pressure.
+//! `--chaos SEED` swaps the backend for the fixture menu driven by the
+//! seeded [`crate::runtime::FaultPlan`] chaos schedule — the serving
+//! smoke test for all of the above.
 
 use anyhow::{bail, Result};
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Duration;
 
 use super::batcher::BatchPolicy;
+use super::resilience::{AutoscalePolicy, BreakerPolicy, ResilienceConfig};
 use super::router::AccuracyClass;
 use super::server::{InferenceServer, Route, ServerConfig};
 use super::warmstart::{plan_profile, warm_start_profiles};
 use crate::bench::harness::sci;
 use crate::compile::plan::CompiledPlan;
-use crate::runtime::backend::select_backend_with_plan;
-use crate::runtime::{ArtifactStore, BackendChoice, BackendFactory};
+use crate::nn::eval::argmax;
+use crate::nn::model::synthetic_images;
+use crate::runtime::backend::{select_backend_with_plan, IMAGE_BYTES};
+use crate::runtime::{
+    fixture_logits, ArtifactStore, BackendChoice, BackendFactory, FaultPlan, FixtureFactory,
+    ServingWorkload,
+};
 use crate::store::DesignPointStore;
 use crate::util::cli::Args;
 use crate::util::threadpool::ThreadPool;
+
+/// Reject degenerate serving shapes with a clean, flag-named error
+/// before any thread or backend spins up. `autoscale` is `None` when
+/// the flag is absent (autoscaling off is a valid shape; a zero worker
+/// ceiling is not).
+pub(crate) fn validate_serve_shape(
+    shards: usize,
+    slo_ms: u64,
+    max_batch: usize,
+    threads: usize,
+    autoscale: Option<usize>,
+) -> Result<()> {
+    if shards == 0 {
+        bail!("--shards 0: at least one coordinator shard is required");
+    }
+    if slo_ms == 0 {
+        bail!("--slo-ms 0: the end-to-end latency SLO must be a positive number of milliseconds");
+    }
+    if max_batch == 0 {
+        bail!("--batch 0: a batch must hold at least one request");
+    }
+    if threads == 0 {
+        bail!("--threads 0: the execution pool needs at least one thread");
+    }
+    if autoscale == Some(0) {
+        bail!("--autoscale 0: the worker ceiling must be >= 1 (omit the flag to disable autoscaling)");
+    }
+    Ok(())
+}
 
 pub fn cmd_serve(args: &Args) -> Result<()> {
     let dir = args
@@ -52,6 +99,27 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     let max_batch = args.usize_or("batch", 32)?;
     let shards = args.usize_or("shards", 1)?;
     let slo_ms = args.u64_or("slo-ms", 50)?;
+    // Resilience knobs, all off by default (the default ResilienceConfig
+    // reproduces the legacy pipeline exactly).
+    let retries = args.usize_or("retries", 0)? as u32;
+    let hedge_ms = args.u64_or("hedge", 0)?;
+    let breaker = args.flag("breaker");
+    let respawn = args.usize_or("respawn", 0)? as u32;
+    let autoscale = match args.get("autoscale") {
+        Some(s) => Some(s.parse::<usize>().map_err(|_| {
+            anyhow::anyhow!("--autoscale wants a worker-ceiling integer, got {s:?}")
+        })?),
+        None => None,
+    };
+    let chaos = match args.get("chaos") {
+        Some(s) => Some(
+            s.parse::<u64>()
+                .map_err(|_| anyhow::anyhow!("--chaos wants a u64 seed, got {s:?}"))?,
+        ),
+        None => None,
+    };
+    let threads = args.usize_or("threads", ThreadPool::default_parallelism())?;
+    validate_serve_shape(shards, slo_ms, max_batch, threads, autoscale)?;
     // Telemetry sink: structured events stream to <obs-dir>/events.jsonl;
     // `--metrics-every N` additionally prints + flushes a registry
     // snapshot every N driven requests (and once at the end either way).
@@ -81,7 +149,6 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         None => Vec::new(),
     };
     let choice = BackendChoice::parse(args.str_or("backend", "auto"))?;
-    let threads = ThreadPool::default_parallelism();
     // A compiled heterogeneous plan (`openacm compile`) serves as its own
     // variant named "plan", executed natively with per-layer LUT dispatch.
     let plan = match args.get("plan") {
@@ -98,31 +165,95 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         }
         None => None,
     };
-    let (factory, workload) = select_backend_with_plan(
-        choice,
-        &dir,
-        max_batch,
-        threads,
-        args.u64_or("seed", 42)?,
-        plan.as_ref().map(|p| ("plan", p)),
-    )?;
+    let (factory, workload): (Arc<dyn BackendFactory>, ServingWorkload) = match chaos {
+        Some(seed) => {
+            // Chaos mode: the deterministic fixture menu driven by a
+            // seeded fault schedule — transient error bursts, latency
+            // spikes, a panic storm, one slow shard. The same plan the
+            // chaos property suite uses (rust/tests/chaos.rs), here as a
+            // serving smoke test for the resilience layer.
+            if plan.is_some() {
+                bail!("--chaos serves the synthetic fixture menu and cannot combine with --plan");
+            }
+            let menu = ["exact", "appro42", "logour", "lm"];
+            let fault = FaultPlan::chaos_default(seed);
+            println!(
+                "chaos mode: fixture menu {menu:?} under seeded fault plan (seed {seed}): \
+                 transient bursts, latency spikes, panic storm, one slow shard"
+            );
+            let fixture =
+                FixtureFactory::new(&menu, max_batch).with_fault_plan(fault);
+            let n_images = 64usize;
+            let images = synthetic_images(n_images, seed ^ 0xC4A0_5EED);
+            let labels = images
+                .chunks(IMAGE_BYTES)
+                .map(|img| argmax(&fixture_logits("exact", img)))
+                .collect();
+            (
+                Arc::new(fixture) as Arc<dyn BackendFactory>,
+                ServingWorkload {
+                    images,
+                    n_images,
+                    labels,
+                },
+            )
+        }
+        None => select_backend_with_plan(
+            choice,
+            &dir,
+            max_batch,
+            threads,
+            args.u64_or("seed", 42)?,
+            plan.as_ref().map(|p| ("plan", p)),
+        )?,
+    };
 
     println!(
         "starting coordinator: backend {}, {} shards, {} variants, batch {} (capacity {}), SLO {} ms",
         factory.backend_name(),
-        shards.max(1),
+        shards,
         factory.variants().len(),
         policy.max_batch,
         factory.max_batch(),
         slo_ms
     );
-    let mut server = InferenceServer::start_sharded(
+    let res_cfg = ResilienceConfig {
+        retries,
+        hedge_slack: (hedge_ms > 0).then(|| Duration::from_millis(hedge_ms)),
+        breaker: breaker.then(BreakerPolicy::default),
+        respawn_budget: respawn,
+        autoscale: autoscale.map(|n| AutoscalePolicy {
+            max_workers: n,
+            ..AutoscalePolicy::default()
+        }),
+        // The ladder's queue-pressure trigger rides with the breaker
+        // flag: re-route class traffic once queue wait eats half the SLO.
+        degrade_queue_wait: breaker.then(|| Duration::from_millis(slo_ms) / 2),
+        ..ResilienceConfig::default()
+    };
+    if retries > 0 || hedge_ms > 0 || breaker || respawn > 0 || autoscale.is_some() {
+        println!(
+            "resilience: retries {retries}, hedge {}, breaker {}, respawn budget {respawn}, \
+             autoscale ceiling {}",
+            if hedge_ms > 0 {
+                format!("≥{hedge_ms} ms slack")
+            } else {
+                "off".into()
+            },
+            if breaker { "on (+degrade ladder)" } else { "off" },
+            autoscale
+                .map(|n| n.to_string())
+                .unwrap_or_else(|| "off".into()),
+        );
+    }
+    let mut server = InferenceServer::start_resilient(
         factory,
         ServerConfig {
             shards,
             policy,
             queue_limit: 4096,
         },
+        res_cfg,
     )?;
 
     // Warm-start the serving tables from the design-point store: every
@@ -269,6 +400,15 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         snap.throughput_rps,
         snap.mean_batch
     );
+    if snap.degraded > 0 || snap.hedge_discarded > 0 {
+        println!(
+            "resilience: {} delivered degraded (ladder re-route), {} hedged duplicates discarded, \
+             {} executor respawns",
+            snap.degraded,
+            snap.hedge_discarded,
+            crate::obs::counter("serve.executor.respawns").value()
+        );
+    }
     let health = server.failure();
     server.shutdown();
     // Final SLO tick after the pipeline drained, so the closing summary
@@ -300,4 +440,41 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         bail!("serving degraded: {msg}");
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::validate_serve_shape;
+
+    #[test]
+    fn zero_shards_is_rejected_with_a_flag_named_error() {
+        let e = validate_serve_shape(0, 50, 32, 4, None).unwrap_err();
+        assert!(e.to_string().contains("--shards 0"), "{e:#}");
+    }
+
+    #[test]
+    fn zero_slo_is_rejected_with_a_flag_named_error() {
+        let e = validate_serve_shape(1, 0, 32, 4, None).unwrap_err();
+        assert!(e.to_string().contains("--slo-ms 0"), "{e:#}");
+    }
+
+    #[test]
+    fn zero_batch_is_rejected_with_a_flag_named_error() {
+        let e = validate_serve_shape(1, 50, 0, 4, None).unwrap_err();
+        assert!(e.to_string().contains("--batch 0"), "{e:#}");
+    }
+
+    #[test]
+    fn zero_threads_is_rejected_with_a_flag_named_error() {
+        let e = validate_serve_shape(1, 50, 32, 0, None).unwrap_err();
+        assert!(e.to_string().contains("--threads 0"), "{e:#}");
+    }
+
+    #[test]
+    fn zero_autoscale_ceiling_is_rejected_but_absent_is_fine() {
+        let e = validate_serve_shape(1, 50, 32, 4, Some(0)).unwrap_err();
+        assert!(e.to_string().contains("--autoscale 0"), "{e:#}");
+        assert!(validate_serve_shape(1, 50, 32, 4, None).is_ok());
+        assert!(validate_serve_shape(1, 50, 32, 4, Some(3)).is_ok());
+    }
 }

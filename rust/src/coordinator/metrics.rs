@@ -35,6 +35,12 @@ pub struct ServerMetrics {
     batched_requests: AtomicU64,
     completed: AtomicU64,
     failed: AtomicU64,
+    /// Delivered requests that were re-routed down the degradation
+    /// ladder (subset of `completed`).
+    degraded: AtomicU64,
+    /// Hedged duplicates discarded because the sibling copy delivered
+    /// first (never client-visible).
+    hedge_discarded: AtomicU64,
     /// Throughput anchor: set by the first `record_batch`, not at
     /// construction.
     first_record: OnceLock<Instant>,
@@ -44,6 +50,8 @@ pub struct ServerMetrics {
     g_batches: Counter,
     g_completed: Counter,
     g_failed: Counter,
+    g_degraded: Counter,
+    g_hedge_discarded: Counter,
 }
 
 /// Snapshot for reporting.
@@ -53,6 +61,11 @@ pub struct MetricsSnapshot {
     /// Admitted requests that ended in a [`crate::coordinator::Delivery::Failed`]
     /// (deadline expired / execute error / worker panic).
     pub failed: u64,
+    /// Delivered requests served by a degraded (ladder re-routed)
+    /// variant — a subset of `completed`.
+    pub degraded: u64,
+    /// Hedged duplicate executions discarded after the sibling copy won.
+    pub hedge_discarded: u64,
     pub p50_ms: f64,
     pub p90_ms: f64,
     pub p99_ms: f64,
@@ -75,13 +88,29 @@ impl ServerMetrics {
             batched_requests: AtomicU64::new(0),
             completed: AtomicU64::new(0),
             failed: AtomicU64::new(0),
+            degraded: AtomicU64::new(0),
+            hedge_discarded: AtomicU64::new(0),
             first_record: OnceLock::new(),
             g_latency_us: crate::obs::histogram("serve.latency_us"),
             g_batch_size: crate::obs::histogram("serve.batch_size"),
             g_batches: crate::obs::counter("serve.batches"),
             g_completed: crate::obs::counter("serve.requests_completed"),
             g_failed: crate::obs::counter("serve.requests_failed"),
+            g_degraded: crate::obs::counter("serve.degrade.delivered"),
+            g_hedge_discarded: crate::obs::counter("serve.hedge.discarded"),
         }
+    }
+
+    /// Count delivered requests that rode the degradation ladder.
+    pub fn record_degraded(&self, n: usize) {
+        self.degraded.fetch_add(n as u64, Ordering::Relaxed);
+        self.g_degraded.add(n as u64);
+    }
+
+    /// Count hedged duplicates discarded after their sibling delivered.
+    pub fn record_hedge_discarded(&self, n: usize) {
+        self.hedge_discarded.fetch_add(n as u64, Ordering::Relaxed);
+        self.g_hedge_discarded.add(n as u64);
     }
 
     /// Count admitted requests that terminated in a failure delivery.
@@ -124,9 +153,13 @@ impl ServerMetrics {
     pub fn snapshot(&self) -> MetricsSnapshot {
         let h = self.latency_us.snapshot();
         let failed = self.failed.load(Ordering::Relaxed);
+        let degraded = self.degraded.load(Ordering::Relaxed);
+        let hedge_discarded = self.hedge_discarded.load(Ordering::Relaxed);
         if h.count == 0 {
             return MetricsSnapshot {
                 failed,
+                degraded,
+                hedge_discarded,
                 ..MetricsSnapshot::default()
             };
         }
@@ -141,6 +174,8 @@ impl ServerMetrics {
         MetricsSnapshot {
             completed,
             failed,
+            degraded,
+            hedge_discarded,
             p50_ms: h.percentile(50.0) as f64 / 1e3,
             p90_ms: h.percentile(90.0) as f64 / 1e3,
             p99_ms: h.percentile(99.0) as f64 / 1e3,
@@ -203,6 +238,22 @@ mod tests {
             "exemplar missing: {:?}",
             h.exemplars
         );
+    }
+
+    #[test]
+    fn degraded_and_hedge_discards_surface_in_snapshots() {
+        let m = ServerMetrics::new();
+        m.record_degraded(2);
+        m.record_hedge_discarded(1);
+        // Visible even before any completion lands.
+        let s = m.snapshot();
+        assert_eq!(s.degraded, 2);
+        assert_eq!(s.hedge_discarded, 1);
+        m.record_batch(2, &[100.0, 100.0]);
+        let s = m.snapshot();
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.degraded, 2);
+        assert_eq!(s.hedge_discarded, 1);
     }
 
     #[test]

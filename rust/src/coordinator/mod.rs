@@ -27,6 +27,16 @@
 //!   LUT is a runtime operand, so switching precision never recompiles);
 //!   executor panics are caught, poisoning only that worker and failing
 //!   its batches while [`pipeline::Health`] turns the run's exit non-zero;
+//! * resilience ([`resilience`], opt-in via
+//!   [`server::InferenceServer::start_resilient`]): per-variant circuit
+//!   breakers eject a misbehaving variant from routing and probe it
+//!   back; transient executor failures retry with backoff; deadline
+//!   slack can hedge a request to a second shard (first success wins,
+//!   duplicates discarded); class-routed traffic degrades to the
+//!   next-cheapest satisfying variant before it ever sheds; panicked
+//!   executors respawn under a bounded restart budget; and executor
+//!   pools autoscale on queue-wait pressure — all proven under seeded
+//!   [`crate::runtime::FaultPlan`] chaos schedules (rust/tests/chaos.rs);
 //! * metrics: per-request latency (enqueue→response) percentiles,
 //!   aggregate throughput, and exact accounting — every submitted request
 //!   is delivered, shed, or failed, and the three sum to submissions
@@ -37,6 +47,7 @@ pub mod batcher;
 pub mod cli;
 pub mod metrics;
 pub mod pipeline;
+pub mod resilience;
 pub mod router;
 pub mod server;
 pub mod warmstart;
@@ -44,6 +55,7 @@ pub mod warmstart;
 pub use admission::{Admission, AdmissionController};
 pub use metrics::ServerMetrics;
 pub use pipeline::Health;
+pub use resilience::{AutoscalePolicy, BreakerPolicy, BreakerState, ResilienceConfig};
 pub use router::{AccuracyClass, HashRing, RouteDecision, RouteEntry, RoutingTable};
 pub use server::{
     Delivery, FailReason, InferenceServer, Request, Response, Route, ServerConfig, SubmitError,

@@ -6,8 +6,8 @@
 //!                          │  batcher thread: deadline-bucket next_batch
 //!                          ▼
 //!                       execute queue (cap = 2 batches)
-//!                          │  executor thread: owns the Backend,
-//!                          │  catch_unwind around infer_batch
+//!                          │  executor pool: 1..=N workers, each owns a
+//!                          │  Backend, catch_unwind around infer_batch
 //!                          ▼
 //!                       finished queue (cap = 8, shared per shard)
 //!                          │  responder thread: metrics + delivery
@@ -26,39 +26,160 @@
 //! Failure is a first-class outcome: a deadline that expires in queue, a
 //! backend error, or a worker panic each produce a [`Delivery::Failed`]
 //! for every affected request (exactly one delivery per admitted request,
-//! which is what makes `submitted == delivered + shed + failed` hold). A
-//! panic additionally poisons the executor — subsequent batches fail fast
-//! instead of re-entering a possibly corrupt backend — and reports to
-//! [`Health`], which `openacm serve` maps to a non-zero exit.
+//! which is what makes `submitted == delivered + shed + failed` hold).
+//!
+//! The resilience layer ([`super::resilience`]) hooks in at three points,
+//! all disabled under [`super::resilience::ResilienceConfig::default`]:
+//!
+//! * **execute**: transient failures retry with backoff on the same
+//!   worker; a panic can respawn the backend under a bounded
+//!   [`super::resilience::RestartBudget`] instead of poisoning the
+//!   worker. With the budget exhausted (or at the default budget of 0)
+//!   the legacy behavior holds: the worker poisons itself, fails
+//!   subsequent batches fast, and reports to [`Health`] so `openacm
+//!   serve` exits non-zero.
+//! * **executor pool**: when autoscaling is on, a per-shard×variant
+//!   controller watches the queue-wait pressure EMA and grows/shrinks
+//!   the worker count within `1..=max_workers`; workers share the
+//!   execute queue behind a mutex.
+//! * **respond**: every request carries a [`ResponseSlot`]; hedged
+//!   requests share claim state between two pipeline copies so exactly
+//!   one delivery wins (first success) and the duplicate is discarded
+//!   and counted — bit-identical results make the winner
+//!   indistinguishable from the loser.
 
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use super::admission::Ticket;
 use super::batcher::{next_batch, BatchPolicy};
 use super::metrics::ServerMetrics;
+use super::resilience::{autoscale_decision, AutoscalePolicy, ResilienceRuntime, RestartBudget};
 use super::server::{Delivery, FailReason, Response};
 use crate::nn::eval::argmax;
 use crate::obs::{StageStamps, TraceOutcome};
 use crate::runtime::{Backend, BackendFactory};
 
-/// A request admitted into a shard: payload + delivery channel + the
+/// How one copy of a request should settle a failed execution.
+pub(crate) enum FailDisposition {
+    /// Only copy (or last copy, nothing claimed): deliver the failure.
+    Deliver,
+    /// A sibling copy is still in flight and will settle the request.
+    Pending,
+    /// A sibling already delivered success: drop this failure silently.
+    Discard,
+}
+
+/// Shared claim state between the two pipeline copies of a hedged
+/// request. `claimed` makes success delivery exactly-once; `outstanding`
+/// lets the last failing copy know it must deliver the failure.
+pub(crate) struct HedgeState {
+    claimed: AtomicBool,
+    outstanding: AtomicUsize,
+}
+
+/// A request's delivery endpoint. Direct requests have one copy; hedged
+/// requests have two copies sharing a [`HedgeState`]. All claim logic
+/// lives here so the responder stays a straight-line partition.
+pub(crate) struct ResponseSlot {
+    tx: Sender<Delivery>,
+    hedge: Option<Arc<HedgeState>>,
+}
+
+impl ResponseSlot {
+    pub fn direct(tx: Sender<Delivery>) -> ResponseSlot {
+        ResponseSlot { tx, hedge: None }
+    }
+
+    /// Two slots sharing claim state: the primary (traced, ticketed)
+    /// and the hedge copy.
+    pub fn hedged_pair(tx: Sender<Delivery>) -> (ResponseSlot, ResponseSlot) {
+        let state = Arc::new(HedgeState {
+            claimed: AtomicBool::new(false),
+            outstanding: AtomicUsize::new(2),
+        });
+        (
+            ResponseSlot {
+                tx: tx.clone(),
+                hedge: Some(Arc::clone(&state)),
+            },
+            ResponseSlot {
+                tx,
+                hedge: Some(state),
+            },
+        )
+    }
+
+    /// Claim the success delivery. True exactly once across all copies
+    /// of a request; a false return means a sibling already delivered
+    /// and this copy's result must be discarded.
+    pub fn claim_ok(&self) -> bool {
+        match &self.hedge {
+            None => true,
+            Some(h) => {
+                let duplicate = h.claimed.swap(true, Ordering::SeqCst);
+                h.outstanding.fetch_sub(1, Ordering::SeqCst);
+                !duplicate
+            }
+        }
+    }
+
+    /// Settle a failed execution for this copy. The decrement-then-read
+    /// order pairs with `claim_ok`'s swap-then-decrement: if this copy
+    /// observes `outstanding == 1` the sibling has fully settled, so
+    /// reading `claimed` afterwards cannot race.
+    pub fn fail_disposition(&self) -> FailDisposition {
+        match &self.hedge {
+            None => FailDisposition::Deliver,
+            Some(h) => {
+                let prev = h.outstanding.fetch_sub(1, Ordering::SeqCst);
+                if prev > 1 {
+                    FailDisposition::Pending
+                } else if h.claimed.load(Ordering::SeqCst) {
+                    FailDisposition::Discard
+                } else {
+                    FailDisposition::Deliver
+                }
+            }
+        }
+    }
+
+    /// Forget a copy that never entered the pipeline (the hedge enqueue
+    /// bounced off a full or closed ingress).
+    pub fn cancel(&self) {
+        if let Some(h) = &self.hedge {
+            h.outstanding.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Receiver may have gone away; ignore.
+    pub fn send(&self, delivery: Delivery) {
+        let _ = self.tx.send(delivery);
+    }
+}
+
+/// A request admitted into a shard: payload + delivery slot + the
 /// deadline the batcher buckets on. The admission [`Ticket`] rides along
-/// and releases its slot when the request leaves the pipeline (drop); the
-/// [`StageStamps`] trace context is stamped at each stage boundary and
-/// closed into the tail-sampling collector at delivery.
+/// on the primary copy and releases its slot when the request leaves the
+/// pipeline (drop); a hedge copy carries no ticket (it borrowed no
+/// admission slot) and untraced stamps (id 0), so the primary owns the
+/// request's single trace completion. `degraded` marks a class-routed
+/// request that the degradation ladder re-routed off its first-choice
+/// variant; it is surfaced on the delivered [`Response`].
 pub(crate) struct QueuedRequest {
     pub image: Vec<u8>,
-    pub respond: Sender<Delivery>,
+    pub respond: ResponseSlot,
     pub enqueued: Instant,
     pub deadline: Instant,
     pub stamps: StageStamps,
-    pub _ticket: Ticket,
+    pub degraded: bool,
+    pub _ticket: Option<Ticket>,
 }
 
 /// A batch leaving the execute stage, bound for the responder.
@@ -117,6 +238,7 @@ pub(crate) struct ShardCtx {
     pub queue_limit: usize,
     pub metrics: Arc<ServerMetrics>,
     pub health: Arc<Health>,
+    pub res: Arc<ResilienceRuntime>,
     /// Backend-construction reports (one per variant) so the server can
     /// boot all-or-nothing.
     pub ready: Sender<std::result::Result<(), String>>,
@@ -127,12 +249,15 @@ pub(crate) struct ShardCtx {
 pub(crate) struct ShardPipeline {
     pub ingress: BTreeMap<String, SyncSender<QueuedRequest>>,
     threads: Vec<JoinHandle<()>>,
+    /// Tells the autoscale controllers to stop before the joins.
+    stop: Arc<AtomicBool>,
 }
 
 impl ShardPipeline {
     /// Graceful shutdown: close the ingress, let the close cascade drain
     /// every stage, then join.
     pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
         self.ingress.clear();
         for t in self.threads.drain(..) {
             let _ = t.join();
@@ -146,11 +271,29 @@ impl ShardPipeline {
 const EXEC_QUEUE_BATCHES: usize = 2;
 /// Finished batches queued for a shard's responder.
 const FINISHED_QUEUE_BATCHES: usize = 8;
+/// Idle executor workers re-check the scale target this often.
+const WORKER_POLL: Duration = Duration::from_millis(25);
+
+/// Everything an executor worker (or the controller that spawns more of
+/// them) needs; cheap to clone, one per worker thread.
+#[derive(Clone)]
+struct ExecPool {
+    shard: usize,
+    variant: String,
+    factory: Arc<dyn BackendFactory>,
+    health: Arc<Health>,
+    res: Arc<ResilienceRuntime>,
+    rx: Arc<Mutex<Receiver<Vec<QueuedRequest>>>>,
+    /// Desired worker count; workers with `id >= target` retire.
+    target: Arc<AtomicUsize>,
+    finished: FinishedTx,
+}
 
 pub(crate) fn spawn_shard(ctx: ShardCtx) -> Result<ShardPipeline> {
     let (fin_tx, fin_rx) = sync_channel::<Finished>(FINISHED_QUEUE_BATCHES);
     let mut ingress = BTreeMap::new();
     let mut threads = Vec::new();
+    let stop = Arc::new(AtomicBool::new(false));
     for variant in &ctx.variants {
         let (in_tx, in_rx) = sync_channel::<QueuedRequest>(ctx.queue_limit.max(1));
         ingress.insert(variant.clone(), in_tx);
@@ -167,13 +310,24 @@ pub(crate) fn spawn_shard(ctx: ShardCtx) -> Result<ShardPipeline> {
             ex_tx,
             fin_tx.clone(),
             policy,
+            Arc::clone(&ctx.res),
         )?);
-        threads.push(spawn_executor(
-            &ctx,
-            variant.clone(),
-            ex_rx,
-            fin_tx.clone(),
-        )?);
+        let pool = ExecPool {
+            shard: ctx.shard,
+            variant: variant.clone(),
+            factory: Arc::clone(&ctx.factory),
+            health: Arc::clone(&ctx.health),
+            res: Arc::clone(&ctx.res),
+            rx: Arc::new(Mutex::new(ex_rx)),
+            target: Arc::new(AtomicUsize::new(1)),
+            finished: fin_tx.clone(),
+        };
+        // Worker 0 is immortal (never retired by scale-down) and the one
+        // that reports boot readiness.
+        threads.push(spawn_exec_worker(pool.clone(), 0, Some(ctx.ready.clone()))?);
+        if let Some(autoscale) = ctx.res.cfg.autoscale {
+            threads.push(spawn_scaler(pool, autoscale, Arc::clone(&stop))?);
+        }
     }
     // The responder must see disconnect once batchers + executors exit.
     drop(fin_tx);
@@ -181,14 +335,20 @@ pub(crate) fn spawn_shard(ctx: ShardCtx) -> Result<ShardPipeline> {
         ctx.shard,
         fin_rx,
         Arc::clone(&ctx.metrics),
+        Arc::clone(&ctx.res),
     )?);
-    Ok(ShardPipeline { ingress, threads })
+    Ok(ShardPipeline {
+        ingress,
+        threads,
+        stop,
+    })
 }
 
 /// Stage 2: deadline-bucket batching. Pulls from the bounded ingress,
 /// closes batches per [`next_batch`]'s SLO rules, fails what already
 /// expired in queue, and hands live batches to the executor (blocking —
-/// that is the backpressure).
+/// that is the backpressure). Queue-wait samples additionally feed the
+/// resilience layer's pressure EMA (autoscaling + degradation ladder).
 fn spawn_batcher(
     shard: usize,
     variant: String,
@@ -196,6 +356,7 @@ fn spawn_batcher(
     exec: SyncSender<Vec<QueuedRequest>>,
     finished: FinishedTx,
     policy: BatchPolicy,
+    res: Arc<ResilienceRuntime>,
 ) -> Result<JoinHandle<()>> {
     std::thread::Builder::new()
         .name(format!("batch-{shard}-{variant}"))
@@ -217,7 +378,9 @@ fn spawn_batcher(
                 let mut live = Vec::with_capacity(batch.len());
                 let mut dead = Vec::new();
                 for mut q in batch {
-                    queue_wait.record(q.enqueued.elapsed().as_micros() as u64);
+                    let wait_us = q.enqueued.elapsed().as_micros() as u64;
+                    queue_wait.record(wait_us);
+                    res.note_queue_wait(shard, &variant, wait_us);
                     if q.deadline <= now {
                         dead.push(q);
                     } else {
@@ -259,141 +422,365 @@ fn spawn_batcher(
         .context("spawning batcher thread")
 }
 
-/// Stage 3: execution. Owns the backend (built on this thread — PJRT
-/// executables are per-thread, the native backend keeps per-worker
-/// scratch); every `infer_batch` runs under `catch_unwind`, so a panic
-/// fails the batch and poisons the worker instead of hanging the server.
-fn spawn_executor(
-    ctx: &ShardCtx,
-    variant: String,
-    rx: Receiver<Vec<QueuedRequest>>,
-    finished: FinishedTx,
+/// Stage 3: execution. Each worker owns its backend (built on the worker
+/// thread — PJRT executables are per-thread, the native backend keeps
+/// per-worker scratch); every `infer_batch` runs under `catch_unwind`.
+/// Transient failures retry with backoff; a panic respawns the backend
+/// while the [`RestartBudget`] lasts, then falls back to the legacy
+/// poison-and-report-[`Health`] behavior. Workers with `id > 0` retire
+/// when the autoscale target drops below them.
+fn spawn_exec_worker(
+    pool: ExecPool,
+    worker_id: usize,
+    ready: Option<Sender<std::result::Result<(), String>>>,
 ) -> Result<JoinHandle<()>> {
-    let factory = Arc::clone(&ctx.factory);
-    let health = Arc::clone(&ctx.health);
-    let ready = ctx.ready.clone();
-    let shard = ctx.shard;
     std::thread::Builder::new()
-        .name(format!("exec-{shard}-{variant}"))
+        .name(format!("exec-{}-{}-w{worker_id}", pool.shard, pool.variant))
         .spawn(move || {
-            let mut backend: Box<dyn Backend> = match factory.create(&variant) {
-                Ok(b) => {
-                    // Boot may already have failed on a sibling; a closed
-                    // channel is fine to ignore.
-                    let _ = ready.send(Ok(()));
-                    b
-                }
-                Err(e) => {
-                    let _ = ready.send(Err(format!("{variant}: {e:#}")));
-                    return;
-                }
-            };
+            let mut backend: Box<dyn Backend> =
+                match pool.factory.create_for_shard(pool.shard, &pool.variant) {
+                    Ok(b) => {
+                        if let Some(r) = &ready {
+                            // Boot may already have failed on a sibling; a
+                            // closed channel is fine to ignore.
+                            let _ = r.send(Ok(()));
+                        }
+                        b
+                    }
+                    Err(e) => {
+                        match &ready {
+                            Some(r) => {
+                                let _ = r.send(Err(format!("{}: {e:#}", pool.variant)));
+                            }
+                            None => {
+                                // A scaled-up worker that cannot build its
+                                // backend rolls the target back so the
+                                // controller can try again later.
+                                crate::obs::error(
+                                    "serve",
+                                    "autoscaled worker failed to build backend",
+                                    &[
+                                        ("variant", pool.variant.clone()),
+                                        ("error", format!("{e:#}")),
+                                    ],
+                                );
+                                let _ = pool.target.fetch_update(
+                                    Ordering::Relaxed,
+                                    Ordering::Relaxed,
+                                    |t| if t > 1 { Some(t - 1) } else { None },
+                                );
+                            }
+                        }
+                        return;
+                    }
+                };
             drop(ready);
+            let workers_gauge = crate::obs::gauge("serve.autoscale.workers");
+            workers_gauge.add(1);
             let execute_failures = crate::obs::counter("serve.execute_failures");
+            let retry_attempts = crate::obs::counter("serve.retry.attempts");
+            let retry_recovered = crate::obs::counter("serve.retry.recovered");
+            let respawns = crate::obs::counter("serve.executor.respawns");
+            let cfg = pool.res.cfg;
+            let mut budget = RestartBudget::new(cfg.respawn_budget, cfg.respawn_min_interval);
             let mut poisoned = false;
-            while let Ok(mut batch) = rx.recv() {
+            loop {
+                if worker_id != 0 && worker_id >= pool.target.load(Ordering::Relaxed) {
+                    break; // retired by scale-down
+                }
+                let recv = {
+                    let guard = match pool.rx.lock() {
+                        Ok(g) => g,
+                        Err(p) => p.into_inner(),
+                    };
+                    guard.recv_timeout(WORKER_POLL)
+                };
+                let mut batch = match recv {
+                    Ok(b) => b,
+                    Err(RecvTimeoutError::Timeout) => continue,
+                    Err(RecvTimeoutError::Disconnected) => break,
+                };
                 if poisoned {
                     forward(
-                        &finished,
-                        shard as u32,
+                        &pool.finished,
+                        pool.shard as u32,
                         Finished::Failed {
-                            variant: variant.clone(),
+                            variant: pool.variant.clone(),
                             batch,
                             reason: FailReason::WorkerPanicked,
                         },
                     );
                     continue;
                 }
-                let traced = crate::obs::trace_enabled();
-                let t_exec_start = if traced { crate::obs::trace::now_us() } else { 0 };
-                let result = {
-                    // Full-path span: this thread's TLS stack is empty, but
-                    // the batch stage semantically parents execution.
-                    let _execute = crate::obs::span_path("serve.batch/execute");
-                    let images: Vec<&[u8]> = batch.iter().map(|q| q.image.as_slice()).collect();
-                    catch_unwind(AssertUnwindSafe(|| backend.infer_batch(&images)))
-                };
-                if traced {
-                    let t_exec_end = crate::obs::trace::now_us();
-                    for q in &mut batch {
-                        q.stamps.stamp_exec(t_exec_start, t_exec_end);
+                let mut attempts_left = cfg.retries;
+                let mut retried = false;
+                let msg = loop {
+                    let traced = crate::obs::trace_enabled();
+                    let t_exec_start = if traced { crate::obs::trace::now_us() } else { 0 };
+                    let result = {
+                        // Full-path span: this thread's TLS stack is empty,
+                        // but the batch stage semantically parents execution.
+                        let _execute = crate::obs::span_path("serve.batch/execute");
+                        let images: Vec<&[u8]> =
+                            batch.iter().map(|q| q.image.as_slice()).collect();
+                        catch_unwind(AssertUnwindSafe(|| backend.infer_batch(&images)))
+                    };
+                    if traced {
+                        // Re-stamped on retry: the trace records the
+                        // attempt that produced the final outcome.
+                        let t_exec_end = crate::obs::trace::now_us();
+                        for q in &mut batch {
+                            q.stamps.stamp_exec(t_exec_start, t_exec_end);
+                        }
                     }
+                    match result {
+                        Ok(Ok(rows)) if rows.len() == batch.len() => {
+                            if retried {
+                                retry_recovered.add(batch.len() as u64);
+                            }
+                            break Finished::Executed {
+                                variant: pool.variant.clone(),
+                                batch,
+                                rows,
+                            };
+                        }
+                        Ok(Ok(rows)) => {
+                            if attempts_left > 0 {
+                                attempts_left -= 1;
+                                retried = true;
+                                retry_attempts.inc();
+                                std::thread::sleep(backoff(cfg.retry_backoff, cfg.retries, attempts_left));
+                                continue;
+                            }
+                            crate::obs::error(
+                                "serve",
+                                "backend returned a short batch",
+                                &[
+                                    ("variant", pool.variant.clone()),
+                                    ("rows", rows.len().to_string()),
+                                    ("batch", batch.len().to_string()),
+                                ],
+                            );
+                            execute_failures.inc();
+                            break Finished::Failed {
+                                variant: pool.variant.clone(),
+                                reason: FailReason::ExecuteFailed(format!(
+                                    "backend returned {} rows for a batch of {}",
+                                    rows.len(),
+                                    batch.len()
+                                )),
+                                batch,
+                            };
+                        }
+                        Ok(Err(e)) => {
+                            if attempts_left > 0 {
+                                attempts_left -= 1;
+                                retried = true;
+                                retry_attempts.inc();
+                                std::thread::sleep(backoff(cfg.retry_backoff, cfg.retries, attempts_left));
+                                continue;
+                            }
+                            crate::obs::error(
+                                "serve",
+                                "execute failed",
+                                &[
+                                    ("variant", pool.variant.clone()),
+                                    ("error", format!("{e:#}")),
+                                ],
+                            );
+                            execute_failures.inc();
+                            break Finished::Failed {
+                                variant: pool.variant.clone(),
+                                batch,
+                                reason: FailReason::ExecuteFailed(format!("{e:#}")),
+                            };
+                        }
+                        Err(panic) => {
+                            let what = panic_message(panic.as_ref());
+                            crate::obs::error(
+                                "serve",
+                                "worker panicked during execute",
+                                &[
+                                    ("shard", pool.shard.to_string()),
+                                    ("variant", pool.variant.clone()),
+                                    ("panic", what.clone()),
+                                ],
+                            );
+                            execute_failures.inc();
+                            match budget.request(Instant::now()) {
+                                Some(wait) => {
+                                    // Self-healing: rebuild the backend on
+                                    // this thread (rate-limited) and keep
+                                    // serving instead of poisoning.
+                                    if !wait.is_zero() {
+                                        std::thread::sleep(wait);
+                                    }
+                                    match pool.factory.create_for_shard(pool.shard, &pool.variant)
+                                    {
+                                        Ok(b) => {
+                                            backend = b;
+                                            respawns.inc();
+                                            crate::obs::warn(
+                                                "serve",
+                                                "executor respawned after panic",
+                                                &[
+                                                    ("shard", pool.shard.to_string()),
+                                                    ("variant", pool.variant.clone()),
+                                                    ("respawn", budget.used().to_string()),
+                                                ],
+                                            );
+                                            if attempts_left > 0 {
+                                                attempts_left -= 1;
+                                                retried = true;
+                                                retry_attempts.inc();
+                                                continue;
+                                            }
+                                            break Finished::Failed {
+                                                variant: pool.variant.clone(),
+                                                batch,
+                                                reason: FailReason::WorkerPanicked,
+                                            };
+                                        }
+                                        Err(e) => {
+                                            pool.health.report(format!(
+                                                "shard {} variant {} respawn failed after \
+                                                 panic: {e:#}",
+                                                pool.shard, pool.variant
+                                            ));
+                                            poisoned = true;
+                                            break Finished::Failed {
+                                                variant: pool.variant.clone(),
+                                                batch,
+                                                reason: FailReason::WorkerPanicked,
+                                            };
+                                        }
+                                    }
+                                }
+                                None => {
+                                    if cfg.respawn_budget == 0 {
+                                        pool.health.report(format!(
+                                            "shard {} variant {} worker panicked: {what}",
+                                            pool.shard, pool.variant
+                                        ));
+                                    } else {
+                                        pool.health.report(format!(
+                                            "shard {} variant {} worker panicked: {what} \
+                                             (restart budget exhausted after {} respawns)",
+                                            pool.shard,
+                                            pool.variant,
+                                            budget.used()
+                                        ));
+                                    }
+                                    poisoned = true;
+                                    break Finished::Failed {
+                                        variant: pool.variant.clone(),
+                                        batch,
+                                        reason: FailReason::WorkerPanicked,
+                                    };
+                                }
+                            }
+                        }
+                    }
+                };
+                forward(&pool.finished, pool.shard as u32, msg);
+            }
+            workers_gauge.add(-1);
+        })
+        .context("spawning executor worker thread")
+}
+
+/// Linear backoff: the Nth retry of a batch sleeps `N * base`.
+fn backoff(base: Duration, retries: u32, attempts_left: u32) -> Duration {
+    base * (retries - attempts_left).max(1)
+}
+
+/// The autoscale controller for one shard×variant pool: each tick it
+/// reads (then decays) the queue-wait pressure EMA and grows or shrinks
+/// the worker target within `1..=max_workers`. Spawned workers are
+/// owned (and joined) here; retiring workers notice the lowered target
+/// within [`WORKER_POLL`].
+fn spawn_scaler(
+    pool: ExecPool,
+    policy: AutoscalePolicy,
+    stop: Arc<AtomicBool>,
+) -> Result<JoinHandle<()>> {
+    std::thread::Builder::new()
+        .name(format!("scale-{}-{}", pool.shard, pool.variant))
+        .spawn(move || {
+            let ups = crate::obs::counter("serve.autoscale.scale_ups");
+            let downs = crate::obs::counter("serve.autoscale.scale_downs");
+            let mut spawned: BTreeMap<usize, JoinHandle<()>> = BTreeMap::new();
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(policy.tick);
+                let wait = Duration::from_micros(pool.res.queue_wait_us(pool.shard, &pool.variant));
+                pool.res.decay_pressure(pool.shard, &pool.variant);
+                let current = pool.target.load(Ordering::Relaxed);
+                match autoscale_decision(&policy, current, wait) {
+                    Some(next) if next > current => {
+                        // Reap any previous incarnation of the ids being
+                        // brought back so two threads never share one.
+                        for id in current..next {
+                            if let Some(h) = spawned.remove(&id) {
+                                let _ = h.join();
+                            }
+                        }
+                        pool.target.store(next, Ordering::Relaxed);
+                        for id in current..next {
+                            match spawn_exec_worker(pool.clone(), id, None) {
+                                Ok(h) => {
+                                    spawned.insert(id, h);
+                                    ups.inc();
+                                    crate::obs::info(
+                                        "serve",
+                                        "autoscale: worker added",
+                                        &[
+                                            ("shard", pool.shard.to_string()),
+                                            ("variant", pool.variant.clone()),
+                                            ("workers", next.to_string()),
+                                            ("queue_wait_us", wait.as_micros().to_string()),
+                                        ],
+                                    );
+                                }
+                                Err(_) => {
+                                    pool.target.store(current, Ordering::Relaxed);
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                    Some(next) if next < current => {
+                        pool.target.store(next, Ordering::Relaxed);
+                        downs.inc();
+                        crate::obs::info(
+                            "serve",
+                            "autoscale: worker retiring",
+                            &[
+                                ("shard", pool.shard.to_string()),
+                                ("variant", pool.variant.clone()),
+                                ("workers", next.to_string()),
+                            ],
+                        );
+                    }
+                    _ => {}
                 }
-                let msg = match result {
-                    Ok(Ok(rows)) if rows.len() == batch.len() => Finished::Executed {
-                        variant: variant.clone(),
-                        batch,
-                        rows,
-                    },
-                    Ok(Ok(rows)) => {
-                        crate::obs::error(
-                            "serve",
-                            "backend returned a short batch",
-                            &[
-                                ("variant", variant.clone()),
-                                ("rows", rows.len().to_string()),
-                                ("batch", batch.len().to_string()),
-                            ],
-                        );
-                        execute_failures.inc();
-                        Finished::Failed {
-                            variant: variant.clone(),
-                            reason: FailReason::ExecuteFailed(format!(
-                                "backend returned {} rows for a batch of {}",
-                                rows.len(),
-                                batch.len()
-                            )),
-                            batch,
-                        }
-                    }
-                    Ok(Err(e)) => {
-                        crate::obs::error(
-                            "serve",
-                            "execute failed",
-                            &[("variant", variant.clone()), ("error", format!("{e:#}"))],
-                        );
-                        execute_failures.inc();
-                        Finished::Failed {
-                            variant: variant.clone(),
-                            batch,
-                            reason: FailReason::ExecuteFailed(format!("{e:#}")),
-                        }
-                    }
-                    Err(panic) => {
-                        let what = panic_message(panic.as_ref());
-                        crate::obs::error(
-                            "serve",
-                            "worker panicked during execute",
-                            &[
-                                ("shard", shard.to_string()),
-                                ("variant", variant.clone()),
-                                ("panic", what.clone()),
-                            ],
-                        );
-                        execute_failures.inc();
-                        health.report(format!(
-                            "shard {shard} variant {variant} worker panicked: {what}"
-                        ));
-                        poisoned = true;
-                        Finished::Failed {
-                            variant: variant.clone(),
-                            batch,
-                            reason: FailReason::WorkerPanicked,
-                        }
-                    }
-                };
-                forward(&finished, shard as u32, msg);
+            }
+            for (_, h) in spawned {
+                let _ = h.join();
             }
         })
-        .context("spawning executor thread")
+        .context("spawning autoscale controller thread")
 }
 
 /// Stage 4: the shard's single responder — metrics, delivery counters and
 /// the per-request `Delivery` sends, off the executor's critical path.
+/// Execution outcomes feed the circuit breakers here (deadline expiries
+/// do not — they indict the queue, not the backend), and hedged
+/// duplicates are claimed out before anything is counted.
 fn spawn_responder(
     shard: usize,
     rx: Receiver<Finished>,
     metrics: Arc<ServerMetrics>,
+    res: Arc<ResilienceRuntime>,
 ) -> Result<JoinHandle<()>> {
     std::thread::Builder::new()
         .name(format!("respond-{shard}"))
@@ -413,41 +800,73 @@ fn spawn_responder(
                         batch,
                         rows,
                     } => {
+                        res.on_batch_outcome(&variant, true, batch.len());
+                        // Claim out hedged duplicates first: only winning
+                        // copies are counted and delivered.
+                        let t_done = trace_now();
+                        let mut winners: Vec<(QueuedRequest, Vec<f32>)> =
+                            Vec::with_capacity(batch.len());
+                        let mut dups = 0usize;
+                        for (q, logits) in batch.into_iter().zip(rows) {
+                            if q.respond.claim_ok() {
+                                winners.push((q, logits));
+                            } else {
+                                dups += 1;
+                                complete_trace(&q.stamps, shard as u32, &variant, t_done);
+                            }
+                        }
+                        if dups > 0 {
+                            metrics.record_hedge_discarded(dups);
+                        }
+                        let degraded = winners.iter().filter(|(q, _)| q.degraded).count();
+                        if degraded > 0 {
+                            metrics.record_degraded(degraded);
+                        }
                         // Record metrics BEFORE completing the requests so
                         // a caller that snapshots right after the last
                         // response sees every batch counted. Latencies
                         // carry the trace id as a histogram exemplar —
                         // `obs health` links p99 to a concrete request.
-                        let lats: Vec<(f64, u64)> = batch
+                        let lats: Vec<(f64, u64)> = winners
                             .iter()
-                            .map(|q| (q.enqueued.elapsed().as_micros() as f64, q.stamps.id))
+                            .map(|(q, _)| (q.enqueued.elapsed().as_micros() as f64, q.stamps.id))
                             .collect();
-                        metrics.record_batch_exemplars(batch.len(), &lats);
-                        delivered.add(batch.len() as u64);
-                        shard_delivered.add(batch.len() as u64);
+                        metrics.record_batch_exemplars(winners.len(), &lats);
+                        delivered.add(winners.len() as u64);
+                        shard_delivered.add(winners.len() as u64);
                         // Deliveries that landed past their deadline feed
                         // the latency SLO objective.
                         let now = Instant::now();
-                        let late = batch.iter().filter(|q| now > q.deadline).count();
+                        let late = winners.iter().filter(|(q, _)| now > q.deadline).count();
                         if late > 0 {
                             delivered_late.add(late as u64);
                         }
-                        deliver_rows(shard as u32, variant, batch, rows);
+                        deliver_claimed(shard as u32, variant, winners);
                     }
                     Finished::Failed {
                         variant,
                         batch,
                         reason,
                     } => {
-                        let n = batch.len() as u64;
-                        metrics.record_failed(batch.len());
+                        // Deadline expiries never reach the breaker: they
+                        // indict queueing pressure, not the backend.
+                        if !matches!(reason, FailReason::DeadlineExpired) {
+                            res.on_batch_outcome(&variant, false, batch.len());
+                        }
+                        let (deliverable, discarded) =
+                            settle_failures(shard as u32, &variant, batch, &reason);
+                        if discarded > 0 {
+                            metrics.record_hedge_discarded(discarded);
+                        }
+                        let n = deliverable.len() as u64;
+                        metrics.record_failed(deliverable.len());
                         shard_failed.add(n);
                         match &reason {
                             FailReason::DeadlineExpired => fail_expired.add(n),
                             FailReason::ExecuteFailed(_) => fail_execute.add(n),
                             FailReason::WorkerPanicked => fail_panic.add(n),
                         }
-                        fail_batch(shard as u32, &variant, batch, reason);
+                        send_failures(shard as u32, &variant, deliverable, reason);
                     }
                 }
             }
@@ -485,30 +904,91 @@ fn trace_now() -> u64 {
     }
 }
 
+/// Close a (possibly untraced) request timeline as delivered.
+fn complete_trace(stamps: &StageStamps, shard: u32, variant: &str, t_done: u64) {
+    if stamps.id != 0 {
+        crate::obs::trace::collector().complete((*stamps).finish(
+            shard,
+            variant,
+            TraceOutcome::Delivered,
+            t_done,
+        ));
+    }
+}
+
+/// Metrics-free delivery used by the [`forward`] fallback: claim out
+/// duplicates, then deliver the winners.
 fn deliver_rows(shard: u32, variant: String, batch: Vec<QueuedRequest>, rows: Vec<Vec<f32>>) {
     let t_done = trace_now();
+    let mut winners = Vec::with_capacity(batch.len());
     for (q, logits) in batch.into_iter().zip(rows) {
-        if q.stamps.id != 0 {
-            crate::obs::trace::collector().complete(q.stamps.finish(
-                shard,
-                &variant,
-                TraceOutcome::Delivered,
-                t_done,
-            ));
+        if q.respond.claim_ok() {
+            winners.push((q, logits));
+        } else {
+            complete_trace(&q.stamps, shard, &variant, t_done);
         }
+    }
+    deliver_claimed(shard, variant, winners);
+}
+
+/// Deliver rows whose slots have already been claimed.
+fn deliver_claimed(shard: u32, variant: String, winners: Vec<(QueuedRequest, Vec<f32>)>) {
+    let t_done = trace_now();
+    for (q, logits) in winners {
+        complete_trace(&q.stamps, shard, &variant, t_done);
         let predicted = argmax(&logits);
-        // Receiver may have gone away; ignore.
-        let _ = q.respond.send(Delivery::Ok(Response {
+        q.respond.send(Delivery::Ok(Response {
             logits,
             predicted,
             variant: variant.clone(),
+            degraded: q.degraded,
         }));
     }
 }
 
-/// Deliver a failure to every request in the batch, closing each trace
-/// with the outcome matching the [`FailReason`].
-fn fail_batch(shard: u32, variant: &str, batch: Vec<QueuedRequest>, reason: FailReason) {
+/// Partition a failed batch by hedge disposition: requests this copy must
+/// deliver a failure for come back; pending copies (a sibling will
+/// settle) and discarded copies (a sibling already delivered) have their
+/// traces closed here and are dropped. Returns the deliverable requests
+/// plus the discarded-duplicate count.
+fn settle_failures(
+    shard: u32,
+    variant: &str,
+    batch: Vec<QueuedRequest>,
+    reason: &FailReason,
+) -> (Vec<QueuedRequest>, usize) {
+    let outcome = match reason {
+        FailReason::DeadlineExpired => TraceOutcome::DeadlineExpired,
+        FailReason::ExecuteFailed(_) => TraceOutcome::ExecuteFailed,
+        FailReason::WorkerPanicked => TraceOutcome::WorkerPanicked,
+    };
+    let t_done = trace_now();
+    let mut deliverable = Vec::with_capacity(batch.len());
+    let mut discarded = 0usize;
+    for q in batch {
+        match q.respond.fail_disposition() {
+            FailDisposition::Deliver => deliverable.push(q),
+            FailDisposition::Pending => {
+                // The sibling copy settles the client delivery; this
+                // copy still owns the trace, closed with its own fate.
+                if q.stamps.id != 0 {
+                    crate::obs::trace::collector().complete(q.stamps.finish(
+                        shard, variant, outcome, t_done,
+                    ));
+                }
+            }
+            FailDisposition::Discard => {
+                discarded += 1;
+                complete_trace(&q.stamps, shard, variant, t_done);
+            }
+        }
+    }
+    (deliverable, discarded)
+}
+
+/// Send a failure to every deliverable request, closing each trace with
+/// the outcome matching the [`FailReason`].
+fn send_failures(shard: u32, variant: &str, batch: Vec<QueuedRequest>, reason: FailReason) {
     let outcome = match &reason {
         FailReason::DeadlineExpired => TraceOutcome::DeadlineExpired,
         FailReason::ExecuteFailed(_) => TraceOutcome::ExecuteFailed,
@@ -518,14 +998,17 @@ fn fail_batch(shard: u32, variant: &str, batch: Vec<QueuedRequest>, reason: Fail
     for q in batch {
         if q.stamps.id != 0 {
             crate::obs::trace::collector().complete(q.stamps.finish(
-                shard,
-                variant,
-                outcome,
-                t_done,
+                shard, variant, outcome, t_done,
             ));
         }
-        let _ = q.respond.send(Delivery::Failed(reason.clone()));
+        q.respond.send(Delivery::Failed(reason.clone()));
     }
+}
+
+/// Metrics-free failure delivery used by the [`forward`] fallback.
+fn fail_batch(shard: u32, variant: &str, batch: Vec<QueuedRequest>, reason: FailReason) {
+    let (deliverable, _discarded) = settle_failures(shard, variant, batch, &reason);
+    send_failures(shard, variant, deliverable, reason);
 }
 
 fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
@@ -535,5 +1018,72 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
         s.clone()
     } else {
         "non-string panic payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn direct_slot_always_claims_and_delivers_failures() {
+        let (tx, _rx) = channel();
+        let slot = ResponseSlot::direct(tx);
+        assert!(slot.claim_ok());
+        assert!(slot.claim_ok());
+        assert!(matches!(slot.fail_disposition(), FailDisposition::Deliver));
+    }
+
+    #[test]
+    fn hedged_pair_claims_success_exactly_once() {
+        let (tx, _rx) = channel();
+        let (primary, hedge) = ResponseSlot::hedged_pair(tx);
+        assert!(primary.claim_ok());
+        assert!(!hedge.claim_ok());
+    }
+
+    #[test]
+    fn hedged_failure_then_success_delivers_once() {
+        let (tx, _rx) = channel();
+        let (primary, hedge) = ResponseSlot::hedged_pair(tx);
+        // Primary fails first: the hedge is still outstanding, so the
+        // failure stays pending.
+        assert!(matches!(
+            primary.fail_disposition(),
+            FailDisposition::Pending
+        ));
+        // Hedge succeeds and claims the one delivery.
+        assert!(hedge.claim_ok());
+    }
+
+    #[test]
+    fn hedged_double_failure_delivers_the_last_one() {
+        let (tx, _rx) = channel();
+        let (primary, hedge) = ResponseSlot::hedged_pair(tx);
+        assert!(matches!(
+            primary.fail_disposition(),
+            FailDisposition::Pending
+        ));
+        assert!(matches!(hedge.fail_disposition(), FailDisposition::Deliver));
+    }
+
+    #[test]
+    fn failure_after_sibling_success_is_discarded() {
+        let (tx, _rx) = channel();
+        let (primary, hedge) = ResponseSlot::hedged_pair(tx);
+        assert!(primary.claim_ok());
+        assert!(matches!(hedge.fail_disposition(), FailDisposition::Discard));
+    }
+
+    #[test]
+    fn cancelled_hedge_makes_primary_failure_deliverable() {
+        let (tx, _rx) = channel();
+        let (primary, hedge) = ResponseSlot::hedged_pair(tx);
+        hedge.cancel();
+        assert!(matches!(
+            primary.fail_disposition(),
+            FailDisposition::Deliver
+        ));
     }
 }

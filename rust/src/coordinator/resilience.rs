@@ -1,0 +1,670 @@
+//! Fault-tolerance and elasticity policies for the sharded serving
+//! pipeline.
+//!
+//! This module owns the *decision* half of the resilience layer; the
+//! pipeline and server own the *enforcement* half:
+//!
+//! - [`BreakerPolicy`] / [`BreakerCore`]: a per-variant circuit breaker
+//!   (closed → open → half-open) over a sliding window of execution
+//!   outcomes. An open breaker ejects the variant from class routing and
+//!   fast-fails direct submissions; after a cooldown a bounded number of
+//!   probe requests decide whether it re-closes.
+//! - [`RestartBudget`]: rate-limited, bounded executor respawns. When
+//!   the budget is exhausted the executor poisons itself and reports
+//!   through [`super::Health`], exactly like the pre-resilience
+//!   fail-fast behavior.
+//! - [`AutoscalePolicy`]: per shard×variant executor-thread scaling
+//!   driven by the queue-wait pressure EMA fed from the same
+//!   measurements as the `serve.queue_wait_us` histogram.
+//! - [`ResilienceConfig`]: the umbrella knob set. `Default` disables
+//!   every feature, which makes `start_resilient` with a default config
+//!   byte-for-byte equivalent to the legacy `start_sharded` pipeline.
+//!
+//! The state machines here are pure and clock-injected (every method
+//! takes `now: Instant`) so the unit tests below drive them
+//! deterministically without sleeping.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::obs;
+
+/// Failure-rate circuit breaker knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BreakerPolicy {
+    /// Sliding window length (number of most-recent outcomes kept).
+    pub window: usize,
+    /// Minimum outcomes in the window before the breaker may trip.
+    pub min_samples: usize,
+    /// Trip when `failures / samples >= failure_ratio`.
+    pub failure_ratio: f64,
+    /// How long an open breaker blocks traffic before probing.
+    pub cooldown: Duration,
+    /// Probe requests admitted in half-open; all must succeed to
+    /// re-close.
+    pub probes: u32,
+}
+
+impl Default for BreakerPolicy {
+    fn default() -> Self {
+        BreakerPolicy {
+            window: 32,
+            min_samples: 8,
+            failure_ratio: 0.5,
+            cooldown: Duration::from_millis(250),
+            probes: 2,
+        }
+    }
+}
+
+/// Breaker state; the numeric form is published as the
+/// `serve.breaker.{variant}.state` gauge (0/1/2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    HalfOpen,
+    Open,
+}
+
+impl BreakerState {
+    pub fn gauge(self) -> i64 {
+        match self {
+            BreakerState::Closed => 0,
+            BreakerState::HalfOpen => 1,
+            BreakerState::Open => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::HalfOpen => "half-open",
+            BreakerState::Open => "open",
+        }
+    }
+}
+
+/// Pure breaker state machine. `allow` gates admissions, `on_result`
+/// feeds execution outcomes back; both return state transitions so the
+/// caller can publish gauges/events exactly once per edge.
+pub struct BreakerCore {
+    policy: BreakerPolicy,
+    state: BreakerState,
+    window: VecDeque<bool>,
+    failures: usize,
+    opened_at: Instant,
+    probes_issued: u32,
+    probes_ok: u32,
+}
+
+impl BreakerCore {
+    pub fn new(policy: BreakerPolicy, now: Instant) -> Self {
+        BreakerCore {
+            policy,
+            state: BreakerState::Closed,
+            window: VecDeque::with_capacity(policy.window.max(1)),
+            failures: 0,
+            opened_at: now,
+            probes_issued: 0,
+            probes_ok: 0,
+        }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        self.state
+    }
+
+    /// May a request be admitted to this variant right now? Moves an
+    /// open breaker to half-open once the cooldown has elapsed; the
+    /// returned transition (if any) is the edge the caller should log.
+    pub fn allow(&mut self, now: Instant) -> (bool, Option<BreakerState>) {
+        match self.state {
+            BreakerState::Closed => (true, None),
+            BreakerState::Open => {
+                if now.duration_since(self.opened_at) >= self.policy.cooldown {
+                    self.state = BreakerState::HalfOpen;
+                    self.probes_issued = 1;
+                    self.probes_ok = 0;
+                    (true, Some(BreakerState::HalfOpen))
+                } else {
+                    (false, None)
+                }
+            }
+            BreakerState::HalfOpen => {
+                if self.probes_issued < self.policy.probes.max(1) {
+                    self.probes_issued += 1;
+                    (true, None)
+                } else {
+                    (false, None)
+                }
+            }
+        }
+    }
+
+    /// Record an execution outcome. Deadline expiries never reach this
+    /// path — only genuine backend failures count against the window.
+    pub fn on_result(&mut self, ok: bool, now: Instant) -> Option<BreakerState> {
+        match self.state {
+            BreakerState::Closed => {
+                if self.window.len() == self.policy.window.max(1) {
+                    if let Some(evicted) = self.window.pop_front() {
+                        if !evicted {
+                            self.failures -= 1;
+                        }
+                    }
+                }
+                self.window.push_back(ok);
+                if !ok {
+                    self.failures += 1;
+                }
+                let samples = self.window.len();
+                if samples >= self.policy.min_samples.max(1)
+                    && self.failures as f64 / samples as f64 >= self.policy.failure_ratio
+                {
+                    self.trip(now);
+                    return Some(BreakerState::Open);
+                }
+                None
+            }
+            BreakerState::HalfOpen => {
+                if ok {
+                    self.probes_ok += 1;
+                    if self.probes_ok >= self.policy.probes.max(1) {
+                        self.state = BreakerState::Closed;
+                        self.window.clear();
+                        self.failures = 0;
+                        return Some(BreakerState::Closed);
+                    }
+                    None
+                } else {
+                    self.trip(now);
+                    Some(BreakerState::Open)
+                }
+            }
+            // Late results from batches admitted before the trip.
+            BreakerState::Open => None,
+        }
+    }
+
+    fn trip(&mut self, now: Instant) {
+        self.state = BreakerState::Open;
+        self.opened_at = now;
+        self.window.clear();
+        self.failures = 0;
+        self.probes_issued = 0;
+        self.probes_ok = 0;
+    }
+}
+
+/// Bounded, rate-limited respawn allowance for a panicked executor.
+pub struct RestartBudget {
+    budget: u32,
+    used: u32,
+    min_interval: Duration,
+    next_allowed: Option<Instant>,
+}
+
+impl RestartBudget {
+    pub fn new(budget: u32, min_interval: Duration) -> Self {
+        RestartBudget {
+            budget,
+            used: 0,
+            min_interval,
+            next_allowed: None,
+        }
+    }
+
+    /// Ask to respawn at `now`. `Some(delay)` grants the respawn after
+    /// waiting `delay` (the rate limit); `None` means the budget is
+    /// exhausted and the executor must escalate to `Health`.
+    pub fn request(&mut self, now: Instant) -> Option<Duration> {
+        if self.used >= self.budget {
+            return None;
+        }
+        self.used += 1;
+        let wait = match self.next_allowed {
+            Some(t) if t > now => t - now,
+            _ => Duration::ZERO,
+        };
+        self.next_allowed = Some(now + wait + self.min_interval);
+        Some(wait)
+    }
+
+    pub fn used(&self) -> u32 {
+        self.used
+    }
+}
+
+/// Executor-thread autoscaling knobs for one shard×variant pool.
+#[derive(Clone, Copy, Debug)]
+pub struct AutoscalePolicy {
+    /// Upper bound on executor threads per shard×variant pool.
+    pub max_workers: usize,
+    /// Scale up when the queue-wait EMA exceeds this.
+    pub scale_up_wait: Duration,
+    /// Scale down when the queue-wait EMA drops below this.
+    pub scale_down_wait: Duration,
+    /// Controller evaluation period.
+    pub tick: Duration,
+}
+
+impl Default for AutoscalePolicy {
+    fn default() -> Self {
+        AutoscalePolicy {
+            max_workers: 4,
+            scale_up_wait: Duration::from_millis(2),
+            scale_down_wait: Duration::from_micros(200),
+            tick: Duration::from_millis(10),
+        }
+    }
+}
+
+/// Pure scaling decision: `Some(new_target)` when the pool should grow
+/// or shrink by one worker, `None` to hold.
+pub fn autoscale_decision(
+    policy: &AutoscalePolicy,
+    current: usize,
+    queue_wait: Duration,
+) -> Option<usize> {
+    if queue_wait >= policy.scale_up_wait && current < policy.max_workers.max(1) {
+        Some(current + 1)
+    } else if queue_wait <= policy.scale_down_wait && current > 1 {
+        Some(current - 1)
+    } else {
+        None
+    }
+}
+
+/// Umbrella configuration for the resilience layer. The default
+/// disables everything, reproducing the legacy pipeline exactly
+/// (first worker panic poisons the executor and reports `Health`).
+#[derive(Clone, Copy, Debug)]
+pub struct ResilienceConfig {
+    /// Retries per batch for transient executor failures (0 = off).
+    pub retries: u32,
+    /// Base backoff between retries (attempt N sleeps `N * backoff`).
+    pub retry_backoff: Duration,
+    /// Hedge a request to a second shard when its deadline slack
+    /// exceeds this threshold (`None` = hedging off). First successful
+    /// result wins; duplicates are discarded and counted.
+    pub hedge_slack: Option<Duration>,
+    /// Per-variant circuit breakers (`None` = off).
+    pub breaker: Option<BreakerPolicy>,
+    /// Respawns allowed per executor before escalating to `Health`
+    /// (0 = legacy fail-fast poison on first panic).
+    pub respawn_budget: u32,
+    /// Minimum spacing between respawns of the same executor.
+    pub respawn_min_interval: Duration,
+    /// Executor autoscaling (`None` = fixed single worker per pool).
+    pub autoscale: Option<AutoscalePolicy>,
+    /// Degradation-ladder pressure threshold: a variant whose queue-wait
+    /// EMA exceeds this is skipped by class routing (`None` = off).
+    pub degrade_queue_wait: Option<Duration>,
+}
+
+impl Default for ResilienceConfig {
+    fn default() -> Self {
+        ResilienceConfig {
+            retries: 0,
+            retry_backoff: Duration::from_micros(500),
+            hedge_slack: None,
+            breaker: None,
+            respawn_budget: 0,
+            respawn_min_interval: Duration::from_millis(10),
+            autoscale: None,
+            degrade_queue_wait: None,
+        }
+    }
+}
+
+/// Queue-wait pressure EMA (µs), updated lock-free from the batcher.
+pub struct PressureEwma(AtomicU64);
+
+impl PressureEwma {
+    pub fn new() -> Self {
+        PressureEwma(AtomicU64::new(0))
+    }
+
+    /// Fold one queue-wait sample into the EMA (α = 1/8).
+    pub fn observe(&self, us: u64) {
+        let old = self.0.load(Ordering::Relaxed);
+        let new = if old == 0 { us } else { old - old / 8 + us / 8 };
+        self.0.store(new, Ordering::Relaxed);
+    }
+
+    /// Decay toward zero so an idle pool scales back down.
+    pub fn decay(&self) {
+        let old = self.0.load(Ordering::Relaxed);
+        self.0.store(old - old / 4, Ordering::Relaxed);
+    }
+
+    pub fn us(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for PressureEwma {
+    fn default() -> Self {
+        PressureEwma::new()
+    }
+}
+
+struct VariantBreaker {
+    core: Mutex<BreakerCore>,
+    state_gauge: obs::Gauge,
+}
+
+/// Shared runtime state for the resilience layer: per-variant breakers
+/// plus per-shard×variant queue-wait pressure. One instance per server,
+/// shared by the submit path, the batchers, and the autoscale
+/// controllers.
+pub(crate) struct ResilienceRuntime {
+    pub cfg: ResilienceConfig,
+    breakers: BTreeMap<String, VariantBreaker>,
+    /// variant → one EMA per shard.
+    pressure: BTreeMap<String, Vec<PressureEwma>>,
+    opened: obs::Counter,
+    reclosed: obs::Counter,
+    probing: obs::Counter,
+}
+
+impl ResilienceRuntime {
+    pub fn new(cfg: ResilienceConfig, variants: &[String], shards: usize) -> Self {
+        let now = Instant::now();
+        let mut breakers = BTreeMap::new();
+        if let Some(policy) = cfg.breaker {
+            for v in variants {
+                let state_gauge = obs::gauge(&format!("serve.breaker.{v}.state"));
+                state_gauge.set(0);
+                breakers.insert(
+                    v.clone(),
+                    VariantBreaker {
+                        core: Mutex::new(BreakerCore::new(policy, now)),
+                        state_gauge,
+                    },
+                );
+            }
+        }
+        let pressure = variants
+            .iter()
+            .map(|v| {
+                (
+                    v.clone(),
+                    (0..shards.max(1)).map(|_| PressureEwma::new()).collect(),
+                )
+            })
+            .collect();
+        ResilienceRuntime {
+            cfg,
+            breakers,
+            pressure,
+            opened: obs::counter("serve.breaker.opened"),
+            reclosed: obs::counter("serve.breaker.reclosed"),
+            probing: obs::counter("serve.breaker.probes"),
+        }
+    }
+
+    /// Breaker admission check (true when no breaker is configured).
+    pub fn allow(&self, variant: &str) -> bool {
+        let Some(b) = self.breakers.get(variant) else {
+            return true;
+        };
+        let mut core = b.core.lock().unwrap();
+        let (ok, transition) = core.allow(Instant::now());
+        if let Some(state) = transition {
+            self.publish_transition(variant, b, state);
+        }
+        ok
+    }
+
+    /// Is this variant's queue-wait pressure above the degradation
+    /// threshold on any shard?
+    pub fn overloaded(&self, variant: &str) -> bool {
+        let Some(limit) = self.cfg.degrade_queue_wait else {
+            return false;
+        };
+        let limit_us = limit.as_micros() as u64;
+        self.pressure
+            .get(variant)
+            .map(|per_shard| per_shard.iter().any(|p| p.us() > limit_us))
+            .unwrap_or(false)
+    }
+
+    /// Degradation-ladder availability: breaker closed (or probing) and
+    /// pressure under the threshold.
+    pub fn routable(&self, variant: &str) -> bool {
+        self.allow(variant) && !self.overloaded(variant)
+    }
+
+    /// Feed `n` execution outcomes for `variant` back into its breaker.
+    pub fn on_batch_outcome(&self, variant: &str, ok: bool, n: usize) {
+        let Some(b) = self.breakers.get(variant) else {
+            return;
+        };
+        let mut core = b.core.lock().unwrap();
+        for _ in 0..n {
+            if let Some(state) = core.on_result(ok, Instant::now()) {
+                self.publish_transition(variant, b, state);
+            }
+        }
+    }
+
+    fn publish_transition(&self, variant: &str, b: &VariantBreaker, state: BreakerState) {
+        b.state_gauge.set(state.gauge());
+        let fields = [("variant", variant.to_string())];
+        match state {
+            BreakerState::Open => {
+                self.opened.inc();
+                obs::warn("serve", "circuit breaker opened", &fields);
+            }
+            BreakerState::HalfOpen => {
+                self.probing.inc();
+                obs::info("serve", "circuit breaker probing (half-open)", &fields);
+            }
+            BreakerState::Closed => {
+                self.reclosed.inc();
+                obs::info("serve", "circuit breaker re-closed", &fields);
+            }
+        }
+    }
+
+    pub fn note_queue_wait(&self, shard: usize, variant: &str, us: u64) {
+        if let Some(p) = self.pressure.get(variant).and_then(|v| v.get(shard)) {
+            p.observe(us);
+        }
+    }
+
+    pub fn queue_wait_us(&self, shard: usize, variant: &str) -> u64 {
+        self.pressure
+            .get(variant)
+            .and_then(|v| v.get(shard))
+            .map(|p| p.us())
+            .unwrap_or(0)
+    }
+
+    pub fn decay_pressure(&self, shard: usize, variant: &str) {
+        if let Some(p) = self.pressure.get(variant).and_then(|v| v.get(shard)) {
+            p.decay();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> BreakerPolicy {
+        BreakerPolicy {
+            window: 8,
+            min_samples: 4,
+            failure_ratio: 0.5,
+            cooldown: Duration::from_millis(100),
+            probes: 2,
+        }
+    }
+
+    #[test]
+    fn breaker_trips_after_failure_ratio_over_min_samples() {
+        let t0 = Instant::now();
+        let mut b = BreakerCore::new(policy(), t0);
+        assert_eq!(b.state(), BreakerState::Closed);
+        // Three failures: below min_samples, still closed.
+        for _ in 0..3 {
+            assert_eq!(b.on_result(false, t0), None);
+        }
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.allow(t0).0);
+        // Fourth failure reaches min_samples at 100% failure rate.
+        assert_eq!(b.on_result(false, t0), Some(BreakerState::Open));
+        assert!(!b.allow(t0).0);
+    }
+
+    #[test]
+    fn breaker_stays_closed_under_half_failure_window() {
+        let t0 = Instant::now();
+        let mut b = BreakerCore::new(policy(), t0);
+        // Alternate ok/fail: ratio sits at 0.5 boundary only on the
+        // fail edges; feed mostly-ok traffic and it must never trip.
+        for i in 0..64 {
+            let ok = i % 3 != 0; // 1/3 failures < 0.5 ratio
+            assert_eq!(b.on_result(ok, t0), None, "tripped at sample {i}");
+        }
+        assert_eq!(b.state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn breaker_probes_back_to_closed_after_cooldown() {
+        let t0 = Instant::now();
+        let mut b = BreakerCore::new(policy(), t0);
+        for _ in 0..4 {
+            b.on_result(false, t0);
+        }
+        assert_eq!(b.state(), BreakerState::Open);
+        // Before cooldown: blocked.
+        let (ok, tr) = b.allow(t0 + Duration::from_millis(50));
+        assert!(!ok && tr.is_none());
+        // After cooldown: half-open, first probe admitted.
+        let t1 = t0 + Duration::from_millis(150);
+        let (ok, tr) = b.allow(t1);
+        assert!(ok);
+        assert_eq!(tr, Some(BreakerState::HalfOpen));
+        // Second probe admitted, third blocked (probes = 2).
+        assert!(b.allow(t1).0);
+        assert!(!b.allow(t1).0);
+        // Both probes succeed → re-closed.
+        assert_eq!(b.on_result(true, t1), None);
+        assert_eq!(b.on_result(true, t1), Some(BreakerState::Closed));
+        assert!(b.allow(t1).0);
+    }
+
+    #[test]
+    fn breaker_reopens_when_probe_fails() {
+        let t0 = Instant::now();
+        let mut b = BreakerCore::new(policy(), t0);
+        for _ in 0..4 {
+            b.on_result(false, t0);
+        }
+        let t1 = t0 + Duration::from_millis(150);
+        assert!(b.allow(t1).0);
+        assert_eq!(b.on_result(false, t1), Some(BreakerState::Open));
+        // Cooldown restarts from the re-open instant.
+        assert!(!b.allow(t1 + Duration::from_millis(50)).0);
+        assert!(b.allow(t1 + Duration::from_millis(150)).0);
+    }
+
+    #[test]
+    fn breaker_window_slides_old_failures_out() {
+        let t0 = Instant::now();
+        let mut b = BreakerCore::new(policy(), t0);
+        // 3 failures then a long run of successes: the failures age out
+        // of the window and the ratio can no longer trip.
+        for _ in 0..3 {
+            b.on_result(false, t0);
+        }
+        for _ in 0..8 {
+            assert_eq!(b.on_result(true, t0), None);
+        }
+        // One more failure: window is now 7 ok + 1 fail — stays closed.
+        assert_eq!(b.on_result(false, t0), None);
+        assert_eq!(b.state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn restart_budget_grants_then_exhausts() {
+        let t0 = Instant::now();
+        let mut rb = RestartBudget::new(2, Duration::from_millis(10));
+        assert_eq!(rb.request(t0), Some(Duration::ZERO));
+        // Immediate second request is rate-limited to the interval.
+        let wait = rb.request(t0).expect("second respawn within budget");
+        assert_eq!(wait, Duration::from_millis(10));
+        // Third request: exhausted.
+        assert_eq!(rb.request(t0), None);
+        assert_eq!(rb.used(), 2);
+    }
+
+    #[test]
+    fn restart_budget_zero_always_escalates() {
+        let mut rb = RestartBudget::new(0, Duration::ZERO);
+        assert_eq!(rb.request(Instant::now()), None);
+    }
+
+    #[test]
+    fn restart_budget_spaced_requests_wait_nothing() {
+        let t0 = Instant::now();
+        let mut rb = RestartBudget::new(3, Duration::from_millis(10));
+        assert_eq!(rb.request(t0), Some(Duration::ZERO));
+        assert_eq!(
+            rb.request(t0 + Duration::from_millis(20)),
+            Some(Duration::ZERO)
+        );
+    }
+
+    #[test]
+    fn autoscale_decision_grows_shrinks_and_holds() {
+        let p = AutoscalePolicy {
+            max_workers: 3,
+            scale_up_wait: Duration::from_millis(2),
+            scale_down_wait: Duration::from_micros(200),
+            tick: Duration::from_millis(10),
+        };
+        // Pressure above the high watermark grows, up to the cap.
+        assert_eq!(autoscale_decision(&p, 1, Duration::from_millis(5)), Some(2));
+        assert_eq!(autoscale_decision(&p, 3, Duration::from_millis(5)), None);
+        // Idle pool shrinks, but never below one worker.
+        assert_eq!(
+            autoscale_decision(&p, 2, Duration::from_micros(100)),
+            Some(1)
+        );
+        assert_eq!(autoscale_decision(&p, 1, Duration::from_micros(100)), None);
+        // In the hysteresis band: hold.
+        assert_eq!(autoscale_decision(&p, 2, Duration::from_millis(1)), None);
+    }
+
+    #[test]
+    fn pressure_ewma_tracks_and_decays() {
+        let p = PressureEwma::new();
+        assert_eq!(p.us(), 0);
+        p.observe(8000);
+        assert_eq!(p.us(), 8000);
+        p.observe(8000);
+        assert_eq!(p.us(), 8000);
+        p.observe(0);
+        assert!(p.us() < 8000);
+        let before = p.us();
+        p.decay();
+        assert!(p.us() < before);
+    }
+
+    #[test]
+    fn default_config_disables_every_feature() {
+        let cfg = ResilienceConfig::default();
+        assert_eq!(cfg.retries, 0);
+        assert!(cfg.hedge_slack.is_none());
+        assert!(cfg.breaker.is_none());
+        assert_eq!(cfg.respawn_budget, 0);
+        assert!(cfg.autoscale.is_none());
+        assert!(cfg.degrade_queue_wait.is_none());
+    }
+}

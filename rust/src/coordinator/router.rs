@@ -98,6 +98,10 @@ pub struct RouteDecision {
     /// No measured variant satisfied the class; `variant` is the exact
     /// fallback.
     pub fallback: bool,
+    /// A cheaper satisfying variant existed but was unavailable (open
+    /// circuit breaker, queue pressure) — the request was degraded to
+    /// the next rung of the ladder.
+    pub degraded: bool,
 }
 
 /// Cheapest-first table of accuracy-characterized serving variants.
@@ -156,18 +160,42 @@ impl RoutingTable {
     /// Route one class: cheapest satisfying entry, else the exact
     /// fallback, else `None` (nothing servable for this class).
     pub fn select(&self, class: &AccuracyClass) -> Option<RouteDecision> {
+        self.select_with(class, |_| true)
+    }
+
+    /// Route one class through an availability predicate — the
+    /// degradation ladder. Satisfying-but-unavailable variants are
+    /// skipped (marking the decision [`RouteDecision::degraded`]); the
+    /// exact fallback is subject to the same predicate. `None` means
+    /// nothing both satisfies the class and is available right now —
+    /// the caller decides between shed (candidates exist, all
+    /// unavailable) and unroutable (no candidates at all).
+    pub fn select_with(
+        &self,
+        class: &AccuracyClass,
+        available: impl Fn(&str) -> bool,
+    ) -> Option<RouteDecision> {
+        let mut skipped = false;
         for e in &self.entries {
             if e.drop_vs_exact <= class.max_drop {
-                return Some(RouteDecision {
-                    variant: e.variant.clone(),
-                    fallback: false,
-                });
+                if available(&e.variant) {
+                    return Some(RouteDecision {
+                        variant: e.variant.clone(),
+                        fallback: false,
+                        degraded: skipped,
+                    });
+                }
+                skipped = true;
             }
         }
-        self.exact.as_ref().map(|v| RouteDecision {
-            variant: v.clone(),
-            fallback: true,
-        })
+        self.exact
+            .as_ref()
+            .filter(|v| available(v))
+            .map(|v| RouteDecision {
+                variant: v.clone(),
+                fallback: true,
+                degraded: skipped,
+            })
     }
 
     /// Entries, cheapest first (reporting and table-driven tests).
@@ -315,6 +343,50 @@ mod tests {
         // No exact served at all: the class is unroutable.
         let t = RoutingTable::new(vec![], None);
         assert!(t.select(&AccuracyClass::new("tight", 0.001)).is_none());
+    }
+
+    #[test]
+    fn select_with_skips_unavailable_and_flags_degraded() {
+        let t = table();
+        let cls = AccuracyClass::new("b", 0.02);
+        // Baseline: logour is the cheapest satisfying variant.
+        let d = t.select(&cls).unwrap();
+        assert_eq!(d.variant, "logour");
+        assert!(!d.degraded);
+        // logour unavailable: degrade to the next-cheapest satisfying
+        // variant (appro42), flagged.
+        let d = t.select_with(&cls, |v| v != "logour").unwrap();
+        assert_eq!(d.variant, "appro42");
+        assert!(d.degraded);
+        assert!(!d.fallback);
+        // Everything approximate unavailable: degrade all the way to the
+        // measured exact entry.
+        let d = t.select_with(&cls, |v| v == "exact").unwrap();
+        assert_eq!(d.variant, "exact");
+        assert!(d.degraded);
+        // Nothing available at all: None — caller sheds.
+        assert!(t.select_with(&cls, |_| false).is_none());
+    }
+
+    #[test]
+    fn select_with_availability_gates_the_exact_fallback_too() {
+        let t = RoutingTable::new(
+            vec![RouteEntry {
+                variant: "lm".into(),
+                drop_vs_exact: 0.05,
+                energy_per_op_j: 1.2e-12,
+            }],
+            Some("exact".into()),
+        );
+        let cls = AccuracyClass::new("tight", 0.001);
+        // Fallback reachable: flagged fallback, not degraded (nothing
+        // satisfying was skipped — lm never qualified).
+        let d = t.select_with(&cls, |_| true).unwrap();
+        assert_eq!(d.variant, "exact");
+        assert!(d.fallback);
+        assert!(!d.degraded);
+        // Fallback's breaker open: None.
+        assert!(t.select_with(&cls, |v| v != "exact").is_none());
     }
 
     #[test]

@@ -32,7 +32,8 @@ use std::time::{Duration, Instant};
 use super::admission::{Admission, AdmissionController};
 use super::batcher::BatchPolicy;
 use super::metrics::ServerMetrics;
-use super::pipeline::{spawn_shard, Health, QueuedRequest, ShardCtx, ShardPipeline};
+use super::pipeline::{spawn_shard, Health, QueuedRequest, ResponseSlot, ShardCtx, ShardPipeline};
+use super::resilience::{ResilienceConfig, ResilienceRuntime};
 use super::router::{AccuracyClass, HashRing, RoutingTable};
 use super::warmstart::{profile_for_variant, VariantProfile};
 use crate::runtime::backend::IMAGE_BYTES;
@@ -99,6 +100,11 @@ pub struct Response {
     pub logits: Vec<f32>,
     pub predicted: usize,
     pub variant: String,
+    /// True when the degradation ladder re-routed this class-routed
+    /// request off its first-choice variant (breaker open or queue-wait
+    /// pressure); the serving variant still satisfies the class unless
+    /// it is the flagged exact fallback.
+    pub degraded: bool,
 }
 
 /// Why an admitted request failed instead of completing.
@@ -194,6 +200,7 @@ pub struct InferenceServer {
     policy: BatchPolicy,
     queue_limit: usize,
     health: Arc<Health>,
+    res: Arc<ResilienceRuntime>,
     variant_names: Vec<String>,
     pub metrics: Arc<ServerMetrics>,
     pub admission: Arc<AdmissionController>,
@@ -248,11 +255,45 @@ impl InferenceServer {
         factory: Arc<dyn BackendFactory>,
         cfg: ServerConfig,
     ) -> Result<InferenceServer> {
+        Self::start_resilient(factory, cfg, ResilienceConfig::default())
+    }
+
+    /// [`Self::start_sharded`] plus the fault-tolerance + elasticity
+    /// layer ([`super::resilience`]): circuit breakers, retry/hedging,
+    /// the degradation ladder, executor self-healing and autoscaling,
+    /// each enabled by its knob in `res_cfg`. The default `res_cfg`
+    /// reproduces the legacy pipeline exactly.
+    pub fn start_resilient(
+        factory: Arc<dyn BackendFactory>,
+        cfg: ServerConfig,
+        res_cfg: ResilienceConfig,
+    ) -> Result<InferenceServer> {
+        // Degenerate configs get a clean error instead of undefined
+        // behavior (a zero-capacity channel would deadlock the batcher;
+        // a zero SLO expires everything before it can batch).
+        if cfg.shards == 0 {
+            bail!("server config: shards must be >= 1 (got 0)");
+        }
+        if cfg.queue_limit == 0 {
+            bail!("server config: queue_limit must be >= 1 (got 0)");
+        }
+        if cfg.policy.max_batch == 0 {
+            bail!("server config: max_batch must be >= 1 (got 0)");
+        }
+        if cfg.policy.slo.is_zero() {
+            bail!("server config: the server-wide SLO must be positive");
+        }
+        if let Some(a) = res_cfg.autoscale {
+            if a.max_workers == 0 {
+                bail!("resilience config: autoscale max_workers must be >= 1 (got 0)");
+            }
+        }
         let variants = factory.variants();
         if variants.is_empty() {
             bail!("backend factory exposes no variants");
         }
         let n_shards = cfg.shards.max(1);
+        let res = Arc::new(ResilienceRuntime::new(res_cfg, &variants, n_shards));
         let metrics = Arc::new(ServerMetrics::new());
         // ONE admission controller across shards keeps the per-variant
         // depth limit a server-wide property, independent of sharding.
@@ -279,6 +320,7 @@ impl InferenceServer {
                 queue_limit: cfg.queue_limit,
                 metrics: Arc::clone(&metrics),
                 health: Arc::clone(&health),
+                res: Arc::clone(&res),
                 ready: ready_tx.clone(),
             }) {
                 Ok(p) => shards.push(p),
@@ -320,6 +362,7 @@ impl InferenceServer {
             policy: cfg.policy,
             queue_limit: cfg.queue_limit,
             health,
+            res,
             variant_names: variants,
             metrics,
             admission,
@@ -362,7 +405,7 @@ impl InferenceServer {
             )));
         }
         let _admit = crate::obs::span("serve.admit");
-        let variant = match &req.route {
+        let (variant, degraded) = match &req.route {
             Route::Variant(v) => {
                 if !self.variant_names.iter().any(|n| n == v) {
                     return Err(SubmitError::Unroutable(format!(
@@ -370,24 +413,54 @@ impl InferenceServer {
                         self.variant_names
                     )));
                 }
-                v.clone()
+                // An explicitly-requested variant behind an open breaker
+                // fast-fails as a shed: there is no class budget to spend
+                // on re-routing it elsewhere.
+                if !self.res.allow(v) {
+                    crate::obs::counter("serve.breaker.fast_fail").inc();
+                    return Err(SubmitError::Shed {
+                        variant: v.clone(),
+                        depth: 0,
+                        limit: 0,
+                    });
+                }
+                (v.clone(), false)
             }
             Route::Class(class) => {
                 crate::obs::counter("serve.route.class_requests").inc();
-                match self.routing.select(class) {
+                // Degradation ladder: skip variants whose breaker is open
+                // or whose queue-wait pressure crossed the threshold;
+                // the decision is flagged `degraded` when the first
+                // choice was skipped. With resilience off the predicate
+                // is always true and this is plain `select`.
+                match self.routing.select_with(class, |v| self.res.routable(v)) {
                     Some(d) => {
                         if d.fallback {
                             crate::obs::counter("serve.route.fallback_exact").inc();
                         }
+                        if d.degraded {
+                            crate::obs::counter("serve.degrade.rerouted").inc();
+                        }
                         crate::obs::counter(&format!("serve.route.to.{}", d.variant)).inc();
-                        d.variant
+                        (d.variant, d.degraded)
                     }
                     None => {
+                        // Only shed when variants satisfying the class
+                        // exist but none is currently available — a class
+                        // nothing satisfies is unroutable, not shed.
+                        if self.routing.select(class).is_some() {
+                            crate::obs::counter("serve.degrade.shed_no_candidate").inc();
+                            return Err(SubmitError::Shed {
+                                variant: format!("class:{}", class.name),
+                                depth: 0,
+                                limit: 0,
+                            });
+                        }
                         return Err(SubmitError::Unroutable(format!(
                             "no servable variant satisfies accuracy class {:?} \
                              (max drop {}) and no exact fallback is served",
                             class.name, class.max_drop
-                        )))
+                        )));
                     }
                 }
             }
@@ -415,20 +488,44 @@ impl InferenceServer {
             }
         };
         let now = Instant::now();
-        let deadline = now + req.slo.unwrap_or(self.policy.slo);
+        let slo = req.slo.unwrap_or(self.policy.slo);
+        let deadline = now + slo;
+        // Hedging: when configured and the deadline has enough slack, a
+        // bit-identical copy of the request runs on a second shard; the
+        // slots share a claim so exactly one delivers (first success
+        // wins, the duplicate is discarded in the responder).
+        let hedge = match self.res.cfg.hedge_slack {
+            Some(th) if self.shards.len() > 1 && slo >= th => {
+                let (primary, hedge) = ResponseSlot::hedged_pair(req.respond);
+                Some((primary, hedge))
+            }
+            _ => None,
+        };
+        let (respond, hedge_slot) = match hedge {
+            Some((primary, hedge)) => (primary, Some(hedge)),
+            None => (ResponseSlot::direct(req.respond), None),
+        };
+        let hedge_image = hedge_slot.as_ref().map(|_| req.image.clone());
         let queued = QueuedRequest {
             image: req.image,
-            respond: req.respond,
+            respond,
             enqueued: now,
             deadline,
             stamps,
-            _ticket: ticket,
+            degraded,
+            _ticket: Some(ticket),
         };
         match self.shards[shard].ingress[&variant].try_send(queued) {
-            Ok(()) => Ok(()),
+            Ok(()) => {
+                if let (Some(hslot), Some(image)) = (hedge_slot, hedge_image) {
+                    self.issue_hedge(shard, &variant, image, hslot, now, deadline, degraded);
+                }
+                Ok(())
+            }
             Err(TrySendError::Full(dropped)) => {
                 // Backpressure past admission (shard ingress at capacity):
-                // shed, releasing the ticket.
+                // shed, releasing the ticket. The unissued hedge slot (if
+                // any) drops with its claim unexercised.
                 complete_shed(dropped.stamps, shard as u32, &variant);
                 drop(dropped);
                 self.admission.note_shed();
@@ -439,6 +536,40 @@ impl InferenceServer {
                 })
             }
             Err(TrySendError::Disconnected(_)) => Err(SubmitError::ShuttingDown),
+        }
+    }
+
+    /// Best-effort enqueue of the hedged copy on the next shard over. A
+    /// bounced hedge (ingress full, shard gone) cancels its slot so the
+    /// primary's failure disposition is unaffected — hedging only ever
+    /// adds a second chance, never a second failure mode.
+    #[allow(clippy::too_many_arguments)]
+    fn issue_hedge(
+        &self,
+        primary_shard: usize,
+        variant: &str,
+        image: Vec<u8>,
+        slot: ResponseSlot,
+        enqueued: Instant,
+        deadline: Instant,
+        degraded: bool,
+    ) {
+        let shard = (primary_shard + 1) % self.shards.len();
+        let queued = QueuedRequest {
+            image,
+            respond: slot,
+            enqueued,
+            deadline,
+            stamps: crate::obs::StageStamps::default(),
+            degraded,
+            _ticket: None,
+        };
+        match self.shards[shard].ingress[variant].try_send(queued) {
+            Ok(()) => crate::obs::counter("serve.hedge.issued").inc(),
+            Err(TrySendError::Full(bounced)) | Err(TrySendError::Disconnected(bounced)) => {
+                bounced.respond.cancel();
+                crate::obs::counter("serve.hedge.cancelled").inc();
+            }
         }
     }
 

@@ -116,6 +116,19 @@
 //! (`--ignored`), and benchmarked by `cargo bench --bench serving`
 //! (`BENCH_serving.json`). See DESIGN.md §"Sharded serving".
 //!
+//! On top sits a fault-tolerance + elasticity layer
+//! ([`coordinator::ResilienceConfig`], everything off by default):
+//! retry-with-backoff for transient execute failures (`--retries`),
+//! deadline-slack hedging onto a second shard with claim-based
+//! exactly-once delivery (`--hedge`), per-variant circuit breakers and a
+//! class-routing degradation ladder (`--breaker`), panicked-executor
+//! respawn under a rate-limited restart budget (`--respawn`; exhaustion
+//! still exits non-zero), and queue-pressure worker autoscaling
+//! (`--autoscale`). Proven under seeded fault plans
+//! ([`runtime::FaultPlan`], `openacm serve --chaos SEED`) by the chaos
+//! property suite in `rust/tests/chaos.rs`. See DESIGN.md §"Fault
+//! tolerance & elasticity".
+//!
 //! ## The compile pass
 //!
 //! [`compile`] closes the loop from "accuracy budget in" to "deployable

@@ -44,6 +44,16 @@ COMMANDS:
              N requests  [--obs-dir DIR]
              [--plan FILE.acmplan]  serve a compiled heterogeneous plan as
              the "plan" variant (native per-layer LUT dispatch)
+             [--threads N]  execution-pool thread budget
+             resilience (all off by default):
+             [--retries N]  retry transient execute failures with backoff
+             [--hedge MS]  hedge requests with ≥ MS deadline slack onto a
+             second shard (first success wins)  [--breaker]  per-variant
+             circuit breakers + degradation ladder  [--respawn N]
+             panicked-executor restart budget  [--autoscale N]  grow each
+             executor pool to ≤ N workers under queue-wait pressure
+             [--chaos SEED]  serve the fixture menu under a seeded fault
+             plan (chaos smoke for the above)
   obs        Inspect the telemetry sink:
              snapshot | tail | diff | trace | health | regress
              [--dir DIR] [--n K] [--json]  (see also OPENACM_TRACE)
@@ -74,6 +84,7 @@ fn main() -> Result<()> {
             "follow",
             "failed",
             "times",
+            "breaker",
         ],
     )?;
     match args.command.as_deref() {

@@ -384,12 +384,28 @@ fn cmd_health(dir: &Path, args: &Args) -> Result<()> {
         .iter()
         .filter(|(k, _)| k.starts_with("serve.slo."))
         .collect();
-    let worst_state = slo_gauges
+    let worst_slo_state = slo_gauges
         .iter()
         .filter(|(k, _)| k.ends_with(".state"))
         .map(|&(_, v)| *v)
         .max()
         .unwrap_or(0);
+    // A circuit breaker stuck open (`serve.breaker.<variant>.state` = 2)
+    // means a variant is ejected from routing and not recovering — treat
+    // it exactly like an objective burning at error rate.
+    let open_breakers: Vec<&String> = snap
+        .gauges
+        .iter()
+        .filter(|(k, v)| {
+            k.starts_with("serve.breaker.") && k.ends_with(".state") && **v >= 2
+        })
+        .map(|(k, _)| k)
+        .collect();
+    let worst_state = if open_breakers.is_empty() {
+        worst_slo_state
+    } else {
+        worst_slo_state.max(2)
+    };
     let latency = snap.histograms.get("serve.latency_us");
     let p99 = latency.map(|h| h.percentile(99.0)).unwrap_or(0);
     let exemplar = latency.and_then(|h| h.exemplar_near_percentile(99.0));
@@ -402,6 +418,14 @@ fn cmd_health(dir: &Path, args: &Args) -> Result<()> {
         fields.push(format!(
             "  \"latency_p99_exemplar_trace\": {}",
             exemplar.unwrap_or(0)
+        ));
+        fields.push(format!(
+            "  \"open_breakers\": [{}]",
+            open_breakers
+                .iter()
+                .map(|k| format!("\"{k}\""))
+                .collect::<Vec<_>>()
+                .join(", ")
         ));
         fields.push(format!("  \"worst_state\": {worst_state}"));
         println!("{{\n{}\n}}", fields.join(",\n"));
@@ -419,6 +443,9 @@ fn cmd_health(dir: &Path, args: &Args) -> Result<()> {
         match exemplar {
             Some(id) => println!("serve.latency_us p99 = {p99}us (exemplar trace {id})"),
             None => println!("serve.latency_us p99 = {p99}us"),
+        }
+        for k in &open_breakers {
+            println!("BURNING: circuit breaker stuck open ({k} = 2)");
         }
     }
     if worst_state >= 2 {

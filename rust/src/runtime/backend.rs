@@ -36,12 +36,14 @@
 //! `--backend native` force the choice ([`BackendChoice`]).
 
 use anyhow::{bail, Context, Result};
-use std::collections::{BTreeMap, BTreeSet};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::path::{Path, PathBuf};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use super::artifacts::ArtifactStore;
 use super::client;
+use super::fault::{Fault, FaultPlan};
 use crate::compile::plan::{CompiledPlan, PlanLuts};
 use crate::mult::behavioral::{int8_lut, paper_families};
 use crate::nn::eval::argmax;
@@ -92,6 +94,14 @@ pub trait BackendFactory: Send + Sync {
 
     /// Build the backend for one variant. Called on the worker thread.
     fn create(&self, variant: &str) -> Result<Box<dyn Backend>>;
+
+    /// Build the backend for one variant on a specific shard. The
+    /// sharded pipeline (including executor respawns) calls this;
+    /// backends that key deterministic behavior by shard — the fixture
+    /// fault injector — override it, everything else ignores the shard.
+    fn create_for_shard(&self, _shard: usize, variant: &str) -> Result<Box<dyn Backend>> {
+        self.create(variant)
+    }
 }
 
 /// Which backend `openacm serve` / the e2e example should use.
@@ -454,6 +464,30 @@ pub struct FixtureBackend {
     max_batch: usize,
     fail_on_byte: Option<u8>,
     panic_on_byte: Option<u8>,
+    fault: Option<FaultInjector>,
+}
+
+/// Per-backend handle into a [`FaultPlan`]: the call counter lives in
+/// the factory keyed by shard×variant, so a respawned executor resumes
+/// the fault timeline where its predecessor died instead of replaying
+/// the same storm forever.
+struct FaultInjector {
+    plan: Arc<FaultPlan>,
+    shard: usize,
+    calls: Arc<AtomicU64>,
+}
+
+impl FaultInjector {
+    /// Advance the call sequence; sleeps the scheduled delay and
+    /// returns the fault this call must raise.
+    fn tick(&self, variant: &str) -> Fault {
+        let call = self.calls.fetch_add(1, Ordering::Relaxed);
+        let (fault, delay_us) = self.plan.decide(self.shard, variant, call);
+        if delay_us > 0 {
+            std::thread::sleep(FaultPlan::delay_of(delay_us));
+        }
+        fault
+    }
 }
 
 impl Backend for FixtureBackend {
@@ -472,6 +506,20 @@ impl Backend for FixtureBackend {
                 images.len(),
                 self.max_batch
             );
+        }
+        if let Some(inj) = &self.fault {
+            match inj.tick(&self.variant) {
+                Fault::Panic => panic!(
+                    "injected chaos panic (variant {}, shard {})",
+                    self.variant, inj.shard
+                ),
+                Fault::Error => bail!(
+                    "injected chaos failure (variant {}, shard {})",
+                    self.variant,
+                    inj.shard
+                ),
+                Fault::None => {}
+            }
         }
         for (i, img) in images.iter().enumerate() {
             if img.len() != IMAGE_BYTES {
@@ -497,6 +545,10 @@ pub struct FixtureFactory {
     max_batch: usize,
     fail_on_byte: Option<u8>,
     panic_on_byte: Option<u8>,
+    fault_plan: Option<Arc<FaultPlan>>,
+    /// shard×variant → shared call counter, so respawned backends
+    /// continue the fault timeline instead of restarting it.
+    fault_calls: Mutex<HashMap<(usize, String), Arc<AtomicU64>>>,
 }
 
 impl FixtureFactory {
@@ -506,6 +558,8 @@ impl FixtureFactory {
             max_batch: max_batch.max(1),
             fail_on_byte: None,
             panic_on_byte: None,
+            fault_plan: None,
+            fault_calls: Mutex::new(HashMap::new()),
         }
     }
 
@@ -521,6 +575,37 @@ impl FixtureFactory {
     pub fn panic_on_byte(mut self, b: u8) -> FixtureFactory {
         self.panic_on_byte = Some(b);
         self
+    }
+
+    /// Drive every backend this factory builds from a seeded
+    /// [`FaultPlan`] (in addition to any byte-keyed faults).
+    pub fn with_fault_plan(mut self, plan: FaultPlan) -> FixtureFactory {
+        self.fault_plan = Some(Arc::new(plan));
+        self
+    }
+
+    fn build(&self, shard: usize, variant: &str) -> Result<Box<dyn Backend>> {
+        if !self.variants.iter().any(|v| v == variant) {
+            bail!("no fixture variant {variant:?}");
+        }
+        let fault = self.fault_plan.as_ref().map(|plan| FaultInjector {
+            plan: Arc::clone(plan),
+            shard,
+            calls: Arc::clone(
+                self.fault_calls
+                    .lock()
+                    .unwrap()
+                    .entry((shard, variant.to_string()))
+                    .or_default(),
+            ),
+        });
+        Ok(Box::new(FixtureBackend {
+            variant: variant.to_string(),
+            max_batch: self.max_batch,
+            fail_on_byte: self.fail_on_byte,
+            panic_on_byte: self.panic_on_byte,
+            fault,
+        }))
     }
 }
 
@@ -538,15 +623,11 @@ impl BackendFactory for FixtureFactory {
     }
 
     fn create(&self, variant: &str) -> Result<Box<dyn Backend>> {
-        if !self.variants.iter().any(|v| v == variant) {
-            bail!("no fixture variant {variant:?}");
-        }
-        Ok(Box::new(FixtureBackend {
-            variant: variant.to_string(),
-            max_batch: self.max_batch,
-            fail_on_byte: self.fail_on_byte,
-            panic_on_byte: self.panic_on_byte,
-        }))
+        self.build(0, variant)
+    }
+
+    fn create_for_shard(&self, shard: usize, variant: &str) -> Result<Box<dyn Backend>> {
+        self.build(shard, variant)
     }
 }
 

@@ -1,0 +1,273 @@
+//! Seeded, deterministic fault plans for the fixture backend.
+//!
+//! The byte-keyed faults on [`super::FixtureBackend`] place a single
+//! error or panic at an exact request; chaos testing needs *temporal*
+//! fault shapes — bursts, storms, skew — that unfold over a call
+//! sequence. A [`FaultPlan`] describes those shapes as pure arithmetic
+//! over `(shard, variant, call_index)`, so a plan plus a seed replays
+//! the identical fault timeline on every run: the chaos suite in
+//! `rust/tests/chaos.rs` and the `serve --chaos` smoke both assert
+//! against deliveries produced under a known schedule.
+//!
+//! Call indices are tracked per shard×variant by the factory and
+//! survive executor respawns, so a panic storm is a bounded window of
+//! *calls*, not an infinite loop: the respawned backend resumes the
+//! sequence where its predecessor died.
+
+use std::time::Duration;
+
+/// What a single `infer_batch` call should do.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    None,
+    /// Return `Err` (the `ExecuteFailed` / retry path).
+    Error,
+    /// Panic the executor (the respawn / `Health` path).
+    Panic,
+}
+
+/// Transient-error bursts: `len` consecutive failing calls starting at
+/// `start`, repeating every `period` calls (`period == 0` = one-shot).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TransientBursts {
+    pub start: u64,
+    pub len: u64,
+    pub period: u64,
+}
+
+/// Latency spikes: roughly one call in `every` sleeps `delay_us` before
+/// answering, chosen by a seeded hash so spikes decorrelate across
+/// shards and variants.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LatencySpike {
+    pub every: u64,
+    pub delay_us: u64,
+}
+
+/// Panic storm: calls `[start, start + panics)` panic the executor.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PanicStorm {
+    pub start: u64,
+    pub panics: u64,
+}
+
+/// One-slow-shard skew: every call on `shard` sleeps `delay_us`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SlowShard {
+    pub shard: usize,
+    pub delay_us: u64,
+}
+
+/// A deterministic fault schedule over `(shard, variant, call)`.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// When set, injected errors/panics hit only this variant (delays
+    /// still apply everywhere) — lets a chaos scenario fault the cheap
+    /// variant while the exact fallback stays healthy.
+    pub variant: Option<String>,
+    pub transient: Option<TransientBursts>,
+    pub latency: Option<LatencySpike>,
+    pub panic_storm: Option<PanicStorm>,
+    pub slow_shard: Option<SlowShard>,
+    /// Uniform per-call service time (µs), for load-shaping scenarios.
+    pub exec_delay_us: u64,
+}
+
+impl FaultPlan {
+    /// The moderate preset behind `openacm serve --chaos SEED`: periodic
+    /// transient bursts, a short panic storm, occasional latency spikes,
+    /// and a mildly slow shard 0 — all recoverable with a few retries
+    /// and a small respawn budget.
+    pub fn chaos_default(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            variant: None,
+            transient: Some(TransientBursts {
+                start: 10,
+                len: 2,
+                period: 24,
+            }),
+            latency: Some(LatencySpike {
+                every: 32,
+                delay_us: 400,
+            }),
+            panic_storm: Some(PanicStorm {
+                start: 17,
+                panics: 1,
+            }),
+            slow_shard: Some(SlowShard {
+                shard: 0,
+                delay_us: 150,
+            }),
+            exec_delay_us: 0,
+        }
+    }
+
+    /// Decide what call number `call` on `shard`/`variant` does:
+    /// returns the fault (panic beats error) and the pre-answer delay
+    /// in µs. Pure — same inputs, same answer, on every run.
+    pub fn decide(&self, shard: usize, variant: &str, call: u64) -> (Fault, u64) {
+        let mut delay = self.exec_delay_us;
+        if let Some(s) = self.slow_shard {
+            if s.shard == shard {
+                delay += s.delay_us;
+            }
+        }
+        if let Some(l) = self.latency {
+            if l.every > 0 && mix(self.seed, shard as u64, hash_str(variant), call) % l.every == 0
+            {
+                delay += l.delay_us;
+            }
+        }
+        let scoped = match &self.variant {
+            Some(v) => v == variant,
+            None => true,
+        };
+        if scoped {
+            if let Some(p) = self.panic_storm {
+                if p.panics > 0 && call >= p.start && call < p.start + p.panics {
+                    return (Fault::Panic, delay);
+                }
+            }
+            if let Some(t) = self.transient {
+                let in_burst = t.len > 0
+                    && call >= t.start
+                    && if t.period == 0 {
+                        call < t.start + t.len
+                    } else {
+                        (call - t.start) % t.period < t.len
+                    };
+                if in_burst {
+                    return (Fault::Error, delay);
+                }
+            }
+        }
+        (Fault::None, delay)
+    }
+
+    /// The delay for `decide` as a [`Duration`], for sleep call sites.
+    pub fn delay_of(us: u64) -> Duration {
+        Duration::from_micros(us)
+    }
+}
+
+fn hash_str(s: &str) -> u64 {
+    s.bytes().fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x1000_0000_01b3)
+    })
+}
+
+/// splitmix64-style mixer over the plan seed and call coordinates.
+fn mix(seed: u64, a: u64, b: u64, c: u64) -> u64 {
+    let mut z = seed
+        .wrapping_add(a.wrapping_mul(0x9e37_79b9_7f4a_7c15))
+        .wrapping_add(b.rotate_left(23))
+        .wrapping_add(c.wrapping_mul(0xbf58_476d_1ce4_e5b9));
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_shot_burst_covers_exactly_its_window() {
+        let plan = FaultPlan {
+            transient: Some(TransientBursts {
+                start: 5,
+                len: 3,
+                period: 0,
+            }),
+            ..FaultPlan::default()
+        };
+        for call in 0..20 {
+            let (fault, _) = plan.decide(0, "exact", call);
+            let expect = if (5..8).contains(&call) {
+                Fault::Error
+            } else {
+                Fault::None
+            };
+            assert_eq!(fault, expect, "call {call}");
+        }
+    }
+
+    #[test]
+    fn periodic_bursts_repeat_and_panic_wins_over_error() {
+        let plan = FaultPlan {
+            transient: Some(TransientBursts {
+                start: 0,
+                len: 2,
+                period: 8,
+            }),
+            panic_storm: Some(PanicStorm {
+                start: 8,
+                panics: 1,
+            }),
+            ..FaultPlan::default()
+        };
+        assert_eq!(plan.decide(0, "v", 0).0, Fault::Error);
+        assert_eq!(plan.decide(0, "v", 1).0, Fault::Error);
+        assert_eq!(plan.decide(0, "v", 2).0, Fault::None);
+        // Call 8 is both burst-start and storm-start: panic wins.
+        assert_eq!(plan.decide(0, "v", 8).0, Fault::Panic);
+        assert_eq!(plan.decide(0, "v", 9).0, Fault::Error);
+        assert_eq!(plan.decide(0, "v", 16).0, Fault::Error);
+    }
+
+    #[test]
+    fn variant_scope_gates_faults_but_not_delays() {
+        let plan = FaultPlan {
+            variant: Some("cheap".to_string()),
+            transient: Some(TransientBursts {
+                start: 0,
+                len: 100,
+                period: 0,
+            }),
+            slow_shard: Some(SlowShard {
+                shard: 1,
+                delay_us: 50,
+            }),
+            ..FaultPlan::default()
+        };
+        assert_eq!(plan.decide(0, "cheap", 3).0, Fault::Error);
+        assert_eq!(plan.decide(0, "exact", 3).0, Fault::None);
+        // The slow-shard delay applies to every variant.
+        assert_eq!(plan.decide(1, "exact", 3).1, 50);
+        assert_eq!(plan.decide(0, "exact", 3).1, 0);
+    }
+
+    #[test]
+    fn decide_is_deterministic_across_replays() {
+        let plan = FaultPlan::chaos_default(42);
+        for call in 0..200 {
+            for shard in 0..2 {
+                assert_eq!(
+                    plan.decide(shard, "appro42", call),
+                    plan.decide(shard, "appro42", call)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn latency_spikes_hit_roughly_one_in_every() {
+        let plan = FaultPlan {
+            seed: 7,
+            latency: Some(LatencySpike {
+                every: 16,
+                delay_us: 100,
+            }),
+            ..FaultPlan::default()
+        };
+        let spikes = (0..1600)
+            .filter(|&c| plan.decide(0, "exact", c).1 > 0)
+            .count();
+        assert!(
+            (40..=220).contains(&spikes),
+            "expected ~100 spikes in 1600 calls, got {spikes}"
+        );
+    }
+}

@@ -18,10 +18,12 @@
 pub mod client;
 pub mod artifacts;
 pub mod backend;
+pub mod fault;
 
 pub use artifacts::ArtifactStore;
 pub use backend::{
     fixture_logits, Backend, BackendChoice, BackendFactory, FixtureBackend, FixtureFactory,
     NativeBackend, NativeFactory, PjrtBackend, PjrtFactory, ServingWorkload,
 };
+pub use fault::{Fault, FaultPlan, LatencySpike, PanicStorm, SlowShard, TransientBursts};
 pub use client::{CompiledModel, Runtime};

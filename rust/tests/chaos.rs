@@ -1,0 +1,595 @@
+//! Seeded chaos harness for the fault-tolerance + elasticity layer
+//! ([`openacm::coordinator::resilience`]): every scenario drives a live
+//! sharded server over a deterministic [`FaultPlan`] and checks the hard
+//! invariants the resilience layer must never trade away:
+//!
+//! * **exact accounting** — every admitted request gets exactly one
+//!   [`Delivery`]; `ok + failed == admitted` under every plan;
+//! * **bit-identical deliveries** — a delivered `Ok` always bit-matches
+//!   the pure reference [`fixture_logits`] of (serving variant, image),
+//!   fault plan or not: retries, respawns and hedges never corrupt data;
+//! * **zero duplicate deliveries** — hedged duplicates are discarded
+//!   internally; a client channel sees at most one message;
+//! * **recovery to steady state** — once a one-shot fault window is
+//!   exhausted the pipeline returns to full-throughput fault-free
+//!   serving (self-healed executors, re-closed breakers).
+//!
+//! Scenarios: transient-burst retry recovery; panic-storm self-healing;
+//! restart-budget exhaustion escalating to [`Health`]; latency/skew
+//! bit-exactness; breaker ejection → degraded re-route → re-close;
+//! hedging exactly-once; randomized seeded plans; a resilient soak with
+//! a pre/post-fault throughput comparison and constant metrics memory.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use openacm::coordinator::batcher::BatchPolicy;
+use openacm::coordinator::router::AccuracyClass;
+use openacm::coordinator::server::{
+    Delivery, InferenceServer, Request, Route, ServerConfig, SubmitError,
+};
+use openacm::coordinator::warmstart::VariantProfile;
+use openacm::coordinator::{AutoscalePolicy, BreakerPolicy, ResilienceConfig};
+use openacm::runtime::{
+    fixture_logits, FaultPlan, FixtureFactory, LatencySpike, PanicStorm, SlowShard, TransientBursts,
+};
+use openacm::util::rng::Pcg32;
+
+/// Deterministic 256-byte payload pool; the high bit (and the byte-keyed
+/// injection values 0xEE/0xDD) never appear, so the only faults in play
+/// are the ones the seeded plan schedules.
+fn images(n: usize, seed: u64) -> Vec<Vec<u8>> {
+    let mut rng = Pcg32::new(seed);
+    (0..n)
+        .map(|_| (0..256).map(|_| (rng.next_u64() & 0x7f) as u8).collect())
+        .collect()
+}
+
+fn bits(logits: &[f32]) -> Vec<u32> {
+    logits.iter().map(|x| x.to_bits()).collect()
+}
+
+/// An SLO no healthy request will miss: chaos scenarios prove recovery
+/// and accounting, not deadline behavior (covered in serving_shard.rs).
+fn lax_policy(max_batch: usize) -> BatchPolicy {
+    BatchPolicy {
+        max_batch,
+        max_wait: Duration::from_millis(1),
+        slo: Duration::from_secs(60),
+        ..BatchPolicy::default()
+    }
+}
+
+/// Stand up a resilient server over the fixture menu + fault plan.
+fn chaos_server(
+    menu: &[&str],
+    plan: FaultPlan,
+    shards: usize,
+    max_batch: usize,
+    queue_limit: usize,
+    res: ResilienceConfig,
+) -> InferenceServer {
+    InferenceServer::start_resilient(
+        Arc::new(FixtureFactory::new(menu, max_batch).with_fault_plan(plan)),
+        ServerConfig {
+            shards,
+            policy: lax_policy(max_batch),
+            queue_limit,
+        },
+        res,
+    )
+    .expect("chaos server boots")
+}
+
+/// Submit under maximum pressure, rebuilding and retrying the request
+/// while the server sheds (the pipeline keeps draining, so admission
+/// capacity always frees up; any other error is a test failure).
+fn submit_retrying(server: &InferenceServer, make: impl Fn() -> Request) {
+    let mut spins = 0u64;
+    loop {
+        match server.submit(make()) {
+            Ok(()) => return,
+            Err(SubmitError::Shed { .. }) => {
+                spins += 1;
+                assert!(spins < 50_000_000, "submit retry loop stuck on shed");
+                std::thread::yield_now();
+            }
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Transient bursts: retries absorb them completely
+// ---------------------------------------------------------------------------
+
+#[test]
+fn transient_burst_is_absorbed_by_retries() {
+    // One-shot burst of 3 failing calls starting at call 5; 4 retries
+    // give every batch up to 5 attempts — more than the burst length.
+    let plan = FaultPlan {
+        seed: 0xB00,
+        transient: Some(TransientBursts {
+            start: 5,
+            len: 3,
+            period: 0,
+        }),
+        ..FaultPlan::default()
+    };
+    let res = ResilienceConfig {
+        retries: 4,
+        retry_backoff: Duration::from_micros(100),
+        ..ResilienceConfig::default()
+    };
+    let recovered_before = openacm::obs::counter("serve.retry.recovered").value();
+    let server = chaos_server(&["exact"], plan, 1, 1, 64, res);
+    for img in images(30, 0x7A1) {
+        let r = server
+            .infer(img.clone(), "exact")
+            .expect("retries must absorb the transient burst");
+        assert_eq!(
+            bits(&r.logits),
+            bits(&fixture_logits("exact", &img)),
+            "retried delivery must stay bit-identical"
+        );
+    }
+    assert!(server.healthy(), "transient faults never mark unhealthy");
+    let recovered = openacm::obs::counter("serve.retry.recovered").value() - recovered_before;
+    assert!(recovered >= 1, "at least one batch must recover via retry");
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Panic storm: executor self-healing under a restart budget
+// ---------------------------------------------------------------------------
+
+#[test]
+fn panic_storm_respawns_executor_and_keeps_delivering() {
+    let plan = FaultPlan {
+        seed: 0xB01,
+        panic_storm: Some(PanicStorm {
+            start: 5,
+            panics: 2,
+        }),
+        ..FaultPlan::default()
+    };
+    let res = ResilienceConfig {
+        retries: 4,
+        respawn_budget: 6,
+        respawn_min_interval: Duration::ZERO,
+        ..ResilienceConfig::default()
+    };
+    let respawns_before = openacm::obs::counter("serve.executor.respawns").value();
+    let server = chaos_server(&["exact"], plan, 1, 1, 64, res);
+    for img in images(30, 0x7A2) {
+        let r = server
+            .infer(img.clone(), "exact")
+            .expect("the respawned executor must keep serving");
+        assert_eq!(bits(&r.logits), bits(&fixture_logits("exact", &img)));
+    }
+    assert!(
+        server.healthy(),
+        "respawns within budget must not escalate to Health: {:?}",
+        server.failure()
+    );
+    let respawns = openacm::obs::counter("serve.executor.respawns").value() - respawns_before;
+    assert!(respawns >= 2, "both storm panics respawn (saw {respawns})");
+    server.shutdown();
+}
+
+#[test]
+fn respawn_budget_exhaustion_escalates_to_health() {
+    // A storm longer than the budget: 2 respawns are granted, the third
+    // panic poisons the worker and reports through `Health` so `openacm
+    // serve` exits non-zero. Admitted requests still each get exactly
+    // one delivery (fail-fast after poisoning).
+    let plan = FaultPlan {
+        seed: 0xB02,
+        panic_storm: Some(PanicStorm {
+            start: 2,
+            panics: 50,
+        }),
+        ..FaultPlan::default()
+    };
+    let res = ResilienceConfig {
+        respawn_budget: 2,
+        respawn_min_interval: Duration::ZERO,
+        ..ResilienceConfig::default()
+    };
+    let server = chaos_server(&["exact"], plan, 1, 1, 64, res);
+    let (mut ok, mut failed) = (0usize, 0usize);
+    for img in images(8, 0x7A3) {
+        match server.infer(img, "exact") {
+            Ok(_) => ok += 1,
+            Err(e) => {
+                assert!(
+                    e.to_string().contains("worker panicked"),
+                    "failure must carry the panic reason, got: {e:#}"
+                );
+                failed += 1;
+            }
+        }
+    }
+    // Calls 0 and 1 precede the storm; every later blocking request
+    // fails (each infer returned exactly once — the accounting identity
+    // for this serialized drive).
+    assert_eq!((ok, failed), (2, 6));
+    assert!(!server.healthy(), "an exhausted budget must be fatal");
+    let why = server.failure().expect("health must carry the reason");
+    assert!(
+        why.contains("restart budget exhausted"),
+        "failure must name the exhausted budget, got: {why}"
+    );
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Latency spikes + one slow shard: skew never corrupts data
+// ---------------------------------------------------------------------------
+
+#[test]
+fn latency_spikes_and_slow_shard_stay_bit_exact() {
+    const MENU: [&str; 2] = ["appro42", "exact"];
+    let plan = FaultPlan {
+        seed: 0xB03,
+        latency: Some(LatencySpike {
+            every: 4,
+            delay_us: 1_500,
+        }),
+        slow_shard: Some(SlowShard {
+            shard: 0,
+            delay_us: 800,
+        }),
+        ..FaultPlan::default()
+    };
+    let server = chaos_server(&MENU, plan, 2, 8, 256, ResilienceConfig::default());
+    let imgs = images(32, 0x7A4);
+    let (tx, rx) = channel();
+    let mut expect: HashMap<(String, Vec<u32>), i64> = HashMap::new();
+    let n = 200usize;
+    for i in 0..n {
+        let img = imgs[i % imgs.len()].clone();
+        let variant = MENU[i % MENU.len()];
+        *expect
+            .entry((variant.to_string(), bits(&fixture_logits(variant, &img))))
+            .or_default() += 1;
+        submit_retrying(&server, || {
+            Request::to_variant(imgs[i % imgs.len()].clone(), variant, tx.clone())
+        });
+    }
+    for _ in 0..n {
+        match rx.recv().expect("exactly one delivery per admitted request") {
+            Delivery::Ok(resp) => {
+                let k = (resp.variant.clone(), bits(&resp.logits));
+                let left = expect.get_mut(&k).expect("delivery matches a submission");
+                *left -= 1;
+                assert!(*left >= 0, "duplicate delivery for {:?}", k.0);
+            }
+            Delivery::Failed(reason) => panic!("delays alone must not fail requests: {reason}"),
+        }
+    }
+    assert!(expect.values().all(|&v| v == 0), "all submissions delivered");
+    assert!(server.healthy());
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Breaker: eject the faulted variant, degrade class traffic, re-close
+// ---------------------------------------------------------------------------
+
+#[test]
+fn breaker_ejects_faulted_variant_degrades_and_recloses() {
+    const MENU: [&str; 2] = ["appro42", "exact"];
+    // Fault only the cheap variant: 6 one-shot failures, enough to trip
+    // the breaker (min 4 samples) and eat the first two probes.
+    let plan = FaultPlan {
+        seed: 0xB04,
+        variant: Some("appro42".to_string()),
+        transient: Some(TransientBursts {
+            start: 0,
+            len: 6,
+            period: 0,
+        }),
+        ..FaultPlan::default()
+    };
+    let res = ResilienceConfig {
+        breaker: Some(BreakerPolicy {
+            window: 8,
+            min_samples: 4,
+            failure_ratio: 0.5,
+            cooldown: Duration::from_millis(50),
+            probes: 2,
+        }),
+        ..ResilienceConfig::default()
+    };
+    let opened_before = openacm::obs::counter("serve.breaker.opened").value();
+    let reclosed_before = openacm::obs::counter("serve.breaker.reclosed").value();
+    let mut server = chaos_server(&MENU, plan, 1, 1, 64, res);
+    // Give class routing a measured cheap rung below the exact fallback.
+    let mut profiles: BTreeMap<String, VariantProfile> = BTreeMap::new();
+    profiles.insert(
+        "appro42".to_string(),
+        VariantProfile {
+            family: "appro42[chaos]".to_string(),
+            nmed: None,
+            energy_per_op_j: Some(1e-12),
+            logic_area_um2: None,
+            calib_top1: None,
+            calib_drop: Some(0.005),
+            records: 1,
+        },
+    );
+    server.attach_profiles(profiles);
+    let class = AccuracyClass::new("bronze", 0.02);
+    let img = images(1, 0x7A5).remove(0);
+
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut saw_failure = false;
+    let mut saw_degraded_fallback = false;
+    let mut recovered = false;
+    while Instant::now() < deadline {
+        match server.infer_route(img.clone(), Route::Class(class.clone()), None) {
+            Err(_) => saw_failure = true, // burst failures while closed
+            Ok(resp) => {
+                assert_eq!(bits(&resp.logits), bits(&fixture_logits(&resp.variant, &img)));
+                if resp.degraded {
+                    // Ladder re-route: breaker open on the cheap rung,
+                    // the exact fallback carries the class.
+                    assert_eq!(resp.variant, "exact");
+                    saw_degraded_fallback = true;
+                } else if resp.variant == "appro42" && saw_degraded_fallback {
+                    // A successful undegraded response on the faulted
+                    // variant after degradation = the breaker admitted a
+                    // probe past the exhausted burst.
+                    recovered = true;
+                    break;
+                }
+            }
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert!(saw_failure, "burst must surface as failures pre-trip");
+    assert!(saw_degraded_fallback, "open breaker must degrade to exact");
+    assert!(recovered, "probes must reach the healed variant");
+    // Keep probing until the second successful probe re-closes the
+    // breaker (state gauge back to 0).
+    let gauge = openacm::obs::gauge("serve.breaker.appro42.state");
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while gauge.value() != 0 && Instant::now() < deadline {
+        let _ = server.infer_route(img.clone(), Route::Class(class.clone()), None);
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert_eq!(gauge.value(), 0, "breaker must re-close after recovery");
+    assert!(openacm::obs::counter("serve.breaker.opened").value() > opened_before);
+    assert!(openacm::obs::counter("serve.breaker.reclosed").value() > reclosed_before);
+    assert!(
+        server.metrics.snapshot().degraded >= 1,
+        "degraded deliveries must be counted"
+    );
+    assert!(server.healthy());
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Hedging: first success wins, duplicates never reach the client
+// ---------------------------------------------------------------------------
+
+#[test]
+fn hedged_requests_deliver_exactly_once() {
+    let plan = FaultPlan {
+        seed: 0xB05,
+        // Shard 0 noticeably slower: hedges onto the other shard
+        // genuinely race (and often win).
+        slow_shard: Some(SlowShard {
+            shard: 0,
+            delay_us: 1_200,
+        }),
+        ..FaultPlan::default()
+    };
+    let res = ResilienceConfig {
+        hedge_slack: Some(Duration::ZERO), // hedge every request
+        ..ResilienceConfig::default()
+    };
+    let server = chaos_server(&["exact"], plan, 2, 4, 4096, res);
+    let imgs = images(32, 0x7A6);
+    let n = 120usize;
+    let mut clients = Vec::with_capacity(n);
+    for i in 0..n {
+        let img = imgs[i % imgs.len()].clone();
+        let (tx, rx) = channel();
+        server
+            .submit(Request::to_variant(img.clone(), "exact", tx))
+            .expect("queue limit is far above the workload");
+        clients.push((img, rx));
+    }
+    for (img, rx) in &clients {
+        match rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("exactly one delivery per admitted request")
+        {
+            Delivery::Ok(resp) => {
+                assert_eq!(
+                    bits(&resp.logits),
+                    bits(&fixture_logits("exact", img)),
+                    "whichever copy wins, the bits are the reference bits"
+                );
+            }
+            Delivery::Failed(reason) => panic!("hedged request failed: {reason}"),
+        }
+    }
+    // The losing copies keep executing after their winners delivered;
+    // wait for at least one to be discarded (never client-visible).
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while server.metrics.snapshot().hedge_discarded == 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert!(
+        server.metrics.snapshot().hedge_discarded >= 1,
+        "losing hedge copies must be discarded and counted"
+    );
+    // Drain + join everything, then prove no channel saw a second
+    // message: zero duplicate deliveries.
+    server.shutdown();
+    for (_, rx) in &clients {
+        assert!(
+            rx.try_recv().is_err(),
+            "a client channel must never see a duplicate delivery"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Randomized seeded plans: invariants hold whatever the schedule
+// ---------------------------------------------------------------------------
+
+#[test]
+fn randomized_fault_plans_preserve_accounting_and_bit_exactness() {
+    const MENU: [&str; 2] = ["exact", "logour"];
+    for seed in [11u64, 23, 37, 41, 53] {
+        let plan = FaultPlan::chaos_default(seed);
+        let res = ResilienceConfig {
+            retries: 2,
+            retry_backoff: Duration::from_micros(100),
+            respawn_budget: 4,
+            respawn_min_interval: Duration::from_millis(1),
+            ..ResilienceConfig::default()
+        };
+        let server = chaos_server(&MENU, plan, 2, 4, 128, res);
+        let imgs = images(48, seed);
+        let (tx, rx) = channel();
+        let mut expect: HashMap<(String, Vec<u32>), i64> = HashMap::new();
+        let n = 300usize;
+        for i in 0..n {
+            let img = imgs[i % imgs.len()].clone();
+            let variant = MENU[i % MENU.len()];
+            *expect
+                .entry((variant.to_string(), bits(&fixture_logits(variant, &img))))
+                .or_default() += 1;
+            submit_retrying(&server, || {
+                Request::to_variant(imgs[i % imgs.len()].clone(), variant, tx.clone())
+            });
+        }
+        let mut ok = 0usize;
+        for _ in 0..n {
+            match rx.recv().expect("exactly one delivery per admitted request") {
+                Delivery::Ok(resp) => {
+                    ok += 1;
+                    let k = (resp.variant.clone(), bits(&resp.logits));
+                    let left = expect
+                        .get_mut(&k)
+                        .expect("delivery must match a submission");
+                    *left -= 1;
+                    assert!(*left >= 0, "duplicate delivery under seed {seed}");
+                }
+                Delivery::Failed(reason) => {
+                    panic!("seed {seed}: retries+respawns must absorb chaos_default: {reason}")
+                }
+            }
+        }
+        assert_eq!(ok, n, "accounting identity under seed {seed}");
+        assert!(expect.values().all(|&v| v == 0));
+        // Recovery to steady state: the plan's one-shot storm is spent;
+        // periodic bursts stay within the retry budget forever.
+        for img in imgs.iter().take(20) {
+            let r = server
+                .infer(img.clone(), "exact")
+                .expect("steady state after the fault window");
+            assert_eq!(bits(&r.logits), bits(&fixture_logits("exact", img)));
+        }
+        assert!(
+            server.healthy(),
+            "seed {seed}: budget covers the storm: {:?}",
+            server.failure()
+        );
+        server.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Resilient soak: recovery throughput + constant metrics memory
+// ---------------------------------------------------------------------------
+
+#[test]
+fn resilient_soak_recovers_to_pre_fault_throughput() {
+    // All faults are one-shot and land in the first phase: a transient
+    // burst at calls 0..4 and a two-panic storm at calls 10/11 (per
+    // pool). Latency spikes are periodic — identical load in both
+    // phases — so phase 2 measures the healed pipeline.
+    let plan = FaultPlan {
+        seed: 0xB06,
+        transient: Some(TransientBursts {
+            start: 0,
+            len: 4,
+            period: 0,
+        }),
+        panic_storm: Some(PanicStorm {
+            start: 10,
+            panics: 2,
+        }),
+        latency: Some(LatencySpike {
+            every: 16,
+            delay_us: 200,
+        }),
+        ..FaultPlan::default()
+    };
+    let res = ResilienceConfig {
+        retries: 2,
+        retry_backoff: Duration::from_micros(100),
+        respawn_budget: 4,
+        respawn_min_interval: Duration::from_millis(1),
+        hedge_slack: Some(Duration::from_millis(5)),
+        autoscale: Some(AutoscalePolicy {
+            max_workers: 2,
+            ..AutoscalePolicy::default()
+        }),
+        ..ResilienceConfig::default()
+    };
+    let server = chaos_server(&["exact"], plan, 2, 8, 512, res);
+    let imgs = images(64, 0x7A8);
+    let bytes_before = server.metrics.resident_bytes();
+
+    let mut phase = |n: usize, faulty: bool| -> f64 {
+        let (tx, rx) = channel();
+        let t0 = Instant::now();
+        for i in 0..n {
+            submit_retrying(&server, || {
+                Request::to_variant(imgs[i % imgs.len()].clone(), "exact", tx.clone())
+            });
+        }
+        let mut failed = 0usize;
+        for _ in 0..n {
+            match rx.recv().expect("exactly one delivery per admitted request") {
+                // Shape check only at soak scale; bit-exactness under
+                // faults is proven by the scenarios above.
+                Delivery::Ok(resp) => assert_eq!(resp.logits.len(), 10),
+                Delivery::Failed(_) => failed += 1,
+            }
+        }
+        let elapsed = t0.elapsed().as_secs_f64().max(1e-9);
+        if !faulty {
+            assert_eq!(failed, 0, "the healed pipeline must not fail requests");
+        }
+        n as f64 / elapsed
+    };
+
+    let pre = phase(1_000, true); // absorbs every one-shot fault
+    let post = phase(6_000, false); // healed, spikes only
+    assert!(
+        post >= 0.9 * pre,
+        "post-fault throughput {post:.0} rps must recover to within 10% \
+         of the faulty phase's {pre:.0} rps"
+    );
+    assert_eq!(
+        server.metrics.resident_bytes(),
+        bytes_before,
+        "metrics memory must not grow across the soak"
+    );
+    assert!(
+        server.healthy(),
+        "soak must end healthy: {:?}",
+        server.failure()
+    );
+    server.shutdown();
+}

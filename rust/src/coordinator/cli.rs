@@ -381,6 +381,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
             );
             let healths = slo_engine.tick_and_publish(slo_input());
             println!("{}", crate::obs::slo::summary_line(&healths));
+            server.refresh_resilience_gauges();
             if let Err(e) = crate::obs::flush(&obs_dir) {
                 eprintln!("could not flush telemetry snapshot: {e:#}");
             }
@@ -409,6 +410,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
             crate::obs::counter("serve.executor.respawns").value()
         );
     }
+    server.refresh_resilience_gauges();
     let health = server.failure();
     server.shutdown();
     // Final SLO tick after the pipeline drained, so the closing summary

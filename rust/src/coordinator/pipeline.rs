@@ -151,10 +151,26 @@ impl ResponseSlot {
     }
 
     /// Forget a copy that never entered the pipeline (the hedge enqueue
-    /// bounced off a full or closed ingress).
-    pub fn cancel(&self) {
-        if let Some(h) = &self.hedge {
-            h.outstanding.fetch_sub(1, Ordering::SeqCst);
+    /// bounced off a full or closed ingress). Settlement-aware: if the
+    /// sibling already failed and deferred to this copy (its
+    /// `fail_disposition` saw us outstanding and returned `Pending`),
+    /// the cancel is the last settler and must deliver the failure —
+    /// otherwise the client's channel disconnects with no `Delivery`
+    /// and the accounting identity loses a request.
+    pub fn cancel(&self) -> FailDisposition {
+        match &self.hedge {
+            // Direct slots are never hedged copies; nothing to settle.
+            None => FailDisposition::Discard,
+            Some(h) => {
+                let prev = h.outstanding.fetch_sub(1, Ordering::SeqCst);
+                if prev > 1 {
+                    FailDisposition::Pending
+                } else if h.claimed.load(Ordering::SeqCst) {
+                    FailDisposition::Discard
+                } else {
+                    FailDisposition::Deliver
+                }
+            }
         }
     }
 
@@ -179,6 +195,11 @@ pub(crate) struct QueuedRequest {
     pub deadline: Instant,
     pub stamps: StageStamps,
     pub degraded: bool,
+    /// Breaker admission epoch (`NO_BREAKER_EPOCH` without a breaker,
+    /// and on hedge copies — they borrowed no probe slot): matches this
+    /// request's outcome to the breaker state that admitted it, so a
+    /// half-open probe verdict can't come from a pre-trip batch.
+    pub breaker_epoch: u64,
     pub _ticket: Option<Ticket>,
 }
 
@@ -800,7 +821,11 @@ fn spawn_responder(
                         batch,
                         rows,
                     } => {
-                        res.on_batch_outcome(&variant, true, batch.len());
+                        if res.breakers_on() {
+                            let epochs: Vec<u64> =
+                                batch.iter().map(|q| q.breaker_epoch).collect();
+                            res.on_batch_outcome(&variant, true, &epochs);
+                        }
                         // Claim out hedged duplicates first: only winning
                         // copies are counted and delivered.
                         let t_done = trace_now();
@@ -849,9 +874,17 @@ fn spawn_responder(
                         reason,
                     } => {
                         // Deadline expiries never reach the breaker: they
-                        // indict queueing pressure, not the backend.
-                        if !matches!(reason, FailReason::DeadlineExpired) {
-                            res.on_batch_outcome(&variant, false, batch.len());
+                        // indict queueing pressure, not the backend — but
+                        // an expired half-open probe must hand its slot
+                        // back or the round would leak it.
+                        if res.breakers_on() {
+                            let epochs: Vec<u64> =
+                                batch.iter().map(|q| q.breaker_epoch).collect();
+                            if matches!(reason, FailReason::DeadlineExpired) {
+                                res.probe_abort_batch(&variant, &epochs);
+                            } else {
+                                res.on_batch_outcome(&variant, false, &epochs);
+                            }
                         }
                         let (deliverable, discarded) =
                             settle_failures(shard as u32, &variant, batch, &reason);
@@ -1080,10 +1113,32 @@ mod tests {
     fn cancelled_hedge_makes_primary_failure_deliverable() {
         let (tx, _rx) = channel();
         let (primary, hedge) = ResponseSlot::hedged_pair(tx);
-        hedge.cancel();
+        assert!(matches!(hedge.cancel(), FailDisposition::Pending));
         assert!(matches!(
             primary.fail_disposition(),
             FailDisposition::Deliver
         ));
+    }
+
+    #[test]
+    fn cancel_after_primary_failure_must_deliver() {
+        // The lost-delivery race: the primary fails (and defers,
+        // seeing the hedge outstanding) before the bounced hedge
+        // cancels — the cancel is the last settler and must deliver.
+        let (tx, _rx) = channel();
+        let (primary, hedge) = ResponseSlot::hedged_pair(tx);
+        assert!(matches!(
+            primary.fail_disposition(),
+            FailDisposition::Pending
+        ));
+        assert!(matches!(hedge.cancel(), FailDisposition::Deliver));
+    }
+
+    #[test]
+    fn cancel_after_primary_success_is_discarded() {
+        let (tx, _rx) = channel();
+        let (primary, hedge) = ResponseSlot::hedged_pair(tx);
+        assert!(primary.claim_ok());
+        assert!(matches!(hedge.cancel(), FailDisposition::Discard));
     }
 }

@@ -86,9 +86,24 @@ impl BreakerState {
     }
 }
 
+/// Epoch carried by admissions to variants without a configured
+/// breaker (and by hedge copies, which borrow no probe slot). Breaker
+/// epochs start at 1, so 0 never matches a half-open round.
+pub const NO_BREAKER_EPOCH: u64 = 0;
+
 /// Pure breaker state machine. `allow` gates admissions, `on_result`
 /// feeds execution outcomes back; both return state transitions so the
 /// caller can publish gauges/events exactly once per edge.
+///
+/// Every admission is stamped with the breaker's current *epoch*
+/// (bumped on each state transition). Only outcomes carrying the
+/// current half-open epoch count as probe verdicts, so a late result
+/// from a batch admitted before the trip can neither spuriously
+/// re-close nor re-open the breaker. Probe slots are leak-proof two
+/// ways: the caller returns slots whose request never produced an
+/// outcome ([`Self::probe_abort`] — shed past admission, expired in
+/// queue), and as a backstop a half-open round whose probes all leaked
+/// re-arms after another cooldown instead of wedging forever.
 pub struct BreakerCore {
     policy: BreakerPolicy,
     state: BreakerState,
@@ -97,6 +112,14 @@ pub struct BreakerCore {
     opened_at: Instant,
     probes_issued: u32,
     probes_ok: u32,
+    epoch: u64,
+    /// When the current probe round was armed (half-open entry or
+    /// re-arm); a round with no verdict by `cooldown` re-arms.
+    probe_armed_at: Instant,
+    /// When the breaker last left Closed; `None` while Closed. Survives
+    /// re-trips so it measures the whole unhealthy episode, not just
+    /// the latest open→probe cycle.
+    unhealthy_since: Option<Instant>,
 }
 
 impl BreakerCore {
@@ -109,6 +132,9 @@ impl BreakerCore {
             opened_at: now,
             probes_issued: 0,
             probes_ok: 0,
+            epoch: 1,
+            probe_armed_at: now,
+            unhealthy_since: None,
         }
     }
 
@@ -116,36 +142,81 @@ impl BreakerCore {
         self.state
     }
 
+    /// How long the breaker has been away from Closed (`None` while
+    /// Closed) — the `serve.breaker.{variant}.open_ms` gauge.
+    pub fn unhealthy_for(&self, now: Instant) -> Option<Duration> {
+        self.unhealthy_since.map(|t| now.duration_since(t))
+    }
+
+    /// Read-only admission check: would `allow` admit right now? Never
+    /// consumes a probe slot or transitions state, which makes it safe
+    /// as the degradation ladder's availability predicate (evaluated
+    /// for every candidate rung, not just the one selected).
+    pub fn would_allow(&self, now: Instant) -> bool {
+        match self.state {
+            BreakerState::Closed => true,
+            BreakerState::Open => now.duration_since(self.opened_at) >= self.policy.cooldown,
+            BreakerState::HalfOpen => {
+                self.probes_issued < self.policy.probes.max(1)
+                    || now.duration_since(self.probe_armed_at) >= self.policy.cooldown
+            }
+        }
+    }
+
     /// May a request be admitted to this variant right now? Moves an
     /// open breaker to half-open once the cooldown has elapsed; the
     /// returned transition (if any) is the edge the caller should log.
-    pub fn allow(&mut self, now: Instant) -> (bool, Option<BreakerState>) {
+    /// The returned epoch must ride the admitted request into
+    /// [`Self::on_result`] / [`Self::probe_abort`].
+    pub fn allow(&mut self, now: Instant) -> (bool, u64, Option<BreakerState>) {
         match self.state {
-            BreakerState::Closed => (true, None),
+            BreakerState::Closed => (true, self.epoch, None),
             BreakerState::Open => {
                 if now.duration_since(self.opened_at) >= self.policy.cooldown {
                     self.state = BreakerState::HalfOpen;
+                    self.epoch += 1;
                     self.probes_issued = 1;
                     self.probes_ok = 0;
-                    (true, Some(BreakerState::HalfOpen))
+                    self.probe_armed_at = now;
+                    (true, self.epoch, Some(BreakerState::HalfOpen))
                 } else {
-                    (false, None)
+                    (false, self.epoch, None)
                 }
             }
             BreakerState::HalfOpen => {
                 if self.probes_issued < self.policy.probes.max(1) {
                     self.probes_issued += 1;
-                    (true, None)
+                    (true, self.epoch, None)
+                } else if now.duration_since(self.probe_armed_at) >= self.policy.cooldown {
+                    // Every issued probe leaked without a verdict (the
+                    // request died where no outcome is reported). Re-arm
+                    // the round so the breaker cannot wedge half-open.
+                    self.probes_issued = self.probes_ok + 1;
+                    self.probe_armed_at = now;
+                    (true, self.epoch, None)
                 } else {
-                    (false, None)
+                    (false, self.epoch, None)
                 }
             }
         }
     }
 
-    /// Record an execution outcome. Deadline expiries never reach this
-    /// path — only genuine backend failures count against the window.
-    pub fn on_result(&mut self, ok: bool, now: Instant) -> Option<BreakerState> {
+    /// Return an admission slot whose request never produced an outcome
+    /// through no fault of the backend (shed past admission, expired in
+    /// queue). Only slots from the current half-open round are live.
+    pub fn probe_abort(&mut self, epoch: u64) {
+        if self.state == BreakerState::HalfOpen
+            && epoch == self.epoch
+            && self.probes_issued > self.probes_ok
+        {
+            self.probes_issued -= 1;
+        }
+    }
+
+    /// Record an execution outcome for a request admitted under
+    /// `epoch`. Deadline expiries never reach this path — only genuine
+    /// backend failures count against the window.
+    pub fn on_result(&mut self, ok: bool, epoch: u64, now: Instant) -> Option<BreakerState> {
         match self.state {
             BreakerState::Closed => {
                 if self.window.len() == self.policy.window.max(1) {
@@ -169,12 +240,19 @@ impl BreakerCore {
                 None
             }
             BreakerState::HalfOpen => {
+                if epoch != self.epoch {
+                    // Stale outcome from a batch admitted before the
+                    // trip (or a hedge copy): not a probe verdict.
+                    return None;
+                }
                 if ok {
                     self.probes_ok += 1;
                     if self.probes_ok >= self.policy.probes.max(1) {
                         self.state = BreakerState::Closed;
+                        self.epoch += 1;
                         self.window.clear();
                         self.failures = 0;
+                        self.unhealthy_since = None;
                         return Some(BreakerState::Closed);
                     }
                     None
@@ -190,7 +268,9 @@ impl BreakerCore {
 
     fn trip(&mut self, now: Instant) {
         self.state = BreakerState::Open;
+        self.epoch += 1;
         self.opened_at = now;
+        self.unhealthy_since.get_or_insert(now);
         self.window.clear();
         self.failures = 0;
         self.probes_issued = 0;
@@ -327,17 +407,22 @@ impl PressureEwma {
         PressureEwma(AtomicU64::new(0))
     }
 
-    /// Fold one queue-wait sample into the EMA (α = 1/8).
+    /// Fold one queue-wait sample into the EMA (α = 1/8). CAS loop: the
+    /// batcher observes while the scaler decays, and a plain
+    /// load-compute-store would lose whichever update raced.
     pub fn observe(&self, us: u64) {
-        let old = self.0.load(Ordering::Relaxed);
-        let new = if old == 0 { us } else { old - old / 8 + us / 8 };
-        self.0.store(new, Ordering::Relaxed);
+        let _ = self.0.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |old| {
+            Some(if old == 0 { us } else { old - old / 8 + us / 8 })
+        });
     }
 
-    /// Decay toward zero so an idle pool scales back down.
+    /// Decay toward zero so an idle pool scales back down. Saturates:
+    /// below 4µs the quarter-decay would round to zero and leave a
+    /// permanent residual, so small values snap straight to 0.
     pub fn decay(&self) {
-        let old = self.0.load(Ordering::Relaxed);
-        self.0.store(old - old / 4, Ordering::Relaxed);
+        let _ = self.0.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |old| {
+            Some(if old < 4 { 0 } else { old - old / 4 })
+        });
     }
 
     pub fn us(&self) -> u64 {
@@ -354,6 +439,10 @@ impl Default for PressureEwma {
 struct VariantBreaker {
     core: Mutex<BreakerCore>,
     state_gauge: obs::Gauge,
+    /// `serve.breaker.{variant}.open_ms`: how long the breaker has been
+    /// away from Closed (refreshed on metrics ticks, 0 while Closed) so
+    /// `obs health` can tell a normal cooldown from a stuck breaker.
+    open_ms: obs::Gauge,
 }
 
 /// Shared runtime state for the resilience layer: per-variant breakers
@@ -375,14 +464,19 @@ impl ResilienceRuntime {
         let now = Instant::now();
         let mut breakers = BTreeMap::new();
         if let Some(policy) = cfg.breaker {
+            // `obs health` scales its stuck-open threshold off this.
+            obs::gauge("serve.breaker.cooldown_ms").set(policy.cooldown.as_millis() as i64);
             for v in variants {
                 let state_gauge = obs::gauge(&format!("serve.breaker.{v}.state"));
                 state_gauge.set(0);
+                let open_ms = obs::gauge(&format!("serve.breaker.{v}.open_ms"));
+                open_ms.set(0);
                 breakers.insert(
                     v.clone(),
                     VariantBreaker {
                         core: Mutex::new(BreakerCore::new(policy, now)),
                         state_gauge,
+                        open_ms,
                     },
                 );
             }
@@ -406,17 +500,54 @@ impl ResilienceRuntime {
         }
     }
 
-    /// Breaker admission check (true when no breaker is configured).
-    pub fn allow(&self, variant: &str) -> bool {
+    /// Are any breakers configured? Lets the responder skip collecting
+    /// per-request epochs on the default (resilience-off) path.
+    pub fn breakers_on(&self) -> bool {
+        !self.breakers.is_empty()
+    }
+
+    /// Probe-consuming breaker admission. `Some(epoch)` admits — the
+    /// epoch must ride the request so its outcome (or abort) is matched
+    /// to the breaker state that admitted it ([`NO_BREAKER_EPOCH`] when
+    /// no breaker is configured); `None` means the breaker is blocking
+    /// this variant right now. Call this exactly once, for the variant
+    /// actually being enqueued — routing candidates are screened with
+    /// the read-only [`Self::routable`].
+    pub fn admit(&self, variant: &str) -> Option<u64> {
         let Some(b) = self.breakers.get(variant) else {
-            return true;
+            return Some(NO_BREAKER_EPOCH);
         };
         let mut core = b.core.lock().unwrap();
-        let (ok, transition) = core.allow(Instant::now());
+        let (ok, epoch, transition) = core.allow(Instant::now());
         if let Some(state) = transition {
             self.publish_transition(variant, b, state);
         }
-        ok
+        ok.then_some(epoch)
+    }
+
+    /// Return a probe slot for an admission that will never produce an
+    /// execution outcome (shed past admission, ingress full, expired in
+    /// queue) so the half-open round can re-issue it.
+    pub fn probe_abort(&self, variant: &str, epoch: u64) {
+        if epoch == NO_BREAKER_EPOCH {
+            return;
+        }
+        if let Some(b) = self.breakers.get(variant) {
+            b.core.lock().unwrap().probe_abort(epoch);
+        }
+    }
+
+    /// [`Self::probe_abort`] over a whole deadline-expired batch.
+    pub fn probe_abort_batch(&self, variant: &str, epochs: &[u64]) {
+        let Some(b) = self.breakers.get(variant) else {
+            return;
+        };
+        let mut core = b.core.lock().unwrap();
+        for &e in epochs {
+            if e != NO_BREAKER_EPOCH {
+                core.probe_abort(e);
+            }
+        }
     }
 
     /// Is this variant's queue-wait pressure above the degradation
@@ -432,22 +563,47 @@ impl ResilienceRuntime {
             .unwrap_or(false)
     }
 
-    /// Degradation-ladder availability: breaker closed (or probing) and
-    /// pressure under the threshold.
+    /// Degradation-ladder availability: breaker would admit and
+    /// pressure is under the threshold. Strictly read-only — routing
+    /// evaluates this for every candidate rung, so it must not consume
+    /// probe slots (the selected variant consumes one via
+    /// [`Self::admit`]).
     pub fn routable(&self, variant: &str) -> bool {
-        self.allow(variant) && !self.overloaded(variant)
+        let breaker_ok = match self.breakers.get(variant) {
+            None => true,
+            Some(b) => b.core.lock().unwrap().would_allow(Instant::now()),
+        };
+        breaker_ok && !self.overloaded(variant)
     }
 
-    /// Feed `n` execution outcomes for `variant` back into its breaker.
-    pub fn on_batch_outcome(&self, variant: &str, ok: bool, n: usize) {
+    /// Feed one batch's execution outcomes for `variant` back into its
+    /// breaker; `epochs` are the admission epochs the requests carried.
+    pub fn on_batch_outcome(&self, variant: &str, ok: bool, epochs: &[u64]) {
         let Some(b) = self.breakers.get(variant) else {
             return;
         };
         let mut core = b.core.lock().unwrap();
-        for _ in 0..n {
-            if let Some(state) = core.on_result(ok, Instant::now()) {
+        for &e in epochs {
+            if let Some(state) = core.on_result(ok, e, Instant::now()) {
                 self.publish_transition(variant, b, state);
             }
+        }
+    }
+
+    /// Re-publish time-derived breaker gauges
+    /// (`serve.breaker.{variant}.open_ms`) — called from the serve
+    /// CLI's metrics ticks and at exit, right before snapshot flushes.
+    pub fn refresh_gauges(&self) {
+        let now = Instant::now();
+        for (_, b) in &self.breakers {
+            let ms = b
+                .core
+                .lock()
+                .unwrap()
+                .unhealthy_for(now)
+                .map(|d| d.as_millis() as i64)
+                .unwrap_or(0);
+            b.open_ms.set(ms);
         }
     }
 
@@ -505,6 +661,16 @@ mod tests {
         }
     }
 
+    /// Trip a fresh breaker with 4 closed-epoch failures.
+    fn tripped(t0: Instant) -> BreakerCore {
+        let mut b = BreakerCore::new(policy(), t0);
+        for _ in 0..4 {
+            b.on_result(false, 1, t0);
+        }
+        assert_eq!(b.state(), BreakerState::Open);
+        b
+    }
+
     #[test]
     fn breaker_trips_after_failure_ratio_over_min_samples() {
         let t0 = Instant::now();
@@ -512,12 +678,12 @@ mod tests {
         assert_eq!(b.state(), BreakerState::Closed);
         // Three failures: below min_samples, still closed.
         for _ in 0..3 {
-            assert_eq!(b.on_result(false, t0), None);
+            assert_eq!(b.on_result(false, 1, t0), None);
         }
         assert_eq!(b.state(), BreakerState::Closed);
         assert!(b.allow(t0).0);
         // Fourth failure reaches min_samples at 100% failure rate.
-        assert_eq!(b.on_result(false, t0), Some(BreakerState::Open));
+        assert_eq!(b.on_result(false, 1, t0), Some(BreakerState::Open));
         assert!(!b.allow(t0).0);
     }
 
@@ -529,7 +695,7 @@ mod tests {
         // fail edges; feed mostly-ok traffic and it must never trip.
         for i in 0..64 {
             let ok = i % 3 != 0; // 1/3 failures < 0.5 ratio
-            assert_eq!(b.on_result(ok, t0), None, "tripped at sample {i}");
+            assert_eq!(b.on_result(ok, 1, t0), None, "tripped at sample {i}");
         }
         assert_eq!(b.state(), BreakerState::Closed);
     }
@@ -537,38 +703,33 @@ mod tests {
     #[test]
     fn breaker_probes_back_to_closed_after_cooldown() {
         let t0 = Instant::now();
-        let mut b = BreakerCore::new(policy(), t0);
-        for _ in 0..4 {
-            b.on_result(false, t0);
-        }
-        assert_eq!(b.state(), BreakerState::Open);
+        let mut b = tripped(t0);
         // Before cooldown: blocked.
-        let (ok, tr) = b.allow(t0 + Duration::from_millis(50));
+        let (ok, _, tr) = b.allow(t0 + Duration::from_millis(50));
         assert!(!ok && tr.is_none());
         // After cooldown: half-open, first probe admitted.
         let t1 = t0 + Duration::from_millis(150);
-        let (ok, tr) = b.allow(t1);
+        let (ok, e, tr) = b.allow(t1);
         assert!(ok);
         assert_eq!(tr, Some(BreakerState::HalfOpen));
         // Second probe admitted, third blocked (probes = 2).
         assert!(b.allow(t1).0);
         assert!(!b.allow(t1).0);
         // Both probes succeed → re-closed.
-        assert_eq!(b.on_result(true, t1), None);
-        assert_eq!(b.on_result(true, t1), Some(BreakerState::Closed));
+        assert_eq!(b.on_result(true, e, t1), None);
+        assert_eq!(b.on_result(true, e, t1), Some(BreakerState::Closed));
         assert!(b.allow(t1).0);
+        assert_eq!(b.unhealthy_for(t1), None);
     }
 
     #[test]
     fn breaker_reopens_when_probe_fails() {
         let t0 = Instant::now();
-        let mut b = BreakerCore::new(policy(), t0);
-        for _ in 0..4 {
-            b.on_result(false, t0);
-        }
+        let mut b = tripped(t0);
         let t1 = t0 + Duration::from_millis(150);
-        assert!(b.allow(t1).0);
-        assert_eq!(b.on_result(false, t1), Some(BreakerState::Open));
+        let (ok, e, _) = b.allow(t1);
+        assert!(ok);
+        assert_eq!(b.on_result(false, e, t1), Some(BreakerState::Open));
         // Cooldown restarts from the re-open instant.
         assert!(!b.allow(t1 + Duration::from_millis(50)).0);
         assert!(b.allow(t1 + Duration::from_millis(150)).0);
@@ -581,14 +742,122 @@ mod tests {
         // 3 failures then a long run of successes: the failures age out
         // of the window and the ratio can no longer trip.
         for _ in 0..3 {
-            b.on_result(false, t0);
+            b.on_result(false, 1, t0);
         }
         for _ in 0..8 {
-            assert_eq!(b.on_result(true, t0), None);
+            assert_eq!(b.on_result(true, 1, t0), None);
         }
         // One more failure: window is now 7 ok + 1 fail — stays closed.
-        assert_eq!(b.on_result(false, t0), None);
+        assert_eq!(b.on_result(false, 1, t0), None);
         assert_eq!(b.state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn would_allow_never_consumes_probes_or_transitions() {
+        let t0 = Instant::now();
+        let mut b = tripped(t0);
+        let t1 = t0 + Duration::from_millis(150);
+        // Post-cooldown routability checks leave the breaker Open.
+        for _ in 0..100 {
+            assert!(b.would_allow(t1));
+        }
+        assert_eq!(b.state(), BreakerState::Open);
+        // Entering half-open, repeated checks don't eat probe slots:
+        // both real probe admissions still go through.
+        assert!(b.allow(t1).0);
+        for _ in 0..100 {
+            assert!(b.would_allow(t1));
+        }
+        assert!(b.allow(t1).0);
+        assert!(!b.allow(t1).0);
+        assert!(!b.would_allow(t1));
+    }
+
+    #[test]
+    fn half_open_ignores_stale_epoch_results() {
+        let t0 = Instant::now();
+        let mut b = tripped(t0);
+        let t1 = t0 + Duration::from_millis(150);
+        let (ok, e, _) = b.allow(t1);
+        assert!(ok);
+        // Late results from pre-trip (epoch 1) batches: neither a stale
+        // success nor a stale failure moves the probe round.
+        assert_eq!(b.on_result(true, 1, t1), None);
+        assert_eq!(b.on_result(true, 1, t1), None);
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert_eq!(b.on_result(false, 1, t1), None);
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        // Genuine probe outcomes still close it.
+        assert!(b.allow(t1).0);
+        assert_eq!(b.on_result(true, e, t1), None);
+        assert_eq!(b.on_result(true, e, t1), Some(BreakerState::Closed));
+    }
+
+    #[test]
+    fn probe_abort_returns_the_slot_for_reissue() {
+        let t0 = Instant::now();
+        let mut b = tripped(t0);
+        let t1 = t0 + Duration::from_millis(150);
+        let (ok, e, _) = b.allow(t1);
+        assert!(ok);
+        assert!(b.allow(t1).0);
+        assert!(!b.allow(t1).0, "both probe slots issued");
+        // One admission dies without an outcome (shed / expired): its
+        // abort frees the slot for another probe immediately.
+        b.probe_abort(e);
+        assert!(b.allow(t1).0);
+        assert!(!b.allow(t1).0);
+        // Stale-epoch aborts are ignored.
+        b.probe_abort(e - 1);
+        assert!(!b.allow(t1).0);
+    }
+
+    #[test]
+    fn half_open_rearms_probes_after_cooldown_instead_of_wedging() {
+        let t0 = Instant::now();
+        let mut b = tripped(t0);
+        let t1 = t0 + Duration::from_millis(150);
+        let (ok, e, _) = b.allow(t1);
+        assert!(ok);
+        assert!(b.allow(t1).0);
+        // Both probes leak (no outcome ever arrives). Within the
+        // cooldown the round is blocked…
+        assert!(!b.allow(t1 + Duration::from_millis(50)).0);
+        // …but another cooldown later it re-arms and admits again, so
+        // the breaker can never wedge half-open.
+        let t2 = t1 + Duration::from_millis(150);
+        let (ok, e2, _) = b.allow(t2);
+        assert!(ok, "leaked probe round must re-arm after cooldown");
+        assert_eq!(e, e2, "re-arm stays in the same half-open epoch");
+        assert_eq!(b.on_result(true, e2, t2), None);
+        assert!(b.allow(t2).0);
+        assert_eq!(b.on_result(true, e2, t2), Some(BreakerState::Closed));
+    }
+
+    #[test]
+    fn unhealthy_duration_spans_retrip_episodes() {
+        let t0 = Instant::now();
+        let mut b = tripped(t0);
+        assert_eq!(
+            b.unhealthy_for(t0 + Duration::from_millis(10)),
+            Some(Duration::from_millis(10))
+        );
+        // Failed probe re-trips: the episode clock keeps its origin.
+        let t1 = t0 + Duration::from_millis(150);
+        let (_, e, _) = b.allow(t1);
+        b.on_result(false, e, t1);
+        assert_eq!(
+            b.unhealthy_for(t0 + Duration::from_millis(500)),
+            Some(Duration::from_millis(500))
+        );
+        // Re-close clears it.
+        let t2 = t1 + Duration::from_millis(150);
+        let (_, e, _) = b.allow(t2);
+        b.on_result(true, e, t2);
+        b.allow(t2);
+        b.on_result(true, e, t2);
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert_eq!(b.unhealthy_for(t2), None);
     }
 
     #[test]
@@ -655,6 +924,11 @@ mod tests {
         let before = p.us();
         p.decay();
         assert!(p.us() < before);
+        // Decay saturates all the way to 0 (no sub-4µs residual).
+        for _ in 0..64 {
+            p.decay();
+        }
+        assert_eq!(p.us(), 0);
     }
 
     #[test]

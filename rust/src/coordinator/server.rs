@@ -32,8 +32,10 @@ use std::time::{Duration, Instant};
 use super::admission::{Admission, AdmissionController};
 use super::batcher::BatchPolicy;
 use super::metrics::ServerMetrics;
-use super::pipeline::{spawn_shard, Health, QueuedRequest, ResponseSlot, ShardCtx, ShardPipeline};
-use super::resilience::{ResilienceConfig, ResilienceRuntime};
+use super::pipeline::{
+    spawn_shard, FailDisposition, Health, QueuedRequest, ResponseSlot, ShardCtx, ShardPipeline,
+};
+use super::resilience::{ResilienceConfig, ResilienceRuntime, NO_BREAKER_EPOCH};
 use super::router::{AccuracyClass, HashRing, RoutingTable};
 use super::warmstart::{profile_for_variant, VariantProfile};
 use crate::runtime::backend::IMAGE_BYTES;
@@ -413,17 +415,6 @@ impl InferenceServer {
                         self.variant_names
                     )));
                 }
-                // An explicitly-requested variant behind an open breaker
-                // fast-fails as a shed: there is no class budget to spend
-                // on re-routing it elsewhere.
-                if !self.res.allow(v) {
-                    crate::obs::counter("serve.breaker.fast_fail").inc();
-                    return Err(SubmitError::Shed {
-                        variant: v.clone(),
-                        depth: 0,
-                        limit: 0,
-                    });
-                }
                 (v.clone(), false)
             }
             Route::Class(class) => {
@@ -465,6 +456,25 @@ impl InferenceServer {
                 }
             }
         };
+        // Probe-consuming breaker admission, exactly once and only for
+        // the variant actually being enqueued — routing screened its
+        // candidates through the read-only `routable`, so half-open
+        // probe slots are never spent on rungs that don't serve. An
+        // explicitly-requested variant behind an open breaker (or a
+        // class whose pick tripped since the routability check)
+        // fast-fails as a shed: there is no class budget to spend on
+        // re-routing it elsewhere.
+        let epoch = match self.res.admit(&variant) {
+            Some(e) => e,
+            None => {
+                crate::obs::counter("serve.breaker.fast_fail").inc();
+                return Err(SubmitError::Shed {
+                    variant,
+                    depth: 0,
+                    limit: 0,
+                });
+            }
+        };
         // Open the trace context once the request is routable: shed
         // requests (admission depth, full ingress) complete as `Shed`
         // timelines; malformed/unroutable rejections never existed as far
@@ -474,6 +484,9 @@ impl InferenceServer {
         let ticket = match self.admission.admit(&variant) {
             Some(Ok(t)) => t,
             Some(Err(Admission::Shed { depth, limit })) => {
+                // The request dies before it can produce a breaker
+                // outcome: hand any half-open probe slot back.
+                self.res.probe_abort(&variant, epoch);
                 complete_shed(stamps, shard as u32, &variant);
                 return Err(SubmitError::Shed {
                     variant,
@@ -482,6 +495,7 @@ impl InferenceServer {
                 });
             }
             Some(Err(Admission::Admitted)) | None => {
+                self.res.probe_abort(&variant, epoch);
                 return Err(SubmitError::Unroutable(format!(
                     "admission state missing for {variant:?}"
                 )))
@@ -513,6 +527,7 @@ impl InferenceServer {
             deadline,
             stamps,
             degraded,
+            breaker_epoch: epoch,
             _ticket: Some(ticket),
         };
         match self.shards[shard].ingress[&variant].try_send(queued) {
@@ -524,8 +539,10 @@ impl InferenceServer {
             }
             Err(TrySendError::Full(dropped)) => {
                 // Backpressure past admission (shard ingress at capacity):
-                // shed, releasing the ticket. The unissued hedge slot (if
-                // any) drops with its claim unexercised.
+                // shed, releasing the ticket and any probe slot. The
+                // unissued hedge slot (if any) drops with its claim
+                // unexercised.
+                self.res.probe_abort(&variant, epoch);
                 complete_shed(dropped.stamps, shard as u32, &variant);
                 drop(dropped);
                 self.admission.note_shed();
@@ -535,7 +552,10 @@ impl InferenceServer {
                     limit: self.queue_limit,
                 })
             }
-            Err(TrySendError::Disconnected(_)) => Err(SubmitError::ShuttingDown),
+            Err(TrySendError::Disconnected(_)) => {
+                self.res.probe_abort(&variant, epoch);
+                Err(SubmitError::ShuttingDown)
+            }
         }
     }
 
@@ -562,13 +582,24 @@ impl InferenceServer {
             deadline,
             stamps: crate::obs::StageStamps::default(),
             degraded,
+            breaker_epoch: NO_BREAKER_EPOCH,
             _ticket: None,
         };
         match self.shards[shard].ingress[variant].try_send(queued) {
             Ok(()) => crate::obs::counter("serve.hedge.issued").inc(),
             Err(TrySendError::Full(bounced)) | Err(TrySendError::Disconnected(bounced)) => {
-                bounced.respond.cancel();
                 crate::obs::counter("serve.hedge.cancelled").inc();
+                // If the primary already failed (its disposition saw
+                // this copy outstanding and deferred), the cancel is
+                // the last settler: deliver the failure here or the
+                // request vanishes from the accounting identity.
+                if matches!(bounced.respond.cancel(), FailDisposition::Deliver) {
+                    self.metrics.record_failed(1);
+                    crate::obs::counter("serve.failed.execute").inc();
+                    bounced.respond.send(Delivery::Failed(FailReason::ExecuteFailed(
+                        "primary copy failed and its hedge bounced".into(),
+                    )));
+                }
             }
         }
     }
@@ -614,6 +645,14 @@ impl InferenceServer {
 
     pub fn healthy(&self) -> bool {
         self.health.healthy()
+    }
+
+    /// Re-publish time-derived resilience gauges (breaker open
+    /// durations). Call right before telemetry snapshot flushes so
+    /// `openacm obs health` can tell a breaker mid-cooldown from one
+    /// that has been stuck away from Closed for whole probe cycles.
+    pub fn refresh_resilience_gauges(&self) {
+        self.res.refresh_gauges();
     }
 
     /// Graceful shutdown: close every shard's ingress, drain in-flight

@@ -390,16 +390,38 @@ fn cmd_health(dir: &Path, args: &Args) -> Result<()> {
         .map(|&(_, v)| *v)
         .max()
         .unwrap_or(0);
-    // A circuit breaker stuck open (`serve.breaker.<variant>.state` = 2)
-    // means a variant is ejected from routing and not recovering — treat
-    // it exactly like an objective burning at error rate.
-    let open_breakers: Vec<&String> = snap
+    // A circuit breaker stuck open means a variant is ejected from
+    // routing and not recovering — treat it exactly like an objective
+    // burning at error rate. "Stuck" needs more than a state gauge of 2
+    // at snapshot time: a breaker legitimately inside its normal
+    // cooldown→probe cycle also reads Open for a moment. Escalate only
+    // when the `.open_ms` companion gauge (time since the breaker last
+    // left Closed, refreshed on metrics ticks) shows it has been
+    // unhealthy for several whole cooldown cycles.
+    let cooldown_ms = snap
+        .gauges
+        .get("serve.breaker.cooldown_ms")
+        .copied()
+        .unwrap_or(0)
+        .max(0);
+    let stuck_after_ms = (4 * cooldown_ms).max(1000);
+    let open_breakers: Vec<(&String, i64)> = snap
         .gauges
         .iter()
         .filter(|(k, v)| {
             k.starts_with("serve.breaker.") && k.ends_with(".state") && **v >= 2
         })
-        .map(|(k, _)| k)
+        .map(|(k, _)| {
+            let open_ms = k
+                .strip_suffix(".state")
+                .and_then(|base| snap.gauges.get(&format!("{base}.open_ms")))
+                .copied()
+                // Older snapshots without the duration gauge keep the
+                // conservative treat-open-as-stuck behavior.
+                .unwrap_or(i64::MAX);
+            (k, open_ms)
+        })
+        .filter(|&(_, open_ms)| open_ms >= stuck_after_ms)
         .collect();
     let worst_state = if open_breakers.is_empty() {
         worst_slo_state
@@ -423,7 +445,7 @@ fn cmd_health(dir: &Path, args: &Args) -> Result<()> {
             "  \"open_breakers\": [{}]",
             open_breakers
                 .iter()
-                .map(|k| format!("\"{k}\""))
+                .map(|(k, _)| format!("\"{k}\""))
                 .collect::<Vec<_>>()
                 .join(", ")
         ));
@@ -444,8 +466,12 @@ fn cmd_health(dir: &Path, args: &Args) -> Result<()> {
             Some(id) => println!("serve.latency_us p99 = {p99}us (exemplar trace {id})"),
             None => println!("serve.latency_us p99 = {p99}us"),
         }
-        for k in &open_breakers {
-            println!("BURNING: circuit breaker stuck open ({k} = 2)");
+        for (k, open_ms) in &open_breakers {
+            if *open_ms == i64::MAX {
+                println!("BURNING: circuit breaker stuck open ({k} = 2)");
+            } else {
+                println!("BURNING: circuit breaker stuck open ({k} = 2 for {open_ms} ms)");
+            }
         }
     }
     if worst_state >= 2 {
